@@ -1,0 +1,81 @@
+"""AOT entry point: lower the L2 computations to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the xla crate's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Python runs exactly once (``make artifacts``); the Rust binary is
+self-contained afterwards.  A ``manifest.json`` describes the emitted
+artifacts so the Rust ``ArtifactStore`` never hardcodes shapes.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import rowops as rk
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    block = jax.ShapeDtypeStruct((rk.ROWS, rk.COLS), jnp.float32)
+    manifest = {
+        "block_rows": rk.ROWS,
+        "cols": rk.COLS,
+        "tile": rk.TILE,
+        "agg_fanin": model.AGG_FANIN,
+        "compute": [],
+    }
+
+    for k in model.VARIANTS:
+        lowered = jax.jit(lambda x, k=k: model.compute_block(x, k)).lower(block)
+        name = f"compute_k{k}.hlo.txt"
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        manifest["compute"].append({"k": k, "file": name})
+        print(f"wrote {path}")
+
+    partials = jax.ShapeDtypeStruct((model.AGG_FANIN, 2, rk.COLS), jnp.float32)
+    counts = jax.ShapeDtypeStruct((model.AGG_FANIN,), jnp.float32)
+    lowered = jax.jit(model.aggregate).lower(partials, counts)
+    agg_name = "aggregate.hlo.txt"
+    with open(os.path.join(out_dir, agg_name), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest["aggregate"] = {"file": agg_name}
+    print(f"wrote {os.path.join(out_dir, agg_name)}")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(out_dir, 'manifest.json')}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="AOT-lower L2 computations to HLO text")
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    # --out may be a file path (legacy Makefile style) or a directory.
+    out = args.out
+    if out.endswith(".hlo.txt"):
+        out = os.path.dirname(out)
+    emit(out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Pure-jnp correctness oracle for the Pallas ``rowops`` kernel.
+
+This is the ground truth the kernel is validated against at build time
+(pytest + hypothesis); it contains no Pallas, no tiling — just the math.
+"""
+
+import jax.numpy as jnp
+
+
+def chain_consts(cols: int):
+    """Per-column affine constants — must match rowops._chain_consts."""
+    c = jnp.arange(cols, dtype=jnp.float32)
+    return 0.75 + 0.05 * c, 0.01 * (c - cols / 2)
+
+
+def rowops_ref(x, k: int):
+    """Reference: k-round tanh op-chain then per-column [sum; sumsq]."""
+    c1, c0 = chain_consts(x.shape[1])
+    y = x.astype(jnp.float32)
+    for _ in range(k):
+        y = jnp.tanh(y * c1 + c0)
+    return jnp.stack([jnp.sum(y, axis=0), jnp.sum(y * y, axis=0)])
+
+
+def normalize_ref(x):
+    """Reference for the load-stage per-block column normalization."""
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=0, keepdims=True)
+    std = jnp.std(x, axis=0, keepdims=True)
+    return (x - mean) / (std + 1e-6)
+
+
+def aggregate_ref(partials, counts):
+    """Reference for the collect-stage reduction.
+
+    Args:
+      partials: f32[(n, 2, cols)] — per-task [sum; sumsq] partials
+        (zero-padded entries must have counts == 0).
+      counts: f32[(n,)] — row counts per task.
+
+    Returns:
+      f32[(2, cols)] — [mean; variance] over all rows.
+    """
+    total = jnp.sum(counts)
+    s = jnp.sum(partials[:, 0, :], axis=0)
+    ss = jnp.sum(partials[:, 1, :], axis=0)
+    mean = s / total
+    var = ss / total - mean * mean
+    return jnp.stack([mean, var])

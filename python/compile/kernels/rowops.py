@@ -1,0 +1,91 @@
+"""L1 — Pallas kernel: the per-partition analytics hot-spot.
+
+The paper's micro-benchmark jobs "apply a varying number of operations per
+row" of a columnar trip-record dataset (NYC TLC FHVHV).  This kernel is that
+computation phase for one data partition: a fused per-row nonlinear op-chain
+(`k` rounds of ``tanh(y * C1 + C0)``) followed by a columnar partial
+aggregation (per-column sum and sum-of-squares), which the collect stage
+(Rust side / ``model.aggregate``) later reduces into global statistics.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the (ROWS, COLS) block is
+tiled into (TILE, COLS) row tiles via ``BlockSpec`` — each tile is the
+VMEM-resident working set (512x8 f32 = 16 KiB), the op-chain runs on the VPU
+lanes, and the aggregation is a two-stage tree (in-tile ``sum`` then
+cross-tile accumulation into the output ref).  One HBM read per element, one
+O(COLS) write — the schedule a CUDA version would express with threadblocks
+is expressed here with the grid + BlockSpec.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers to plain HLO that the Rust runtime
+(xla crate, PJRT CPU client) executes directly.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default geometry — must match rust/src/data (BLOCK_ROWS/COLS) and the AOT
+# manifest.  Changing these requires `make artifacts`.
+ROWS = 4096
+COLS = 8
+TILE = 512
+
+# Per-column affine constants of the op-chain.  Arbitrary but fixed: they
+# only need to make the chain non-foldable and column-dependent.
+def _chain_consts(cols: int):
+    c = jnp.arange(cols, dtype=jnp.float32)
+    c1 = 0.75 + 0.05 * c        # slope per column
+    c0 = 0.01 * (c - cols / 2)  # bias per column
+    return c1, c0
+
+
+def _rowops_kernel(x_ref, o_ref, *, k: int, cols: int):
+    """Pallas kernel body for one (TILE, COLS) row tile.
+
+    Accumulates partial [sum; sumsq] for its tile into ``o_ref`` (shape
+    (2, COLS)), which is shared across grid steps.
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    y = x_ref[...]
+    c1, c0 = _chain_consts(cols)
+    for _ in range(k):  # k is static per compiled variant → fully fused chain
+        y = jnp.tanh(y * c1 + c0)
+
+    # In-tile reduction (stage 1 of the aggregation tree).
+    tile_sum = jnp.sum(y, axis=0)
+    tile_sumsq = jnp.sum(y * y, axis=0)
+    # Cross-tile accumulation (stage 2).
+    o_ref[...] += jnp.stack([tile_sum, tile_sumsq])
+
+
+def rowops(x, k: int, tile: int = TILE):
+    """Apply the k-op chain + partial aggregation to block ``x``.
+
+    Args:
+      x: f32[(rows, cols)] with ``rows % tile == 0``.
+      k: static op-chain length (the paper's "operations per row").
+      tile: row-tile size (VMEM working-set knob).
+
+    Returns:
+      f32[(2, cols)] — per-column [sum; sum-of-squares] of the transformed
+      block.
+    """
+    rows, cols = x.shape
+    if rows % tile != 0:
+        raise ValueError(f"rows={rows} not a multiple of tile={tile}")
+    grid = (rows // tile,)
+    return pl.pallas_call(
+        partial(_rowops_kernel, k=k, cols=cols),
+        out_shape=jax.ShapeDtypeStruct((2, cols), jnp.float32),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((2, cols), lambda i: (0, 0)),
+        interpret=True,
+    )(x)

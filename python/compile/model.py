@@ -1,0 +1,59 @@
+"""L2 — the analytics-job compute graph, composed from the L1 kernel.
+
+The paper's micro-benchmark analytics job has three phases (§5.2):
+
+  1. *load* — read the partition and normalize it (per-block column
+     standardization here; the file scan itself is the Rust data layer),
+  2. *compute* — the dominant phase: k operations per row (the Pallas
+     ``rowops`` kernel),
+  3. *collect* — reduce per-task partials into the final statistics.
+
+``compute_block`` (phases 1+2, per task) and ``aggregate`` (phase 3, driver
+side) are the two computations AOT-lowered by ``aot.py``.  The op-count ``k``
+is a *static* compile-time parameter — one HLO artifact per variant — because
+HLO is shape/program-static; the Rust coordinator picks the variant matching
+the job's requested op count.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import rowops as rk
+
+# Padded fan-in of the AOT aggregate computation.  The Rust collect stage
+# zero-pads (partials, counts) up to this many entries per call and chains
+# calls for larger fan-ins.
+AGG_FANIN = 32
+
+# Op-count variants to AOT-compile.  Must stay in sync with the Rust
+# ArtifactStore / workload specs.
+VARIANTS = (1, 4, 16, 64)
+
+
+def normalize(x):
+    """Load-stage transform: per-block column standardization."""
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=0, keepdims=True)
+    std = jnp.std(x, axis=0, keepdims=True)
+    return (x - mean) / (std + 1e-6)
+
+
+def compute_block(x, k: int, tile: int = rk.TILE):
+    """Phases 1+2 for one (ROWS, COLS) partition block.
+
+    Returns a 1-tuple of f32[(2, cols)] partial [sum; sumsq] statistics.
+    """
+    return (rk.rowops(normalize(x), k, tile=tile),)
+
+
+def aggregate(partials, counts):
+    """Phase 3: fold up to AGG_FANIN per-task partials into [mean; var].
+
+    Zero-padded rows (counts == 0) contribute nothing; callers guarantee
+    ``sum(counts) > 0``.
+    """
+    total = jnp.sum(counts)
+    s = jnp.sum(partials[:, 0, :], axis=0)
+    ss = jnp.sum(partials[:, 1, :], axis=0)
+    mean = s / total
+    var = ss / total - mean * mean
+    return (jnp.stack([mean, var]),)

@@ -1,0 +1,92 @@
+"""Kernel vs ref: THE core correctness signal for the L1 Pallas kernel.
+
+Deterministic parametrized checks plus hypothesis sweeps over block
+geometry, op-count, and value ranges.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import rowops as rk
+
+
+def _rand(rows, cols, seed=0, scale=1.0):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.normal(key, (rows, cols), dtype=jnp.float32) * scale
+
+
+@pytest.mark.parametrize("k", [0, 1, 4, 16, 64])
+def test_rowops_matches_ref_default_geometry(k):
+    x = _rand(rk.ROWS, rk.COLS, seed=k)
+    got = rk.rowops(x, k)
+    want = ref.rowops_ref(x, k)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("tile", [64, 128, 512, 1024, 4096])
+def test_rowops_tile_invariance(tile):
+    """Partial aggregation must be independent of the tiling schedule."""
+    x = _rand(4096, 8, seed=7)
+    got = rk.rowops(x, 4, tile=tile)
+    want = ref.rowops_ref(x, 4)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_rowops_rejects_non_multiple_tile():
+    x = _rand(100, 8)
+    with pytest.raises(ValueError):
+        rk.rowops(x, 1, tile=64)
+
+
+def test_rowops_k0_is_pure_aggregation():
+    x = _rand(512, 8, seed=3)
+    got = rk.rowops(x, 0, tile=256)
+    np.testing.assert_allclose(got[0], jnp.sum(x, axis=0), rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(got[1], jnp.sum(x * x, axis=0), rtol=1e-5, atol=1e-4)
+
+
+def test_rowops_sumsq_nonnegative():
+    x = _rand(1024, 8, seed=11, scale=10.0)
+    got = rk.rowops(x, 2, tile=256)
+    assert bool(jnp.all(got[1] >= 0))
+
+
+def test_rowops_tanh_bounds():
+    """After >=1 chain round every value is in (-1,1): sums bounded by rows."""
+    x = _rand(1024, 8, seed=5, scale=100.0)
+    got = rk.rowops(x, 1, tile=512)
+    assert bool(jnp.all(jnp.abs(got[0]) <= 1024.0))
+    assert bool(jnp.all(got[1] <= 1024.0))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=8),
+    tile=st.sampled_from([64, 128, 256]),
+    cols=st.sampled_from([1, 2, 4, 8, 16]),
+    k=st.integers(min_value=0, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.sampled_from([0.1, 1.0, 10.0]),
+)
+def test_rowops_hypothesis_sweep(tiles, tile, cols, k, seed, scale):
+    rows = tiles * tile
+    x = _rand(rows, cols, seed=seed, scale=scale)
+    got = rk.rowops(x, k, tile=tile)
+    want = ref.rowops_ref(x, k)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_rowops_special_values_finite(seed):
+    """Zeros and constant blocks produce finite outputs."""
+    x = jnp.zeros((256, 8), dtype=jnp.float32)
+    got = rk.rowops(x, 3, tile=128)
+    assert bool(jnp.all(jnp.isfinite(got)))
+    x = jnp.full((256, 8), float(seed % 97) - 48.0, dtype=jnp.float32)
+    got = rk.rowops(x, 3, tile=128)
+    assert bool(jnp.all(jnp.isfinite(got)))

@@ -1,0 +1,103 @@
+"""L2 model tests: shapes, normalization, aggregation semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels import rowops as rk
+
+
+def _rand(rows, cols, seed=0, scale=1.0):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.normal(key, (rows, cols), dtype=jnp.float32) * scale
+
+
+def test_compute_block_shape_and_value():
+    x = _rand(rk.ROWS, rk.COLS, seed=1)
+    (out,) = model.compute_block(x, 4)
+    assert out.shape == (2, rk.COLS)
+    want = ref.rowops_ref(ref.normalize_ref(x), 4)
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-4)
+
+
+def test_normalize_zero_mean_unit_std():
+    x = _rand(2048, 8, seed=2, scale=5.0) + 3.0
+    xn = model.normalize(x)
+    np.testing.assert_allclose(jnp.mean(xn, axis=0), 0.0, atol=1e-4)
+    np.testing.assert_allclose(jnp.std(xn, axis=0), 1.0, atol=1e-3)
+
+
+def test_normalize_constant_column_no_nan():
+    x = jnp.ones((512, 8), dtype=jnp.float32)
+    xn = model.normalize(x)
+    assert bool(jnp.all(jnp.isfinite(xn)))
+
+
+def test_aggregate_matches_direct_stats():
+    """Aggregating per-task partials == stats over the concatenated rows."""
+    rows, cols, ntasks = 512, 8, 5
+    blocks = [_rand(rows, cols, seed=i) for i in range(ntasks)]
+    partials = jnp.stack(
+        [jnp.stack([b.sum(0), (b * b).sum(0)]) for b in blocks]
+    )
+    pad = model.AGG_FANIN - ntasks
+    partials = jnp.concatenate(
+        [partials, jnp.zeros((pad, 2, cols), jnp.float32)]
+    )
+    counts = jnp.array([rows] * ntasks + [0] * pad, dtype=jnp.float32)
+    (out,) = model.aggregate(partials, counts)
+    allrows = jnp.concatenate(blocks)
+    np.testing.assert_allclose(out[0], jnp.mean(allrows, axis=0), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(
+        out[1], jnp.var(allrows, axis=0), rtol=1e-3, atol=1e-4
+    )
+
+
+def test_aggregate_padding_is_inert():
+    """Zero-padded entries must not change the result."""
+    cols = rk.COLS
+    p = jnp.abs(_rand(3, cols, seed=9)).reshape(3, 1, cols)
+    partials3 = jnp.concatenate([p, p * p], axis=1)  # (3,2,cols)
+    counts3 = jnp.array([100.0, 200.0, 300.0])
+
+    def padded(n):
+        pp = jnp.concatenate(
+            [partials3, jnp.zeros((n - 3, 2, cols), jnp.float32)]
+        )
+        cc = jnp.concatenate([counts3, jnp.zeros((n - 3,), jnp.float32)])
+        # re-pad to AGG_FANIN for the fixed-shape entry point
+        pp = jnp.concatenate(
+            [pp, jnp.zeros((model.AGG_FANIN - n, 2, cols), jnp.float32)]
+        )
+        cc = jnp.concatenate([cc, jnp.zeros((model.AGG_FANIN - n,), jnp.float32)])
+        return model.aggregate(pp, cc)[0]
+
+    np.testing.assert_allclose(padded(3), padded(10), rtol=1e-6)
+    np.testing.assert_allclose(padded(3), padded(model.AGG_FANIN), rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    ntasks=st.integers(min_value=1, max_value=model.AGG_FANIN),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_aggregate_hypothesis_variance_nonnegative(ntasks, seed):
+    rows, cols = 256, rk.COLS
+    blocks = [_rand(rows, cols, seed=seed + i, scale=3.0) for i in range(ntasks)]
+    partials = jnp.stack([jnp.stack([b.sum(0), (b * b).sum(0)]) for b in blocks])
+    pad = model.AGG_FANIN - ntasks
+    partials = jnp.concatenate([partials, jnp.zeros((pad, 2, cols), jnp.float32)])
+    counts = jnp.array([rows] * ntasks + [0] * pad, dtype=jnp.float32)
+    (out,) = model.aggregate(partials, counts)
+    assert bool(jnp.all(out[1] >= -1e-3))
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_variants_cover_workload_opcounts():
+    """Rust workloads request k in VARIANTS; keep the contract explicit."""
+    assert model.VARIANTS == (1, 4, 16, 64)
+    assert rk.ROWS % rk.TILE == 0

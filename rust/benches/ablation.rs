@@ -1,0 +1,84 @@
+//! Bench: design-choice ablations (DESIGN.md §5).
+//!
+//! * scheduler context: CFQ (job deadlines only) vs UJF (user fairness
+//!   only) vs UWFQ (both) on scenario 1;
+//! * ATR sensitivity sweep (§3.2 "ATR should not be set too low");
+//! * grace-period sweep (§4.2);
+//! * estimator-error sweep (§6.4 robustness).
+//!
+//! Run with `cargo bench --bench ablation`.
+
+use uwfq::bench::run_one;
+use uwfq::config::Config;
+use uwfq::partition::SchemeKind;
+use uwfq::sched::PolicyKind;
+use uwfq::util::benchkit::bench_n;
+use uwfq::workload::{gtrace, scenarios};
+
+fn main() {
+    let base = Config::default();
+
+    println!("# Ablation 1 — scheduler context (scenario 1, infrequent-user RT)");
+    let w1 = scenarios::scenario1_default(42);
+    for policy in [PolicyKind::Cfq, PolicyKind::Ujf, PolicyKind::Uwfq] {
+        let m = run_one(&base.clone().with_policy(policy), &w1);
+        println!(
+            "  {:<5} avg RT {:>6.2} s   infreq RT {:>6.2} s",
+            policy.name(),
+            m.mean_rt(),
+            m.mean_rt_by_class(uwfq::workload::UserClass::Infrequent)
+        );
+    }
+
+    println!("\n# Ablation 2 — ATR sensitivity (macro, UWFQ-P)");
+    let mut p = gtrace::GtraceParams::default();
+    p.window_s = 200.0;
+    p.users = 15;
+    p.heavy_users = 4;
+    let wm = gtrace::gtrace(42, &p);
+    for atr in [0.05, 0.1, 0.25, 0.5, 1.0, 2.0, 5.0, 10.0] {
+        let mut cfg = base
+            .clone()
+            .with_policy(PolicyKind::Uwfq)
+            .with_scheme(SchemeKind::Runtime);
+        cfg.atr = atr;
+        let m = run_one(&cfg, &wm);
+        println!(
+            "  ATR {atr:>6.2} s → avg RT {:>6.2} s   makespan {:>6.1} s",
+            m.mean_rt(),
+            m.makespan_s
+        );
+    }
+
+    println!("\n# Ablation 3 — grace period (scenario 1, UWFQ)");
+    for grace in [0.0, 0.5, 2.0, 8.0, 32.0] {
+        let mut cfg = base.clone().with_policy(PolicyKind::Uwfq);
+        cfg.grace_rsec = grace;
+        let m = run_one(&cfg, &w1);
+        println!(
+            "  grace {grace:>5.1} rs → avg RT {:>6.2} s   infreq {:>6.2} s",
+            m.mean_rt(),
+            m.mean_rt_by_class(uwfq::workload::UserClass::Infrequent)
+        );
+    }
+
+    println!("\n# Ablation 4 — estimator error (scenario 1, UWFQ)");
+    for sigma in [0.0, 0.2, 0.5, 1.0] {
+        let mut cfg = base.clone().with_policy(PolicyKind::Uwfq);
+        cfg.estimator_sigma = sigma;
+        let m = run_one(&cfg, &w1);
+        println!("  sigma {sigma:>4.1} → avg RT {:>6.2} s", m.mean_rt());
+    }
+
+    println!("\n# Timing: one ablation grid");
+    bench_n("ablation/atr_sweep_8_points", 2, || {
+        for atr in [0.1, 0.5, 2.0] {
+            let mut cfg = base
+                .clone()
+                .with_policy(PolicyKind::Uwfq)
+                .with_scheme(SchemeKind::Runtime);
+            cfg.atr = atr;
+            uwfq::util::benchkit::black_box(run_one(&cfg, &wm));
+        }
+    });
+}

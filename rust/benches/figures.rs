@@ -1,0 +1,34 @@
+//! Bench: regenerate every figure (3–7) and time each generation.
+//! Run with `cargo bench --bench figures`.
+
+use uwfq::bench::figures;
+use uwfq::config::Config;
+use uwfq::util::benchkit::{bench_n, black_box};
+
+fn main() {
+    let base = Config::default();
+    bench_n("figures/fig3_skew", 10, || {
+        black_box(figures::fig3(&base));
+    });
+    bench_n("figures/fig4_inversion", 10, || {
+        black_box(figures::fig4(&base));
+    });
+    bench_n("figures/fig5_cdf_scenario1", 3, || {
+        black_box(figures::fig5(42, &base));
+    });
+    bench_n("figures/fig6_cdf_scenario2", 3, || {
+        black_box(figures::fig6(42, &base));
+    });
+    let w = figures::default_macro_workload(42);
+    bench_n("figures/fig7_user_violations", 3, || {
+        black_box(figures::fig7(&w, &base));
+    });
+
+    // Print the headline numbers.
+    let f3 = figures::fig3(&base);
+    println!("\nFig 3 completion: {} {:.2}s vs {} {:.2}s",
+        f3.runs[0].0, f3.runs[0].1, f3.runs[1].0, f3.runs[1].1);
+    let f4 = figures::fig4(&base);
+    println!("Fig 4 high-prio RT: {} {:.2}s vs {} {:.2}s",
+        f4.runs[0].0, f4.runs[0].1, f4.runs[1].0, f4.runs[1].1);
+}

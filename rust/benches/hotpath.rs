@@ -1,0 +1,122 @@
+//! Bench: L3 scheduler hot paths — the per-event costs the paper bounds
+//! to O(log N) (§6.1 virtual time) plus the per-offer selection cost.
+//! Run with `cargo bench --bench hotpath`. These feed EXPERIMENTS.md §Perf.
+
+use std::time::Duration;
+
+use uwfq::config::Config;
+use uwfq::core::job::JobSpec;
+use uwfq::sched::vtime::{SingleVtime, TwoLevelVtime};
+use uwfq::sched::{PolicyKind};
+use uwfq::sim;
+use uwfq::util::benchkit::{bench, black_box};
+use uwfq::util::Rng;
+
+/// Deadline assignment (Algorithm 1 + 2 + 3) cost at a given number of
+/// active users/jobs in the virtual system.
+fn bench_deadline_assignment(users: u64, backlog: usize) {
+    let mut rng = Rng::new(7);
+    // Pre-populate.
+    let mut vt = TwoLevelVtime::new(32.0);
+    let mut t = 0.0;
+    let mut id = 0u64;
+    for _ in 0..backlog {
+        t += 0.001;
+        vt.job_arrival(t, rng.below(users) as u32, id, 1.0 + rng.f64() * 100.0, 1.0, 2.0);
+        id += 1;
+    }
+    bench(
+        &format!("hotpath/alg1_job_arrival/u{users}_jobs{backlog}"),
+        Duration::from_millis(600),
+        || {
+            t += 0.0005;
+            vt.job_arrival(t, rng.below(users) as u32, id, 5.0, 1.0, 2.0);
+            id += 1;
+        },
+    );
+}
+
+fn main() {
+    println!("# L3 hot paths");
+
+    // Algorithm 1-3: job arrival → deadline assignment, scaling in users
+    // and virtual backlog.
+    for (users, backlog) in [(4u64, 16usize), (25, 100), (100, 1000), (500, 5000)] {
+        bench_deadline_assignment(users, backlog);
+    }
+
+    // Classic virtual time (CFQ stage arrival).
+    {
+        let mut v = SingleVtime::new(32.0);
+        let mut rng = Rng::new(3);
+        let mut t = 0.0;
+        let mut id = 0u64;
+        for _ in 0..1000 {
+            t += 0.001;
+            v.arrive(t, id, 1.0 + rng.f64() * 50.0);
+            id += 1;
+        }
+        bench("hotpath/cfq_stage_arrival/1000_active", Duration::from_millis(400), || {
+            t += 0.0005;
+            v.arrive(t, id, 10.0);
+            id += 1;
+        });
+    }
+
+    // Full simulator throughput: events/second on a congested workload.
+    {
+        let mut cfg = Config::default();
+        cfg.task_overhead = 0.005;
+        let jobs: Vec<JobSpec> = (0..200)
+            .map(|i| {
+                JobSpec::three_phase(
+                    (i % 10) as u32,
+                    &format!("j{i}"),
+                    (i as u64) * 50_000,
+                    2.0,
+                    128 << 20,
+                    4,
+                    None,
+                )
+            })
+            .collect();
+        // Count events once.
+        let mut probe = cfg.clone();
+        probe.log_tasks = true;
+        let rep = sim::simulate(probe.with_policy(PolicyKind::Uwfq), jobs.clone());
+        let tasks = rep.task_log.len();
+        for policy in PolicyKind::ALL {
+            let c = cfg.clone().with_policy(policy);
+            let r = bench(
+                &format!("hotpath/sim_200jobs/{}", policy.name()),
+                Duration::from_secs(1),
+                || {
+                    black_box(sim::simulate(c.clone(), jobs.clone()));
+                },
+            );
+            let ev_per_s = tasks as f64 / r.mean.as_secs_f64();
+            println!("    → {:.2} M task-events/s ({tasks} tasks/run)", ev_per_s / 1e6);
+        }
+    }
+
+    // Offer-path selection cost at high active-stage counts.
+    {
+        let mut cfg = Config::default();
+        cfg.task_overhead = 0.001;
+        let jobs: Vec<JobSpec> = (0..400)
+            .map(|i| {
+                JobSpec::three_phase((i % 25) as u32, &format!("q{i}"), 0, 1.0, 128 << 20, 4, None)
+            })
+            .collect();
+        for policy in [PolicyKind::Fair, PolicyKind::Ujf, PolicyKind::Uwfq] {
+            let c = cfg.clone().with_policy(policy);
+            bench(
+                &format!("hotpath/burst400/{}", policy.name()),
+                Duration::from_secs(1),
+                || {
+                    black_box(sim::simulate(c.clone(), jobs.clone()));
+                },
+            );
+        }
+    }
+}

@@ -1,0 +1,45 @@
+//! Bench: regenerate Table 1 (micro scenarios 1–2, §5.2.2) end to end and
+//! time the full experiment grid. Run with `cargo bench --bench table1`.
+
+use std::time::Duration;
+
+use uwfq::bench::tables;
+use uwfq::config::Config;
+use uwfq::util::benchkit::{bench_n, black_box};
+
+fn main() {
+    let base = Config::default();
+    println!("# Table 1 — end-to-end experiment grid (4 schedulers × 2 scenarios)");
+    bench_n("table1/full_grid", 5, || {
+        black_box(tables::table1(42, &base));
+    });
+
+    // Per-scenario breakdown.
+    let s1 = uwfq::workload::scenarios::scenario1_default(42);
+    let s2 = uwfq::workload::scenarios::scenario2_default(42);
+    bench_n("table1/scenario1_grid", 5, || {
+        black_box(tables::table1_scenario(&s1, &base, true));
+    });
+    bench_n("table1/scenario2_grid", 5, || {
+        black_box(tables::table1_scenario(&s2, &base, false));
+    });
+
+    // One full scenario-1 simulation per scheduler (the unit the grid
+    // repeats).
+    for policy in uwfq::sched::PolicyKind::PAPER {
+        let cfg = base.clone().with_policy(policy);
+        let jobs = s1.jobs.clone();
+        uwfq::util::benchkit::bench(
+            &format!("table1/sim_scenario1/{}", policy.name()),
+            Duration::from_secs(2),
+            || {
+                black_box(uwfq::sim::simulate(cfg.clone(), jobs.clone()));
+            },
+        );
+    }
+
+    // And the resulting table, printed once for reference.
+    let (t1, t2) = tables::table1(42, &base);
+    println!("\n{}", tables::render_table1(&t1));
+    println!("{}", tables::render_table1(&t2));
+}

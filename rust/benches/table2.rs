@@ -1,0 +1,40 @@
+//! Bench: regenerate Table 2 (macro benchmark, §5.3.1) end to end.
+//! Run with `cargo bench --bench table2`.
+
+use std::time::Duration;
+
+use uwfq::bench::{figures, tables};
+use uwfq::config::Config;
+use uwfq::util::benchkit::{bench, bench_n, black_box};
+
+fn main() {
+    let base = Config::default();
+    let w = figures::default_macro_workload(42);
+    println!(
+        "# Table 2 — macro workload: {} jobs, {} users, {:.0} core-s",
+        w.jobs.len(),
+        w.users().len(),
+        w.total_slot_time()
+    );
+
+    bench_n("table2/full_grid_8_runs", 3, || {
+        black_box(tables::table2(&w, &base));
+    });
+
+    // Single 500 s macro simulation per scheduler (the simulator's
+    // end-to-end unit; the paper needed ~10 wall-minutes per run).
+    for policy in uwfq::sched::PolicyKind::PAPER {
+        let cfg = base.clone().with_policy(policy);
+        let jobs = w.jobs.clone();
+        bench(
+            &format!("table2/sim_macro/{}", policy.name()),
+            Duration::from_secs(2),
+            || {
+                black_box(uwfq::sim::simulate(cfg.clone(), jobs.clone()));
+            },
+        );
+    }
+
+    let t2 = tables::table2(&w, &base);
+    println!("\n{}", tables::render_table2(&t2));
+}

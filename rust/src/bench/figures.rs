@@ -1,0 +1,289 @@
+//! Figure regeneration (§3.2 Figs. 3–4, §5.2.2 Figs. 5–6, §5.3.1 Fig. 7).
+
+use std::collections::HashMap;
+
+use super::{run_one, run_ujf_reference};
+use crate::config::Config;
+use crate::core::job::{CostProfile, JobSpec};
+use crate::metrics::cdf::{write_cdfs, CdfSeries};
+use crate::metrics::fairness::user_violations_vs_ujf;
+use crate::partition::SchemeKind;
+use crate::sched::PolicyKind;
+use crate::sim;
+use crate::util::csvout::Csv;
+use crate::workload::{gtrace, scenarios, UserClass, Workload};
+
+// ---------------------------------------------------------------------------
+// Fig. 3 — task skew vs runtime partitioning (single job Gantt)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct Fig3Result {
+    /// (scheme label, job completion seconds, task spans (core, start, end)).
+    pub runs: Vec<(String, f64, Vec<(usize, f64, f64)>)>,
+}
+
+/// Tune `maxPartitionBytes`/advisory size so the dataset splits into
+/// exactly one partition per core — the paper's §5.1 empirical tuning and
+/// the premise of Figs. 3–4 ("data divided equally among available
+/// cores", one task per core).
+fn tuned(base: &Config) -> Config {
+    let mut cfg = base.clone();
+    cfg.max_partition_bytes = crate::workload::DATASET_BYTES / base.cores as u64;
+    cfg.advisory_partition_bytes = cfg.max_partition_bytes;
+    cfg
+}
+
+/// One job with a 5× hot partition under default one-per-core
+/// partitioning; compare default vs ATR partitioning completion time.
+pub fn fig3(base: &Config) -> Fig3Result {
+    let base = &tuned(base);
+    let skew = CostProfile::skewed(1.0 / base.cores as f64, 5.0);
+    let job = JobSpec::three_phase(
+        1,
+        "skewed",
+        0,
+        crate::workload::SHORT_COMPUTE_SLOT,
+        crate::workload::DATASET_BYTES,
+        16,
+        Some(skew),
+    );
+    let mut runs = Vec::new();
+    for scheme in [SchemeKind::Size, SchemeKind::Runtime] {
+        let mut cfg = base.clone().with_scheme(scheme).with_policy(PolicyKind::Fifo);
+        cfg.log_tasks = true;
+        let rep = sim::simulate(cfg.clone(), vec![job.clone()]);
+        let spans = rep
+            .task_log
+            .iter()
+            .map(|t| (t.core, crate::us_to_s(t.started), crate::us_to_s(t.finished)))
+            .collect();
+        runs.push((cfg.label(), rep.completed[0].response_time(), spans));
+    }
+    Fig3Result { runs }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 4 — priority inversion
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct Fig4Result {
+    /// (scheme label, high-priority job RT, low-priority job RT).
+    pub runs: Vec<(String, f64, f64)>,
+}
+
+/// A long low-priority (blue) job arrives just before a short
+/// high-priority (red) job. Without runtime partitioning the red job
+/// waits for blue's long tasks; with it, cores free after ~ATR.
+pub fn fig4(base: &Config) -> Fig4Result {
+    let base = &tuned(base);
+    // Blue: user 1, long job; Red: user 2, short job arriving 0.2 s later.
+    // Under UWFQ the red job has the earlier virtual deadline.
+    let blue = JobSpec::three_phase(
+        1,
+        "blue-long",
+        0,
+        8.0 * base.cores as f64, // 8 s per core of work
+        crate::workload::DATASET_BYTES,
+        64,
+        None,
+    );
+    let red = scenarios::micro_job(2, "tiny", 0.2, None);
+    let mut runs = Vec::new();
+    for scheme in [SchemeKind::Size, SchemeKind::Runtime] {
+        let cfg = base.clone().with_scheme(scheme).with_policy(PolicyKind::Uwfq);
+        let rep = sim::simulate(cfg.clone(), vec![blue.clone(), red.clone()]);
+        let rt_of = |name: &str| {
+            rep.completed
+                .iter()
+                .find(|c| c.name == name)
+                .map(|c| c.response_time())
+                .unwrap_or(f64::NAN)
+        };
+        runs.push((cfg.label(), rt_of("tiny"), rt_of("blue-long")));
+    }
+    Fig4Result { runs }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 5 / Fig. 6 — CDFs
+// ---------------------------------------------------------------------------
+
+/// Fig. 5: empirical CDFs of infrequent-user response times (scenario 1)
+/// across the four schedulers.
+pub fn fig5(seed: u64, base: &Config) -> Vec<CdfSeries> {
+    let w = scenarios::scenario1_default(seed);
+    PolicyKind::PAPER
+        .iter()
+        .map(|&p| {
+            let m = run_one(&base.clone().with_policy(p), &w);
+            CdfSeries::from_samples(p.name(), &m.rts_of_class(UserClass::Infrequent))
+        })
+        .collect()
+}
+
+/// Fig. 6: empirical CDFs of job *completion times* in scenario 2 — shows
+/// UWFQ finishing jobs gradually vs batched completion under Fair/UJF.
+pub fn fig6(seed: u64, base: &Config) -> Vec<CdfSeries> {
+    let w = scenarios::scenario2_default(seed);
+    PolicyKind::PAPER
+        .iter()
+        .map(|&p| {
+            let m = run_one(&base.clone().with_policy(p), &w);
+            CdfSeries::from_samples(p.name(), &m.finish_times())
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 7 — per-user proportional deadline violations (macro)
+// ---------------------------------------------------------------------------
+
+/// Per-user proportional violation of mean RT vs the UJF reference, for
+/// CFQ/UWFQ/Fair under both partitioning schemes.
+pub fn fig7(workload: &Workload, base: &Config) -> HashMap<String, Vec<(u32, f64)>> {
+    let mut out = HashMap::new();
+    for scheme in [SchemeKind::Size, SchemeKind::Runtime] {
+        let scheme_base = base.clone().with_scheme(scheme);
+        let ujf = run_ujf_reference(&scheme_base, workload);
+        for policy in [PolicyKind::Fair, PolicyKind::Cfq, PolicyKind::Uwfq] {
+            let cfg = scheme_base.clone().with_policy(policy);
+            let m = run_one(&cfg, workload);
+            out.insert(cfg.label(), user_violations_vs_ujf(&m, &ujf));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// CSV emitters
+// ---------------------------------------------------------------------------
+
+pub fn write_fig3_csv(dir: &str, f: &Fig3Result) -> std::io::Result<()> {
+    let mut csv = Csv::create(
+        format!("{dir}/fig3_gantt.csv"),
+        &["scheme", "core", "start_s", "end_s"],
+    )?;
+    for (label, _, spans) in &f.runs {
+        for (core, s, e) in spans {
+            csv.row(&[
+                label.clone(),
+                core.to_string(),
+                format!("{s:.4}"),
+                format!("{e:.4}"),
+            ])?;
+        }
+    }
+    csv.finish()?;
+    let mut csv = Csv::create(
+        format!("{dir}/fig3_completion.csv"),
+        &["scheme", "completion_s"],
+    )?;
+    for (label, rt, _) in &f.runs {
+        csv.row(&[label.clone(), format!("{rt:.4}")])?;
+    }
+    csv.finish()
+}
+
+pub fn write_fig4_csv(dir: &str, f: &Fig4Result) -> std::io::Result<()> {
+    let mut csv = Csv::create(
+        format!("{dir}/fig4_inversion.csv"),
+        &["scheme", "highprio_rt_s", "lowprio_rt_s"],
+    )?;
+    for (label, hi, lo) in &f.runs {
+        csv.row(&[label.clone(), format!("{hi:.4}"), format!("{lo:.4}")])?;
+    }
+    csv.finish()
+}
+
+pub fn write_fig5_csv(dir: &str, series: &[CdfSeries]) -> std::io::Result<()> {
+    write_cdfs(&format!("{dir}/fig5_infrequent_cdf.csv"), series)
+}
+
+pub fn write_fig6_csv(dir: &str, series: &[CdfSeries]) -> std::io::Result<()> {
+    write_cdfs(&format!("{dir}/fig6_completion_cdf.csv"), series)
+}
+
+pub fn write_fig7_csv(
+    dir: &str,
+    data: &HashMap<String, Vec<(u32, f64)>>,
+) -> std::io::Result<()> {
+    let mut csv = Csv::create(
+        format!("{dir}/fig7_user_violations.csv"),
+        &["scheduler", "user", "proportional_violation"],
+    )?;
+    let mut labels: Vec<&String> = data.keys().collect();
+    labels.sort();
+    for label in labels {
+        for (user, r) in &data[label] {
+            csv.row(&[label.clone(), user.to_string(), format!("{r:.4}")])?;
+        }
+    }
+    csv.finish()
+}
+
+/// Default macro workload for Fig. 7 / Table 2.
+pub fn default_macro_workload(seed: u64) -> Workload {
+    gtrace::gtrace(seed, &gtrace::GtraceParams::default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> Config {
+        Config::default().with_cores(8)
+    }
+
+    #[test]
+    fn fig3_runtime_partitioning_beats_skew() {
+        let f = fig3(&base());
+        assert_eq!(f.runs.len(), 2);
+        let default_rt = f.runs[0].1;
+        let runtime_rt = f.runs[1].1;
+        assert!(
+            runtime_rt < default_rt * 0.8,
+            "expected speedup: default {default_rt}, runtime {runtime_rt}"
+        );
+        // Gantt spans recorded for both runs.
+        assert!(f.runs.iter().all(|(_, _, s)| !s.is_empty()));
+    }
+
+    #[test]
+    fn fig4_inversion_mitigated() {
+        let f = fig4(&base());
+        let default_hi = f.runs[0].1;
+        let runtime_hi = f.runs[1].1;
+        assert!(
+            runtime_hi < default_hi,
+            "high-prio RT should improve with -P: {runtime_hi} vs {default_hi}"
+        );
+    }
+
+    #[test]
+    fn fig6_series_cover_all_schedulers() {
+        let mut cfg = base();
+        cfg.seed = 3;
+        let series = fig6(3, &cfg);
+        assert_eq!(series.len(), 4);
+        assert!(series.iter().all(|s| !s.points.is_empty()));
+        // CDF fractions end at 1.0.
+        for s in &series {
+            assert!((s.points.last().unwrap().1 - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn figure_csvs_written() {
+        let dir = std::env::temp_dir().join("uwfq_figs_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let d = dir.to_str().unwrap();
+        write_fig3_csv(d, &fig3(&base())).unwrap();
+        write_fig4_csv(d, &fig4(&base())).unwrap();
+        assert!(dir.join("fig3_gantt.csv").exists());
+        assert!(dir.join("fig3_completion.csv").exists());
+        assert!(dir.join("fig4_inversion.csv").exists());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,127 @@
+//! The experiment harness: runs (scheduler × partitioner × workload)
+//! grids through the simulator and regenerates every table and figure of
+//! the paper's evaluation (§5).
+//!
+//! * [`tables`] — Table 1 (micro scenarios) and Table 2 (macro).
+//! * [`figures`] — Fig. 3 (skew), Fig. 4 (priority inversion), Fig. 5/6
+//!   (CDFs), Fig. 7 (per-user violations).
+
+pub mod figures;
+pub mod tables;
+
+use std::collections::HashMap;
+
+use crate::config::Config;
+use crate::metrics::report::RunMetrics;
+use crate::sim;
+use crate::workload::Workload;
+
+/// Idle-system response time per distinct job name under `cfg`
+/// (slowdown denominators, computed once per job shape).
+pub fn idle_map(cfg: &Config, workload: &Workload) -> HashMap<String, f64> {
+    let mut map = HashMap::new();
+    for job in &workload.jobs {
+        if !map.contains_key(&job.name) {
+            map.insert(job.name.clone(), sim::idle_response_time(cfg, job));
+        }
+    }
+    map
+}
+
+/// Run one (config, workload) experiment end to end and aggregate
+/// metrics. Deterministic for a given config seed.
+pub fn run_one(cfg: &Config, workload: &Workload) -> RunMetrics {
+    let idle = idle_map(cfg, workload);
+    let report = sim::simulate(cfg.clone(), workload.jobs.clone());
+    RunMetrics::build(
+        &report.label,
+        workload,
+        &report.completed,
+        &idle,
+        report.makespan_s,
+        report.utilization,
+    )
+}
+
+/// Run the UJF reference for a given scheme (the fairness baseline the
+/// DVR/DSR metrics compare against; §5.1.1).
+pub fn run_ujf_reference(cfg: &Config, workload: &Workload) -> RunMetrics {
+    let ujf_cfg = cfg.clone().with_policy(crate::sched::PolicyKind::Ujf);
+    run_one(&ujf_cfg, workload)
+}
+
+/// Render an aligned text table.
+pub fn render_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>width$}", c, width = widths[i]))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let head: Vec<String> = header.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&head, &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+pub fn fmt1(x: f64) -> String {
+    format!("{x:.1}")
+}
+pub fn fmt2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::PolicyKind;
+    use crate::workload::scenarios;
+
+    #[test]
+    fn run_one_produces_complete_metrics() {
+        let w = scenarios::scenario2(1, 4, 0.5); // small: 16 tiny jobs
+        let cfg = Config::default().with_policy(PolicyKind::Uwfq).with_cores(8);
+        let m = run_one(&cfg, &w);
+        assert_eq!(m.outcomes.len(), 16);
+        assert!(m.mean_rt() > 0.0);
+        assert!(m.outcomes.iter().all(|o| o.idle_rt > 0.0));
+        assert!(m.makespan_s > 0.0);
+    }
+
+    #[test]
+    fn idle_map_one_entry_per_name() {
+        let w = scenarios::scenario2(1, 3, 0.5);
+        let cfg = Config::default().with_cores(8);
+        let idle = idle_map(&cfg, &w);
+        assert_eq!(idle.len(), 1); // all jobs are "tiny"
+        assert!(idle["tiny"] > 0.0);
+    }
+
+    #[test]
+    fn render_table_aligns() {
+        let t = render_table(
+            &["a", "bbbb"],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0].len(), lines[2].len());
+    }
+}

@@ -1,0 +1,344 @@
+//! Table 1 (micro scenarios 1–2) and Table 2 (macro benchmark)
+//! regeneration (§5.2.2, §5.3.1).
+
+use super::{fmt1, fmt2, render_table, run_one, run_ujf_reference};
+use crate::config::Config;
+use crate::metrics::fairness::{fairness_vs_ujf, DvrDenominator, FairnessMetrics};
+use crate::metrics::report::RunMetrics;
+use crate::partition::SchemeKind;
+use crate::sched::PolicyKind;
+use crate::util::csvout::Csv;
+use crate::workload::{scenarios, UserClass, Workload};
+
+/// One scheduler row of Table 1.
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    pub label: String,
+    pub rt_avg: f64,
+    pub rt_worst10: f64,
+    pub sl_avg: f64,
+    pub sl_worst10: f64,
+    /// Scenario 1: (frequent, infrequent) mean RT. Scenario 2: unused.
+    pub class_rt: Option<(f64, f64)>,
+    /// Scenario 2: (first user, last user) mean RT. Scenario 1: unused.
+    pub first_last_rt: Option<(f64, f64)>,
+    /// None for the UJF reference row.
+    pub fairness: Option<FairnessMetrics>,
+    pub metrics: RunMetrics,
+}
+
+/// All rows of one scenario.
+pub struct Table1Scenario {
+    pub name: String,
+    pub rows: Vec<Table1Row>,
+}
+
+/// Run one scenario across the paper's four schedulers.
+pub fn table1_scenario(
+    workload: &Workload,
+    base: &Config,
+    scenario1_classes: bool,
+) -> Table1Scenario {
+    let ujf = run_ujf_reference(base, workload);
+    let mut rows = Vec::new();
+    for policy in PolicyKind::PAPER {
+        let cfg = base.clone().with_policy(policy);
+        let m = if policy == PolicyKind::Ujf {
+            ujf.clone()
+        } else {
+            run_one(&cfg, workload)
+        };
+        let fairness = (policy != PolicyKind::Ujf)
+            .then(|| fairness_vs_ujf(&m, &ujf, DvrDenominator::GreaterThanZero));
+        let class_rt = scenario1_classes.then(|| {
+            (
+                m.mean_rt_by_class(UserClass::Frequent),
+                m.mean_rt_by_class(UserClass::Infrequent),
+            )
+        });
+        let first_last_rt = (!scenario1_classes).then(|| {
+            let users = m.users();
+            (
+                m.mean_rt_of_user(*users.first().unwrap()),
+                m.mean_rt_of_user(*users.last().unwrap()),
+            )
+        });
+        rows.push(Table1Row {
+            label: cfg.label(),
+            rt_avg: m.mean_rt(),
+            rt_worst10: m.worst10_rt(),
+            sl_avg: m.mean_slowdown(),
+            sl_worst10: m.worst10_slowdown(),
+            class_rt,
+            first_last_rt,
+            fairness,
+            metrics: m,
+        });
+    }
+    Table1Scenario {
+        name: workload.name.clone(),
+        rows,
+    }
+}
+
+/// Full Table 1: both micro scenarios.
+pub fn table1(seed: u64, base: &Config) -> (Table1Scenario, Table1Scenario) {
+    let s1 = scenarios::scenario1_default(seed);
+    let s2 = scenarios::scenario2_default(seed);
+    (
+        table1_scenario(&s1, base, true),
+        table1_scenario(&s2, base, false),
+    )
+}
+
+/// Text rendering in the paper's layout.
+pub fn render_table1(s: &Table1Scenario) -> String {
+    let scenario1 = s.rows[0].class_rt.is_some();
+    let (c1, c2) = if scenario1 {
+        ("Freq.", "Infreq.")
+    } else {
+        ("First", "Last")
+    };
+    let header = vec![
+        "Scheduler", "RTavg", "RTw10%", "SLavg", "SLw10%", c1, c2, "DVR", "Viol#", "DSR",
+        "Slack#",
+    ];
+    let rows: Vec<Vec<String>> = s
+        .rows
+        .iter()
+        .map(|r| {
+            let (a, b) = r.class_rt.or(r.first_last_rt).unwrap_or((0.0, 0.0));
+            let (dvr, viol, dsr, slack) = match &r.fairness {
+                Some(f) => (
+                    fmt2(f.dvr),
+                    f.violations.to_string(),
+                    fmt2(f.dsr),
+                    f.slacks.to_string(),
+                ),
+                None => ("-".into(), "-".into(), "-".into(), "-".into()),
+            };
+            vec![
+                r.label.clone(),
+                fmt1(r.rt_avg),
+                fmt1(r.rt_worst10),
+                fmt1(r.sl_avg),
+                fmt1(r.sl_worst10),
+                fmt1(a),
+                fmt1(b),
+                dvr,
+                viol,
+                dsr,
+                slack,
+            ]
+        })
+        .collect();
+    format!("== Table 1 / {} ==\n{}", s.name, render_table(&header, &rows))
+}
+
+/// Write a Table 1 scenario as CSV.
+pub fn write_table1_csv(path: &str, s: &Table1Scenario) -> std::io::Result<()> {
+    let mut csv = Csv::create(
+        path,
+        &[
+            "scheduler", "rt_avg", "rt_worst10", "sl_avg", "sl_worst10", "class_a_rt",
+            "class_b_rt", "dvr", "violations", "dsr", "slacks",
+        ],
+    )?;
+    for r in &s.rows {
+        let (a, b) = r.class_rt.or(r.first_last_rt).unwrap_or((0.0, 0.0));
+        let (dvr, viol, dsr, slack) = match &r.fairness {
+            Some(f) => (f.dvr, f.violations as f64, f.dsr, f.slacks as f64),
+            None => (f64::NAN, f64::NAN, f64::NAN, f64::NAN),
+        };
+        csv.row(&[
+            r.label.clone(),
+            format!("{:.4}", r.rt_avg),
+            format!("{:.4}", r.rt_worst10),
+            format!("{:.4}", r.sl_avg),
+            format!("{:.4}", r.sl_worst10),
+            format!("{a:.4}"),
+            format!("{b:.4}"),
+            format!("{dvr:.4}"),
+            format!("{viol}"),
+            format!("{dsr:.4}"),
+            format!("{slack}"),
+        ])?;
+    }
+    csv.finish()
+}
+
+// ---------------------------------------------------------------------------
+// Table 2 — macro benchmark
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct Table2Row {
+    pub label: String,
+    /// Benchmark wall time (makespan), the paper's "Runtime" column.
+    pub runtime: f64,
+    pub rt_avg: f64,
+    pub rt_0_80: f64,
+    pub rt_80_95: f64,
+    pub rt_95_100: f64,
+    pub fairness: Option<FairnessMetrics>,
+    pub metrics: RunMetrics,
+}
+
+pub struct Table2 {
+    pub rows: Vec<Table2Row>,
+}
+
+/// Run the macro benchmark: 4 schedulers × {default, runtime} partitioning
+/// (8 rows, as in the paper). DVR/DSR compare against UJF *with the same
+/// partitioning* (§5.1.2).
+pub fn table2(workload: &Workload, base: &Config) -> Table2 {
+    let mut rows = Vec::new();
+    for scheme in [SchemeKind::Size, SchemeKind::Runtime] {
+        let scheme_base = base.clone().with_scheme(scheme);
+        let ujf = run_ujf_reference(&scheme_base, workload);
+        for policy in PolicyKind::PAPER {
+            let cfg = scheme_base.clone().with_policy(policy);
+            let m = if policy == PolicyKind::Ujf {
+                ujf.clone()
+            } else {
+                run_one(&cfg, workload)
+            };
+            let fairness = (policy != PolicyKind::Ujf)
+                .then(|| fairness_vs_ujf(&m, &ujf, DvrDenominator::GreaterThanZero));
+            rows.push(Table2Row {
+                label: cfg.label(),
+                runtime: m.makespan_s,
+                rt_avg: m.mean_rt(),
+                rt_0_80: m.mean_rt_band(0.0, 80.0),
+                rt_80_95: m.mean_rt_band(80.0, 95.0),
+                rt_95_100: m.mean_rt_band(95.0, 100.0),
+                fairness,
+                metrics: m,
+            });
+        }
+    }
+    Table2 { rows }
+}
+
+pub fn render_table2(t: &Table2) -> String {
+    let header = vec![
+        "Scheduler", "Runtime", "RTavg", "0-80%", "80-95%", "95-100%", "DVR", "Viol#", "DSR",
+        "Slack#",
+    ];
+    let rows: Vec<Vec<String>> = t
+        .rows
+        .iter()
+        .map(|r| {
+            let (dvr, viol, dsr, slack) = match &r.fairness {
+                Some(f) => (
+                    fmt2(f.dvr),
+                    f.violations.to_string(),
+                    fmt2(f.dsr),
+                    f.slacks.to_string(),
+                ),
+                None => ("-".into(), "-".into(), "-".into(), "-".into()),
+            };
+            vec![
+                r.label.clone(),
+                fmt1(r.runtime),
+                fmt2(r.rt_avg),
+                fmt2(r.rt_0_80),
+                fmt2(r.rt_80_95),
+                fmt1(r.rt_95_100),
+                dvr,
+                viol,
+                dsr,
+                slack,
+            ]
+        })
+        .collect();
+    format!("== Table 2 / macro ==\n{}", render_table(&header, &rows))
+}
+
+pub fn write_table2_csv(path: &str, t: &Table2) -> std::io::Result<()> {
+    let mut csv = Csv::create(
+        path,
+        &[
+            "scheduler", "runtime", "rt_avg", "rt_0_80", "rt_80_95", "rt_95_100", "dvr",
+            "violations", "dsr", "slacks",
+        ],
+    )?;
+    for r in &t.rows {
+        let (dvr, viol, dsr, slack) = match &r.fairness {
+            Some(f) => (f.dvr, f.violations as f64, f.dsr, f.slacks as f64),
+            None => (f64::NAN, f64::NAN, f64::NAN, f64::NAN),
+        };
+        csv.row(&[
+            r.label.clone(),
+            format!("{:.4}", r.runtime),
+            format!("{:.4}", r.rt_avg),
+            format!("{:.4}", r.rt_0_80),
+            format!("{:.4}", r.rt_80_95),
+            format!("{:.4}", r.rt_95_100),
+            format!("{dvr:.4}"),
+            format!("{viol}"),
+            format!("{dsr:.4}"),
+            format!("{slack}"),
+        ])?;
+    }
+    csv.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::gtrace::{gtrace, GtraceParams};
+
+    fn small_base() -> Config {
+        Config::default().with_cores(8)
+    }
+
+    #[test]
+    fn table1_scenario2_small_runs() {
+        let w = scenarios::scenario2(1, 5, 0.5);
+        let s = table1_scenario(&w, &small_base(), false);
+        assert_eq!(s.rows.len(), 4);
+        // UJF row has no fairness metrics; others do.
+        assert!(s.rows.iter().any(|r| r.fairness.is_none()));
+        assert_eq!(s.rows.iter().filter(|r| r.fairness.is_some()).count(), 3);
+        for r in &s.rows {
+            assert!(r.rt_avg > 0.0);
+            assert!(r.rt_worst10 >= r.rt_avg);
+            assert!(r.first_last_rt.is_some());
+        }
+        let text = render_table1(&s);
+        assert!(text.contains("UWFQ") && text.contains("First"));
+    }
+
+    #[test]
+    fn table2_small_macro_runs() {
+        let mut p = GtraceParams::default();
+        p.window_s = 60.0;
+        p.users = 6;
+        p.heavy_users = 2;
+        p.cores = 8;
+        let w = gtrace(5, &p);
+        let t = table2(&w, &small_base());
+        assert_eq!(t.rows.len(), 8);
+        // -P rows present.
+        assert!(t.rows.iter().any(|r| r.label == "UWFQ-P"));
+        let text = render_table2(&t);
+        assert!(text.contains("Fair-P"));
+        for r in &t.rows {
+            assert!(r.runtime > 0.0, "{}", r.label);
+        }
+    }
+
+    #[test]
+    fn csv_outputs_written() {
+        let dir = std::env::temp_dir().join("uwfq_tables_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let w = scenarios::scenario2(1, 3, 0.5);
+        let s = table1_scenario(&w, &small_base(), false);
+        let p = dir.join("t1.csv");
+        write_table1_csv(p.to_str().unwrap(), &s).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 5);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,134 @@
+//! Hand-rolled CLI (clap is not available offline): positional
+//! subcommand + `--key value` flags, mapped onto [`Config`] keys plus a
+//! few harness options.
+
+use std::collections::BTreeMap;
+
+use crate::config::Config;
+
+#[derive(Clone, Debug)]
+pub struct Cli {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+pub const USAGE: &str = "\
+uwfq — User Weighted Fair Queuing for multi-user Spark-like analytics
+(reproduction of Kažemaks et al., 2025)
+
+USAGE:
+  uwfq reproduce <table1|table2|fig3|fig4|fig5|fig6|fig7|all> [--out DIR] [--seed N] [--quick true]
+  uwfq run --workload <scenario1|scenario2|gtrace|trace:FILE> [--policy P] [--scheme S]
+  uwfq serve [--cores N] [--time-scale F] [--artifacts DIR]   # real PJRT backend demo
+  uwfq ablation [--seed N]                                    # design-choice ablations
+  uwfq run --workload scenario2 --eventlog trace.jsonl        # emit event log
+  uwfq analyze trace.jsonl                                    # post-hoc trace analysis
+  uwfq help
+
+FLAGS (config keys, see config.rs):
+  --cores N --atr S --grace_rsec S --task_overhead S --seed N
+  --policy fifo|fair|ujf|cfq|uwfq --scheme default|runtime
+  --estimator_sigma S --config FILE
+";
+
+impl Cli {
+    pub fn parse(args: &[String]) -> Result<Cli, String> {
+        let mut it = args.iter();
+        let command = it.next().cloned().unwrap_or_else(|| "help".to_string());
+        let mut positional = Vec::new();
+        let mut flags = BTreeMap::new();
+        let rest: Vec<&String> = it.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let a = rest[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let val = rest
+                    .get(i + 1)
+                    .ok_or_else(|| format!("flag --{key} needs a value"))?;
+                flags.insert(key.to_string(), val.to_string());
+                i += 2;
+            } else {
+                positional.push(a.to_string());
+                i += 1;
+            }
+        }
+        Ok(Cli {
+            command,
+            positional,
+            flags,
+        })
+    }
+
+    /// Build the engine config from `--config FILE` plus flag overrides.
+    pub fn config(&self) -> Result<Config, String> {
+        let mut cfg = match self.flags.get("config") {
+            Some(path) => Config::from_file(path)?,
+            None => Config::default(),
+        };
+        for (k, v) in &self.flags {
+            match k.as_str() {
+                // harness-only flags, not config keys
+                "config" | "out" | "quick" | "workload" | "time-scale" | "artifacts"
+                | "eventlog" => {}
+                _ => cfg.set(k, v)?,
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag_or(&self, key: &str, default: &str) -> String {
+        self.flag(key).unwrap_or(default).to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::SchemeKind;
+    use crate::sched::PolicyKind;
+
+    fn args(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let c = Cli::parse(&args("reproduce table1 --out results --seed 7")).unwrap();
+        assert_eq!(c.command, "reproduce");
+        assert_eq!(c.positional, vec!["table1"]);
+        assert_eq!(c.flag("out"), Some("results"));
+        let cfg = c.config().unwrap();
+        assert_eq!(cfg.seed, 7);
+    }
+
+    #[test]
+    fn flags_override_config() {
+        let c = Cli::parse(&args("run --policy cfq --scheme runtime --cores 8")).unwrap();
+        let cfg = c.config().unwrap();
+        assert_eq!(cfg.policy, PolicyKind::Cfq);
+        assert_eq!(cfg.scheme, SchemeKind::Runtime);
+        assert_eq!(cfg.cores, 8);
+    }
+
+    #[test]
+    fn missing_flag_value_errors() {
+        assert!(Cli::parse(&args("run --policy")).is_err());
+    }
+
+    #[test]
+    fn unknown_config_key_errors() {
+        let c = Cli::parse(&args("run --bogus 1")).unwrap();
+        assert!(c.config().is_err());
+    }
+
+    #[test]
+    fn empty_args_give_help() {
+        let c = Cli::parse(&[]).unwrap();
+        assert_eq!(c.command, "help");
+    }
+}

@@ -1,0 +1,173 @@
+//! Engine configuration — the knobs of the testbed (§5.1) and of the
+//! paper's algorithms, with the defaults used throughout the evaluation.
+//!
+//! Values can be overridden from CLI flags (`--cores`, `--atr`, ...) or a
+//! simple `key = value` config file (see [`Config::from_file`]).
+
+use crate::partition::SchemeKind;
+use crate::sched::PolicyKind;
+
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Total executor cores `R` (DAS-5 setup: 8 executors × 4 cores = 32).
+    pub cores: u32,
+    /// Fixed per-task overhead in seconds (scheduling + launch + JVM-ish
+    /// constant) — what makes over-partitioning costly (§3.2: "ATR should
+    /// not be set too low").
+    pub task_overhead: f64,
+    /// Advisory Task Runtime for runtime partitioning, seconds (§3.2).
+    pub atr: f64,
+    /// Spark `maxPartitionBytes` (file scan), tuned as in §5.1.
+    pub max_partition_bytes: u64,
+    /// AQE advisory partition size (shuffle coalescing).
+    pub advisory_partition_bytes: u64,
+    /// UWFQ grace period in resource-seconds (§4.2; paper default 2).
+    pub grace_rsec: f64,
+    /// Scheduling policy.
+    pub policy: PolicyKind,
+    /// Partitioning scheme (`Runtime` = the paper's `-P` variants).
+    pub scheme: SchemeKind,
+    /// Workload / estimator RNG seed.
+    pub seed: u64,
+    /// σ of the lognormal estimator error (0 = perfect oracle, §6.4).
+    pub estimator_sigma: f64,
+    /// Record per-task start/finish for Gantt figures (small overhead).
+    pub log_tasks: bool,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cores: 32,
+            task_overhead: 0.020,
+            atr: 0.5,
+            max_partition_bytes: 24 << 20,
+            advisory_partition_bytes: 24 << 20,
+            grace_rsec: 2.0,
+            policy: PolicyKind::Uwfq,
+            scheme: SchemeKind::Size,
+            seed: 42,
+            estimator_sigma: 0.0,
+            log_tasks: false,
+        }
+    }
+}
+
+impl Config {
+    pub fn with_policy(mut self, policy: PolicyKind) -> Self {
+        self.policy = policy;
+        self
+    }
+    pub fn with_scheme(mut self, scheme: SchemeKind) -> Self {
+        self.scheme = scheme;
+        self
+    }
+    pub fn with_cores(mut self, cores: u32) -> Self {
+        self.cores = cores;
+        self
+    }
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Parse a `key = value` per line config file (comments with `#`).
+    pub fn from_file(path: &str) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        let mut cfg = Config::default();
+        cfg.apply_lines(&text)?;
+        Ok(cfg)
+    }
+
+    pub fn apply_lines(&mut self, text: &str) -> Result<(), String> {
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", ln + 1))?;
+            self.set(k.trim(), v.trim())
+                .map_err(|e| format!("line {}: {e}", ln + 1))?;
+        }
+        Ok(())
+    }
+
+    /// Set one option by name (shared by config file and CLI flags).
+    pub fn set(&mut self, key: &str, val: &str) -> Result<(), String> {
+        fn num<T: std::str::FromStr>(v: &str) -> Result<T, String> {
+            v.parse().map_err(|_| format!("bad number '{v}'"))
+        }
+        match key {
+            "cores" => self.cores = num(val)?,
+            "task_overhead" => self.task_overhead = num(val)?,
+            "atr" => self.atr = num(val)?,
+            "max_partition_bytes" => self.max_partition_bytes = num(val)?,
+            "advisory_partition_bytes" => self.advisory_partition_bytes = num(val)?,
+            "grace_rsec" => self.grace_rsec = num(val)?,
+            "seed" => self.seed = num(val)?,
+            "estimator_sigma" => self.estimator_sigma = num(val)?,
+            "log_tasks" => self.log_tasks = val == "true" || val == "1",
+            "policy" => {
+                self.policy =
+                    PolicyKind::parse(val).ok_or_else(|| format!("unknown policy '{val}'"))?
+            }
+            "scheme" | "partitioner" => {
+                self.scheme =
+                    SchemeKind::parse(val).ok_or_else(|| format!("unknown scheme '{val}'"))?
+            }
+            _ => return Err(format!("unknown config key '{key}'")),
+        }
+        Ok(())
+    }
+
+    /// A short label like "UWFQ-P" matching the paper's table rows.
+    pub fn label(&self) -> String {
+        match self.scheme {
+            SchemeKind::Size => self.policy.name().to_string(),
+            SchemeKind::Runtime => format!("{}-P", self.policy.name()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_testbed() {
+        let c = Config::default();
+        assert_eq!(c.cores, 32);
+        assert_eq!(c.grace_rsec, 2.0);
+        assert_eq!(c.estimator_sigma, 0.0); // perfect predictor assumption
+    }
+
+    #[test]
+    fn apply_lines_parses() {
+        let mut c = Config::default();
+        c.apply_lines("cores = 8\npolicy = cfq\nscheme = runtime # -P\natr=0.25\n")
+            .unwrap();
+        assert_eq!(c.cores, 8);
+        assert_eq!(c.policy, PolicyKind::Cfq);
+        assert_eq!(c.scheme, SchemeKind::Runtime);
+        assert_eq!(c.atr, 0.25);
+    }
+
+    #[test]
+    fn apply_lines_rejects_unknown() {
+        let mut c = Config::default();
+        assert!(c.apply_lines("bogus = 1").is_err());
+        assert!(c.apply_lines("policy = zzz").is_err());
+        assert!(c.apply_lines("no equals sign").is_err());
+    }
+
+    #[test]
+    fn label_includes_partitioner() {
+        let c = Config::default()
+            .with_policy(PolicyKind::Uwfq)
+            .with_scheme(SchemeKind::Runtime);
+        assert_eq!(c.label(), "UWFQ-P");
+        assert_eq!(Config::default().with_policy(PolicyKind::Fair).label(), "Fair");
+    }
+}

@@ -1,0 +1,148 @@
+//! Per-job DAG tracking — the DAG Scheduler role (paper §2.1.1): stages
+//! are submitted to the task scheduler once all their parents finished,
+//! and the job completes when its last stage does.
+
+use super::job::JobSpec;
+use crate::{JobId, StageId, TimeUs, UserId};
+
+#[derive(Clone, Debug)]
+pub struct JobState {
+    pub id: JobId,
+    pub spec: JobSpec,
+    pub arrival_seq: u64,
+    /// Time the job was submitted to the engine.
+    pub submit_time: TimeUs,
+    /// StageId of each spec stage once submitted to the task scheduler.
+    pub stage_ids: Vec<Option<StageId>>,
+    pub stage_done: Vec<bool>,
+    pub finish_time: Option<TimeUs>,
+}
+
+impl JobState {
+    pub fn new(id: JobId, arrival_seq: u64, submit_time: TimeUs, spec: JobSpec) -> Self {
+        let n = spec.stages.len();
+        JobState {
+            id,
+            spec,
+            arrival_seq,
+            submit_time,
+            stage_ids: vec![None; n],
+            stage_done: vec![false; n],
+            finish_time: None,
+        }
+    }
+
+    /// Spec indices of stages that are ready (all parents done) but not
+    /// yet submitted.
+    pub fn ready_stages(&self) -> Vec<usize> {
+        (0..self.spec.stages.len())
+            .filter(|&i| {
+                self.stage_ids[i].is_none()
+                    && self.spec.stages[i]
+                        .parents
+                        .iter()
+                        .all(|&p| self.stage_done[p])
+            })
+            .collect()
+    }
+
+    pub fn mark_submitted(&mut self, idx: usize, stage: StageId) {
+        debug_assert!(self.stage_ids[idx].is_none());
+        self.stage_ids[idx] = Some(stage);
+    }
+
+    /// Mark a stage finished; returns newly-ready spec indices.
+    pub fn mark_done(&mut self, idx: usize) -> Vec<usize> {
+        debug_assert!(!self.stage_done[idx]);
+        self.stage_done[idx] = true;
+        self.ready_stages()
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.stage_done.iter().all(|&d| d)
+    }
+}
+
+/// Record of a finished analytics job, consumed by the metrics layer.
+#[derive(Clone, Debug)]
+pub struct CompletedJob {
+    pub job: JobId,
+    pub user: UserId,
+    pub name: String,
+    /// Submission (arrival) time — `min(T_start)` in Eq. RT.
+    pub submit: TimeUs,
+    /// Completion of the last stage — `max(T_end)`.
+    pub finish: TimeUs,
+    /// Ground-truth job slot-time (seconds).
+    pub slot_time: f64,
+}
+
+impl CompletedJob {
+    /// Response time in seconds (§5.1.1).
+    pub fn response_time(&self) -> f64 {
+        crate::us_to_s(self.finish - self.submit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::job::JobSpec;
+
+    fn chain_job() -> JobState {
+        let spec = JobSpec::three_phase(1, "j", 0, 1.0, 1 << 20, 4, None);
+        JobState::new(7, 0, 100, spec)
+    }
+
+    #[test]
+    fn linear_chain_readiness() {
+        let mut j = chain_job();
+        assert_eq!(j.ready_stages(), vec![0]);
+        j.mark_submitted(0, 100);
+        assert_eq!(j.ready_stages(), Vec::<usize>::new());
+        let ready = j.mark_done(0);
+        assert_eq!(ready, vec![1]);
+        j.mark_submitted(1, 101);
+        let ready = j.mark_done(1);
+        assert_eq!(ready, vec![2]);
+        j.mark_submitted(2, 102);
+        let ready = j.mark_done(2);
+        assert_eq!(ready, vec![3]);
+        j.mark_submitted(3, 103);
+        assert!(!j.is_complete());
+        assert!(j.mark_done(3).is_empty());
+        assert!(j.is_complete());
+    }
+
+    #[test]
+    fn diamond_dag_readiness() {
+        // 0 → {1, 2} → 3
+        let mut spec = JobSpec::three_phase(1, "d", 0, 1.0, 1 << 20, 4, None);
+        spec.stages.truncate(4);
+        spec.stages[1].parents = vec![0];
+        spec.stages[2].parents = vec![0];
+        spec.stages[3].parents = vec![1, 2];
+        let mut j = JobState::new(1, 0, 0, spec);
+        j.mark_submitted(0, 10);
+        let r = j.mark_done(0);
+        assert_eq!(r, vec![1, 2]);
+        j.mark_submitted(1, 11);
+        j.mark_submitted(2, 12);
+        assert!(j.mark_done(1).is_empty()); // stage 3 still blocked on 2
+        let r = j.mark_done(2);
+        assert_eq!(r, vec![3]);
+    }
+
+    #[test]
+    fn response_time_from_us() {
+        let c = CompletedJob {
+            job: 1,
+            user: 1,
+            name: "x".into(),
+            submit: 1_000_000,
+            finish: 3_500_000,
+            slot_time: 1.0,
+        };
+        assert!((c.response_time() - 2.5).abs() < 1e-9);
+    }
+}

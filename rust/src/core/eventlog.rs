@@ -1,0 +1,400 @@
+//! Spark-style event logging (paper §5.1: "We enable event logging to
+//! collect execution traces after the application has finished").
+//!
+//! A run emits a JSON-lines trace of job/task lifecycle events; the
+//! `uwfq analyze` command (and external tooling) recomputes response
+//! times and utilization from the trace alone — the same post-hoc
+//! pipeline the paper uses to compute its metrics from Spark event logs.
+
+use std::collections::HashMap;
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::sim::SimReport;
+use crate::util::jsonout::{self, Json};
+use crate::workload::Workload;
+use crate::{JobId, TimeUs};
+
+/// One trace event (subset of Spark's SparkListenerEvent zoo, reduced to
+/// what the paper's metrics need).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    JobSubmitted {
+        t: TimeUs,
+        job: JobId,
+        user: u32,
+        name: String,
+        slot_time: f64,
+    },
+    TaskStart {
+        t: TimeUs,
+        job: JobId,
+        stage: u64,
+        task: u64,
+        core: usize,
+    },
+    TaskEnd {
+        t: TimeUs,
+        job: JobId,
+        stage: u64,
+        task: u64,
+        core: usize,
+    },
+    JobCompleted {
+        t: TimeUs,
+        job: JobId,
+    },
+}
+
+impl Event {
+    pub fn time(&self) -> TimeUs {
+        match self {
+            Event::JobSubmitted { t, .. }
+            | Event::TaskStart { t, .. }
+            | Event::TaskEnd { t, .. }
+            | Event::JobCompleted { t, .. } => *t,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let (kind, mut fields): (&str, Vec<(&str, Json)>) = match self {
+            Event::JobSubmitted {
+                t,
+                job,
+                user,
+                name,
+                slot_time,
+            } => (
+                "JobSubmitted",
+                vec![
+                    ("t", jsonout::num(*t as f64)),
+                    ("job", jsonout::num(*job as f64)),
+                    ("user", jsonout::num(*user as f64)),
+                    ("name", jsonout::s(name)),
+                    ("slot_time", jsonout::num(*slot_time)),
+                ],
+            ),
+            Event::TaskStart {
+                t,
+                job,
+                stage,
+                task,
+                core,
+            } => (
+                "TaskStart",
+                vec![
+                    ("t", jsonout::num(*t as f64)),
+                    ("job", jsonout::num(*job as f64)),
+                    ("stage", jsonout::num(*stage as f64)),
+                    ("task", jsonout::num(*task as f64)),
+                    ("core", jsonout::num(*core as f64)),
+                ],
+            ),
+            Event::TaskEnd {
+                t,
+                job,
+                stage,
+                task,
+                core,
+            } => (
+                "TaskEnd",
+                vec![
+                    ("t", jsonout::num(*t as f64)),
+                    ("job", jsonout::num(*job as f64)),
+                    ("stage", jsonout::num(*stage as f64)),
+                    ("task", jsonout::num(*task as f64)),
+                    ("core", jsonout::num(*core as f64)),
+                ],
+            ),
+            Event::JobCompleted { t, job } => (
+                "JobCompleted",
+                vec![
+                    ("t", jsonout::num(*t as f64)),
+                    ("job", jsonout::num(*job as f64)),
+                ],
+            ),
+        };
+        fields.push(("event", jsonout::s(kind)));
+        jsonout::obj(fields)
+    }
+
+    fn from_json(v: &Json) -> Result<Event> {
+        let kind = v
+            .get("event")
+            .and_then(|k| k.as_str())
+            .ok_or_else(|| anyhow!("event line missing 'event'"))?;
+        let num = |k: &str| -> Result<f64> {
+            v.get(k)
+                .and_then(|x| x.as_f64())
+                .ok_or_else(|| anyhow!("event missing '{k}'"))
+        };
+        Ok(match kind {
+            "JobSubmitted" => Event::JobSubmitted {
+                t: num("t")? as TimeUs,
+                job: num("job")? as JobId,
+                user: num("user")? as u32,
+                name: v
+                    .get("name")
+                    .and_then(|x| x.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+                slot_time: num("slot_time")?,
+            },
+            "TaskStart" => Event::TaskStart {
+                t: num("t")? as TimeUs,
+                job: num("job")? as JobId,
+                stage: num("stage")? as u64,
+                task: num("task")? as u64,
+                core: num("core")? as usize,
+            },
+            "TaskEnd" => Event::TaskEnd {
+                t: num("t")? as TimeUs,
+                job: num("job")? as JobId,
+                stage: num("stage")? as u64,
+                task: num("task")? as u64,
+                core: num("core")? as usize,
+            },
+            "JobCompleted" => Event::JobCompleted {
+                t: num("t")? as TimeUs,
+                job: num("job")? as JobId,
+            },
+            other => return Err(anyhow!("unknown event kind '{other}'")),
+        })
+    }
+}
+
+/// Build the event stream of a finished simulation (requires the run to
+/// have used `cfg.log_tasks = true` for task events).
+pub fn events_of_run(workload: &Workload, report: &SimReport) -> Vec<Event> {
+    let name_of: HashMap<JobId, (&str, u32, f64)> = report
+        .completed
+        .iter()
+        .map(|c| (c.job, (c.name.as_str(), c.user, c.slot_time)))
+        .collect();
+    let _ = workload;
+    let mut events = Vec::new();
+    for c in &report.completed {
+        events.push(Event::JobSubmitted {
+            t: c.submit,
+            job: c.job,
+            user: c.user,
+            name: c.name.clone(),
+            slot_time: c.slot_time,
+        });
+        events.push(Event::JobCompleted {
+            t: c.finish,
+            job: c.job,
+        });
+    }
+    for t in &report.task_log {
+        let job = t.job;
+        if name_of.contains_key(&job) {
+            events.push(Event::TaskStart {
+                t: t.started,
+                job,
+                stage: t.stage,
+                task: t.task,
+                core: t.core,
+            });
+            events.push(Event::TaskEnd {
+                t: t.finished,
+                job,
+                stage: t.stage,
+                task: t.task,
+                core: t.core,
+            });
+        }
+    }
+    events.sort_by_key(|e| (e.time(), event_rank(e)));
+    events
+}
+
+fn event_rank(e: &Event) -> u8 {
+    match e {
+        Event::JobSubmitted { .. } => 0,
+        Event::TaskStart { .. } => 1,
+        Event::TaskEnd { .. } => 2,
+        Event::JobCompleted { .. } => 3,
+    }
+}
+
+/// Write events as JSON lines.
+pub fn write<P: AsRef<Path>>(path: P, events: &[Event]) -> Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(&path).with_context(|| format!("{:?}", path.as_ref()))?,
+    );
+    for e in events {
+        let mut line = e.to_json().to_string_pretty();
+        line.retain(|c| c != '\n');
+        writeln!(f, "{line}")?;
+    }
+    f.flush()?;
+    Ok(())
+}
+
+/// Read a JSON-lines event log.
+pub fn read<P: AsRef<Path>>(path: P) -> Result<Vec<Event>> {
+    let f = std::fs::File::open(&path).with_context(|| format!("{:?}", path.as_ref()))?;
+    let mut events = Vec::new();
+    for (i, line) in std::io::BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = jsonout::parse(&line).map_err(|e| anyhow!("line {}: {e}", i + 1))?;
+        events.push(Event::from_json(&v)?);
+    }
+    Ok(events)
+}
+
+/// Post-hoc analysis of a trace — the §5.1.1 metrics recomputed from the
+/// event log alone.
+#[derive(Clone, Debug, Default)]
+pub struct TraceSummary {
+    pub jobs: usize,
+    pub tasks: usize,
+    pub mean_rt: f64,
+    pub worst10_rt: f64,
+    pub makespan_s: f64,
+    pub utilization: f64,
+    pub per_user_mean_rt: Vec<(u32, f64)>,
+}
+
+pub fn analyze(events: &[Event]) -> Result<TraceSummary> {
+    let mut submit: HashMap<JobId, (TimeUs, u32)> = HashMap::new();
+    let mut rts: Vec<f64> = Vec::new();
+    let mut user_rts: HashMap<u32, Vec<f64>> = HashMap::new();
+    let mut busy: u128 = 0;
+    let mut tasks = 0usize;
+    let mut cores_seen = 0usize;
+    let mut t_max: TimeUs = 0;
+    let mut task_start: HashMap<u64, TimeUs> = HashMap::new();
+
+    for e in events {
+        t_max = t_max.max(e.time());
+        match e {
+            Event::JobSubmitted { t, job, user, .. } => {
+                submit.insert(*job, (*t, *user));
+            }
+            Event::JobCompleted { t, job } => {
+                let (t0, user) = *submit
+                    .get(job)
+                    .ok_or_else(|| anyhow!("JobCompleted for unknown job {job}"))?;
+                let rt = crate::us_to_s(t - t0);
+                rts.push(rt);
+                user_rts.entry(user).or_default().push(rt);
+            }
+            Event::TaskStart { t, task, core, .. } => {
+                task_start.insert(*task, *t);
+                cores_seen = cores_seen.max(core + 1);
+            }
+            Event::TaskEnd { t, task, .. } => {
+                let t0 = task_start
+                    .remove(task)
+                    .ok_or_else(|| anyhow!("TaskEnd without TaskStart for {task}"))?;
+                busy += (t - t0) as u128;
+                tasks += 1;
+            }
+        }
+    }
+    let makespan_s = crate::us_to_s(t_max);
+    let utilization = if makespan_s > 0.0 && cores_seen > 0 {
+        busy as f64 / 1e6 / (cores_seen as f64 * makespan_s)
+    } else {
+        0.0
+    };
+    let mut per_user: Vec<(u32, f64)> = user_rts
+        .into_iter()
+        .map(|(u, rts)| (u, crate::util::stats::mean(&rts)))
+        .collect();
+    per_user.sort_by_key(|&(u, _)| u);
+    Ok(TraceSummary {
+        jobs: rts.len(),
+        tasks,
+        mean_rt: crate::util::stats::mean(&rts),
+        worst10_rt: crate::util::stats::worst_frac_mean(&rts, 0.10),
+        makespan_s,
+        utilization,
+        per_user_mean_rt: per_user,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::sched::PolicyKind;
+    use crate::workload::scenarios;
+
+    fn run_with_log() -> (Workload, SimReport) {
+        let w = scenarios::scenario2(1, 4, 0.5);
+        let mut cfg = Config::default().with_cores(8).with_policy(PolicyKind::Uwfq);
+        cfg.log_tasks = true;
+        let rep = crate::sim::simulate(cfg, w.jobs.clone());
+        (w, rep)
+    }
+
+    #[test]
+    fn events_roundtrip_through_file() {
+        let (w, rep) = run_with_log();
+        let events = events_of_run(&w, &rep);
+        assert!(!events.is_empty());
+        let dir = std::env::temp_dir().join("uwfq_eventlog_test");
+        let path = dir.join("trace.jsonl");
+        write(&path, &events).unwrap();
+        let back = read(&path).unwrap();
+        assert_eq!(events, back);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn analyze_matches_direct_metrics() {
+        let (w, rep) = run_with_log();
+        let events = events_of_run(&w, &rep);
+        let sum = analyze(&events).unwrap();
+        assert_eq!(sum.jobs, rep.completed.len());
+        assert_eq!(sum.tasks, rep.task_log.len());
+        let direct_mean = crate::util::stats::mean(
+            &rep.completed
+                .iter()
+                .map(|c| c.response_time())
+                .collect::<Vec<_>>(),
+        );
+        assert!((sum.mean_rt - direct_mean).abs() < 1e-9);
+        assert!((sum.makespan_s - rep.makespan_s).abs() < 1e-9);
+        assert!(sum.utilization > 0.5);
+        assert_eq!(sum.per_user_mean_rt.len(), 4);
+    }
+
+    #[test]
+    fn events_ordered_by_time() {
+        let (w, rep) = run_with_log();
+        let events = events_of_run(&w, &rep);
+        for pair in events.windows(2) {
+            assert!(pair[0].time() <= pair[1].time());
+        }
+    }
+
+    #[test]
+    fn read_rejects_garbage() {
+        let dir = std::env::temp_dir().join("uwfq_eventlog_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.jsonl");
+        std::fs::write(&path, "{\"event\": \"Nope\", \"t\": 1}\n").unwrap();
+        assert!(read(&path).is_err());
+        std::fs::write(&path, "not json\n").unwrap();
+        assert!(read(&path).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn analyze_detects_inconsistent_trace() {
+        let events = vec![Event::JobCompleted { t: 5, job: 1 }];
+        assert!(analyze(&events).is_err());
+    }
+}

@@ -1,0 +1,307 @@
+//! Analytics-job and stage specifications.
+//!
+//! An *analytics job* (paper §3.1) is the highest abstraction level — the
+//! unit users get utility from. It expands into one or more Spark stages
+//! with dependencies; every stage inherits the job's user/job context so
+//! the scheduler can enforce user-job fairness (§4.1.3).
+
+use crate::{TimeUs, UserId};
+
+/// Which of the paper's three micro-benchmark phases a stage implements.
+/// `Generic` is used by trace-driven (macro) workloads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StagePhase {
+    Load,
+    Compute,
+    Collect,
+    Generic,
+}
+
+/// Piecewise-constant *cost density* over the stage's input `[0,1)`.
+///
+/// This is how task skew (§3.2, Fig. 3) is modeled: a stage's total
+/// sequential work (`slot_time`) is distributed over its input data
+/// non-uniformly; a partition covering fraction `[a,b)` of the input costs
+/// `slot_time * integral(a,b)`. Splitting the input finer dilutes hot
+/// regions across more tasks — exactly the mechanism by which runtime
+/// partitioning fixes skew.
+#[derive(Clone, Debug)]
+pub struct CostProfile {
+    /// (input fraction, relative cost weight); fractions sum to 1.
+    regions: Vec<(f64, f64)>,
+}
+
+impl CostProfile {
+    /// Uniform cost: every byte costs the same.
+    pub fn uniform() -> Self {
+        CostProfile {
+            regions: vec![(1.0, 1.0)],
+        }
+    }
+
+    /// A single hot region of `hot_frac` of the input whose per-byte cost is
+    /// `multiplier`× the rest (Fig. 3's "one partition runs 5× longer" is
+    /// `skewed(1/32, 5.0)` under 32-way default partitioning).
+    pub fn skewed(hot_frac: f64, multiplier: f64) -> Self {
+        assert!((0.0..1.0).contains(&hot_frac) && hot_frac > 0.0);
+        assert!(multiplier > 0.0);
+        CostProfile {
+            regions: vec![(hot_frac, multiplier), (1.0 - hot_frac, 1.0)],
+        }
+    }
+
+    /// Arbitrary piecewise profile; weights are relative, fractions must be
+    /// positive and sum to ~1.
+    pub fn from_regions(regions: Vec<(f64, f64)>) -> Self {
+        assert!(!regions.is_empty());
+        let total: f64 = regions.iter().map(|r| r.0).sum();
+        assert!((total - 1.0).abs() < 1e-9, "fractions must sum to 1");
+        assert!(regions.iter().all(|r| r.0 > 0.0 && r.1 >= 0.0));
+        CostProfile { regions }
+    }
+
+    /// Fraction of total stage cost falling in input range `[a, b)`.
+    /// Normalized so that `integral(0, 1) == 1`.
+    pub fn integral(&self, a: f64, b: f64) -> f64 {
+        debug_assert!((0.0..=1.0).contains(&a) && (0.0..=1.0).contains(&b) && a <= b);
+        let norm: f64 = self.regions.iter().map(|(f, w)| f * w).sum();
+        if norm == 0.0 {
+            return 0.0;
+        }
+        let mut acc = 0.0;
+        let mut lo = 0.0;
+        for &(frac, w) in &self.regions {
+            let hi = lo + frac;
+            let ov_lo = a.max(lo);
+            let ov_hi = b.min(hi);
+            if ov_hi > ov_lo {
+                acc += (ov_hi - ov_lo) * w;
+            }
+            lo = hi;
+        }
+        acc / norm
+    }
+}
+
+/// One stage of an analytics job.
+#[derive(Clone, Debug)]
+pub struct StageSpec {
+    pub phase: StagePhase,
+    /// Indices (into `JobSpec::stages`) of parent stages that must finish
+    /// before this stage can be submitted.
+    pub parents: Vec<usize>,
+    /// True for file-scan stages partitioned by the input partitioner;
+    /// false for shuffle stages partitioned by AQE coalescing (§4.1.2).
+    pub is_leaf_input: bool,
+    /// Input size in bytes (drives size-based partitioning).
+    pub input_bytes: u64,
+    /// Total sequential work: time to execute the whole stage on one core
+    /// (the paper's per-stage contribution to job slot-time `L_i`).
+    pub slot_time: f64,
+    /// Cost-density profile over the input (skew model).
+    pub cost: CostProfile,
+    /// Hard cap on partition count (e.g. 1 for result/collect stages).
+    pub max_parallelism: Option<u32>,
+    /// Op-chain length for the real execution backend (must be one of the
+    /// AOT-compiled variants).
+    pub opcount: u32,
+}
+
+impl StageSpec {
+    /// A simple stage with uniform cost.
+    pub fn new(phase: StagePhase, parents: Vec<usize>, slot_time: f64, input_bytes: u64) -> Self {
+        StageSpec {
+            phase,
+            parents,
+            is_leaf_input: parents_is_leaf(&[]),
+            input_bytes,
+            slot_time,
+            cost: CostProfile::uniform(),
+            max_parallelism: None,
+            opcount: 4,
+        }
+    }
+}
+
+fn parents_is_leaf(parents: &[usize]) -> bool {
+    parents.is_empty()
+}
+
+/// A user-submitted analytics job: user context + job context + stage DAG.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub user: UserId,
+    pub name: String,
+    /// Absolute submission time in the workload timeline.
+    pub arrival: TimeUs,
+    /// UWFQ user weight `U_w` (1.0 = equal priority users).
+    pub weight: f64,
+    /// Stages in topological order (parents precede children).
+    pub stages: Vec<StageSpec>,
+}
+
+impl JobSpec {
+    /// Total job slot-time `L_i`: sequential single-core runtime across all
+    /// stages (§3.3.1).
+    pub fn slot_time(&self) -> f64 {
+        self.stages.iter().map(|s| s.slot_time).sum()
+    }
+
+    /// The paper's micro-benchmark job shape (§5.2): a linear
+    /// load → compute → collect chain where compute dominates. Each phase
+    /// "has its own stages" (§5.2); the compute phase is two chained
+    /// shuffle stages, which is what exposes stage-level schedulers (CFQ)
+    /// to priority re-queueing between stages of the same job.
+    ///
+    /// `compute_time` is the compute-phase slot-time in seconds; load
+    /// takes 8 % of compute and collect is a fixed small result stage.
+    pub fn three_phase(
+        user: UserId,
+        name: &str,
+        arrival: TimeUs,
+        compute_time: f64,
+        input_bytes: u64,
+        opcount: u32,
+        skew: Option<CostProfile>,
+    ) -> Self {
+        let load = StageSpec {
+            phase: StagePhase::Load,
+            parents: vec![],
+            is_leaf_input: true,
+            input_bytes,
+            slot_time: compute_time * 0.08,
+            cost: CostProfile::uniform(),
+            max_parallelism: None,
+            opcount: 1,
+        };
+        let cost = skew.unwrap_or_else(CostProfile::uniform);
+        let compute1 = StageSpec {
+            phase: StagePhase::Compute,
+            parents: vec![0],
+            is_leaf_input: false,
+            input_bytes,
+            slot_time: compute_time * 0.5,
+            cost: cost.clone(),
+            max_parallelism: None,
+            opcount,
+        };
+        let compute2 = StageSpec {
+            phase: StagePhase::Compute,
+            parents: vec![1],
+            is_leaf_input: false,
+            input_bytes,
+            slot_time: compute_time * 0.5,
+            cost,
+            max_parallelism: None,
+            opcount,
+        };
+        let collect = StageSpec {
+            phase: StagePhase::Collect,
+            parents: vec![2],
+            is_leaf_input: false,
+            input_bytes: 1024,
+            slot_time: 0.004,
+            cost: CostProfile::uniform(),
+            max_parallelism: Some(1),
+            opcount: 1,
+        };
+        JobSpec {
+            user,
+            name: name.to_string(),
+            arrival,
+            weight: 1.0,
+            stages: vec![load, compute1, compute2, collect],
+        }
+    }
+
+    /// Validate the DAG: topological parent order, no self-deps.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.stages.is_empty() {
+            return Err("job has no stages".into());
+        }
+        for (i, s) in self.stages.iter().enumerate() {
+            for &p in &s.parents {
+                if p >= i {
+                    return Err(format!("stage {i} depends on later/self stage {p}"));
+                }
+            }
+            if s.slot_time < 0.0 {
+                return Err(format!("stage {i} has negative slot_time"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_integral() {
+        let c = CostProfile::uniform();
+        assert!((c.integral(0.0, 1.0) - 1.0).abs() < 1e-12);
+        assert!((c.integral(0.25, 0.75) - 0.5).abs() < 1e-12);
+        assert_eq!(c.integral(0.3, 0.3), 0.0);
+    }
+
+    #[test]
+    fn skewed_integral_matches_multiplier() {
+        // hot 1/32 of data at 5x per-byte cost.
+        let c = CostProfile::skewed(1.0 / 32.0, 5.0);
+        let hot = c.integral(0.0, 1.0 / 32.0);
+        let cold = c.integral(1.0 / 32.0, 2.0 / 32.0);
+        assert!((hot / cold - 5.0).abs() < 1e-9);
+        assert!((c.integral(0.0, 1.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn integral_additive() {
+        let c = CostProfile::skewed(0.1, 8.0);
+        let whole = c.integral(0.0, 1.0);
+        let parts = c.integral(0.0, 0.05) + c.integral(0.05, 0.4) + c.integral(0.4, 1.0);
+        assert!((whole - parts).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_regions_validates() {
+        let c = CostProfile::from_regions(vec![(0.5, 2.0), (0.5, 1.0)]);
+        assert!((c.integral(0.0, 0.5) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_regions_rejects_bad_fractions() {
+        CostProfile::from_regions(vec![(0.5, 1.0), (0.4, 1.0)]);
+    }
+
+    #[test]
+    fn three_phase_job_shape() {
+        let j = JobSpec::three_phase(3, "short", 1_000_000, 2.25, 752 << 20, 4, None);
+        assert_eq!(j.stages.len(), 4); // load, compute×2, collect
+        assert!(j.validate().is_ok());
+        assert_eq!(j.stages[1].parents, vec![0]);
+        assert_eq!(j.stages[2].parents, vec![1]);
+        assert_eq!(j.stages[3].parents, vec![2]);
+        assert_eq!(j.stages[3].max_parallelism, Some(1));
+        assert!(j.stages[0].is_leaf_input && !j.stages[1].is_leaf_input);
+        // compute phase dominates
+        let compute = j.stages[1].slot_time + j.stages[2].slot_time;
+        assert!(compute > 0.8 * j.slot_time());
+        assert_eq!(j.stages[1].slot_time, j.stages[2].slot_time);
+    }
+
+    #[test]
+    fn validate_rejects_forward_deps() {
+        let mut j = JobSpec::three_phase(1, "bad", 0, 1.0, 1024, 1, None);
+        j.stages[0].parents = vec![2];
+        assert!(j.validate().is_err());
+    }
+
+    #[test]
+    fn slot_time_sums_stages() {
+        let j = JobSpec::three_phase(1, "j", 0, 1.0, 1024, 1, None);
+        let expect: f64 = j.stages.iter().map(|s| s.slot_time).sum();
+        assert_eq!(j.slot_time(), expect);
+    }
+}

@@ -1,0 +1,21 @@
+//! The Spark-like execution substrate (paper §2.1, Fig. 1): analytics jobs
+//! are decomposed into a DAG of stages, stage inputs are partitioned into
+//! tasks, and a task scheduler launches tasks onto executor cores in
+//! priority order under a pluggable scheduling policy.
+//!
+//! The substrate is backend-agnostic: the same [`engine::SchedCore`] is
+//! driven by the discrete-event simulator ([`crate::sim`]) and by the real
+//! PJRT execution backend ([`crate::exec`]).
+
+pub mod dag;
+pub mod engine;
+pub mod eventlog;
+pub mod job;
+pub mod pool;
+pub mod stage;
+pub mod task;
+
+pub use engine::{Launch, SchedCore};
+pub use job::{CostProfile, JobSpec, StagePhase, StageSpec};
+pub use stage::StageState;
+pub use task::TaskSpec;

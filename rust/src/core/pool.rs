@@ -1,0 +1,369 @@
+//! Spark-style schedulable pool tree (paper §2.1.3).
+//!
+//! The Task Scheduler keeps a Root Pool containing stages and/or nested
+//! pools. At every resource offer the tree is sorted by the pool's
+//! scheduling policy and the highest-priority runnable stage is selected.
+//! The built-in Fair scheduler is a flat Fair root pool over stages; the
+//! practical UJF baseline (§5.1.2) is a Fair root pool over dynamically
+//! created per-user pools, each a Fair pool over that user's stages.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::sched::StageView;
+use crate::StageId;
+
+/// Scheduling policy of a single pool level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolPolicy {
+    /// Order by job arrival then stage index (Spark FIFO).
+    Fifo,
+    /// Spark's FairSchedulingAlgorithm with minShare=0, weight=1, which
+    /// reduces to "fewest running tasks first" — the paper's
+    /// `P_s = N^s_active_task_amount`.
+    Fair,
+}
+
+/// Aggregated scheduling metrics of a subtree.
+#[derive(Clone, Copy, Debug, Default)]
+struct Agg {
+    running: u32,
+    pending: u32,
+    min_arrival: u64,
+    min_stage_idx: usize,
+}
+
+/// A selection candidate: subtree metrics plus the schedulable entity's
+/// own weight / minShare (Spark's FairSchedulingAlgorithm inputs).
+#[derive(Clone, Copy, Debug)]
+struct Candidate {
+    agg: Agg,
+    weight: f64,
+    min_share: u32,
+}
+
+impl Candidate {
+    fn needy(&self) -> bool {
+        self.agg.running < self.min_share
+    }
+    fn min_share_ratio(&self) -> f64 {
+        self.agg.running as f64 / self.min_share.max(1) as f64
+    }
+    fn task_to_weight_ratio(&self) -> f64 {
+        self.agg.running as f64 / self.weight.max(1e-9)
+    }
+}
+
+#[derive(Debug)]
+pub struct Pool {
+    pub name: String,
+    pub policy: PoolPolicy,
+    pub weight: f64,
+    pub min_share: u32,
+    children: BTreeMap<String, Pool>,
+    stages: Vec<StageId>,
+}
+
+/// Compare a primary f64 criterion, falling back to FIFO order on ties.
+fn cmp_then_fifo(ka: f64, kb: f64, a: &Candidate, b: &Candidate) -> bool {
+    if (ka - kb).abs() > 1e-12 {
+        return ka < kb;
+    }
+    (a.agg.min_arrival, a.agg.min_stage_idx) < (b.agg.min_arrival, b.agg.min_stage_idx)
+}
+
+impl Pool {
+    pub fn new(name: &str, policy: PoolPolicy) -> Pool {
+        Pool {
+            name: name.to_string(),
+            policy,
+            weight: 1.0,
+            min_share: 0,
+            children: BTreeMap::new(),
+            stages: Vec::new(),
+        }
+    }
+
+    /// Get or create a child pool (dynamic per-user pools, §5.1.2).
+    pub fn child(&mut self, name: &str, policy: PoolPolicy) -> &mut Pool {
+        self.children
+            .entry(name.to_string())
+            .or_insert_with(|| Pool::new(name, policy))
+    }
+
+    pub fn add_stage(&mut self, stage: StageId) {
+        self.stages.push(stage);
+    }
+
+    /// Drop a stage from this subtree (on completion). Returns true if found.
+    pub fn remove_stage(&mut self, stage: StageId) -> bool {
+        if let Some(pos) = self.stages.iter().position(|&s| s == stage) {
+            self.stages.remove(pos);
+            return true;
+        }
+        for c in self.children.values_mut() {
+            if c.remove_stage(stage) {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Remove empty child pools (users whose stages all finished).
+    pub fn prune_empty(&mut self) {
+        self.children.retain(|_, c| {
+            c.prune_empty();
+            !c.stages.is_empty() || !c.children.is_empty()
+        });
+    }
+
+    fn aggregate(&self, views: &HashMap<StageId, &StageView>) -> Option<Agg> {
+        let mut agg: Option<Agg> = None;
+        let mut fold = |a: Agg| {
+            agg = Some(match agg {
+                None => a,
+                Some(b) => Agg {
+                    running: a.running + b.running,
+                    pending: a.pending + b.pending,
+                    min_arrival: a.min_arrival.min(b.min_arrival),
+                    min_stage_idx: a.min_stage_idx.min(b.min_stage_idx),
+                },
+            });
+        };
+        for s in &self.stages {
+            if let Some(v) = views.get(s) {
+                fold(Agg {
+                    running: v.running,
+                    pending: v.pending,
+                    min_arrival: v.arrival_seq,
+                    min_stage_idx: v.stage_idx,
+                });
+            }
+        }
+        for c in self.children.values() {
+            if let Some(a) = c.aggregate(views) {
+                fold(a);
+            }
+        }
+        agg
+    }
+
+    /// Select the highest-priority stage with pending tasks, walking the
+    /// tree with this pool's policy at each level (paper §2.1.3: root
+    /// policy picks the pool, pool policy picks the stage).
+    pub fn select(&self, views: &HashMap<StageId, &StageView>) -> Option<StageId> {
+        // Candidate leaf stages at this level (weight 1, minShare 0 —
+        // stages inherit scheduling attributes from their pool in Spark).
+        let mut best_stage: Option<(Candidate, StageId)> = None;
+        for s in &self.stages {
+            if let Some(v) = views.get(s) {
+                if v.pending == 0 {
+                    continue;
+                }
+                let a = Candidate {
+                    agg: Agg {
+                        running: v.running,
+                        pending: v.pending,
+                        min_arrival: v.arrival_seq,
+                        min_stage_idx: v.stage_idx,
+                    },
+                    weight: 1.0,
+                    min_share: 0,
+                };
+                if best_stage.is_none()
+                    || self.better(&a, &best_stage.as_ref().unwrap().0)
+                {
+                    best_stage = Some((a, *s));
+                }
+            }
+        }
+        // Candidate child pools (only those with pending work anywhere),
+        // carrying their own weight/minShare.
+        let mut best_child: Option<(Candidate, &Pool)> = None;
+        for c in self.children.values() {
+            if let Some(agg) = c.aggregate(views) {
+                if agg.pending == 0 {
+                    continue;
+                }
+                let a = Candidate {
+                    agg,
+                    weight: c.weight,
+                    min_share: c.min_share,
+                };
+                if best_child.is_none()
+                    || self.better(&a, &best_child.as_ref().unwrap().0)
+                {
+                    best_child = Some((a, c));
+                }
+            }
+        }
+        match (best_stage, best_child) {
+            (None, None) => None,
+            (Some((_, s)), None) => Some(s),
+            (None, Some((_, c))) => c.select(views),
+            (Some((sa, s)), Some((ca, c))) => {
+                if self.better(&sa, &ca) {
+                    Some(s)
+                } else {
+                    c.select(views)
+                }
+            }
+        }
+    }
+
+    /// Is `a` strictly higher priority than `b` under this pool's policy?
+    ///
+    /// Fair is Spark's full `FairSchedulingAlgorithm`: entities running
+    /// below their minShare ("needy") come first (ordered by
+    /// minShareRatio); otherwise order by runningTasks/weight; FIFO
+    /// (arrival, stage index) tiebreak. With the defaults minShare=0,
+    /// weight=1 this reduces to the paper's `P_s = N^s_running`.
+    fn better(&self, a: &Candidate, b: &Candidate) -> bool {
+        match self.policy {
+            PoolPolicy::Fifo => {
+                (a.agg.min_arrival, a.agg.min_stage_idx)
+                    < (b.agg.min_arrival, b.agg.min_stage_idx)
+            }
+            PoolPolicy::Fair => match (a.needy(), b.needy()) {
+                (true, false) => true,
+                (false, true) => false,
+                (true, true) => cmp_then_fifo(a.min_share_ratio(), b.min_share_ratio(), a, b),
+                (false, false) => {
+                    cmp_then_fifo(a.task_to_weight_ratio(), b.task_to_weight_ratio(), a, b)
+                }
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::StageView;
+
+    fn view(stage: StageId, user: u32, running: u32, pending: u32, seq: u64) -> StageView {
+        StageView {
+            stage,
+            job: stage,
+            user,
+            stage_idx: 0,
+            running,
+            pending,
+            arrival_seq: seq,
+        }
+    }
+
+    fn views(vs: &[StageView]) -> HashMap<StageId, &StageView> {
+        vs.iter().map(|v| (v.stage, v)).collect()
+    }
+
+    #[test]
+    fn fair_picks_fewest_running() {
+        let mut p = Pool::new("root", PoolPolicy::Fair);
+        p.add_stage(1);
+        p.add_stage(2);
+        let vs = [view(1, 0, 3, 5, 0), view(2, 0, 1, 5, 1)];
+        assert_eq!(p.select(&views(&vs)), Some(2));
+    }
+
+    #[test]
+    fn fair_skips_no_pending() {
+        let mut p = Pool::new("root", PoolPolicy::Fair);
+        p.add_stage(1);
+        p.add_stage(2);
+        let vs = [view(1, 0, 0, 0, 0), view(2, 0, 9, 2, 1)];
+        assert_eq!(p.select(&views(&vs)), Some(2));
+    }
+
+    #[test]
+    fn fifo_picks_earliest_arrival() {
+        let mut p = Pool::new("root", PoolPolicy::Fifo);
+        p.add_stage(1);
+        p.add_stage(2);
+        let vs = [view(1, 0, 0, 5, 7), view(2, 0, 0, 5, 3)];
+        assert_eq!(p.select(&views(&vs)), Some(2));
+    }
+
+    #[test]
+    fn two_level_user_fairness() {
+        // User A has 2 stages with 4 running total; user B has 1 stage with
+        // 1 running. Root Fair must pick user B even though A's individual
+        // stages have fewer running tasks than B's.
+        let mut root = Pool::new("root", PoolPolicy::Fair);
+        root.child("userA", PoolPolicy::Fair).add_stage(1);
+        root.child("userA", PoolPolicy::Fair).add_stage(2);
+        root.child("userB", PoolPolicy::Fair).add_stage(3);
+        let vs = [
+            view(1, 0, 0, 5, 0),
+            view(2, 0, 4, 5, 1),
+            view(3, 1, 1, 5, 2),
+        ];
+        assert_eq!(root.select(&views(&vs)), Some(3));
+    }
+
+    #[test]
+    fn within_user_fair() {
+        let mut root = Pool::new("root", PoolPolicy::Fair);
+        root.child("userA", PoolPolicy::Fair).add_stage(1);
+        root.child("userA", PoolPolicy::Fair).add_stage(2);
+        let vs = [view(1, 0, 2, 5, 0), view(2, 0, 1, 5, 1)];
+        assert_eq!(root.select(&views(&vs)), Some(2));
+    }
+
+    #[test]
+    fn remove_and_prune() {
+        let mut root = Pool::new("root", PoolPolicy::Fair);
+        root.child("u1", PoolPolicy::Fair).add_stage(1);
+        assert!(root.remove_stage(1));
+        assert!(!root.remove_stage(1));
+        root.prune_empty();
+        let vs: [StageView; 0] = [];
+        assert_eq!(root.select(&views(&vs)), None);
+    }
+
+    #[test]
+    fn weighted_pool_gets_proportional_share() {
+        // user A weight 3, user B weight 1 → A should win until its
+        // running/weight ratio exceeds B's: with A running 2 and B
+        // running 1, A's ratio (0.67) < B's (1.0) → A wins again.
+        let mut root = Pool::new("root", PoolPolicy::Fair);
+        root.child("a", PoolPolicy::Fair).weight = 3.0;
+        root.child("a", PoolPolicy::Fair).add_stage(1);
+        root.child("b", PoolPolicy::Fair).add_stage(2);
+        let vs = [view(1, 0, 2, 5, 0), view(2, 1, 1, 5, 1)];
+        assert_eq!(root.select(&views(&vs)), Some(1));
+        // Over repeated launches the split converges to ~3:1.
+        let mut running = [0u32; 2];
+        for _ in 0..16 {
+            let vs = [
+                view(1, 0, running[0], 5, 0),
+                view(2, 1, running[1], 5, 1),
+            ];
+            match root.select(&views(&vs)) {
+                Some(1) => running[0] += 1,
+                Some(2) => running[1] += 1,
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(running, [12, 4]);
+    }
+
+    #[test]
+    fn needy_pool_preempts_weighted() {
+        // Pool B has minShare 4 and only 1 running → needy, wins over
+        // pool A even though A has fewer running tasks per weight.
+        let mut root = Pool::new("root", PoolPolicy::Fair);
+        root.child("a", PoolPolicy::Fair).weight = 10.0;
+        root.child("a", PoolPolicy::Fair).add_stage(1);
+        root.child("b", PoolPolicy::Fair).min_share = 4;
+        root.child("b", PoolPolicy::Fair).add_stage(2);
+        let vs = [view(1, 0, 0, 5, 0), view(2, 1, 1, 5, 1)];
+        assert_eq!(root.select(&views(&vs)), Some(2));
+    }
+
+    #[test]
+    fn empty_pool_selects_none() {
+        let p = Pool::new("root", PoolPolicy::Fair);
+        let vs: [StageView; 0] = [];
+        assert_eq!(p.select(&views(&vs)), None);
+    }
+}

@@ -1,0 +1,113 @@
+//! Stage state — the equivalent of Spark's `TaskSetManager`: tracks the
+//! task list, launch cursor, and running/finished counts for one stage.
+
+use super::task::TaskSpec;
+use crate::{JobId, StageId, TimeUs, UserId};
+
+#[derive(Clone, Debug)]
+pub struct StageState {
+    pub id: StageId,
+    pub job: JobId,
+    pub user: UserId,
+    /// Index of this stage within its job's `stages` vector.
+    pub idx: usize,
+    pub tasks: Vec<TaskSpec>,
+    /// Next task to launch (tasks are launched in partition order, like
+    /// Spark's pending-task queue).
+    pub next_task: usize,
+    pub running: u32,
+    pub finished: u32,
+    pub submitted_at: TimeUs,
+    /// Estimated sequential work of the whole stage, as given to the
+    /// scheduler (perfect under the oracle estimator).
+    pub est_slot_time: f64,
+    /// Arrival sequence of the owning job (cached to keep the per-offer
+    /// view construction free of job-map lookups — hot path).
+    pub arrival_seq: u64,
+}
+
+impl StageState {
+    pub fn pending(&self) -> u32 {
+        (self.tasks.len() - self.next_task) as u32
+    }
+
+    pub fn has_pending(&self) -> bool {
+        self.next_task < self.tasks.len()
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.finished as usize == self.tasks.len()
+    }
+
+    /// Launch the next pending task; returns its index.
+    pub fn launch_next(&mut self) -> usize {
+        debug_assert!(self.has_pending());
+        let idx = self.next_task;
+        self.next_task += 1;
+        self.running += 1;
+        idx
+    }
+
+    pub fn task_finished(&mut self) {
+        debug_assert!(self.running > 0);
+        self.running -= 1;
+        self.finished += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(n: usize) -> StageState {
+        StageState {
+            id: 1,
+            job: 1,
+            user: 1,
+            idx: 0,
+            tasks: (0..n)
+                .map(|i| TaskSpec {
+                    range: (i as f64 / n as f64, (i + 1) as f64 / n as f64),
+                    runtime_s: 0.1,
+                    blocks: 1,
+                    opcount: 1,
+                })
+                .collect(),
+            next_task: 0,
+            running: 0,
+            finished: 0,
+            submitted_at: 0,
+            est_slot_time: 0.1 * n as f64,
+            arrival_seq: 0,
+        }
+    }
+
+    #[test]
+    fn lifecycle() {
+        let mut s = mk(3);
+        assert_eq!(s.pending(), 3);
+        assert!(!s.is_complete());
+        let a = s.launch_next();
+        let b = s.launch_next();
+        assert_eq!((a, b), (0, 1));
+        assert_eq!(s.running, 2);
+        assert_eq!(s.pending(), 1);
+        s.task_finished();
+        s.task_finished();
+        assert_eq!(s.finished, 2);
+        assert!(!s.is_complete());
+        s.launch_next();
+        s.task_finished();
+        assert!(s.is_complete());
+        assert!(!s.has_pending());
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)] // debug_assert is compiled out in release
+    fn launch_past_end_panics_in_debug() {
+        let mut s = mk(1);
+        s.launch_next();
+        s.launch_next();
+    }
+}

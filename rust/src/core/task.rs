@@ -1,0 +1,62 @@
+//! Task specifications: one task per input partition (paper §2.1.2).
+
+use crate::{JobId, StageId, TaskId, TimeUs, UserId};
+
+/// A schedulable task = the stage operation applied to one input partition.
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    /// Input range as fractions `[lo, hi)` of the stage input.
+    pub range: (f64, f64),
+    /// Ground-truth runtime in seconds (simulation backend), derived from
+    /// the stage cost profile + per-task overhead at partition time.
+    pub runtime_s: f64,
+    /// Number of data blocks this task covers (real execution backend).
+    pub blocks: u32,
+    /// Op-chain length (selects the AOT artifact variant).
+    pub opcount: u32,
+}
+
+/// A task occupying an executor core. Tasks are **not preemptable** —
+/// once launched they hold the core until completion (paper §3.2), which
+/// is what makes priority inversion possible.
+#[derive(Clone, Debug)]
+pub struct RunningTask {
+    pub task: TaskId,
+    pub stage: StageId,
+    pub job: JobId,
+    pub user: UserId,
+    pub task_idx: usize,
+    pub started: TimeUs,
+    /// Simulated completion time (sim backend only; real backend completes
+    /// via the worker pool).
+    pub finish_at: TimeUs,
+}
+
+/// Completed-task record for Gantt-style figures and utilization analysis.
+#[derive(Clone, Debug)]
+pub struct TaskRecord {
+    pub task: TaskId,
+    pub stage: StageId,
+    pub job: JobId,
+    pub user: UserId,
+    pub core: usize,
+    pub started: TimeUs,
+    pub finished: TimeUs,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_spec_fields() {
+        let t = TaskSpec {
+            range: (0.0, 0.25),
+            runtime_s: 1.5,
+            blocks: 2,
+            opcount: 4,
+        };
+        assert!(t.range.1 > t.range.0);
+        assert_eq!(t.blocks, 2);
+    }
+}

@@ -1,0 +1,14 @@
+//! Synthetic trip-record dataset — the stand-in for the paper's NYC TLC
+//! FHVHV Parquet file (§5.2: 752 MB, 19.1 M rows, partitioned on
+//! `PULocationID` into row groups).
+//!
+//! We generate deterministic pseudo-random f32 row blocks with the same
+//! columnar geometry the AOT artifacts expect (4096 rows × 8 columns).
+//! Column semantics mirror the TLC schema loosely (location id, trip
+//! miles/minutes, fares, tips ...) so the analytics computation operates
+//! on realistically distributed values; what matters to the scheduler is
+//! bytes, rows and row-group layout.
+
+pub mod table;
+
+pub use table::{TripTable, BLOCK_COLS, BLOCK_ROWS};

@@ -1,0 +1,118 @@
+//! Deterministic columnar trip-record blocks.
+
+use crate::core::engine::BLOCK_BYTES;
+use crate::util::Rng;
+
+/// Rows per block — must match `python/compile/kernels/rowops.py::ROWS`
+/// and the AOT manifest.
+pub const BLOCK_ROWS: usize = 4096;
+/// Columns per block — must match `rowops.py::COLS`.
+pub const BLOCK_COLS: usize = 8;
+
+/// A synthetic trip-record table of `blocks` row groups.
+///
+/// Blocks are generated lazily and deterministically from (seed, block
+/// index), so a table is just a descriptor — no resident memory until a
+/// task materializes its partition.
+#[derive(Clone, Debug)]
+pub struct TripTable {
+    pub seed: u64,
+    pub blocks: u64,
+}
+
+impl TripTable {
+    pub fn new(seed: u64, blocks: u64) -> Self {
+        assert!(blocks > 0);
+        TripTable { seed, blocks }
+    }
+
+    /// A table sized like the paper's dataset (752 MB of f32 blocks).
+    pub fn paper_sized(seed: u64) -> Self {
+        TripTable::new(seed, (752 << 20) / BLOCK_BYTES)
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.blocks * BLOCK_BYTES
+    }
+
+    pub fn rows(&self) -> u64 {
+        self.blocks * BLOCK_ROWS as u64
+    }
+
+    /// Materialize block `i` in row-major order (rows × cols), suitable
+    /// for `Literal::vec1(..).reshape([ROWS, COLS])`.
+    ///
+    /// Columns (loosely mirroring the TLC FHVHV schema):
+    /// 0 `PULocationID`-ish categorical (1..=263), 1 trip miles,
+    /// 2 trip minutes, 3 base fare, 4 tolls, 5 tips, 6 congestion
+    /// surcharge, 7 driver pay. Values are heavy-tailed where the real
+    /// columns are.
+    pub fn block(&self, i: u64) -> Vec<f32> {
+        assert!(i < self.blocks, "block {i} out of range {}", self.blocks);
+        let mut rng = Rng::new(self.seed ^ (i.wrapping_mul(0x9E3779B97F4A7C15)));
+        let mut out = Vec::with_capacity(BLOCK_ROWS * BLOCK_COLS);
+        for _ in 0..BLOCK_ROWS {
+            let loc = 1.0 + rng.below(263) as f32;
+            let miles = rng.lognormal(0.9, 0.8) as f32;
+            let minutes = (miles * 3.2 + rng.lognormal(1.2, 0.5) as f32).max(1.0);
+            let fare = 2.5 + 1.9 * miles + 0.5 * minutes + rng.normal() as f32 * 0.8;
+            let tolls = if rng.f64() < 0.08 {
+                rng.lognormal(1.8, 0.3) as f32
+            } else {
+                0.0
+            };
+            let tips = if rng.f64() < 0.25 {
+                (fare * rng.range_f64(0.1, 0.3) as f32).max(0.0)
+            } else {
+                0.0
+            };
+            let congestion = if loc < 90.0 { 2.75 } else { 0.0 };
+            let pay = (fare * 0.72 + tolls).max(0.0);
+            out.extend_from_slice(&[loc, miles, minutes, fare.max(2.5), tolls, tips, congestion, pay]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_matches_artifacts() {
+        assert_eq!(BLOCK_ROWS * BLOCK_COLS * 4, BLOCK_BYTES as usize);
+    }
+
+    #[test]
+    fn deterministic_blocks() {
+        let t = TripTable::new(7, 4);
+        assert_eq!(t.block(2), t.block(2));
+        assert_ne!(t.block(0), t.block(1));
+    }
+
+    #[test]
+    fn block_shape_and_sanity() {
+        let t = TripTable::new(1, 2);
+        let b = t.block(0);
+        assert_eq!(b.len(), BLOCK_ROWS * BLOCK_COLS);
+        for row in b.chunks(BLOCK_COLS) {
+            assert!((1.0..=263.0).contains(&row[0])); // location id
+            assert!(row[1] > 0.0); // miles
+            assert!(row[3] >= 2.5); // fare floor
+            assert!(row.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn paper_sized_table() {
+        let t = TripTable::paper_sized(42);
+        assert_eq!(t.bytes(), 752 << 20);
+        assert_eq!(t.rows(), t.blocks * 4096);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_block_panics() {
+        TripTable::new(1, 1).block(1);
+    }
+}

@@ -1,0 +1,108 @@
+//! Stage/job runtime estimation (paper §4.1.3, §6.4).
+//!
+//! UWFQ and runtime partitioning both consume *estimated* runtimes. The
+//! paper assumes a perfect predictor (§5.1) and argues virtual-time
+//! scheduling is robust to error (§6.4); we provide both the perfect
+//! [`Oracle`] and a seeded multiplicative-error [`Noisy`] estimator for the
+//! robustness ablation.
+
+use crate::core::job::{JobSpec, StageSpec};
+use crate::util::Rng;
+use std::cell::RefCell;
+
+/// A class-loaded "performance estimator" in the paper's terms: returns
+/// estimated sequential runtimes (slot-times) of work units.
+pub trait RuntimeEstimator: Send {
+    fn name(&self) -> &'static str;
+
+    /// Estimated sequential runtime of one stage, seconds.
+    fn stage_slot_time(&self, stage: &StageSpec) -> f64;
+
+    /// Estimated job slot-time `L_i` = Σ stage estimates.
+    fn job_slot_time(&self, job: &JobSpec) -> f64 {
+        job.stages.iter().map(|s| self.stage_slot_time(s)).sum()
+    }
+}
+
+/// Perfect runtime prediction (the paper's experimental assumption).
+#[derive(Default)]
+pub struct Oracle;
+
+impl Oracle {
+    pub fn new() -> Self {
+        Oracle
+    }
+}
+
+impl RuntimeEstimator for Oracle {
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+    fn stage_slot_time(&self, stage: &StageSpec) -> f64 {
+        stage.slot_time
+    }
+}
+
+/// Multiplicative lognormal error: estimate = truth · exp(σ·N(0,1)).
+/// σ = 0 reduces to the oracle. Deterministic per seed, but *not* per
+/// stage identity — successive queries draw fresh errors, modelling a
+/// predictor that is inconsistent across stages.
+pub struct Noisy {
+    sigma: f64,
+    rng: RefCell<Rng>,
+}
+
+impl Noisy {
+    pub fn new(sigma: f64, seed: u64) -> Self {
+        assert!(sigma >= 0.0);
+        Noisy {
+            sigma,
+            rng: RefCell::new(Rng::new(seed)),
+        }
+    }
+}
+
+impl RuntimeEstimator for Noisy {
+    fn name(&self) -> &'static str {
+        "noisy"
+    }
+    fn stage_slot_time(&self, stage: &StageSpec) -> f64 {
+        let e = self.rng.borrow_mut().lognormal(0.0, self.sigma);
+        stage.slot_time * e
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::job::JobSpec;
+
+    #[test]
+    fn oracle_is_exact() {
+        let j = JobSpec::three_phase(1, "j", 0, 2.0, 1 << 20, 4, None);
+        let o = Oracle::new();
+        assert_eq!(o.job_slot_time(&j), j.slot_time());
+        assert_eq!(o.stage_slot_time(&j.stages[1]), 1.0);
+    }
+
+    #[test]
+    fn noisy_zero_sigma_is_exact() {
+        let j = JobSpec::three_phase(1, "j", 0, 2.0, 1 << 20, 4, None);
+        let n = Noisy::new(0.0, 7);
+        assert!((n.job_slot_time(&j) - j.slot_time()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noisy_errors_are_positive_and_centered() {
+        let j = JobSpec::three_phase(1, "j", 0, 2.0, 1 << 20, 4, None);
+        let n = Noisy::new(0.5, 11);
+        let mut ratios = Vec::new();
+        for _ in 0..2000 {
+            let e = n.stage_slot_time(&j.stages[1]);
+            assert!(e > 0.0);
+            ratios.push((e / 1.0).ln());
+        }
+        let mean = ratios.iter().sum::<f64>() / ratios.len() as f64;
+        assert!(mean.abs() < 0.05, "log-error mean {mean}");
+    }
+}

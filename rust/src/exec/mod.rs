@@ -1,0 +1,307 @@
+//! Real execution backend: the same [`SchedCore`] scheduling loop as the
+//! simulator, but tasks *actually execute* the AOT-compiled analytics
+//! kernel on synthetic trip-record blocks via PJRT.
+//!
+//! Topology (paper Fig. 1, scaled down): the driver thread owns the
+//! scheduler state and the wall clock; each executor core is a worker
+//! thread owning its own [`ArtifactStore`] (PJRT clients are not `Sync`).
+//! Workers receive task assignments over a channel and report completions
+//! (with computed partials) back; the driver folds compute partials into
+//! per-job state and hands them to the collect stage's `aggregate`
+//! artifact — so every analytics job produces real numerics end to end.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::core::dag::CompletedJob;
+use crate::core::job::JobSpec;
+use crate::core::{Launch, SchedCore};
+use crate::config::Config;
+use crate::data::TripTable;
+use crate::runtime::ArtifactStore;
+use crate::{JobId, TimeUs};
+
+/// Work sent to an executor core.
+enum ToWorker {
+    Run(RealTask),
+    Shutdown,
+}
+
+struct RealTask {
+    kind: TaskKind,
+}
+
+enum TaskKind {
+    /// Run the k-op compute artifact over `blocks` consecutive blocks of
+    /// the job's table.
+    Compute {
+        table_seed: u64,
+        block_start: u64,
+        blocks: u32,
+        table_blocks: u64,
+        k: u32,
+    },
+    /// Fold per-task partials into final [mean; var] via the aggregate
+    /// artifact.
+    Aggregate { partials: Vec<(Vec<f32>, f32)> },
+}
+
+struct FromWorker {
+    core: usize,
+    /// Partial [sum; sumsq] (+rows) from compute tasks.
+    partial: Option<(Vec<f32>, f32)>,
+    /// Final [mean; var] from aggregate tasks.
+    final_out: Option<Vec<f32>>,
+    err: Option<String>,
+}
+
+/// Outcome of a real-backend run.
+pub struct RealReport {
+    pub completed: Vec<CompletedJob>,
+    /// Final [mean; var] analytics output per job.
+    pub results: HashMap<JobId, Vec<f32>>,
+    pub makespan_s: f64,
+    /// Mean task wall time (seconds) per op-count variant, for
+    /// calibration against the simulator.
+    pub task_wall: HashMap<u32, (f64, usize)>,
+}
+
+/// Run a workload on the real backend. `cfg.cores` worker threads are
+/// spawned, each compiling the artifacts once at startup.
+///
+/// `time_scale` compresses the workload timeline (e.g. 0.1 = 10× faster
+/// arrivals) so examples finish quickly while preserving arrival order.
+pub fn run_real(
+    cfg: Config,
+    mut jobs: Vec<JobSpec>,
+    artifact_dir: &Path,
+    time_scale: f64,
+) -> Result<RealReport> {
+    anyhow::ensure!(time_scale > 0.0);
+    jobs.sort_by_key(|j| j.arrival);
+    for j in &mut jobs {
+        j.arrival = (j.arrival as f64 * time_scale) as TimeUs;
+    }
+
+    let cores = cfg.cores as usize;
+    let (done_tx, done_rx) = mpsc::channel::<FromWorker>();
+    let mut workers = Vec::new();
+    let mut senders: Vec<mpsc::Sender<ToWorker>> = Vec::new();
+    for core_idx in 0..cores {
+        let (tx, rx) = mpsc::channel::<ToWorker>();
+        senders.push(tx);
+        let done = done_tx.clone();
+        let dir = artifact_dir.to_path_buf();
+        workers.push(
+            thread::Builder::new()
+                .name(format!("executor-{core_idx}"))
+                .spawn(move || worker_loop(core_idx, &dir, rx, done))
+                .context("spawning executor thread")?,
+        );
+    }
+    drop(done_tx);
+
+    let mut core = SchedCore::from_config(cfg);
+    let mut results: HashMap<JobId, Vec<f32>> = HashMap::new();
+    let mut partials: HashMap<JobId, Vec<(Vec<f32>, f32)>> = HashMap::new();
+    let mut task_wall_acc: HashMap<u32, (f64, usize)> = HashMap::new();
+    let mut task_started: HashMap<usize, (Instant, u32)> = HashMap::new();
+
+    let t0 = Instant::now();
+    let now_us = |t0: &Instant| t0.elapsed().as_micros() as TimeUs;
+    let mut next_arrival = 0usize;
+    let total_jobs = jobs.len();
+
+    while core.completed.len() < total_jobs {
+        let now = now_us(&t0);
+        // Submit due arrivals.
+        while next_arrival < jobs.len() && jobs[next_arrival].arrival <= now {
+            core.submit_job(now, jobs[next_arrival].clone())?;
+            next_arrival += 1;
+        }
+        // Launch onto free cores.
+        for launch in core.try_launch(now) {
+            let task = build_task(&core, &launch, &mut partials);
+            task_started.insert(launch.core, (Instant::now(), launch.opcount));
+            senders[launch.core]
+                .send(ToWorker::Run(task))
+                .map_err(|_| anyhow::anyhow!("executor {} died", launch.core))?;
+        }
+        // Wait for a completion or the next arrival.
+        let timeout = if next_arrival < jobs.len() {
+            Duration::from_micros(jobs[next_arrival].arrival.saturating_sub(now_us(&t0)).max(200))
+        } else {
+            Duration::from_millis(50)
+        };
+        match done_rx.recv_timeout(timeout) {
+            Ok(msg) => {
+                if let Some(e) = msg.err {
+                    anyhow::bail!("task failed on core {}: {e}", msg.core);
+                }
+                let now = now_us(&t0);
+                let job = core
+                    .core_state(msg.core)
+                    .expect("completion from idle core")
+                    .job;
+                if let Some((t_start, k)) = task_started.remove(&msg.core) {
+                    let e = task_wall_acc.entry(k).or_insert((0.0, 0));
+                    e.0 += t_start.elapsed().as_secs_f64();
+                    e.1 += 1;
+                }
+                if let Some(p) = msg.partial {
+                    partials.entry(job).or_default().push(p);
+                }
+                if let Some(f) = msg.final_out {
+                    results.insert(job, f);
+                }
+                core.task_finished(now, msg.core);
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                anyhow::bail!("all executors disconnected")
+            }
+        }
+    }
+
+    for tx in &senders {
+        let _ = tx.send(ToWorker::Shutdown);
+    }
+    for w in workers {
+        let _ = w.join();
+    }
+
+    let makespan_s = crate::us_to_s(core.completed.iter().map(|c| c.finish).max().unwrap_or(0));
+    let task_wall = task_wall_acc
+        .into_iter()
+        .map(|(k, (sum, n))| (k, (sum / n.max(1) as f64, n)))
+        .collect();
+    Ok(RealReport {
+        completed: core.completed,
+        results,
+        makespan_s,
+        task_wall,
+    })
+}
+
+/// Map an engine launch onto a real task description.
+fn build_task(
+    core: &SchedCore,
+    launch: &Launch,
+    partials: &mut HashMap<JobId, Vec<(Vec<f32>, f32)>>,
+) -> RealTask {
+    let stage = core.stage(launch.stage).expect("launched stage exists");
+    // A single-task non-leaf stage is the job's collect stage (declared
+    // with max_parallelism = 1): it folds the compute partials.
+    let is_collect = stage.tasks.len() == 1 && stage.idx > 0;
+    if is_collect {
+        let ps = partials.remove(&launch.job).unwrap_or_default();
+        if !ps.is_empty() {
+            return RealTask {
+                kind: TaskKind::Aggregate { partials: ps },
+            };
+        }
+        // No partials yet (unusual DAG shape): fall through to compute.
+    }
+    let table_blocks = 64u64; // per-job logical table (64 blocks = 8 MB)
+    let block_start = (launch.task_idx as u64 * launch.blocks as u64) % table_blocks;
+    RealTask {
+        kind: TaskKind::Compute {
+            table_seed: launch.job,
+            block_start,
+            blocks: launch.blocks.min(table_blocks as u32),
+            table_blocks,
+            k: launch.opcount,
+        },
+    }
+}
+
+fn worker_loop(
+    core: usize,
+    dir: &Path,
+    rx: mpsc::Receiver<ToWorker>,
+    done: mpsc::Sender<FromWorker>,
+) {
+    let store = match ArtifactStore::load(dir) {
+        Ok(s) => s,
+        Err(e) => {
+            let _ = done.send(FromWorker {
+                core,
+                partial: None,
+                final_out: None,
+                err: Some(format!("artifact load: {e:#}")),
+            });
+            return;
+        }
+    };
+    while let Ok(msg) = rx.recv() {
+        let task = match msg {
+            ToWorker::Run(t) => t,
+            ToWorker::Shutdown => break,
+        };
+        let out = execute(&store, &task.kind);
+        let msg = match out {
+            Ok((partial, final_out)) => FromWorker {
+                core,
+                partial,
+                final_out,
+                err: None,
+            },
+            Err(e) => FromWorker {
+                core,
+                partial: None,
+                final_out: None,
+                err: Some(format!("{e:#}")),
+            },
+        };
+        if done.send(msg).is_err() {
+            break;
+        }
+    }
+}
+
+type TaskOutput = (Option<(Vec<f32>, f32)>, Option<Vec<f32>>);
+
+fn execute(store: &ArtifactStore, kind: &TaskKind) -> Result<TaskOutput> {
+    match kind {
+        TaskKind::Compute {
+            table_seed,
+            block_start,
+            blocks,
+            table_blocks,
+            k,
+        } => {
+            let table = TripTable::new(*table_seed, *table_blocks);
+            let cols = store.manifest.cols;
+            let mut sum = vec![0f32; 2 * cols];
+            let mut rows = 0f32;
+            // Pick the nearest compiled variant at or below k.
+            let variants = store.variants();
+            let kk = variants
+                .iter()
+                .copied()
+                .filter(|v| *v <= *k)
+                .max()
+                .or_else(|| variants.first().copied())
+                .unwrap_or(1);
+            for b in 0..*blocks as u64 {
+                let idx = (block_start + b) % table_blocks;
+                let block = table.block(idx);
+                let partial = store.run_compute_block(kk, &block)?;
+                for (i, v) in partial.iter().enumerate() {
+                    sum[i] += v;
+                }
+                rows += store.manifest.block_rows as f32;
+            }
+            Ok((Some((sum, rows)), None))
+        }
+        TaskKind::Aggregate { partials } => {
+            let out = store.run_aggregate(partials)?;
+            Ok((None, Some(out)))
+        }
+    }
+}

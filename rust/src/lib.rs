@@ -1,0 +1,71 @@
+//! # uwfq — User Weighted Fair Queuing for multi-user Spark-like analytics
+//!
+//! Reproduction of *"Balancing Fairness and Performance in Multi-User Spark
+//! Workloads with Dynamic Scheduling"* (Kažemaks et al., 2025): a
+//! long-running, multi-user batch analytics engine with pluggable fair
+//! schedulers and runtime-aware partitioning.
+//!
+//! The crate is organized as the paper's system diagram (Fig. 1/2):
+//!
+//! * [`core`] — the Spark-like substrate: jobs → DAG of stages → tasks →
+//!   pools → task scheduler → executor cores.
+//! * [`sched`] — scheduling policies: FIFO, Fair, UJF, CFQ and the paper's
+//!   **UWFQ** (2-level virtual time, Algorithms 1–3, grace-period revival).
+//! * [`partition`] — input partitioning: Spark's size-based default, the
+//!   paper's **runtime (ATR) partitioning** (§3.2), and AQE coalescing with
+//!   the runtime-derived minimum-partition override (§4.1.2).
+//! * [`estimate`] — stage runtime estimators (perfect oracle + noisy).
+//! * [`sim`] — a discrete-event cluster simulator (the DAS-5 testbed
+//!   substitute) driving the same scheduler core as the real backend.
+//! * [`exec`] — the real execution backend: a thread-per-core pool where
+//!   every task executes the AOT-compiled analytics kernel via PJRT.
+//! * [`runtime`] — the xla/PJRT artifact loader (`ArtifactStore`).
+//! * [`data`] — deterministic synthetic trip-record blocks (NYC TLC
+//!   stand-in).
+//! * [`workload`] — the paper's workloads: micro scenarios 1–2 (§5.2.1) and
+//!   the Google-trace-shaped macro workload (§5.3).
+//! * [`metrics`] — response times, slowdowns, DVR/DSR (Eqs. 1–3), CDFs.
+//! * [`bench`] — the experiment harness regenerating every table and figure.
+//! * [`util`] — offline substrates: deterministic RNG, samplers, JSON/CSV
+//!   writers, a bench harness and a property-testing kit (no external crates
+//!   besides `xla`/`anyhow` are available in this environment).
+//!
+//! Python/JAX/Pallas exist only at build time (`make artifacts`); the
+//! binary is self-contained once `artifacts/` is built.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod core;
+pub mod data;
+pub mod estimate;
+pub mod exec;
+pub mod metrics;
+pub mod partition;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+/// Microsecond-resolution engine clock (simulated or wall).
+pub type TimeUs = u64;
+
+/// Seconds as f64 — the unit of virtual time and slot-times.
+pub fn us_to_s(us: TimeUs) -> f64 {
+    us as f64 / 1e6
+}
+
+/// Seconds → microseconds (saturating at 0 for negatives).
+pub fn s_to_us(s: f64) -> TimeUs {
+    if s <= 0.0 {
+        0
+    } else {
+        (s * 1e6).round() as TimeUs
+    }
+}
+
+pub type UserId = u32;
+pub type JobId = u64;
+pub type StageId = u64;
+pub type TaskId = u64;

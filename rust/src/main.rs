@@ -1,0 +1,279 @@
+//! `uwfq` — launcher binary: reproduce the paper's tables/figures, run
+//! ad-hoc workloads through the simulator, or serve a workload on the
+//! real PJRT execution backend.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use uwfq::bench::{figures, tables};
+use uwfq::cli::{Cli, USAGE};
+use uwfq::metrics::fairness::{fairness_vs_ujf, DvrDenominator};
+use uwfq::workload::{gtrace, scenarios, tracefile, Workload};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = match Cli::parse(&args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match cli.command.as_str() {
+        "reproduce" => reproduce(&cli),
+        "run" => run(&cli),
+        "serve" => serve(&cli),
+        "ablation" => ablation(&cli),
+        "analyze" => analyze(&cli),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'\n\n{USAGE}")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn reproduce(cli: &Cli) -> Result<(), String> {
+    let what = cli
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let out = cli.flag_or("out", "out");
+    std::fs::create_dir_all(&out).map_err(|e| e.to_string())?;
+    let mut base = cli.config()?;
+    let quick = cli.flag("quick") == Some("true");
+    if quick {
+        base.cores = 8;
+    }
+    let seed = base.seed;
+    let io = |e: std::io::Error| e.to_string();
+
+    let macro_workload = || -> Workload {
+        if quick {
+            let mut p = gtrace::GtraceParams::default();
+            p.window_s = 120.0;
+            p.users = 10;
+            p.heavy_users = 3;
+            p.cores = base.cores;
+            gtrace::gtrace(seed, &p)
+        } else {
+            figures::default_macro_workload(seed)
+        }
+    };
+
+    if matches!(what, "table1" | "all") {
+        let (s1, s2) = tables::table1(seed, &base);
+        println!("{}", tables::render_table1(&s1));
+        println!("{}", tables::render_table1(&s2));
+        tables::write_table1_csv(&format!("{out}/table1_scenario1.csv"), &s1).map_err(io)?;
+        tables::write_table1_csv(&format!("{out}/table1_scenario2.csv"), &s2).map_err(io)?;
+    }
+    if matches!(what, "table2" | "all") {
+        let w = macro_workload();
+        let t2 = tables::table2(&w, &base);
+        println!("{}", tables::render_table2(&t2));
+        tables::write_table2_csv(&format!("{out}/table2_macro.csv"), &t2).map_err(io)?;
+    }
+    if matches!(what, "fig3" | "all") {
+        let f = figures::fig3(&base);
+        println!("== Fig 3 / task skew ==");
+        for (label, rt, _) in &f.runs {
+            println!("  {label:<10} completion {rt:.2} s");
+        }
+        figures::write_fig3_csv(&out, &f).map_err(io)?;
+    }
+    if matches!(what, "fig4" | "all") {
+        let f = figures::fig4(&base);
+        println!("== Fig 4 / priority inversion ==");
+        for (label, hi, lo) in &f.runs {
+            println!("  {label:<10} high-prio RT {hi:.2} s   low-prio RT {lo:.2} s");
+        }
+        figures::write_fig4_csv(&out, &f).map_err(io)?;
+    }
+    if matches!(what, "fig5" | "all") {
+        let s = figures::fig5(seed, &base);
+        figures::write_fig5_csv(&out, &s).map_err(io)?;
+        println!("== Fig 5 → {out}/fig5_infrequent_cdf.csv ==");
+    }
+    if matches!(what, "fig6" | "all") {
+        let s = figures::fig6(seed, &base);
+        figures::write_fig6_csv(&out, &s).map_err(io)?;
+        println!("== Fig 6 → {out}/fig6_completion_cdf.csv ==");
+    }
+    if matches!(what, "fig7" | "all") {
+        let w = macro_workload();
+        let f = figures::fig7(&w, &base);
+        figures::write_fig7_csv(&out, &f).map_err(io)?;
+        println!("== Fig 7 → {out}/fig7_user_violations.csv ==");
+    }
+    println!("\nreproduce '{what}' done → {out}/");
+    Ok(())
+}
+
+fn load_workload(name: &str, seed: u64) -> Result<Workload, String> {
+    if let Some(path) = name.strip_prefix("trace:") {
+        return tracefile::load_csv_file(path);
+    }
+    match name {
+        "scenario1" => Ok(scenarios::scenario1_default(seed)),
+        "scenario2" => Ok(scenarios::scenario2_default(seed)),
+        "gtrace" => Ok(figures::default_macro_workload(seed)),
+        other => Err(format!("unknown workload '{other}'")),
+    }
+}
+
+fn analyze(cli: &Cli) -> Result<(), String> {
+    // Post-hoc analysis of a JSON-lines event log (paper §5.1's trace
+    // pipeline): `uwfq run --eventlog trace.jsonl` then `uwfq analyze
+    // trace.jsonl`.
+    let path = cli
+        .positional
+        .first()
+        .ok_or("usage: uwfq analyze <trace.jsonl>")?;
+    let events = uwfq::core::eventlog::read(path).map_err(|e| format!("{e:#}"))?;
+    let s = uwfq::core::eventlog::analyze(&events).map_err(|e| format!("{e:#}"))?;
+    println!("trace {path}: {} events", events.len());
+    println!("  jobs {}   tasks {}", s.jobs, s.tasks);
+    println!("  RT avg {:.2} s   worst-10% {:.2} s", s.mean_rt, s.worst10_rt);
+    println!("  makespan {:.1} s   utilization {:.2}", s.makespan_s, s.utilization);
+    for (user, rt) in &s.per_user_mean_rt {
+        println!("  user {user:>3}: mean RT {rt:.2} s");
+    }
+    Ok(())
+}
+
+fn run(cli: &Cli) -> Result<(), String> {
+    let mut cfg = cli.config()?;
+    let wname = cli.flag_or("workload", "scenario1");
+    let eventlog = cli.flag("eventlog").map(|s| s.to_string());
+    if eventlog.is_some() {
+        cfg.log_tasks = true;
+    }
+    let w = load_workload(&wname, cfg.seed)?;
+    println!(
+        "workload {wname}: {} jobs, {} users, {:.0} core-s of work",
+        w.jobs.len(),
+        w.users().len(),
+        w.total_slot_time()
+    );
+    let m = uwfq::bench::run_one(&cfg, &w);
+    let ujf = uwfq::bench::run_ujf_reference(&cfg, &w);
+    let f = fairness_vs_ujf(&m, &ujf, DvrDenominator::GreaterThanZero);
+    println!("scheduler {}:", m.label);
+    println!(
+        "  makespan     {:.1} s   utilization {:.2}",
+        m.makespan_s, m.utilization
+    );
+    println!(
+        "  RT   avg {:.2} s   worst-10% {:.2} s",
+        m.mean_rt(),
+        m.worst10_rt()
+    );
+    println!(
+        "  SL   avg {:.2}     worst-10% {:.2}",
+        m.mean_slowdown(),
+        m.worst10_slowdown()
+    );
+    println!(
+        "  fairness vs UJF: DVR {:.2} ({} violations)  DSR {:.2} ({} slacks)",
+        f.dvr, f.violations, f.dsr, f.slacks
+    );
+    if let Some(path) = eventlog {
+        let rep = uwfq::sim::simulate(cfg.clone(), w.jobs.clone());
+        let events = uwfq::core::eventlog::events_of_run(&w, &rep);
+        uwfq::core::eventlog::write(&path, &events).map_err(|e| format!("{e:#}"))?;
+        println!("  event log → {path} ({} events)", events.len());
+    }
+    Ok(())
+}
+
+fn serve(cli: &Cli) -> Result<(), String> {
+    let mut cfg = cli.config()?;
+    if cli.flag("cores").is_none() {
+        cfg.cores = 4; // sensible real-backend default
+    }
+    let time_scale: f64 = cli
+        .flag_or("time-scale", "0.05")
+        .parse()
+        .map_err(|_| "bad --time-scale".to_string())?;
+    let default_dir = uwfq::runtime::ArtifactStore::default_dir();
+    let artifacts = cli.flag_or("artifacts", default_dir.to_str().unwrap());
+    // A small two-user interactive-style workload.
+    let mut jobs = Vec::new();
+    for i in 0..4 {
+        jobs.push(scenarios::micro_job(1, "tiny", i as f64 * 2.0, None));
+    }
+    jobs.push(scenarios::micro_job(2, "short", 1.0, None));
+    println!(
+        "serving {} jobs on {} real executor cores (policy {}, artifacts {artifacts})",
+        jobs.len(),
+        cfg.cores,
+        cfg.policy.name()
+    );
+    let report = uwfq::exec::run_real(cfg, jobs, Path::new(&artifacts), time_scale)
+        .map_err(|e| format!("{e:#}"))?;
+    println!(
+        "completed {} jobs in {:.2} s",
+        report.completed.len(),
+        report.makespan_s
+    );
+    for c in &report.completed {
+        let out = report.results.get(&c.job);
+        println!(
+            "  job {} ({} / user {}): RT {:.2} s, result[mean0] = {}",
+            c.job,
+            c.name,
+            c.user,
+            c.response_time(),
+            out.map(|o| format!("{:.4}", o[0]))
+                .unwrap_or_else(|| "-".into())
+        );
+    }
+    for (k, (mean_s, n)) in &report.task_wall {
+        println!("  task wall time k={k}: {:.1} ms × {n}", mean_s * 1e3);
+    }
+    Ok(())
+}
+
+fn ablation(cli: &Cli) -> Result<(), String> {
+    // Design-choice ablations (DESIGN.md §5): user-context vs job-context
+    // vs both, and ATR sensitivity.
+    let base = cli.config()?;
+    let seed = base.seed;
+    println!("== ablation: scheduler context (scenario 1) ==");
+    println!("  CFQ   = job deadlines, no user context");
+    println!("  UJF   = user fairness, no deadlines");
+    println!("  UWFQ  = both (the paper's point)\n");
+    let (s1, _) = tables::table1(seed, &base);
+    println!("{}", tables::render_table1(&s1));
+
+    println!("== ablation: ATR sensitivity (macro, UWFQ-P) ==");
+    let mut p = gtrace::GtraceParams::default();
+    p.window_s = 120.0;
+    p.users = 10;
+    p.heavy_users = 3;
+    p.cores = base.cores;
+    let wm = gtrace::gtrace(seed, &p);
+    for atr in [0.1, 0.25, 0.5, 1.0, 2.0, 5.0] {
+        let mut cfg = base
+            .clone()
+            .with_policy(uwfq::sched::PolicyKind::Uwfq)
+            .with_scheme(uwfq::partition::SchemeKind::Runtime);
+        cfg.atr = atr;
+        let m = uwfq::bench::run_one(&cfg, &wm);
+        println!(
+            "  ATR {atr:>5.2} s → RT avg {:.2} s, makespan {:.1} s",
+            m.mean_rt(),
+            m.makespan_s
+        );
+    }
+    Ok(())
+}

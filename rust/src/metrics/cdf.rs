@@ -1,0 +1,74 @@
+//! Empirical CDF emission for Figures 5 and 6.
+
+use crate::util::csvout::Csv;
+use crate::util::stats;
+
+/// A named empirical CDF series.
+#[derive(Clone, Debug)]
+pub struct CdfSeries {
+    pub label: String,
+    /// (value, cumulative fraction), sorted by value.
+    pub points: Vec<(f64, f64)>,
+}
+
+impl CdfSeries {
+    pub fn from_samples(label: &str, samples: &[f64]) -> CdfSeries {
+        CdfSeries {
+            label: label.to_string(),
+            points: stats::ecdf(samples),
+        }
+    }
+
+    /// Fraction of samples ≤ x.
+    pub fn at(&self, x: f64) -> f64 {
+        let mut frac = 0.0;
+        for &(v, f) in &self.points {
+            if v <= x {
+                frac = f;
+            } else {
+                break;
+            }
+        }
+        frac
+    }
+}
+
+/// Write several CDF series to one long-format CSV
+/// (`series,value,cum_frac`) for plotting.
+pub fn write_cdfs(path: &str, series: &[CdfSeries]) -> std::io::Result<()> {
+    let mut csv = Csv::create(path, &["series", "value", "cum_frac"])?;
+    for s in series {
+        for &(v, f) in &s.points {
+            csv.row(&[s.label.clone(), format!("{v:.6}"), format!("{f:.6}")])?;
+        }
+    }
+    csv.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cdf_at_queries() {
+        let c = CdfSeries::from_samples("x", &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(c.at(0.5), 0.0);
+        assert_eq!(c.at(2.0), 0.5);
+        assert_eq!(c.at(10.0), 1.0);
+    }
+
+    #[test]
+    fn write_and_readback() {
+        let dir = std::env::temp_dir().join("uwfq_cdf_test");
+        let p = dir.join("f.csv");
+        let s = vec![
+            CdfSeries::from_samples("A", &[1.0, 2.0]),
+            CdfSeries::from_samples("B", &[3.0]),
+        ];
+        write_cdfs(p.to_str().unwrap(), &s).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("series,value,cum_frac\n"));
+        assert_eq!(text.lines().count(), 4);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

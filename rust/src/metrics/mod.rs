@@ -1,0 +1,10 @@
+//! Evaluation metrics (paper §5.1.1): response time, slowdown, and the
+//! deadline-violation / slack fairness metrics computed against a UJF
+//! reference execution.
+
+pub mod cdf;
+pub mod fairness;
+pub mod report;
+
+pub use fairness::{FairnessMetrics, DvrDenominator};
+pub use report::{JobOutcome, RunMetrics};

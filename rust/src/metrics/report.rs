@@ -1,0 +1,256 @@
+//! Per-run metric aggregation: joins a scheduler run with the idle-system
+//! reference (slowdowns) and exposes the groupings the paper's tables use.
+
+use std::collections::HashMap;
+
+use crate::core::dag::CompletedJob;
+use crate::util::stats;
+use crate::workload::{UserClass, Workload};
+use crate::{JobId, UserId};
+
+/// One analytics job's outcome in a run.
+#[derive(Clone, Debug)]
+pub struct JobOutcome {
+    pub job: JobId,
+    pub user: UserId,
+    pub name: String,
+    pub submit_s: f64,
+    pub finish_s: f64,
+    /// Ground-truth sequential work.
+    pub slot_time: f64,
+    /// Response time (§5.1.1).
+    pub rt: f64,
+    /// RT of the same job alone on the idle cluster.
+    pub idle_rt: f64,
+}
+
+impl JobOutcome {
+    /// Slowdown `SL_i = RT_shared / RT_idle` (§5.1.1).
+    pub fn slowdown(&self) -> f64 {
+        if self.idle_rt > 0.0 {
+            self.rt / self.idle_rt
+        } else {
+            1.0
+        }
+    }
+}
+
+/// All outcomes of one (scheduler × partitioner × workload) run.
+#[derive(Clone, Debug)]
+pub struct RunMetrics {
+    pub label: String,
+    pub outcomes: Vec<JobOutcome>,
+    pub makespan_s: f64,
+    pub utilization: f64,
+    pub user_class: HashMap<UserId, UserClass>,
+}
+
+impl RunMetrics {
+    /// Join completed jobs with idle-system reference times.
+    ///
+    /// `idle_rt` maps a job *name* (workload job kind identity) to its
+    /// idle response time; jobs are matched by name so the reference is
+    /// computed once per distinct job shape.
+    pub fn build(
+        label: &str,
+        workload: &Workload,
+        completed: &[CompletedJob],
+        idle_rt: &HashMap<String, f64>,
+        makespan_s: f64,
+        utilization: f64,
+    ) -> RunMetrics {
+        let outcomes = completed
+            .iter()
+            .map(|c| JobOutcome {
+                job: c.job,
+                user: c.user,
+                name: c.name.clone(),
+                submit_s: crate::us_to_s(c.submit),
+                finish_s: crate::us_to_s(c.finish),
+                slot_time: c.slot_time,
+                rt: c.response_time(),
+                idle_rt: idle_rt.get(&c.name).copied().unwrap_or(0.0),
+            })
+            .collect();
+        RunMetrics {
+            label: label.to_string(),
+            outcomes,
+            makespan_s,
+            utilization,
+            user_class: workload.user_class.clone(),
+        }
+    }
+
+    pub fn rts(&self) -> Vec<f64> {
+        self.outcomes.iter().map(|o| o.rt).collect()
+    }
+
+    pub fn slowdowns(&self) -> Vec<f64> {
+        self.outcomes.iter().map(|o| o.slowdown()).collect()
+    }
+
+    pub fn mean_rt(&self) -> f64 {
+        stats::mean(&self.rts())
+    }
+
+    /// Mean RT of the worst 10 % of jobs (paper "Worst 10%").
+    pub fn worst10_rt(&self) -> f64 {
+        stats::worst_frac_mean(&self.rts(), 0.10)
+    }
+
+    pub fn mean_slowdown(&self) -> f64 {
+        stats::mean(&self.slowdowns())
+    }
+
+    pub fn worst10_slowdown(&self) -> f64 {
+        stats::worst_frac_mean(&self.slowdowns(), 0.10)
+    }
+
+    /// Mean RT over jobs of users in `class` (scenario 1's Freq./Infreq.).
+    pub fn mean_rt_by_class(&self, class: UserClass) -> f64 {
+        let rts: Vec<f64> = self
+            .outcomes
+            .iter()
+            .filter(|o| self.user_class.get(&o.user) == Some(&class))
+            .map(|o| o.rt)
+            .collect();
+        stats::mean(&rts)
+    }
+
+    /// Mean RT of one user (scenario 2's First/Last columns, Fig. 7).
+    pub fn mean_rt_of_user(&self, user: UserId) -> f64 {
+        let rts: Vec<f64> = self
+            .outcomes
+            .iter()
+            .filter(|o| o.user == user)
+            .map(|o| o.rt)
+            .collect();
+        stats::mean(&rts)
+    }
+
+    /// RTs of jobs whose *size* (idle RT) falls in the given percentile
+    /// band of the run's job-size distribution — Table 2's 0-80 / 80-95 /
+    /// 95-100 groupings.
+    pub fn rt_by_size_band(&self, lo_pct: f64, hi_pct: f64) -> Vec<f64> {
+        let sizes: Vec<f64> = self.outcomes.iter().map(|o| o.slot_time).collect();
+        if sizes.is_empty() {
+            return vec![];
+        }
+        let lo = if lo_pct <= 0.0 {
+            f64::NEG_INFINITY
+        } else {
+            stats::percentile(&sizes, lo_pct)
+        };
+        let hi = if hi_pct >= 100.0 {
+            f64::INFINITY
+        } else {
+            stats::percentile(&sizes, hi_pct)
+        };
+        self.outcomes
+            .iter()
+            .filter(|o| o.slot_time > lo && o.slot_time <= hi)
+            .map(|o| o.rt)
+            .collect()
+    }
+
+    /// Convenience: mean RT of a size band.
+    pub fn mean_rt_band(&self, lo_pct: f64, hi_pct: f64) -> f64 {
+        stats::mean(&self.rt_by_size_band(lo_pct, hi_pct))
+    }
+
+    /// Jobs of the infrequent users only (Fig. 5 CDF input).
+    pub fn rts_of_class(&self, class: UserClass) -> Vec<f64> {
+        self.outcomes
+            .iter()
+            .filter(|o| self.user_class.get(&o.user) == Some(&class))
+            .map(|o| o.rt)
+            .collect()
+    }
+
+    /// Completion timeline (finish times, seconds) — Fig. 6 CDF input.
+    pub fn finish_times(&self) -> Vec<f64> {
+        self.outcomes.iter().map(|o| o.finish_s).collect()
+    }
+
+    pub fn users(&self) -> Vec<UserId> {
+        let mut u: Vec<UserId> = self.user_class.keys().copied().collect();
+        u.sort();
+        u
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::dag::CompletedJob;
+    use crate::workload::Workload;
+
+    fn mk() -> RunMetrics {
+        let wl = Workload {
+            name: "t".into(),
+            jobs: vec![],
+            user_class: [(1, UserClass::Frequent), (2, UserClass::Infrequent)]
+                .into_iter()
+                .collect(),
+        };
+        let completed = vec![
+            CompletedJob {
+                job: 1,
+                user: 1,
+                name: "tiny".into(),
+                submit: 0,
+                finish: 2_000_000,
+                slot_time: 10.0,
+            },
+            CompletedJob {
+                job: 2,
+                user: 2,
+                name: "short".into(),
+                submit: 1_000_000,
+                finish: 5_000_000,
+                slot_time: 40.0,
+            },
+        ];
+        let idle: HashMap<String, f64> =
+            [("tiny".to_string(), 1.0), ("short".to_string(), 2.0)]
+                .into_iter()
+                .collect();
+        RunMetrics::build("Fair", &wl, &completed, &idle, 5.0, 0.9)
+    }
+
+    #[test]
+    fn rt_and_slowdown() {
+        let m = mk();
+        assert_eq!(m.outcomes[0].rt, 2.0);
+        assert_eq!(m.outcomes[1].rt, 4.0);
+        assert_eq!(m.outcomes[0].slowdown(), 2.0);
+        assert_eq!(m.outcomes[1].slowdown(), 2.0);
+        assert_eq!(m.mean_rt(), 3.0);
+    }
+
+    #[test]
+    fn class_split() {
+        let m = mk();
+        assert_eq!(m.mean_rt_by_class(UserClass::Frequent), 2.0);
+        assert_eq!(m.mean_rt_by_class(UserClass::Infrequent), 4.0);
+        assert_eq!(m.mean_rt_of_user(2), 4.0);
+        assert_eq!(m.rts_of_class(UserClass::Frequent), vec![2.0]);
+    }
+
+    #[test]
+    fn size_bands_partition_jobs() {
+        let m = mk();
+        let small = m.rt_by_size_band(0.0, 80.0);
+        let large = m.rt_by_size_band(95.0, 100.0);
+        assert!(!small.is_empty());
+        // Both jobs land somewhere; bands should not both contain both.
+        assert!(small.len() + large.len() <= 3);
+    }
+
+    #[test]
+    fn missing_idle_rt_defaults_neutral() {
+        let mut m = mk();
+        m.outcomes[0].idle_rt = 0.0;
+        assert_eq!(m.outcomes[0].slowdown(), 1.0);
+    }
+}

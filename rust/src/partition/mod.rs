@@ -1,0 +1,118 @@
+//! Stage-input partitioning (paper §2.1.2, §3.2, §4.1.2).
+//!
+//! Two distinct phases, as in Spark:
+//! * **file scan** (leaf stages): the input partitioner splits the input
+//!   data into tasks;
+//! * **shuffle** (non-leaf stages): outputs start at 200 partitions and AQE
+//!   coalesces them down using the advisory partition size and a minimum
+//!   partition count.
+//!
+//! [`SizeScheme`] reproduces Spark's defaults. [`RuntimeScheme`] is the
+//! paper's contribution: split so that each task runs for about the
+//! Advisory Task Runtime (ATR), both at scan time and as the AQE
+//! minimum-partition override.
+
+pub mod runtime;
+pub mod size;
+
+pub use runtime::RuntimeScheme;
+pub use size::SizeScheme;
+
+use crate::core::job::StageSpec;
+
+/// AQE's fixed initial shuffle partition count (Spark default).
+pub const AQE_INITIAL_PARTITIONS: u32 = 200;
+
+/// A partitioning strategy: returns equal-width input ranges `[lo, hi)`
+/// covering `[0, 1)`.
+///
+/// `est_slot_time` is the *estimated* stage sequential runtime from the
+/// runtime estimator (runtime partitioning never sees ground truth).
+pub trait PartitionScheme: Send {
+    fn name(&self) -> &'static str;
+    fn partition_count(&self, stage: &StageSpec, est_slot_time: f64, cores: u32) -> u32;
+
+    fn partition(&self, stage: &StageSpec, est_slot_time: f64, cores: u32) -> Vec<(f64, f64)> {
+        let mut n = self.partition_count(stage, est_slot_time, cores).max(1);
+        if let Some(cap) = stage.max_parallelism {
+            n = n.min(cap.max(1));
+        }
+        equal_ranges(n)
+    }
+}
+
+/// `n` equal-width ranges covering `[0,1)` exactly.
+pub fn equal_ranges(n: u32) -> Vec<(f64, f64)> {
+    let n = n.max(1);
+    (0..n)
+        .map(|i| (i as f64 / n as f64, (i + 1) as f64 / n as f64))
+        .collect()
+}
+
+/// Build a scheme by kind — config entry point. The `-P` suffix in the
+/// paper's tables corresponds to `Kind::Runtime`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchemeKind {
+    /// Spark default partitioning (size-based + plain AQE).
+    Size,
+    /// The paper's runtime (ATR) partitioning, `-P` variants.
+    Runtime,
+}
+
+impl SchemeKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchemeKind::Size => "default",
+            SchemeKind::Runtime => "runtime",
+        }
+    }
+    pub fn parse(s: &str) -> Option<SchemeKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "size" | "default" => Some(SchemeKind::Size),
+            "runtime" | "atr" | "p" => Some(SchemeKind::Runtime),
+            _ => None,
+        }
+    }
+}
+
+pub fn make_scheme(
+    kind: SchemeKind,
+    max_partition_bytes: u64,
+    advisory_partition_bytes: u64,
+    atr: f64,
+) -> Box<dyn PartitionScheme> {
+    match kind {
+        SchemeKind::Size => Box::new(SizeScheme::new(max_partition_bytes, advisory_partition_bytes)),
+        SchemeKind::Runtime => Box::new(RuntimeScheme::new(
+            atr,
+            max_partition_bytes,
+            advisory_partition_bytes,
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_ranges_cover_unit() {
+        for n in [1u32, 2, 7, 200] {
+            let r = equal_ranges(n);
+            assert_eq!(r.len(), n as usize);
+            assert_eq!(r[0].0, 0.0);
+            assert_eq!(r.last().unwrap().1, 1.0);
+            for w in r.windows(2) {
+                assert!((w[0].1 - w[1].0).abs() < 1e-12);
+                assert!(w[0].1 > w[0].0);
+            }
+        }
+    }
+
+    #[test]
+    fn kind_parse() {
+        assert_eq!(SchemeKind::parse("default"), Some(SchemeKind::Size));
+        assert_eq!(SchemeKind::parse("runtime"), Some(SchemeKind::Runtime));
+        assert_eq!(SchemeKind::parse("x"), None);
+    }
+}

@@ -1,0 +1,120 @@
+//! Spark's default size-based partitioning (paper §2.1.2).
+//!
+//! * Leaf (file-scan) stages: input is divided by `maxPartitionBytes`, but
+//!   at least one partition per core so every stage can use the whole
+//!   cluster ("dividing the data equally among the available cores").
+//! * Shuffle stages: AQE starts from 200 partitions and coalesces to
+//!   `max(ceil(bytes / advisoryPartitionBytes), min_partitions)` with the
+//!   Spark-default `min_partitions = 1` — which is exactly what lets AQE
+//!   create long-running tasks (§4.1.2).
+
+use super::{PartitionScheme, AQE_INITIAL_PARTITIONS};
+use crate::core::job::StageSpec;
+
+pub struct SizeScheme {
+    max_partition_bytes: u64,
+    advisory_partition_bytes: u64,
+    /// AQE minimum coalesced partition count (Spark default 1). The
+    /// runtime scheme raises this dynamically.
+    pub min_partitions: u32,
+}
+
+impl SizeScheme {
+    pub fn new(max_partition_bytes: u64, advisory_partition_bytes: u64) -> Self {
+        SizeScheme {
+            max_partition_bytes: max_partition_bytes.max(1),
+            advisory_partition_bytes: advisory_partition_bytes.max(1),
+            min_partitions: 1,
+        }
+    }
+
+    pub fn leaf_count(&self, stage: &StageSpec, cores: u32) -> u32 {
+        let by_size = stage.input_bytes.div_ceil(self.max_partition_bytes) as u32;
+        by_size.max(cores).max(1)
+    }
+
+    pub fn shuffle_count(&self, stage: &StageSpec, min_partitions: u32) -> u32 {
+        let by_size = stage.input_bytes.div_ceil(self.advisory_partition_bytes) as u32;
+        by_size
+            .max(min_partitions)
+            .clamp(1, AQE_INITIAL_PARTITIONS)
+    }
+}
+
+impl PartitionScheme for SizeScheme {
+    fn name(&self) -> &'static str {
+        "default"
+    }
+
+    fn partition_count(&self, stage: &StageSpec, _est_slot_time: f64, cores: u32) -> u32 {
+        if stage.is_leaf_input {
+            self.leaf_count(stage, cores)
+        } else {
+            self.shuffle_count(stage, self.min_partitions)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::job::{CostProfile, StagePhase, StageSpec};
+
+    fn leaf(bytes: u64) -> StageSpec {
+        StageSpec {
+            phase: StagePhase::Load,
+            parents: vec![],
+            is_leaf_input: true,
+            input_bytes: bytes,
+            slot_time: 1.0,
+            cost: CostProfile::uniform(),
+            max_parallelism: None,
+            opcount: 1,
+        }
+    }
+
+    fn shuffle(bytes: u64) -> StageSpec {
+        let mut s = leaf(bytes);
+        s.is_leaf_input = false;
+        s.parents = vec![0];
+        s
+    }
+
+    #[test]
+    fn leaf_at_least_one_per_core() {
+        let s = SizeScheme::new(128 << 20, 64 << 20);
+        // Small input still spreads across all cores.
+        assert_eq!(s.partition_count(&leaf(1 << 20), 1.0, 32), 32);
+    }
+
+    #[test]
+    fn leaf_oversplits_when_max_partition_bytes_small() {
+        // The paper §5.1: default maxPartitionBytes over-partitions their
+        // 752 MB dataset — reproduce that behaviour.
+        let s = SizeScheme::new(8 << 20, 64 << 20);
+        assert_eq!(s.partition_count(&leaf(752 << 20), 1.0, 32), 94);
+    }
+
+    #[test]
+    fn shuffle_coalesces_to_advisory() {
+        let s = SizeScheme::new(128 << 20, 64 << 20);
+        assert_eq!(s.partition_count(&shuffle(640 << 20), 1.0, 32), 10);
+        // Tiny shuffle output coalesces all the way to min_partitions=1,
+        // the long-running-task hazard the paper fixes.
+        assert_eq!(s.partition_count(&shuffle(1 << 20), 1.0, 32), 1);
+    }
+
+    #[test]
+    fn shuffle_capped_at_200() {
+        let s = SizeScheme::new(128 << 20, 1 << 20);
+        assert_eq!(s.partition_count(&shuffle(1 << 40), 1.0, 32), 200);
+    }
+
+    #[test]
+    fn respects_max_parallelism_cap() {
+        let s = SizeScheme::new(128 << 20, 64 << 20);
+        let mut st = leaf(752 << 20);
+        st.max_parallelism = Some(1);
+        assert_eq!(s.partition(&st, 1.0, 32).len(), 1);
+    }
+}

@@ -1,0 +1,270 @@
+//! Artifact manifest parsing and PJRT compilation.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::jsonout;
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub block_rows: usize,
+    pub cols: usize,
+    pub tile: usize,
+    pub agg_fanin: usize,
+    /// (opcount k, file name) of each compute variant.
+    pub compute: Vec<(u32, String)>,
+    pub aggregate_file: String,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = jsonout::parse(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let get_usize = |k: &str| {
+            v.get(k)
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| anyhow!("manifest missing '{k}'"))
+        };
+        let compute = v
+            .get("compute")
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing 'compute'"))?
+            .iter()
+            .map(|e| {
+                let k = e
+                    .get("k")
+                    .and_then(|x| x.as_usize())
+                    .ok_or_else(|| anyhow!("compute entry missing 'k'"))?;
+                let f = e
+                    .get("file")
+                    .and_then(|x| x.as_str())
+                    .ok_or_else(|| anyhow!("compute entry missing 'file'"))?;
+                Ok((k as u32, f.to_string()))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let aggregate_file = v
+            .get("aggregate")
+            .and_then(|a| a.get("file"))
+            .and_then(|x| x.as_str())
+            .ok_or_else(|| anyhow!("manifest missing 'aggregate.file'"))?
+            .to_string();
+        Ok(Manifest {
+            block_rows: get_usize("block_rows")?,
+            cols: get_usize("cols")?,
+            tile: get_usize("tile")?,
+            agg_fanin: get_usize("agg_fanin")?,
+            compute,
+            aggregate_file,
+        })
+    }
+}
+
+/// A compiled executable plus its expected input geometry.
+pub struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Compiled {
+    /// Execute with literal inputs; returns the single (tuple-unwrapped)
+    /// output as an f32 vector.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → 1-tuple outputs.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// Loads + compiles all artifacts on one PJRT CPU client.
+///
+/// One `ArtifactStore` per worker thread: the underlying client is not
+/// `Sync`, and per-thread stores keep task execution embarrassingly
+/// parallel (the paper's executor cores).
+pub struct ArtifactStore {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    compute: HashMap<u32, Compiled>,
+    aggregate: Compiled,
+    dir: PathBuf,
+}
+
+impl ArtifactStore {
+    /// Compile every artifact in `dir` (expects `manifest.json`).
+    pub fn load(dir: &Path) -> Result<ArtifactStore> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut compute = HashMap::new();
+        for (k, file) in &manifest.compute {
+            compute.insert(
+                *k,
+                compile_one(&client, &dir.join(file), &format!("compute_k{k}"))?,
+            );
+        }
+        let aggregate = compile_one(&client, &dir.join(&manifest.aggregate_file), "aggregate")?;
+        Ok(ArtifactStore {
+            manifest,
+            client,
+            compute,
+            aggregate,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Default artifact directory: `$UWFQ_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("UWFQ_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Available op-count variants, ascending.
+    pub fn variants(&self) -> Vec<u32> {
+        let mut v: Vec<u32> = self.compute.keys().copied().collect();
+        v.sort();
+        v
+    }
+
+    /// The compute variant for op-count `k` (exact match required — the
+    /// workload layer only requests compiled variants).
+    pub fn compute(&self, k: u32) -> Result<&Compiled> {
+        self.compute
+            .get(&k)
+            .ok_or_else(|| anyhow!("no compute artifact for k={k}; have {:?}", self.variants()))
+    }
+
+    /// Run the compute artifact on one (rows × cols) row-major block.
+    pub fn run_compute_block(&self, k: u32, block: &[f32]) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        anyhow::ensure!(
+            block.len() == m.block_rows * m.cols,
+            "block has {} values, expected {}",
+            block.len(),
+            m.block_rows * m.cols
+        );
+        let x = xla::Literal::vec1(block).reshape(&[m.block_rows as i64, m.cols as i64])?;
+        self.compute(k)?.run(&[x])
+    }
+
+    /// Run the aggregate artifact over per-task partials.
+    ///
+    /// `partials` is a list of (2×cols) [sum; sumsq] vectors with their
+    /// row counts; zero-padded to the artifact fan-in, chunked if longer.
+    /// Returns the (2×cols) [mean; var] result.
+    pub fn run_aggregate(&self, partials: &[(Vec<f32>, f32)]) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        anyhow::ensure!(!partials.is_empty(), "no partials to aggregate");
+        let width = 2 * m.cols;
+        for (p, _) in partials {
+            anyhow::ensure!(p.len() == width, "partial has wrong width");
+        }
+        // Chunk over fan-in: fold chunk results back in as synthetic
+        // partials (mean/var → sum/sumsq requires the count, which we
+        // track as the chunk's total rows).
+        let mut items: Vec<(Vec<f32>, f32)> = partials.to_vec();
+        loop {
+            let take = items.len().min(m.agg_fanin);
+            let chunk: Vec<(Vec<f32>, f32)> = items.drain(..take).collect();
+            let total_rows: f32 = chunk.iter().map(|c| c.1).sum();
+            let mut flat = vec![0f32; m.agg_fanin * width];
+            let mut counts = vec![0f32; m.agg_fanin];
+            for (i, (p, n)) in chunk.iter().enumerate() {
+                flat[i * width..(i + 1) * width].copy_from_slice(p);
+                counts[i] = *n;
+            }
+            let p = xla::Literal::vec1(&flat).reshape(&[
+                m.agg_fanin as i64,
+                2,
+                m.cols as i64,
+            ])?;
+            let c = xla::Literal::vec1(&counts).reshape(&[m.agg_fanin as i64])?;
+            let out = self.aggregate.run(&[p, c])?; // [mean; var]
+            if items.is_empty() {
+                return Ok(out);
+            }
+            // Convert [mean; var] back to [sum; sumsq] for re-folding.
+            let mut back = vec![0f32; width];
+            for j in 0..m.cols {
+                let mean = out[j];
+                let var = out[m.cols + j];
+                back[j] = mean * total_rows;
+                back[m.cols + j] = (var + mean * mean) * total_rows;
+            }
+            items.insert(0, (back, total_rows));
+        }
+    }
+}
+
+fn compile_one(client: &xla::PjRtClient, path: &Path, name: &str) -> Result<Compiled> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
+    )
+    .with_context(|| format!("loading HLO text {path:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client
+        .compile(&comp)
+        .with_context(|| format!("compiling {name}"))?;
+    Ok(Compiled {
+        exe,
+        name: name.to_string(),
+    })
+}
+
+// Tests live in rust/tests/runtime_roundtrip.rs (they need built
+// artifacts); manifest parsing is unit-tested here.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_sample() {
+        let dir = std::env::temp_dir().join("uwfq_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+  "block_rows": 4096, "cols": 8, "tile": 512, "agg_fanin": 32,
+  "compute": [{"k": 1, "file": "c1.hlo.txt"}, {"k": 4, "file": "c4.hlo.txt"}],
+  "aggregate": {"file": "agg.hlo.txt"}
+}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.block_rows, 4096);
+        assert_eq!(m.compute, vec![(1, "c1.hlo.txt".into()), (4, "c4.hlo.txt".into())]);
+        assert_eq!(m.aggregate_file, "agg.hlo.txt");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn manifest_missing_fields_error() {
+        let dir = std::env::temp_dir().join("uwfq_manifest_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"cols": 8}"#).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn manifest_missing_file_error() {
+        let dir = std::env::temp_dir().join("uwfq_manifest_none");
+        std::fs::create_dir_all(&dir).ok();
+        std::fs::remove_file(dir.join("manifest.json")).ok();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,11 @@
+//! xla/PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the only place Python's output crosses into Rust, and it
+//! happens once at startup: `manifest.json` → `HloModuleProto::from_text_file`
+//! → `client.compile` → reusable [`Compiled`] executables. The request
+//! path (task execution) only calls [`Compiled::run`].
+
+pub mod artifacts;
+
+pub use artifacts::{ArtifactStore, Compiled, Manifest};

@@ -1,0 +1,150 @@
+//! Cluster Fair Queuing (CFQ) baseline — Chen et al., INFOCOM'17 (paper
+//! §5.1.2, ref [8]).
+//!
+//! CFQ assigns each *stage* a virtual deadline from traditional 1-level
+//! virtual time (`P_s = D_s`), omitting user and job context. Stages of
+//! the same analytics job are therefore independent flows: a job's next
+//! stage re-enters the virtual queue when submitted, which makes CFQ
+//! interleave jobs stage-by-stage (the behaviour the paper highlights in
+//! scenario 2, where CFQ finishes everything "only at the very end").
+
+use super::vtime::SingleVtime;
+use super::{select_min_by_key, Policy, StageMeta, StageView};
+use crate::{JobId, StageId};
+use std::collections::HashMap;
+
+pub struct Cfq {
+    vt: SingleVtime,
+    /// Stage → assigned virtual deadline.
+    deadlines: HashMap<StageId, f64>,
+    /// Best (earliest) stage deadline seen per job — only for diagnostics.
+    job_deadlines: HashMap<JobId, f64>,
+}
+
+impl Cfq {
+    pub fn new(r_total: f64) -> Self {
+        Cfq {
+            vt: SingleVtime::new(r_total),
+            deadlines: HashMap::new(),
+            job_deadlines: HashMap::new(),
+        }
+    }
+}
+
+impl Policy for Cfq {
+    fn name(&self) -> &'static str {
+        "CFQ"
+    }
+
+    fn on_stage_submit(&mut self, now_s: f64, meta: &StageMeta) {
+        let d = self.vt.arrive(now_s, meta.stage, meta.est_slot_time);
+        self.deadlines.insert(meta.stage, d);
+        let e = self
+            .job_deadlines
+            .entry(meta.job)
+            .or_insert(f64::INFINITY);
+        *e = e.min(d);
+    }
+
+    fn on_stage_finish(&mut self, stage: StageId) {
+        self.deadlines.remove(&stage);
+    }
+
+    fn select(&mut self, _now_s: f64, views: &[StageView]) -> Option<usize> {
+        select_min_by_key(views, |v| {
+            (
+                self.deadlines
+                    .get(&v.stage)
+                    .copied()
+                    .unwrap_or(f64::INFINITY),
+                v.arrival_seq,
+                v.stage,
+            )
+        })
+    }
+
+    fn job_deadline(&self, job: JobId) -> Option<f64> {
+        self.job_deadlines.get(&job).copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(stage: u64, job: u64, slot: f64) -> StageMeta {
+        StageMeta {
+            stage,
+            job,
+            user: 0,
+            est_slot_time: slot,
+        }
+    }
+
+    fn v(stage: u64, seq: u64) -> StageView {
+        StageView {
+            stage,
+            job: stage,
+            user: 0,
+            stage_idx: 0,
+            running: 0,
+            pending: 1,
+            arrival_seq: seq,
+        }
+    }
+
+    #[test]
+    fn shorter_stage_gets_earlier_deadline() {
+        let mut p = Cfq::new(4.0);
+        p.on_stage_submit(0.0, &meta(1, 1, 10.0));
+        p.on_stage_submit(0.0, &meta(2, 2, 1.0));
+        let views = vec![v(1, 0), v(2, 1)];
+        assert_eq!(p.select(0.0, &views), Some(1));
+    }
+
+    #[test]
+    fn later_submission_pays_virtual_time() {
+        // Stage A (L=2) at t=0, stage B (L=2) at t=1 (R=1, one active →
+        // V(1)=1): D_A=2, D_B=3 → A first.
+        let mut p = Cfq::new(1.0);
+        p.on_stage_submit(0.0, &meta(1, 1, 2.0));
+        p.on_stage_submit(1.0, &meta(2, 2, 2.0));
+        let views = vec![v(2, 1), v(1, 0)];
+        assert_eq!(p.select(1.0, &views), Some(1));
+    }
+
+    #[test]
+    fn no_user_context_flooder_wins_share() {
+        // One user submits 4 stages, another submits 1, all L=1 at t=0:
+        // deadlines are all equal → CFQ serves them in FIFO-ish order,
+        // giving the flooding user 4/5 of the service. (Contrast with the
+        // UJF/UWFQ tests.)
+        let mut p = Cfq::new(1.0);
+        for s in 1..=4 {
+            p.on_stage_submit(0.0, &meta(s, s, 1.0));
+        }
+        p.on_stage_submit(0.0, &meta(5, 5, 1.0));
+        let views: Vec<StageView> = (1..=5).map(|s| v(s, s)).collect();
+        // all deadlines equal → ties break by arrival: the flooder's first
+        // stage is selected, not the single-job user's.
+        assert_eq!(p.select(0.0, &views), Some(0));
+    }
+
+    #[test]
+    fn stage_finish_retires_entity() {
+        let mut p = Cfq::new(1.0);
+        p.on_stage_submit(0.0, &meta(1, 1, 1.0));
+        p.on_stage_finish(1);
+        let views = vec![v(1, 0)];
+        // Unknown stages sort last but are still selectable (defensive).
+        assert_eq!(p.select(0.0, &views), Some(0));
+    }
+
+    #[test]
+    fn job_deadline_tracks_min_stage_deadline() {
+        let mut p = Cfq::new(1.0);
+        p.on_stage_submit(0.0, &meta(1, 7, 3.0));
+        p.on_stage_submit(0.0, &meta(2, 7, 1.0));
+        assert!(p.job_deadline(7).unwrap() <= 3.0);
+    }
+}

@@ -1,0 +1,72 @@
+//! Spark's built-in Fair scheduler (paper §5.1.2): the stage with the
+//! fewest running tasks has the highest priority,
+//! `P_s = N^s_active_task_amount`. Job-level only — no user context, which
+//! is exactly the weakness the paper demonstrates (users with more active
+//! stages receive more resources).
+
+use super::{select_min_by_key, Policy, StageView};
+
+#[derive(Default)]
+pub struct Fair;
+
+impl Fair {
+    pub fn new() -> Self {
+        Fair
+    }
+}
+
+impl Policy for Fair {
+    fn name(&self) -> &'static str {
+        "Fair"
+    }
+
+    fn select(&mut self, _now_s: f64, views: &[StageView]) -> Option<usize> {
+        // Fewest running tasks; FIFO tiebreak (Spark's comparator with
+        // minShare=0, weight=1).
+        select_min_by_key(views, |v| (v.running, v.arrival_seq, v.stage_idx, v.stage))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(stage: u64, running: u32, pending: u32, seq: u64) -> StageView {
+        StageView {
+            stage,
+            job: stage,
+            user: 0,
+            stage_idx: 0,
+            running,
+            pending,
+            arrival_seq: seq,
+        }
+    }
+
+    #[test]
+    fn fewest_running_wins() {
+        let mut p = Fair::new();
+        let views = vec![v(1, 5, 4, 0), v(2, 2, 4, 1), v(3, 3, 4, 2)];
+        assert_eq!(p.select(0.0, &views), Some(1));
+    }
+
+    #[test]
+    fn equalizes_over_successive_launches() {
+        // Simulate counts updating as tasks launch: selection must rotate.
+        let mut p = Fair::new();
+        let mut running = [0u32; 3];
+        for _ in 0..9 {
+            let views: Vec<StageView> = (0..3).map(|i| v(i as u64 + 1, running[i], 10, i as u64)).collect();
+            let picked = p.select(0.0, &views).unwrap();
+            running[picked] += 1;
+        }
+        assert_eq!(running, [3, 3, 3]);
+    }
+
+    #[test]
+    fn fifo_tiebreak() {
+        let mut p = Fair::new();
+        let views = vec![v(1, 1, 1, 5), v(2, 1, 1, 3)];
+        assert_eq!(p.select(0.0, &views), Some(1));
+    }
+}

@@ -1,0 +1,55 @@
+//! Spark's built-in FIFO scheduler (paper §2.1.3): jobs in arrival order,
+//! stages of the same job in stage-index order.
+
+use super::{select_min_by_key, Policy, StageView};
+
+#[derive(Default)]
+pub struct Fifo;
+
+impl Fifo {
+    pub fn new() -> Self {
+        Fifo
+    }
+}
+
+impl Policy for Fifo {
+    fn name(&self) -> &'static str {
+        "FIFO"
+    }
+
+    fn select(&mut self, _now_s: f64, views: &[StageView]) -> Option<usize> {
+        select_min_by_key(views, |v| (v.arrival_seq, v.stage_idx, v.stage))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(stage: u64, seq: u64, idx: usize, pending: u32) -> StageView {
+        StageView {
+            stage,
+            job: seq,
+            user: 0,
+            stage_idx: idx,
+            running: 0,
+            pending,
+            arrival_seq: seq,
+        }
+    }
+
+    #[test]
+    fn picks_earliest_job_then_stage() {
+        let mut p = Fifo::new();
+        let views = vec![v(10, 2, 0, 1), v(11, 1, 1, 1), v(12, 1, 0, 1)];
+        assert_eq!(p.select(0.0, &views), Some(2));
+    }
+
+    #[test]
+    fn skips_exhausted_stages() {
+        let mut p = Fifo::new();
+        let views = vec![v(10, 1, 0, 0), v(11, 2, 0, 3)];
+        assert_eq!(p.select(0.0, &views), Some(1));
+        assert_eq!(p.select(0.0, &[]), None);
+    }
+}

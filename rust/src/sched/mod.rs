@@ -1,0 +1,202 @@
+//! Scheduling policies.
+//!
+//! A [`Policy`] observes job/stage lifecycle events and, at every task
+//! launch opportunity, selects which runnable stage gets the freed core —
+//! the equivalent of Spark sorting the Root Pool on each resource offer
+//! (§2.1.1 step 5). Stages carry their analytics-job context (§3.1) so
+//! policies can schedule at job/user granularity.
+
+pub mod cfq;
+pub mod fair;
+pub mod fifo;
+pub mod ujf;
+pub mod uwfq;
+pub mod vtime;
+
+use crate::{JobId, StageId, UserId};
+
+/// Job-level metadata given to the policy when an analytics job arrives.
+#[derive(Clone, Debug)]
+pub struct JobMeta {
+    pub job: JobId,
+    pub user: UserId,
+    /// UWFQ user weight `U_w`.
+    pub weight: f64,
+    /// Estimated job slot-time `L_i` in seconds (total across stages) —
+    /// from the runtime estimator, perfect under the oracle.
+    pub est_slot_time: f64,
+    /// Monotone submission sequence number.
+    pub arrival_seq: u64,
+}
+
+/// Stage-level metadata on stage submission (used by CFQ, which assigns
+/// deadlines per stage without job context).
+#[derive(Clone, Debug)]
+pub struct StageMeta {
+    pub stage: StageId,
+    pub job: JobId,
+    pub user: UserId,
+    pub est_slot_time: f64,
+}
+
+/// Snapshot of a live stage at selection time.
+#[derive(Clone, Debug)]
+pub struct StageView {
+    pub stage: StageId,
+    pub job: JobId,
+    pub user: UserId,
+    pub stage_idx: usize,
+    pub running: u32,
+    pub pending: u32,
+    /// Arrival sequence of the owning job.
+    pub arrival_seq: u64,
+}
+
+/// A scheduling policy. All engine times are seconds (f64).
+pub trait Policy: Send {
+    fn name(&self) -> &'static str;
+
+    /// An analytics job arrived (all of its stages are known; deadline
+    /// assignment for UWFQ happens here, per §4.1.1).
+    fn on_job_arrival(&mut self, _now_s: f64, _meta: &JobMeta) {}
+
+    /// A stage of an already-arrived job was submitted to the task
+    /// scheduler (its dependencies finished).
+    fn on_stage_submit(&mut self, _now_s: f64, _meta: &StageMeta) {}
+
+    /// A stage completed all of its tasks (pool-tree maintenance).
+    fn on_stage_finish(&mut self, _stage: StageId) {}
+
+    /// All stages of a job finished.
+    fn on_job_finish(&mut self, _now_s: f64, _job: JobId) {}
+
+    /// Pick the stage (index into `views`) to launch one task from.
+    /// Must return a view with `pending > 0`, or `None`.
+    fn select(&mut self, now_s: f64, views: &[StageView]) -> Option<usize>;
+
+    /// The job's assigned global virtual deadline, if this policy uses
+    /// deadlines (diagnostics + ablation benches).
+    fn job_deadline(&self, _job: JobId) -> Option<f64> {
+        None
+    }
+}
+
+/// Select the view minimizing `key` among views with pending work —
+/// shared helper for deadline/counter-based policies.
+pub fn select_min_by_key<K: PartialOrd>(
+    views: &[StageView],
+    mut key: impl FnMut(&StageView) -> K,
+) -> Option<usize> {
+    let mut best: Option<(usize, K)> = None;
+    for (i, v) in views.iter().enumerate() {
+        if v.pending == 0 {
+            continue;
+        }
+        let k = key(v);
+        match &best {
+            None => best = Some((i, k)),
+            Some((_, bk)) if k < *bk => best = Some((i, k)),
+            _ => {}
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// Construct a policy by name — the config-system entry point.
+pub fn make_policy(kind: PolicyKind, cores: u32, grace_rsec: f64) -> Box<dyn Policy> {
+    match kind {
+        PolicyKind::Fifo => Box::new(fifo::Fifo::new()),
+        PolicyKind::Fair => Box::new(fair::Fair::new()),
+        PolicyKind::Ujf => Box::new(ujf::Ujf::new()),
+        PolicyKind::Cfq => Box::new(cfq::Cfq::new(cores as f64)),
+        PolicyKind::Uwfq => Box::new(uwfq::Uwfq::new(cores as f64, grace_rsec)),
+    }
+}
+
+/// The schedulers evaluated in the paper (§5.1.2) plus Spark FIFO.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    Fifo,
+    Fair,
+    Ujf,
+    Cfq,
+    Uwfq,
+}
+
+impl PolicyKind {
+    pub const ALL: [PolicyKind; 5] = [
+        PolicyKind::Fifo,
+        PolicyKind::Fair,
+        PolicyKind::Ujf,
+        PolicyKind::Cfq,
+        PolicyKind::Uwfq,
+    ];
+
+    /// The four schedulers compared in the paper's tables.
+    pub const PAPER: [PolicyKind; 4] = [
+        PolicyKind::Fair,
+        PolicyKind::Ujf,
+        PolicyKind::Cfq,
+        PolicyKind::Uwfq,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Fifo => "FIFO",
+            PolicyKind::Fair => "Fair",
+            PolicyKind::Ujf => "UJF",
+            PolicyKind::Cfq => "CFQ",
+            PolicyKind::Uwfq => "UWFQ",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "fifo" => Some(PolicyKind::Fifo),
+            "fair" => Some(PolicyKind::Fair),
+            "ujf" => Some(PolicyKind::Ujf),
+            "cfq" => Some(PolicyKind::Cfq),
+            "uwfq" => Some(PolicyKind::Uwfq),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn select_min_skips_pending_zero() {
+        let views = vec![
+            StageView {
+                stage: 1,
+                job: 1,
+                user: 0,
+                stage_idx: 0,
+                running: 0,
+                pending: 0,
+                arrival_seq: 0,
+            },
+            StageView {
+                stage: 2,
+                job: 2,
+                user: 0,
+                stage_idx: 0,
+                running: 0,
+                pending: 1,
+                arrival_seq: 1,
+            },
+        ];
+        assert_eq!(select_min_by_key(&views, |v| v.arrival_seq), Some(1));
+    }
+
+    #[test]
+    fn policy_kind_parse_roundtrip() {
+        for k in PolicyKind::ALL {
+            assert_eq!(PolicyKind::parse(k.name()), Some(k));
+            assert_eq!(PolicyKind::parse(&k.name().to_lowercase()), Some(k));
+        }
+        assert_eq!(PolicyKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,239 @@
+//! The practical User-Job Fairness (UJF) baseline (paper §5.1.2).
+//!
+//! Dynamically creates a fairness pool per user as they arrive; the root
+//! Fair policy picks the user with the fewest running tasks
+//! (`P_k = N^k_active_task_amount`), and the user's internal Fair policy
+//! picks among their stages. This is the paper's fairness reference
+//! scheduler — the baseline the DVR/DSR metrics compare against.
+
+use super::{Policy, StageMeta, StageView};
+use crate::core::pool::{Pool, PoolPolicy};
+use crate::StageId;
+use std::collections::HashMap;
+
+pub struct Ujf {
+    root: Pool,
+}
+
+impl Ujf {
+    pub fn new() -> Self {
+        Ujf {
+            root: Pool::new("root", PoolPolicy::Fair),
+        }
+    }
+}
+
+impl Default for Ujf {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Policy for Ujf {
+    fn name(&self) -> &'static str {
+        "UJF"
+    }
+
+    fn on_stage_submit(&mut self, _now_s: f64, meta: &StageMeta) {
+        // Dynamic per-user pool (created on first stage of that user).
+        self.root
+            .child(&format!("user-{}", meta.user), PoolPolicy::Fair)
+            .add_stage(meta.stage);
+    }
+
+    fn on_stage_finish(&mut self, stage: StageId) {
+        self.root.remove_stage(stage);
+        self.root.prune_empty();
+    }
+
+    fn select(&mut self, _now_s: f64, views: &[StageView]) -> Option<usize> {
+        // Fast path equivalent to walking the two-level pool tree
+        // (root Fair over per-user pools, Fair within a pool) — verified
+        // against `Pool::select` in `fast_path_matches_pool_tree`.
+        // 1. Per-user totals over ALL active stages.
+        let mut users: HashMap<u32, (u32, u64, usize, bool)> = HashMap::with_capacity(8);
+        for v in views {
+            let e = users.entry(v.user).or_insert((0, u64::MAX, usize::MAX, false));
+            e.0 += v.running;
+            e.1 = e.1.min(v.arrival_seq);
+            e.2 = e.2.min(v.stage_idx);
+            e.3 |= v.pending > 0;
+        }
+        // 2. Root Fair: user with fewest running tasks (among users with
+        //    pending work); FIFO/stage-idx/user-name tiebreaks, matching
+        //    the pool tree's comparator + name-ordered children.
+        let (&best_user, _) = users
+            .iter()
+            .filter(|(_, e)| e.3)
+            .min_by_key(|(&u, e)| (e.0, e.1, e.2, u))?;
+        // 3. Pool Fair: that user's stage with fewest running tasks.
+        views
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| v.user == best_user && v.pending > 0)
+            .min_by_key(|(_, v)| (v.running, v.arrival_seq, v.stage_idx, v.stage))
+            .map(|(i, _)| i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::JobMeta;
+
+    fn submit(p: &mut Ujf, stage: u64, user: u32) {
+        p.on_stage_submit(
+            0.0,
+            &StageMeta {
+                stage,
+                job: stage,
+                user,
+                est_slot_time: 1.0,
+            },
+        );
+    }
+
+    fn v(stage: u64, user: u32, running: u32, pending: u32, seq: u64) -> StageView {
+        StageView {
+            stage,
+            job: stage,
+            user,
+            stage_idx: 0,
+            running,
+            pending,
+            arrival_seq: seq,
+        }
+    }
+
+    #[test]
+    fn user_with_fewest_running_tasks_wins() {
+        let mut p = Ujf::new();
+        submit(&mut p, 1, 1);
+        submit(&mut p, 2, 1);
+        submit(&mut p, 3, 2);
+        // user 1 runs 4 tasks over two stages; user 2 runs 1.
+        let views = vec![
+            v(1, 1, 1, 5, 0),
+            v(2, 1, 3, 5, 1),
+            v(3, 2, 1, 5, 2),
+        ];
+        assert_eq!(p.select(0.0, &views), Some(2));
+    }
+
+    #[test]
+    fn equal_share_across_users_over_launches() {
+        let mut p = Ujf::new();
+        submit(&mut p, 1, 1);
+        submit(&mut p, 2, 2);
+        submit(&mut p, 3, 3);
+        let mut running = [0u32; 3];
+        for _ in 0..12 {
+            let views: Vec<StageView> = (0..3)
+                .map(|i| v(i as u64 + 1, i as u32 + 1, running[i], 10, i as u64))
+                .collect();
+            let picked = p.select(0.0, &views).unwrap();
+            running[picked] += 1;
+        }
+        assert_eq!(running, [4, 4, 4]);
+    }
+
+    #[test]
+    fn flooding_user_does_not_starve_infrequent_user() {
+        // user 1 has 10 stages, user 2 has one: per-launch alternation
+        // keeps the running-task totals of both users balanced.
+        let mut p = Ujf::new();
+        for s in 1..=10 {
+            submit(&mut p, s, 1);
+        }
+        submit(&mut p, 11, 2);
+        let mut u1 = 0u32;
+        let mut u2 = 0u32;
+        for _ in 0..8 {
+            let mut views: Vec<StageView> = (1..=10)
+                .map(|s| v(s, 1, if s == 1 { u1 } else { 0 }, 10, s))
+                .collect();
+            // put all of user 1's running tasks on stage 1's count for
+            // simplicity of the test harness
+            views.push(v(11, 2, u2, 10, 11));
+            let picked = p.select(0.0, &views).unwrap();
+            if views[picked].user == 1 {
+                u1 += 1;
+            } else {
+                u2 += 1;
+            }
+        }
+        assert_eq!(u1, 4);
+        assert_eq!(u2, 4);
+    }
+
+    #[test]
+    fn stage_finish_prunes_pool() {
+        let mut p = Ujf::new();
+        submit(&mut p, 1, 1);
+        p.on_stage_finish(1);
+        // No runnable views → None.
+        assert_eq!(p.select(0.0, &[]), None);
+        let exhausted = vec![v(2, 2, 1, 0, 0)];
+        assert_eq!(p.select(0.0, &exhausted), None);
+    }
+
+    #[test]
+    fn fast_path_matches_pool_tree() {
+        // The O(S) select must agree with walking the two-level Pool tree.
+        use crate::core::pool::{Pool, PoolPolicy};
+        use crate::util::propkit;
+        propkit::check("ujf fast path == pool tree", 0xFA57, 200, |r| {
+            let n = 1 + r.below(12) as usize;
+            let views: Vec<StageView> = (0..n)
+                .map(|i| StageView {
+                    stage: i as u64 + 1,
+                    job: i as u64 + 1,
+                    user: r.below(4) as u32,
+                    stage_idx: r.below(3) as usize,
+                    running: r.below(5) as u32,
+                    pending: r.below(3) as u32,
+                    arrival_seq: r.below(6),
+                })
+                .collect();
+            let mut pool = Pool::new("root", PoolPolicy::Fair);
+            let mut p = Ujf::new();
+            for v in &views {
+                pool.child(&format!("user-{:08}", v.user), PoolPolicy::Fair)
+                    .add_stage(v.stage);
+                p.on_stage_submit(
+                    0.0,
+                    &StageMeta {
+                        stage: v.stage,
+                        job: v.job,
+                        user: v.user,
+                        est_slot_time: 1.0,
+                    },
+                );
+            }
+            let map: std::collections::HashMap<StageId, &StageView> =
+                views.iter().map(|v| (v.stage, v)).collect();
+            let tree = pool.select(&map);
+            let fast = p.select(0.0, &views).map(|i| views[i].stage);
+            if tree != fast {
+                return Err(format!("tree {tree:?} != fast {fast:?} views {views:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ignores_job_arrival_hook() {
+        let mut p = Ujf::new();
+        p.on_job_arrival(
+            0.0,
+            &JobMeta {
+                job: 1,
+                user: 1,
+                weight: 1.0,
+                est_slot_time: 1.0,
+                arrival_seq: 0,
+            },
+        );
+        assert_eq!(p.job_deadline(1), None);
+    }
+}

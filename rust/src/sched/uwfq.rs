@@ -1,0 +1,187 @@
+//! **UWFQ — User Weighted Fair Queuing** (paper §3.3, §4.1): the paper's
+//! contribution.
+//!
+//! On analytics-job arrival, Algorithm 1 simulates a virtual user-job fair
+//! (UJF/GPS) system via 2-level virtual time and assigns the job a global
+//! virtual deadline — the virtual time at which it would finish if every
+//! user received an equal share and each user's jobs ran sequentially in
+//! user-deadline order. Every stage of the job inherits this deadline
+//! (`P_s = D_global^i`, §4.1.1), so jobs run to completion instead of
+//! interleaving, while remaining bounded by user-job fairness
+//! (Appendix A: `F_i − f_i ≤ L_max/R + 2·l_max`).
+//!
+//! The §4.2 grace period revives recently departed users with their
+//! progressed virtual arrival time so stage stragglers of inaccurately
+//! estimated jobs don't gain spurious priority.
+
+use super::vtime::TwoLevelVtime;
+use super::{select_min_by_key, JobMeta, Policy, StageView};
+use crate::JobId;
+
+pub struct Uwfq {
+    vt: TwoLevelVtime,
+    /// Grace period in resource-seconds (paper default: 2).
+    pub grace_rsec: f64,
+}
+
+impl Uwfq {
+    pub fn new(r_total: f64, grace_rsec: f64) -> Self {
+        Uwfq {
+            vt: TwoLevelVtime::new(r_total),
+            grace_rsec,
+        }
+    }
+
+    /// Read-only access to the virtual system (diagnostics, benches).
+    pub fn vtime(&self) -> &TwoLevelVtime {
+        &self.vt
+    }
+}
+
+impl Policy for Uwfq {
+    fn name(&self) -> &'static str {
+        "UWFQ"
+    }
+
+    fn on_job_arrival(&mut self, now_s: f64, meta: &JobMeta) {
+        self.vt.job_arrival(
+            now_s,
+            meta.user,
+            meta.job,
+            meta.est_slot_time,
+            meta.weight,
+            self.grace_rsec,
+        );
+    }
+
+    fn select(&mut self, _now_s: f64, views: &[StageView]) -> Option<usize> {
+        // Highest priority = lowest global virtual deadline; stages of the
+        // same job execute in stage order (earlier stages are parents).
+        select_min_by_key(views, |v| {
+            (
+                self.vt
+                    .job_deadline(v.job)
+                    .unwrap_or(f64::INFINITY),
+                v.arrival_seq,
+                v.stage_idx,
+                v.stage,
+            )
+        })
+    }
+
+    fn on_job_finish(&mut self, _now_s: f64, job: JobId) {
+        // Deadlines of finished jobs are no longer needed for scheduling;
+        // keep the map from growing over a long-running application.
+        self.vt.deadlines.remove(&job);
+    }
+
+    fn job_deadline(&self, job: JobId) -> Option<f64> {
+        self.vt.job_deadline(job)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(job: u64, user: u32, slot: f64, seq: u64) -> JobMeta {
+        JobMeta {
+            job,
+            user,
+            weight: 1.0,
+            est_slot_time: slot,
+            arrival_seq: seq,
+        }
+    }
+
+    fn v(stage: u64, job: u64, user: u32, idx: usize) -> StageView {
+        StageView {
+            stage,
+            job,
+            user,
+            stage_idx: idx,
+            running: 0,
+            pending: 1,
+            arrival_seq: job,
+        }
+    }
+
+    #[test]
+    fn infrequent_user_overtakes_flooder() {
+        // User 1 floods 5 jobs (L=4); user 2 submits one small job (L=1).
+        // UWFQ must schedule user 2's job before user 1's queued jobs.
+        let mut p = Uwfq::new(4.0, 2.0);
+        for j in 1..=5 {
+            p.on_job_arrival(0.0, &meta(j, 1, 4.0, j));
+        }
+        p.on_job_arrival(0.1, &meta(6, 2, 1.0, 6));
+        let views: Vec<StageView> = (1..=6).map(|j| v(j, j, if j == 6 { 2 } else { 1 }, 0)).collect();
+        // Flooder's first job has D=4; the small job's deadline is ~1+ε —
+        // user 2's job wins over jobs 2..5 and over job 1 too.
+        let picked = p.select(0.1, &views).unwrap();
+        assert_eq!(views[picked].job, 6);
+    }
+
+    #[test]
+    fn job_context_runs_jobs_to_completion() {
+        // Two jobs of the same user: all stages of the earlier-deadline
+        // job sort before any stage of the later one (no interleaving).
+        let mut p = Uwfq::new(4.0, 2.0);
+        p.on_job_arrival(0.0, &meta(1, 1, 2.0, 1));
+        p.on_job_arrival(0.0, &meta(2, 1, 2.0, 2));
+        let views = vec![v(10, 2, 1, 0), v(11, 1, 1, 1), v(12, 1, 1, 0)];
+        // job 1 has the earlier deadline; its stage_idx=0 goes first.
+        let picked = p.select(0.0, &views).unwrap();
+        assert_eq!(views[picked].stage, 12);
+    }
+
+    #[test]
+    fn stage_inherits_job_deadline() {
+        let mut p = Uwfq::new(4.0, 2.0);
+        p.on_job_arrival(0.0, &meta(1, 1, 8.0, 1));
+        let d = p.job_deadline(1).unwrap();
+        assert!((d - 8.0).abs() < 1e-9);
+        // Both stages of job 1 carry the same priority — selection among
+        // them falls back to stage order.
+        let views = vec![v(20, 1, 1, 1), v(21, 1, 1, 0)];
+        assert_eq!(p.select(0.0, &views), Some(1));
+    }
+
+    #[test]
+    fn job_finish_cleans_deadline_map() {
+        let mut p = Uwfq::new(4.0, 2.0);
+        p.on_job_arrival(0.0, &meta(1, 1, 1.0, 1));
+        assert!(p.job_deadline(1).is_some());
+        p.on_job_finish(1.0, 1);
+        assert!(p.job_deadline(1).is_none());
+    }
+
+    #[test]
+    fn weights_shift_deadlines() {
+        // User 2 with weight 0.5 (favored: deadlines grow half as fast).
+        let mut p = Uwfq::new(2.0, 2.0);
+        p.on_job_arrival(
+            0.0,
+            &JobMeta {
+                job: 1,
+                user: 1,
+                weight: 1.0,
+                est_slot_time: 4.0,
+                arrival_seq: 1,
+            },
+        );
+        p.on_job_arrival(
+            0.0,
+            &JobMeta {
+                job: 2,
+                user: 2,
+                weight: 0.5,
+                est_slot_time: 4.0,
+                arrival_seq: 2,
+            },
+        );
+        let d1 = p.job_deadline(1).unwrap();
+        let d2 = p.job_deadline(2).unwrap();
+        assert!(d2 < d1, "favored user must get earlier deadline");
+    }
+}

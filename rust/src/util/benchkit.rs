@@ -1,0 +1,118 @@
+//! Tiny bench harness for `harness = false` bench targets (criterion is not
+//! available offline). Warmup + timed iterations, reports mean / p50 / p95
+//! and throughput, machine-readable one-line summary per benchmark.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<44} iters {:>7}  mean {:>12}  p50 {:>12}  p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt(self.mean),
+            fmt(self.p50),
+            fmt(self.p95),
+        );
+    }
+}
+
+fn fmt(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Run `f` repeatedly for ~`budget` (after ~budget/5 warmup); per-iteration
+/// timing. Use for µs..ms scale operations.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // Warmup.
+    let warm_until = Instant::now() + budget / 5;
+    while Instant::now() < warm_until {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::new();
+    let until = Instant::now() + budget;
+    while Instant::now() < until {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if samples.len() >= 1_000_000 {
+            break;
+        }
+    }
+    finish(name, samples)
+}
+
+/// Bench with a fixed iteration count (for slow end-to-end runs).
+pub fn bench_n<F: FnMut()>(name: &str, iters: u64, mut f: F) -> BenchResult {
+    // One warmup iteration.
+    f();
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    finish(name, samples)
+}
+
+fn finish(name: &str, mut samples: Vec<Duration>) -> BenchResult {
+    if samples.is_empty() {
+        samples.push(Duration::ZERO);
+    }
+    samples.sort();
+    let iters = samples.len() as u64;
+    let total: Duration = samples.iter().sum();
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: total / iters as u32,
+        p50: samples[(samples.len() - 1) / 2],
+        p95: samples[((samples.len() - 1) as f64 * 0.95) as usize],
+    };
+    r.report();
+    r
+}
+
+/// Guard against the optimizer deleting benched work.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_n_counts_iters() {
+        let mut n = 0u64;
+        let r = bench_n("noop", 10, || n += 1);
+        assert_eq!(r.iters, 10);
+        assert_eq!(n, 11); // warmup + 10
+        assert!(r.p50 <= r.p95);
+    }
+
+    #[test]
+    fn bench_budget_runs() {
+        let r = bench("spin", Duration::from_millis(20), || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters > 10);
+    }
+}

@@ -1,0 +1,61 @@
+//! Minimal CSV writer (no serde available offline). Quotes fields that
+//! need it; used by the figure/table emitters.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+pub struct Csv {
+    w: BufWriter<File>,
+}
+
+impl Csv {
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> std::io::Result<Csv> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(Csv { w })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
+        let line: Vec<String> = fields.iter().map(|f| escape(f)).collect();
+        writeln!(self.w, "{}", line.join(","))
+    }
+
+    pub fn row_display(&mut self, fields: &[&dyn std::fmt::Display]) -> std::io::Result<()> {
+        let strs: Vec<String> = fields.iter().map(|f| f.to_string()).collect();
+        self.row(&strs)
+    }
+
+    pub fn finish(mut self) -> std::io::Result<()> {
+        self.w.flush()
+    }
+}
+
+fn escape(f: &str) -> String {
+    if f.contains(',') || f.contains('"') || f.contains('\n') {
+        format!("\"{}\"", f.replace('"', "\"\""))
+    } else {
+        f.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_escapes() {
+        let dir = std::env::temp_dir().join("uwfq_csv_test");
+        let path = dir.join("t.csv");
+        let mut c = Csv::create(&path, &["a", "b"]).unwrap();
+        c.row(&["x,y".into(), "q\"z".into()]).unwrap();
+        c.row(&["1".into(), "2".into()]).unwrap();
+        c.finish().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n\"x,y\",\"q\"\"z\"\n1,2\n");
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

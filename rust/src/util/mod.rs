@@ -1,0 +1,16 @@
+//! Offline substrates: deterministic RNG + samplers, stats helpers, tiny
+//! JSON/CSV emitters, a bench harness (`benchkit`) and a property-testing
+//! kit (`propkit`).
+//!
+//! Only `xla` and `anyhow` are available as external crates in this
+//! environment, so rand / serde / criterion / proptest equivalents live
+//! here, scoped to exactly what the reproduction needs.
+
+pub mod benchkit;
+pub mod csvout;
+pub mod jsonout;
+pub mod propkit;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;

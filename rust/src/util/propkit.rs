@@ -1,0 +1,72 @@
+//! Property-testing kit (proptest is not available offline).
+//!
+//! `check` runs a property over `n` seeded random cases; on failure it
+//! retries with simple input shrinking hooks left to the caller (cases are
+//! fully reproducible from the reported seed, which is the practical
+//! shrinking story here: rerun `case(seed)` under a debugger).
+
+use super::rng::Rng;
+
+/// Run `prop(case_rng)` for `n` deterministic cases derived from `seed`.
+/// Panics with the failing case seed on first failure.
+pub fn check<F: FnMut(&mut Rng) -> Result<(), String>>(name: &str, seed: u64, n: u32, mut prop: F) {
+    let mut meta = Rng::new(seed);
+    for case in 0..n {
+        let case_seed = meta.next_u64();
+        let mut r = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut r) {
+            panic!(
+                "property '{name}' failed on case {case} (case_seed={case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper returning Result for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("u64 below is below", 1, 100, |r| {
+            let n = 1 + r.below(1000);
+            let v = r.below(n);
+            if v < n {
+                Ok(())
+            } else {
+                Err(format!("{v} >= {n}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn reports_failure() {
+        check("always fails", 2, 10, |_r| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_case_seeds() {
+        let mut seeds_a = Vec::new();
+        check("collect a", 7, 5, |r| {
+            seeds_a.push(r.next_u64());
+            Ok(())
+        });
+        let mut seeds_b = Vec::new();
+        check("collect b", 7, 5, |r| {
+            seeds_b.push(r.next_u64());
+            Ok(())
+        });
+        assert_eq!(seeds_a, seeds_b);
+    }
+}

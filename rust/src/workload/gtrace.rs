@@ -1,0 +1,261 @@
+//! Google-trace-shaped macro workload (paper §5.3).
+//!
+//! The paper uses the 2014 Google cluster trace (WTA format), selects a
+//! 500 s slice, filters out jobs whose runtime exceeds 10× the median,
+//! and scales the rest to ≥100 % theoretical utilization of the 32-core
+//! cluster. The final workload has 25 users of which 5 heavy users submit
+//! >90 % of the total work.
+//!
+//! We reproduce the *statistical shape* with a seeded generator (the trace
+//! itself is a 300 MB external download): heavy-tailed lognormal job
+//! sizes, Poisson user arrivals, 1–3-stage linear jobs, and the same
+//! filter + rescale pipeline. A real trace export can be used instead via
+//! [`crate::workload::tracefile`].
+
+use super::{UserClass, Workload};
+use crate::core::job::{CostProfile, JobSpec, StagePhase, StageSpec};
+use crate::s_to_us;
+use crate::util::{stats, Rng};
+use std::collections::HashMap;
+
+/// Generator parameters; defaults reproduce §5.3.
+#[derive(Clone, Debug)]
+pub struct GtraceParams {
+    pub window_s: f64,
+    pub users: u32,
+    pub heavy_users: u32,
+    /// Fraction of total work submitted by heavy users.
+    pub heavy_work_fraction: f64,
+    /// Target theoretical utilization (work / cores / window).
+    pub target_utilization: f64,
+    pub cores: u32,
+    /// Fraction of jobs given a skewed cost profile (exercises the paper's
+    /// runtime-partitioning gains on "homogeneous workloads").
+    pub skew_fraction: f64,
+    /// Runtime filter threshold (× median), per §5.3.
+    pub filter_median_mult: f64,
+}
+
+impl Default for GtraceParams {
+    fn default() -> Self {
+        GtraceParams {
+            window_s: 500.0,
+            users: 25,
+            heavy_users: 5,
+            heavy_work_fraction: 0.92,
+            target_utilization: 1.05,
+            cores: 32,
+            skew_fraction: 0.3,
+            filter_median_mult: 10.0,
+        }
+    }
+}
+
+/// Build the macro workload.
+pub fn gtrace(seed: u64, p: &GtraceParams) -> Workload {
+    let mut rng = Rng::new(seed);
+    let mut raw: Vec<(u32, f64, f64, UserClass)> = Vec::new(); // (user, arrival, slot, class)
+
+    // Heavy users: moderately frequent, heavy-tailed big jobs.
+    for user in 1..=p.heavy_users {
+        let mut r = rng.fork(user as u64);
+        let mut t = r.range_f64(0.0, 20.0);
+        while t < p.window_s {
+            // Lognormal core-seconds; median e^4.5 ≈ 90, heavy tail.
+            let slot = r.lognormal(4.5, 1.1);
+            raw.push((user, t, slot, UserClass::Heavy));
+            t += r.exp(1.0 / 25.0); // a job every ~25 s per heavy user
+        }
+    }
+    // Light users: infrequent small jobs.
+    for user in (p.heavy_users + 1)..=p.users {
+        let mut r = rng.fork(1000 + user as u64);
+        let mut t = r.range_f64(0.0, 60.0);
+        while t < p.window_s {
+            let slot = r.lognormal(2.6, 0.8); // median ≈ 13 core-s
+            raw.push((user, t, slot, UserClass::Light));
+            t += r.exp(1.0 / 70.0); // a job every ~70 s per light user
+        }
+    }
+
+    // §5.3 filter: drop jobs with runtime > filter_median_mult × median.
+    let slots: Vec<f64> = raw.iter().map(|j| j.2).collect();
+    let med = stats::median(&slots);
+    raw.retain(|j| j.2 <= p.filter_median_mult * med);
+
+    // Rebalance so heavy users produce `heavy_work_fraction` of the work,
+    // then rescale everything to the target utilization.
+    let heavy_work: f64 = raw
+        .iter()
+        .filter(|j| j.3 == UserClass::Heavy)
+        .map(|j| j.2)
+        .sum();
+    let light_work: f64 = raw
+        .iter()
+        .filter(|j| j.3 == UserClass::Light)
+        .map(|j| j.2)
+        .sum();
+    let heavy_scale =
+        p.heavy_work_fraction / (1.0 - p.heavy_work_fraction) * light_work / heavy_work;
+    for j in raw.iter_mut() {
+        if j.3 == UserClass::Heavy {
+            j.2 *= heavy_scale;
+        }
+    }
+    let total: f64 = raw.iter().map(|j| j.2).sum();
+    let target = p.target_utilization * p.cores as f64 * p.window_s;
+    let scale = target / total;
+    for j in raw.iter_mut() {
+        j.2 *= scale;
+    }
+
+    // Materialize 1–3-stage linear jobs.
+    let mut jobs = Vec::new();
+    let mut user_class = HashMap::new();
+    for (i, (user, arrival, slot, class)) in raw.iter().enumerate() {
+        user_class.insert(*user, *class);
+        let mut r = rng.fork(0xB0B ^ i as u64);
+        jobs.push(trace_job(*user, i, *arrival, *slot, &mut r, p.skew_fraction));
+    }
+
+    Workload {
+        name: "gtrace".into(),
+        jobs,
+        user_class,
+    }
+}
+
+/// One trace job: a linear chain of 1–3 stages whose slot-times partition
+/// the job's total, leaf stage first; bigger jobs get more stages.
+fn trace_job(
+    user: u32,
+    idx: usize,
+    arrival_s: f64,
+    slot: f64,
+    r: &mut Rng,
+    skew_fraction: f64,
+) -> JobSpec {
+    let nstages = if slot < 30.0 {
+        1
+    } else if slot < 200.0 {
+        2
+    } else {
+        3
+    };
+    // Split slot across stages (dominant middle stage for 3-stage jobs).
+    let fractions: Vec<f64> = match nstages {
+        1 => vec![1.0],
+        2 => vec![0.25, 0.75],
+        _ => vec![0.15, 0.7, 0.15],
+    };
+    // Input scaled with job size: ~8 MB per core-second, min 32 MB.
+    let bytes = (((slot * 8.0) as u64) << 20).max(32 << 20);
+    // Shuffle stages consume *aggregated* intermediate output — much
+    // smaller than the scan input (8–64× shrink). This is what makes
+    // default AQE coalesce them to very few partitions and create the
+    // long-running tasks the paper's runtime partitioning fixes (§4.1.2).
+    let shuffle_shrink = 8u64 << r.below(4); // 8, 16, 32 or 64
+    let stages: Vec<StageSpec> = fractions
+        .iter()
+        .enumerate()
+        .map(|(i, f)| {
+            let skewed = r.f64() < skew_fraction;
+            StageSpec {
+                phase: StagePhase::Generic,
+                parents: if i == 0 { vec![] } else { vec![i - 1] },
+                is_leaf_input: i == 0,
+                input_bytes: if i == 0 { bytes } else { (bytes / shuffle_shrink).max(1 << 20) },
+                slot_time: slot * f,
+                cost: if skewed {
+                    CostProfile::skewed(0.05, r.range_f64(4.0, 8.0))
+                } else {
+                    CostProfile::uniform()
+                },
+                max_parallelism: None,
+                opcount: [1u32, 4, 16, 64][(r.below(4)) as usize],
+            }
+        })
+        .collect();
+    JobSpec {
+        user,
+        name: format!("g{idx}"),
+        arrival: s_to_us(arrival_s),
+        weight: 1.0,
+        stages,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_paper_shape() {
+        let p = GtraceParams::default();
+        let w = gtrace(42, &p);
+        // 25 users, 5 heavy.
+        assert_eq!(w.users().len() as u32, p.users);
+        let heavy: Vec<_> = w
+            .user_class
+            .iter()
+            .filter(|(_, c)| **c == UserClass::Heavy)
+            .collect();
+        assert_eq!(heavy.len() as u32, p.heavy_users);
+        // Heavy users >90% of work.
+        let heavy_work: f64 = w
+            .jobs
+            .iter()
+            .filter(|j| w.user_class[&j.user] == UserClass::Heavy)
+            .map(|j| j.slot_time())
+            .sum();
+        let frac = heavy_work / w.total_slot_time();
+        assert!(frac > 0.9, "heavy fraction {frac}");
+        // Utilization ≈ target.
+        let util = w.utilization(p.cores, p.window_s);
+        assert!((util - p.target_utilization).abs() < 0.02, "util {util}");
+        // Majority of users submit only infrequent small jobs.
+        let light_jobs = w
+            .jobs
+            .iter()
+            .filter(|j| w.user_class[&j.user] == UserClass::Light)
+            .count();
+        assert!(light_jobs >= 20);
+    }
+
+    #[test]
+    fn filter_removes_tail() {
+        let mut p = GtraceParams::default();
+        p.filter_median_mult = 10.0;
+        let w = gtrace(7, &p);
+        let slots: Vec<f64> = w.jobs.iter().map(|j| j.slot_time()).collect();
+        let med = crate::util::stats::median(&slots);
+        // After rescaling the ratio max/median can exceed the filter
+        // slightly (heavy rebalancing), but the extreme tail is gone.
+        let max = slots.iter().cloned().fold(0.0, f64::max);
+        assert!(max / med < 120.0, "max/med {}", max / med);
+    }
+
+    #[test]
+    fn deterministic() {
+        let p = GtraceParams::default();
+        let a = gtrace(9, &p);
+        let b = gtrace(9, &p);
+        let key = |w: &Workload| {
+            w.jobs
+                .iter()
+                .map(|j| (j.user, j.arrival, j.stages.len()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(key(&a), key(&b));
+    }
+
+    #[test]
+    fn stage_chains_valid() {
+        let w = gtrace(3, &GtraceParams::default());
+        for j in &w.jobs {
+            j.validate().unwrap();
+            assert!(j.stages[0].is_leaf_input);
+            assert!((1..=3).contains(&j.stages.len()));
+        }
+    }
+}

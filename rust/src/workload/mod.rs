@@ -1,0 +1,92 @@
+//! Workloads of the paper's evaluation (§5.2, §5.3).
+//!
+//! * [`scenarios`] — the two micro-benchmark scenarios built with industry
+//!   input: (1) infrequent + frequent users, (2) multiple frequent users.
+//! * [`gtrace`] — the Google-trace-shaped macro workload (25 users, 5
+//!   heavy users >90 % of work, ≥100 % utilization over a 500 s window),
+//!   including the paper's filtering and utilization-scaling pipeline.
+//! * [`tracefile`] — a simple CSV trace loader so a real WTA export can be
+//!   dropped in.
+
+pub mod gtrace;
+pub mod scenarios;
+pub mod tracefile;
+
+use std::collections::HashMap;
+
+use crate::core::job::JobSpec;
+use crate::UserId;
+
+/// User behaviour class, used by the metrics layer to split the paper's
+/// table columns (Freq./Infreq. in scenario 1; heavy/light in the macro).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UserClass {
+    Frequent,
+    Infrequent,
+    Heavy,
+    Light,
+}
+
+/// A named job timeline plus per-user classification.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub name: String,
+    pub jobs: Vec<JobSpec>,
+    pub user_class: HashMap<UserId, UserClass>,
+}
+
+impl Workload {
+    /// Total sequential work (core-seconds).
+    pub fn total_slot_time(&self) -> f64 {
+        self.jobs.iter().map(|j| j.slot_time()).sum()
+    }
+
+    /// Timeline span in seconds (last arrival).
+    pub fn span_s(&self) -> f64 {
+        crate::us_to_s(self.jobs.iter().map(|j| j.arrival).max().unwrap_or(0))
+    }
+
+    /// Theoretical utilization: work / (cores × window).
+    pub fn utilization(&self, cores: u32, window_s: f64) -> f64 {
+        self.total_slot_time() / (cores as f64 * window_s)
+    }
+
+    pub fn users(&self) -> Vec<UserId> {
+        let mut u: Vec<UserId> = self.user_class.keys().copied().collect();
+        u.sort();
+        u
+    }
+}
+
+/// The micro-benchmark job sizes (§5.2): idle-system response times of
+/// 0.90 s (tiny) and 2.25 s (short) on the 32-core testbed correspond to
+/// these sequential slot-times.
+pub const TINY_COMPUTE_SLOT: f64 = 24.0;
+pub const SHORT_COMPUTE_SLOT: f64 = 64.0;
+
+/// Paper dataset size (752 MB) — drives size-based partitioning.
+pub const DATASET_BYTES: u64 = 752 << 20;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::job::JobSpec;
+
+    #[test]
+    fn workload_aggregates() {
+        let w = Workload {
+            name: "t".into(),
+            jobs: vec![
+                JobSpec::three_phase(1, "a", 0, 1.0, 1 << 20, 4, None),
+                JobSpec::three_phase(2, "b", 2_000_000, 2.0, 1 << 20, 4, None),
+            ],
+            user_class: [(1, UserClass::Frequent), (2, UserClass::Infrequent)]
+                .into_iter()
+                .collect(),
+        };
+        assert!(w.total_slot_time() > 3.0);
+        assert_eq!(w.span_s(), 2.0);
+        assert_eq!(w.users(), vec![1, 2]);
+        assert!(w.utilization(32, 10.0) > 0.0);
+    }
+}

@@ -1,0 +1,186 @@
+//! The micro-benchmark scenarios (§5.2.1), constructed with the paper's
+//! parameters on the 32-core testbed.
+//!
+//! Job sizes follow §5.2: *tiny* and *short* jobs with idle-system
+//! response times of ≈0.90 s and ≈2.25 s respectively; each analytics job
+//! is a 3-phase load → compute → collect chain over its own copy of the
+//! dataset.
+
+use super::{UserClass, Workload, DATASET_BYTES, SHORT_COMPUTE_SLOT, TINY_COMPUTE_SLOT};
+use crate::core::job::{CostProfile, JobSpec};
+use crate::s_to_us;
+use crate::util::Rng;
+use std::collections::HashMap;
+
+/// Make one micro-benchmark job. `kind` ∈ {"tiny", "short"}.
+pub fn micro_job(user: u32, kind: &str, arrival_s: f64, skew: Option<CostProfile>) -> JobSpec {
+    let (slot, opcount) = match kind {
+        "tiny" => (TINY_COMPUTE_SLOT, 4),
+        "short" => (SHORT_COMPUTE_SLOT, 16),
+        other => panic!("unknown micro job kind '{other}'"),
+    };
+    JobSpec::three_phase(user, kind, s_to_us(arrival_s), slot, DATASET_BYTES, opcount, skew)
+}
+
+/// **Scenario 1 — infrequent and frequent users** (§5.2.1).
+///
+/// Users 1–2 are *infrequent*: Poisson job submissions (mean gap
+/// `poisson_gap_s`), 70 % tiny / 30 % short. Users 3–4 are *frequent*:
+/// every 30 s each submits a burst of `burst` short jobs, which together
+/// oversubscribe the 32-core cluster and build a backlog.
+pub fn scenario1(seed: u64, duration_s: f64, burst: usize, poisson_gap_s: f64) -> Workload {
+    let mut rng = Rng::new(seed);
+    let mut jobs = Vec::new();
+    let mut user_class = HashMap::new();
+
+    // Infrequent users (Poisson arrivals, like the paper).
+    for user in 1..=2u32 {
+        user_class.insert(user, UserClass::Infrequent);
+        let mut r = rng.fork(user as u64);
+        let mut t = r.exp(1.0 / poisson_gap_s);
+        while t < duration_s {
+            let kind = if r.f64() < 0.7 { "tiny" } else { "short" };
+            jobs.push(micro_job(user, kind, t, None));
+            t += r.exp(1.0 / poisson_gap_s);
+        }
+    }
+
+    // Frequent users (synchronized 30 s burst cycles; tiny start offsets
+    // keep arrival order deterministic but overlapping, as in §5.2.1).
+    for user in 3..=4u32 {
+        user_class.insert(user, UserClass::Frequent);
+        let offset = (user - 3) as f64 * 0.050;
+        let mut cycle = 0.0;
+        while cycle < duration_s {
+            for b in 0..burst {
+                jobs.push(micro_job(user, "short", cycle + offset + b as f64 * 0.010, None));
+            }
+            cycle += 30.0;
+        }
+    }
+
+    Workload {
+        name: "scenario1".into(),
+        jobs,
+        user_class,
+    }
+}
+
+/// Scenario 1 with the paper's defaults: 300 s, bursts of 6 short jobs,
+/// infrequent users averaging one job per 40 s.
+pub fn scenario1_default(seed: u64) -> Workload {
+    scenario1(seed, 300.0, 6, 40.0)
+}
+
+/// **Scenario 2 — multiple frequent users** (§5.2.1).
+///
+/// Four users each submit `jobs_per_user` tiny jobs at once, with
+/// deterministic per-user start delays (`stagger_s` apart) so the user
+/// arrival order is consistent across runs.
+pub fn scenario2(seed: u64, jobs_per_user: usize, stagger_s: f64) -> Workload {
+    let _ = seed; // fully deterministic; seed kept for API symmetry
+    let mut jobs = Vec::new();
+    let mut user_class = HashMap::new();
+    for user in 1..=4u32 {
+        user_class.insert(user, UserClass::Frequent);
+        let start = (user - 1) as f64 * stagger_s;
+        for b in 0..jobs_per_user {
+            // sub-ms stagger within the burst keeps submission order
+            // deterministic without affecting the scenario.
+            jobs.push(micro_job(user, "tiny", start + b as f64 * 0.001, None));
+        }
+    }
+    Workload {
+        name: "scenario2".into(),
+        jobs,
+        user_class,
+    }
+}
+
+/// Scenario 2 with the paper-scale burst: 20 tiny jobs/user (≈60 s of
+/// work on 32 cores), users staggered 5 s apart.
+pub fn scenario2_default(seed: u64) -> Workload {
+    scenario2(seed, 20, 5.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario1_shape() {
+        let w = scenario1_default(42);
+        // 2 infrequent + 2 frequent users.
+        assert_eq!(w.users().len(), 4);
+        let freq: Vec<_> = w
+            .user_class
+            .iter()
+            .filter(|(_, c)| **c == UserClass::Frequent)
+            .collect();
+        assert_eq!(freq.len(), 2);
+        // Frequent users dominate the workload.
+        let freq_work: f64 = w
+            .jobs
+            .iter()
+            .filter(|j| w.user_class[&j.user] == UserClass::Frequent)
+            .map(|j| j.slot_time())
+            .sum();
+        assert!(freq_work / w.total_slot_time() > 0.8);
+        // Oversubscribed: >100% of 32 cores over 300 s + drain time.
+        assert!(w.utilization(32, 330.0) > 0.7, "util {}", w.utilization(32, 330.0));
+        // 10 burst cycles × 2 users × 6 jobs = 120 short jobs minimum.
+        assert!(w.jobs.len() >= 120);
+    }
+
+    #[test]
+    fn scenario1_deterministic_per_seed() {
+        let a = scenario1_default(7);
+        let b = scenario1_default(7);
+        let c = scenario1_default(8);
+        let key = |w: &Workload| {
+            w.jobs
+                .iter()
+                .map(|j| (j.user, j.arrival, j.name.clone()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(key(&a), key(&b));
+        assert_ne!(key(&a), key(&c));
+    }
+
+    #[test]
+    fn scenario2_shape() {
+        let w = scenario2_default(1);
+        assert_eq!(w.jobs.len(), 80);
+        assert_eq!(w.users().len(), 4);
+        // Start delays order the users.
+        let first_arrival = |u: u32| {
+            w.jobs
+                .iter()
+                .filter(|j| j.user == u)
+                .map(|j| j.arrival)
+                .min()
+                .unwrap()
+        };
+        assert!(first_arrival(1) < first_arrival(2));
+        assert!(first_arrival(3) < first_arrival(4));
+        // All tiny.
+        assert!(w.jobs.iter().all(|j| j.name == "tiny"));
+    }
+
+    #[test]
+    fn micro_job_idle_rts_calibrated() {
+        // Validate the §5.2 calibration: tiny ≈ 0.90 s, short ≈ 2.25 s on
+        // the idle 32-core cluster with default partitioning.
+        let cfg = crate::config::Config::default();
+        let tiny = crate::sim::idle_response_time(&cfg, &micro_job(1, "tiny", 0.0, None));
+        let short = crate::sim::idle_response_time(&cfg, &micro_job(1, "short", 0.0, None));
+        assert!((tiny - 0.90).abs() < 0.15, "tiny idle RT {tiny}");
+        assert!((short - 2.25).abs() < 0.30, "short idle RT {short}");
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown micro job kind")]
+    fn micro_job_rejects_unknown_kind() {
+        micro_job(1, "huge", 0.0, None);
+    }
+}

@@ -1,0 +1,140 @@
+//! CSV trace loader — drop-in path for a real WTA (Workflow Trace
+//! Archive) export so the macro benchmark can run on the actual Google
+//! trace instead of the shaped generator.
+//!
+//! Format (header required):
+//! ```text
+//! job,user,arrival_s,slot_s,stages,heavy
+//! g0,3,12.5,140.0,2,1
+//! ```
+//! `stages` ∈ 1..=8 builds a linear chain; `heavy` ∈ {0,1} sets the user
+//! class.
+
+use super::{UserClass, Workload};
+use crate::core::job::{CostProfile, JobSpec, StagePhase, StageSpec};
+use crate::s_to_us;
+use std::collections::HashMap;
+
+pub fn load_csv(text: &str) -> Result<Workload, String> {
+    let mut lines = text.lines().enumerate();
+    let (_, header) = lines.next().ok_or("empty trace")?;
+    let cols: Vec<&str> = header.trim().split(',').map(|c| c.trim()).collect();
+    let expect = ["job", "user", "arrival_s", "slot_s", "stages", "heavy"];
+    if cols != expect {
+        return Err(format!("bad header {cols:?}, expected {expect:?}"));
+    }
+
+    let mut jobs = Vec::new();
+    let mut user_class = HashMap::new();
+    for (ln, raw) in lines {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let f: Vec<&str> = line.split(',').map(|c| c.trim()).collect();
+        if f.len() != 6 {
+            return Err(format!("line {}: expected 6 fields", ln + 1));
+        }
+        let name = f[0].to_string();
+        let user: u32 = f[1].parse().map_err(|_| format!("line {}: bad user", ln + 1))?;
+        let arrival: f64 = f[2]
+            .parse()
+            .map_err(|_| format!("line {}: bad arrival_s", ln + 1))?;
+        let slot: f64 = f[3]
+            .parse()
+            .map_err(|_| format!("line {}: bad slot_s", ln + 1))?;
+        let nstages: usize = f[4]
+            .parse()
+            .map_err(|_| format!("line {}: bad stages", ln + 1))?;
+        let heavy = f[5] == "1";
+        if !(1..=8).contains(&nstages) {
+            return Err(format!("line {}: stages out of range", ln + 1));
+        }
+        if slot <= 0.0 || arrival < 0.0 {
+            return Err(format!("line {}: nonpositive slot or negative arrival", ln + 1));
+        }
+        user_class.insert(
+            user,
+            if heavy { UserClass::Heavy } else { UserClass::Light },
+        );
+        let per = slot / nstages as f64;
+        let bytes = (((slot * 8.0) as u64) << 20).max(32 << 20);
+        let stages: Vec<StageSpec> = (0..nstages)
+            .map(|i| StageSpec {
+                phase: StagePhase::Generic,
+                parents: if i == 0 { vec![] } else { vec![i - 1] },
+                is_leaf_input: i == 0,
+                input_bytes: bytes,
+                slot_time: per,
+                cost: CostProfile::uniform(),
+                max_parallelism: None,
+                opcount: 4,
+            })
+            .collect();
+        jobs.push(JobSpec {
+            user,
+            name,
+            arrival: s_to_us(arrival),
+            weight: 1.0,
+            stages,
+        });
+    }
+    if jobs.is_empty() {
+        return Err("trace has no jobs".into());
+    }
+    Ok(Workload {
+        name: "tracefile".into(),
+        jobs,
+        user_class,
+    })
+}
+
+pub fn load_csv_file(path: &str) -> Result<Workload, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    load_csv(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+job,user,arrival_s,slot_s,stages,heavy
+g0,1,0.0,100.0,2,1
+g1,2,5.5,10.0,1,0
+# comment line
+g2,1,9.0,40.0,3,1
+";
+
+    #[test]
+    fn parses_sample() {
+        let w = load_csv(SAMPLE).unwrap();
+        assert_eq!(w.jobs.len(), 3);
+        assert_eq!(w.user_class[&1], UserClass::Heavy);
+        assert_eq!(w.user_class[&2], UserClass::Light);
+        assert_eq!(w.jobs[2].stages.len(), 3);
+        assert!((w.jobs[0].slot_time() - 100.0).abs() < 1e-9);
+        w.jobs.iter().for_each(|j| j.validate().unwrap());
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(load_csv("").is_err());
+        assert!(load_csv("x,y\n").is_err());
+        assert!(load_csv("job,user,arrival_s,slot_s,stages,heavy\n").is_err());
+        assert!(load_csv("job,user,arrival_s,slot_s,stages,heavy\na,1,0,0,1,0\n").is_err());
+        assert!(load_csv("job,user,arrival_s,slot_s,stages,heavy\na,1,0,5,9,0\n").is_err());
+        assert!(load_csv("job,user,arrival_s,slot_s,stages,heavy\na,x,0,5,1,0\n").is_err());
+    }
+
+    #[test]
+    fn roundtrip_via_file() {
+        let dir = std::env::temp_dir().join("uwfq_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.csv");
+        std::fs::write(&p, SAMPLE).unwrap();
+        let w = load_csv_file(p.to_str().unwrap()).unwrap();
+        assert_eq!(w.jobs.len(), 3);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

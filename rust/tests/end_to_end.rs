@@ -1,0 +1,84 @@
+//! Integration: the full three-layer stack composes — workload → UWFQ
+//! scheduling → real thread-per-core executors running the AOT-compiled
+//! Pallas analytics kernel via PJRT → aggregated results.
+//!
+//! Requires `make artifacts` (skips if missing).
+
+use std::path::Path;
+
+use uwfq::config::Config;
+use uwfq::exec::run_real;
+use uwfq::sched::PolicyKind;
+use uwfq::workload::scenarios::micro_job;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = uwfq::runtime::ArtifactStore::default_dir();
+    if !Path::new(&dir).join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(dir)
+}
+
+#[test]
+fn real_backend_runs_multi_user_workload() {
+    let Some(dir) = artifacts() else { return };
+    let cfg = Config {
+        cores: 2,
+        policy: PolicyKind::Uwfq,
+        ..Config::default()
+    };
+    // Two users, three jobs, compressed timeline.
+    let jobs = vec![
+        micro_job(1, "tiny", 0.0, None),
+        micro_job(2, "tiny", 0.1, None),
+        micro_job(1, "short", 0.2, None),
+    ];
+    let report = run_real(cfg, jobs, &dir, 0.02).expect("real run succeeds");
+    assert_eq!(report.completed.len(), 3);
+    assert!(report.makespan_s > 0.0);
+    // Every job produced a final [mean; var] result with finite values.
+    assert_eq!(report.results.len(), 3);
+    for (job, out) in &report.results {
+        assert_eq!(out.len(), 16, "job {job} output shape");
+        assert!(out.iter().all(|v| v.is_finite()), "job {job} finite");
+        // Variance row non-negative.
+        assert!(out[8..].iter().all(|&v| v >= -1e-3), "job {job} var >= 0");
+    }
+    // Task wall times were measured for at least one variant.
+    assert!(!report.task_wall.is_empty());
+}
+
+#[test]
+fn real_backend_respects_policy_ordering() {
+    let Some(dir) = artifacts() else { return };
+    // FIFO: first submitted job must finish first when both arrive
+    // together on a single core (no preemption, strict order).
+    let cfg = Config {
+        cores: 1,
+        policy: PolicyKind::Fifo,
+        ..Config::default()
+    };
+    let jobs = vec![
+        micro_job(1, "tiny", 0.0, None),
+        micro_job(2, "tiny", 0.001, None),
+    ];
+    let report = run_real(cfg, jobs, &dir, 0.01).expect("real run succeeds");
+    let first = report.completed.iter().find(|c| c.user == 1).unwrap();
+    let second = report.completed.iter().find(|c| c.user == 2).unwrap();
+    assert!(
+        first.finish <= second.finish,
+        "FIFO must finish user 1 first"
+    );
+}
+
+#[test]
+fn real_backend_errors_on_missing_artifacts() {
+    let cfg = Config {
+        cores: 1,
+        ..Config::default()
+    };
+    let jobs = vec![micro_job(1, "tiny", 0.0, None)];
+    let err = run_real(cfg, jobs, Path::new("/nonexistent/artifacts"), 1.0);
+    assert!(err.is_err());
+}

@@ -1,0 +1,145 @@
+//! Failure/perturbation injection: estimator error (§6.4 robustness),
+//! grace-period dynamics (§4.2), degenerate workloads, and hostile
+//! configurations. The system must stay correct (all jobs complete, no
+//! panics) and the paper's robustness claim must hold in shape.
+
+use uwfq::config::Config;
+use uwfq::core::job::{CostProfile, JobSpec};
+use uwfq::partition::SchemeKind;
+use uwfq::sched::PolicyKind;
+use uwfq::sim;
+use uwfq::util::propkit;
+use uwfq::workload::scenarios;
+
+#[test]
+fn uwfq_robust_to_estimator_error() {
+    // §6.4: virtual-time scheduling is robust to inaccurate runtime
+    // predictions. With σ=0.5 lognormal error (≈ ±65% typical), mean RT
+    // should degrade by at most ~50% vs the perfect oracle.
+    let w = scenarios::scenario1(7, 120.0, 4, 30.0);
+    let mut exact = Config::default().with_policy(PolicyKind::Uwfq);
+    exact.seed = 7;
+    let mut noisy = exact.clone();
+    noisy.estimator_sigma = 0.5;
+
+    let m_exact = uwfq::bench::run_one(&exact, &w);
+    let m_noisy = uwfq::bench::run_one(&noisy, &w);
+    assert_eq!(m_exact.outcomes.len(), m_noisy.outcomes.len());
+    assert!(
+        m_noisy.mean_rt() < m_exact.mean_rt() * 1.5,
+        "noisy {} vs exact {}",
+        m_noisy.mean_rt(),
+        m_exact.mean_rt()
+    );
+}
+
+#[test]
+fn runtime_partitioning_robust_to_estimator_error() {
+    // Partition counts come from estimates; error changes granularity but
+    // must not break completion or blow up response times.
+    let w = scenarios::scenario2(1, 8, 1.0);
+    for sigma in [0.0, 0.3, 0.8] {
+        let mut cfg = Config::default()
+            .with_policy(PolicyKind::Uwfq)
+            .with_scheme(SchemeKind::Runtime);
+        cfg.estimator_sigma = sigma;
+        let m = uwfq::bench::run_one(&cfg, &w);
+        assert_eq!(m.outcomes.len(), 32, "sigma={sigma}");
+        assert!(m.mean_rt().is_finite());
+    }
+}
+
+#[test]
+fn grace_period_extremes_are_safe() {
+    // Zero grace (users always re-enter fresh) and huge grace (users are
+    // always revived) must both complete every job.
+    let w = scenarios::scenario1(11, 90.0, 3, 20.0);
+    for grace in [0.0, 2.0, 1e6] {
+        let mut cfg = Config::default().with_policy(PolicyKind::Uwfq);
+        cfg.grace_rsec = grace;
+        let m = uwfq::bench::run_one(&cfg, &w);
+        assert_eq!(m.outcomes.len(), w.jobs.len(), "grace={grace}");
+    }
+}
+
+#[test]
+fn degenerate_workloads() {
+    let cfg = Config::default().with_cores(4);
+    // Single zero-ish work job.
+    let tiny = JobSpec::three_phase(1, "z", 0, 1e-6, 1, 1, None);
+    let rep = sim::simulate(cfg.clone(), vec![tiny]);
+    assert_eq!(rep.completed.len(), 1);
+
+    // Extreme skew: 99% of cost in 1% of data.
+    let skew = CostProfile::skewed(0.01, 10_000.0);
+    let j = JobSpec::three_phase(1, "s", 0, 10.0, 256 << 20, 4, Some(skew));
+    for scheme in [SchemeKind::Size, SchemeKind::Runtime] {
+        let rep = sim::simulate(cfg.clone().with_scheme(scheme), vec![j.clone()]);
+        assert_eq!(rep.completed.len(), 1);
+    }
+
+    // Many users, one job each, simultaneous arrival.
+    let jobs: Vec<JobSpec> = (0..50)
+        .map(|i| JobSpec::three_phase(i, &format!("u{i}"), 0, 1.0, 64 << 20, 4, None))
+        .collect();
+    for policy in PolicyKind::ALL {
+        let rep = sim::simulate(cfg.clone().with_policy(policy), jobs.clone());
+        assert_eq!(rep.completed.len(), 50, "{}", policy.name());
+    }
+}
+
+#[test]
+fn single_core_cluster() {
+    let cfg = Config::default().with_cores(1);
+    let jobs: Vec<JobSpec> = (0..5)
+        .map(|i| JobSpec::three_phase(1 + i % 2, &format!("j{i}"), i as u64 * 100_000, 0.5, 32 << 20, 4, None))
+        .collect();
+    for policy in PolicyKind::ALL {
+        let rep = sim::simulate(cfg.clone().with_policy(policy), jobs.clone());
+        assert_eq!(rep.completed.len(), 5, "{}", policy.name());
+    }
+}
+
+#[test]
+fn hostile_atr_values() {
+    // Very small ATR explodes task counts (bounded by overhead economics,
+    // but must not hang); very large ATR degenerates to one partition.
+    let j = JobSpec::three_phase(1, "j", 0, 5.0, 256 << 20, 4, None);
+    for atr in [0.001, 0.05, 100.0] {
+        let mut cfg = Config::default()
+            .with_cores(4)
+            .with_scheme(SchemeKind::Runtime);
+        cfg.atr = atr;
+        let rep = sim::simulate(cfg, vec![j.clone()]);
+        assert_eq!(rep.completed.len(), 1, "atr={atr}");
+    }
+}
+
+#[test]
+fn adversarial_arrival_patterns_complete() {
+    propkit::check("adversarial arrivals", 0xFA11, 8, |r| {
+        let mut cfg = Config::default().with_cores(4);
+        cfg.task_overhead = 0.001;
+        let mut jobs = Vec::new();
+        // Clustered arrivals with duplicate timestamps and random users.
+        for i in 0..25 {
+            let t = (r.below(5) * 1_000_000) as u64; // 0..5s, many ties
+            jobs.push(JobSpec::three_phase(
+                r.below(6) as u32,
+                &format!("a{i}"),
+                t,
+                0.1 + r.f64() * 2.0,
+                (1 + r.below(512)) << 20,
+                4,
+                None,
+            ));
+        }
+        for policy in PolicyKind::ALL {
+            let rep = sim::simulate(cfg.clone().with_policy(policy), jobs.clone());
+            if rep.completed.len() != 25 {
+                return Err(format!("{} lost jobs", policy.name()));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,147 @@
+//! Integration: AOT artifacts load, compile and execute on the PJRT CPU
+//! client, and the numerics match the pure-Rust reference computation of
+//! the same analytics (which itself mirrors python's ref.py oracle).
+//!
+//! Requires `make artifacts` (skips with a message if missing).
+
+use std::path::Path;
+
+use uwfq::data::{TripTable, BLOCK_COLS, BLOCK_ROWS};
+use uwfq::runtime::ArtifactStore;
+
+fn store() -> Option<ArtifactStore> {
+    let dir = ArtifactStore::default_dir();
+    if !Path::new(&dir).join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(ArtifactStore::load(&dir).expect("artifact store loads"))
+}
+
+/// Rust-side mirror of python/compile/kernels/ref.py (normalize + k-op
+/// chain + [sum; sumsq]).
+fn ref_compute(block: &[f32], k: u32) -> Vec<f32> {
+    let (rows, cols) = (BLOCK_ROWS, BLOCK_COLS);
+    // normalize per column
+    let mut mean = vec![0f64; cols];
+    let mut std = vec![0f64; cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            mean[c] += block[r * cols + c] as f64;
+        }
+    }
+    mean.iter_mut().for_each(|m| *m /= rows as f64);
+    for r in 0..rows {
+        for c in 0..cols {
+            let d = block[r * cols + c] as f64 - mean[c];
+            std[c] += d * d;
+        }
+    }
+    std.iter_mut().for_each(|s| *s = (*s / rows as f64).sqrt());
+    // chain + aggregate
+    let mut out = vec![0f64; 2 * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            let c1 = 0.75 + 0.05 * c as f64;
+            let c0 = 0.01 * (c as f64 - cols as f64 / 2.0);
+            let mut y = (block[r * cols + c] as f64 - mean[c]) / (std[c] + 1e-6);
+            for _ in 0..k {
+                y = (y * c1 + c0).tanh();
+            }
+            out[c] += y;
+            out[cols + c] += y * y;
+        }
+    }
+    out.into_iter().map(|v| v as f32).collect()
+}
+
+#[test]
+fn compute_artifact_matches_reference() {
+    let Some(store) = store() else { return };
+    let table = TripTable::new(123, 2);
+    let block = table.block(0);
+    for k in store.variants() {
+        let got = store.run_compute_block(k, &block).unwrap();
+        let want = ref_compute(&block, k);
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            let tol = 1e-2_f32.max(w.abs() * 1e-3);
+            assert!(
+                (g - w).abs() < tol,
+                "k={k} idx={i}: got {g}, want {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn aggregate_artifact_folds_partials() {
+    let Some(store) = store() else { return };
+    let table = TripTable::new(7, 3);
+    let cols = store.manifest.cols;
+    let mut partials = Vec::new();
+    let mut sum = vec![0f64; 2 * cols];
+    for b in 0..3u64 {
+        let p = store.run_compute_block(4, &table.block(b)).unwrap();
+        for (i, v) in p.iter().enumerate() {
+            sum[i] += *v as f64;
+        }
+        partials.push((p, BLOCK_ROWS as f32));
+    }
+    let out = store.run_aggregate(&partials).unwrap();
+    let total = 3.0 * BLOCK_ROWS as f64;
+    for c in 0..cols {
+        let mean = sum[c] / total;
+        let var = sum[cols + c] / total - mean * mean;
+        assert!((out[c] as f64 - mean).abs() < 1e-3, "mean col {c}");
+        assert!((out[cols + c] as f64 - var).abs() < 1e-3, "var col {c}");
+    }
+}
+
+#[test]
+fn aggregate_chunks_beyond_fanin() {
+    let Some(store) = store() else { return };
+    let cols = store.manifest.cols;
+    let n = store.manifest.agg_fanin + 5; // forces chunked folding
+    let partials: Vec<(Vec<f32>, f32)> = (0..n)
+        .map(|i| {
+            let mut p = vec![0f32; 2 * cols];
+            for c in 0..cols {
+                p[c] = (i + 1) as f32; // sum
+                p[cols + c] = (i + 1) as f32 * 2.0; // sumsq
+            }
+            (p, 10.0)
+        })
+        .collect();
+    let out = store.run_aggregate(&partials).unwrap();
+    let total = 10.0 * n as f64;
+    let sum: f64 = (1..=n).map(|i| i as f64).sum();
+    let sumsq: f64 = 2.0 * sum;
+    let mean = sum / total;
+    let var = sumsq / total - mean * mean;
+    for c in 0..cols {
+        assert!((out[c] as f64 - mean).abs() < 1e-4, "mean col {c}: {}", out[c]);
+        assert!(
+            (out[cols + c] as f64 - var).abs() < 1e-3,
+            "var col {c}: {}",
+            out[cols + c]
+        );
+    }
+}
+
+#[test]
+fn variants_match_manifest() {
+    let Some(store) = store() else { return };
+    assert_eq!(store.variants(), vec![1, 4, 16, 64]);
+    assert_eq!(store.manifest.block_rows, BLOCK_ROWS);
+    assert_eq!(store.manifest.cols, BLOCK_COLS);
+    assert!(store.compute(3).is_err()); // only compiled variants
+    assert_eq!(store.platform(), "cpu");
+}
+
+#[test]
+fn rejects_wrong_block_size() {
+    let Some(store) = store() else { return };
+    assert!(store.run_compute_block(4, &[0.0; 8]).is_err());
+    assert!(store.run_aggregate(&[]).is_err());
+}
