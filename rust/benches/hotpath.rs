@@ -1,20 +1,29 @@
 //! Bench: L3 scheduler hot paths — the per-event costs the paper bounds
 //! to O(log N) (§6.1 virtual time) plus the per-offer selection cost.
-//! Run with `cargo bench --bench hotpath`. These feed EXPERIMENTS.md §Perf.
+//! Run with `cargo bench --bench hotpath`. These feed EXPERIMENTS.md §Perf
+//! and emit `BENCH_hotpath.json` (benchkit JsonSink) so the perf
+//! trajectory is tracked across PRs.
+//!
+//! Scaling cases: `sim_200jobs` (the historical baseline), `burst400` vs
+//! `burst4000` (per-event cost must grow sub-linearly in active-stage
+//! count now that selection is incremental), and `sim_50k` — 50 000 jobs
+//! / 100 users / 64 cores, reporting task-events/s per policy.
+//!
+//! `HOTPATH_QUICK=1` shrinks the large cases for CI smoke runs.
 
 use std::time::Duration;
 
 use uwfq::config::Config;
 use uwfq::core::job::JobSpec;
 use uwfq::sched::vtime::{SingleVtime, TwoLevelVtime};
-use uwfq::sched::{PolicyKind};
+use uwfq::sched::PolicyKind;
 use uwfq::sim;
-use uwfq::util::benchkit::{bench, black_box};
+use uwfq::util::benchkit::{bench, bench_n, black_box, JsonSink};
 use uwfq::util::Rng;
 
 /// Deadline assignment (Algorithm 1 + 2 + 3) cost at a given number of
 /// active users/jobs in the virtual system.
-fn bench_deadline_assignment(users: u64, backlog: usize) {
+fn bench_deadline_assignment(sink: &mut JsonSink, users: u64, backlog: usize) {
     let mut rng = Rng::new(7);
     // Pre-populate.
     let mut vt = TwoLevelVtime::new(32.0);
@@ -25,7 +34,7 @@ fn bench_deadline_assignment(users: u64, backlog: usize) {
         vt.job_arrival(t, rng.below(users) as u32, id, 1.0 + rng.f64() * 100.0, 1.0, 2.0);
         id += 1;
     }
-    bench(
+    let r = bench(
         &format!("hotpath/alg1_job_arrival/u{users}_jobs{backlog}"),
         Duration::from_millis(600),
         || {
@@ -34,89 +43,147 @@ fn bench_deadline_assignment(users: u64, backlog: usize) {
             id += 1;
         },
     );
+    sink.record(&r);
+}
+
+/// One-level virtual time (CFQ stage arrival) at a given backlog — the
+/// regression case for the heap-backed retirement (the seed's sorted-Vec
+/// `remove(0)` was O(n) per retirement).
+fn bench_cfq_arrival(sink: &mut JsonSink, backlog: usize) {
+    let mut v = SingleVtime::new(32.0);
+    let mut rng = Rng::new(3);
+    let mut t = 0.0;
+    let mut id = 0u64;
+    for _ in 0..backlog {
+        t += 0.001;
+        v.arrive(t, id, 1.0 + rng.f64() * 50.0);
+        id += 1;
+    }
+    let r = bench(
+        &format!("hotpath/cfq_stage_arrival/{backlog}_active"),
+        Duration::from_millis(400),
+        || {
+            t += 0.0005;
+            v.arrive(t, id, 10.0);
+            id += 1;
+        },
+    );
+    sink.record(&r);
+}
+
+/// A congested multi-user workload: `n` jobs over `users` users arriving
+/// every `gap_us`.
+fn workload(n: usize, users: u32, gap_us: u64) -> Vec<JobSpec> {
+    (0..n)
+        .map(|i| {
+            JobSpec::three_phase(
+                (i as u32) % users,
+                &format!("j{i}"),
+                (i as u64) * gap_us,
+                2.0,
+                128 << 20,
+                4,
+                None,
+            )
+        })
+        .collect()
+}
+
+/// End-to-end simulator throughput for one policy; records task-events/s.
+fn bench_sim(
+    sink: &mut JsonSink,
+    label: &str,
+    cfg: &Config,
+    jobs: &[JobSpec],
+    policy: PolicyKind,
+    iters: u64,
+) {
+    // Count task events once (one logged probe run).
+    let mut probe = cfg.clone();
+    probe.log_tasks = true;
+    let tasks = sim::simulate(probe.with_policy(policy), jobs.to_vec())
+        .task_log
+        .len();
+    let c = cfg.clone().with_policy(policy);
+    let name = format!("hotpath/{label}/{}", policy.name());
+    let r = bench_n(&name, iters, || {
+        black_box(sim::simulate(c.clone(), jobs.to_vec()));
+    });
+    let ev_per_s = tasks as f64 / r.mean.as_secs_f64();
+    println!("    → {:.2} M task-events/s ({tasks} tasks/run)", ev_per_s / 1e6);
+    sink.record(&r);
+    sink.metric(&format!("{name}/task_events_per_s"), ev_per_s);
 }
 
 fn main() {
-    println!("# L3 hot paths");
+    let quick = std::env::var("HOTPATH_QUICK").is_ok();
+    let mut sink = JsonSink::new();
+    println!("# L3 hot paths{}", if quick { " (quick)" } else { "" });
 
     // Algorithm 1-3: job arrival → deadline assignment, scaling in users
     // and virtual backlog.
     for (users, backlog) in [(4u64, 16usize), (25, 100), (100, 1000), (500, 5000)] {
-        bench_deadline_assignment(users, backlog);
+        bench_deadline_assignment(&mut sink, users, backlog);
     }
 
-    // Classic virtual time (CFQ stage arrival).
-    {
-        let mut v = SingleVtime::new(32.0);
-        let mut rng = Rng::new(3);
-        let mut t = 0.0;
-        let mut id = 0u64;
-        for _ in 0..1000 {
-            t += 0.001;
-            v.arrive(t, id, 1.0 + rng.f64() * 50.0);
-            id += 1;
-        }
-        bench("hotpath/cfq_stage_arrival/1000_active", Duration::from_millis(400), || {
-            t += 0.0005;
-            v.arrive(t, id, 10.0);
-            id += 1;
-        });
-    }
+    // Classic virtual time (CFQ stage arrival), incl. the 10k-entity
+    // regression case for heap-backed retirement.
+    bench_cfq_arrival(&mut sink, 1000);
+    bench_cfq_arrival(&mut sink, 10_000);
 
     // Full simulator throughput: events/second on a congested workload.
     {
         let mut cfg = Config::default();
         cfg.task_overhead = 0.005;
-        let jobs: Vec<JobSpec> = (0..200)
-            .map(|i| {
-                JobSpec::three_phase(
-                    (i % 10) as u32,
-                    &format!("j{i}"),
-                    (i as u64) * 50_000,
-                    2.0,
-                    128 << 20,
-                    4,
-                    None,
-                )
-            })
-            .collect();
-        // Count events once.
-        let mut probe = cfg.clone();
-        probe.log_tasks = true;
-        let rep = sim::simulate(probe.with_policy(PolicyKind::Uwfq), jobs.clone());
-        let tasks = rep.task_log.len();
+        let jobs = workload(200, 10, 50_000);
         for policy in PolicyKind::ALL {
-            let c = cfg.clone().with_policy(policy);
-            let r = bench(
-                &format!("hotpath/sim_200jobs/{}", policy.name()),
-                Duration::from_secs(1),
-                || {
-                    black_box(sim::simulate(c.clone(), jobs.clone()));
-                },
-            );
-            let ev_per_s = tasks as f64 / r.mean.as_secs_f64();
-            println!("    → {:.2} M task-events/s ({tasks} tasks/run)", ev_per_s / 1e6);
+            bench_sim(&mut sink, "sim_200jobs", &cfg, &jobs, policy, 8);
         }
     }
 
-    // Offer-path selection cost at high active-stage counts.
+    // Offer-path selection cost at high active-stage counts: per-event
+    // cost must grow sub-linearly from burst400 to burst4000.
     {
         let mut cfg = Config::default();
         cfg.task_overhead = 0.001;
-        let jobs: Vec<JobSpec> = (0..400)
-            .map(|i| {
-                JobSpec::three_phase((i % 25) as u32, &format!("q{i}"), 0, 1.0, 128 << 20, 4, None)
-            })
-            .collect();
+        let burst = |n: usize| -> Vec<JobSpec> {
+            (0..n)
+                .map(|i| {
+                    JobSpec::three_phase(
+                        (i % 25) as u32,
+                        &format!("q{i}"),
+                        0,
+                        1.0,
+                        128 << 20,
+                        4,
+                        None,
+                    )
+                })
+                .collect()
+        };
         for policy in [PolicyKind::Fair, PolicyKind::Ujf, PolicyKind::Uwfq] {
-            let c = cfg.clone().with_policy(policy);
-            bench(
-                &format!("hotpath/burst400/{}", policy.name()),
-                Duration::from_secs(1),
-                || {
-                    black_box(sim::simulate(c.clone(), jobs.clone()));
-                },
-            );
+            bench_sim(&mut sink, "burst400", &cfg, &burst(400), policy, 4);
         }
+        let big = if quick { 1000 } else { 4000 };
+        for policy in [PolicyKind::Fair, PolicyKind::Ujf, PolicyKind::Uwfq] {
+            bench_sim(&mut sink, &format!("burst{big}"), &cfg, &burst(big), policy, 2);
+        }
+    }
+
+    // Large-scale throughput: 50k jobs / 100 users / 64 cores.
+    {
+        let mut cfg = Config::default().with_cores(64);
+        cfg.task_overhead = 0.005;
+        let n = if quick { 2_000 } else { 50_000 };
+        let jobs = workload(n, 100, 4_000);
+        for policy in PolicyKind::ALL {
+            bench_sim(&mut sink, &format!("sim_{n}jobs_100users_64cores"), &cfg, &jobs, policy, 2);
+        }
+    }
+
+    if let Err(e) = sink.write("BENCH_hotpath.json") {
+        eprintln!("warning: could not write BENCH_hotpath.json: {e}");
+    } else {
+        println!("wrote BENCH_hotpath.json");
     }
 }

@@ -1,0 +1,148 @@
+//! Dense slab arena — the engine's job/stage storage.
+//!
+//! External ids (`JobId`, `StageId`) stay monotone for the lifetime of the
+//! application (records, event logs and policies key on them), while the
+//! engine addresses live state through recycled **slot** indices: O(1)
+//! direct indexing with no hashing on the hot path, and memory bounded by
+//! the peak number of concurrently live entities rather than the total
+//! ever created.
+
+/// A slab of `T` with free-slot recycling. Slots are `u32` indices into a
+/// dense vector; removed slots are pushed on a free list and reused by the
+/// next insert (LIFO, so recently-touched memory is reused first).
+#[derive(Debug)]
+pub struct Slab<T> {
+    slots: Vec<Option<T>>,
+    free: Vec<u32>,
+}
+
+impl<T> Default for Slab<T> {
+    fn default() -> Self {
+        Slab::new()
+    }
+}
+
+impl<T> Slab<T> {
+    pub fn new() -> Self {
+        Slab {
+            slots: Vec::new(),
+            free: Vec::new(),
+        }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Slab {
+            slots: Vec::with_capacity(n),
+            free: Vec::new(),
+        }
+    }
+
+    /// Number of live entries.
+    pub fn len(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    /// Total slots ever allocated (live + free) — grows only with *peak*
+    /// concurrency thanks to free-list recycling.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Insert a value, returning its slot.
+    pub fn insert(&mut self, value: T) -> u32 {
+        match self.free.pop() {
+            Some(slot) => {
+                debug_assert!(self.slots[slot as usize].is_none());
+                self.slots[slot as usize] = Some(value);
+                slot
+            }
+            None => {
+                self.slots.push(Some(value));
+                (self.slots.len() - 1) as u32
+            }
+        }
+    }
+
+    /// Remove and return the value at `slot`. Panics on an empty slot —
+    /// the engine never double-frees.
+    pub fn remove(&mut self, slot: u32) -> T {
+        let v = self.slots[slot as usize]
+            .take()
+            .expect("slab: remove of empty slot");
+        self.free.push(slot);
+        v
+    }
+
+    pub fn get(&self, slot: u32) -> &T {
+        self.slots[slot as usize]
+            .as_ref()
+            .expect("slab: read of empty slot")
+    }
+
+    pub fn get_mut(&mut self, slot: u32) -> &mut T {
+        self.slots[slot as usize]
+            .as_mut()
+            .expect("slab: write of empty slot")
+    }
+
+    /// Live entries with their slots (diagnostics / cold paths only).
+    pub fn iter(&self) -> impl Iterator<Item = (u32, &T)> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|v| (i as u32, v)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut s: Slab<&'static str> = Slab::new();
+        let a = s.insert("a");
+        let b = s.insert("b");
+        assert_eq!(s.len(), 2);
+        assert_eq!(*s.get(a), "a");
+        assert_eq!(*s.get(b), "b");
+        assert_eq!(s.remove(a), "a");
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn slots_are_recycled() {
+        let mut s: Slab<u64> = Slab::new();
+        let a = s.insert(1);
+        let _b = s.insert(2);
+        s.remove(a);
+        let c = s.insert(3);
+        assert_eq!(c, a, "freed slot is reused");
+        assert_eq!(*s.get(c), 3);
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn iter_skips_holes() {
+        let mut s: Slab<u64> = Slab::new();
+        let a = s.insert(10);
+        let b = s.insert(20);
+        let c = s.insert(30);
+        s.remove(b);
+        let live: Vec<(u32, u64)> = s.iter().map(|(i, &v)| (i, v)).collect();
+        assert_eq!(live, vec![(a, 10), (c, 30)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty slot")]
+    fn double_remove_panics() {
+        let mut s: Slab<u64> = Slab::new();
+        let a = s.insert(1);
+        s.remove(a);
+        s.remove(a);
+    }
+}

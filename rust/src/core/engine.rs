@@ -6,9 +6,47 @@
 //! ([`crate::exec`]) both drive this state machine with the same three
 //! entry points: [`SchedCore::submit_job`], [`SchedCore::try_launch`] and
 //! [`SchedCore::task_finished`].
+//!
+//! # Hot-path complexity contract
+//!
+//! Per-event cost is independent of the backlog (active-stage / in-flight
+//! job count), matching the paper's O(log N) bound for UWFQ's virtual-time
+//! machinery (§6.1) and extending it to the whole offer loop:
+//!
+//! * **State** lives in dense slab arenas ([`crate::core::arena::Slab`]):
+//!   jobs and stages are addressed by recycled `u32` slots — O(1) direct
+//!   indexing, no hashing, memory bounded by peak concurrency. External
+//!   ids (`JobId`/`StageId`) stay monotone for records and policies; the
+//!   only id→slot map consulted on the hot path is one `HashMap` lookup
+//!   per *launch* (to resolve the policy's selected `StageId`).
+//! * **Free cores** are a min-heap (lowest index first, preserving the
+//!   seed's scan order): O(log cores) per launch/finish instead of a
+//!   linear scan.
+//! * **The active-stage list** removes by swap-remove with a position
+//!   map (`StageState::active_pos`): O(1) per stage completion instead of
+//!   `retain`'s O(active stages).
+//! * **Selection** is incremental: the engine feeds the policy lifecycle
+//!   notifications ([`crate::sched::Policy::on_task_launched`] /
+//!   `on_task_finished` / `on_stage_finish`) and asks
+//!   [`crate::sched::Policy::select_next`], which answers from the
+//!   policy's own priority index — a lazily-invalidated binary heap
+//!   (FIFO, Fair, CFQ, UWFQ) or a two-level heap (UJF). Per-event cost:
+//!   FIFO/CFQ O(log S); Fair/UWFQ/UJF amortized O(log S) — each engine
+//!   event pushes O(1) heap entries, stale entries are discarded or
+//!   re-keyed when they surface (see [`crate::sched::index`] for the
+//!   invalidation invariants).
+//!
+//! The snapshot-scan path (`StageView` slice + `Policy::select`) is
+//! retained as the executable *specification*: under `debug_assertions`
+//! every incremental pick is cross-checked against it, and
+//! [`SchedCore::force_scan_select`] switches a core to pure scan
+//! selection so differential tests can assert schedule equivalence
+//! (ties included) in release builds too.
 
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
 
+use super::arena::Slab;
 use super::dag::{CompletedJob, JobState};
 use super::job::JobSpec;
 use super::stage::StageState;
@@ -44,11 +82,23 @@ pub struct SchedCore {
     pub policy: Box<dyn Policy>,
     partitioner: Box<dyn PartitionScheme>,
     estimator: Box<dyn RuntimeEstimator>,
-    jobs: HashMap<JobId, JobState>,
-    stages: HashMap<StageId, StageState>,
-    /// Submitted, not-yet-complete stages, in submission order.
-    active_stages: Vec<StageId>,
+    /// Live jobs, slot-addressed (external `JobId`s stay monotone).
+    jobs: Slab<JobState>,
+    /// Live stages, slot-addressed.
+    stages: Slab<StageState>,
+    /// External stage id → arena slot (policy selections come back as
+    /// external ids; one lookup per launch).
+    stage_slots: HashMap<StageId, u32>,
+    /// External job id → arena slot (diagnostics / backends address jobs
+    /// by external id; off the per-event hot path).
+    job_slots: HashMap<JobId, u32>,
+    /// Submitted, not-yet-complete stage slots. Unordered — removal is
+    /// swap-remove via `StageState::active_pos`.
+    active: Vec<u32>,
     cores: Vec<Option<RunningTask>>,
+    /// Idle core indices, lowest first (same pick order as the seed's
+    /// linear scan).
+    free_cores: BinaryHeap<Reverse<usize>>,
     next_job: JobId,
     next_stage: StageId,
     next_task: crate::TaskId,
@@ -57,8 +107,12 @@ pub struct SchedCore {
     pub completed: Vec<CompletedJob>,
     /// Per-task records (only when `cfg.log_tasks`).
     pub task_log: Vec<TaskRecord>,
-    /// Scratch buffer for stage views (reused across launches).
+    /// Scratch buffer for stage views (scan/debug path only).
     views_buf: Vec<StageView>,
+    /// Use the snapshot-scan `Policy::select` path for every selection
+    /// instead of the incremental index — the reference semantics for
+    /// differential tests. Off (incremental) by default.
+    pub force_scan_select: bool,
 }
 
 impl SchedCore {
@@ -74,10 +128,13 @@ impl SchedCore {
             policy,
             partitioner,
             estimator,
-            jobs: HashMap::new(),
-            stages: HashMap::new(),
-            active_stages: Vec::new(),
+            jobs: Slab::new(),
+            stages: Slab::new(),
+            stage_slots: HashMap::new(),
+            job_slots: HashMap::new(),
+            active: Vec::new(),
             cores: vec![None; cores],
+            free_cores: (0..cores).map(Reverse).collect(),
             next_job: 1,
             next_stage: 1,
             next_task: 1,
@@ -85,6 +142,7 @@ impl SchedCore {
             completed: Vec::new(),
             task_log: Vec::new(),
             views_buf: Vec::new(),
+            force_scan_select: false,
         }
     }
 
@@ -131,22 +189,24 @@ impl SchedCore {
 
         let job = JobState::new(id, seq, now, spec);
         let ready = job.ready_stages();
-        self.jobs.insert(id, job);
+        let slot = self.jobs.insert(job);
+        self.job_slots.insert(id, slot);
         for idx in ready {
-            self.submit_stage(now, id, idx);
+            self.submit_stage(now, slot, idx);
         }
         Ok(id)
     }
 
     /// Partition one stage into tasks and hand it to the task scheduler.
-    fn submit_stage(&mut self, now: TimeUs, job_id: JobId, idx: usize) {
-        let job = &self.jobs[&job_id];
-        let spec = job.spec.stages[idx].clone();
+    fn submit_stage(&mut self, now: TimeUs, job_slot: u32, idx: usize) {
+        let job = self.jobs.get(job_slot);
+        let job_id = job.id;
         let user = job.spec.user;
         let arrival_seq = job.arrival_seq;
-        let est = self.estimator.stage_slot_time(&spec);
+        let spec = &job.spec.stages[idx];
+        let est = self.estimator.stage_slot_time(spec);
 
-        let ranges = self.partitioner.partition(&spec, est, self.cfg.cores);
+        let ranges = self.partitioner.partition(spec, est, self.cfg.cores);
         let blocks_total = (spec.input_bytes.div_ceil(BLOCK_BYTES)).max(1);
         let tasks: Vec<TaskSpec> = ranges
             .iter()
@@ -160,6 +220,7 @@ impl SchedCore {
 
         let stage_id = self.next_stage;
         self.next_stage += 1;
+        let pending = tasks.len() as u32;
         let stage = StageState {
             id: stage_id,
             job: job_id,
@@ -172,10 +233,13 @@ impl SchedCore {
             submitted_at: now,
             est_slot_time: est,
             arrival_seq,
+            job_slot,
+            active_pos: self.active.len(),
         };
-        self.stages.insert(stage_id, stage);
-        self.active_stages.push(stage_id);
-        self.jobs.get_mut(&job_id).unwrap().mark_submitted(idx, stage_id);
+        let slot = self.stages.insert(stage);
+        self.active.push(slot);
+        self.stage_slots.insert(stage_id, slot);
+        self.jobs.get_mut(job_slot).mark_submitted(idx, stage_id);
         self.policy.on_stage_submit(
             us_to_s(now),
             &StageMeta {
@@ -183,28 +247,25 @@ impl SchedCore {
                 job: job_id,
                 user,
                 est_slot_time: est,
+                stage_idx: idx,
+                arrival_seq,
+                pending,
             },
         );
     }
 
     // ---- launching ------------------------------------------------------
 
-    /// Fill free cores with the highest-priority pending tasks. Returns the
-    /// launch list for the backend to execute.
-    pub fn try_launch(&mut self, now: TimeUs) -> Vec<Launch> {
-        let mut launches = Vec::new();
-        if self.active_stages.is_empty() || self.cores.iter().all(|c| c.is_some()) {
-            return launches; // nothing to do — keep the congested path free
-        }
-        // Snapshot views of active stages ONCE per offer round; counts of
-        // launched stages are updated in place (hot path: the snapshot is
-        // O(active stages) and a round may fill many cores).
+    /// Snapshot-scan selection over the live stages (the reference
+    /// semantics). O(active stages) — debug cross-check and
+    /// `force_scan_select` only.
+    fn scan_select(&mut self, now_s: f64) -> Option<StageId> {
         let mut views = std::mem::take(&mut self.views_buf);
         views.clear();
-        for &sid in &self.active_stages {
-            let s = &self.stages[&sid];
+        for &slot in &self.active {
+            let s = self.stages.get(slot);
             views.push(StageView {
-                stage: sid,
+                stage: s.id,
                 job: s.job,
                 user: s.user,
                 stage_idx: s.idx,
@@ -213,22 +274,52 @@ impl SchedCore {
                 arrival_seq: s.arrival_seq,
             });
         }
-        loop {
-            let Some(core) = self.cores.iter().position(|c| c.is_none()) else {
+        let picked = self.policy.select(now_s, &views).map(|i| {
+            debug_assert!(views[i].pending > 0, "policy picked stage w/o pending");
+            views[i].stage
+        });
+        self.views_buf = views;
+        picked
+    }
+
+    /// One selection through the configured path, with the debug
+    /// cross-check of incremental vs. reference-scan semantics.
+    fn select_stage(&mut self, now_s: f64) -> Option<StageId> {
+        if self.force_scan_select {
+            return self.scan_select(now_s);
+        }
+        let picked = self.policy.select_next(now_s);
+        #[cfg(debug_assertions)]
+        {
+            let reference = self.scan_select(now_s);
+            debug_assert_eq!(
+                picked,
+                reference,
+                "incremental selection diverged from reference scan ({})",
+                self.policy.name()
+            );
+        }
+        picked
+    }
+
+    /// Fill free cores with the highest-priority pending tasks. Returns the
+    /// launch list for the backend to execute.
+    pub fn try_launch(&mut self, now: TimeUs) -> Vec<Launch> {
+        let mut launches = Vec::new();
+        if self.active.is_empty() || self.free_cores.is_empty() {
+            return launches; // nothing to do — keep the congested path free
+        }
+        let now_s = us_to_s(now);
+        while let Some(&Reverse(core)) = self.free_cores.peek() {
+            let Some(sid) = self.select_stage(now_s) else {
                 break;
             };
-            let picked = self.policy.select(us_to_s(now), &views);
-            let (sid, view_idx) = match picked {
-                Some(i) => {
-                    debug_assert!(views[i].pending > 0, "policy picked stage w/o pending");
-                    (views[i].stage, i)
-                }
-                None => break,
-            };
-            views[view_idx].running += 1;
-            views[view_idx].pending -= 1;
-
-            let stage = self.stages.get_mut(&sid).unwrap();
+            self.free_cores.pop();
+            let &slot = self
+                .stage_slots
+                .get(&sid)
+                .expect("policy selected a live stage");
+            let stage = self.stages.get_mut(slot);
             let task_idx = stage.launch_next();
             let t = &stage.tasks[task_idx];
             let task_id = self.next_task;
@@ -252,10 +343,11 @@ impl SchedCore {
                 task_idx,
                 started: now,
                 finish_at: now + s_to_us(t.runtime_s),
+                stage_slot: slot,
             });
             launches.push(launch);
+            self.policy.on_task_launched(sid);
         }
-        self.views_buf = views;
         launches
     }
 
@@ -267,6 +359,7 @@ impl SchedCore {
         let rt = self.cores[core]
             .take()
             .expect("task_finished on idle core");
+        self.free_cores.push(Reverse(core));
         if self.cfg.log_tasks {
             self.task_log.push(TaskRecord {
                 task: rt.task,
@@ -278,23 +371,31 @@ impl SchedCore {
                 finished: now,
             });
         }
-        let stage = self.stages.get_mut(&rt.stage).unwrap();
+        let stage = self.stages.get_mut(rt.stage_slot);
         stage.task_finished();
-        if !stage.is_complete() {
+        let complete = stage.is_complete();
+        let stage_idx = stage.idx;
+        let job_slot = stage.job_slot;
+        let active_pos = stage.active_pos;
+        self.policy.on_task_finished(rt.stage);
+        if !complete {
             return;
         }
-        // Stage complete: drop from active set, advance the DAG (§2.1.1
-        // step 7).
-        let stage_idx = stage.idx;
-        let job_id = stage.job;
-        self.active_stages.retain(|&s| s != rt.stage);
-        self.stages.remove(&rt.stage);
+        // Stage complete: drop from active set (swap-remove + position
+        // fix-up), advance the DAG (§2.1.1 step 7).
+        self.active.swap_remove(active_pos);
+        if let Some(&moved) = self.active.get(active_pos) {
+            self.stages.get_mut(moved).active_pos = active_pos;
+        }
+        self.stage_slots.remove(&rt.stage);
+        self.stages.remove(rt.stage_slot);
         self.policy.on_stage_finish(rt.stage);
 
-        let job = self.jobs.get_mut(&job_id).unwrap();
+        let job = self.jobs.get_mut(job_slot);
         let newly_ready = job.mark_done(stage_idx);
         if job.is_complete() {
             job.finish_time = Some(now);
+            let job_id = job.id;
             let rec = CompletedJob {
                 job: job_id,
                 user: job.spec.user,
@@ -303,12 +404,13 @@ impl SchedCore {
                 finish: now,
                 slot_time: job.spec.slot_time(),
             };
-            self.jobs.remove(&job_id);
+            self.jobs.remove(job_slot);
+            self.job_slots.remove(&job_id);
             self.completed.push(rec);
             self.policy.on_job_finish(us_to_s(now), job_id);
         } else {
             for idx in newly_ready {
-                self.submit_stage(now, job_id, idx);
+                self.submit_stage(now, job_slot, idx);
             }
         }
     }
@@ -316,7 +418,7 @@ impl SchedCore {
     // ---- introspection --------------------------------------------------
 
     pub fn busy_cores(&self) -> usize {
-        self.cores.iter().filter(|c| c.is_some()).count()
+        self.cores.len() - self.free_cores.len()
     }
 
     pub fn core_state(&self, core: usize) -> Option<&RunningTask> {
@@ -325,17 +427,17 @@ impl SchedCore {
 
     /// No queued work and no running tasks.
     pub fn is_idle(&self) -> bool {
-        self.busy_cores() == 0 && self.active_stages.is_empty()
+        self.busy_cores() == 0 && self.active.is_empty()
     }
 
     pub fn active_stage_count(&self) -> usize {
-        self.active_stages.len()
+        self.active.len()
     }
 
     pub fn pending_task_count(&self) -> u32 {
-        self.active_stages
+        self.active
             .iter()
-            .map(|s| self.stages[s].pending())
+            .map(|&slot| self.stages.get(slot).pending())
             .sum()
     }
 
@@ -345,12 +447,21 @@ impl SchedCore {
 
     /// Tasks of one stage (testing / diagnostics).
     pub fn stage(&self, id: StageId) -> Option<&StageState> {
-        self.stages.get(&id)
+        let &slot = self.stage_slots.get(&id)?;
+        Some(self.stages.get(slot))
     }
 
     pub fn stage_of_job(&self, job: JobId, idx: usize) -> Option<&StageState> {
-        let sid = (*self.jobs.get(&job)?.stage_ids.get(idx)?)?;
-        self.stages.get(&sid)
+        let &slot = self.job_slots.get(&job)?;
+        let sid = (*self.jobs.get(slot).stage_ids.get(idx)?)?;
+        self.stage(sid)
+    }
+
+    /// Arena footprints (slots allocated, live or free) — the memory the
+    /// engine holds is bounded by *peak* concurrency, not total
+    /// throughput. Exposed for the slot-recycling regression test.
+    pub fn arena_capacities(&self) -> (usize, usize) {
+        (self.jobs.capacity(), self.stages.capacity())
     }
 }
 
@@ -398,6 +509,21 @@ mod tests {
         assert_eq!(launches.len(), 4);
         assert_eq!(c.busy_cores(), 4);
         assert!(c.try_launch(0).is_empty()); // no free cores
+    }
+
+    #[test]
+    fn launches_take_lowest_free_core_first() {
+        let mut c = core(4);
+        c.submit_job(0, job(1, 0, 1.0)).unwrap();
+        let launches = c.try_launch(0);
+        let cores_used: Vec<usize> = launches.iter().map(|l| l.core).collect();
+        assert_eq!(cores_used, vec![0, 1, 2, 3]);
+        // Free a middle core: the next launch must land on it.
+        c.submit_job(0, job(2, 0, 1.0)).unwrap();
+        c.task_finished(1000, 2);
+        let launches = c.try_launch(1000);
+        assert_eq!(launches.len(), 1);
+        assert_eq!(launches[0].core, 2);
     }
 
     #[test]
@@ -479,5 +605,70 @@ mod tests {
         let mut bad = job(1, 0, 1.0);
         bad.stages[0].parents = vec![1];
         assert!(c.submit_job(0, bad).is_err());
+    }
+
+    #[test]
+    fn slots_recycle_across_job_churn() {
+        // Run many sequential jobs through a tiny core: the arenas must
+        // not grow with the total number of jobs ever submitted — slot
+        // footprint after 20 rounds must equal the footprint after round
+        // one (peak concurrency is identical every round).
+        let mut c = core(2);
+        let mut cap_after_first = None;
+        for round in 0..20u64 {
+            c.submit_job(round * 10_000_000, job(1, round * 10_000_000, 0.1))
+                .unwrap();
+            let mut now = round * 10_000_000;
+            let mut guard = 0;
+            while !c.is_idle() {
+                c.try_launch(now);
+                let (i, f) = (0..2)
+                    .filter_map(|i| c.core_state(i).map(|r| (i, r.finish_at)))
+                    .min_by_key(|&(_, f)| f)
+                    .unwrap();
+                now = f;
+                c.task_finished(now, i);
+                guard += 1;
+                assert!(guard < 10_000, "no progress");
+            }
+            if cap_after_first.is_none() {
+                cap_after_first = Some(c.arena_capacities());
+            }
+        }
+        assert_eq!(c.completed.len(), 20);
+        assert_eq!(c.in_flight_jobs(), 0);
+        assert_eq!(c.active_stage_count(), 0);
+        assert_eq!(
+            Some(c.arena_capacities()),
+            cap_after_first,
+            "arena slots must be recycled, not leaked, across job churn"
+        );
+    }
+
+    #[test]
+    fn scan_mode_matches_incremental_mode() {
+        // Same workload through both selection paths → identical launches.
+        let drive = |force_scan: bool| -> Vec<(u64, u64)> {
+            let mut c = core(3);
+            c.force_scan_select = force_scan;
+            for u in 0..3 {
+                c.submit_job(0, job(u, 0, 0.4)).unwrap();
+            }
+            let mut now = 0;
+            let mut guard = 0;
+            while !c.is_idle() {
+                c.try_launch(now);
+                let (i, f) = (0..3)
+                    .filter_map(|i| c.core_state(i).map(|r| (i, r.finish_at)))
+                    .min_by_key(|&(_, f)| f)
+                    .unwrap();
+                now = f;
+                c.task_finished(now, i);
+                guard += 1;
+                assert!(guard < 10_000, "no progress");
+            }
+            c.completed.iter().map(|r| (r.job, r.finish)).collect()
+        };
+        assert_eq!(drive(false), drive(true));
     }
 }

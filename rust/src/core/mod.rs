@@ -7,6 +7,7 @@
 //! driven by the discrete-event simulator ([`crate::sim`]) and by the real
 //! PJRT execution backend ([`crate::exec`]).
 
+pub mod arena;
 pub mod dag;
 pub mod engine;
 pub mod eventlog;

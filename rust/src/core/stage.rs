@@ -24,6 +24,12 @@ pub struct StageState {
     /// Arrival sequence of the owning job (cached to keep the per-offer
     /// view construction free of job-map lookups — hot path).
     pub arrival_seq: u64,
+    /// Arena slot of the owning job (engine-internal addressing — no
+    /// id-map lookup on the completion path).
+    pub job_slot: u32,
+    /// Position of this stage in the engine's active list (swap-remove
+    /// bookkeeping; maintained by the engine).
+    pub active_pos: usize,
 }
 
 impl StageState {
@@ -79,6 +85,8 @@ mod tests {
             submitted_at: 0,
             est_slot_time: 0.1 * n as f64,
             arrival_seq: 0,
+            job_slot: 0,
+            active_pos: 0,
         }
     }
 

@@ -30,6 +30,8 @@ pub struct RunningTask {
     /// Simulated completion time (sim backend only; real backend completes
     /// via the worker pool).
     pub finish_at: TimeUs,
+    /// Arena slot of the stage (engine-internal: O(1) completion path).
+    pub stage_slot: u32,
 }
 
 /// Completed-task record for Gantt-style figures and utilization analysis.

@@ -7,7 +7,12 @@
 //! stage re-enters the virtual queue when submitted, which makes CFQ
 //! interleave jobs stage-by-stage (the behaviour the paper highlights in
 //! scenario 2, where CFQ finishes everything "only at the very end").
+//!
+//! Incremental index: a stage's deadline is fixed at submission, so the
+//! [`StageIndex`] key `(deadline, arrival_seq)` is static and selection
+//! is a pure O(log n) heap peek.
 
+use super::index::{F64Key, StageIndex};
 use super::vtime::SingleVtime;
 use super::{select_min_by_key, Policy, StageMeta, StageView};
 use crate::{JobId, StageId};
@@ -19,6 +24,8 @@ pub struct Cfq {
     deadlines: HashMap<StageId, f64>,
     /// Best (earliest) stage deadline seen per job — only for diagnostics.
     job_deadlines: HashMap<JobId, f64>,
+    /// (deadline, arrival_seq) — stage id breaks final ties.
+    index: StageIndex<(F64Key, u64)>,
 }
 
 impl Cfq {
@@ -27,6 +34,7 @@ impl Cfq {
             vt: SingleVtime::new(r_total),
             deadlines: HashMap::new(),
             job_deadlines: HashMap::new(),
+            index: StageIndex::new(),
         }
     }
 }
@@ -39,6 +47,8 @@ impl Policy for Cfq {
     fn on_stage_submit(&mut self, now_s: f64, meta: &StageMeta) {
         let d = self.vt.arrive(now_s, meta.stage, meta.est_slot_time);
         self.deadlines.insert(meta.stage, d);
+        self.index
+            .insert(meta.stage, (F64Key(d), meta.arrival_seq), meta.pending);
         let e = self
             .job_deadlines
             .entry(meta.job)
@@ -46,8 +56,17 @@ impl Policy for Cfq {
         *e = e.min(d);
     }
 
+    fn on_task_launched(&mut self, stage: StageId) {
+        self.index.task_launched(stage);
+    }
+
     fn on_stage_finish(&mut self, stage: StageId) {
         self.deadlines.remove(&stage);
+        self.index.remove(stage);
+    }
+
+    fn select_next(&mut self, _now_s: f64) -> Option<StageId> {
+        self.index.peek()
     }
 
     fn select(&mut self, _now_s: f64, views: &[StageView]) -> Option<usize> {
@@ -78,6 +97,9 @@ mod tests {
             job,
             user: 0,
             est_slot_time: slot,
+            stage_idx: 0,
+            arrival_seq: stage,
+            pending: 1,
         }
     }
 
@@ -100,6 +122,7 @@ mod tests {
         p.on_stage_submit(0.0, &meta(2, 2, 1.0));
         let views = vec![v(1, 0), v(2, 1)];
         assert_eq!(p.select(0.0, &views), Some(1));
+        assert_eq!(p.select_next(0.0), Some(2));
     }
 
     #[test]
@@ -111,6 +134,7 @@ mod tests {
         p.on_stage_submit(1.0, &meta(2, 2, 2.0));
         let views = vec![v(2, 1), v(1, 0)];
         assert_eq!(p.select(1.0, &views), Some(1));
+        assert_eq!(p.select_next(1.0), Some(1));
     }
 
     #[test]
@@ -128,6 +152,7 @@ mod tests {
         // all deadlines equal → ties break by arrival: the flooder's first
         // stage is selected, not the single-job user's.
         assert_eq!(p.select(0.0, &views), Some(0));
+        assert_eq!(p.select_next(0.0), Some(1));
     }
 
     #[test]
@@ -138,6 +163,8 @@ mod tests {
         let views = vec![v(1, 0)];
         // Unknown stages sort last but are still selectable (defensive).
         assert_eq!(p.select(0.0, &views), Some(0));
+        // The incremental index, by contrast, no longer knows the stage.
+        assert_eq!(p.select_next(0.0), None);
     }
 
     #[test]
@@ -146,5 +173,19 @@ mod tests {
         p.on_stage_submit(0.0, &meta(1, 7, 3.0));
         p.on_stage_submit(0.0, &meta(2, 7, 1.0));
         assert!(p.job_deadline(7).unwrap() <= 3.0);
+    }
+
+    #[test]
+    fn launches_drain_pending() {
+        let mut p = Cfq::new(2.0);
+        let mut m = meta(1, 1, 1.0);
+        m.pending = 2;
+        p.on_stage_submit(0.0, &m);
+        p.on_stage_submit(0.0, &meta(2, 2, 5.0));
+        assert_eq!(p.select_next(0.0), Some(1));
+        p.on_task_launched(1);
+        assert_eq!(p.select_next(0.0), Some(1));
+        p.on_task_launched(1);
+        assert_eq!(p.select_next(0.0), Some(2));
     }
 }

@@ -3,21 +3,63 @@
 //! `P_s = N^s_active_task_amount`. Job-level only — no user context, which
 //! is exactly the weakness the paper demonstrates (users with more active
 //! stages receive more resources).
+//!
+//! Incremental index: key `(running, arrival_seq, stage_idx)` changes on
+//! every launch/finish of the stage; the [`StageIndex`] lazy-invalidation
+//! rules (fresh entry on decrease, stale fix-up on increase) keep
+//! selection at O(log n) amortized per event.
 
-use super::{select_min_by_key, Policy, StageView};
+use super::index::StageIndex;
+use super::{select_min_by_key, Policy, StageMeta, StageView};
+use crate::StageId;
 
 #[derive(Default)]
-pub struct Fair;
+pub struct Fair {
+    /// (running, arrival_seq, stage_idx) — stage id breaks final ties.
+    index: StageIndex<(u32, u64, usize)>,
+}
 
 impl Fair {
     pub fn new() -> Self {
-        Fair
+        Fair {
+            index: StageIndex::new(),
+        }
     }
 }
 
 impl Policy for Fair {
     fn name(&self) -> &'static str {
         "Fair"
+    }
+
+    fn on_stage_submit(&mut self, _now_s: f64, meta: &StageMeta) {
+        self.index
+            .insert(meta.stage, (0, meta.arrival_seq, meta.stage_idx), meta.pending);
+    }
+
+    fn on_task_launched(&mut self, stage: StageId) {
+        self.index.task_launched(stage);
+        if let Some((running, seq, idx)) = self.index.key_of(stage) {
+            self.index.update_key(stage, (running + 1, seq, idx));
+        }
+    }
+
+    fn on_task_finished(&mut self, stage: StageId) {
+        // Only stages still holding pending work live in the index; for
+        // them a finish lowers the priority key, which must push a fresh
+        // entry (invariant 1 in the index docs).
+        if let Some((running, seq, idx)) = self.index.key_of(stage) {
+            debug_assert!(running > 0);
+            self.index.update_key(stage, (running - 1, seq, idx));
+        }
+    }
+
+    fn on_stage_finish(&mut self, stage: StageId) {
+        self.index.remove(stage);
+    }
+
+    fn select_next(&mut self, _now_s: f64) -> Option<StageId> {
+        self.index.peek()
     }
 
     fn select(&mut self, _now_s: f64, views: &[StageView]) -> Option<usize> {
@@ -41,6 +83,21 @@ mod tests {
             pending,
             arrival_seq: seq,
         }
+    }
+
+    fn submit(p: &mut Fair, stage: u64, seq: u64, pending: u32) {
+        p.on_stage_submit(
+            0.0,
+            &StageMeta {
+                stage,
+                job: stage,
+                user: 0,
+                est_slot_time: 1.0,
+                stage_idx: 0,
+                arrival_seq: seq,
+                pending,
+            },
+        );
     }
 
     #[test]
@@ -68,5 +125,35 @@ mod tests {
         let mut p = Fair::new();
         let views = vec![v(1, 1, 1, 5), v(2, 1, 1, 3)];
         assert_eq!(p.select(0.0, &views), Some(1));
+    }
+
+    #[test]
+    fn incremental_rotates_like_scan() {
+        let mut p = Fair::new();
+        for s in 1..=3u64 {
+            submit(&mut p, s, s, 10);
+        }
+        let mut launched = [0u32; 3];
+        for _ in 0..9 {
+            let s = p.select_next(0.0).unwrap();
+            launched[(s - 1) as usize] += 1;
+            p.on_task_launched(s);
+        }
+        assert_eq!(launched, [3, 3, 3]);
+    }
+
+    #[test]
+    fn finish_restores_priority() {
+        let mut p = Fair::new();
+        submit(&mut p, 1, 1, 10);
+        submit(&mut p, 2, 2, 10);
+        // Stage 1 launches twice → stage 2 preferred.
+        p.on_task_launched(1);
+        p.on_task_launched(1);
+        assert_eq!(p.select_next(0.0), Some(2));
+        p.on_task_launched(2);
+        // A stage-1 task finishes: both at running 1 → FIFO tiebreak.
+        p.on_task_finished(1);
+        assert_eq!(p.select_next(0.0), Some(1));
     }
 }

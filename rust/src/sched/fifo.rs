@@ -1,20 +1,46 @@
 //! Spark's built-in FIFO scheduler (paper §2.1.3): jobs in arrival order,
 //! stages of the same job in stage-index order.
+//!
+//! Incremental index: keys are static per stage, so a plain lazy min-heap
+//! ([`StageIndex`]) gives O(log n) selection with no invalidation traffic.
 
-use super::{select_min_by_key, Policy, StageView};
+use super::index::StageIndex;
+use super::{select_min_by_key, Policy, StageMeta, StageView};
+use crate::StageId;
 
 #[derive(Default)]
-pub struct Fifo;
+pub struct Fifo {
+    index: StageIndex<(u64, usize)>,
+}
 
 impl Fifo {
     pub fn new() -> Self {
-        Fifo
+        Fifo {
+            index: StageIndex::new(),
+        }
     }
 }
 
 impl Policy for Fifo {
     fn name(&self) -> &'static str {
         "FIFO"
+    }
+
+    fn on_stage_submit(&mut self, _now_s: f64, meta: &StageMeta) {
+        self.index
+            .insert(meta.stage, (meta.arrival_seq, meta.stage_idx), meta.pending);
+    }
+
+    fn on_task_launched(&mut self, stage: StageId) {
+        self.index.task_launched(stage);
+    }
+
+    fn on_stage_finish(&mut self, stage: StageId) {
+        self.index.remove(stage);
+    }
+
+    fn select_next(&mut self, _now_s: f64) -> Option<StageId> {
+        self.index.peek()
     }
 
     fn select(&mut self, _now_s: f64, views: &[StageView]) -> Option<usize> {
@@ -38,6 +64,21 @@ mod tests {
         }
     }
 
+    fn submit(p: &mut Fifo, stage: u64, seq: u64, idx: usize, pending: u32) {
+        p.on_stage_submit(
+            0.0,
+            &StageMeta {
+                stage,
+                job: seq,
+                user: 0,
+                est_slot_time: 1.0,
+                stage_idx: idx,
+                arrival_seq: seq,
+                pending,
+            },
+        );
+    }
+
     #[test]
     fn picks_earliest_job_then_stage() {
         let mut p = Fifo::new();
@@ -51,5 +92,22 @@ mod tests {
         let views = vec![v(10, 1, 0, 0), v(11, 2, 0, 3)];
         assert_eq!(p.select(0.0, &views), Some(1));
         assert_eq!(p.select(0.0, &[]), None);
+    }
+
+    #[test]
+    fn incremental_matches_scan() {
+        let mut p = Fifo::new();
+        submit(&mut p, 10, 2, 0, 1);
+        submit(&mut p, 11, 1, 1, 1);
+        submit(&mut p, 12, 1, 0, 2);
+        assert_eq!(p.select_next(0.0), Some(12));
+        p.on_task_launched(12);
+        assert_eq!(p.select_next(0.0), Some(12));
+        p.on_task_launched(12); // exhausted
+        assert_eq!(p.select_next(0.0), Some(11));
+        p.on_stage_finish(11);
+        assert_eq!(p.select_next(0.0), Some(10));
+        p.on_task_launched(10);
+        assert_eq!(p.select_next(0.0), None);
     }
 }

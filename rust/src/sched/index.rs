@@ -1,0 +1,256 @@
+//! Incremental priority indexes for O(log n) per-event selection.
+//!
+//! Every policy keeps a [`StageIndex`] (or two, for UJF's pool tree) so
+//! that `select_next` is a heap peek instead of a scan over all active
+//! stages. The index uses **lazy invalidation**: key changes push a fresh
+//! entry instead of rewriting the heap, and stale entries are discarded
+//! (or re-keyed) when they surface at the top.
+//!
+//! ## Invariants (the lazy-invalidation contract)
+//!
+//! 1. A stage with pending tasks always has at least one heap entry whose
+//!    stored key is **≤** its true key: every key *decrease* (and every
+//!    consumption of the top entry) pushes a fresh entry, while key
+//!    *increases* are left stale and fixed up at pop time.
+//! 2. An entry is *valid* iff its stored key equals the stage's current
+//!    key. A stale-smaller entry surfaces early, is re-pushed with the
+//!    current key, and therefore can never cause a late selection.
+//! 3. Stages whose pending count reaches zero are dropped permanently —
+//!    in this engine a stage's pending count never increases, so it can
+//!    never become selectable again.
+//!
+//! Amortized cost: every engine event (submit / launch / task-finish)
+//! pushes O(1) entries, so total heap traffic is O(events · log n).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::collections::HashMap;
+
+use crate::StageId;
+
+/// Total-ordered f64 for heap keys (virtual deadlines are always finite
+/// or +∞, never NaN; `total_cmp` matches `PartialOrd` on that domain).
+#[derive(Clone, Copy, Debug)]
+pub struct F64Key(pub f64);
+
+impl PartialEq for F64Key {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.total_cmp(&other.0) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for F64Key {}
+impl PartialOrd for F64Key {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for F64Key {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Min-index over stages with pending work. `K` is the policy's priority
+/// key; ties beyond `K` break on `StageId` (matching the scan-path
+/// comparators, which all end in the stage id).
+#[derive(Debug)]
+pub struct StageIndex<K: Ord + Copy> {
+    heap: BinaryHeap<Reverse<(K, StageId)>>,
+    /// stage → (current key, pending tasks). Stages leave at pending 0 or
+    /// on removal; heap entries for absent stages are dropped lazily.
+    live: HashMap<StageId, (K, u32)>,
+}
+
+impl<K: Ord + Copy> Default for StageIndex<K> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<K: Ord + Copy> StageIndex<K> {
+    pub fn new() -> Self {
+        StageIndex {
+            heap: BinaryHeap::new(),
+            live: HashMap::new(),
+        }
+    }
+
+    /// Number of selectable (pending > 0) stages.
+    pub fn len(&self) -> usize {
+        self.live.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live.is_empty()
+    }
+
+    /// Current key of a selectable stage.
+    pub fn key_of(&self, stage: StageId) -> Option<K> {
+        self.live.get(&stage).map(|&(k, _)| k)
+    }
+
+    /// Register a newly-submitted stage.
+    pub fn insert(&mut self, stage: StageId, key: K, pending: u32) {
+        debug_assert!(pending > 0, "stage submitted with no tasks");
+        self.live.insert(stage, (key, pending));
+        self.heap.push(Reverse((key, stage)));
+    }
+
+    /// Drop a stage (completion). Heap entries are reclaimed lazily.
+    pub fn remove(&mut self, stage: StageId) {
+        self.live.remove(&stage);
+    }
+
+    /// Change a stage's priority key. Pushes a fresh entry so the new
+    /// position is discoverable; the old entry goes stale.
+    pub fn update_key(&mut self, stage: StageId, key: K) {
+        if let Some(e) = self.live.get_mut(&stage) {
+            if e.0 != key {
+                e.0 = key;
+                self.heap.push(Reverse((key, stage)));
+            }
+        }
+    }
+
+    /// One task of `stage` launched: decrement pending, dropping the
+    /// stage from the index when it has nothing left to launch.
+    pub fn task_launched(&mut self, stage: StageId) {
+        if let Some(e) = self.live.get_mut(&stage) {
+            debug_assert!(e.1 > 0);
+            e.1 -= 1;
+            if e.1 == 0 {
+                self.live.remove(&stage);
+            }
+        }
+    }
+
+    /// The minimum-key selectable stage, or `None`. Does not consume the
+    /// entry — callers follow up with [`Self::task_launched`] (via the
+    /// policy's `on_task_launched`) once the launch actually happens.
+    pub fn peek(&mut self) -> Option<StageId> {
+        while let Some(&Reverse((k, stage))) = self.heap.peek() {
+            match self.live.get(&stage) {
+                // Valid: stored key is the current key.
+                Some(&(cur, _)) if cur == k => return Some(stage),
+                // Stale: re-key so the stage keeps its representation.
+                Some(&(cur, _)) => {
+                    self.heap.pop();
+                    self.heap.push(Reverse((cur, stage)));
+                }
+                // Dead (finished or exhausted): reclaim.
+                None => {
+                    self.heap.pop();
+                }
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn min_key_wins_with_stage_tiebreak() {
+        let mut ix: StageIndex<u64> = StageIndex::new();
+        ix.insert(5, 2, 1);
+        ix.insert(3, 1, 1);
+        ix.insert(4, 1, 1);
+        assert_eq!(ix.peek(), Some(3), "equal keys break on stage id");
+    }
+
+    #[test]
+    fn pending_exhaustion_drops_stage() {
+        let mut ix: StageIndex<u64> = StageIndex::new();
+        ix.insert(1, 0, 2);
+        ix.insert(2, 5, 1);
+        assert_eq!(ix.peek(), Some(1));
+        ix.task_launched(1);
+        assert_eq!(ix.peek(), Some(1));
+        ix.task_launched(1);
+        assert_eq!(ix.peek(), Some(2), "exhausted stage is dropped");
+        assert_eq!(ix.len(), 1);
+    }
+
+    #[test]
+    fn key_increase_goes_stale_then_recovers() {
+        let mut ix: StageIndex<u64> = StageIndex::new();
+        ix.insert(1, 0, 5);
+        ix.insert(2, 1, 5);
+        ix.update_key(1, 3); // stage 1 demoted
+        assert_eq!(ix.peek(), Some(2));
+        ix.update_key(2, 9); // stage 2 demoted past 1
+        assert_eq!(ix.peek(), Some(1));
+    }
+
+    #[test]
+    fn removal_reclaims_lazily() {
+        let mut ix: StageIndex<(u32, u64)> = StageIndex::new();
+        ix.insert(1, (0, 0), 1);
+        ix.insert(2, (0, 1), 1);
+        ix.remove(1);
+        assert_eq!(ix.peek(), Some(2));
+        ix.remove(2);
+        assert_eq!(ix.peek(), None);
+        assert!(ix.is_empty());
+    }
+
+    #[test]
+    fn f64key_total_order() {
+        assert!(F64Key(1.0) < F64Key(2.0));
+        assert!(F64Key(f64::INFINITY) > F64Key(1e300));
+        assert_eq!(F64Key(3.5), F64Key(3.5));
+    }
+
+    #[test]
+    fn churn_preserves_argmin_vs_scan() {
+        // Randomized differential check against a linear scan.
+        use crate::util::Rng;
+        let mut rng = Rng::new(0x1DE);
+        let mut ix: StageIndex<(u32, u64)> = StageIndex::new();
+        let mut model: std::collections::HashMap<StageId, ((u32, u64), u32)> =
+            std::collections::HashMap::new();
+        let mut next_stage: StageId = 1;
+        for _ in 0..2000 {
+            match rng.below(4) {
+                0 => {
+                    let key = (rng.below(4) as u32, rng.below(100));
+                    let pending = 1 + rng.below(3) as u32;
+                    ix.insert(next_stage, key, pending);
+                    model.insert(next_stage, (key, pending));
+                    next_stage += 1;
+                }
+                1 => {
+                    if let Some(&s) = model.keys().min() {
+                        ix.remove(s);
+                        model.remove(&s);
+                    }
+                }
+                2 => {
+                    if let Some(&s) = model.keys().max() {
+                        let key = (rng.below(4) as u32, rng.below(100));
+                        ix.update_key(s, key);
+                        model.get_mut(&s).unwrap().0 = key;
+                    }
+                }
+                _ => {
+                    if let Some(s) = ix.peek() {
+                        ix.task_launched(s);
+                        let e = model.get_mut(&s).unwrap();
+                        e.1 -= 1;
+                        if e.1 == 0 {
+                            model.remove(&s);
+                        }
+                    }
+                }
+            }
+            let expect = model
+                .iter()
+                .map(|(&s, &(k, _))| (k, s))
+                .min()
+                .map(|(_, s)| s);
+            assert_eq!(ix.peek(), expect);
+        }
+    }
+}

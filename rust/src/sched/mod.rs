@@ -5,10 +5,20 @@
 //! the equivalent of Spark sorting the Root Pool on each resource offer
 //! (§2.1.1 step 5). Stages carry their analytics-job context (§3.1) so
 //! policies can schedule at job/user granularity.
+//!
+//! Selection is **incremental**: lifecycle notifications
+//! ([`Policy::on_stage_submit`], [`Policy::on_task_launched`],
+//! [`Policy::on_task_finished`], [`Policy::on_stage_finish`]) let each
+//! policy maintain its own priority index (see [`index`]), and
+//! [`Policy::select_next`] answers in O(log n). The snapshot-scan
+//! [`Policy::select`] is retained as the reference semantics: the engine
+//! cross-checks both paths under `debug_assertions`, and the differential
+//! test in [`crate::sim`] asserts schedule equivalence end to end.
 
 pub mod cfq;
 pub mod fair;
 pub mod fifo;
+pub mod index;
 pub mod ujf;
 pub mod uwfq;
 pub mod vtime;
@@ -29,14 +39,21 @@ pub struct JobMeta {
     pub arrival_seq: u64,
 }
 
-/// Stage-level metadata on stage submission (used by CFQ, which assigns
-/// deadlines per stage without job context).
+/// Stage-level metadata on stage submission: deadline assignment inputs
+/// (CFQ) plus everything a policy needs to key its priority index without
+/// ever consulting engine state again.
 #[derive(Clone, Debug)]
 pub struct StageMeta {
     pub stage: StageId,
     pub job: JobId,
     pub user: UserId,
     pub est_slot_time: f64,
+    /// Index of this stage within its job's stage list (FIFO tiebreak).
+    pub stage_idx: usize,
+    /// Arrival sequence of the owning job (FIFO tiebreak).
+    pub arrival_seq: u64,
+    /// Launchable tasks at submission time (initial pending count).
+    pub pending: u32,
 }
 
 /// Snapshot of a live stage at selection time.
@@ -64,14 +81,32 @@ pub trait Policy: Send {
     /// scheduler (its dependencies finished).
     fn on_stage_submit(&mut self, _now_s: f64, _meta: &StageMeta) {}
 
+    /// One task of `stage` was launched (running += 1, pending −= 1).
+    /// Fired by the engine immediately after every launch so the policy's
+    /// index tracks counts without snapshots.
+    fn on_task_launched(&mut self, _stage: StageId) {}
+
+    /// One running task of `stage` finished (running −= 1). Fired before
+    /// `on_stage_finish` when it was the stage's last task.
+    fn on_task_finished(&mut self, _stage: StageId) {}
+
     /// A stage completed all of its tasks (pool-tree maintenance).
     fn on_stage_finish(&mut self, _stage: StageId) {}
 
     /// All stages of a job finished.
     fn on_job_finish(&mut self, _now_s: f64, _job: JobId) {}
 
-    /// Pick the stage (index into `views`) to launch one task from.
-    /// Must return a view with `pending > 0`, or `None`.
+    /// Incremental selection: the highest-priority stage with pending
+    /// tasks according to the policy's own index, in O(log n). Must agree
+    /// with [`Policy::select`] over the engine's live stages — the engine
+    /// asserts this under `debug_assertions`.
+    fn select_next(&mut self, now_s: f64) -> Option<StageId>;
+
+    /// Reference snapshot-scan selection: pick the stage (index into
+    /// `views`) to launch one task from. Must return a view with
+    /// `pending > 0`, or `None`. O(views) — kept as the executable
+    /// specification for `select_next` (debug cross-check + differential
+    /// tests), not used on the release hot path.
     fn select(&mut self, now_s: f64, views: &[StageView]) -> Option<usize>;
 
     /// The job's assigned global virtual deadline, if this policy uses

@@ -5,27 +5,102 @@
 //! (`P_k = N^k_active_task_amount`), and the user's internal Fair policy
 //! picks among their stages. This is the paper's fairness reference
 //! scheduler — the baseline the DVR/DSR metrics compare against.
+//!
+//! Incremental index: a two-level mirror of the pool tree. Per user we
+//! keep aggregate counters (Σ running, Σ pending) plus ordered multisets
+//! of the user's stage arrival-seqs / stage-idxs (the root Fair
+//! tiebreaks), and an inner Fair [`StageIndex`] over the user's pending
+//! stages. The root level is a lazy min-heap over users with the same
+//! invalidation rules as [`StageIndex`]: fresh entry on every key
+//! decrease, stale fix-up at pop time. Selection is O(log users +
+//! log stages-of-user) per launch.
 
+use super::index::StageIndex;
 use super::{Policy, StageMeta, StageView};
-use crate::core::pool::{Pool, PoolPolicy};
-use crate::StageId;
-use std::collections::HashMap;
+use crate::{StageId, UserId};
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, HashMap};
 
+/// Root-level priority of a user: (Σ running, min arrival_seq,
+/// min stage_idx, user id) — identical to the scan-path aggregate.
+type UserKey = (u32, u64, usize, UserId);
+
+#[derive(Default)]
+struct UserState {
+    /// Σ running over the user's active (submitted, unfinished) stages.
+    running: u32,
+    /// Σ pending over the user's active stages.
+    pending: u32,
+    /// Multiset of `arrival_seq` over active stages (min = root tiebreak).
+    seqs: BTreeMap<u64, u32>,
+    /// Multiset of `stage_idx` over active stages.
+    idxs: BTreeMap<usize, u32>,
+    /// Inner Fair index over the user's pending stages:
+    /// (running, arrival_seq, stage_idx) with stage-id tiebreak.
+    stages: StageIndex<(u32, u64, usize)>,
+}
+
+impl UserState {
+    fn key(&self, user: UserId) -> UserKey {
+        debug_assert!(!self.seqs.is_empty(), "keyed user has no active stages");
+        let min_seq = *self.seqs.keys().next().unwrap();
+        let min_idx = *self.idxs.keys().next().unwrap();
+        (self.running, min_seq, min_idx, user)
+    }
+}
+
+/// Static per-stage facts the notifications need.
+struct StageRec {
+    user: UserId,
+    seq: u64,
+    idx: usize,
+}
+
+#[derive(Default)]
 pub struct Ujf {
-    root: Pool,
+    users: HashMap<UserId, UserState>,
+    /// Lazy min-heap over users with pending work.
+    root: BinaryHeap<Reverse<UserKey>>,
+    stage_rec: HashMap<StageId, StageRec>,
 }
 
 impl Ujf {
     pub fn new() -> Self {
-        Ujf {
-            root: Pool::new("root", PoolPolicy::Fair),
+        Ujf::default()
+    }
+
+    /// Valid root minimum: the highest-priority user with pending work.
+    fn peek_user(&mut self) -> Option<UserId> {
+        while let Some(&Reverse((run, seq, idx, uid))) = self.root.peek() {
+            match self.users.get(&uid) {
+                Some(u) if u.pending > 0 => {
+                    let cur = u.key(uid);
+                    if cur == (run, seq, idx, uid) {
+                        return Some(uid);
+                    }
+                    // Stale: re-key so the user stays represented.
+                    self.root.pop();
+                    self.root.push(Reverse(cur));
+                }
+                // Departed, or nothing launchable: reclaim. The user is
+                // re-pushed on the next pending 0→>0 transition (stage
+                // submit), so dropping here is safe.
+                _ => {
+                    self.root.pop();
+                }
+            }
         }
+        None
     }
 }
 
-impl Default for Ujf {
-    fn default() -> Self {
-        Self::new()
+fn multiset_remove<K: Ord + Copy>(set: &mut BTreeMap<K, u32>, k: K) {
+    match set.get_mut(&k) {
+        Some(n) if *n > 1 => *n -= 1,
+        Some(_) => {
+            set.remove(&k);
+        }
+        None => debug_assert!(false, "multiset underflow"),
     }
 }
 
@@ -35,19 +110,89 @@ impl Policy for Ujf {
     }
 
     fn on_stage_submit(&mut self, _now_s: f64, meta: &StageMeta) {
-        // Dynamic per-user pool (created on first stage of that user).
-        self.root
-            .child(&format!("user-{}", meta.user), PoolPolicy::Fair)
-            .add_stage(meta.stage);
+        let u = self.users.entry(meta.user).or_default();
+        *u.seqs.entry(meta.arrival_seq).or_insert(0) += 1;
+        *u.idxs.entry(meta.stage_idx).or_insert(0) += 1;
+        u.pending += meta.pending;
+        u.stages.insert(
+            meta.stage,
+            (0, meta.arrival_seq, meta.stage_idx),
+            meta.pending,
+        );
+        // Key may have decreased (new mins) and pending may have left 0.
+        let key = u.key(meta.user);
+        self.root.push(Reverse(key));
+        self.stage_rec.insert(
+            meta.stage,
+            StageRec {
+                user: meta.user,
+                seq: meta.arrival_seq,
+                idx: meta.stage_idx,
+            },
+        );
+    }
+
+    fn on_task_launched(&mut self, stage: StageId) {
+        let Some(rec) = self.stage_rec.get(&stage) else {
+            return;
+        };
+        let u = self.users.get_mut(&rec.user).expect("launch for absent user");
+        debug_assert!(u.pending > 0);
+        u.pending -= 1;
+        u.running += 1;
+        u.stages.task_launched(stage);
+        if let Some((running, seq, idx)) = u.stages.key_of(stage) {
+            u.stages.update_key(stage, (running + 1, seq, idx));
+        }
+        // Root key increased — existing entries go stale-smaller and are
+        // fixed up at the next peek; no push needed.
+    }
+
+    fn on_task_finished(&mut self, stage: StageId) {
+        let Some(rec) = self.stage_rec.get(&stage) else {
+            return;
+        };
+        let u = self.users.get_mut(&rec.user).expect("finish for absent user");
+        debug_assert!(u.running > 0);
+        u.running -= 1;
+        if let Some((running, seq, idx)) = u.stages.key_of(stage) {
+            debug_assert!(running > 0);
+            u.stages.update_key(stage, (running - 1, seq, idx));
+        }
+        // Root key decreased: push fresh so the user can't surface late.
+        if u.pending > 0 {
+            let key = u.key(rec.user);
+            self.root.push(Reverse(key));
+        }
     }
 
     fn on_stage_finish(&mut self, stage: StageId) {
-        self.root.remove_stage(stage);
-        self.root.prune_empty();
+        let Some(rec) = self.stage_rec.remove(&stage) else {
+            return;
+        };
+        let Some(u) = self.users.get_mut(&rec.user) else {
+            return;
+        };
+        multiset_remove(&mut u.seqs, rec.seq);
+        multiset_remove(&mut u.idxs, rec.idx);
+        u.stages.remove(stage);
+        if u.seqs.is_empty() {
+            // Last active stage gone: the user leaves the pool tree
+            // (equivalent of `prune_empty`).
+            self.users.remove(&rec.user);
+        }
+    }
+
+    fn select_next(&mut self, _now_s: f64) -> Option<StageId> {
+        let uid = self.peek_user()?;
+        let u = self.users.get_mut(&uid).expect("peeked user exists");
+        let picked = u.stages.peek();
+        debug_assert!(picked.is_some(), "pending user has no launchable stage");
+        picked
     }
 
     fn select(&mut self, _now_s: f64, views: &[StageView]) -> Option<usize> {
-        // Fast path equivalent to walking the two-level pool tree
+        // Reference scan equivalent to walking the two-level pool tree
         // (root Fair over per-user pools, Fair within a pool) — verified
         // against `Pool::select` in `fast_path_matches_pool_tree`.
         // 1. Per-user totals over ALL active stages.
@@ -82,6 +227,10 @@ mod tests {
     use crate::sched::JobMeta;
 
     fn submit(p: &mut Ujf, stage: u64, user: u32) {
+        submit_n(p, stage, user, 10);
+    }
+
+    fn submit_n(p: &mut Ujf, stage: u64, user: u32, pending: u32) {
         p.on_stage_submit(
             0.0,
             &StageMeta {
@@ -89,6 +238,9 @@ mod tests {
                 job: stage,
                 user,
                 est_slot_time: 1.0,
+                stage_idx: 0,
+                arrival_seq: stage,
+                pending,
             },
         );
     }
@@ -138,6 +290,60 @@ mod tests {
     }
 
     #[test]
+    fn incremental_equal_share_across_users() {
+        let mut p = Ujf::new();
+        submit(&mut p, 1, 1);
+        submit(&mut p, 2, 2);
+        submit(&mut p, 3, 3);
+        let mut launched = std::collections::HashMap::new();
+        for _ in 0..12 {
+            let s = p.select_next(0.0).unwrap();
+            *launched.entry(s).or_insert(0u32) += 1;
+            p.on_task_launched(s);
+        }
+        assert_eq!(launched[&1], 4);
+        assert_eq!(launched[&2], 4);
+        assert_eq!(launched[&3], 4);
+    }
+
+    #[test]
+    fn incremental_flooder_shares_with_infrequent_user() {
+        // user 1 floods 10 stages, user 2 has one: per-launch alternation
+        // keeps the users' running totals balanced.
+        let mut p = Ujf::new();
+        for s in 1..=10 {
+            submit(&mut p, s, 1);
+        }
+        submit(&mut p, 11, 2);
+        let mut per_user = [0u32; 2];
+        for _ in 0..8 {
+            let s = p.select_next(0.0).unwrap();
+            per_user[if s == 11 { 1 } else { 0 }] += 1;
+            p.on_task_launched(s);
+        }
+        assert_eq!(per_user, [4, 4]);
+    }
+
+    #[test]
+    fn incremental_finish_rebalances() {
+        let mut p = Ujf::new();
+        submit_n(&mut p, 1, 1, 4);
+        submit_n(&mut p, 2, 2, 4);
+        // u1 launches twice, u2 once → u2 preferred next.
+        assert_eq!(p.select_next(0.0), Some(1));
+        p.on_task_launched(1);
+        assert_eq!(p.select_next(0.0), Some(2));
+        p.on_task_launched(2);
+        assert_eq!(p.select_next(0.0), Some(1));
+        p.on_task_launched(1);
+        assert_eq!(p.select_next(0.0), Some(2));
+        // One of u1's tasks finishes → tie at 1 running each → user id
+        // breaks the tie? No: min arrival_seq breaks first (u1's stage 1).
+        p.on_task_finished(1);
+        assert_eq!(p.select_next(0.0), Some(1));
+    }
+
+    #[test]
     fn flooding_user_does_not_starve_infrequent_user() {
         // user 1 has 10 stages, user 2 has one: per-launch alternation
         // keeps the running-task totals of both users balanced.
@@ -171,8 +377,10 @@ mod tests {
         let mut p = Ujf::new();
         submit(&mut p, 1, 1);
         p.on_stage_finish(1);
+        assert!(p.users.is_empty(), "user pruned with last stage");
         // No runnable views → None.
         assert_eq!(p.select(0.0, &[]), None);
+        assert_eq!(p.select_next(0.0), None);
         let exhausted = vec![v(2, 2, 1, 0, 0)];
         assert_eq!(p.select(0.0, &exhausted), None);
     }
@@ -182,6 +390,7 @@ mod tests {
         // The O(S) select must agree with walking the two-level Pool tree.
         use crate::core::pool::{Pool, PoolPolicy};
         use crate::util::propkit;
+        use crate::StageId;
         propkit::check("ujf fast path == pool tree", 0xFA57, 200, |r| {
             let n = 1 + r.below(12) as usize;
             let views: Vec<StageView> = (0..n)
@@ -207,6 +416,9 @@ mod tests {
                         job: v.job,
                         user: v.user,
                         est_slot_time: 1.0,
+                        stage_idx: v.stage_idx,
+                        arrival_seq: v.arrival_seq,
+                        pending: v.pending.max(1),
                     },
                 );
             }

@@ -13,15 +13,30 @@
 //! The §4.2 grace period revives recently departed users with their
 //! progressed virtual arrival time so stage stragglers of inaccurately
 //! estimated jobs don't gain spurious priority.
+//!
+//! Incremental index: stages are keyed by `(D_global, arrival_seq,
+//! stage_idx)`. Algorithm 1 can *reassign* the deadlines of a user's
+//! queued jobs when a shorter job overtakes them; [`TwoLevelVtime`]
+//! reports the rewritten suffix in `last_changed` and the affected
+//! stages are re-keyed (lazy invalidation — the stale heap entries are
+//! discarded when they surface).
 
+use super::index::{F64Key, StageIndex};
 use super::vtime::TwoLevelVtime;
-use super::{select_min_by_key, JobMeta, Policy, StageView};
-use crate::JobId;
+use super::{select_min_by_key, JobMeta, Policy, StageMeta, StageView};
+use crate::{JobId, StageId};
+use std::collections::HashMap;
 
 pub struct Uwfq {
     vt: TwoLevelVtime,
     /// Grace period in resource-seconds (paper default: 2).
     pub grace_rsec: f64,
+    /// (D_global, arrival_seq, stage_idx) — stage id breaks final ties.
+    index: StageIndex<(F64Key, u64, usize)>,
+    /// Active (submitted, unfinished) stages per job, for deadline
+    /// re-keying; plus each stage's static tiebreak key parts.
+    job_stages: HashMap<JobId, Vec<StageId>>,
+    stage_static: HashMap<StageId, (JobId, u64, usize)>,
 }
 
 impl Uwfq {
@@ -29,6 +44,9 @@ impl Uwfq {
         Uwfq {
             vt: TwoLevelVtime::new(r_total),
             grace_rsec,
+            index: StageIndex::new(),
+            job_stages: HashMap::new(),
+            stage_static: HashMap::new(),
         }
     }
 
@@ -52,6 +70,51 @@ impl Policy for Uwfq {
             meta.weight,
             self.grace_rsec,
         );
+        // Algorithm 1 phase 3 may have pushed back the deadlines of the
+        // user's queued jobs — re-key their live stages.
+        for i in 0..self.vt.last_changed.len() {
+            let (job, d) = self.vt.last_changed[i];
+            let Some(stages) = self.job_stages.get(&job) else {
+                continue;
+            };
+            for &s in stages {
+                if let Some(&(_, seq, idx)) = self.stage_static.get(&s) {
+                    self.index.update_key(s, (F64Key(d), seq, idx));
+                }
+            }
+        }
+    }
+
+    fn on_stage_submit(&mut self, _now_s: f64, meta: &StageMeta) {
+        let d = self.vt.job_deadline(meta.job).unwrap_or(f64::INFINITY);
+        self.index.insert(
+            meta.stage,
+            (F64Key(d), meta.arrival_seq, meta.stage_idx),
+            meta.pending,
+        );
+        self.job_stages.entry(meta.job).or_default().push(meta.stage);
+        self.stage_static
+            .insert(meta.stage, (meta.job, meta.arrival_seq, meta.stage_idx));
+    }
+
+    fn on_task_launched(&mut self, stage: StageId) {
+        self.index.task_launched(stage);
+    }
+
+    fn on_stage_finish(&mut self, stage: StageId) {
+        self.index.remove(stage);
+        if let Some((job, _, _)) = self.stage_static.remove(&stage) {
+            if let Some(stages) = self.job_stages.get_mut(&job) {
+                stages.retain(|&s| s != stage);
+                if stages.is_empty() {
+                    self.job_stages.remove(&job);
+                }
+            }
+        }
+    }
+
+    fn select_next(&mut self, _now_s: f64) -> Option<StageId> {
+        self.index.peek()
     }
 
     fn select(&mut self, _now_s: f64, views: &[StageView]) -> Option<usize> {
@@ -73,6 +136,7 @@ impl Policy for Uwfq {
         // Deadlines of finished jobs are no longer needed for scheduling;
         // keep the map from growing over a long-running application.
         self.vt.deadlines.remove(&job);
+        self.job_stages.remove(&job);
     }
 
     fn job_deadline(&self, job: JobId) -> Option<f64> {
@@ -91,6 +155,18 @@ mod tests {
             weight: 1.0,
             est_slot_time: slot,
             arrival_seq: seq,
+        }
+    }
+
+    fn smeta(stage: u64, job: u64, idx: usize, seq: u64) -> StageMeta {
+        StageMeta {
+            stage,
+            job,
+            user: 1,
+            est_slot_time: 1.0,
+            stage_idx: idx,
+            arrival_seq: seq,
+            pending: 1,
         }
     }
 
@@ -183,5 +259,31 @@ mod tests {
         let d1 = p.job_deadline(1).unwrap();
         let d2 = p.job_deadline(2).unwrap();
         assert!(d2 < d1, "favored user must get earlier deadline");
+    }
+
+    #[test]
+    fn reassigned_deadline_rekeys_live_stages() {
+        // u1 queues a long job (stage live), then a short job of the same
+        // user overtakes it in the user's virtual order: the long job's
+        // deadline is pushed back, and the incremental index must prefer
+        // the short job's stage afterwards.
+        let mut p = Uwfq::new(2.0, 2.0);
+        p.on_job_arrival(0.0, &meta(1, 1, 10.0, 1));
+        p.on_stage_submit(0.0, &smeta(100, 1, 0, 1));
+        assert_eq!(p.select_next(0.0), Some(100));
+        p.on_job_arrival(1.0, &meta(2, 1, 2.0, 2));
+        p.on_stage_submit(1.0, &smeta(200, 2, 0, 2));
+        let d1 = p.job_deadline(1).unwrap();
+        let d2 = p.job_deadline(2).unwrap();
+        assert!(d2 < d1, "short job overtakes: {d2} vs {d1}");
+        assert_eq!(p.select_next(1.0), Some(200));
+        // The scan path agrees.
+        let views = vec![v(100, 1, 1, 0), v(200, 2, 1, 0)];
+        assert_eq!(p.select(1.0, &views), Some(1));
+        // Finish the short job: the long job's stage surfaces again.
+        p.on_task_launched(200);
+        p.on_stage_finish(200);
+        p.on_job_finish(2.0, 2);
+        assert_eq!(p.select_next(2.0), Some(100));
     }
 }

@@ -14,9 +14,19 @@
 //! All times are in seconds; virtual quantities are in resource-seconds
 //! (core-seconds), so a job with slot-time `L` finishes in the virtual
 //! schedule when its owner has received `L` core-seconds of service.
+//!
+//! Data structures are heap/tree-backed so every operation the paper
+//! bounds to O(log N) actually is: [`SingleVtime`] retires entities from
+//! a binary min-heap (the seed used a sorted `Vec` with O(n) head
+//! removal), each user's virtual job set is an ordered map keyed by
+//! `(D_user, job)` (O(log n) insert / pop-min / suffix iteration), and
+//! the earliest-finishing user is found through a lazily-invalidated
+//! min-heap over latest deadlines instead of a full scan.
 
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, HashMap};
 
+use super::index::F64Key;
 use crate::{JobId, UserId};
 
 const EPS: f64 = 1e-9;
@@ -34,9 +44,9 @@ pub struct SingleVtime {
     /// Current virtual time V(t).
     pub v: f64,
     t_prev: f64,
-    /// Active entities in the *virtual* (GPS) system: (deadline, id).
-    /// Kept sorted by deadline.
-    active: Vec<(f64, u64)>,
+    /// Active entities in the *virtual* (GPS) system, as a min-heap of
+    /// (deadline, id): only the earliest deadline is ever inspected.
+    active: BinaryHeap<Reverse<(F64Key, u64)>>,
 }
 
 impl SingleVtime {
@@ -46,7 +56,7 @@ impl SingleVtime {
             r_total,
             v: 0.0,
             t_prev: 0.0,
-            active: Vec::new(),
+            active: BinaryHeap::new(),
         }
     }
 
@@ -58,10 +68,9 @@ impl SingleVtime {
     /// Piecewise integration: the rate R/N changes at each retirement.
     pub fn progress(&mut self, t: f64) {
         debug_assert!(t >= self.t_prev - EPS, "time went backwards");
-        while !self.active.is_empty() {
+        while let Some(&Reverse((F64Key(next_d), _))) = self.active.peek() {
             let n = self.active.len() as f64;
             let rate = self.r_total / n;
-            let next_d = self.active[0].0;
             // Real time at which the earliest entity retires.
             let t_reach = self.t_prev + (next_d - self.v).max(0.0) / rate;
             if t_reach > t + EPS {
@@ -71,7 +80,7 @@ impl SingleVtime {
             }
             self.v = next_d;
             self.t_prev = t_reach;
-            self.active.remove(0);
+            self.active.pop();
         }
         self.t_prev = t;
     }
@@ -81,10 +90,7 @@ impl SingleVtime {
     pub fn arrive(&mut self, t: f64, id: u64, slot: f64) -> f64 {
         self.progress(t);
         let d = self.v + slot.max(0.0);
-        let pos = self
-            .active
-            .partition_point(|&(ad, aid)| (ad, aid) <= (d, id));
-        self.active.insert(pos, (d, id));
+        self.active.push(Reverse((F64Key(d), id)));
         d
     }
 }
@@ -107,7 +113,7 @@ pub struct VJob {
 }
 
 /// Per-user state `U_k` in the virtual fair system.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct VUser {
     /// User virtual time `V_user^k`.
     pub v_user: f64,
@@ -116,17 +122,21 @@ pub struct VUser {
     pub v_arrival: f64,
     /// `U_w` — user weight (1 = equal priority).
     pub weight: f64,
-    /// `S_jobs^k`, sorted by `d_user`.
-    pub jobs: Vec<VJob>,
+    /// `S_jobs^k`, ordered by `(d_user, job)`. `d_global` is monotone
+    /// non-decreasing in this order (deadlines telescope from
+    /// `V_arrival^k`), so the last entry carries the latest deadline.
+    pub jobs: BTreeMap<(F64Key, JobId), VJob>,
 }
 
 impl VUser {
     /// `getLatestDeadline` — the user's last job's global deadline.
+    /// O(log n): d_global is monotone in the job-set order.
     fn latest_deadline(&self) -> f64 {
         self.jobs
-            .iter()
+            .values()
+            .next_back()
             .map(|j| j.d_global)
-            .fold(f64::NEG_INFINITY, f64::max)
+            .unwrap_or(f64::NEG_INFINITY)
     }
 }
 
@@ -156,6 +166,18 @@ pub struct TwoLevelVtime {
     /// Assigned global deadlines per job — persists after virtual finish,
     /// because stage priority `P_s = D_global^i` is fixed (§4.1.1).
     pub deadlines: HashMap<JobId, f64>,
+    /// Jobs whose `D_global` was (re)written by the most recent
+    /// [`TwoLevelVtime::job_arrival`] — Algorithm 1 phase 3 rewrites a
+    /// suffix of the user's job set, and incremental schedulers (UWFQ's
+    /// stage index) re-key exactly these. Includes the arriving job.
+    pub last_changed: Vec<(JobId, f64)>,
+    /// Lazy min-heap over users by latest global deadline — Algorithm 2's
+    /// earliest-finishing-user query without a full user scan. A fresh
+    /// entry is pushed on every key *decrease* (job-set drained to empty →
+    /// `NEG_INFINITY`) and on arrival; stale entries are re-keyed when
+    /// they surface (the same invalidation contract as
+    /// [`crate::sched::index::StageIndex`]).
+    user_heap: BinaryHeap<Reverse<(F64Key, UserId)>>,
 }
 
 impl TwoLevelVtime {
@@ -168,6 +190,8 @@ impl TwoLevelVtime {
             users: HashMap::new(),
             exited: HashMap::new(),
             deadlines: HashMap::new(),
+            last_changed: Vec::new(),
+            user_heap: BinaryHeap::new(),
         }
     }
 
@@ -197,28 +221,27 @@ impl TwoLevelVtime {
                     v_user: ex.v_user,
                     v_arrival: ex.v_arrival,
                     weight,
-                    jobs: Vec::new(),
+                    jobs: BTreeMap::new(),
                 },
                 None => VUser {
                     v_user: 0.0,
                     v_arrival: self.v_global,
                     weight,
-                    jobs: Vec::new(),
+                    jobs: BTreeMap::new(),
                 },
             };
             self.exited.remove(&user);
             self.users.insert(user, st);
         }
 
-        // Phase 2: user deadline; insert into S_jobs^k (sorted by d_user).
+        // Phase 2: user deadline; insert into S_jobs^k (ordered by
+        // (d_user, job) — unique, jobs never re-arrive).
         let u = self.users.get_mut(&user).unwrap();
         u.weight = weight;
         let d_user = u.v_user + slot * u.weight;
-        let pos = u
-            .jobs
-            .partition_point(|j| (j.d_user, j.job) <= (d_user, job));
+        let key = (F64Key(d_user), job);
         u.jobs.insert(
-            pos,
+            key,
             VJob {
                 job,
                 slot,
@@ -230,30 +253,56 @@ impl TwoLevelVtime {
         // Phase 3: (re)assign global virtual deadlines for the user's
         // active jobs, sequentially from V_arrival^k. Jobs *before* the
         // insertion point telescope to the same deadlines as before, so
-        // only the suffix starting at `pos` needs rewriting — O(1) for
-        // in-order arrivals instead of O(jobs/user) (hot path; equivalent
-        // to the paper's full phase-3 loop).
-        let mut d_prev = if pos == 0 {
-            u.v_arrival
-        } else {
-            u.jobs[pos - 1].d_global
-        };
+        // only the suffix starting at the new job needs rewriting —
+        // O(log n) for in-order arrivals instead of O(jobs/user) (hot
+        // path; equivalent to the paper's full phase-3 loop).
+        let mut d_prev = u
+            .jobs
+            .range(..key)
+            .next_back()
+            .map(|(_, j)| j.d_global)
+            .unwrap_or(u.v_arrival);
         let weight = u.weight;
         let mut out = 0.0;
-        for j in u.jobs[pos..].iter_mut() {
+        self.last_changed.clear();
+        for (_, j) in u.jobs.range_mut(key..) {
             d_prev += j.slot * weight;
             j.d_global = d_prev;
             self.deadlines.insert(j.job, d_prev);
+            self.last_changed.push((j.job, d_prev));
             if j.job == job {
                 out = d_prev;
             }
         }
+        // The user's latest deadline moved — (re)key the user heap.
+        self.user_heap.push(Reverse((F64Key(d_prev), user)));
         out
     }
 
     /// `getJobDeadline` — assigned priority of a job (`P_s = D_global^i`).
     pub fn job_deadline(&self, job: JobId) -> Option<f64> {
         self.deadlines.get(&job).copied()
+    }
+
+    /// Valid minimum of the user heap: the earliest-finishing user and
+    /// its latest global deadline.
+    fn earliest_finishing_user(&mut self) -> Option<(UserId, f64)> {
+        while let Some(&Reverse((F64Key(d), uid))) = self.user_heap.peek() {
+            match self.users.get(&uid) {
+                None => {
+                    self.user_heap.pop();
+                }
+                Some(u) => {
+                    let cur = u.latest_deadline();
+                    if F64Key(cur) == F64Key(d) {
+                        return Some((uid, d));
+                    }
+                    self.user_heap.pop();
+                    self.user_heap.push(Reverse((F64Key(cur), uid)));
+                }
+            }
+        }
+        None
     }
 
     /// **Algorithm 2** — `updateVirtualTime(T_current)`.
@@ -265,18 +314,9 @@ impl TwoLevelVtime {
                 return;
             }
             let r_user = self.r_total / self.users.len() as f64;
-            // Earliest-finishing user.
-            let (&uid, u) = self
-                .users
-                .iter()
-                .min_by(|a, b| {
-                    a.1.latest_deadline()
-                        .partial_cmp(&b.1.latest_deadline())
-                        .unwrap()
-                })
-                .unwrap();
-            // Capture the user's virtual end BEFORE its jobs retire.
-            let v_global_end = u.latest_deadline();
+            let (uid, v_global_end) = self
+                .earliest_finishing_user()
+                .expect("non-empty user set has a heap entry");
             let t_finish = self.user_finish_time(uid, r_user);
             if t_finish > t_current + EPS {
                 break;
@@ -311,8 +351,20 @@ impl TwoLevelVtime {
         let t_passed = (t - self.t_previous).max(0.0);
         self.v_global += t_passed * r_user;
         let t_previous = self.t_previous;
-        for u in self.users.values_mut() {
-            update_user_virtual_time(u, t_previous, r_user, t);
+        let mut drained: Vec<UserId> = Vec::new();
+        for (&uid, u) in self.users.iter_mut() {
+            if update_user_virtual_time(u, t_previous, r_user, t) {
+                drained.push(uid);
+            }
+        }
+        // A drained job set drops the user's latest deadline to
+        // `NEG_INFINITY` — a key *decrease*, which the lazy heap must see
+        // as a fresh entry or `earliest_finishing_user` could surface a
+        // non-minimal user (leaving the drained user as a ghost inflating
+        // the share denominator).
+        for uid in drained {
+            self.user_heap
+                .push(Reverse((F64Key(f64::NEG_INFINITY), uid)));
         }
         self.t_previous = self.t_previous.max(t);
     }
@@ -321,36 +373,41 @@ impl TwoLevelVtime {
 /// **Algorithm 3** — `updateUserVirtualTime(U_k, R_user, T_current)`.
 /// Free function (not a method) so `progressVirtualTime` can iterate the
 /// user map mutably without collecting keys — this is on the Algorithm-1
-/// hot path.
-fn update_user_virtual_time(u: &mut VUser, t_previous: f64, r_user: f64, t_current: f64) {
+/// hot path. Returns `true` when this update drained the user's job set
+/// (its latest deadline just dropped to `NEG_INFINITY` — the caller must
+/// refresh the lazy user heap).
+fn update_user_virtual_time(u: &mut VUser, t_previous: f64, r_user: f64, t_current: f64) -> bool {
     let mut t_prev_user = t_previous;
     let mut v_user = u.v_user;
+    let mut retired_any = false;
 
-    // Retire jobs whose user-level deadlines pass, in d_user order.
-        while !u.jobs.is_empty() {
-            let r_job = r_user / u.jobs.len() as f64;
-            let t_passed = (t_current - t_prev_user).max(0.0);
-            let head = u.jobs[0];
-            let v_test = v_user + t_passed * r_job;
-            if head.d_user > v_test + EPS {
-                break;
-            }
-            let v_spent = (head.d_user - v_user).max(0.0);
-            let t_spent = v_spent / r_job;
-            v_user += v_spent;
-            t_prev_user += t_spent;
-            // Progress virtual arrival so future global deadlines account
-            // for virtually finished jobs (Alg. 3 l.16–17).
-            u.v_arrival += head.slot * u.weight;
-            u.jobs.remove(0);
+    // Retire jobs whose user-level deadlines pass, in d_user order
+    // (= job-set order): each retirement is a pop-min.
+    while let Some(head) = u.jobs.values().next().copied() {
+        let r_job = r_user / u.jobs.len() as f64;
+        let t_passed = (t_current - t_prev_user).max(0.0);
+        let v_test = v_user + t_passed * r_job;
+        if head.d_user > v_test + EPS {
+            break;
         }
-        // Catch the user's virtual time up to T_current.
-        if !u.jobs.is_empty() {
-            let r_job = r_user / u.jobs.len() as f64;
-            let t_spent = (t_current - t_prev_user).max(0.0);
-            v_user += t_spent * r_job;
-        }
-        u.v_user = v_user;
+        let v_spent = (head.d_user - v_user).max(0.0);
+        let t_spent = v_spent / r_job;
+        v_user += v_spent;
+        t_prev_user += t_spent;
+        // Progress virtual arrival so future global deadlines account
+        // for virtually finished jobs (Alg. 3 l.16–17).
+        u.v_arrival += head.slot * u.weight;
+        u.jobs.pop_first();
+        retired_any = true;
+    }
+    // Catch the user's virtual time up to T_current.
+    if !u.jobs.is_empty() {
+        let r_job = r_user / u.jobs.len() as f64;
+        let t_spent = (t_current - t_prev_user).max(0.0);
+        v_user += t_spent * r_job;
+    }
+    u.v_user = v_user;
+    retired_any && u.jobs.is_empty()
 }
 
 impl TwoLevelVtime {
@@ -427,6 +484,22 @@ mod tests {
         assert!(close(d, 3.0));
     }
 
+    #[test]
+    fn single_vtime_heap_retires_in_deadline_order() {
+        // Out-of-order deadline arrivals retire earliest-first, exercising
+        // the heap (the seed kept a sorted Vec).
+        let mut v = SingleVtime::new(1.0);
+        v.arrive(0.0, 1, 5.0);
+        v.arrive(0.0, 2, 1.0);
+        v.arrive(0.0, 3, 3.0);
+        // Rates: 3 entities → 1/3 each. Entity 2 (D=1) retires first.
+        v.progress(3.0); // V(3) = 1 exactly → entity 2 retires
+        assert_eq!(v.active_len(), 2);
+        v.progress(100.0);
+        assert_eq!(v.active_len(), 0);
+        assert!(close(v.v, 5.0));
+    }
+
     // ---- TwoLevelVtime: the worked examples from the design notes ----
 
     #[test]
@@ -486,6 +559,10 @@ mod tests {
         assert!(db < da1, "short job must overtake: {db} vs {da1}");
         assert!(close(db, 2.0)); // v_arrival(0) + 2
         assert!(close(da1, 12.0)); // pushed behind B
+        // Phase 3 reported both rewritten deadlines (overtaken suffix).
+        assert_eq!(vt.last_changed.len(), 2);
+        assert_eq!(vt.last_changed[0].0, 2);
+        assert_eq!(vt.last_changed[1].0, 1);
     }
 
     #[test]
@@ -547,10 +624,13 @@ mod tests {
             assert!(vt.v_global >= last_v - 1e-9, "v_global regressed");
             assert!(vt.t_previous <= t + 1e-9);
             last_v = vt.v_global;
-            // Per-user jobs stay sorted by d_user.
+            // Per-user jobs stay ordered by d_user, and d_global is
+            // monotone along that order (latest_deadline's invariant).
             for u in vt.users.values() {
-                for w in u.jobs.windows(2) {
+                let jobs: Vec<&VJob> = u.jobs.values().collect();
+                for w in jobs.windows(2) {
                     assert!(w[0].d_user <= w[1].d_user + 1e-9);
+                    assert!(w[0].d_global <= w[1].d_global + 1e-9);
                 }
             }
         }

@@ -93,6 +93,9 @@ pub fn simulate_with(mut core: SchedCore, mut jobs: Vec<JobSpec>) -> SimReport {
     for (i, j) in jobs.iter().enumerate() {
         heap.push(Reverse(Event::JobArrival(j.arrival, i)));
     }
+    // Specs are moved (not cloned) into the engine on arrival — each slot
+    // is consumed exactly once.
+    let mut jobs: Vec<Option<JobSpec>> = jobs.into_iter().map(Some).collect();
 
     let mut now: TimeUs = 0;
     let mut busy_us: u128 = 0;
@@ -101,7 +104,8 @@ pub fn simulate_with(mut core: SchedCore, mut jobs: Vec<JobSpec>) -> SimReport {
         now = ev.time();
         match ev {
             Event::JobArrival(t, i) => {
-                core.submit_job(t, jobs[i].clone())
+                let spec = jobs[i].take().expect("arrival delivered twice");
+                core.submit_job(t, spec)
                     .expect("workload produced invalid job");
             }
             Event::TaskDone(t, c) => {
@@ -228,6 +232,63 @@ mod tests {
         let fa: Vec<_> = a.completed.iter().map(|c| (c.job, c.finish)).collect();
         let fb: Vec<_> = b.completed.iter().map(|c| (c.job, c.finish)).collect();
         assert_eq!(fa, fb);
+    }
+
+    /// A 500-job mixed-user workload with bursts, duplicates arrival
+    /// times (tie-breaking!) and varied sizes — the differential-test
+    /// fixture for incremental vs. reference-scan selection.
+    fn mixed_workload() -> Vec<JobSpec> {
+        (0..500)
+            .map(|i| {
+                // 17 users with skewed activity; every 5th job arrives in
+                // a same-instant burst to exercise tie-breaks.
+                let user = ((i * 7) % 17) as u32;
+                let arrival_s = if i % 5 == 0 {
+                    (i / 5) as f64 * 0.25
+                } else {
+                    i as f64 * 0.04
+                };
+                let compute = 0.3 + ((i * 13) % 9) as f64 * 0.45;
+                JobSpec::three_phase(
+                    user,
+                    &format!("m{i}"),
+                    crate::s_to_us(arrival_s),
+                    compute,
+                    (32 + (i as u64 % 5) * 32) << 20,
+                    4,
+                    None,
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn incremental_selection_matches_reference_scan_all_policies() {
+        // The incremental O(log n) indexes must reproduce the reference
+        // snapshot-scan schedule *exactly* — same launches, same ties,
+        // byte-identical (job, finish) completion orders — for every
+        // policy. (Extends `deterministic_given_seed`: not merely
+        // deterministic, but equivalent to the executable specification.)
+        let jobs = mixed_workload();
+        for policy in PolicyKind::ALL {
+            let c = cfg(8, policy);
+            let incremental = simulate(c.clone(), jobs.clone());
+            let mut reference_core = SchedCore::from_config(c);
+            reference_core.force_scan_select = true;
+            let reference = simulate_with(reference_core, jobs.clone());
+            let fi: Vec<_> = incremental
+                .completed
+                .iter()
+                .map(|r| (r.job, r.finish))
+                .collect();
+            let fr: Vec<_> = reference
+                .completed
+                .iter()
+                .map(|r| (r.job, r.finish))
+                .collect();
+            assert_eq!(fi.len(), jobs.len(), "{}", policy.name());
+            assert_eq!(fi, fr, "{}: schedules diverged", policy.name());
+        }
     }
 
     #[test]

@@ -1,8 +1,13 @@
 //! Tiny bench harness for `harness = false` bench targets (criterion is not
 //! available offline). Warmup + timed iterations, reports mean / p50 / p95
 //! and throughput, machine-readable one-line summary per benchmark.
+//! A [`JsonSink`] collects results into a `BENCH_*.json` file so the perf
+//! trajectory is tracked across PRs.
 
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
+
+use super::jsonout::Json;
 
 pub struct BenchResult {
     pub name: String,
@@ -95,6 +100,53 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Collects bench results (plus free-form metrics like task-events/s)
+/// and writes them as one JSON document — the machine-readable artifact
+/// CI archives to track perf across PRs.
+#[derive(Default)]
+pub struct JsonSink {
+    results: Vec<Json>,
+    metrics: BTreeMap<String, f64>,
+}
+
+impl JsonSink {
+    pub fn new() -> Self {
+        JsonSink::default()
+    }
+
+    /// Record a harness result (call right after `bench`/`bench_n`).
+    pub fn record(&mut self, r: &BenchResult) {
+        let mut obj = BTreeMap::new();
+        obj.insert("name".to_string(), Json::Str(r.name.clone()));
+        obj.insert("iters".to_string(), Json::Num(r.iters as f64));
+        obj.insert("mean_s".to_string(), Json::Num(r.mean.as_secs_f64()));
+        obj.insert("p50_s".to_string(), Json::Num(r.p50.as_secs_f64()));
+        obj.insert("p95_s".to_string(), Json::Num(r.p95.as_secs_f64()));
+        self.results.push(Json::Obj(obj));
+    }
+
+    /// Record a derived scalar (e.g. "sim_50k/UWFQ/task_events_per_s").
+    pub fn metric(&mut self, name: &str, value: f64) {
+        self.metrics.insert(name.to_string(), value);
+    }
+
+    /// Write the collected document to `path`.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        let mut root = BTreeMap::new();
+        root.insert("benches".to_string(), Json::Arr(self.results.clone()));
+        root.insert(
+            "metrics".to_string(),
+            Json::Obj(
+                self.metrics
+                    .iter()
+                    .map(|(k, &v)| (k.clone(), Json::Num(v)))
+                    .collect(),
+            ),
+        );
+        std::fs::write(path, Json::Obj(root).to_string_pretty())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -114,5 +166,25 @@ mod tests {
             black_box((0..100).sum::<u64>());
         });
         assert!(r.iters > 10);
+    }
+
+    #[test]
+    fn json_sink_roundtrips() {
+        let mut sink = JsonSink::new();
+        let r = bench_n("noop2", 3, || {});
+        sink.record(&r);
+        sink.metric("events_per_s", 1.5e6);
+        let path = std::env::temp_dir().join("uwfq_bench_sink_test.json");
+        let path = path.to_str().unwrap();
+        sink.write(path).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        let v = crate::util::jsonout::parse(&text).unwrap();
+        assert_eq!(
+            v.get("metrics").and_then(|m| m.get("events_per_s")).and_then(|x| x.as_f64()),
+            Some(1.5e6)
+        );
+        let benches = v.get("benches").and_then(|b| b.as_arr()).unwrap();
+        assert_eq!(benches[0].get("name").and_then(|n| n.as_str()), Some("noop2"));
+        std::fs::remove_file(path).ok();
     }
 }

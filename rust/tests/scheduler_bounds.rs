@@ -92,7 +92,7 @@ fn two_level_finish_times(r_total: f64, jobs: &[(u32, f64, f64)]) -> Vec<f64> {
         let still: std::collections::HashSet<u64> = vt
             .users
             .values()
-            .flat_map(|u| u.jobs.iter().map(|j| j.job))
+            .flat_map(|u| u.jobs.values().map(|j| j.job))
             .collect();
         active.retain(|&j| {
             if !still.contains(&j) {

@@ -1,0 +1,164 @@
+//! Minimal offline shim of the `anyhow` API — exactly the surface this
+//! repository uses (`Error`, `Result`, `anyhow!`, `bail!`, `ensure!`,
+//! `Context`). String-backed: context wraps as `"context: cause"`, which
+//! matches how the callers format errors (`{e}` / `{e:#}`).
+
+use std::fmt;
+
+/// A string-backed error value. Like the real `anyhow::Error`, it does
+/// NOT implement `std::error::Error` itself (that is what allows the
+/// blanket `From<E: std::error::Error>` conversion used by `?`).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error {
+            msg: msg.to_string(),
+        }
+    }
+
+    /// Wrap with context, innermost cause last.
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Error {
+        Error {
+            msg: format!("{ctx}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::result::Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "boom"))
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            io_err()?;
+            Ok(())
+        }
+        assert!(format!("{}", inner().unwrap_err()).contains("boom"));
+    }
+
+    #[test]
+    fn context_wraps_outermost_first() {
+        let e = io_err().context("reading file").unwrap_err();
+        assert_eq!(format!("{e}"), "reading file: boom");
+        let e = io_err().with_context(|| format!("task {}", 7)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "task 7: boom");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let e: Error = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let s = String::from("owned");
+        let e: Error = anyhow!(s);
+        assert_eq!(e.to_string(), "owned");
+        let e: Error = anyhow!("x={} y={}", 1, 2);
+        assert_eq!(e.to_string(), "x=1 y=2");
+        fn f() -> Result<()> {
+            ensure!(1 + 1 == 3, "math broke: {}", 42);
+            Ok(())
+        }
+        assert_eq!(f().unwrap_err().to_string(), "math broke: 42");
+        fn g() -> Result<()> {
+            ensure!(false);
+            Ok(())
+        }
+        assert!(g().unwrap_err().to_string().contains("condition failed"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert!(v.context("missing").is_err());
+    }
+}
