@@ -11,10 +11,12 @@
 
 use uwfq::bench::{figures, tables};
 use uwfq::config::Config;
+use uwfq::sweep::Sweep;
 use uwfq::workload::tracefile;
 
 fn main() -> Result<(), String> {
     let base = Config::default(); // 32 cores, the paper's testbed scale
+    let swp = Sweep::auto(); // grid cells across all host cores
     let arg = std::env::args().nth(1);
     let w = match arg {
         Some(path) => {
@@ -33,7 +35,7 @@ fn main() -> Result<(), String> {
         w.utilization(base.cores, 500.0)
     );
 
-    let t2 = tables::table2(&w, &base);
+    let t2 = tables::table2(&w, &base, &swp);
     println!("{}", tables::render_table2(&t2));
 
     let get = |label: &str| t2.rows.iter().find(|r| r.label == label).unwrap();
@@ -46,7 +48,7 @@ fn main() -> Result<(), String> {
 
     std::fs::create_dir_all("out").map_err(|e| e.to_string())?;
     tables::write_table2_csv("out/table2_macro.csv", &t2).map_err(|e| e.to_string())?;
-    let f7 = figures::fig7(&w, &base);
+    let f7 = figures::fig7(&w, &base, &swp);
     figures::write_fig7_csv("out", &f7).map_err(|e| e.to_string())?;
     println!("\nwrote out/table2_macro.csv and out/fig7_user_violations.csv");
     Ok(())

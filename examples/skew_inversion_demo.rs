@@ -11,6 +11,7 @@
 
 use uwfq::bench::figures;
 use uwfq::config::Config;
+use uwfq::sweep::Sweep;
 
 fn gantt(spans: &[(usize, f64, f64)], width: usize) {
     let t_max = spans.iter().map(|s| s.2).fold(0.0, f64::max);
@@ -33,7 +34,7 @@ fn main() {
     let base = Config::default().with_cores(8);
 
     println!("== Fig. 3 — task skew (one 5× hot partition) ==\n");
-    let f3 = figures::fig3(&base);
+    let f3 = figures::fig3(&base, &Sweep::seq());
     for (label, rt, spans) in &f3.runs {
         println!("{label}: completion {rt:.2} s");
         gantt(spans, 64);
@@ -43,7 +44,7 @@ fn main() {
     println!("runtime partitioning cuts the skewed job's completion by {:.0}%\n", 100.0 * (1.0 - r / d));
 
     println!("== Fig. 4 — priority inversion ==\n");
-    let f4 = figures::fig4(&base);
+    let f4 = figures::fig4(&base, &Sweep::seq());
     for (label, hi, lo) in &f4.runs {
         println!("{label}: high-priority job RT {hi:.2} s (low-priority job {lo:.2} s)");
     }

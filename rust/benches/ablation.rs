@@ -6,43 +6,56 @@
 //! * grace-period sweep (§4.2);
 //! * estimator-error sweep (§6.4 robustness).
 //!
+//! Every ablation grid runs as cells on the parallel sweep engine.
 //! Run with `cargo bench --bench ablation`.
 
-use uwfq::bench::run_one;
+use uwfq::bench::{run_one_in, run_one};
 use uwfq::config::Config;
 use uwfq::partition::SchemeKind;
 use uwfq::sched::PolicyKind;
+use uwfq::sweep::{auto_threads, Sweep};
 use uwfq::util::benchkit::bench_n;
-use uwfq::workload::{gtrace, scenarios};
 
 fn main() {
     let base = Config::default();
+    let swp = Sweep::new(auto_threads(None).min(4));
 
     println!("# Ablation 1 — scheduler context (scenario 1, infrequent-user RT)");
-    let w1 = scenarios::scenario1_default(42);
-    for policy in [PolicyKind::Cfq, PolicyKind::Ujf, PolicyKind::Uwfq] {
-        let m = run_one(&base.clone().with_policy(policy), &w1);
+    let w1 = uwfq::workload::scenarios::scenario1_default(42);
+    let ctx_cells: Vec<Config> = [PolicyKind::Cfq, PolicyKind::Ujf, PolicyKind::Uwfq]
+        .into_iter()
+        .map(|p| base.clone().with_policy(p))
+        .collect();
+    let ctx_metrics = swp.run(&ctx_cells, |ctx, cfg| run_one_in(ctx, cfg, &w1));
+    for m in &ctx_metrics {
         println!(
-            "  {:<5} avg RT {:>6.2} s   infreq RT {:>6.2} s",
-            policy.name(),
+            "  {:<6} avg RT {:>6.2} s   infreq RT {:>6.2} s",
+            m.label,
             m.mean_rt(),
             m.mean_rt_by_class(uwfq::workload::UserClass::Infrequent)
         );
     }
 
     println!("\n# Ablation 2 — ATR sensitivity (macro, UWFQ-P)");
-    let mut p = gtrace::GtraceParams::default();
+    let mut p = uwfq::workload::gtrace::GtraceParams::default();
     p.window_s = 200.0;
     p.users = 15;
     p.heavy_users = 4;
-    let wm = gtrace::gtrace(42, &p);
-    for atr in [0.05, 0.1, 0.25, 0.5, 1.0, 2.0, 5.0, 10.0] {
-        let mut cfg = base
-            .clone()
-            .with_policy(PolicyKind::Uwfq)
-            .with_scheme(SchemeKind::Runtime);
-        cfg.atr = atr;
-        let m = run_one(&cfg, &wm);
+    let wm = uwfq::workload::gtrace::gtrace(42, &p);
+    let atrs = [0.05, 0.1, 0.25, 0.5, 1.0, 2.0, 5.0, 10.0];
+    let atr_cells: Vec<Config> = atrs
+        .iter()
+        .map(|&atr| {
+            let mut cfg = base
+                .clone()
+                .with_policy(PolicyKind::Uwfq)
+                .with_scheme(SchemeKind::Runtime);
+            cfg.atr = atr;
+            cfg
+        })
+        .collect();
+    let atr_metrics = swp.run(&atr_cells, |ctx, cfg| run_one_in(ctx, cfg, &wm));
+    for (atr, m) in atrs.iter().zip(&atr_metrics) {
         println!(
             "  ATR {atr:>6.2} s → avg RT {:>6.2} s   makespan {:>6.1} s",
             m.mean_rt(),
@@ -51,10 +64,17 @@ fn main() {
     }
 
     println!("\n# Ablation 3 — grace period (scenario 1, UWFQ)");
-    for grace in [0.0, 0.5, 2.0, 8.0, 32.0] {
-        let mut cfg = base.clone().with_policy(PolicyKind::Uwfq);
-        cfg.grace_rsec = grace;
-        let m = run_one(&cfg, &w1);
+    let graces = [0.0, 0.5, 2.0, 8.0, 32.0];
+    let grace_cells: Vec<Config> = graces
+        .iter()
+        .map(|&g| {
+            let mut cfg = base.clone().with_policy(PolicyKind::Uwfq);
+            cfg.grace_rsec = g;
+            cfg
+        })
+        .collect();
+    let grace_metrics = swp.run(&grace_cells, |ctx, cfg| run_one_in(ctx, cfg, &w1));
+    for (grace, m) in graces.iter().zip(&grace_metrics) {
         println!(
             "  grace {grace:>5.1} rs → avg RT {:>6.2} s   infreq {:>6.2} s",
             m.mean_rt(),
@@ -63,15 +83,22 @@ fn main() {
     }
 
     println!("\n# Ablation 4 — estimator error (scenario 1, UWFQ)");
-    for sigma in [0.0, 0.2, 0.5, 1.0] {
-        let mut cfg = base.clone().with_policy(PolicyKind::Uwfq);
-        cfg.estimator_sigma = sigma;
-        let m = run_one(&cfg, &w1);
+    let sigmas = [0.0, 0.2, 0.5, 1.0];
+    let sigma_cells: Vec<Config> = sigmas
+        .iter()
+        .map(|&s| {
+            let mut cfg = base.clone().with_policy(PolicyKind::Uwfq);
+            cfg.estimator_sigma = s;
+            cfg
+        })
+        .collect();
+    let sigma_metrics = swp.run(&sigma_cells, |ctx, cfg| run_one_in(ctx, cfg, &w1));
+    for (sigma, m) in sigmas.iter().zip(&sigma_metrics) {
         println!("  sigma {sigma:>4.1} → avg RT {:>6.2} s", m.mean_rt());
     }
 
     println!("\n# Timing: one ablation grid");
-    bench_n("ablation/atr_sweep_8_points", 2, || {
+    bench_n("ablation/atr_sweep_3_points", 2, || {
         for atr in [0.1, 0.5, 2.0] {
             let mut cfg = base
                 .clone()

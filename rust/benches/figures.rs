@@ -1,34 +1,38 @@
-//! Bench: regenerate every figure (3–7) and time each generation.
+//! Bench: regenerate every figure (3–7) and time each generation (all
+//! figure grids route through the sweep engine; sequential here, see
+//! `--bench sweep` for the parallel timings).
 //! Run with `cargo bench --bench figures`.
 
 use uwfq::bench::figures;
 use uwfq::config::Config;
+use uwfq::sweep::Sweep;
 use uwfq::util::benchkit::{bench_n, black_box};
 
 fn main() {
     let base = Config::default();
+    let seq = Sweep::seq();
     bench_n("figures/fig3_skew", 10, || {
-        black_box(figures::fig3(&base));
+        black_box(figures::fig3(&base, &seq));
     });
     bench_n("figures/fig4_inversion", 10, || {
-        black_box(figures::fig4(&base));
+        black_box(figures::fig4(&base, &seq));
     });
     bench_n("figures/fig5_cdf_scenario1", 3, || {
-        black_box(figures::fig5(42, &base));
+        black_box(figures::fig5(42, &base, &seq));
     });
     bench_n("figures/fig6_cdf_scenario2", 3, || {
-        black_box(figures::fig6(42, &base));
+        black_box(figures::fig6(42, &base, &seq));
     });
     let w = figures::default_macro_workload(42);
     bench_n("figures/fig7_user_violations", 3, || {
-        black_box(figures::fig7(&w, &base));
+        black_box(figures::fig7(&w, &base, &seq));
     });
 
     // Print the headline numbers.
-    let f3 = figures::fig3(&base);
+    let f3 = figures::fig3(&base, &seq);
     println!("\nFig 3 completion: {} {:.2}s vs {} {:.2}s",
         f3.runs[0].0, f3.runs[0].1, f3.runs[1].0, f3.runs[1].1);
-    let f4 = figures::fig4(&base);
+    let f4 = figures::fig4(&base, &seq);
     println!("Fig 4 high-prio RT: {} {:.2}s vs {} {:.2}s",
         f4.runs[0].0, f4.runs[0].1, f4.runs[1].0, f4.runs[1].1);
 }

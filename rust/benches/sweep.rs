@@ -1,0 +1,115 @@
+//! Bench: the parallel sweep engine — macro-grid cells/s at 1 thread vs
+//! N threads, plus a determinism cross-check, emitted to
+//! `BENCH_sweep.json` (benchkit JsonSink) so the grid-throughput
+//! trajectory is tracked across PRs next to `BENCH_hotpath.json`.
+//!
+//! * `SWEEP_THREADS=N` sets the parallel worker count (default:
+//!   min(4, cores)). With N=1 only the sequential baseline is recorded —
+//!   a second leg would duplicate it under colliding names.
+//! * `SWEEP_QUICK=1` (or `HOTPATH_QUICK=1`) shrinks the macro workload
+//!   for CI smoke runs.
+//!
+//! Run with `cargo bench --bench sweep`.
+
+use uwfq::bench::{figures, macro_grid_cell_count, table1_grid_cell_count, tables};
+use uwfq::config::Config;
+use uwfq::sweep::{auto_threads, Sweep};
+use uwfq::util::benchkit::{bench_n, black_box, JsonSink};
+use uwfq::workload::gtrace::{gtrace, GtraceParams};
+
+fn main() {
+    let quick =
+        std::env::var("SWEEP_QUICK").is_ok() || std::env::var("HOTPATH_QUICK").is_ok();
+    let threads = std::env::var("SWEEP_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .map(|n| auto_threads(Some(n)))
+        .unwrap_or_else(|| auto_threads(None).min(4));
+    let mut sink = JsonSink::new();
+
+    let base = Config::default();
+    let w = if quick {
+        let mut p = GtraceParams::default();
+        p.window_s = 120.0;
+        p.users = 10;
+        p.heavy_users = 3;
+        gtrace(42, &p)
+    } else {
+        figures::default_macro_workload(42)
+    };
+    let macro_cells = macro_grid_cell_count() as f64;
+    println!(
+        "# Sweep engine — macro grid (Table 2 + Fig 7 = {macro_cells} cells), {} jobs, {} threads{}",
+        w.jobs.len(),
+        threads,
+        if quick { " (quick)" } else { "" }
+    );
+
+    // The macro grid. bench_n's one warmup iteration populates the
+    // idle-response memo cache, so the timed 1-thread and N-thread
+    // iterations measure identical work.
+    let grid = |s: &Sweep| {
+        black_box(tables::table2(&w, &base, s));
+        black_box(figures::fig7(&w, &base, s));
+    };
+    let iters = if quick { 3 } else { 5 };
+    let seq = Sweep::seq();
+    let par = Sweep::new(threads);
+    let r1 = bench_n("sweep/macro_grid_1t", iters, || grid(&seq));
+    sink.record(&r1);
+    let cells_1t = macro_cells / r1.mean.as_secs_f64().max(1e-9);
+    sink.metric("sweep/threads", threads as f64);
+    sink.metric("sweep/macro_grid_cells", macro_cells);
+    sink.metric("sweep/cells_per_s_1t", cells_1t);
+    if threads > 1 {
+        let rn = bench_n(&format!("sweep/macro_grid_{threads}t"), iters, || grid(&par));
+        sink.record(&rn);
+        let cells_nt = macro_cells / rn.mean.as_secs_f64().max(1e-9);
+        let speedup = cells_nt / cells_1t.max(1e-9);
+        println!(
+            "    → {cells_1t:.2} cells/s at 1 thread, {cells_nt:.2} cells/s at {threads} threads ({speedup:.2}× speedup)"
+        );
+        sink.metric(&format!("sweep/cells_per_s_{threads}t"), cells_nt);
+        sink.metric("sweep/speedup_vs_1t", speedup);
+
+        // Determinism cross-check on the timed grid (the
+        // sweep_differential test covers every CSV byte; this catches
+        // drift in the bench config itself).
+        let a = tables::render_table2(&tables::table2(&w, &base, &seq));
+        let b = tables::render_table2(&tables::table2(&w, &base, &par));
+        assert_eq!(a, b, "parallel macro grid diverged from sequential");
+    } else {
+        println!("    → {cells_1t:.2} cells/s at 1 thread (no parallel leg)");
+    }
+
+    // Table 1 combined grid, same comparison.
+    let t1_cells = table1_grid_cell_count() as f64;
+    let r1 = bench_n("sweep/table1_grid_1t", iters, || {
+        black_box(tables::table1(42, &base, &seq));
+    });
+    sink.record(&r1);
+    sink.metric(
+        "sweep/table1_cells_per_s_1t",
+        t1_cells / r1.mean.as_secs_f64().max(1e-9),
+    );
+    if threads > 1 {
+        let rn = bench_n(&format!("sweep/table1_grid_{threads}t"), iters, || {
+            black_box(tables::table1(42, &base, &par));
+        });
+        sink.record(&rn);
+        sink.metric(
+            &format!("sweep/table1_cells_per_s_{threads}t"),
+            t1_cells / rn.mean.as_secs_f64().max(1e-9),
+        );
+    }
+
+    let (hits, misses) = uwfq::sim::idle_cache_stats();
+    sink.metric("sweep/idle_cache_hits", hits as f64);
+    sink.metric("sweep/idle_cache_misses", misses as f64);
+
+    if let Err(e) = sink.write("BENCH_sweep.json") {
+        eprintln!("warning: could not write BENCH_sweep.json: {e}");
+    } else {
+        println!("wrote BENCH_sweep.json");
+    }
+}

@@ -1,27 +1,35 @@
 //! Bench: regenerate Table 1 (micro scenarios 1–2, §5.2.2) end to end and
-//! time the full experiment grid. Run with `cargo bench --bench table1`.
+//! time the full experiment grid — sequential and through the parallel
+//! sweep engine. Run with `cargo bench --bench table1`.
 
 use std::time::Duration;
 
 use uwfq::bench::tables;
 use uwfq::config::Config;
+use uwfq::sweep::{auto_threads, Sweep};
 use uwfq::util::benchkit::{bench_n, black_box};
 
 fn main() {
     let base = Config::default();
+    let threads = auto_threads(None).min(4);
     println!("# Table 1 — end-to-end experiment grid (4 schedulers × 2 scenarios)");
-    bench_n("table1/full_grid", 5, || {
-        black_box(tables::table1(42, &base));
+    bench_n("table1/full_grid_1t", 5, || {
+        black_box(tables::table1(42, &base, &Sweep::seq()));
     });
+    if threads > 1 {
+        bench_n(&format!("table1/full_grid_{threads}t"), 5, || {
+            black_box(tables::table1(42, &base, &Sweep::new(threads)));
+        });
+    }
 
     // Per-scenario breakdown.
     let s1 = uwfq::workload::scenarios::scenario1_default(42);
     let s2 = uwfq::workload::scenarios::scenario2_default(42);
     bench_n("table1/scenario1_grid", 5, || {
-        black_box(tables::table1_scenario(&s1, &base, true));
+        black_box(tables::table1_scenario(&s1, &base, true, &Sweep::seq()));
     });
     bench_n("table1/scenario2_grid", 5, || {
-        black_box(tables::table1_scenario(&s2, &base, false));
+        black_box(tables::table1_scenario(&s2, &base, false, &Sweep::seq()));
     });
 
     // One full scenario-1 simulation per scheduler (the unit the grid
@@ -39,7 +47,7 @@ fn main() {
     }
 
     // And the resulting table, printed once for reference.
-    let (t1, t2) = tables::table1(42, &base);
+    let (t1, t2) = tables::table1(42, &base, &Sweep::seq());
     println!("\n{}", tables::render_table1(&t1));
     println!("{}", tables::render_table1(&t2));
 }

@@ -1,14 +1,17 @@
-//! Bench: regenerate Table 2 (macro benchmark, §5.3.1) end to end.
+//! Bench: regenerate Table 2 (macro benchmark, §5.3.1) end to end —
+//! sequential and through the parallel sweep engine.
 //! Run with `cargo bench --bench table2`.
 
 use std::time::Duration;
 
 use uwfq::bench::{figures, tables};
 use uwfq::config::Config;
+use uwfq::sweep::{auto_threads, Sweep};
 use uwfq::util::benchkit::{bench, bench_n, black_box};
 
 fn main() {
     let base = Config::default();
+    let threads = auto_threads(None).min(4);
     let w = figures::default_macro_workload(42);
     println!(
         "# Table 2 — macro workload: {} jobs, {} users, {:.0} core-s",
@@ -17,9 +20,14 @@ fn main() {
         w.total_slot_time()
     );
 
-    bench_n("table2/full_grid_8_runs", 3, || {
-        black_box(tables::table2(&w, &base));
+    bench_n("table2/full_grid_8_runs_1t", 3, || {
+        black_box(tables::table2(&w, &base, &Sweep::seq()));
     });
+    if threads > 1 {
+        bench_n(&format!("table2/full_grid_8_runs_{threads}t"), 3, || {
+            black_box(tables::table2(&w, &base, &Sweep::new(threads)));
+        });
+    }
 
     // Single 500 s macro simulation per scheduler (the simulator's
     // end-to-end unit; the paper needed ~10 wall-minutes per run).
@@ -35,6 +43,6 @@ fn main() {
         );
     }
 
-    let t2 = tables::table2(&w, &base);
+    let t2 = tables::table2(&w, &base, &Sweep::seq());
     println!("\n{}", tables::render_table2(&t2));
 }

@@ -1,15 +1,19 @@
 //! Figure regeneration (§3.2 Figs. 3–4, §5.2.2 Figs. 5–6, §5.3.1 Fig. 7).
+//!
+//! Every figure grid runs as cells on the [`crate::sweep`] engine; cell
+//! order (and therefore output order) is fixed by construction, so
+//! parallel sweeps emit byte-identical CSVs.
 
 use std::collections::HashMap;
 
-use super::{run_one, run_ujf_reference};
+use super::{paper_cells, run_one_in};
 use crate::config::Config;
 use crate::core::job::{CostProfile, JobSpec};
 use crate::metrics::cdf::{write_cdfs, CdfSeries};
 use crate::metrics::fairness::user_violations_vs_ujf;
 use crate::partition::SchemeKind;
 use crate::sched::PolicyKind;
-use crate::sim;
+use crate::sweep::Sweep;
 use crate::util::csvout::Csv;
 use crate::workload::{gtrace, scenarios, UserClass, Workload};
 
@@ -36,7 +40,7 @@ fn tuned(base: &Config) -> Config {
 
 /// One job with a 5× hot partition under default one-per-core
 /// partitioning; compare default vs ATR partitioning completion time.
-pub fn fig3(base: &Config) -> Fig3Result {
+pub fn fig3(base: &Config, sweep: &Sweep) -> Fig3Result {
     let base = &tuned(base);
     let skew = CostProfile::skewed(1.0 / base.cores as f64, 5.0);
     let job = JobSpec::three_phase(
@@ -48,18 +52,23 @@ pub fn fig3(base: &Config) -> Fig3Result {
         16,
         Some(skew),
     );
-    let mut runs = Vec::new();
-    for scheme in [SchemeKind::Size, SchemeKind::Runtime] {
-        let mut cfg = base.clone().with_scheme(scheme).with_policy(PolicyKind::Fifo);
-        cfg.log_tasks = true;
-        let rep = sim::simulate(cfg.clone(), vec![job.clone()]);
+    let cells: Vec<Config> = [SchemeKind::Size, SchemeKind::Runtime]
+        .into_iter()
+        .map(|scheme| {
+            let mut cfg = base.clone().with_scheme(scheme).with_policy(PolicyKind::Fifo);
+            cfg.log_tasks = true;
+            cfg
+        })
+        .collect();
+    let runs = sweep.run(&cells, |ctx, cfg| {
+        let rep = ctx.simulate(cfg, vec![job.clone()]);
         let spans = rep
             .task_log
             .iter()
             .map(|t| (t.core, crate::us_to_s(t.started), crate::us_to_s(t.finished)))
             .collect();
-        runs.push((cfg.label(), rep.completed[0].response_time(), spans));
-    }
+        (cfg.label(), rep.completed[0].response_time(), spans)
+    });
     Fig3Result { runs }
 }
 
@@ -76,7 +85,7 @@ pub struct Fig4Result {
 /// A long low-priority (blue) job arrives just before a short
 /// high-priority (red) job. Without runtime partitioning the red job
 /// waits for blue's long tasks; with it, cores free after ~ATR.
-pub fn fig4(base: &Config) -> Fig4Result {
+pub fn fig4(base: &Config, sweep: &Sweep) -> Fig4Result {
     let base = &tuned(base);
     // Blue: user 1, long job; Red: user 2, short job arriving 0.2 s later.
     // Under UWFQ the red job has the earlier virtual deadline.
@@ -90,10 +99,12 @@ pub fn fig4(base: &Config) -> Fig4Result {
         None,
     );
     let red = scenarios::micro_job(2, "tiny", 0.2, None);
-    let mut runs = Vec::new();
-    for scheme in [SchemeKind::Size, SchemeKind::Runtime] {
-        let cfg = base.clone().with_scheme(scheme).with_policy(PolicyKind::Uwfq);
-        let rep = sim::simulate(cfg.clone(), vec![blue.clone(), red.clone()]);
+    let cells: Vec<Config> = [SchemeKind::Size, SchemeKind::Runtime]
+        .into_iter()
+        .map(|scheme| base.clone().with_scheme(scheme).with_policy(PolicyKind::Uwfq))
+        .collect();
+    let runs = sweep.run(&cells, |ctx, cfg| {
+        let rep = ctx.simulate(cfg, vec![blue.clone(), red.clone()]);
         let rt_of = |name: &str| {
             rep.completed
                 .iter()
@@ -101,8 +112,8 @@ pub fn fig4(base: &Config) -> Fig4Result {
                 .map(|c| c.response_time())
                 .unwrap_or(f64::NAN)
         };
-        runs.push((cfg.label(), rt_of("tiny"), rt_of("blue-long")));
-    }
+        (cfg.label(), rt_of("tiny"), rt_of("blue-long"))
+    });
     Fig4Result { runs }
 }
 
@@ -111,29 +122,31 @@ pub fn fig4(base: &Config) -> Fig4Result {
 // ---------------------------------------------------------------------------
 
 /// Fig. 5: empirical CDFs of infrequent-user response times (scenario 1)
-/// across the four schedulers.
-pub fn fig5(seed: u64, base: &Config) -> Vec<CdfSeries> {
+/// across the four schedulers (one cell per scheduler).
+pub fn fig5(seed: u64, base: &Config, sweep: &Sweep) -> Vec<CdfSeries> {
     let w = scenarios::scenario1_default(seed);
-    PolicyKind::PAPER
+    let cells: Vec<(PolicyKind, Config)> = PolicyKind::PAPER
         .iter()
-        .map(|&p| {
-            let m = run_one(&base.clone().with_policy(p), &w);
-            CdfSeries::from_samples(p.name(), &m.rts_of_class(UserClass::Infrequent))
-        })
-        .collect()
+        .map(|&p| (p, base.clone().with_policy(p)))
+        .collect();
+    sweep.run(&cells, |ctx, (p, cfg)| {
+        let m = run_one_in(ctx, cfg, &w);
+        CdfSeries::from_samples(p.name(), &m.rts_of_class(UserClass::Infrequent))
+    })
 }
 
 /// Fig. 6: empirical CDFs of job *completion times* in scenario 2 — shows
 /// UWFQ finishing jobs gradually vs batched completion under Fair/UJF.
-pub fn fig6(seed: u64, base: &Config) -> Vec<CdfSeries> {
+pub fn fig6(seed: u64, base: &Config, sweep: &Sweep) -> Vec<CdfSeries> {
     let w = scenarios::scenario2_default(seed);
-    PolicyKind::PAPER
+    let cells: Vec<(PolicyKind, Config)> = PolicyKind::PAPER
         .iter()
-        .map(|&p| {
-            let m = run_one(&base.clone().with_policy(p), &w);
-            CdfSeries::from_samples(p.name(), &m.finish_times())
-        })
-        .collect()
+        .map(|&p| (p, base.clone().with_policy(p)))
+        .collect();
+    sweep.run(&cells, |ctx, (p, cfg)| {
+        let m = run_one_in(ctx, cfg, &w);
+        CdfSeries::from_samples(p.name(), &m.finish_times())
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -141,16 +154,22 @@ pub fn fig6(seed: u64, base: &Config) -> Vec<CdfSeries> {
 // ---------------------------------------------------------------------------
 
 /// Per-user proportional violation of mean RT vs the UJF reference, for
-/// CFQ/UWFQ/Fair under both partitioning schemes.
-pub fn fig7(workload: &Workload, base: &Config) -> HashMap<String, Vec<(u32, f64)>> {
+/// CFQ/UWFQ/Fair under both partitioning schemes — one 8-cell grid (each
+/// scheme group: UJF reference first, then the compared policies).
+pub fn fig7(workload: &Workload, base: &Config, sweep: &Sweep) -> HashMap<String, Vec<(u32, f64)>> {
+    let schemes = super::TABLE_SCHEMES;
+    let cells: Vec<Config> = schemes
+        .iter()
+        .flat_map(|&s| paper_cells(&base.clone().with_scheme(s)))
+        .collect();
+    let metrics = sweep.run(&cells, |ctx, cfg| run_one_in(ctx, cfg, workload));
+
+    let per_scheme = cells.len() / schemes.len();
     let mut out = HashMap::new();
-    for scheme in [SchemeKind::Size, SchemeKind::Runtime] {
-        let scheme_base = base.clone().with_scheme(scheme);
-        let ujf = run_ujf_reference(&scheme_base, workload);
-        for policy in [PolicyKind::Fair, PolicyKind::Cfq, PolicyKind::Uwfq] {
-            let cfg = scheme_base.clone().with_policy(policy);
-            let m = run_one(&cfg, workload);
-            out.insert(cfg.label(), user_violations_vs_ujf(&m, &ujf));
+    for group in metrics.chunks(per_scheme) {
+        let ujf = &group[0];
+        for m in &group[1..] {
+            out.insert(m.label.clone(), user_violations_vs_ujf(m, ujf));
         }
     }
     out
@@ -238,7 +257,7 @@ mod tests {
 
     #[test]
     fn fig3_runtime_partitioning_beats_skew() {
-        let f = fig3(&base());
+        let f = fig3(&base(), &Sweep::seq());
         assert_eq!(f.runs.len(), 2);
         let default_rt = f.runs[0].1;
         let runtime_rt = f.runs[1].1;
@@ -252,7 +271,7 @@ mod tests {
 
     #[test]
     fn fig4_inversion_mitigated() {
-        let f = fig4(&base());
+        let f = fig4(&base(), &Sweep::seq());
         let default_hi = f.runs[0].1;
         let runtime_hi = f.runs[1].1;
         assert!(
@@ -265,12 +284,18 @@ mod tests {
     fn fig6_series_cover_all_schedulers() {
         let mut cfg = base();
         cfg.seed = 3;
-        let series = fig6(3, &cfg);
+        let series = fig6(3, &cfg, &Sweep::seq());
         assert_eq!(series.len(), 4);
         assert!(series.iter().all(|s| !s.points.is_empty()));
         // CDF fractions end at 1.0.
         for s in &series {
             assert!((s.points.last().unwrap().1 - 1.0).abs() < 1e-9);
+        }
+        // Parallel sweep: same series, same order.
+        let par = fig6(3, &cfg, &Sweep::new(4));
+        for (a, b) in series.iter().zip(&par) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.points, b.points);
         }
     }
 
@@ -279,8 +304,8 @@ mod tests {
         let dir = std::env::temp_dir().join("uwfq_figs_test");
         std::fs::create_dir_all(&dir).unwrap();
         let d = dir.to_str().unwrap();
-        write_fig3_csv(d, &fig3(&base())).unwrap();
-        write_fig4_csv(d, &fig4(&base())).unwrap();
+        write_fig3_csv(d, &fig3(&base(), &Sweep::seq())).unwrap();
+        write_fig4_csv(d, &fig4(&base(), &Sweep::seq())).unwrap();
         assert!(dir.join("fig3_gantt.csv").exists());
         assert!(dir.join("fig3_completion.csv").exists());
         assert!(dir.join("fig4_inversion.csv").exists());

@@ -5,6 +5,11 @@
 //! * [`tables`] — Table 1 (micro scenarios) and Table 2 (macro).
 //! * [`figures`] — Fig. 3 (skew), Fig. 4 (priority inversion), Fig. 5/6
 //!   (CDFs), Fig. 7 (per-user violations).
+//!
+//! Every grid is expressed as a list of independent cells over the
+//! [`crate::sweep`] engine: the caller passes a [`crate::sweep::Sweep`]
+//! handle — `Sweep::seq()` for the sequential reference, `Sweep::new(n)`
+//! for n-worker execution with byte-identical output.
 
 pub mod figures;
 pub mod tables;
@@ -13,16 +18,26 @@ use std::collections::HashMap;
 
 use crate::config::Config;
 use crate::metrics::report::RunMetrics;
-use crate::sim;
+use crate::sim::SimCtx;
 use crate::workload::Workload;
 
 /// Idle-system response time per distinct job name under `cfg`
-/// (slowdown denominators, computed once per job shape).
+/// (slowdown denominators, computed once per job shape and memoized
+/// process-wide by template — see [`crate::sim::idle_response_time`]).
 pub fn idle_map(cfg: &Config, workload: &Workload) -> HashMap<String, f64> {
+    idle_map_in(&mut SimCtx::new(), cfg, workload)
+}
+
+/// [`idle_map`] on a reusable simulation context (sweep-worker path).
+pub fn idle_map_in(
+    ctx: &mut SimCtx,
+    cfg: &Config,
+    workload: &Workload,
+) -> HashMap<String, f64> {
     let mut map = HashMap::new();
     for job in &workload.jobs {
         if !map.contains_key(&job.name) {
-            map.insert(job.name.clone(), sim::idle_response_time(cfg, job));
+            map.insert(job.name.clone(), ctx.idle_response_time(cfg, job));
         }
     }
     map
@@ -31,8 +46,15 @@ pub fn idle_map(cfg: &Config, workload: &Workload) -> HashMap<String, f64> {
 /// Run one (config, workload) experiment end to end and aggregate
 /// metrics. Deterministic for a given config seed.
 pub fn run_one(cfg: &Config, workload: &Workload) -> RunMetrics {
-    let idle = idle_map(cfg, workload);
-    let report = sim::simulate(cfg.clone(), workload.jobs.clone());
+    run_one_in(&mut SimCtx::new(), cfg, workload)
+}
+
+/// [`run_one`] on a reusable simulation context — the grid-cell body:
+/// sweep workers call this with their per-worker context so one
+/// `SchedCore`'s allocations serve every cell the worker claims.
+pub fn run_one_in(ctx: &mut SimCtx, cfg: &Config, workload: &Workload) -> RunMetrics {
+    let idle = idle_map_in(ctx, cfg, workload);
+    let report = ctx.simulate(cfg, workload.jobs.clone());
     RunMetrics::build(
         &report.label,
         workload,
@@ -48,6 +70,44 @@ pub fn run_one(cfg: &Config, workload: &Workload) -> RunMetrics {
 pub fn run_ujf_reference(cfg: &Config, workload: &Workload) -> RunMetrics {
     let ujf_cfg = cfg.clone().with_policy(crate::sched::PolicyKind::Ujf);
     run_one(&ujf_cfg, workload)
+}
+
+/// The partitioning schemes of the paper's macro grids (Table 2 / Fig 7
+/// iterate exactly these, in this order).
+pub(crate) const TABLE_SCHEMES: [crate::partition::SchemeKind; 2] = [
+    crate::partition::SchemeKind::Size,
+    crate::partition::SchemeKind::Runtime,
+];
+
+/// The paper-table row configs for one base config: the UJF reference
+/// first (cell 0), then every non-UJF paper scheduler in table order —
+/// the standard cell list for Table 1/2 and Fig. 7 grids.
+pub(crate) fn paper_cells(base: &Config) -> Vec<Config> {
+    let mut cells = vec![base.clone().with_policy(crate::sched::PolicyKind::Ujf)];
+    for policy in crate::sched::PolicyKind::PAPER {
+        if policy != crate::sched::PolicyKind::Ujf {
+            cells.push(base.clone().with_policy(policy));
+        }
+    }
+    cells
+}
+
+/// Simulation cells in one paper grid group (UJF reference + non-UJF
+/// rows) — the unit Table 1/2 and Fig. 7 grids are built from.
+fn paper_cell_count() -> usize {
+    paper_cells(&Config::default()).len()
+}
+
+/// Cells in the Table-2 + Fig-7 macro grid — the `BENCH_sweep` speedup
+/// probe's denominator, derived from the actual grid definitions so
+/// cells/s metrics track any change to the policy or scheme lists.
+pub fn macro_grid_cell_count() -> usize {
+    2 * TABLE_SCHEMES.len() * paper_cell_count()
+}
+
+/// Cells in the combined Table-1 grid (both micro scenarios).
+pub fn table1_grid_cell_count() -> usize {
+    2 * paper_cell_count()
 }
 
 /// Render an aligned text table.
@@ -112,6 +172,14 @@ mod tests {
         let idle = idle_map(&cfg, &w);
         assert_eq!(idle.len(), 1); // all jobs are "tiny"
         assert!(idle["tiny"] > 0.0);
+    }
+
+    #[test]
+    fn grid_cell_counts_match_definitions() {
+        // Pin the derived counts: 2 schemes × (1 UJF ref + 3 rows) and
+        // 2 scenarios × 4 — updated consciously if PAPER/schemes change.
+        assert_eq!(macro_grid_cell_count(), 16);
+        assert_eq!(table1_grid_cell_count(), 8);
     }
 
     #[test]

@@ -1,12 +1,18 @@
 //! Table 1 (micro scenarios 1–2) and Table 2 (macro benchmark)
 //! regeneration (§5.2.2, §5.3.1).
+//!
+//! Both tables are grids of independent simulation cells (UJF reference
+//! first, then the non-UJF paper rows — see [`super::paper_cells`]) run
+//! through the [`crate::sweep`] engine; the fairness columns are computed
+//! at merge time from the UJF cell of the same partitioning scheme, so
+//! parallel and sequential execution render byte-identical tables.
 
-use super::{fmt1, fmt2, render_table, run_one, run_ujf_reference};
+use super::{fmt1, fmt2, render_table, run_one_in, paper_cells};
 use crate::config::Config;
 use crate::metrics::fairness::{fairness_vs_ujf, DvrDenominator, FairnessMetrics};
 use crate::metrics::report::RunMetrics;
-use crate::partition::SchemeKind;
 use crate::sched::PolicyKind;
+use crate::sweep::Sweep;
 use crate::util::csvout::Csv;
 use crate::workload::{scenarios, UserClass, Workload};
 
@@ -33,20 +39,36 @@ pub struct Table1Scenario {
     pub rows: Vec<Table1Row>,
 }
 
-/// Run one scenario across the paper's four schedulers.
+/// Run one scenario across the paper's four schedulers (one 4-cell grid
+/// on the sweep engine).
 pub fn table1_scenario(
     workload: &Workload,
     base: &Config,
     scenario1_classes: bool,
+    sweep: &Sweep,
 ) -> Table1Scenario {
-    let ujf = run_ujf_reference(base, workload);
+    let cells = paper_cells(base);
+    let metrics = sweep.run(&cells, |ctx, cfg| run_one_in(ctx, cfg, workload));
+    table1_rows(workload, metrics, scenario1_classes)
+}
+
+/// Merge one scenario's cell results (UJF reference first, then the
+/// non-UJF paper rows) into table rows — runs after the sweep, in
+/// deterministic cell order. Consumes the results; only the UJF
+/// reference (genuinely used twice) is cloned.
+fn table1_rows(
+    workload: &Workload,
+    metrics: Vec<RunMetrics>,
+    scenario1_classes: bool,
+) -> Table1Scenario {
+    let mut it = metrics.into_iter();
+    let ujf = it.next().expect("UJF reference cell");
     let mut rows = Vec::new();
     for policy in PolicyKind::PAPER {
-        let cfg = base.clone().with_policy(policy);
         let m = if policy == PolicyKind::Ujf {
             ujf.clone()
         } else {
-            run_one(&cfg, workload)
+            it.next().expect("paper row cell")
         };
         let fairness = (policy != PolicyKind::Ujf)
             .then(|| fairness_vs_ujf(&m, &ujf, DvrDenominator::GreaterThanZero));
@@ -64,7 +86,7 @@ pub fn table1_scenario(
             )
         });
         rows.push(Table1Row {
-            label: cfg.label(),
+            label: m.label.clone(),
             rt_avg: m.mean_rt(),
             rt_worst10: m.worst10_rt(),
             sl_avg: m.mean_slowdown(),
@@ -81,14 +103,19 @@ pub fn table1_scenario(
     }
 }
 
-/// Full Table 1: both micro scenarios.
-pub fn table1(seed: u64, base: &Config) -> (Table1Scenario, Table1Scenario) {
+/// Full Table 1: both micro scenarios as one combined 8-cell grid, so a
+/// multi-worker sweep overlaps cells across scenarios.
+pub fn table1(seed: u64, base: &Config, sweep: &Sweep) -> (Table1Scenario, Table1Scenario) {
     let s1 = scenarios::scenario1_default(seed);
     let s2 = scenarios::scenario2_default(seed);
-    (
-        table1_scenario(&s1, base, true),
-        table1_scenario(&s2, base, false),
-    )
+    let cfgs = paper_cells(base);
+    let cells: Vec<(&Workload, &Config)> = [&s1, &s2]
+        .into_iter()
+        .flat_map(|w| cfgs.iter().map(move |c| (w, c)))
+        .collect();
+    let mut metrics = sweep.run(&cells, |ctx, &(w, cfg)| run_one_in(ctx, cfg, w));
+    let m2 = metrics.split_off(cfgs.len());
+    (table1_rows(&s1, metrics, true), table1_rows(&s2, m2, false))
 }
 
 /// Text rendering in the paper's layout.
@@ -189,24 +216,34 @@ pub struct Table2 {
 }
 
 /// Run the macro benchmark: 4 schedulers × {default, runtime} partitioning
-/// (8 rows, as in the paper). DVR/DSR compare against UJF *with the same
-/// partitioning* (§5.1.2).
-pub fn table2(workload: &Workload, base: &Config) -> Table2 {
+/// (8 rows, as in the paper) as one 8-cell grid. DVR/DSR compare against
+/// UJF *with the same partitioning* (§5.1.2): each scheme group's UJF
+/// reference is its cell 0, consumed at merge time.
+pub fn table2(workload: &Workload, base: &Config, sweep: &Sweep) -> Table2 {
+    let schemes = super::TABLE_SCHEMES;
+    let cells: Vec<Config> = schemes
+        .iter()
+        .flat_map(|&s| paper_cells(&base.clone().with_scheme(s)))
+        .collect();
+    let metrics = sweep.run(&cells, |ctx, cfg| run_one_in(ctx, cfg, workload));
+
+    // Consume results scheme group by scheme group (UJF reference first
+    // in each); only the reference, used by every row's fairness
+    // columns, is cloned.
+    let mut it = metrics.into_iter();
     let mut rows = Vec::new();
-    for scheme in [SchemeKind::Size, SchemeKind::Runtime] {
-        let scheme_base = base.clone().with_scheme(scheme);
-        let ujf = run_ujf_reference(&scheme_base, workload);
+    for _scheme in &schemes {
+        let ujf = it.next().expect("UJF reference cell");
         for policy in PolicyKind::PAPER {
-            let cfg = scheme_base.clone().with_policy(policy);
             let m = if policy == PolicyKind::Ujf {
                 ujf.clone()
             } else {
-                run_one(&cfg, workload)
+                it.next().expect("paper row cell")
             };
             let fairness = (policy != PolicyKind::Ujf)
                 .then(|| fairness_vs_ujf(&m, &ujf, DvrDenominator::GreaterThanZero));
             rows.push(Table2Row {
-                label: cfg.label(),
+                label: m.label.clone(),
                 runtime: m.makespan_s,
                 rt_avg: m.mean_rt(),
                 rt_0_80: m.mean_rt_band(0.0, 80.0),
@@ -296,7 +333,7 @@ mod tests {
     #[test]
     fn table1_scenario2_small_runs() {
         let w = scenarios::scenario2(1, 5, 0.5);
-        let s = table1_scenario(&w, &small_base(), false);
+        let s = table1_scenario(&w, &small_base(), false, &Sweep::seq());
         assert_eq!(s.rows.len(), 4);
         // UJF row has no fairness metrics; others do.
         assert!(s.rows.iter().any(|r| r.fairness.is_none()));
@@ -318,7 +355,7 @@ mod tests {
         p.heavy_users = 2;
         p.cores = 8;
         let w = gtrace(5, &p);
-        let t = table2(&w, &small_base());
+        let t = table2(&w, &small_base(), &Sweep::seq());
         assert_eq!(t.rows.len(), 8);
         // -P rows present.
         assert!(t.rows.iter().any(|r| r.label == "UWFQ-P"));
@@ -330,11 +367,21 @@ mod tests {
     }
 
     #[test]
+    fn table1_parallel_rows_match_sequential() {
+        // Grid-level determinism at the unit scale: the 8-cell combined
+        // Table 1 grid renders identically at 1 and 3 workers.
+        let seq = table1(9, &small_base(), &Sweep::seq());
+        let par = table1(9, &small_base(), &Sweep::new(3));
+        assert_eq!(render_table1(&seq.0), render_table1(&par.0));
+        assert_eq!(render_table1(&seq.1), render_table1(&par.1));
+    }
+
+    #[test]
     fn csv_outputs_written() {
         let dir = std::env::temp_dir().join("uwfq_tables_test");
         std::fs::create_dir_all(&dir).unwrap();
         let w = scenarios::scenario2(1, 3, 0.5);
-        let s = table1_scenario(&w, &small_base(), false);
+        let s = table1_scenario(&w, &small_base(), false, &Sweep::seq());
         let p = dir.join("t1.csv");
         write_table1_csv(p.to_str().unwrap(), &s).unwrap();
         let text = std::fs::read_to_string(&p).unwrap();

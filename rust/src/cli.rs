@@ -18,10 +18,11 @@ uwfq — User Weighted Fair Queuing for multi-user Spark-like analytics
 (reproduction of Kažemaks et al., 2025)
 
 USAGE:
-  uwfq reproduce <table1|table2|fig3|fig4|fig5|fig6|fig7|all> [--out DIR] [--seed N] [--quick true]
+  uwfq reproduce <table1|table2|fig3|fig4|fig5|fig6|fig7|all> [--out DIR] [--seed N] [--quick true] [--threads N]
+  uwfq sweep [--threads N] [--out DIR] [--seed N] [--quick true]  # full evaluation grid, all cores
   uwfq run --workload <scenario1|scenario2|gtrace|trace:FILE> [--policy P] [--scheme S]
   uwfq serve [--cores N] [--time-scale F] [--artifacts DIR]   # real PJRT backend demo
-  uwfq ablation [--seed N]                                    # design-choice ablations
+  uwfq ablation [--seed N] [--threads N]                      # design-choice ablations
   uwfq run --workload scenario2 --eventlog trace.jsonl        # emit event log
   uwfq analyze trace.jsonl                                    # post-hoc trace analysis
   uwfq help
@@ -30,6 +31,10 @@ FLAGS (config keys, see config.rs):
   --cores N --atr S --grace_rsec S --task_overhead S --seed N
   --policy fifo|fair|ujf|cfq|uwfq --scheme default|runtime
   --estimator_sigma S --config FILE
+
+  --threads N routes the experiment grid through the parallel sweep
+  engine (N worker threads; 0 = all cores). Output is byte-identical to
+  --threads 1; `reproduce` defaults to 1, `sweep` defaults to 0.
 ";
 
 impl Cli {
@@ -70,7 +75,7 @@ impl Cli {
             match k.as_str() {
                 // harness-only flags, not config keys
                 "config" | "out" | "quick" | "workload" | "time-scale" | "artifacts"
-                | "eventlog" => {}
+                | "eventlog" | "threads" | "bench-json" => {}
                 _ => cfg.set(k, v)?,
             }
         }
@@ -83,6 +88,19 @@ impl Cli {
 
     pub fn flag_or(&self, key: &str, default: &str) -> String {
         self.flag(key).unwrap_or(default).to_string()
+    }
+
+    /// Resolve `--threads` into a worker count: absent → `default`
+    /// (clamped ≥ 1 by [`crate::sweep::auto_threads`] semantics), `0` →
+    /// all available cores, `N` → N.
+    pub fn threads(&self, default: usize) -> Result<usize, String> {
+        match self.flag("threads") {
+            None => Ok(default.max(1)),
+            Some(v) => {
+                let n: usize = v.parse().map_err(|_| format!("bad --threads '{v}'"))?;
+                Ok(crate::sweep::auto_threads(Some(n)))
+            }
+        }
     }
 }
 
@@ -130,5 +148,20 @@ mod tests {
     fn empty_args_give_help() {
         let c = Cli::parse(&[]).unwrap();
         assert_eq!(c.command, "help");
+    }
+
+    #[test]
+    fn threads_flag_is_harness_only() {
+        let c = Cli::parse(&args("sweep --threads 4 --cores 8")).unwrap();
+        // Not a config key: config parses cleanly with --threads present.
+        let cfg = c.config().unwrap();
+        assert_eq!(cfg.cores, 8);
+        assert_eq!(c.threads(1).unwrap(), 4);
+        // Absent → default; 0 → all cores (≥ 1).
+        let d = Cli::parse(&args("reproduce all")).unwrap();
+        assert_eq!(d.threads(1).unwrap(), 1);
+        let z = Cli::parse(&args("sweep --threads 0")).unwrap();
+        assert!(z.threads(1).unwrap() >= 1);
+        assert!(Cli::parse(&args("sweep --threads x")).unwrap().threads(1).is_err());
     }
 }

@@ -89,6 +89,15 @@ impl<T> Slab<T> {
             .expect("slab: write of empty slot")
     }
 
+    /// Drop every live entry and reset the free list, retaining the slot
+    /// vector's allocation. After `clear` the slab is observationally
+    /// identical to a fresh one (inserts fill slots 0, 1, ... again) — the
+    /// sweep engine's per-worker core reuse depends on this equivalence.
+    pub fn clear(&mut self) {
+        self.slots.clear();
+        self.free.clear();
+    }
+
     /// Live entries with their slots (diagnostics / cold paths only).
     pub fn iter(&self) -> impl Iterator<Item = (u32, &T)> {
         self.slots
@@ -135,6 +144,21 @@ mod tests {
         s.remove(b);
         let live: Vec<(u32, u64)> = s.iter().map(|(i, &v)| (i, v)).collect();
         assert_eq!(live, vec![(a, 10), (c, 30)]);
+    }
+
+    #[test]
+    fn clear_behaves_like_fresh() {
+        let mut s: Slab<u64> = Slab::new();
+        let a = s.insert(1);
+        let _ = s.insert(2);
+        s.remove(a);
+        s.clear();
+        assert_eq!(s.len(), 0);
+        assert!(s.is_empty());
+        // Slot numbering restarts exactly like a brand-new slab.
+        assert_eq!(s.insert(7), 0);
+        assert_eq!(s.insert(8), 1);
+        assert_eq!(*s.get(0), 7);
     }
 
     #[test]

@@ -146,9 +146,17 @@ impl SchedCore {
         }
     }
 
-    /// Build a core from a [`Config`] using its policy/scheme/estimator
-    /// settings — the standard constructor for experiments.
-    pub fn from_config(cfg: Config) -> Self {
+    /// Build the policy/partitioner/estimator triple a [`Config`]
+    /// describes (shared by [`SchedCore::from_config`] and
+    /// [`SchedCore::reset`] so both paths are constructed identically).
+    #[allow(clippy::type_complexity)]
+    fn parts_from_config(
+        cfg: &Config,
+    ) -> (
+        Box<dyn Policy>,
+        Box<dyn PartitionScheme>,
+        Box<dyn RuntimeEstimator>,
+    ) {
         let policy = crate::sched::make_policy(cfg.policy, cfg.cores, cfg.grace_rsec);
         let partitioner = crate::partition::make_scheme(
             cfg.scheme,
@@ -161,7 +169,51 @@ impl SchedCore {
         } else {
             Box::new(crate::estimate::Oracle::new())
         };
+        (policy, partitioner, estimator)
+    }
+
+    /// Build a core from a [`Config`] using its policy/scheme/estimator
+    /// settings — the standard constructor for experiments.
+    pub fn from_config(cfg: Config) -> Self {
+        let (policy, partitioner, estimator) = SchedCore::parts_from_config(&cfg);
         SchedCore::new(cfg, policy, partitioner, estimator)
+    }
+
+    /// Re-arm the core for a fresh run under `cfg`, recycling every bulk
+    /// allocation: slab arenas, id→slot maps, the active list, the core
+    /// table, the free-core heap and the scan scratch buffer all keep
+    /// their capacity. The policy, partitioner and estimator are rebuilt
+    /// from the config (they are small and carry per-run state, including
+    /// the noisy estimator's RNG), and all id counters restart — post-reset
+    /// behaviour is observationally identical to
+    /// `SchedCore::from_config(cfg)`, which is what lets the sweep
+    /// engine's workers reuse one core across cells without perturbing
+    /// results. `force_scan_select` is preserved.
+    pub fn reset(&mut self, cfg: Config) {
+        let (policy, partitioner, estimator) = SchedCore::parts_from_config(&cfg);
+        let cores = cfg.cores as usize;
+        self.cfg = cfg;
+        self.policy = policy;
+        self.partitioner = partitioner;
+        self.estimator = estimator;
+        self.jobs.clear();
+        self.stages.clear();
+        self.stage_slots.clear();
+        self.job_slots.clear();
+        self.active.clear();
+        self.cores.clear();
+        self.cores.resize(cores, None);
+        self.free_cores.clear();
+        for c in 0..cores {
+            self.free_cores.push(Reverse(c));
+        }
+        self.next_job = 1;
+        self.next_stage = 1;
+        self.next_task = 1;
+        self.arrival_seq = 0;
+        self.completed.clear();
+        self.task_log.clear();
+        self.views_buf.clear();
     }
 
     // ---- submission -----------------------------------------------------
@@ -555,6 +607,52 @@ mod tests {
         assert!(done.finish > 0);
         // Task log recorded every task.
         assert!(c.task_log.len() >= 3); // >=1 per stage
+    }
+
+    #[test]
+    fn reset_is_observationally_fresh() {
+        // Drive a run to completion, reset, re-run the same workload: ids,
+        // schedules and records must be byte-identical to the first run,
+        // and the arenas must keep their allocation.
+        let cfg = Config {
+            cores: 2,
+            task_overhead: 0.0,
+            log_tasks: true,
+            policy: crate::sched::PolicyKind::Fifo,
+            ..Config::default()
+        };
+        let run = |c: &mut SchedCore| -> (Vec<(u64, TimeUs)>, Vec<(crate::TaskId, usize)>) {
+            c.submit_job(0, job(3, 0, 0.5)).unwrap();
+            c.submit_job(0, job(4, 0, 0.5)).unwrap();
+            let mut now = 0;
+            let mut guard = 0;
+            loop {
+                let launches = c.try_launch(now);
+                if launches.is_empty() && c.busy_cores() == 0 {
+                    break;
+                }
+                let (core_idx, fin) = (0..2)
+                    .filter_map(|i| c.core_state(i).map(|r| (i, r.finish_at)))
+                    .min_by_key(|&(_, f)| f)
+                    .unwrap();
+                now = fin;
+                c.task_finished(now, core_idx);
+                guard += 1;
+                assert!(guard < 1000, "no progress");
+            }
+            (
+                c.completed.iter().map(|r| (r.job, r.finish)).collect(),
+                c.task_log.iter().map(|t| (t.task, t.core)).collect(),
+            )
+        };
+        let mut c = SchedCore::from_config(cfg.clone());
+        let first = run(&mut c);
+        let caps = c.arena_capacities();
+        c.reset(cfg);
+        assert!(c.is_idle());
+        let second = run(&mut c);
+        assert_eq!(first, second, "reset run diverged from fresh run");
+        assert_eq!(c.arena_capacities(), caps, "reset dropped arena slots");
     }
 
     #[test]

@@ -60,6 +60,12 @@ impl CostProfile {
         CostProfile { regions }
     }
 
+    /// The raw `(fraction, weight)` regions — used by the idle-response
+    /// memoization to derive a user-independent shape key.
+    pub fn regions(&self) -> &[(f64, f64)] {
+        &self.regions
+    }
+
     /// Fraction of total stage cost falling in input range `[a, b)`.
     /// Normalized so that `integral(0, 1) == 1`.
     pub fn integral(&self, a: f64, b: f64) -> f64 {

@@ -26,6 +26,8 @@
 //!   the Google-trace-shaped macro workload (§5.3).
 //! * [`metrics`] — response times, slowdowns, DVR/DSR (Eqs. 1–3), CDFs.
 //! * [`bench`] — the experiment harness regenerating every table and figure.
+//! * [`sweep`] — the parallel sweep engine: deterministic multi-core
+//!   execution of the benchmark grid (byte-identical to sequential).
 //! * [`util`] — offline substrates: deterministic RNG, samplers, JSON/CSV
 //!   writers, a bench harness and a property-testing kit (no external crates
 //!   besides `xla`/`anyhow` are available in this environment).
@@ -45,6 +47,7 @@ pub mod partition;
 pub mod runtime;
 pub mod sched;
 pub mod sim;
+pub mod sweep;
 pub mod util;
 pub mod workload;
 

@@ -4,10 +4,14 @@
 
 use std::path::Path;
 use std::process::ExitCode;
+use std::time::Instant;
 
 use uwfq::bench::{figures, tables};
 use uwfq::cli::{Cli, USAGE};
+use uwfq::config::Config;
 use uwfq::metrics::fairness::{fairness_vs_ujf, DvrDenominator};
+use uwfq::sweep::Sweep;
+use uwfq::util::benchkit::JsonSink;
 use uwfq::workload::{gtrace, scenarios, tracefile, Workload};
 
 fn main() -> ExitCode {
@@ -21,6 +25,7 @@ fn main() -> ExitCode {
     };
     let result = match cli.command.as_str() {
         "reproduce" => reproduce(&cli),
+        "sweep" => sweep_cmd(&cli),
         "run" => run(&cli),
         "serve" => serve(&cli),
         "ablation" => ablation(&cli),
@@ -40,6 +45,20 @@ fn main() -> ExitCode {
     }
 }
 
+/// The Table-2 / Fig-7 macro workload, shrunk under `--quick`.
+fn macro_workload(quick: bool, seed: u64, base: &Config) -> Workload {
+    if quick {
+        let mut p = gtrace::GtraceParams::default();
+        p.window_s = 120.0;
+        p.users = 10;
+        p.heavy_users = 3;
+        p.cores = base.cores;
+        gtrace::gtrace(seed, &p)
+    } else {
+        figures::default_macro_workload(seed)
+    }
+}
+
 fn reproduce(cli: &Cli) -> Result<(), String> {
     let what = cli
         .positional
@@ -54,36 +73,27 @@ fn reproduce(cli: &Cli) -> Result<(), String> {
         base.cores = 8;
     }
     let seed = base.seed;
+    // Grids route through the sweep engine; `--threads 1` (the default
+    // here) is the sequential reference, more workers give byte-identical
+    // output faster.
+    let swp = Sweep::new(cli.threads(1)?);
     let io = |e: std::io::Error| e.to_string();
 
-    let macro_workload = || -> Workload {
-        if quick {
-            let mut p = gtrace::GtraceParams::default();
-            p.window_s = 120.0;
-            p.users = 10;
-            p.heavy_users = 3;
-            p.cores = base.cores;
-            gtrace::gtrace(seed, &p)
-        } else {
-            figures::default_macro_workload(seed)
-        }
-    };
-
     if matches!(what, "table1" | "all") {
-        let (s1, s2) = tables::table1(seed, &base);
+        let (s1, s2) = tables::table1(seed, &base, &swp);
         println!("{}", tables::render_table1(&s1));
         println!("{}", tables::render_table1(&s2));
         tables::write_table1_csv(&format!("{out}/table1_scenario1.csv"), &s1).map_err(io)?;
         tables::write_table1_csv(&format!("{out}/table1_scenario2.csv"), &s2).map_err(io)?;
     }
     if matches!(what, "table2" | "all") {
-        let w = macro_workload();
-        let t2 = tables::table2(&w, &base);
+        let w = macro_workload(quick, seed, &base);
+        let t2 = tables::table2(&w, &base, &swp);
         println!("{}", tables::render_table2(&t2));
         tables::write_table2_csv(&format!("{out}/table2_macro.csv"), &t2).map_err(io)?;
     }
     if matches!(what, "fig3" | "all") {
-        let f = figures::fig3(&base);
+        let f = figures::fig3(&base, &swp);
         println!("== Fig 3 / task skew ==");
         for (label, rt, _) in &f.runs {
             println!("  {label:<10} completion {rt:.2} s");
@@ -91,7 +101,7 @@ fn reproduce(cli: &Cli) -> Result<(), String> {
         figures::write_fig3_csv(&out, &f).map_err(io)?;
     }
     if matches!(what, "fig4" | "all") {
-        let f = figures::fig4(&base);
+        let f = figures::fig4(&base, &swp);
         println!("== Fig 4 / priority inversion ==");
         for (label, hi, lo) in &f.runs {
             println!("  {label:<10} high-prio RT {hi:.2} s   low-prio RT {lo:.2} s");
@@ -99,22 +109,132 @@ fn reproduce(cli: &Cli) -> Result<(), String> {
         figures::write_fig4_csv(&out, &f).map_err(io)?;
     }
     if matches!(what, "fig5" | "all") {
-        let s = figures::fig5(seed, &base);
+        let s = figures::fig5(seed, &base, &swp);
         figures::write_fig5_csv(&out, &s).map_err(io)?;
         println!("== Fig 5 → {out}/fig5_infrequent_cdf.csv ==");
     }
     if matches!(what, "fig6" | "all") {
-        let s = figures::fig6(seed, &base);
+        let s = figures::fig6(seed, &base, &swp);
         figures::write_fig6_csv(&out, &s).map_err(io)?;
         println!("== Fig 6 → {out}/fig6_completion_cdf.csv ==");
     }
     if matches!(what, "fig7" | "all") {
-        let w = macro_workload();
-        let f = figures::fig7(&w, &base);
+        let w = macro_workload(quick, seed, &base);
+        let f = figures::fig7(&w, &base, &swp);
         figures::write_fig7_csv(&out, &f).map_err(io)?;
         println!("== Fig 7 → {out}/fig7_user_violations.csv ==");
     }
     println!("\nreproduce '{what}' done → {out}/");
+    Ok(())
+}
+
+/// `uwfq sweep` — the whole evaluation grid on all cores: regenerates
+/// every table and figure through the parallel sweep engine (output
+/// byte-identical to `reproduce --threads 1`), times the macro grid at 1
+/// thread vs N, and records cells/s + speedup in `BENCH_sweep.json`.
+fn sweep_cmd(cli: &Cli) -> Result<(), String> {
+    let out = cli.flag_or("out", "out");
+    std::fs::create_dir_all(&out).map_err(|e| e.to_string())?;
+    let mut base = cli.config()?;
+    let quick = cli.flag("quick") == Some("true");
+    if quick {
+        base.cores = 8;
+    }
+    let seed = base.seed;
+    let threads = cli.threads(uwfq::sweep::auto_threads(None))?;
+    let par = Sweep::new(threads);
+    let io = |e: std::io::Error| e.to_string();
+
+    let w = macro_workload(quick, seed, &base);
+    println!(
+        "sweep: {} worker threads; macro workload {} jobs / {} users",
+        par.threads(),
+        w.jobs.len(),
+        w.users().len()
+    );
+
+    // Prewarm the process-wide idle-response memo cache so the 1-thread
+    // and N-thread probes below time identical work (slowdown
+    // denominators would otherwise be computed once, by whichever probe
+    // runs first).
+    for scheme in [uwfq::partition::SchemeKind::Size, uwfq::partition::SchemeKind::Runtime] {
+        uwfq::bench::idle_map(&base.clone().with_scheme(scheme), &w);
+    }
+
+    // Speedup probe: the macro grid (Table 2 + Fig 7), sequential first,
+    // then — when more than one worker was requested — parallel. Cells/s
+    // on this grid is the headline number tracked across PRs in
+    // BENCH_sweep.json.
+    let macro_cells = uwfq::bench::macro_grid_cell_count() as f64;
+    let t0 = Instant::now();
+    let mut t2 = tables::table2(&w, &base, &Sweep::seq());
+    let mut f7 = figures::fig7(&w, &base, &Sweep::seq());
+    let seq_s = t0.elapsed().as_secs_f64().max(1e-9);
+    // None when threads == 1: a second probe would only duplicate the
+    // sequential one and collide with its metric names.
+    let mut par_s = None;
+    if threads > 1 {
+        let t0 = Instant::now();
+        let t2_par = tables::table2(&w, &base, &par);
+        let f7_par = figures::fig7(&w, &base, &par);
+        par_s = Some(t0.elapsed().as_secs_f64().max(1e-9));
+        // Determinism guard at the user-visible boundary (the
+        // `sweep_differential` test covers every CSV byte).
+        if tables::render_table2(&t2_par) != tables::render_table2(&t2) {
+            return Err("parallel sweep diverged from sequential table output".into());
+        }
+        t2 = t2_par;
+        f7 = f7_par;
+    }
+
+    // The rest of the evaluation, all parallel.
+    let (s1, s2) = tables::table1(seed, &base, &par);
+    let f5 = figures::fig5(seed, &base, &par);
+    let f6 = figures::fig6(seed, &base, &par);
+    let f3 = figures::fig3(&base, &par);
+    let f4 = figures::fig4(&base, &par);
+
+    println!("{}", tables::render_table1(&s1));
+    println!("{}", tables::render_table1(&s2));
+    println!("{}", tables::render_table2(&t2));
+    tables::write_table1_csv(&format!("{out}/table1_scenario1.csv"), &s1).map_err(io)?;
+    tables::write_table1_csv(&format!("{out}/table1_scenario2.csv"), &s2).map_err(io)?;
+    tables::write_table2_csv(&format!("{out}/table2_macro.csv"), &t2).map_err(io)?;
+    figures::write_fig3_csv(&out, &f3).map_err(io)?;
+    figures::write_fig4_csv(&out, &f4).map_err(io)?;
+    figures::write_fig5_csv(&out, &f5).map_err(io)?;
+    figures::write_fig6_csv(&out, &f6).map_err(io)?;
+    figures::write_fig7_csv(&out, &f7).map_err(io)?;
+
+    let mut sink = JsonSink::new();
+    sink.metric("sweep/threads", threads as f64);
+    sink.metric("sweep/macro_grid_cells", macro_cells);
+    sink.metric("sweep/macro_grid_seq_s", seq_s);
+    sink.metric("sweep/cells_per_s_1t", macro_cells / seq_s);
+    if let Some(ps) = par_s {
+        sink.metric("sweep/macro_grid_par_s", ps);
+        sink.metric(&format!("sweep/cells_per_s_{threads}t"), macro_cells / ps);
+        sink.metric("sweep/speedup", seq_s / ps);
+    }
+    let (hits, misses) = uwfq::sim::idle_cache_stats();
+    sink.metric("sweep/idle_cache_hits", hits as f64);
+    sink.metric("sweep/idle_cache_misses", misses as f64);
+    let bench_path = cli.flag_or("bench-json", &format!("{out}/BENCH_sweep.json"));
+    sink.write(&bench_path).map_err(io)?;
+    match par_s {
+        Some(ps) => println!(
+            "macro grid: {:.2} cells/s at 1 thread → {:.2} cells/s at {} threads ({:.2}×)",
+            macro_cells / seq_s,
+            macro_cells / ps,
+            threads,
+            seq_s / ps
+        ),
+        None => println!(
+            "macro grid: {:.2} cells/s at 1 thread (single-worker run, no speedup probe)",
+            macro_cells / seq_s
+        ),
+    }
+    println!("sweep done → {out}/ (bench → {bench_path})");
     Ok(())
 }
 
@@ -245,14 +365,16 @@ fn serve(cli: &Cli) -> Result<(), String> {
 
 fn ablation(cli: &Cli) -> Result<(), String> {
     // Design-choice ablations (DESIGN.md §5): user-context vs job-context
-    // vs both, and ATR sensitivity.
+    // vs both, and ATR sensitivity. Both grids route through the sweep
+    // engine (`--threads N` parallelizes them, output unchanged).
     let base = cli.config()?;
     let seed = base.seed;
+    let swp = Sweep::new(cli.threads(1)?);
     println!("== ablation: scheduler context (scenario 1) ==");
     println!("  CFQ   = job deadlines, no user context");
     println!("  UJF   = user fairness, no deadlines");
     println!("  UWFQ  = both (the paper's point)\n");
-    let (s1, _) = tables::table1(seed, &base);
+    let (s1, _) = tables::table1(seed, &base, &swp);
     println!("{}", tables::render_table1(&s1));
 
     println!("== ablation: ATR sensitivity (macro, UWFQ-P) ==");
@@ -262,13 +384,20 @@ fn ablation(cli: &Cli) -> Result<(), String> {
     p.heavy_users = 3;
     p.cores = base.cores;
     let wm = gtrace::gtrace(seed, &p);
-    for atr in [0.1, 0.25, 0.5, 1.0, 2.0, 5.0] {
-        let mut cfg = base
-            .clone()
-            .with_policy(uwfq::sched::PolicyKind::Uwfq)
-            .with_scheme(uwfq::partition::SchemeKind::Runtime);
-        cfg.atr = atr;
-        let m = uwfq::bench::run_one(&cfg, &wm);
+    let atrs = [0.1, 0.25, 0.5, 1.0, 2.0, 5.0];
+    let cells: Vec<Config> = atrs
+        .iter()
+        .map(|&atr| {
+            let mut cfg = base
+                .clone()
+                .with_policy(uwfq::sched::PolicyKind::Uwfq)
+                .with_scheme(uwfq::partition::SchemeKind::Runtime);
+            cfg.atr = atr;
+            cfg
+        })
+        .collect();
+    let metrics = swp.run(&cells, |ctx, cfg| uwfq::bench::run_one_in(ctx, cfg, &wm));
+    for (atr, m) in atrs.iter().zip(&metrics) {
         println!(
             "  ATR {atr:>5.2} s → RT avg {:.2} s, makespan {:.1} s",
             m.mean_rt(),

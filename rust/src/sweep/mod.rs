@@ -1,0 +1,213 @@
+//! The parallel sweep engine — deterministic multi-core execution of
+//! experiment grids.
+//!
+//! The paper's evaluation (§5.2–§5.3) is a grid: every table, figure and
+//! ablation runs (policy × partition-scheme × workload × seed) cells. Each
+//! cell is an independent deterministic simulation, so the grid itself —
+//! not just one simulation — should saturate the machine. This module
+//! runs cells concurrently while keeping the output **byte-identical** to
+//! sequential execution:
+//!
+//! * **Work distribution** is an atomic take-a-number queue
+//!   ([`queue::IndexQueue`]) over the cell list — no channels, no locks,
+//!   no crates; `std::thread::scope` keeps borrows plain references, so
+//!   the build stays offline and dependency-free.
+//! * **Determinism by merge order, not execution order**: workers return
+//!   `(cell index, result)` pairs and [`run_cells`] writes them back into
+//!   cell order. Since every cell is a deterministic function of its
+//!   inputs (the simulator is seeded and single-threaded per cell), the
+//!   merged vector is identical no matter how cells interleave across
+//!   threads — verified end-to-end by the `sweep_differential` test,
+//!   which asserts byte-identical table/CSV output at 1 vs N threads.
+//! * **Allocation reuse**: each worker owns one [`SimCtx`] whose
+//!   [`crate::core::SchedCore`] is recycled between cells
+//!   ([`crate::core::SchedCore::reset`]) — slab arenas, heaps and scratch
+//!   buffers stay warm instead of being rebuilt per run. Shared-read
+//!   inputs (workloads) are borrowed by the cells and cloned only inside
+//!   the worker that runs the cell.
+//!
+//! The bench layer ([`crate::bench`]) expresses every table/figure grid
+//! as a cell list over this engine; `uwfq sweep --threads N` drives the
+//! whole evaluation through it and records cells/s in `BENCH_sweep.json`.
+
+pub mod queue;
+
+use self::queue::IndexQueue;
+use crate::sim::SimCtx;
+
+/// Handle describing how grids should execute: `threads == 1` is the
+/// sequential reference path (one worker, in-order), `threads > 1` the
+/// parallel path with identical output. Passed through the bench layer so
+/// every grid routes through the same engine.
+#[derive(Clone, Copy, Debug)]
+pub struct Sweep {
+    threads: usize,
+}
+
+impl Sweep {
+    /// Sequential execution — the reference semantics.
+    pub fn seq() -> Sweep {
+        Sweep { threads: 1 }
+    }
+
+    /// Parallel execution on `threads` workers (clamped to ≥ 1).
+    pub fn new(threads: usize) -> Sweep {
+        Sweep {
+            threads: threads.max(1),
+        }
+    }
+
+    /// Parallel execution on all available cores.
+    pub fn auto() -> Sweep {
+        Sweep::new(auto_threads(None))
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f` over every cell, merging results in cell order. See
+    /// [`run_cells`].
+    pub fn run<C, R, F>(&self, cells: &[C], f: F) -> Vec<R>
+    where
+        C: Sync,
+        R: Send,
+        F: Fn(&mut SimCtx, &C) -> R + Sync,
+    {
+        run_cells(cells, self.threads, f)
+    }
+}
+
+impl Default for Sweep {
+    fn default() -> Self {
+        Sweep::seq()
+    }
+}
+
+/// Resolve a `--threads` request: `None` or `Some(0)` means "all cores".
+pub fn auto_threads(requested: Option<usize>) -> usize {
+    match requested {
+        Some(n) if n >= 1 => n,
+        _ => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+    }
+}
+
+/// Execute `f(ctx, &cells[i])` for every cell and return the results **in
+/// cell order**, regardless of which worker ran which cell. With
+/// `threads == 1` (or ≤ 1 cell) this degenerates to a plain in-order loop
+/// over one reused [`SimCtx`] — the reference the parallel path is
+/// byte-compared against.
+pub fn run_cells<C, R, F>(cells: &[C], threads: usize, f: F) -> Vec<R>
+where
+    C: Sync,
+    R: Send,
+    F: Fn(&mut SimCtx, &C) -> R + Sync,
+{
+    let threads = threads.max(1).min(cells.len().max(1));
+    if threads == 1 {
+        let mut ctx = SimCtx::new();
+        return cells.iter().map(|c| f(&mut ctx, c)).collect();
+    }
+
+    let queue = IndexQueue::new(cells.len());
+    let parts: Vec<Vec<(usize, R)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                s.spawn(|| {
+                    // One recycled core per worker; cells only borrow
+                    // shared inputs and clone them here, inside the
+                    // worker that runs the cell.
+                    let mut ctx = SimCtx::new();
+                    let mut out: Vec<(usize, R)> = Vec::new();
+                    while let Some(i) = queue.claim() {
+                        out.push((i, f(&mut ctx, &cells[i])));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("sweep worker panicked"))
+            .collect()
+    });
+
+    // Deterministic merge: results land in cell order.
+    let mut slots: Vec<Option<R>> = (0..cells.len()).map(|_| None).collect();
+    for part in parts {
+        for (i, r) in part {
+            debug_assert!(slots[i].is_none(), "cell {i} ran twice");
+            slots[i] = Some(r);
+        }
+    }
+    slots
+        .into_iter()
+        .map(|r| r.expect("cell never claimed"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::core::job::JobSpec;
+    use crate::sched::PolicyKind;
+
+    #[test]
+    fn results_arrive_in_cell_order() {
+        // Cells with wildly uneven work: late cells finish before early
+        // ones on the worker pool, but the merge restores cell order.
+        let cells: Vec<u64> = vec![400_000, 7, 90_000, 1, 50_000, 3, 2, 600_000];
+        let expect: Vec<u64> = cells.iter().map(|&n| (0..n).sum()).collect();
+        for threads in [1, 2, 4, 16] {
+            let got = run_cells(&cells, threads, |_, &n| (0..n).sum::<u64>());
+            assert_eq!(got, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn more_workers_than_cells_is_fine() {
+        let got = run_cells(&[10u64, 20], 8, |_, &n| n * 2);
+        assert_eq!(got, vec![20, 40]);
+        let empty: Vec<u64> = run_cells(&[], 4, |_, &n: &u64| n);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn parallel_simulation_grid_matches_sequential() {
+        // The real cell type: (policy, workload) simulations. Parallel
+        // output must equal the sequential reference exactly.
+        let jobs: Vec<JobSpec> = (0..60)
+            .map(|i| {
+                JobSpec::three_phase(
+                    (i % 7) as u32,
+                    &format!("g{i}"),
+                    (i as u64) * 40_000,
+                    0.4 + (i % 5) as f64 * 0.3,
+                    (32 + (i as u64 % 3) * 32) << 20,
+                    4,
+                    None,
+                )
+            })
+            .collect();
+        let cells: Vec<Config> = PolicyKind::ALL
+            .iter()
+            .map(|&p| Config::default().with_cores(8).with_policy(p))
+            .collect();
+        let run = |threads: usize| -> Vec<Vec<(u64, u64)>> {
+            run_cells(&cells, threads, |ctx, cfg| {
+                ctx.simulate(cfg, jobs.clone())
+                    .completed
+                    .iter()
+                    .map(|c| (c.job, c.finish))
+                    .collect()
+            })
+        };
+        let seq = run(1);
+        assert!(seq.iter().all(|r| r.len() == 60));
+        assert_eq!(run(3), seq);
+        assert_eq!(run(5), seq);
+    }
+}

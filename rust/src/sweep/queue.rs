@@ -1,0 +1,78 @@
+//! Lock-free work distribution for the sweep engine.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// An atomic take-a-number queue over cell indices `0..len`: each worker
+/// claims the next unclaimed index with one `fetch_add`. Claim order is
+/// nondeterministic under contention — determinism is restored at merge
+/// time, because every claimed index travels with its result and the
+/// merge writes results back in index order (see
+/// [`super::run_cells`]).
+pub struct IndexQueue {
+    next: AtomicUsize,
+    len: usize,
+}
+
+impl IndexQueue {
+    pub fn new(len: usize) -> IndexQueue {
+        IndexQueue {
+            next: AtomicUsize::new(0),
+            len,
+        }
+    }
+
+    /// Claim the next cell index, or `None` once the grid is exhausted.
+    /// `Relaxed` suffices: the counter is the only state shared through
+    /// the queue, and the scoped join at the end of the sweep provides
+    /// the synchronization for the results themselves.
+    pub fn claim(&self) -> Option<usize> {
+        let i = self.next.fetch_add(1, Ordering::Relaxed);
+        (i < self.len).then_some(i)
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn claims_each_index_exactly_once() {
+        let q = IndexQueue::new(5);
+        let mut seen: Vec<usize> = std::iter::from_fn(|| q.claim()).collect();
+        seen.sort();
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+        assert_eq!(q.claim(), None, "exhausted queue stays exhausted");
+    }
+
+    #[test]
+    fn concurrent_claims_partition_the_range() {
+        let q = IndexQueue::new(1000);
+        let parts: Vec<Vec<usize>> = std::thread::scope(|s| {
+            (0..4)
+                .map(|_| s.spawn(|| std::iter::from_fn(|| q.claim()).collect::<Vec<_>>()))
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        let mut all: Vec<usize> = parts.into_iter().flatten().collect();
+        all.sort();
+        assert_eq!(all, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_queue() {
+        let q = IndexQueue::new(0);
+        assert!(q.is_empty());
+        assert_eq!(q.len(), 0);
+        assert_eq!(q.claim(), None);
+    }
+}

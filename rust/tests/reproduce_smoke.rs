@@ -12,6 +12,7 @@
 
 use uwfq::bench::{figures, tables};
 use uwfq::config::Config;
+use uwfq::sweep::Sweep;
 use uwfq::workload::gtrace::{gtrace, GtraceParams};
 
 fn base() -> Config {
@@ -24,7 +25,7 @@ fn row<'a>(rows: &'a [tables::Table1Row], label: &str) -> &'a tables::Table1Row 
 
 #[test]
 fn scenario1_shape_claims() {
-    let (s1, _) = tables::table1(42, &base());
+    let (s1, _) = tables::table1(42, &base(), &Sweep::seq());
     let fair = row(&s1.rows, "Fair");
     let ujf = row(&s1.rows, "UJF");
     let cfq = row(&s1.rows, "CFQ");
@@ -61,7 +62,7 @@ fn scenario1_shape_claims() {
 
 #[test]
 fn scenario2_shape_claims() {
-    let (_, s2) = tables::table1(42, &base());
+    let (_, s2) = tables::table1(42, &base(), &Sweep::seq());
     let fair = row(&s2.rows, "Fair");
     let ujf = row(&s2.rows, "UJF");
     let cfq = row(&s2.rows, "CFQ");
@@ -88,7 +89,7 @@ fn macro_shape_claims() {
     p.users = 12;
     p.heavy_users = 3;
     let w = gtrace(42, &p);
-    let t2 = tables::table2(&w, &base());
+    let t2 = tables::table2(&w, &base(), &Sweep::seq());
     let get = |label: &str| t2.rows.iter().find(|r| r.label == label).unwrap();
 
     // Runtime partitioning massively improves small-job RT for the
@@ -113,14 +114,14 @@ fn macro_shape_claims() {
 
 #[test]
 fn fig3_fig4_partitioning_claims() {
-    let f3 = figures::fig3(&base());
+    let f3 = figures::fig3(&base(), &Sweep::seq());
     assert!(
         f3.runs[1].1 < 0.6 * f3.runs[0].1,
         "runtime partitioning must cut the skewed job's completion: {} vs {}",
         f3.runs[1].1,
         f3.runs[0].1
     );
-    let f4 = figures::fig4(&base());
+    let f4 = figures::fig4(&base(), &Sweep::seq());
     let (default_hi, runtime_hi) = (f4.runs[0].1, f4.runs[1].1);
     assert!(
         runtime_hi < 0.7 * default_hi,
@@ -132,7 +133,7 @@ fn fig3_fig4_partitioning_claims() {
 fn fig5_fig6_cdf_claims() {
     // Fig. 5: UWFQ's infrequent-user CDF dominates Fair's (more mass at
     // low response times).
-    let series = figures::fig5(42, &base());
+    let series = figures::fig5(42, &base(), &Sweep::seq());
     let get = |name: &str| series.iter().find(|s| s.label == name).unwrap();
     let (uwfq, fair) = (get("UWFQ"), get("Fair"));
     let probe = fair.points[fair.points.len() / 2].0; // Fair's median RT
@@ -143,7 +144,7 @@ fn fig5_fig6_cdf_claims() {
 
     // Fig. 6: UWFQ completes jobs gradually; CFQ finishes late (at 60% of
     // CFQ's final completion time, UWFQ has finished more jobs).
-    let series6 = figures::fig6(42, &base());
+    let series6 = figures::fig6(42, &base(), &Sweep::seq());
     let get6 = |name: &str| series6.iter().find(|s| s.label == name).unwrap();
     let (uwfq6, cfq6) = (get6("UWFQ"), get6("CFQ"));
     let t60 = cfq6.points.last().unwrap().0 * 0.6;

@@ -1,0 +1,117 @@
+//! Grid-level differential test: a full Table-1 + Table-2 + Fig-5/6/7
+//! sweep at `--threads N` (default 4, `UWFQ_SWEEP_THREADS` overrides —
+//! CI runs a {1, 4} matrix) must produce **byte-identical** rendered
+//! tables and CSV files to the sequential (1-thread) reference.
+//!
+//! This extends PR 1's incremental-vs-scan equivalence discipline from
+//! the single-simulation level to the grid level: the sweep engine may
+//! reorder cell *execution* arbitrarily across workers, but never cell
+//! *results*.
+
+use std::path::PathBuf;
+
+use uwfq::bench::{figures, tables};
+use uwfq::config::Config;
+use uwfq::sweep::Sweep;
+use uwfq::workload::gtrace::{gtrace, GtraceParams};
+use uwfq::workload::Workload;
+
+fn par_sweep() -> Sweep {
+    let threads = std::env::var("UWFQ_SWEEP_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(4);
+    Sweep::new(threads)
+}
+
+fn base() -> Config {
+    Config::default().with_cores(8)
+}
+
+/// A scaled-down (but structurally complete) macro workload so the full
+/// 16-cell Table-2 + Fig-7 grid stays test-fast.
+fn macro_workload() -> Workload {
+    let mut p = GtraceParams::default();
+    p.window_s = 90.0;
+    p.users = 8;
+    p.heavy_users = 2;
+    p.cores = 8;
+    gtrace(11, &p)
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("uwfq_sweep_diff_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn read(dir: &PathBuf, name: &str) -> Vec<u8> {
+    std::fs::read(dir.join(name)).unwrap_or_else(|e| panic!("{name}: {e}"))
+}
+
+#[test]
+fn table1_sweep_is_byte_identical() {
+    let seq = table_outputs(&Sweep::seq(), "t1_seq");
+    let par = table_outputs(&par_sweep(), "t1_par");
+    assert_eq!(seq, par, "Table 1 parallel output diverged from sequential");
+}
+
+fn table_outputs(sweep: &Sweep, tag: &str) -> (String, String, Vec<u8>, Vec<u8>) {
+    let (s1, s2) = tables::table1(3, &base(), sweep);
+    let dir = tmp_dir(tag);
+    tables::write_table1_csv(dir.join("t1s1.csv").to_str().unwrap(), &s1).unwrap();
+    tables::write_table1_csv(dir.join("t1s2.csv").to_str().unwrap(), &s2).unwrap();
+    let out = (
+        tables::render_table1(&s1),
+        tables::render_table1(&s2),
+        read(&dir, "t1s1.csv"),
+        read(&dir, "t1s2.csv"),
+    );
+    std::fs::remove_dir_all(dir).ok();
+    out
+}
+
+#[test]
+fn table2_and_fig7_sweep_is_byte_identical() {
+    let w = macro_workload();
+    let run = |sweep: &Sweep, tag: &str| -> (String, Vec<u8>, Vec<u8>) {
+        let t2 = tables::table2(&w, &base(), sweep);
+        let f7 = figures::fig7(&w, &base(), sweep);
+        let dir = tmp_dir(tag);
+        tables::write_table2_csv(dir.join("t2.csv").to_str().unwrap(), &t2).unwrap();
+        figures::write_fig7_csv(dir.to_str().unwrap(), &f7).unwrap();
+        let out = (
+            tables::render_table2(&t2),
+            read(&dir, "t2.csv"),
+            read(&dir, "fig7_user_violations.csv"),
+        );
+        std::fs::remove_dir_all(dir).ok();
+        out
+    };
+    let seq = run(&Sweep::seq(), "t2_seq");
+    let par = run(&par_sweep(), "t2_par");
+    assert_eq!(
+        seq, par,
+        "Table 2 / Fig 7 parallel output diverged from sequential"
+    );
+}
+
+#[test]
+fn cdf_figures_sweep_is_byte_identical() {
+    let run = |sweep: &Sweep, tag: &str| -> (Vec<u8>, Vec<u8>) {
+        let f5 = figures::fig5(3, &base(), sweep);
+        let f6 = figures::fig6(3, &base(), sweep);
+        let dir = tmp_dir(tag);
+        figures::write_fig5_csv(dir.to_str().unwrap(), &f5).unwrap();
+        figures::write_fig6_csv(dir.to_str().unwrap(), &f6).unwrap();
+        let out = (
+            read(&dir, "fig5_infrequent_cdf.csv"),
+            read(&dir, "fig6_completion_cdf.csv"),
+        );
+        std::fs::remove_dir_all(dir).ok();
+        out
+    };
+    let seq = run(&Sweep::seq(), "cdf_seq");
+    let par = run(&par_sweep(), "cdf_par");
+    assert_eq!(seq, par, "Fig 5/6 parallel output diverged from sequential");
+}
