@@ -1,0 +1,61 @@
+//! Bench: the streaming scale pipeline — jobs/s and task-events/s on the
+//! million-job / ten-thousand-user workload, with streaming-vs-exact
+//! quantile error columns, emitted to `BENCH_scale.json` (benchkit
+//! JsonSink) so the memory-bounded throughput trajectory is tracked
+//! across PRs next to `BENCH_hotpath.json` / `BENCH_sweep.json`.
+//!
+//! * `SCALE_JOBS` / `SCALE_USERS` override the workload size.
+//! * `SCALE_QUICK=1` (or `HOTPATH_QUICK=1`) shrinks to 50k jobs / 1k
+//!   users for CI smoke runs.
+//!
+//! Run with `cargo bench --bench scale`.
+
+use uwfq::bench::scale::{record_metrics, render, run_scale};
+use uwfq::config::Config;
+use uwfq::util::benchkit::JsonSink;
+use uwfq::workload::stream::ScaleParams;
+
+fn env_num<T: std::str::FromStr>(key: &str) -> Option<T> {
+    std::env::var(key).ok().and_then(|v| v.parse().ok())
+}
+
+fn main() {
+    let quick =
+        std::env::var("SCALE_QUICK").is_ok() || std::env::var("HOTPATH_QUICK").is_ok();
+    let jobs: u64 = env_num("SCALE_JOBS").unwrap_or(if quick { 50_000 } else { 1_000_000 });
+    let users: u32 = env_num("SCALE_USERS").unwrap_or(if quick { 1_000 } else { 10_000 });
+    let cfg = Config::default().with_cores(64);
+    let params = ScaleParams {
+        users,
+        jobs,
+        cores: cfg.cores,
+        target_utilization: 0.85,
+        seed: cfg.seed,
+    };
+
+    println!(
+        "# Streaming scale pipeline — {jobs} jobs / {users} users on {} cores{}",
+        cfg.cores,
+        if quick { " (quick)" } else { "" }
+    );
+    let outcome = run_scale(&params, &cfg, true);
+    print!("{}", render(&outcome));
+
+    let mut sink = JsonSink::new();
+    record_metrics(&outcome, &mut sink);
+    if let Err(e) = sink.write("BENCH_scale.json") {
+        eprintln!("warning: could not write BENCH_scale.json: {e}");
+    } else {
+        println!("wrote BENCH_scale.json");
+    }
+
+    // The accuracy contract is part of the bench: a silent estimator
+    // regression would otherwise ship plausible-looking numbers.
+    if let Some(v) = &outcome.verify {
+        if let Err(e) = v.check() {
+            eprintln!("streaming accuracy outside documented tolerance: {e}");
+            std::process::exit(1);
+        }
+        println!("streaming estimators within documented tolerance");
+    }
+}

@@ -108,7 +108,7 @@ pub fn fig4(base: &Config, sweep: &Sweep) -> Fig4Result {
         let rt_of = |name: &str| {
             rep.completed
                 .iter()
-                .find(|c| c.name == name)
+                .find(|c| &*c.name == name)
                 .map(|c| c.response_time())
                 .unwrap_or(f64::NAN)
         };

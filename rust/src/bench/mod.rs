@@ -5,6 +5,8 @@
 //! * [`tables`] — Table 1 (micro scenarios) and Table 2 (macro).
 //! * [`figures`] — Fig. 3 (skew), Fig. 4 (priority inversion), Fig. 5/6
 //!   (CDFs), Fig. 7 (per-user violations).
+//! * [`scale`] — the streaming million-job harness (`uwfq scale`,
+//!   `BENCH_scale.json`).
 //!
 //! Every grid is expressed as a list of independent cells over the
 //! [`crate::sweep`] engine: the caller passes a [`crate::sweep::Sweep`]
@@ -12,9 +14,11 @@
 //! for n-worker execution with byte-identical output.
 
 pub mod figures;
+pub mod scale;
 pub mod tables;
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::config::Config;
 use crate::metrics::report::RunMetrics;
@@ -24,7 +28,7 @@ use crate::workload::Workload;
 /// Idle-system response time per distinct job name under `cfg`
 /// (slowdown denominators, computed once per job shape and memoized
 /// process-wide by template — see [`crate::sim::idle_response_time`]).
-pub fn idle_map(cfg: &Config, workload: &Workload) -> HashMap<String, f64> {
+pub fn idle_map(cfg: &Config, workload: &Workload) -> HashMap<Arc<str>, f64> {
     idle_map_in(&mut SimCtx::new(), cfg, workload)
 }
 
@@ -33,7 +37,7 @@ pub fn idle_map_in(
     ctx: &mut SimCtx,
     cfg: &Config,
     workload: &Workload,
-) -> HashMap<String, f64> {
+) -> HashMap<Arc<str>, f64> {
     let mut map = HashMap::new();
     for job in &workload.jobs {
         if !map.contains_key(&job.name) {

@@ -1,0 +1,351 @@
+//! The scale harness behind `uwfq scale` and `benches/scale.rs`:
+//! million-job / ten-thousand-user runs through the streaming pipeline
+//! ([`crate::workload::stream::scale_stream`] →
+//! [`crate::sim::simulate_stream_into`] →
+//! [`crate::metrics::streaming::StreamingRunMetrics`]), with an optional
+//! exact reference pass that measures the streaming estimators' error.
+//!
+//! Memory model: the timed run's resident metric state is O(in-flight
+//! jobs + users) — the engine's slab arenas (peak concurrency), the
+//! stream's per-user generators, and the sink's accumulators. No per-job
+//! outcome is retained. The verify pass is a *separate* run that keeps
+//! one bare `f64` response time per job (8 B/job) purely to compute the
+//! streaming-vs-exact error columns of `BENCH_scale.json`; both runs are
+//! deterministic, so the comparison is apples-to-apples.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::Config;
+use crate::core::dag::CompletedJob;
+use crate::core::SchedCore;
+use crate::metrics::streaming::StreamingRunMetrics;
+use crate::sim::{self, CompletionSink};
+use crate::util::benchkit::JsonSink;
+use crate::util::stats;
+use crate::workload::stream::{scale_stream, scale_template_jobs, ScaleParams};
+
+/// Documented accuracy contract of the streaming estimators, asserted by
+/// `uwfq scale --verify` and CI (`tests/scale_accuracy.rs`). See
+/// [`crate::metrics::streaming`] for the derivation.
+pub const ECDF_QUANTILE_RTOL: f64 = 0.08;
+pub const P2_QUANTILE_RTOL: f64 = 0.15;
+pub const P2_P99_RTOL: f64 = 0.25;
+pub const ECDF_SUP_TOL: f64 = 0.02;
+
+/// The tracked quantiles.
+pub const QUANTILES: [f64; 3] = [0.50, 0.95, 0.99];
+
+/// Streaming-vs-exact error report (the verify pass).
+#[derive(Clone, Debug)]
+pub struct ScaleVerify {
+    /// Exact p50/p95/p99 over all response times.
+    pub exact_q: [f64; 3],
+    /// Relative error of the ECDF-inverted quantiles.
+    pub ecdf_rel_err: [f64; 3],
+    /// Relative error of the P² estimates.
+    pub p2_rel_err: [f64; 3],
+    /// Sup |streaming CDF − exact CDF| over the ECDF's bin edges.
+    pub ecdf_sup_err: f64,
+}
+
+impl ScaleVerify {
+    /// Check the documented tolerances; `Err` describes the first
+    /// violation (CI fails the scale-smoke job on it).
+    pub fn check(&self) -> Result<(), String> {
+        for (i, p) in QUANTILES.iter().enumerate() {
+            if self.ecdf_rel_err[i] > ECDF_QUANTILE_RTOL {
+                return Err(format!(
+                    "ECDF p{} error {:.4} exceeds tolerance {ECDF_QUANTILE_RTOL}",
+                    p * 100.0,
+                    self.ecdf_rel_err[i]
+                ));
+            }
+            let tol = if (*p - 0.99).abs() < 1e-12 { P2_P99_RTOL } else { P2_QUANTILE_RTOL };
+            if self.p2_rel_err[i] > tol {
+                return Err(format!(
+                    "P² p{} error {:.4} exceeds tolerance {tol}",
+                    p * 100.0,
+                    self.p2_rel_err[i]
+                ));
+            }
+        }
+        if self.ecdf_sup_err > ECDF_SUP_TOL {
+            return Err(format!(
+                "ECDF sup error {:.4} exceeds tolerance {ECDF_SUP_TOL}",
+                self.ecdf_sup_err
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Everything one scale run produces.
+pub struct ScaleOutcome {
+    pub label: String,
+    pub jobs: u64,
+    pub users: u32,
+    pub wall_s: f64,
+    pub jobs_per_s: f64,
+    pub task_events: u64,
+    pub task_events_per_s: f64,
+    /// Peak concurrently in-flight jobs (the O(active) bound).
+    pub peak_in_flight_jobs: usize,
+    /// Engine arena footprints after the run (slots, bounded by peak
+    /// concurrency — the resident-state proxy).
+    pub arena_job_slots: usize,
+    pub arena_stage_slots: usize,
+    pub makespan_s: f64,
+    pub utilization: f64,
+    pub mean_rt: f64,
+    pub mean_slowdown: f64,
+    pub jain_index: f64,
+    pub user_count: usize,
+    /// Streaming quantile estimates: ECDF-inverted and P².
+    pub ecdf_q: [f64; 3],
+    pub p2_q: [f64; 3],
+    pub verify: Option<ScaleVerify>,
+}
+
+/// Idle response time per scale job template under `cfg` — O(templates)
+/// entries, the slowdown denominators of the streaming sink.
+pub fn scale_idle_map(cfg: &Config) -> HashMap<Arc<str>, f64> {
+    let mut map = HashMap::new();
+    for job in scale_template_jobs() {
+        let rt = sim::idle_response_time(cfg, &job);
+        map.insert(job.name, rt);
+    }
+    map
+}
+
+/// Collects bare response times — the exact reference for the verify
+/// pass (8 bytes/job; deliberately NOT `CollectSink`, which would retain
+/// whole records).
+struct RtSink {
+    rts: Vec<f64>,
+}
+
+impl CompletionSink for RtSink {
+    fn job_completed(&mut self, c: CompletedJob) {
+        self.rts.push(c.response_time());
+    }
+}
+
+/// Run one scale experiment: the timed streaming pass, then (optionally)
+/// the exact reference pass for the error columns.
+pub fn run_scale(params: &ScaleParams, cfg: &Config, verify: bool) -> ScaleOutcome {
+    let idle = scale_idle_map(cfg);
+    let mut sink = StreamingRunMetrics::new(&cfg.label(), idle);
+    let mut core = SchedCore::from_config(cfg.clone());
+    let t0 = Instant::now();
+    let summary = sim::simulate_stream_into(&mut core, scale_stream(params), &mut sink);
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    let (arena_job_slots, arena_stage_slots) = core.arena_capacities();
+
+    let ecdf_q = QUANTILES.map(|p| sink.rt_quantile_ecdf(p));
+    let p2_q = QUANTILES.map(|p| sink.rt_quantile_p2(p));
+
+    let verify = verify.then(|| {
+        let mut rt_sink = RtSink {
+            rts: Vec::with_capacity(params.jobs as usize),
+        };
+        let mut core2 = SchedCore::from_config(cfg.clone());
+        sim::simulate_stream_into(&mut core2, scale_stream(params), &mut rt_sink);
+        let mut rts = rt_sink.rts;
+        rts.sort_by(|a, b| a.partial_cmp(b).expect("finite response time"));
+        let exact_q = [
+            stats::percentile_sorted(&rts, 50.0),
+            stats::percentile_sorted(&rts, 95.0),
+            stats::percentile_sorted(&rts, 99.0),
+        ];
+        let rel = |est: f64, exact: f64| {
+            if exact > 0.0 {
+                (est - exact).abs() / exact
+            } else {
+                0.0
+            }
+        };
+        let ecdf_rel_err = [0usize, 1, 2].map(|i| rel(ecdf_q[i], exact_q[i]));
+        let p2_rel_err = [0usize, 1, 2].map(|i| rel(p2_q[i], exact_q[i]));
+        let exact_at = |v: f64| -> f64 {
+            rts.partition_point(|&s| s <= v) as f64 / rts.len() as f64
+        };
+        let mut sup = 0.0f64;
+        for b in 0..sink.rt_ecdf.bins() {
+            let edge = sink.rt_ecdf.upper_edge(b);
+            sup = sup.max((sink.rt_ecdf.cdf_at(edge) - exact_at(edge)).abs());
+        }
+        ScaleVerify {
+            exact_q,
+            ecdf_rel_err,
+            p2_rel_err,
+            ecdf_sup_err: sup,
+        }
+    });
+
+    ScaleOutcome {
+        label: summary.label,
+        jobs: summary.jobs_completed,
+        users: params.users,
+        wall_s,
+        jobs_per_s: summary.jobs_completed as f64 / wall_s,
+        task_events: summary.task_events,
+        task_events_per_s: summary.task_events as f64 / wall_s,
+        peak_in_flight_jobs: summary.peak_in_flight_jobs,
+        arena_job_slots,
+        arena_stage_slots,
+        makespan_s: summary.makespan_s,
+        utilization: summary.utilization,
+        mean_rt: sink.mean_rt(),
+        mean_slowdown: sink.mean_slowdown(),
+        jain_index: sink.jain_index_user_rt(),
+        user_count: sink.user_count(),
+        ecdf_q,
+        p2_q,
+        verify,
+    }
+}
+
+/// Record a scale outcome into a benchkit sink (`BENCH_scale.json`
+/// metrics, tracked across PRs next to `BENCH_hotpath` / `BENCH_sweep`).
+pub fn record_metrics(o: &ScaleOutcome, sink: &mut JsonSink) {
+    sink.metric("scale/jobs", o.jobs as f64);
+    sink.metric("scale/users", o.users as f64);
+    sink.metric("scale/wall_s", o.wall_s);
+    sink.metric("scale/jobs_per_s", o.jobs_per_s);
+    sink.metric("scale/task_events", o.task_events as f64);
+    sink.metric("scale/task_events_per_s", o.task_events_per_s);
+    sink.metric("scale/peak_in_flight_jobs", o.peak_in_flight_jobs as f64);
+    sink.metric("scale/arena_job_slots", o.arena_job_slots as f64);
+    sink.metric("scale/arena_stage_slots", o.arena_stage_slots as f64);
+    sink.metric("scale/makespan_s", o.makespan_s);
+    sink.metric("scale/utilization", o.utilization);
+    sink.metric("scale/mean_rt_s", o.mean_rt);
+    sink.metric("scale/mean_slowdown", o.mean_slowdown);
+    sink.metric("scale/jain_index_user_rt", o.jain_index);
+    for (i, p) in QUANTILES.iter().enumerate() {
+        let tag = (p * 100.0).round() as u32;
+        sink.metric(&format!("scale/rt_p{tag}_ecdf_s"), o.ecdf_q[i]);
+        sink.metric(&format!("scale/rt_p{tag}_p2_s"), o.p2_q[i]);
+    }
+    if let Some(v) = &o.verify {
+        for (i, p) in QUANTILES.iter().enumerate() {
+            let tag = (p * 100.0).round() as u32;
+            sink.metric(&format!("scale/rt_p{tag}_exact_s"), v.exact_q[i]);
+            sink.metric(&format!("scale/rt_p{tag}_ecdf_rel_err"), v.ecdf_rel_err[i]);
+            sink.metric(&format!("scale/rt_p{tag}_p2_rel_err"), v.p2_rel_err[i]);
+        }
+        sink.metric("scale/ecdf_sup_err", v.ecdf_sup_err);
+    }
+}
+
+/// Human summary printed by `uwfq scale` and the bench.
+pub fn render(o: &ScaleOutcome) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "scale run ({}): {} jobs / {} users in {:.2} s wall\n",
+        o.label, o.jobs, o.users, o.wall_s
+    ));
+    s.push_str(&format!(
+        "  throughput   {:.0} jobs/s   {:.2} M task-events/s\n",
+        o.jobs_per_s,
+        o.task_events_per_s / 1e6
+    ));
+    s.push_str(&format!(
+        "  resident     peak {} in-flight jobs   arenas {} job / {} stage slots\n",
+        o.peak_in_flight_jobs, o.arena_job_slots, o.arena_stage_slots
+    ));
+    s.push_str(&format!(
+        "  sim          makespan {:.0} s   utilization {:.2}   users seen {}\n",
+        o.makespan_s, o.utilization, o.user_count
+    ));
+    s.push_str(&format!(
+        "  RT           mean {:.3} s   p50/p95/p99 (ECDF) {:.3}/{:.3}/{:.3} s\n",
+        o.mean_rt, o.ecdf_q[0], o.ecdf_q[1], o.ecdf_q[2]
+    ));
+    s.push_str(&format!(
+        "  slowdown     mean {:.2}   Jain(user RT) {:.3}\n",
+        o.mean_slowdown, o.jain_index
+    ));
+    if let Some(v) = &o.verify {
+        s.push_str(&format!(
+            "  accuracy     ECDF q rel err {:.4}/{:.4}/{:.4}   P² {:.4}/{:.4}/{:.4}   sup {:.4}\n",
+            v.ecdf_rel_err[0],
+            v.ecdf_rel_err[1],
+            v.ecdf_rel_err[2],
+            v.p2_rel_err[0],
+            v.p2_rel_err[1],
+            v.p2_rel_err[2],
+            v.ecdf_sup_err
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_scale_run_is_bounded_and_accurate() {
+        // A deliberately small run (debug-test friendly): outcome counts
+        // line up, the backlog stays far below the job count (the
+        // O(active) claim at miniature scale), and the verify pass's
+        // tolerance check passes.
+        let params = ScaleParams {
+            users: 50,
+            jobs: 800,
+            cores: 8,
+            target_utilization: 0.8,
+            seed: 7,
+        };
+        let cfg = Config::default().with_cores(8);
+        let o = run_scale(&params, &cfg, true);
+        assert_eq!(o.jobs, 800);
+        assert_eq!(o.user_count, 50);
+        assert!(o.task_events > 800);
+        assert!(o.peak_in_flight_jobs < 800 / 2, "backlog {} not bounded", o.peak_in_flight_jobs);
+        assert!(o.arena_job_slots <= o.peak_in_flight_jobs + 1);
+        assert!(o.makespan_s > 0.0 && o.utilization > 0.1);
+        let v = o.verify.as_ref().unwrap();
+        // The documented tolerances apply at ≥50k samples
+        // (tests/scale_accuracy.rs + CI); at 800 jobs order-statistic
+        // noise dominates, so only gross sanity is asserted here.
+        assert!(v.ecdf_rel_err.iter().all(|&e| e < 0.35), "{:?}", v.ecdf_rel_err);
+        assert!(v.p2_rel_err.iter().all(|&e| e < 0.5), "{:?}", v.p2_rel_err);
+        assert!(v.ecdf_sup_err < ECDF_SUP_TOL, "sup {}", v.ecdf_sup_err);
+        // Exact quantiles are ordered.
+        assert!(v.exact_q[0] <= v.exact_q[1] && v.exact_q[1] <= v.exact_q[2]);
+    }
+
+    #[test]
+    fn scale_idle_map_covers_templates() {
+        let cfg = Config::default().with_cores(8);
+        let m = scale_idle_map(&cfg);
+        assert_eq!(m.len(), 4);
+        assert!(m.values().all(|&rt| rt > 0.0));
+    }
+
+    #[test]
+    fn record_metrics_emits_core_keys() {
+        let params = ScaleParams {
+            users: 10,
+            jobs: 60,
+            cores: 8,
+            target_utilization: 0.8,
+            seed: 3,
+        };
+        let cfg = Config::default().with_cores(8);
+        let o = run_scale(&params, &cfg, false);
+        let mut sink = JsonSink::new();
+        record_metrics(&o, &mut sink);
+        let path = std::env::temp_dir().join("uwfq_scale_metrics_test.json");
+        sink.write(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        for key in ["scale/jobs_per_s", "scale/peak_in_flight_jobs", "scale/rt_p95_ecdf_s"] {
+            assert!(text.contains(key), "missing {key}");
+        }
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -20,6 +20,10 @@ uwfq — User Weighted Fair Queuing for multi-user Spark-like analytics
 USAGE:
   uwfq reproduce <table1|table2|fig3|fig4|fig5|fig6|fig7|all> [--out DIR] [--seed N] [--quick true] [--threads N]
   uwfq sweep [--threads N] [--out DIR] [--seed N] [--quick true]  # full evaluation grid, all cores
+  uwfq scale [--jobs N] [--users N] [--quick true] [--verify false] [--out DIR]
+             # streaming million-job run: O(in-flight + users) memory,
+             # emits BENCH_scale.json (defaults 1M jobs / 10k users;
+             # --quick: 50k / 1k)
   uwfq run --workload <scenario1|scenario2|gtrace|trace:FILE> [--policy P] [--scheme S]
   uwfq serve [--cores N] [--time-scale F] [--artifacts DIR]   # real PJRT backend demo
   uwfq ablation [--seed N] [--threads N]                      # design-choice ablations
@@ -75,7 +79,7 @@ impl Cli {
             match k.as_str() {
                 // harness-only flags, not config keys
                 "config" | "out" | "quick" | "workload" | "time-scale" | "artifacts"
-                | "eventlog" | "threads" | "bench-json" => {}
+                | "eventlog" | "threads" | "bench-json" | "jobs" | "users" | "verify" => {}
                 _ => cfg.set(k, v)?,
             }
         }

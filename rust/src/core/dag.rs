@@ -2,6 +2,8 @@
 //! are submitted to the task scheduler once all their parents finished,
 //! and the job completes when its last stage does.
 
+use std::sync::Arc;
+
 use super::job::JobSpec;
 use crate::{JobId, StageId, TimeUs, UserId};
 
@@ -68,7 +70,9 @@ impl JobState {
 pub struct CompletedJob {
     pub job: JobId,
     pub user: UserId,
-    pub name: String,
+    /// Interned job-kind name (shared with the spec — no per-completion
+    /// allocation).
+    pub name: Arc<str>,
     /// Submission (arrival) time — `min(T_start)` in Eq. RT.
     pub submit: TimeUs,
     /// Completion of the last stage — `max(T_end)`.

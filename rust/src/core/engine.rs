@@ -356,10 +356,23 @@ impl SchedCore {
 
     /// Fill free cores with the highest-priority pending tasks. Returns the
     /// launch list for the backend to execute.
+    ///
+    /// Allocates a fresh `Vec` per call — convenience wrapper for tests and
+    /// cold paths; event loops should hold a reusable buffer and call
+    /// [`SchedCore::try_launch_into`] instead.
     pub fn try_launch(&mut self, now: TimeUs) -> Vec<Launch> {
         let mut launches = Vec::new();
+        self.try_launch_into(now, &mut launches);
+        launches
+    }
+
+    /// [`SchedCore::try_launch`] into a caller-owned buffer (cleared
+    /// first): the per-event `Vec<Launch>` allocation disappears from the
+    /// hot path — simulators keep one buffer for the whole run.
+    pub fn try_launch_into(&mut self, now: TimeUs, launches: &mut Vec<Launch>) {
+        launches.clear();
         if self.active.is_empty() || self.free_cores.is_empty() {
-            return launches; // nothing to do — keep the congested path free
+            return; // nothing to do — keep the congested path free
         }
         let now_s = us_to_s(now);
         while let Some(&Reverse(core)) = self.free_cores.peek() {
@@ -400,7 +413,6 @@ impl SchedCore {
             launches.push(launch);
             self.policy.on_task_launched(sid);
         }
-        launches
     }
 
     // ---- completion -----------------------------------------------------
@@ -451,6 +463,7 @@ impl SchedCore {
             let rec = CompletedJob {
                 job: job_id,
                 user: job.spec.user,
+                // Interned name: refcount bump, no string allocation.
                 name: job.spec.name.clone(),
                 submit: job.submit_time,
                 finish: now,
@@ -576,6 +589,27 @@ mod tests {
         let launches = c.try_launch(1000);
         assert_eq!(launches.len(), 1);
         assert_eq!(launches[0].core, 2);
+    }
+
+    #[test]
+    fn try_launch_into_reuses_buffer_and_matches_wrapper() {
+        // A dirty reused buffer must be cleared and refilled with exactly
+        // what the allocating wrapper would have returned.
+        let mut a = core(4);
+        let mut b = core(4);
+        a.submit_job(0, job(1, 0, 1.0)).unwrap();
+        b.submit_job(0, job(1, 0, 1.0)).unwrap();
+        let wrapper = a.try_launch(0);
+        let mut buf = vec![wrapper[0].clone()]; // pre-dirtied
+        b.try_launch_into(0, &mut buf);
+        assert_eq!(wrapper.len(), buf.len());
+        for (x, y) in wrapper.iter().zip(&buf) {
+            assert_eq!((x.core, x.stage, x.task_idx), (y.core, y.stage, y.task_idx));
+            assert_eq!(x.runtime_s.to_bits(), y.runtime_s.to_bits());
+        }
+        // No free cores: the buffer comes back empty, not stale.
+        b.try_launch_into(0, &mut buf);
+        assert!(buf.is_empty());
     }
 
     #[test]

@@ -171,7 +171,7 @@ pub fn events_of_run(workload: &Workload, report: &SimReport) -> Vec<Event> {
     let name_of: HashMap<JobId, (&str, u32, f64)> = report
         .completed
         .iter()
-        .map(|c| (c.job, (c.name.as_str(), c.user, c.slot_time)))
+        .map(|c| (c.job, (&*c.name, c.user, c.slot_time)))
         .collect();
     let _ = workload;
     let mut events = Vec::new();
@@ -180,7 +180,7 @@ pub fn events_of_run(workload: &Workload, report: &SimReport) -> Vec<Event> {
             t: c.submit,
             job: c.job,
             user: c.user,
-            name: c.name.clone(),
+            name: c.name.to_string(),
             slot_time: c.slot_time,
         });
         events.push(Event::JobCompleted {

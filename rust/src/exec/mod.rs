@@ -116,6 +116,7 @@ pub fn run_real(
     let now_us = |t0: &Instant| t0.elapsed().as_micros() as TimeUs;
     let mut next_arrival = 0usize;
     let total_jobs = jobs.len();
+    let mut launch_buf: Vec<Launch> = Vec::new();
 
     while core.completed.len() < total_jobs {
         let now = now_us(&t0);
@@ -124,9 +125,10 @@ pub fn run_real(
             core.submit_job(now, jobs[next_arrival].clone())?;
             next_arrival += 1;
         }
-        // Launch onto free cores.
-        for launch in core.try_launch(now) {
-            let task = build_task(&core, &launch, &mut partials);
+        // Launch onto free cores (reusable buffer, no per-poll allocation).
+        core.try_launch_into(now, &mut launch_buf);
+        for launch in &launch_buf {
+            let task = build_task(&core, launch, &mut partials);
             task_started.insert(launch.core, (Instant::now(), launch.opcount));
             senders[launch.core]
                 .send(ToWorker::Run(task))

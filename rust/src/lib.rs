@@ -23,8 +23,12 @@
 //! * [`data`] — deterministic synthetic trip-record blocks (NYC TLC
 //!   stand-in).
 //! * [`workload`] — the paper's workloads: micro scenarios 1–2 (§5.2.1) and
-//!   the Google-trace-shaped macro workload (§5.3).
-//! * [`metrics`] — response times, slowdowns, DVR/DSR (Eqs. 1–3), CDFs.
+//!   the Google-trace-shaped macro workload (§5.3), each available
+//!   materialized or as a lazy [`workload::JobStream`] (k-way-merged
+//!   per-user generators; `uwfq scale`'s million-job workload).
+//! * [`metrics`] — response times, slowdowns, DVR/DSR (Eqs. 1–3), CDFs;
+//!   plus bounded-memory streaming accumulators (P² quantiles, log-bin
+//!   ECDF, per-user aggregates) for O(users)-memory runs.
 //! * [`bench`] — the experiment harness regenerating every table and figure.
 //! * [`sweep`] — the parallel sweep engine: deterministic multi-core
 //!   execution of the benchmark grid (byte-identical to sequential).

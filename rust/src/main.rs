@@ -26,6 +26,7 @@ fn main() -> ExitCode {
     let result = match cli.command.as_str() {
         "reproduce" => reproduce(&cli),
         "sweep" => sweep_cmd(&cli),
+        "scale" => scale_cmd(&cli),
         "run" => run(&cli),
         "serve" => serve(&cli),
         "ablation" => ablation(&cli),
@@ -235,6 +236,77 @@ fn sweep_cmd(cli: &Cli) -> Result<(), String> {
         ),
     }
     println!("sweep done → {out}/ (bench → {bench_path})");
+    Ok(())
+}
+
+/// `uwfq scale` — the streaming scale run: a million-job / ten-thousand-
+/// user workload generated lazily (O(users) stream state), simulated with
+/// completions drained into bounded-memory accumulators (O(in-flight +
+/// users) resident metric state — no per-job outcome vector), and a
+/// verify pass measuring the streaming estimators against exact
+/// quantiles. Emits `BENCH_scale.json`; the accuracy tolerances are
+/// *asserted* (non-zero exit on violation), which is what the CI
+/// scale-smoke job runs.
+fn scale_cmd(cli: &Cli) -> Result<(), String> {
+    let out = cli.flag_or("out", "out");
+    std::fs::create_dir_all(&out).map_err(|e| e.to_string())?;
+    let mut cfg = cli.config()?;
+    // Scale-run default: a bigger cluster than the paper testbed — but
+    // only when the user set cores neither via flag nor config file.
+    if cli.flag("cores").is_none() && cli.flag("config").is_none() {
+        cfg.cores = 64;
+    }
+    let quick = cli.flag("quick") == Some("true");
+    let jobs: u64 = match cli.flag("jobs") {
+        Some(v) => v.parse().map_err(|_| format!("bad --jobs '{v}'"))?,
+        None => {
+            if quick {
+                50_000
+            } else {
+                1_000_000
+            }
+        }
+    };
+    let users: u32 = match cli.flag("users") {
+        Some(v) => v.parse().map_err(|_| format!("bad --users '{v}'"))?,
+        None => {
+            if quick {
+                1_000
+            } else {
+                10_000
+            }
+        }
+    };
+    let verify = cli.flag("verify") != Some("false");
+    let params = uwfq::workload::stream::ScaleParams {
+        users,
+        jobs,
+        cores: cfg.cores,
+        target_utilization: 0.85,
+        seed: cfg.seed,
+    };
+    println!(
+        "scale: {} jobs / {} users on {} cores (policy {}, streaming path{})",
+        jobs,
+        users,
+        cfg.cores,
+        cfg.policy.name(),
+        if verify { " + exact verify pass" } else { "" }
+    );
+    let outcome = uwfq::bench::scale::run_scale(&params, &cfg, verify);
+    print!("{}", uwfq::bench::scale::render(&outcome));
+
+    let mut sink = JsonSink::new();
+    uwfq::bench::scale::record_metrics(&outcome, &mut sink);
+    let bench_path = cli.flag_or("bench-json", &format!("{out}/BENCH_scale.json"));
+    sink.write(&bench_path).map_err(|e| e.to_string())?;
+    println!("scale done → {bench_path}");
+
+    if let Some(v) = &outcome.verify {
+        v.check()
+            .map_err(|e| format!("streaming accuracy outside documented tolerance: {e}"))?;
+        println!("streaming estimators within documented tolerance");
+    }
     Ok(())
 }
 

@@ -19,17 +19,17 @@ impl CdfSeries {
         }
     }
 
-    /// Fraction of samples ≤ x.
+    /// Fraction of samples ≤ x. Binary search on the sorted points —
+    /// O(log n) per query (figure emission queries this per grid point).
     pub fn at(&self, x: f64) -> f64 {
-        let mut frac = 0.0;
-        for &(v, f) in &self.points {
-            if v <= x {
-                frac = f;
-            } else {
-                break;
-            }
+        // partition_point: first index whose value exceeds x; the point
+        // just before it (if any) carries the cumulative fraction at x.
+        let idx = self.points.partition_point(|&(v, _)| v <= x);
+        if idx == 0 {
+            0.0
+        } else {
+            self.points[idx - 1].1
         }
-        frac
     }
 }
 
@@ -55,6 +55,28 @@ mod tests {
         assert_eq!(c.at(0.5), 0.0);
         assert_eq!(c.at(2.0), 0.5);
         assert_eq!(c.at(10.0), 1.0);
+    }
+
+    #[test]
+    fn at_matches_linear_scan_reference() {
+        // The binary search must reproduce the retired linear scan exactly,
+        // including duplicate values and out-of-range queries.
+        let samples = [0.5, 1.0, 1.0, 2.5, 2.5, 2.5, 7.0];
+        let c = CdfSeries::from_samples("dup", &samples);
+        let reference = |x: f64| {
+            let mut frac = 0.0;
+            for &(v, f) in &c.points {
+                if v <= x {
+                    frac = f;
+                } else {
+                    break;
+                }
+            }
+            frac
+        };
+        for x in [-1.0, 0.0, 0.5, 0.75, 1.0, 2.5, 2.500001, 6.9, 7.0, 99.0] {
+            assert_eq!(c.at(x), reference(x), "x={x}");
+        }
     }
 
     #[test]

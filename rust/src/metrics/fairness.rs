@@ -37,36 +37,55 @@ pub struct FairnessMetrics {
 }
 
 /// Compute DVR/DSR of `target` against the `ujf` reference run of the
-/// same workload. Jobs are matched by job id (both runs submit the same
-/// workload through the same engine, so ids align).
+/// same workload. Jobs are matched by job id via a sort-merge join: both
+/// runs submit the same workload through the same engine, so ids align
+/// and completion order is already nearly id-sorted — the sorts are
+/// branch-predictable and the merge is linear, replacing the former
+/// HashMap build-and-probe round-trip. Accumulating in id order also
+/// makes the float sums independent of hash iteration order.
 pub fn fairness_vs_ujf(
     target: &RunMetrics,
     ujf: &RunMetrics,
     denom: DvrDenominator,
 ) -> FairnessMetrics {
-    let ujf_by_job: HashMap<JobId, (f64, f64)> = ujf
+    let mut tgt: Vec<(JobId, f64)> = target.outcomes.iter().map(|o| (o.job, o.finish_s)).collect();
+    let mut reference: Vec<(JobId, f64, f64)> = ujf
         .outcomes
         .iter()
-        .map(|o| (o.job, (o.finish_s, o.rt)))
+        .map(|o| (o.job, o.finish_s, o.rt))
         .collect();
+    tgt.sort_unstable_by_key(|&(job, _)| job);
+    reference.sort_unstable_by_key(|&(job, _, _)| job);
 
-    let mut r = HashMap::new();
-    for o in &target.outcomes {
-        if let Some(&(ujf_end, ujf_rt)) = ujf_by_job.get(&o.job) {
-            if ujf_rt > 0.0 {
-                r.insert(o.job, (o.finish_s - ujf_end) / ujf_rt);
+    // Merge: engine job ids are unique within a run, so each id matches
+    // at most once.
+    let mut rs: Vec<(JobId, f64)> = Vec::with_capacity(tgt.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < tgt.len() && j < reference.len() {
+        let (tj, t_end) = tgt[i];
+        let (uj, ujf_end, ujf_rt) = reference[j];
+        match tj.cmp(&uj) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                if ujf_rt > 0.0 {
+                    rs.push((tj, (t_end - ujf_end) / ujf_rt));
+                }
+                i += 1;
+                j += 1;
             }
         }
     }
 
-    let violations = r.values().filter(|&&ri| ri > 0.0).count();
-    let slacks = r.values().filter(|&&ri| ri <= 0.0).count();
+    let violations = rs.iter().filter(|&&(_, ri)| ri > 0.0).count();
+    let slacks = rs.iter().filter(|&&(_, ri)| ri <= 0.0).count();
     let dvr_count = match denom {
         DvrDenominator::GreaterThanZero => violations,
-        DvrDenominator::GreaterThanOne => r.values().filter(|&&ri| ri > 1.0).count(),
+        DvrDenominator::GreaterThanOne => rs.iter().filter(|&&(_, ri)| ri > 1.0).count(),
     };
-    let viol_sum: f64 = r.values().map(|&ri| ri.max(0.0)).sum();
-    let slack_sum: f64 = r.values().map(|&ri| (-ri).max(0.0)).sum();
+    let viol_sum: f64 = rs.iter().map(|&(_, ri)| ri.max(0.0)).sum();
+    let slack_sum: f64 = rs.iter().map(|&(_, ri)| (-ri).max(0.0)).sum();
+    let r: HashMap<JobId, f64> = rs.into_iter().collect();
 
     FairnessMetrics {
         dvr: if dvr_count > 0 {
@@ -118,7 +137,7 @@ mod tests {
                 .map(|&(job, finish_s, rt)| JobOutcome {
                     job,
                     user: job as u32 % 3,
-                    name: format!("j{job}"),
+                    name: format!("j{job}").into(),
                     submit_s: finish_s - rt,
                     finish_s,
                     slot_time: rt,
@@ -243,7 +262,7 @@ mod jain_tests {
                 .map(|(i, &rt)| JobOutcome {
                     job: i as u64,
                     user: i as u32,
-                    name: format!("j{i}"),
+                    name: format!("j{i}").into(),
                     submit_s: 0.0,
                     finish_s: rt,
                     slot_time: rt,

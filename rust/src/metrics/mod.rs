@@ -1,10 +1,17 @@
 //! Evaluation metrics (paper §5.1.1): response time, slowdown, and the
 //! deadline-violation / slack fairness metrics computed against a UJF
 //! reference execution.
+//!
+//! Two aggregation paths share the definitions: [`report::RunMetrics`]
+//! retains every [`JobOutcome`] (the exact paper-table path) and
+//! [`streaming`] folds completions into O(users + bins) accumulator
+//! state (the `uwfq scale` million-job path).
 
 pub mod cdf;
 pub mod fairness;
 pub mod report;
+pub mod streaming;
 
 pub use fairness::{FairnessMetrics, DvrDenominator};
 pub use report::{JobOutcome, RunMetrics};
+pub use streaming::{P2Quantile, StreamStats, StreamingEcdf, StreamingRunMetrics};

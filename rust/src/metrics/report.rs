@@ -2,6 +2,7 @@
 //! reference (slowdowns) and exposes the groupings the paper's tables use.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::core::dag::CompletedJob;
 use crate::util::stats;
@@ -13,7 +14,8 @@ use crate::{JobId, UserId};
 pub struct JobOutcome {
     pub job: JobId,
     pub user: UserId,
-    pub name: String,
+    /// Interned job-kind name (shared with the spec/record).
+    pub name: Arc<str>,
     pub submit_s: f64,
     pub finish_s: f64,
     /// Ground-truth sequential work.
@@ -55,7 +57,7 @@ impl RunMetrics {
         label: &str,
         workload: &Workload,
         completed: &[CompletedJob],
-        idle_rt: &HashMap<String, f64>,
+        idle_rt: &HashMap<Arc<str>, f64>,
         makespan_s: f64,
         utilization: f64,
     ) -> RunMetrics {
@@ -211,10 +213,9 @@ mod tests {
                 slot_time: 40.0,
             },
         ];
-        let idle: HashMap<String, f64> =
-            [("tiny".to_string(), 1.0), ("short".to_string(), 2.0)]
-                .into_iter()
-                .collect();
+        let idle: HashMap<Arc<str>, f64> = [("tiny".into(), 1.0), ("short".into(), 2.0)]
+            .into_iter()
+            .collect();
         RunMetrics::build("Fair", &wl, &completed, &idle, 5.0, 0.9)
     }
 

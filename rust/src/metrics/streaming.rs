@@ -1,0 +1,659 @@
+//! Bounded-memory streaming metrics — O(users + bins) accumulators for
+//! million-job runs.
+//!
+//! The exact path ([`super::report::RunMetrics`]) retains every
+//! [`crate::metrics::JobOutcome`], which is what lets it compute the
+//! paper tables precisely — and what caps run size at available memory.
+//! This module provides the streaming twins used by `uwfq scale`:
+//!
+//! * [`StreamStats`] — count / mean / min / max in O(1).
+//! * [`P2Quantile`] — the P² online quantile estimator (Jain & Chlamtac,
+//!   CACM 1985): five markers per tracked quantile, O(1) per
+//!   observation, no samples retained.
+//! * [`StreamingEcdf`] — a fixed-bin (log-spaced) streaming ECDF: CDF
+//!   queries, robust quantile inversion with error bounded by the bin
+//!   resolution, and CSV-ready points.
+//! * [`StreamingRunMetrics`] — a [`crate::sim::CompletionSink`] folding
+//!   each finished job into the above plus incremental per-user
+//!   aggregates (mean RT / slowdown per user, Jain fairness index) — the
+//!   streaming counterpart of the fairness metrics' per-user inputs.
+//!
+//! Accuracy contract (asserted in CI, see `tests/scale_accuracy.rs` and
+//! the unit tests below): on ≥50k-sample heavy-tailed workloads the
+//! ECDF-inverted p50/p95/p99 are within 8 % relative error of the exact
+//! quantiles (bin resolution ≈3.2 % with the default 512 log bins over
+//! [1 ms, 10 000 s]), the P² estimates within 15 % (p50/p95) / 25 %
+//! (p99), and the ECDF evaluated at its own bin edges within 0.02 of the
+//! exact empirical CDF.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::core::dag::CompletedJob;
+use crate::sim::CompletionSink;
+use crate::util::stats;
+use crate::UserId;
+
+// ---------------------------------------------------------------------------
+// Scalar accumulators
+// ---------------------------------------------------------------------------
+
+/// Count / sum / min / max in O(1) state.
+#[derive(Clone, Debug, Default)]
+pub struct StreamStats {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl StreamStats {
+    pub fn observe(&mut self, x: f64) {
+        if self.count == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.count += 1;
+        self.sum += x;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// P² online quantile estimator
+// ---------------------------------------------------------------------------
+
+/// The P² algorithm (Jain & Chlamtac 1985): tracks one quantile with five
+/// markers whose heights approximate the quantile curve by piecewise
+/// parabolas. O(1) memory and time per observation.
+#[derive(Clone, Debug)]
+pub struct P2Quantile {
+    p: f64,
+    /// Marker heights.
+    q: [f64; 5],
+    /// Actual marker positions (1-based sample counts).
+    n: [f64; 5],
+    /// Desired marker positions.
+    np: [f64; 5],
+    /// Desired-position increments per observation.
+    dn: [f64; 5],
+    count: u64,
+    /// First five observations (exact until the markers initialize).
+    init: Vec<f64>,
+}
+
+impl P2Quantile {
+    pub fn new(p: f64) -> P2Quantile {
+        assert!(p > 0.0 && p < 1.0, "quantile must be in (0, 1)");
+        P2Quantile {
+            p,
+            q: [0.0; 5],
+            n: [0.0; 5],
+            np: [0.0; 5],
+            dn: [0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0],
+            count: 0,
+            init: Vec::with_capacity(5),
+        }
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        self.count += 1;
+        if self.init.len() < 5 {
+            self.init.push(x);
+            if self.init.len() == 5 {
+                self.init.sort_by(|a, b| a.partial_cmp(b).expect("finite sample"));
+                for i in 0..5 {
+                    self.q[i] = self.init[i];
+                    self.n[i] = (i + 1) as f64;
+                }
+                let p = self.p;
+                self.np = [1.0, 1.0 + 2.0 * p, 1.0 + 4.0 * p, 3.0 + 2.0 * p, 5.0];
+            }
+            return;
+        }
+
+        // Cell k: q[k] <= x < q[k+1], extending the extremes as needed.
+        let k = if x < self.q[0] {
+            self.q[0] = x;
+            0
+        } else if x >= self.q[4] {
+            self.q[4] = x;
+            3
+        } else {
+            let mut k = 0;
+            for i in 1..4 {
+                if x >= self.q[i] {
+                    k = i;
+                }
+            }
+            k
+        };
+        for i in (k + 1)..5 {
+            self.n[i] += 1.0;
+        }
+        for i in 0..5 {
+            self.np[i] += self.dn[i];
+        }
+        // Move interior markers toward their desired positions.
+        for i in 1..4 {
+            let d = self.np[i] - self.n[i];
+            if (d >= 1.0 && self.n[i + 1] - self.n[i] > 1.0)
+                || (d <= -1.0 && self.n[i - 1] - self.n[i] < -1.0)
+            {
+                let d = d.signum();
+                let candidate = self.parabolic(i, d);
+                self.q[i] = if self.q[i - 1] < candidate && candidate < self.q[i + 1] {
+                    candidate
+                } else {
+                    self.linear(i, d)
+                };
+                self.n[i] += d;
+            }
+        }
+    }
+
+    fn parabolic(&self, i: usize, d: f64) -> f64 {
+        let (q, n) = (&self.q, &self.n);
+        q[i] + d / (n[i + 1] - n[i - 1])
+            * ((n[i] - n[i - 1] + d) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+                + (n[i + 1] - n[i] - d) * (q[i] - q[i - 1]) / (n[i] - n[i - 1]))
+    }
+
+    fn linear(&self, i: usize, d: f64) -> f64 {
+        let j = if d > 0.0 { i + 1 } else { i - 1 };
+        self.q[i] + d * (self.q[j] - self.q[i]) / (self.n[j] - self.n[i])
+    }
+
+    /// Current estimate. Exact while fewer than five samples have been
+    /// seen.
+    pub fn value(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        if self.count < 5 {
+            let mut v = self.init.clone();
+            v.sort_by(|a, b| a.partial_cmp(b).expect("finite sample"));
+            return stats::percentile(&v, self.p * 100.0);
+        }
+        self.q[2]
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fixed-bin streaming ECDF
+// ---------------------------------------------------------------------------
+
+/// Streaming empirical CDF over fixed log-spaced bins covering
+/// `[lo, hi]`. Values below `lo` clamp into the first bin, values above
+/// `hi` into the last, so total mass is always accounted. Log spacing
+/// keeps *relative* value resolution constant — `(hi/lo)^(1/bins) − 1`
+/// per bin (≈3.2 % at the 512-bin default over seven decades) — which is
+/// the right shape for response-time distributions.
+#[derive(Clone, Debug)]
+pub struct StreamingEcdf {
+    lo: f64,
+    hi: f64,
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl StreamingEcdf {
+    /// The default window for response-time metrics: 1 ms .. 10 000 s.
+    pub fn response_times() -> StreamingEcdf {
+        StreamingEcdf::new(1e-3, 1e4, 512)
+    }
+
+    pub fn new(lo: f64, hi: f64, bins: usize) -> StreamingEcdf {
+        assert!(lo > 0.0 && hi > lo && bins > 0);
+        StreamingEcdf {
+            lo,
+            hi,
+            counts: vec![0; bins],
+            total: 0,
+        }
+    }
+
+    fn bin_of(&self, x: f64) -> usize {
+        if !(x > self.lo) {
+            return 0;
+        }
+        if x >= self.hi {
+            return self.counts.len() - 1;
+        }
+        let frac = (x / self.lo).ln() / (self.hi / self.lo).ln();
+        ((frac * self.counts.len() as f64) as usize).min(self.counts.len() - 1)
+    }
+
+    /// Number of bins whose upper edge lies at or below `x` — the bins
+    /// whose whole mass is certainly ≤ x. Robust to fp rounding when `x`
+    /// is exactly a bin edge (nudged up by well under one bin width).
+    fn full_bins_below(&self, x: f64) -> usize {
+        if x >= self.hi {
+            return self.counts.len();
+        }
+        if !(x > self.lo) {
+            return 0;
+        }
+        let frac = (x / self.lo).ln() / (self.hi / self.lo).ln();
+        ((frac * self.counts.len() as f64 + 1e-9) as usize).min(self.counts.len())
+    }
+
+    /// Upper value edge of bin `b` (the value the bin's mass reports as).
+    pub fn upper_edge(&self, b: usize) -> f64 {
+        self.lo * (self.hi / self.lo).powf((b + 1) as f64 / self.counts.len() as f64)
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        let b = self.bin_of(x);
+        self.counts[b] += 1;
+        self.total += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn bins(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Fraction of observed mass in bins wholly at or below `x`: exact at
+    /// bin upper edges, an underestimate by at most one bin's mass for
+    /// interior points (see [`StreamingEcdf::max_bin_mass`]). `x ≥ hi`
+    /// always reports 1.
+    pub fn cdf_at(&self, x: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let k = self.full_bins_below(x);
+        let cum: u64 = self.counts[..k].iter().sum();
+        cum as f64 / self.total as f64
+    }
+
+    /// Quantile by CDF inversion: the upper edge of the first bin where
+    /// the cumulative mass reaches `p`. Error bounded by one bin's
+    /// relative width (plus clamping at the window edges).
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (p.clamp(0.0, 1.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return self.upper_edge(b);
+            }
+        }
+        self.hi
+    }
+
+    /// Non-empty bins as (upper edge, cumulative fraction) — CSV-ready,
+    /// same long format as [`super::cdf::CdfSeries`].
+    pub fn points(&self) -> Vec<(f64, f64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if c > 0 {
+                out.push((self.upper_edge(b), cum as f64 / self.total.max(1) as f64));
+            }
+        }
+        out
+    }
+
+    /// Largest single-bin mass fraction — the worst-case CDF error at an
+    /// arbitrary (non-edge) query point.
+    pub fn max_bin_mass(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.counts.iter().copied().max().unwrap_or(0) as f64 / self.total as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-user incremental aggregates
+// ---------------------------------------------------------------------------
+
+/// One user's incremental aggregate.
+#[derive(Clone, Debug, Default)]
+pub struct UserAccum {
+    pub jobs: u64,
+    pub rt_sum: f64,
+    pub slowdown_sum: f64,
+}
+
+impl UserAccum {
+    pub fn mean_rt(&self) -> f64 {
+        if self.jobs == 0 {
+            0.0
+        } else {
+            self.rt_sum / self.jobs as f64
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The streaming run-metrics sink
+// ---------------------------------------------------------------------------
+
+/// Bounded-memory run metrics: a [`CompletionSink`] whose resident state
+/// is O(users + quantile markers + ECDF bins) — independent of the number
+/// of jobs streamed through it. The streaming counterpart of
+/// [`super::report::RunMetrics`].
+pub struct StreamingRunMetrics {
+    pub label: String,
+    /// Idle response time per interned job-kind name (slowdown
+    /// denominators; O(distinct templates)).
+    idle_rt: HashMap<Arc<str>, f64>,
+    pub rt: StreamStats,
+    pub slowdown: StreamStats,
+    rt_p50: P2Quantile,
+    rt_p95: P2Quantile,
+    rt_p99: P2Quantile,
+    pub rt_ecdf: StreamingEcdf,
+    per_user: HashMap<UserId, UserAccum>,
+}
+
+impl StreamingRunMetrics {
+    pub fn new(label: &str, idle_rt: HashMap<Arc<str>, f64>) -> StreamingRunMetrics {
+        StreamingRunMetrics {
+            label: label.to_string(),
+            idle_rt,
+            rt: StreamStats::default(),
+            slowdown: StreamStats::default(),
+            rt_p50: P2Quantile::new(0.50),
+            rt_p95: P2Quantile::new(0.95),
+            rt_p99: P2Quantile::new(0.99),
+            rt_ecdf: StreamingEcdf::response_times(),
+            per_user: HashMap::new(),
+        }
+    }
+
+    pub fn jobs(&self) -> u64 {
+        self.rt.count
+    }
+
+    pub fn mean_rt(&self) -> f64 {
+        self.rt.mean()
+    }
+
+    pub fn mean_slowdown(&self) -> f64 {
+        self.slowdown.mean()
+    }
+
+    /// P² response-time quantile estimates for p in {0.50, 0.95, 0.99}.
+    pub fn rt_quantile_p2(&self, p: f64) -> f64 {
+        if (p - 0.50).abs() < 1e-12 {
+            self.rt_p50.value()
+        } else if (p - 0.95).abs() < 1e-12 {
+            self.rt_p95.value()
+        } else if (p - 0.99).abs() < 1e-12 {
+            self.rt_p99.value()
+        } else {
+            panic!("streaming quantiles track p50/p95/p99 only, got {p}")
+        }
+    }
+
+    /// ECDF-inverted response-time quantile (error bounded by bin
+    /// resolution; the robust estimate `uwfq scale` asserts on).
+    pub fn rt_quantile_ecdf(&self, p: f64) -> f64 {
+        self.rt_ecdf.quantile(p)
+    }
+
+    pub fn users(&self) -> Vec<UserId> {
+        let mut u: Vec<UserId> = self.per_user.keys().copied().collect();
+        u.sort_unstable();
+        u
+    }
+
+    pub fn user(&self, u: UserId) -> Option<&UserAccum> {
+        self.per_user.get(&u)
+    }
+
+    pub fn user_count(&self) -> usize {
+        self.per_user.len()
+    }
+
+    /// Jain fairness index over per-user mean response times — the same
+    /// definition (and caveats) as
+    /// [`super::fairness::jain_index_user_rt`], computed from the
+    /// incremental aggregates. Deterministic: accumulated in sorted user
+    /// order.
+    pub fn jain_index_user_rt(&self) -> f64 {
+        let users = self.users();
+        let xs: Vec<f64> = users
+            .iter()
+            .filter_map(|u| {
+                let m = self.per_user[u].mean_rt();
+                (m > 0.0).then_some(m)
+            })
+            .collect();
+        if xs.is_empty() {
+            return 1.0;
+        }
+        let sum: f64 = xs.iter().sum();
+        let sumsq: f64 = xs.iter().map(|x| x * x).sum();
+        sum * sum / (xs.len() as f64 * sumsq)
+    }
+}
+
+impl CompletionSink for StreamingRunMetrics {
+    fn job_completed(&mut self, c: CompletedJob) {
+        let rt = c.response_time();
+        self.rt.observe(rt);
+        self.rt_p50.observe(rt);
+        self.rt_p95.observe(rt);
+        self.rt_p99.observe(rt);
+        self.rt_ecdf.observe(rt);
+        let idle = self.idle_rt.get(&c.name).copied().unwrap_or(0.0);
+        let slowdown = if idle > 0.0 { rt / idle } else { 1.0 };
+        self.slowdown.observe(slowdown);
+        let acc = self.per_user.entry(c.user).or_default();
+        acc.jobs += 1;
+        acc.rt_sum += rt;
+        acc.slowdown_sum += slowdown;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn stream_stats_basics() {
+        let mut s = StreamStats::default();
+        assert_eq!(s.mean(), 0.0);
+        for x in [2.0, 4.0, 9.0] {
+            s.observe(x);
+        }
+        assert_eq!(s.count, 3);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 9.0);
+    }
+
+    #[test]
+    fn p2_exact_below_five_samples() {
+        let mut p = P2Quantile::new(0.5);
+        p.observe(3.0);
+        p.observe(1.0);
+        assert!((p.value() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn p2_close_on_uniform() {
+        // Uniform [0,1): P² should be within ~1–2 % absolute.
+        let mut rng = Rng::new(7);
+        let mut p50 = P2Quantile::new(0.5);
+        let mut p95 = P2Quantile::new(0.95);
+        for _ in 0..20_000 {
+            let x = rng.f64();
+            p50.observe(x);
+            p95.observe(x);
+        }
+        assert!((p50.value() - 0.5).abs() < 0.02, "p50={}", p50.value());
+        assert!((p95.value() - 0.95).abs() < 0.02, "p95={}", p95.value());
+    }
+
+    /// Samples from the gtrace job-size mixture (§5.3 generator shape):
+    /// heavy-user lognormal(4.5, 1.1) with probability 0.4, light-user
+    /// lognormal(2.6, 0.8) otherwise — heavy-tailed and bimodal-ish, the
+    /// stress shape for streaming quantiles.
+    fn gtrace_mixture(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                if rng.f64() < 0.4 {
+                    rng.lognormal(4.5, 1.1)
+                } else {
+                    rng.lognormal(2.6, 0.8)
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn p2_within_documented_tolerance_on_50k_gtrace_mixture() {
+        // The documented accuracy contract on the 50k-sample gtrace-shaped
+        // distribution: p50/p95 within 15 %, p99 within 25 % relative.
+        let xs = gtrace_mixture(50_000, 42);
+        let mut p50 = P2Quantile::new(0.50);
+        let mut p95 = P2Quantile::new(0.95);
+        let mut p99 = P2Quantile::new(0.99);
+        for &x in &xs {
+            p50.observe(x);
+            p95.observe(x);
+            p99.observe(x);
+        }
+        let rel = |est: f64, exact: f64| (est - exact).abs() / exact;
+        let e50 = crate::util::stats::percentile(&xs, 50.0);
+        let e95 = crate::util::stats::percentile(&xs, 95.0);
+        let e99 = crate::util::stats::percentile(&xs, 99.0);
+        assert!(rel(p50.value(), e50) < 0.15, "p50 {} vs {}", p50.value(), e50);
+        assert!(rel(p95.value(), e95) < 0.15, "p95 {} vs {}", p95.value(), e95);
+        assert!(rel(p99.value(), e99) < 0.25, "p99 {} vs {}", p99.value(), e99);
+    }
+
+    #[test]
+    fn ecdf_within_documented_tolerance_on_50k_gtrace_mixture() {
+        let mut xs = gtrace_mixture(50_000, 9);
+        let mut ecdf = StreamingEcdf::new(1e-2, 1e5, 512);
+        for &x in &xs {
+            ecdf.observe(x);
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // At its own bin edges the streaming CDF matches the exact
+        // empirical CDF to within fp/binning noise (documented ≤ 0.02).
+        let exact_at = |v: f64| -> f64 {
+            let idx = xs.partition_point(|&s| s <= v);
+            idx as f64 / xs.len() as f64
+        };
+        let mut sup = 0.0f64;
+        for b in 0..512 {
+            let edge = ecdf.upper_edge(b);
+            sup = sup.max((ecdf.cdf_at(edge) - exact_at(edge)).abs());
+        }
+        assert!(sup < 0.02, "sup CDF error at edges {sup}");
+        // ECDF-inverted quantiles within one-bin relative resolution
+        // (documented ≤ 8 %).
+        for (p, pct) in [(0.50, 50.0), (0.95, 95.0), (0.99, 99.0)] {
+            let exact = crate::util::stats::percentile(&xs, pct);
+            let est = ecdf.quantile(p);
+            let rel = (est - exact).abs() / exact;
+            assert!(rel < 0.08, "p{pct} {est} vs {exact} (rel {rel})");
+        }
+    }
+
+    #[test]
+    fn ecdf_clamps_out_of_range_mass() {
+        let mut e = StreamingEcdf::new(1.0, 100.0, 8);
+        e.observe(0.001); // below lo → first bin
+        e.observe(1e9); // above hi → last bin
+        e.observe(10.0);
+        assert_eq!(e.total(), 3);
+        assert!((e.cdf_at(1e9) - 1.0).abs() < 1e-12);
+        // Underflow mass clamps into the first bin, visible at its edge.
+        assert!(e.cdf_at(e.upper_edge(0)) > 0.0);
+        assert_eq!(e.cdf_at(0.5), 0.0);
+        let pts = e.points();
+        assert!(!pts.is_empty());
+        assert!((pts.last().unwrap().1 - 1.0).abs() < 1e-12);
+        assert!(e.max_bin_mass() >= 1.0 / 3.0);
+    }
+
+    #[test]
+    fn streaming_sink_matches_exact_aggregates() {
+        // Feed a small synthetic completion list through the sink and
+        // check count/mean/per-user/jain against the retained-path
+        // formulas.
+        let idle: HashMap<Arc<str>, f64> = [(Arc::from("t"), 2.0)].into_iter().collect();
+        let mut sink = StreamingRunMetrics::new("X", idle);
+        let rts = [2.0, 4.0, 6.0, 8.0];
+        for (i, &rt) in rts.iter().enumerate() {
+            sink.job_completed(CompletedJob {
+                job: i as u64 + 1,
+                user: (i % 2) as u32 + 1,
+                name: Arc::from("t"),
+                submit: 0,
+                finish: crate::s_to_us(rt),
+                slot_time: 1.0,
+            });
+        }
+        assert_eq!(sink.jobs(), 4);
+        assert!((sink.mean_rt() - 5.0).abs() < 1e-9);
+        // slowdowns = rt / 2.0 → mean 2.5
+        assert!((sink.mean_slowdown() - 2.5).abs() < 1e-9);
+        assert_eq!(sink.users(), vec![1, 2]);
+        // user 1 got rts {2, 6} → mean 4; user 2 got {4, 8} → mean 6.
+        assert!((sink.user(1).unwrap().mean_rt() - 4.0).abs() < 1e-9);
+        assert!((sink.user(2).unwrap().mean_rt() - 6.0).abs() < 1e-9);
+        let jain = sink.jain_index_user_rt();
+        // Jain of (4, 6): 100 / (2 * 52) ≈ 0.9615
+        assert!((jain - 100.0 / 104.0).abs() < 1e-9);
+        // Quantiles exact below 5 samples.
+        assert!((sink.rt_quantile_p2(0.50) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn streaming_sink_matches_run_metrics_on_a_real_run() {
+        // Stream a real (small) simulation into both sinks: mean RT and
+        // mean slowdown must agree exactly (same values, same order).
+        use crate::config::Config;
+        use crate::sim;
+        use crate::workload::scenarios;
+        let w = scenarios::scenario2(1, 4, 0.5);
+        let cfg = Config::default().with_cores(8);
+        let idle = crate::bench::idle_map(&cfg, &w);
+        let exact = crate::bench::run_one(&cfg, &w);
+        let mut core = crate::core::SchedCore::from_config(cfg);
+        let mut sink = StreamingRunMetrics::new("stream", idle);
+        let summary = sim::simulate_stream_into(&mut core, w.to_stream(), &mut sink);
+        assert_eq!(sink.jobs() as usize, exact.outcomes.len());
+        assert!((sink.mean_rt() - exact.mean_rt()).abs() < 1e-12);
+        assert!((sink.mean_slowdown() - exact.mean_slowdown()).abs() < 1e-12);
+        assert_eq!(summary.jobs_completed, sink.jobs());
+        assert!(summary.peak_in_flight_jobs >= 1);
+        // Per-user means match the exact per-user means.
+        for u in sink.users() {
+            let m = exact.mean_rt_of_user(u);
+            assert!((sink.user(u).unwrap().mean_rt() - m).abs() < 1e-9, "user {u}");
+        }
+    }
+}

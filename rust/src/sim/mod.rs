@@ -19,8 +19,9 @@ use std::sync::{Mutex, OnceLock};
 use crate::core::dag::CompletedJob;
 use crate::core::job::JobSpec;
 use crate::core::task::TaskRecord;
-use crate::core::SchedCore;
+use crate::core::{Launch, SchedCore};
 use crate::config::Config;
+use crate::workload::stream::{JobStream, VecStream};
 use crate::TimeUs;
 
 /// Result of a completed simulation run.
@@ -53,30 +54,103 @@ pub fn simulate_with(mut core: SchedCore, jobs: Vec<JobSpec>) -> SimReport {
 /// Simulate on a borrowed core — the sweep engine's reuse path: workers
 /// recycle one core's allocations across grid cells via
 /// [`SchedCore::reset`]. The core must be freshly built or reset; its
-/// `completed`/`task_log` are moved into the returned report.
+/// `task_log` is moved into the returned report.
 ///
-/// Event ordering (identical to the retired event-enum heap): events fire
-/// in time order; at equal times completions run before arrivals (freed
-/// cores are visible to newly arriving jobs exactly like in the live
-/// system, where the completion handler runs first), same-time completions
-/// fire lowest-core first, and same-time arrivals fire in workload order.
-/// Arrivals come from a sorted cursor rather than the heap, so the heap
-/// holds only in-flight completions — at most one entry per core — which
-/// shrinks the per-event log factor and peak memory from O(jobs) to
-/// O(cores).
-pub fn simulate_into(core: &mut SchedCore, mut jobs: Vec<JobSpec>) -> SimReport {
+/// This is the exact in-memory path (every [`CompletedJob`] retained in
+/// the report), implemented on the streaming event loop
+/// ([`simulate_stream_into`]) with a collecting sink — the two paths are
+/// one loop, so they cannot drift.
+pub fn simulate_into(core: &mut SchedCore, jobs: Vec<JobSpec>) -> SimReport {
+    // VecStream stable-sorts by arrival: same-instant arrivals keep
+    // workload order, matching the old heap's (time, kind, index)
+    // tie-break.
+    let mut sink = CollectSink::default();
+    let summary = simulate_stream_into(core, VecStream::new(jobs), &mut sink);
+    SimReport {
+        label: summary.label,
+        completed: sink.completed,
+        task_log: std::mem::take(&mut core.task_log),
+        makespan_s: summary.makespan_s,
+        utilization: summary.utilization,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Streaming simulation
+// ---------------------------------------------------------------------------
+
+/// Receives finished jobs as the simulation runs — the streaming
+/// pipeline's output port. Bounded-memory sinks
+/// ([`crate::metrics::streaming::StreamingRunMetrics`]) fold each job
+/// into O(1) accumulator state; [`CollectSink`] retains everything (the
+/// exact paper-table path).
+pub trait CompletionSink {
+    fn job_completed(&mut self, job: CompletedJob);
+}
+
+/// Retains every completed job — the exact in-memory reference sink.
+#[derive(Default)]
+pub struct CollectSink {
+    pub completed: Vec<CompletedJob>,
+}
+
+impl CompletionSink for CollectSink {
+    fn job_completed(&mut self, job: CompletedJob) {
+        self.completed.push(job);
+    }
+}
+
+/// Aggregate outcome of a streaming simulation (everything the metrics
+/// sink cannot see itself).
+#[derive(Clone, Debug)]
+pub struct StreamSummary {
+    /// Scheduler/partitioner label ("UWFQ-P", ...).
+    pub label: String,
+    pub jobs_completed: u64,
+    /// Task completions processed (the hot-path event count).
+    pub task_events: u64,
+    /// Peak number of concurrently in-flight jobs — the engine's resident
+    /// state is O(this), not O(total jobs).
+    pub peak_in_flight_jobs: usize,
+    pub makespan_s: f64,
+    pub utilization: f64,
+}
+
+/// Drive a [`SchedCore`] from a lazy [`JobStream`], draining every
+/// completed job into `sink` as it finishes. Resident state is the
+/// engine's (O(in-flight jobs + active stages + cores)) plus whatever the
+/// sink keeps — with a streaming sink, a million-job run never holds more
+/// than the live backlog.
+///
+/// Event ordering (identical to [`simulate_into`], which shares this
+/// loop): events fire in time order; at equal times completions run
+/// before arrivals (freed cores are visible to newly arriving jobs
+/// exactly like in the live system, where the completion handler runs
+/// first), same-time completions fire lowest-core first, and same-time
+/// arrivals fire in stream order. Arrivals come from the stream cursor
+/// rather than the heap, so the heap holds only in-flight completions —
+/// at most one entry per core. The stream must yield nondecreasing
+/// arrivals (debug-asserted). Launches go through a reusable buffer
+/// ([`SchedCore::try_launch_into`]) — zero per-event allocations.
+pub fn simulate_stream_into<S: JobStream, K: CompletionSink>(
+    core: &mut SchedCore,
+    mut stream: S,
+    sink: &mut K,
+) -> StreamSummary {
     let label = core.cfg.label();
-    // Stable sort: same-instant arrivals keep workload order, matching the
-    // old heap's (time, kind, index) tie-break.
-    jobs.sort_by_key(|j| j.arrival);
-    let mut arrivals = jobs.into_iter().peekable();
     let mut heap: BinaryHeap<Reverse<(TimeUs, usize)>> = BinaryHeap::new();
+    let mut launches: Vec<Launch> = Vec::new();
+    let mut next_arrival_spec = stream.next_job();
 
     let mut now: TimeUs = 0;
     let mut busy_us: u128 = 0;
+    let mut task_events: u64 = 0;
+    let mut jobs_completed: u64 = 0;
+    let mut peak_in_flight: usize = 0;
+    let mut max_finish: TimeUs = 0;
     loop {
         let next_done = heap.peek().map(|&Reverse((t, _))| t);
-        let next_arrival = arrivals.peek().map(|j| j.arrival);
+        let next_arrival = next_arrival_spec.as_ref().map(|j| j.arrival);
         let take_done = match (next_done, next_arrival) {
             (None, None) => break,
             (Some(_), None) => true,
@@ -88,38 +162,66 @@ pub fn simulate_into(core: &mut SchedCore, mut jobs: Vec<JobSpec>) -> SimReport 
             debug_assert!(t >= now, "event time regressed");
             now = t;
             core.task_finished(now, c);
+            task_events += 1;
         } else {
             // Specs are moved (not cloned) into the engine on arrival.
-            let spec = arrivals.next().expect("peeked arrival");
-            debug_assert!(spec.arrival >= now, "event time regressed");
+            let spec = next_arrival_spec.take().expect("peeked arrival");
+            debug_assert!(spec.arrival >= now, "stream arrivals regressed");
             now = spec.arrival;
             core.submit_job(now, spec)
                 .expect("workload produced invalid job");
+            next_arrival_spec = stream.next_job();
+            peak_in_flight = peak_in_flight.max(core.in_flight_jobs());
         }
         // try_launch after every event keeps the offer semantics exact.
-        for launch in core.try_launch(now) {
+        core.try_launch_into(now, &mut launches);
+        for launch in &launches {
             let fin = now + crate::s_to_us(launch.runtime_s);
             busy_us += (fin - now) as u128;
             heap.push(Reverse((fin, launch.core)));
         }
+        // Drain finished jobs immediately: the engine never accumulates
+        // per-job completion state on the streaming path.
+        if !core.completed.is_empty() {
+            for c in core.completed.drain(..) {
+                max_finish = max_finish.max(c.finish);
+                jobs_completed += 1;
+                sink.job_completed(c);
+            }
+        }
     }
     assert!(core.is_idle(), "simulation ended with stranded work");
 
-    let completed = std::mem::take(&mut core.completed);
-    let task_log = std::mem::take(&mut core.task_log);
-    let makespan_s = crate::us_to_s(completed.iter().map(|c| c.finish).max().unwrap_or(0));
+    let makespan_s = crate::us_to_s(max_finish);
     let cores = core.cfg.cores as f64;
     let utilization = if makespan_s > 0.0 {
         busy_us as f64 / 1e6 / (cores * makespan_s)
     } else {
         0.0
     };
-    SimReport {
+    StreamSummary {
         label,
-        completed,
-        task_log,
+        jobs_completed,
+        task_events,
+        peak_in_flight_jobs: peak_in_flight,
         makespan_s,
         utilization,
+    }
+}
+
+/// Convenience: stream a workload through a fresh core and collect the
+/// full report (the streamed twin of [`simulate`], used by the
+/// differential tests).
+pub fn simulate_stream<S: JobStream>(cfg: Config, stream: S) -> SimReport {
+    let mut core = SchedCore::from_config(cfg);
+    let mut sink = CollectSink::default();
+    let summary = simulate_stream_into(&mut core, stream, &mut sink);
+    SimReport {
+        label: summary.label,
+        completed: sink.completed,
+        task_log: std::mem::take(&mut core.task_log),
+        makespan_s: summary.makespan_s,
+        utilization: summary.utilization,
     }
 }
 
@@ -496,6 +598,52 @@ mod tests {
         assert_eq!(idle_response_time(&cfg(4, PolicyKind::Fair), &ja), rt_a);
         let (hits3, _) = idle_cache_stats();
         assert!(hits3 > hits2, "chain shapes must share across policies");
+    }
+
+    #[test]
+    fn streamed_equals_materialized_exact_path() {
+        // The streaming driver with a collecting sink must reproduce the
+        // exact path bit-for-bit (they share one event loop; this guards
+        // the adapter and drain plumbing around it). Two policies here
+        // keep the debug run fast; tests/stream_differential.rs covers
+        // all five on every paper scenario.
+        let jobs = mixed_workload();
+        for policy in [PolicyKind::Uwfq, PolicyKind::Ujf] {
+            let c = cfg(8, policy);
+            let a = simulate(c.clone(), jobs.clone());
+            let b = simulate_stream(
+                c,
+                crate::workload::stream::VecStream::new(jobs.clone()),
+            );
+            let fa: Vec<_> = a.completed.iter().map(|r| (r.job, r.finish)).collect();
+            let fb: Vec<_> = b.completed.iter().map(|r| (r.job, r.finish)).collect();
+            assert_eq!(fa, fb, "{}", policy.name());
+            assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+            assert_eq!(a.utilization.to_bits(), b.utilization.to_bits());
+        }
+    }
+
+    #[test]
+    fn stream_summary_counts_events_and_backlog() {
+        let jobs: Vec<JobSpec> = (0..12).map(|i| job(i % 3, i as f64 * 0.05, 0.5)).collect();
+        let mut probe = cfg(4, PolicyKind::Uwfq);
+        probe.log_tasks = true;
+        let tasks = simulate(probe, jobs.clone()).task_log.len() as u64;
+        let mut core = SchedCore::from_config(cfg(4, PolicyKind::Uwfq));
+        let mut sink = CollectSink::default();
+        let summary = simulate_stream_into(
+            &mut core,
+            crate::workload::stream::VecStream::new(jobs),
+            &mut sink,
+        );
+        assert_eq!(summary.jobs_completed, 12);
+        assert_eq!(sink.completed.len(), 12);
+        assert_eq!(summary.task_events, tasks);
+        assert!(summary.peak_in_flight_jobs >= 1);
+        // The engine retained nothing: completions were drained as they
+        // happened.
+        assert!(core.completed.is_empty());
+        assert!(core.is_idle());
     }
 
     #[test]

@@ -25,13 +25,23 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
     let mut v = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    percentile_sorted(&v, p)
+}
+
+/// [`percentile`] on already-sorted input — no copy, no re-sort (the
+/// streaming verify pass queries several percentiles of one big sorted
+/// vector). 0.0 for empty input.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
     if lo == hi {
-        v[lo]
+        sorted[lo]
     } else {
-        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+        sorted[lo] + (rank - lo as f64) * (sorted[hi] - sorted[lo])
     }
 }
 
@@ -82,6 +92,9 @@ mod tests {
         assert!((percentile(&xs, 100.0) - 100.0).abs() < 1e-9);
         assert!((median(&xs) - 50.5).abs() < 1e-9);
         assert_eq!(percentile(&[], 50.0), 0.0);
+        // Sorted variant agrees with the copying one and guards empty.
+        assert_eq!(percentile_sorted(&xs, 37.2), percentile(&xs, 37.2));
+        assert_eq!(percentile_sorted(&[], 50.0), 0.0);
     }
 
     #[test]

@@ -12,10 +12,11 @@
 //! filter + rescale pipeline. A real trace export can be used instead via
 //! [`crate::workload::tracefile`].
 
+use super::stream::JobStream;
 use super::{UserClass, Workload};
 use crate::core::job::{CostProfile, JobSpec, StagePhase, StageSpec};
-use crate::s_to_us;
 use crate::util::{stats, Rng};
+use crate::{s_to_us, UserId};
 use std::collections::HashMap;
 
 /// Generator parameters; defaults reproduce §5.3.
@@ -53,6 +54,31 @@ impl Default for GtraceParams {
 
 /// Build the macro workload.
 pub fn gtrace(seed: u64, p: &GtraceParams) -> Workload {
+    let (raw, mut rng) = shaped_raw(seed, p);
+
+    // Materialize 1–3-stage linear jobs.
+    let mut jobs = Vec::new();
+    let mut user_class = HashMap::new();
+    for (i, (user, arrival, slot, class)) in raw.iter().enumerate() {
+        user_class.insert(*user, *class);
+        let mut r = rng.fork(0xB0B ^ i as u64);
+        jobs.push(trace_job(*user, i, *arrival, *slot, &mut r, p.skew_fraction));
+    }
+
+    Workload {
+        name: "gtrace".into(),
+        jobs,
+        user_class,
+    }
+}
+
+/// The shared §5.3 shaping pipeline: generate raw (user, arrival,
+/// slot-time, class) tuples, filter the runtime tail, rebalance heavy
+/// users and rescale to the target utilization. Returns the tuples (in
+/// generation order) plus the root RNG in the exact state the per-job
+/// materialization forks from — both [`gtrace`] and [`gtrace_stream`]
+/// build identical jobs from this.
+fn shaped_raw(seed: u64, p: &GtraceParams) -> (Vec<(u32, f64, f64, UserClass)>, Rng) {
     let mut rng = Rng::new(seed);
     let mut raw: Vec<(u32, f64, f64, UserClass)> = Vec::new(); // (user, arrival, slot, class)
 
@@ -109,20 +135,7 @@ pub fn gtrace(seed: u64, p: &GtraceParams) -> Workload {
         j.2 *= scale;
     }
 
-    // Materialize 1–3-stage linear jobs.
-    let mut jobs = Vec::new();
-    let mut user_class = HashMap::new();
-    for (i, (user, arrival, slot, class)) in raw.iter().enumerate() {
-        user_class.insert(*user, *class);
-        let mut r = rng.fork(0xB0B ^ i as u64);
-        jobs.push(trace_job(*user, i, *arrival, *slot, &mut r, p.skew_fraction));
-    }
-
-    Workload {
-        name: "gtrace".into(),
-        jobs,
-        user_class,
-    }
+    (raw, rng)
 }
 
 /// One trace job: a linear chain of 1–3 stages whose slot-times partition
@@ -178,10 +191,87 @@ fn trace_job(
         .collect();
     JobSpec {
         user,
-        name: format!("g{idx}"),
+        name: format!("g{idx}").into(),
         arrival: s_to_us(arrival_s),
         weight: 1.0,
         stages,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Streaming twin
+// ---------------------------------------------------------------------------
+
+/// One shaped trace job awaiting lazy materialization: the compact tuple
+/// plus its pre-forked RNG (forked in generation order, so the root RNG
+/// advances exactly as in [`gtrace`]).
+struct RawTraceJob {
+    user: u32,
+    idx: usize,
+    arrival_s: f64,
+    slot: f64,
+    rng: Rng,
+}
+
+/// The macro workload as a stream. **Semi-streaming**: the §5.3 filter /
+/// rebalance / rescale pipeline is inherently two-pass (it needs the
+/// global size median and work totals), so the stream holds the shaped
+/// *tuples* — ~56 bytes each — and materializes full `JobSpec`s (stages,
+/// cost profiles, task lists downstream) one at a time in arrival order.
+/// Simulating it is byte-identical to simulating [`gtrace`].
+pub struct GtraceStream {
+    raw: std::vec::IntoIter<RawTraceJob>,
+    skew_fraction: f64,
+    /// Per-user behaviour class (O(users); known before any job yields).
+    pub user_class: HashMap<UserId, UserClass>,
+}
+
+/// Build the streaming twin of [`gtrace`] for the same seed/params.
+pub fn gtrace_stream(seed: u64, p: &GtraceParams) -> GtraceStream {
+    let (raw, mut rng) = shaped_raw(seed, p);
+    let mut user_class = HashMap::new();
+    let mut items: Vec<RawTraceJob> = raw
+        .iter()
+        .enumerate()
+        .map(|(i, &(user, arrival, slot, class))| {
+            user_class.insert(user, class);
+            RawTraceJob {
+                user,
+                idx: i,
+                arrival_s: arrival,
+                slot,
+                // Forked in generation order — identical streams to the
+                // materialized path even though jobs yield in arrival
+                // order.
+                rng: rng.fork(0xB0B ^ i as u64),
+            }
+        })
+        .collect();
+    // Arrival order with the stable tie-break (generation index), i.e.
+    // exactly the order the simulator's sorted cursor replays.
+    items.sort_by_key(|r| (s_to_us(r.arrival_s), r.idx));
+    GtraceStream {
+        raw: items.into_iter(),
+        skew_fraction: p.skew_fraction,
+        user_class,
+    }
+}
+
+impl JobStream for GtraceStream {
+    fn next_job(&mut self) -> Option<JobSpec> {
+        let mut r = self.raw.next()?;
+        Some(trace_job(
+            r.user,
+            r.idx,
+            r.arrival_s,
+            r.slot,
+            &mut r.rng,
+            self.skew_fraction,
+        ))
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        Some(self.raw.len())
     }
 }
 
@@ -247,6 +337,38 @@ mod tests {
                 .collect::<Vec<_>>()
         };
         assert_eq!(key(&a), key(&b));
+    }
+
+    #[test]
+    fn gtrace_stream_matches_materialized_sorted_order() {
+        // Job-level parity: the stream must yield exactly the jobs of the
+        // materialized builder, in the simulator's stable
+        // sort-by-arrival replay order, with identical per-job RNG draws
+        // (stage splits, skew, opcounts).
+        let mut p = GtraceParams::default();
+        p.window_s = 90.0;
+        p.users = 8;
+        p.heavy_users = 2;
+        p.cores = 8;
+        let mat = gtrace(13, &p);
+        let streamed =
+            crate::workload::stream::materialize(gtrace_stream(13, &p));
+        let sorted = crate::workload::stream::materialize(mat.clone().into_stream());
+        assert_eq!(sorted.len(), streamed.len());
+        for (a, b) in sorted.iter().zip(&streamed) {
+            assert_eq!(a.user, b.user);
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.stages.len(), b.stages.len());
+            for (sa, sb) in a.stages.iter().zip(&b.stages) {
+                assert_eq!(sa.slot_time.to_bits(), sb.slot_time.to_bits());
+                assert_eq!(sa.input_bytes, sb.input_bytes);
+                assert_eq!(sa.opcount, sb.opcount);
+                assert_eq!(sa.cost.regions(), sb.cost.regions());
+            }
+        }
+        // Class map matches too.
+        assert_eq!(gtrace_stream(13, &p).user_class, mat.user_class);
     }
 
     #[test]

@@ -7,10 +7,17 @@
 //!   including the paper's filtering and utilization-scaling pipeline.
 //! * [`tracefile`] — a simple CSV trace loader so a real WTA export can be
 //!   dropped in.
+//! * [`stream`] — lazy job timelines ([`stream::JobStream`]): per-user
+//!   generators k-way merged in arrival order, plus the `uwfq scale`
+//!   million-job workload. Every materialized workload doubles as a
+//!   stream via [`Workload::into_stream`].
 
 pub mod gtrace;
 pub mod scenarios;
+pub mod stream;
 pub mod tracefile;
+
+pub use stream::JobStream;
 
 use std::collections::HashMap;
 
@@ -55,6 +62,18 @@ impl Workload {
         let mut u: Vec<UserId> = self.user_class.keys().copied().collect();
         u.sort();
         u
+    }
+
+    /// Consume the workload as a [`stream::JobStream`] (the thin
+    /// materialized adapter: stable-sorted by arrival, exactly the order
+    /// the simulator replays).
+    pub fn into_stream(self) -> stream::VecStream {
+        stream::VecStream::new(self.jobs)
+    }
+
+    /// Stream a borrowed workload (clones the job vector).
+    pub fn to_stream(&self) -> stream::VecStream {
+        stream::VecStream::new(self.jobs.clone())
     }
 }
 

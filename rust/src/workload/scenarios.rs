@@ -6,6 +6,7 @@
 //! is a 3-phase load → compute → collect chain over its own copy of the
 //! dataset.
 
+use super::stream::{from_fn, JobStream, MergeStream};
 use super::{UserClass, Workload, DATASET_BYTES, SHORT_COMPUTE_SLOT, TINY_COMPUTE_SLOT};
 use crate::core::job::{CostProfile, JobSpec};
 use crate::s_to_us;
@@ -72,6 +73,55 @@ pub fn scenario1_default(seed: u64) -> Workload {
     scenario1(seed, 300.0, 6, 40.0)
 }
 
+/// **Scenario 1 as a lazy stream** — per-user generators (same seeded RNG
+/// forks, same arithmetic as [`scenario1`]) k-way merged in arrival
+/// order. Simulating this stream is byte-identical to simulating the
+/// materialized workload: user streams are indexed in construction order
+/// (users 1–4), so merge ties reproduce the stable sort's tie-break.
+pub fn scenario1_stream(seed: u64, duration_s: f64, burst: usize, poisson_gap_s: f64) -> MergeStream {
+    let mut rng = Rng::new(seed);
+    let mut streams: Vec<Box<dyn JobStream + Send>> = Vec::new();
+
+    for user in 1..=2u32 {
+        let mut r = rng.fork(user as u64);
+        let mut t = r.exp(1.0 / poisson_gap_s);
+        streams.push(Box::new(from_fn(move || {
+            if t >= duration_s {
+                return None;
+            }
+            let kind = if r.f64() < 0.7 { "tiny" } else { "short" };
+            let job = micro_job(user, kind, t, None);
+            t += r.exp(1.0 / poisson_gap_s);
+            Some(job)
+        })));
+    }
+
+    for user in 3..=4u32 {
+        let offset = (user - 3) as f64 * 0.050;
+        let mut cycle = 0.0;
+        let mut b = 0usize;
+        streams.push(Box::new(from_fn(move || {
+            if burst == 0 || cycle >= duration_s {
+                return None;
+            }
+            let job = micro_job(user, "short", cycle + offset + b as f64 * 0.010, None);
+            b += 1;
+            if b == burst {
+                b = 0;
+                cycle += 30.0;
+            }
+            Some(job)
+        })));
+    }
+
+    MergeStream::new(streams)
+}
+
+/// [`scenario1_stream`] with the paper's defaults.
+pub fn scenario1_default_stream(seed: u64) -> MergeStream {
+    scenario1_stream(seed, 300.0, 6, 40.0)
+}
+
 /// **Scenario 2 — multiple frequent users** (§5.2.1).
 ///
 /// Four users each submit `jobs_per_user` tiny jobs at once, with
@@ -101,6 +151,28 @@ pub fn scenario2(seed: u64, jobs_per_user: usize, stagger_s: f64) -> Workload {
 /// work on 32 cores), users staggered 5 s apart.
 pub fn scenario2_default(seed: u64) -> Workload {
     scenario2(seed, 20, 5.0)
+}
+
+/// **Scenario 2 as a lazy stream** — fully deterministic per-user
+/// generators merged in arrival order (byte-identical to the
+/// materialized [`scenario2`] under simulation).
+pub fn scenario2_stream(seed: u64, jobs_per_user: usize, stagger_s: f64) -> MergeStream {
+    let _ = seed; // fully deterministic; seed kept for API symmetry
+    let streams: Vec<Box<dyn JobStream + Send>> = (1..=4u32)
+        .map(|user| {
+            let start = (user - 1) as f64 * stagger_s;
+            let mut b = 0usize;
+            Box::new(from_fn(move || {
+                if b >= jobs_per_user {
+                    return None;
+                }
+                let job = micro_job(user, "tiny", start + b as f64 * 0.001, None);
+                b += 1;
+                Some(job)
+            })) as Box<dyn JobStream + Send>
+        })
+        .collect();
+    MergeStream::new(streams)
 }
 
 #[cfg(test)]
@@ -164,7 +236,28 @@ mod tests {
         assert!(first_arrival(1) < first_arrival(2));
         assert!(first_arrival(3) < first_arrival(4));
         // All tiny.
-        assert!(w.jobs.iter().all(|j| j.name == "tiny"));
+        assert!(w.jobs.iter().all(|j| &*j.name == "tiny"));
+    }
+
+    #[test]
+    fn scenario_streams_match_materialized_sorted_order() {
+        // The streamed scenarios must yield exactly the jobs of the
+        // materialized builders, in the stable sort-by-arrival order the
+        // simulator replays — job-level parity here, schedule-level
+        // parity in tests/stream_differential.rs.
+        use crate::workload::stream::materialize;
+        let key = |jobs: &[JobSpec]| -> Vec<(u32, crate::TimeUs, String)> {
+            jobs.iter()
+                .map(|j| (j.user, j.arrival, j.name.to_string()))
+                .collect()
+        };
+        let mat1 = scenario1(7, 120.0, 3, 30.0).into_stream();
+        let streamed1 = materialize(scenario1_stream(7, 120.0, 3, 30.0));
+        assert_eq!(key(&materialize(mat1)), key(&streamed1));
+
+        let mat2 = scenario2(1, 5, 0.5).into_stream();
+        let streamed2 = materialize(scenario2_stream(1, 5, 0.5));
+        assert_eq!(key(&materialize(mat2)), key(&streamed2));
     }
 
     #[test]

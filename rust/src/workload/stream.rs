@@ -1,0 +1,496 @@
+//! Streaming workloads — lazy job timelines for million-job runs.
+//!
+//! The materialized [`super::Workload`] builds the full `Vec<JobSpec>` up
+//! front, so peak memory is O(total jobs). Trace-driven scheduler studies
+//! at larger scales (Pastorelli et al., *Practical Size-based Scheduling
+//! for MapReduce Workloads*; Le et al., *BoPF*) only work because their
+//! pipelines *stream* the trace instead. This module provides the same
+//! for the simulator:
+//!
+//! * [`JobStream`] — the lazy job-source contract: `next_job` yields
+//!   `JobSpec`s in nondecreasing arrival order.
+//! * [`MergeStream`] — a k-way merge of per-user (or per-source) streams
+//!   by a small binary heap: O(streams) resident state, O(log streams)
+//!   per job. Ties break by stream index, which reproduces the stable
+//!   sort-by-arrival order of the materialized path when streams are
+//!   created in workload-construction order.
+//! * [`VecStream`] — the thin materialized adapter: any `Workload` (or
+//!   bare job vector) is also a stream, stable-sorted exactly like
+//!   [`crate::sim::simulate`] sorts it.
+//! * [`scale_stream`] — the million-job / ten-thousand-user workload
+//!   behind `uwfq scale` and `benches/scale.rs`: per-user seeded Poisson
+//!   generators over a small set of interned job templates, k-way merged.
+//!   Resident state is O(users), independent of total job count.
+//!
+//! The paper scenarios have streaming twins too —
+//! [`super::scenarios::scenario1_stream`],
+//! [`super::scenarios::scenario2_stream`] and
+//! [`super::gtrace::gtrace_stream`] — each differentially tested to be
+//! byte-identical to its materialized form (`tests/stream_differential`).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+use crate::core::job::{CostProfile, JobSpec, StagePhase, StageSpec};
+use crate::s_to_us;
+use crate::util::Rng;
+use crate::TimeUs;
+
+/// A lazy job timeline: yields `JobSpec`s in **nondecreasing arrival
+/// order** (debug-asserted by the simulator). Implementations should hold
+/// O(1)–O(users) state, not O(total jobs).
+pub trait JobStream {
+    fn next_job(&mut self) -> Option<JobSpec>;
+
+    /// Jobs still to come, when known (sizing hints only).
+    fn size_hint(&self) -> Option<usize> {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Materialized adapter
+// ---------------------------------------------------------------------------
+
+/// The materialized adapter: wraps an owned job vector, stable-sorted by
+/// arrival — the exact order [`crate::sim::simulate`] feeds the engine.
+pub struct VecStream {
+    jobs: std::vec::IntoIter<JobSpec>,
+}
+
+impl VecStream {
+    pub fn new(mut jobs: Vec<JobSpec>) -> VecStream {
+        // Stable: same-instant arrivals keep vector order, matching the
+        // simulator's tie-break contract.
+        jobs.sort_by_key(|j| j.arrival);
+        VecStream {
+            jobs: jobs.into_iter(),
+        }
+    }
+}
+
+impl JobStream for VecStream {
+    fn next_job(&mut self) -> Option<JobSpec> {
+        self.jobs.next()
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        Some(self.jobs.len())
+    }
+}
+
+/// A stream from a plain closure (per-user generators without bespoke
+/// structs). The closure must yield nondecreasing arrivals.
+pub struct GenStream<F: FnMut() -> Option<JobSpec>> {
+    f: F,
+}
+
+/// Wrap a generator closure as a [`JobStream`].
+pub fn from_fn<F: FnMut() -> Option<JobSpec>>(f: F) -> GenStream<F> {
+    GenStream { f }
+}
+
+impl<F: FnMut() -> Option<JobSpec>> JobStream for GenStream<F> {
+    fn next_job(&mut self) -> Option<JobSpec> {
+        (self.f)()
+    }
+}
+
+/// Drain a stream into a vector (tests and the materialized round-trip).
+pub fn materialize(mut stream: impl JobStream) -> Vec<JobSpec> {
+    let mut jobs = Vec::with_capacity(stream.size_hint().unwrap_or(0));
+    while let Some(j) = stream.next_job() {
+        jobs.push(j);
+    }
+    jobs
+}
+
+// ---------------------------------------------------------------------------
+// K-way merge
+// ---------------------------------------------------------------------------
+
+/// K-way merge of per-source streams by a small min-heap keyed on
+/// `(arrival, stream index)`. Each source must itself be nondecreasing;
+/// the merged output then is too. Equal arrivals pop in stream-index
+/// order, so indexing streams in workload-construction order reproduces
+/// the materialized stable sort exactly.
+pub struct MergeStream {
+    streams: Vec<Box<dyn JobStream + Send>>,
+    /// One look-ahead job per live stream (the heap stores only the key).
+    buffered: Vec<Option<JobSpec>>,
+    heap: BinaryHeap<Reverse<(TimeUs, usize)>>,
+}
+
+impl MergeStream {
+    pub fn new(mut streams: Vec<Box<dyn JobStream + Send>>) -> MergeStream {
+        let mut buffered: Vec<Option<JobSpec>> = Vec::with_capacity(streams.len());
+        let mut heap = BinaryHeap::with_capacity(streams.len());
+        for (i, s) in streams.iter_mut().enumerate() {
+            match s.next_job() {
+                Some(j) => {
+                    heap.push(Reverse((j.arrival, i)));
+                    buffered.push(Some(j));
+                }
+                None => buffered.push(None),
+            }
+        }
+        MergeStream {
+            streams,
+            buffered,
+            heap,
+        }
+    }
+}
+
+impl JobStream for MergeStream {
+    fn next_job(&mut self) -> Option<JobSpec> {
+        let Reverse((_, i)) = self.heap.pop()?;
+        let job = self.buffered[i].take().expect("heap entry without buffered job");
+        if let Some(next) = self.streams[i].next_job() {
+            debug_assert!(
+                next.arrival >= job.arrival,
+                "per-source stream must yield nondecreasing arrivals"
+            );
+            self.heap.push(Reverse((next.arrival, i)));
+            self.buffered[i] = Some(next);
+        }
+        Some(job)
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        let buffered = self.buffered.iter().filter(|b| b.is_some()).count();
+        let mut total = buffered;
+        for s in &self.streams {
+            total += s.size_hint()?;
+        }
+        Some(total)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The scale workload (million jobs, ten thousand users)
+// ---------------------------------------------------------------------------
+
+/// Parameters of the streaming scale workload.
+#[derive(Clone, Debug)]
+pub struct ScaleParams {
+    pub users: u32,
+    pub jobs: u64,
+    /// Cores of the target cluster — with `target_utilization` this sets
+    /// the workload window, which keeps the backlog (and therefore the
+    /// engine's resident state) statistically bounded.
+    pub cores: u32,
+    pub target_utilization: f64,
+    pub seed: u64,
+}
+
+impl Default for ScaleParams {
+    fn default() -> Self {
+        ScaleParams {
+            users: 10_000,
+            jobs: 1_000_000,
+            cores: 64,
+            target_utilization: 0.85,
+            seed: 42,
+        }
+    }
+}
+
+/// One interned job template of the scale workload.
+struct ScaleTemplate {
+    name: Arc<str>,
+    /// Probability weight (normalized over the template set).
+    weight: f64,
+    /// Total sequential work (core-seconds).
+    slot: f64,
+    /// Parallelism (tasks per stage, capped via `max_parallelism`).
+    tasks: u32,
+}
+
+/// The template mix: mostly interactive-sized jobs with a heavy-ish tail,
+/// echoing the paper's micro/macro size spread. Mean work ≈ 3.55 core-s.
+fn scale_templates() -> Vec<ScaleTemplate> {
+    vec![
+        ScaleTemplate { name: Arc::from("sc-tiny"), weight: 0.50, slot: 0.5, tasks: 4 },
+        ScaleTemplate { name: Arc::from("sc-small"), weight: 0.30, slot: 2.0, tasks: 8 },
+        ScaleTemplate { name: Arc::from("sc-medium"), weight: 0.15, slot: 8.0, tasks: 16 },
+        ScaleTemplate { name: Arc::from("sc-large"), weight: 0.05, slot: 30.0, tasks: 32 },
+    ]
+}
+
+/// Build one scale job from a template. A two-stage load → compute chain;
+/// `max_parallelism` pins the task count so per-job work is independent
+/// of the cluster size (leaf stages otherwise split one-per-core).
+fn scale_job(user: u32, arrival: TimeUs, tpl: &ScaleTemplate) -> JobSpec {
+    let bytes = tpl.tasks as u64 * (24 << 20);
+    let load = StageSpec {
+        phase: StagePhase::Load,
+        parents: vec![],
+        is_leaf_input: true,
+        input_bytes: bytes,
+        slot_time: tpl.slot * 0.25,
+        cost: CostProfile::uniform(),
+        max_parallelism: Some(tpl.tasks),
+        opcount: 1,
+    };
+    let compute = StageSpec {
+        phase: StagePhase::Compute,
+        parents: vec![0],
+        is_leaf_input: false,
+        input_bytes: bytes,
+        slot_time: tpl.slot * 0.75,
+        cost: CostProfile::uniform(),
+        max_parallelism: Some(tpl.tasks),
+        opcount: 4,
+    };
+    JobSpec {
+        user,
+        name: tpl.name.clone(),
+        arrival,
+        weight: 1.0,
+        stages: vec![load, compute],
+    }
+}
+
+/// One job per distinct scale template (arrival 0) — the input for the
+/// idle-response map that turns streaming RTs into slowdowns. O(templates)
+/// regardless of run size.
+pub fn scale_template_jobs() -> Vec<JobSpec> {
+    scale_templates()
+        .iter()
+        .map(|t| scale_job(0, 0, t))
+        .collect()
+}
+
+/// One user's lazy Poisson job source.
+struct ScaleUser {
+    user: u32,
+    rng: Rng,
+    templates: Arc<Vec<ScaleTemplate>>,
+    /// Next arrival (seconds on the workload timeline).
+    t: f64,
+    mean_gap_s: f64,
+    remaining: u64,
+}
+
+impl JobStream for ScaleUser {
+    fn next_job(&mut self) -> Option<JobSpec> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        // Template choice by cumulative weight.
+        let x = self.rng.f64();
+        let total: f64 = self.templates.iter().map(|t| t.weight).sum();
+        let mut acc = 0.0;
+        let mut pick = self.templates.len() - 1;
+        for (i, t) in self.templates.iter().enumerate() {
+            acc += t.weight / total;
+            if x < acc {
+                pick = i;
+                break;
+            }
+        }
+        let job = scale_job(self.user, s_to_us(self.t), &self.templates[pick]);
+        self.t += self.rng.exp(1.0 / self.mean_gap_s);
+        Some(job)
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        Some(self.remaining as usize)
+    }
+}
+
+/// The streaming scale workload: `jobs` jobs spread over `users` seeded
+/// Poisson users, k-way merged in arrival order. Resident state is
+/// O(users) — one RNG, one look-ahead job and one heap slot per user —
+/// so a million-job run never materializes its timeline.
+pub fn scale_stream(p: &ScaleParams) -> MergeStream {
+    assert!(p.users > 0 && p.cores > 0 && p.target_utilization > 0.0);
+    let templates = Arc::new(scale_templates());
+    let total_weight: f64 = templates.iter().map(|t| t.weight).sum();
+    let mean_slot: f64 = templates.iter().map(|t| t.weight * t.slot).sum::<f64>() / total_weight;
+    // Window sized so expected offered load matches the utilization
+    // target: keeps the in-flight backlog (engine arenas) statistically
+    // bounded instead of growing with the job count.
+    let window_s =
+        (p.jobs as f64 * mean_slot / (p.cores as f64 * p.target_utilization)).max(1.0);
+
+    let mut root = Rng::new(p.seed);
+    let per_user = p.jobs / p.users as u64;
+    let extra = p.jobs % p.users as u64;
+    let mut streams: Vec<Box<dyn JobStream + Send>> = Vec::with_capacity(p.users as usize);
+    for u in 0..p.users {
+        let n = per_user + u64::from((u as u64) < extra);
+        let mut rng = root.fork(u as u64 + 1);
+        let mean_gap_s = window_s / n.max(1) as f64;
+        let t0 = rng.range_f64(0.0, mean_gap_s);
+        streams.push(Box::new(ScaleUser {
+            user: u + 1,
+            rng,
+            templates: Arc::clone(&templates),
+            t: t0,
+            mean_gap_s,
+            remaining: n,
+        }));
+    }
+    MergeStream::new(streams)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chirp(user: u32, arrivals: &[f64]) -> Box<dyn JobStream + Send> {
+        let jobs: Vec<JobSpec> = arrivals
+            .iter()
+            .map(|&t| JobSpec::three_phase(user, "c", s_to_us(t), 0.1, 1 << 20, 1, None))
+            .collect();
+        let mut it = jobs.into_iter();
+        Box::new(from_fn(move || it.next()))
+    }
+
+    #[test]
+    fn merge_yields_global_arrival_order_with_stable_ties() {
+        let m = MergeStream::new(vec![
+            chirp(1, &[0.0, 2.0, 2.0, 5.0]),
+            chirp(2, &[1.0, 2.0, 4.0]),
+            chirp(3, &[2.0]),
+        ]);
+        let jobs = materialize(m);
+        let key: Vec<(TimeUs, u32)> = jobs.iter().map(|j| (j.arrival, j.user)).collect();
+        // Sorted by arrival; at t=2.0 the tie breaks by stream index and
+        // both of stream 1's t=2 jobs precede streams 2 and 3.
+        let expect = vec![
+            (s_to_us(0.0), 1),
+            (s_to_us(1.0), 2),
+            (s_to_us(2.0), 1),
+            (s_to_us(2.0), 1),
+            (s_to_us(2.0), 2),
+            (s_to_us(2.0), 3),
+            (s_to_us(4.0), 2),
+            (s_to_us(5.0), 1),
+        ];
+        assert_eq!(key, expect);
+    }
+
+    #[test]
+    fn merge_matches_vec_stream_stable_sort() {
+        // The merged order must equal VecStream's stable sort of the
+        // concatenation in stream order — the parity contract the
+        // scenario streams rely on.
+        let streams = [
+            (1u32, vec![0.5, 1.0, 1.0, 3.0]),
+            (2u32, vec![1.0, 2.0]),
+            (3u32, vec![0.5, 1.0, 9.0]),
+        ];
+        let mut concat = Vec::new();
+        for (u, ts) in &streams {
+            for &t in ts {
+                concat.push(JobSpec::three_phase(*u, "c", s_to_us(t), 0.1, 1 << 20, 1, None));
+            }
+        }
+        let sorted = materialize(VecStream::new(concat));
+        let merged = materialize(MergeStream::new(
+            streams
+                .iter()
+                .map(|(u, ts)| chirp(*u, ts))
+                .collect(),
+        ));
+        let key = |jobs: &[JobSpec]| -> Vec<(TimeUs, u32)> {
+            jobs.iter().map(|j| (j.arrival, j.user)).collect()
+        };
+        assert_eq!(key(&sorted), key(&merged));
+    }
+
+    #[test]
+    fn vec_stream_sorts_and_reports_size() {
+        let jobs = vec![
+            JobSpec::three_phase(1, "a", 5_000_000, 0.1, 1 << 20, 1, None),
+            JobSpec::three_phase(2, "b", 1_000_000, 0.1, 1 << 20, 1, None),
+        ];
+        let mut s = VecStream::new(jobs);
+        assert_eq!(s.size_hint(), Some(2));
+        assert_eq!(s.next_job().unwrap().user, 2);
+        assert_eq!(s.next_job().unwrap().user, 1);
+        assert!(s.next_job().is_none());
+    }
+
+    #[test]
+    fn scale_stream_counts_and_order() {
+        let p = ScaleParams {
+            users: 7,
+            jobs: 100,
+            cores: 8,
+            target_utilization: 0.8,
+            seed: 3,
+        };
+        let mut s = scale_stream(&p);
+        assert_eq!(s.size_hint(), Some(100));
+        let mut last: TimeUs = 0;
+        let mut count = 0u64;
+        let mut users = std::collections::HashSet::new();
+        while let Some(j) = s.next_job() {
+            assert!(j.arrival >= last, "arrivals must be nondecreasing");
+            last = j.arrival;
+            users.insert(j.user);
+            j.validate().unwrap();
+            count += 1;
+        }
+        assert_eq!(count, 100);
+        assert_eq!(users.len(), 7);
+    }
+
+    #[test]
+    fn scale_stream_is_deterministic_and_seed_sensitive() {
+        let p = ScaleParams {
+            users: 5,
+            jobs: 60,
+            cores: 8,
+            target_utilization: 0.8,
+            seed: 11,
+        };
+        let key = |p: &ScaleParams| -> Vec<(u32, TimeUs, Arc<str>)> {
+            materialize(scale_stream(p))
+                .into_iter()
+                .map(|j| (j.user, j.arrival, j.name))
+                .collect()
+        };
+        assert_eq!(key(&p), key(&p));
+        let mut p2 = p.clone();
+        p2.seed = 12;
+        assert_ne!(key(&p), key(&p2));
+    }
+
+    #[test]
+    fn scale_jobs_share_interned_template_names() {
+        let p = ScaleParams {
+            users: 3,
+            jobs: 40,
+            cores: 8,
+            target_utilization: 0.8,
+            seed: 1,
+        };
+        let jobs = materialize(scale_stream(&p));
+        let distinct: std::collections::HashSet<&str> =
+            jobs.iter().map(|j| &*j.name).collect();
+        assert!(distinct.len() <= scale_templates().len());
+        // Interning: two jobs of the same template share the allocation.
+        let a = jobs.iter().find(|j| &*j.name == "sc-tiny");
+        let b = jobs.iter().rfind(|j| &*j.name == "sc-tiny");
+        if let (Some(a), Some(b)) = (a, b) {
+            assert!(Arc::ptr_eq(&a.name, &b.name));
+        }
+    }
+
+    #[test]
+    fn scale_template_jobs_cover_the_mix() {
+        let tpls = scale_template_jobs();
+        assert_eq!(tpls.len(), 4);
+        for t in &tpls {
+            t.validate().unwrap();
+            assert_eq!(t.stages.len(), 2);
+        }
+    }
+}

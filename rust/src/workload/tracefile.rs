@@ -73,7 +73,7 @@ pub fn load_csv(text: &str) -> Result<Workload, String> {
             .collect();
         jobs.push(JobSpec {
             user,
-            name,
+            name: name.into(),
             arrival: s_to_us(arrival),
             weight: 1.0,
             stages,
@@ -92,6 +92,13 @@ pub fn load_csv(text: &str) -> Result<Workload, String> {
 pub fn load_csv_file(path: &str) -> Result<Workload, String> {
     let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
     load_csv(&text)
+}
+
+/// Load a CSV trace as a [`crate::workload::JobStream`] (the materialized
+/// adapter: a parsed trace is already in memory, so streaming it costs
+/// nothing extra and lets trace files drive the streaming pipeline).
+pub fn stream_csv(text: &str) -> Result<super::stream::VecStream, String> {
+    load_csv(text).map(Workload::into_stream)
 }
 
 #[cfg(test)]
@@ -125,6 +132,18 @@ g2,1,9.0,40.0,3,1
         assert!(load_csv("job,user,arrival_s,slot_s,stages,heavy\na,1,0,0,1,0\n").is_err());
         assert!(load_csv("job,user,arrival_s,slot_s,stages,heavy\na,1,0,5,9,0\n").is_err());
         assert!(load_csv("job,user,arrival_s,slot_s,stages,heavy\na,x,0,5,1,0\n").is_err());
+    }
+
+    #[test]
+    fn stream_yields_sorted_sample() {
+        use crate::workload::stream::JobStream;
+        let mut s = stream_csv(SAMPLE).unwrap();
+        assert_eq!(s.size_hint(), Some(3));
+        let mut last = 0;
+        while let Some(j) = s.next_job() {
+            assert!(j.arrival >= last);
+            last = j.arrival;
+        }
     }
 
     #[test]

@@ -1,0 +1,125 @@
+//! Streamed-vs-materialized differential test: every paper scenario,
+//! simulated from its lazy stream, must produce a **byte-identical**
+//! `SimReport` to the materialized path across all five policies —
+//! same jobs, same schedule (ties included), same makespan/utilization
+//! bits. Extends the `sweep_differential` discipline (parallel == and
+//! sequential grids) to the workload axis: lazy == materialized.
+
+use uwfq::config::Config;
+use uwfq::sched::PolicyKind;
+use uwfq::sim::{self, SimReport};
+use uwfq::workload::gtrace::{gtrace, gtrace_stream, GtraceParams};
+use uwfq::workload::stream::{materialize, scale_stream, JobStream, ScaleParams, VecStream};
+use uwfq::workload::{scenarios, tracefile};
+
+fn cfg(policy: PolicyKind) -> Config {
+    Config::default().with_cores(8).with_policy(policy)
+}
+
+/// Full byte-level fingerprint of a report: every completed-job field
+/// (floats by bit pattern) plus the aggregate columns.
+fn fingerprint(rep: &SimReport) -> (Vec<(u64, u32, String, u64, u64, u64)>, u64, u64) {
+    (
+        rep.completed
+            .iter()
+            .map(|c| {
+                (
+                    c.job,
+                    c.user,
+                    c.name.to_string(),
+                    c.submit,
+                    c.finish,
+                    c.slot_time.to_bits(),
+                )
+            })
+            .collect(),
+        rep.makespan_s.to_bits(),
+        rep.utilization.to_bits(),
+    )
+}
+
+/// Assert stream == materialized for one workload across all policies.
+fn assert_differential<S, F>(tag: &str, jobs: Vec<uwfq::core::job::JobSpec>, mut mk_stream: F)
+where
+    S: JobStream,
+    F: FnMut() -> S,
+{
+    for policy in PolicyKind::ALL {
+        let mat = sim::simulate(cfg(policy), jobs.clone());
+        let streamed = sim::simulate_stream(cfg(policy), mk_stream());
+        assert_eq!(
+            fingerprint(&mat),
+            fingerprint(&streamed),
+            "{tag}: streamed run diverged from materialized under {}",
+            policy.name()
+        );
+        assert_eq!(mat.completed.len(), jobs.len(), "{tag}: lost jobs");
+    }
+}
+
+#[test]
+fn scenario1_streamed_matches_materialized() {
+    // Scaled-down scenario 1 (Poisson infrequent users + frequent
+    // bursts) so the 5-policy matrix stays debug-test fast.
+    let w = scenarios::scenario1(7, 90.0, 3, 25.0);
+    assert_differential("scenario1", w.jobs, || {
+        scenarios::scenario1_stream(7, 90.0, 3, 25.0)
+    });
+}
+
+#[test]
+fn scenario2_streamed_matches_materialized() {
+    let w = scenarios::scenario2(1, 6, 0.5);
+    assert_differential("scenario2", w.jobs, || scenarios::scenario2_stream(1, 6, 0.5));
+}
+
+#[test]
+fn gtrace_streamed_matches_materialized() {
+    let mut p = GtraceParams::default();
+    p.window_s = 90.0;
+    p.users = 8;
+    p.heavy_users = 2;
+    p.cores = 8;
+    let w = gtrace(11, &p);
+    assert_differential("gtrace", w.jobs, || gtrace_stream(11, &p));
+}
+
+#[test]
+fn tracefile_streamed_matches_materialized() {
+    const SAMPLE: &str = "\
+job,user,arrival_s,slot_s,stages,heavy
+t0,1,0.0,40.0,2,1
+t1,2,1.5,6.0,1,0
+t2,1,2.0,25.0,3,1
+t3,3,2.0,4.0,1,0
+t4,2,8.0,10.0,2,0
+";
+    let w = tracefile::load_csv(SAMPLE).unwrap();
+    assert_differential("tracefile", w.jobs, || tracefile::stream_csv(SAMPLE).unwrap());
+}
+
+#[test]
+fn scale_workload_streamed_matches_materialized() {
+    // The scale generator itself: materializing the stream and replaying
+    // it through the exact path must match streaming it directly.
+    let params = ScaleParams {
+        users: 20,
+        jobs: 300,
+        cores: 8,
+        target_utilization: 0.8,
+        seed: 5,
+    };
+    let jobs = materialize(scale_stream(&params));
+    assert_eq!(jobs.len(), 300);
+    assert_differential("scale", jobs, || scale_stream(&params));
+}
+
+#[test]
+fn workload_adapter_roundtrip() {
+    // Workload::into_stream is the thin materialized adapter: streaming
+    // it is identical to handing the vector to `simulate`.
+    let w = scenarios::scenario2(1, 5, 0.5);
+    let mat = sim::simulate(cfg(PolicyKind::Uwfq), w.jobs.clone());
+    let streamed = sim::simulate_stream(cfg(PolicyKind::Uwfq), VecStream::new(w.jobs));
+    assert_eq!(fingerprint(&mat), fingerprint(&streamed));
+}
