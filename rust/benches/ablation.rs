@@ -21,7 +21,7 @@ fn main() {
     let swp = Sweep::new(auto_threads(None).min(4));
 
     println!("# Ablation 1 — scheduler context (scenario 1, infrequent-user RT)");
-    let w1 = uwfq::workload::scenarios::scenario1_default(42);
+    let w1 = uwfq::workload::registry::builtin_workload("scenario1", 42);
     let ctx_cells: Vec<Config> = [PolicyKind::Cfq, PolicyKind::Ujf, PolicyKind::Uwfq]
         .into_iter()
         .map(|p| base.clone().with_policy(p))
@@ -37,11 +37,12 @@ fn main() {
     }
 
     println!("\n# Ablation 2 — ATR sensitivity (macro, UWFQ-P)");
-    let mut p = uwfq::workload::gtrace::GtraceParams::default();
-    p.window_s = 200.0;
-    p.users = 15;
-    p.heavy_users = 4;
-    let wm = uwfq::workload::gtrace::gtrace(42, &p);
+    let wm = uwfq::workload::ScenarioSpec::new("gtrace")
+        .with("window_s", "200")
+        .with("users", "15")
+        .with("heavy_users", "4")
+        .workload(42)
+        .unwrap();
     let atrs = [0.05, 0.1, 0.25, 0.5, 1.0, 2.0, 5.0, 10.0];
     let atr_cells: Vec<Config> = atrs
         .iter()

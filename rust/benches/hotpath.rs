@@ -133,8 +133,10 @@ fn main() {
 
     // Full simulator throughput: events/second on a congested workload.
     {
-        let mut cfg = Config::default();
-        cfg.task_overhead = 0.005;
+        let cfg = Config {
+            task_overhead: 0.005,
+            ..Config::default()
+        };
         let jobs = workload(200, 10, 50_000);
         for policy in PolicyKind::ALL {
             bench_sim(&mut sink, "sim_200jobs", &cfg, &jobs, policy, 8);
@@ -144,8 +146,10 @@ fn main() {
     // Offer-path selection cost at high active-stage counts: per-event
     // cost must grow sub-linearly from burst400 to burst4000.
     {
-        let mut cfg = Config::default();
-        cfg.task_overhead = 0.001;
+        let cfg = Config {
+            task_overhead: 0.001,
+            ..Config::default()
+        };
         let burst = |n: usize| -> Vec<JobSpec> {
             (0..n)
                 .map(|i| {

@@ -15,7 +15,7 @@ use uwfq::bench::{figures, macro_grid_cell_count, table1_grid_cell_count, tables
 use uwfq::config::Config;
 use uwfq::sweep::{auto_threads, Sweep};
 use uwfq::util::benchkit::{bench_n, black_box, JsonSink};
-use uwfq::workload::gtrace::{gtrace, GtraceParams};
+use uwfq::workload::ScenarioSpec;
 
 fn main() {
     let quick =
@@ -29,11 +29,12 @@ fn main() {
 
     let base = Config::default();
     let w = if quick {
-        let mut p = GtraceParams::default();
-        p.window_s = 120.0;
-        p.users = 10;
-        p.heavy_users = 3;
-        gtrace(42, &p)
+        ScenarioSpec::new("gtrace")
+            .with("window_s", "120")
+            .with("users", "10")
+            .with("heavy_users", "3")
+            .workload(42)
+            .unwrap()
     } else {
         figures::default_macro_workload(42)
     };

@@ -22,9 +22,9 @@ fn main() {
         });
     }
 
-    // Per-scenario breakdown.
-    let s1 = uwfq::workload::scenarios::scenario1_default(42);
-    let s2 = uwfq::workload::scenarios::scenario2_default(42);
+    // Per-scenario breakdown (registry entries with paper defaults).
+    let s1 = uwfq::workload::registry::builtin_workload("scenario1", 42);
+    let s2 = uwfq::workload::registry::builtin_workload("scenario2", 42);
     bench_n("table1/scenario1_grid", 5, || {
         black_box(tables::table1_scenario(&s1, &base, true, &Sweep::seq()));
     });

@@ -15,7 +15,8 @@ use crate::partition::SchemeKind;
 use crate::sched::PolicyKind;
 use crate::sweep::Sweep;
 use crate::util::csvout::Csv;
-use crate::workload::{gtrace, scenarios, UserClass, Workload};
+use crate::workload::registry::builtin_workload;
+use crate::workload::{scenarios, UserClass, Workload};
 
 // ---------------------------------------------------------------------------
 // Fig. 3 — task skew vs runtime partitioning (single job Gantt)
@@ -124,7 +125,7 @@ pub fn fig4(base: &Config, sweep: &Sweep) -> Fig4Result {
 /// Fig. 5: empirical CDFs of infrequent-user response times (scenario 1)
 /// across the four schedulers (one cell per scheduler).
 pub fn fig5(seed: u64, base: &Config, sweep: &Sweep) -> Vec<CdfSeries> {
-    let w = scenarios::scenario1_default(seed);
+    let w = builtin_workload("scenario1", seed);
     let cells: Vec<(PolicyKind, Config)> = PolicyKind::PAPER
         .iter()
         .map(|&p| (p, base.clone().with_policy(p)))
@@ -138,7 +139,7 @@ pub fn fig5(seed: u64, base: &Config, sweep: &Sweep) -> Vec<CdfSeries> {
 /// Fig. 6: empirical CDFs of job *completion times* in scenario 2 — shows
 /// UWFQ finishing jobs gradually vs batched completion under Fair/UJF.
 pub fn fig6(seed: u64, base: &Config, sweep: &Sweep) -> Vec<CdfSeries> {
-    let w = scenarios::scenario2_default(seed);
+    let w = builtin_workload("scenario2", seed);
     let cells: Vec<(PolicyKind, Config)> = PolicyKind::PAPER
         .iter()
         .map(|&p| (p, base.clone().with_policy(p)))
@@ -242,9 +243,10 @@ pub fn write_fig7_csv(
     csv.finish()
 }
 
-/// Default macro workload for Fig. 7 / Table 2.
+/// Default macro workload for Fig. 7 / Table 2 — the `gtrace` registry
+/// entry with paper-default params.
 pub fn default_macro_workload(seed: u64) -> Workload {
-    gtrace::gtrace(seed, &gtrace::GtraceParams::default())
+    builtin_workload("gtrace", seed)
 }
 
 #[cfg(test)]

@@ -156,11 +156,11 @@ pub fn fmt2(x: f64) -> String {
 mod tests {
     use super::*;
     use crate::sched::PolicyKind;
-    use crate::workload::scenarios;
+    use crate::workload::test_scenario2;
 
     #[test]
     fn run_one_produces_complete_metrics() {
-        let w = scenarios::scenario2(1, 4, 0.5); // small: 16 tiny jobs
+        let w = test_scenario2(1, 4, 0.5); // small: 16 tiny jobs
         let cfg = Config::default().with_policy(PolicyKind::Uwfq).with_cores(8);
         let m = run_one(&cfg, &w);
         assert_eq!(m.outcomes.len(), 16);
@@ -171,7 +171,7 @@ mod tests {
 
     #[test]
     fn idle_map_one_entry_per_name() {
-        let w = scenarios::scenario2(1, 3, 0.5);
+        let w = test_scenario2(1, 3, 0.5);
         let cfg = Config::default().with_cores(8);
         let idle = idle_map(&cfg, &w);
         assert_eq!(idle.len(), 1); // all jobs are "tiny"

@@ -14,7 +14,8 @@ use crate::metrics::report::RunMetrics;
 use crate::sched::PolicyKind;
 use crate::sweep::Sweep;
 use crate::util::csvout::Csv;
-use crate::workload::{scenarios, UserClass, Workload};
+use crate::workload::registry::{builtin_workload, ScenarioSpec};
+use crate::workload::{UserClass, Workload};
 
 /// One scheduler row of Table 1.
 #[derive(Clone, Debug)]
@@ -103,11 +104,15 @@ fn table1_rows(
     }
 }
 
+/// The Table-1 workloads, referenced by registry name (paper defaults) —
+/// the scenario list is data, not code.
+pub const TABLE1_SCENARIOS: [&str; 2] = ["scenario1", "scenario2"];
+
 /// Full Table 1: both micro scenarios as one combined 8-cell grid, so a
 /// multi-worker sweep overlaps cells across scenarios.
 pub fn table1(seed: u64, base: &Config, sweep: &Sweep) -> (Table1Scenario, Table1Scenario) {
-    let s1 = scenarios::scenario1_default(seed);
-    let s2 = scenarios::scenario2_default(seed);
+    let s1 = builtin_workload(TABLE1_SCENARIOS[0], seed);
+    let s2 = builtin_workload(TABLE1_SCENARIOS[1], seed);
     let cfgs = paper_cells(base);
     let cells: Vec<(&Workload, &Config)> = [&s1, &s2]
         .into_iter()
@@ -257,14 +262,13 @@ pub fn table2(workload: &Workload, base: &Config, sweep: &Sweep) -> Table2 {
     Table2 { rows }
 }
 
-pub fn render_table2(t: &Table2) -> String {
-    let header = vec![
-        "Scheduler", "Runtime", "RTavg", "0-80%", "80-95%", "95-100%", "DVR", "Viol#", "DSR",
-        "Slack#",
-    ];
-    let rows: Vec<Vec<String>> = t
-        .rows
-        .iter()
+const TABLE2_HEADER: [&str; 10] = [
+    "Scheduler", "Runtime", "RTavg", "0-80%", "80-95%", "95-100%", "DVR", "Viol#", "DSR",
+    "Slack#",
+];
+
+fn table2_row_cells(rows: &[Table2Row]) -> Vec<Vec<String>> {
+    rows.iter()
         .map(|r| {
             let (dvr, viol, dsr, slack) = match &r.fairness {
                 Some(f) => (
@@ -288,11 +292,17 @@ pub fn render_table2(t: &Table2) -> String {
                 slack,
             ]
         })
-        .collect();
-    format!("== Table 2 / macro ==\n{}", render_table(&header, &rows))
+        .collect()
 }
 
-pub fn write_table2_csv(path: &str, t: &Table2) -> std::io::Result<()> {
+pub fn render_table2(t: &Table2) -> String {
+    format!(
+        "== Table 2 / macro ==\n{}",
+        render_table(&TABLE2_HEADER, &table2_row_cells(&t.rows))
+    )
+}
+
+fn write_table2_rows_csv(path: &str, rows: &[Table2Row]) -> std::io::Result<()> {
     let mut csv = Csv::create(
         path,
         &[
@@ -300,7 +310,7 @@ pub fn write_table2_csv(path: &str, t: &Table2) -> std::io::Result<()> {
             "violations", "dsr", "slacks",
         ],
     )?;
-    for r in &t.rows {
+    for r in rows {
         let (dvr, viol, dsr, slack) = match &r.fairness {
             Some(f) => (f.dvr, f.violations as f64, f.dsr, f.slacks as f64),
             None => (f64::NAN, f64::NAN, f64::NAN, f64::NAN),
@@ -321,18 +331,108 @@ pub fn write_table2_csv(path: &str, t: &Table2) -> std::io::Result<()> {
     csv.finish()
 }
 
+pub fn write_table2_csv(path: &str, t: &Table2) -> std::io::Result<()> {
+    write_table2_rows_csv(path, &t.rows)
+}
+
+// ---------------------------------------------------------------------------
+// Generic scenario grid — any registry entry, zero scenario-specific code
+// ---------------------------------------------------------------------------
+
+/// The generic registry grid for one scenario: **all five** policies ×
+/// both partitioning schemes, with DVR/DSR against the UJF reference of
+/// the same scheme (§5.1.2). This is the grid every newly registered
+/// scenario gets for free (`uwfq sweep --scenario NAME`).
+pub struct ScenarioGrid {
+    pub scenario: String,
+    pub rows: Vec<Table2Row>,
+}
+
+pub fn scenario_grid(
+    spec: &ScenarioSpec,
+    base: &Config,
+    sweep: &Sweep,
+) -> Result<ScenarioGrid, String> {
+    let w = spec.workload(base.seed)?;
+    let schemes = super::TABLE_SCHEMES;
+    // Cell 0 of each scheme group is the UJF reference; the remaining
+    // cells cover every non-UJF policy (the UJF row reuses the
+    // reference), mirroring the Table-2 consumption order.
+    let mut cells: Vec<Config> = Vec::new();
+    for &scheme in &schemes {
+        let b = base.clone().with_scheme(scheme);
+        cells.push(b.clone().with_policy(PolicyKind::Ujf));
+        for &p in PolicyKind::ALL.iter().filter(|&&p| p != PolicyKind::Ujf) {
+            cells.push(b.clone().with_policy(p));
+        }
+    }
+    let metrics = sweep.run(&cells, |ctx, cfg| run_one_in(ctx, cfg, &w));
+
+    let mut it = metrics.into_iter();
+    let mut rows = Vec::new();
+    for _scheme in &schemes {
+        let ujf = it.next().expect("UJF reference cell");
+        for policy in PolicyKind::ALL {
+            let m = if policy == PolicyKind::Ujf {
+                ujf.clone()
+            } else {
+                it.next().expect("scenario grid cell")
+            };
+            let fairness = (policy != PolicyKind::Ujf)
+                .then(|| fairness_vs_ujf(&m, &ujf, DvrDenominator::GreaterThanZero));
+            rows.push(Table2Row {
+                label: m.label.clone(),
+                runtime: m.makespan_s,
+                rt_avg: m.mean_rt(),
+                rt_0_80: m.mean_rt_band(0.0, 80.0),
+                rt_80_95: m.mean_rt_band(80.0, 95.0),
+                rt_95_100: m.mean_rt_band(95.0, 100.0),
+                fairness,
+                metrics: m,
+            });
+        }
+    }
+    Ok(ScenarioGrid {
+        scenario: w.name.clone(),
+        rows,
+    })
+}
+
+pub fn render_scenario_grid(g: &ScenarioGrid) -> String {
+    format!(
+        "== scenario grid / {} ==\n{}",
+        g.scenario,
+        render_table(&TABLE2_HEADER, &table2_row_cells(&g.rows))
+    )
+}
+
+pub fn write_scenario_grid_csv(path: &str, g: &ScenarioGrid) -> std::io::Result<()> {
+    write_table2_rows_csv(path, &g.rows)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::workload::gtrace::{gtrace, GtraceParams};
 
     fn small_base() -> Config {
         Config::default().with_cores(8)
     }
 
+    fn small_scenario2() -> Workload {
+        crate::workload::test_scenario2(1, 5, 0.5)
+    }
+
+    fn small_gtrace() -> ScenarioSpec {
+        ScenarioSpec::new("gtrace")
+            .with("window_s", "60")
+            .with("users", "6")
+            .with("heavy_users", "2")
+            .with("cores", "8")
+    }
+
     #[test]
     fn table1_scenario2_small_runs() {
-        let w = scenarios::scenario2(1, 5, 0.5);
+        let w = small_scenario2();
         let s = table1_scenario(&w, &small_base(), false, &Sweep::seq());
         assert_eq!(s.rows.len(), 4);
         // UJF row has no fairness metrics; others do.
@@ -349,12 +449,7 @@ mod tests {
 
     #[test]
     fn table2_small_macro_runs() {
-        let mut p = GtraceParams::default();
-        p.window_s = 60.0;
-        p.users = 6;
-        p.heavy_users = 2;
-        p.cores = 8;
-        let w = gtrace(5, &p);
+        let w = small_gtrace().workload(5).unwrap();
         let t = table2(&w, &small_base(), &Sweep::seq());
         assert_eq!(t.rows.len(), 8);
         // -P rows present.
@@ -364,6 +459,30 @@ mod tests {
         for r in &t.rows {
             assert!(r.runtime > 0.0, "{}", r.label);
         }
+    }
+
+    #[test]
+    fn scenario_grid_covers_all_policies_and_schemes() {
+        // The generic registry grid: any entry, all five policies × both
+        // partitioners, no scenario-specific bench code.
+        let spec = ScenarioSpec::new("bursty")
+            .with("duration_s", "60")
+            .with("cycle_s", "30");
+        let g = scenario_grid(&spec, &small_base(), &Sweep::seq()).unwrap();
+        assert_eq!(g.scenario, "bursty");
+        assert_eq!(g.rows.len(), 2 * PolicyKind::ALL.len());
+        for label in ["FIFO", "UWFQ", "FIFO-P", "UWFQ-P", "UJF", "UJF-P"] {
+            assert!(g.rows.iter().any(|r| r.label == label), "missing {label}");
+        }
+        // UJF rows carry no fairness columns; all others do.
+        assert_eq!(g.rows.iter().filter(|r| r.fairness.is_none()).count(), 2);
+        // Parallel == sequential on the generic grid too.
+        let par = scenario_grid(&spec, &small_base(), &Sweep::new(3)).unwrap();
+        assert_eq!(render_scenario_grid(&g), render_scenario_grid(&par));
+        // Unknown scenarios error with the registry's name list.
+        let err = scenario_grid(&ScenarioSpec::new("zzz"), &small_base(), &Sweep::seq())
+            .unwrap_err();
+        assert!(err.contains("unknown scenario"), "{err}");
     }
 
     #[test]
@@ -380,7 +499,7 @@ mod tests {
     fn csv_outputs_written() {
         let dir = std::env::temp_dir().join("uwfq_tables_test");
         std::fs::create_dir_all(&dir).unwrap();
-        let w = scenarios::scenario2(1, 3, 0.5);
+        let w = small_scenario2();
         let s = table1_scenario(&w, &small_base(), false, &Sweep::seq());
         let p = dir.join("t1.csv");
         write_table1_csv(p.to_str().unwrap(), &s).unwrap();

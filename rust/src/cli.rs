@@ -1,6 +1,9 @@
 //! Hand-rolled CLI (clap is not available offline): positional
 //! subcommand + `--key value` flags, mapped onto [`Config`] keys plus a
-//! few harness options.
+//! few harness options. `--param k=v` may repeat (scenario parameter
+//! overrides, applied in order); the switch flags in [`SWITCH_FLAGS`]
+//! may appear bare (`--quick` ≡ `--quick true`), every other flag
+//! requires a value.
 
 use std::collections::BTreeMap;
 
@@ -11,6 +14,8 @@ pub struct Cli {
     pub command: String,
     pub positional: Vec<String>,
     pub flags: BTreeMap<String, String>,
+    /// Repeated `--param k=v` scenario overrides, in order of appearance.
+    pub params: Vec<(String, String)>,
 }
 
 pub const USAGE: &str = "\
@@ -18,28 +23,39 @@ uwfq — User Weighted Fair Queuing for multi-user Spark-like analytics
 (reproduction of Kažemaks et al., 2025)
 
 USAGE:
-  uwfq reproduce <table1|table2|fig3|fig4|fig5|fig6|fig7|all> [--out DIR] [--seed N] [--quick true] [--threads N]
-  uwfq sweep [--threads N] [--out DIR] [--seed N] [--quick true]  # full evaluation grid, all cores
-  uwfq scale [--jobs N] [--users N] [--quick true] [--verify false] [--out DIR]
+  uwfq scenarios                               # list registered scenarios + params
+  uwfq run --scenario NAME [--param k=v ...] [--quick] [--policy P] [--scheme S]
+  uwfq reproduce <table1|table2|fig3|fig4|fig5|fig6|fig7|all> [--out DIR] [--seed N] [--quick] [--threads N]
+  uwfq sweep [--scenario NAME] [--threads N] [--out DIR] [--seed N] [--quick]
+             # full evaluation grid on all cores; with --scenario NAME,
+             # the generic policy × partitioner grid for that scenario
+  uwfq scale [--jobs N] [--users N] [--quick] [--verify false] [--out DIR]
              # streaming million-job run: O(in-flight + users) memory,
              # emits BENCH_scale.json (defaults 1M jobs / 10k users;
              # --quick: 50k / 1k)
-  uwfq run --workload <scenario1|scenario2|gtrace|trace:FILE> [--policy P] [--scheme S]
   uwfq serve [--cores N] [--time-scale F] [--artifacts DIR]   # real PJRT backend demo
   uwfq ablation [--seed N] [--threads N]                      # design-choice ablations
-  uwfq run --workload scenario2 --eventlog trace.jsonl        # emit event log
+  uwfq run --scenario scenario2 --eventlog trace.jsonl        # emit event log
   uwfq analyze trace.jsonl                                    # post-hoc trace analysis
   uwfq help
 
 FLAGS (config keys, see config.rs):
   --cores N --atr S --grace_rsec S --task_overhead S --seed N
-  --policy fifo|fair|ujf|cfq|uwfq --scheme default|runtime
+  --policy fifo|fair|ujf|cfq|uwfq --scheme default|runtime|-P
   --estimator_sigma S --config FILE
+  --scenario NAME --param k=v   (repeatable; `uwfq scenarios` lists them;
+  config files spell these `scenario = NAME` and `param.k = v`)
 
   --threads N routes the experiment grid through the parallel sweep
   engine (N worker threads; 0 = all cores). Output is byte-identical to
   --threads 1; `reproduce` defaults to 1, `sweep` defaults to 0.
 ";
+
+/// Flags that are boolean switches: bare `--quick` reads as
+/// `--quick true`. Every other flag still requires an explicit value, so
+/// a forgotten value (`--out` at the end of the line) stays a hard error
+/// instead of silently becoming the string "true".
+const SWITCH_FLAGS: [&str; 2] = ["quick", "verify"];
 
 impl Cli {
     pub fn parse(args: &[String]) -> Result<Cli, String> {
@@ -47,16 +63,43 @@ impl Cli {
         let command = it.next().cloned().unwrap_or_else(|| "help".to_string());
         let mut positional = Vec::new();
         let mut flags = BTreeMap::new();
+        let mut params = Vec::new();
         let rest: Vec<&String> = it.collect();
         let mut i = 0;
         while i < rest.len() {
             let a = rest[i];
             if let Some(key) = a.strip_prefix("--") {
-                let val = rest
-                    .get(i + 1)
-                    .ok_or_else(|| format!("flag --{key} needs a value"))?;
-                flags.insert(key.to_string(), val.to_string());
-                i += 2;
+                let val = if SWITCH_FLAGS.contains(&key) {
+                    // Switch flags consume a value only when it is an
+                    // explicit true/false — `--quick table2` must leave
+                    // `table2` as a positional, not swallow it.
+                    match rest.get(i + 1).map(|v| v.as_str()) {
+                        Some(v) if v == "true" || v == "false" => {
+                            i += 2;
+                            v.to_string()
+                        }
+                        _ => {
+                            i += 1;
+                            "true".to_string()
+                        }
+                    }
+                } else {
+                    match rest.get(i + 1) {
+                        Some(v) if !v.starts_with("--") => {
+                            i += 2;
+                            v.to_string()
+                        }
+                        _ => return Err(format!("flag --{key} needs a value")),
+                    }
+                };
+                if key == "param" {
+                    let (k, v) = val
+                        .split_once('=')
+                        .ok_or_else(|| format!("--param expects k=v, got '{val}'"))?;
+                    params.push((k.trim().to_string(), v.trim().to_string()));
+                } else {
+                    flags.insert(key.to_string(), val);
+                }
             } else {
                 positional.push(a.to_string());
                 i += 1;
@@ -66,10 +109,13 @@ impl Cli {
             command,
             positional,
             flags,
+            params,
         })
     }
 
-    /// Build the engine config from `--config FILE` plus flag overrides.
+    /// Build the engine config from `--config FILE` plus flag overrides;
+    /// `--param` overrides append after any config-file `param.*` lines
+    /// (later wins when the scenario's schema is applied).
     pub fn config(&self) -> Result<Config, String> {
         let mut cfg = match self.flags.get("config") {
             Some(path) => Config::from_file(path)?,
@@ -77,12 +123,14 @@ impl Cli {
         };
         for (k, v) in &self.flags {
             match k.as_str() {
-                // harness-only flags, not config keys
+                // harness-only flags, not config keys ("workload" is the
+                // legacy spelling of --scenario, resolved in main::run)
                 "config" | "out" | "quick" | "workload" | "time-scale" | "artifacts"
                 | "eventlog" | "threads" | "bench-json" | "jobs" | "users" | "verify" => {}
                 _ => cfg.set(k, v)?,
             }
         }
+        cfg.scenario_params.extend(self.params.iter().cloned());
         Ok(cfg)
     }
 
@@ -92,6 +140,11 @@ impl Cli {
 
     pub fn flag_or(&self, key: &str, default: &str) -> String {
         self.flag(key).unwrap_or(default).to_string()
+    }
+
+    /// True when `--quick` (or `--quick true`) was passed.
+    pub fn quick(&self) -> bool {
+        self.flag("quick") == Some("true")
     }
 
     /// Resolve `--threads` into a worker count: absent → `default`
@@ -138,8 +191,24 @@ mod tests {
     }
 
     #[test]
-    fn missing_flag_value_errors() {
-        assert!(Cli::parse(&args("run --policy")).is_err());
+    fn switch_flags_and_missing_values() {
+        // Value-taking flags still hard-error when the value is missing.
+        let err = Cli::parse(&args("run --policy")).unwrap_err();
+        assert!(err.contains("--policy needs a value"), "{err}");
+        assert!(Cli::parse(&args("reproduce all --out")).is_err());
+        // Switch flags work bare, trailing or mid-line.
+        let c = Cli::parse(&args("run --quick --seed 3")).unwrap();
+        assert!(c.quick());
+        assert_eq!(c.config().unwrap().seed, 3);
+        let c = Cli::parse(&args("reproduce table2 --quick")).unwrap();
+        assert!(c.quick());
+        // A bare switch before a positional must not swallow it.
+        let c = Cli::parse(&args("reproduce --quick table2")).unwrap();
+        assert!(c.quick());
+        assert_eq!(c.positional, vec!["table2"]);
+        // Explicit values still accepted.
+        assert!(Cli::parse(&args("scale --verify false")).unwrap().flag("verify")
+            == Some("false"));
     }
 
     #[test]
@@ -152,6 +221,27 @@ mod tests {
     fn empty_args_give_help() {
         let c = Cli::parse(&[]).unwrap();
         assert_eq!(c.command, "help");
+    }
+
+    #[test]
+    fn scenario_and_repeated_params() {
+        let c = Cli::parse(&args(
+            "run --scenario bursty --param rate=4 --param burst_ratio=0.25 --cores 8",
+        ))
+        .unwrap();
+        assert_eq!(
+            c.params,
+            vec![
+                ("rate".to_string(), "4".to_string()),
+                ("burst_ratio".to_string(), "0.25".to_string()),
+            ]
+        );
+        let cfg = c.config().unwrap();
+        assert_eq!(cfg.scenario.as_deref(), Some("bursty"));
+        assert_eq!(cfg.scenario_params, c.params);
+        assert_eq!(cfg.cores, 8);
+        // Malformed --param errors at parse time.
+        assert!(Cli::parse(&args("run --param notkv")).is_err());
     }
 
     #[test]

@@ -33,6 +33,14 @@ pub struct Config {
     pub estimator_sigma: f64,
     /// Record per-task start/finish for Gantt figures (small overhead).
     pub log_tasks: bool,
+    /// Workload selection by registry name (`scenario = bursty` in a
+    /// config file, `--scenario bursty` on the CLI). `None` = command
+    /// default.
+    pub scenario: Option<String>,
+    /// Raw scenario parameter overrides (`param.k = v` lines, `--param
+    /// k=v` flags), validated against the scenario's schema at build time
+    /// ([`crate::workload::registry`]). Later entries win.
+    pub scenario_params: Vec<(String, String)>,
 }
 
 impl Default for Config {
@@ -49,9 +57,16 @@ impl Default for Config {
             seed: 42,
             estimator_sigma: 0.0,
             log_tasks: false,
+            scenario: None,
+            scenario_params: Vec::new(),
         }
     }
 }
+
+/// Every key [`Config::set`] accepts — listed in unknown-key errors.
+const CONFIG_KEYS: &str = "cores, task_overhead, atr, max_partition_bytes, \
+advisory_partition_bytes, grace_rsec, seed, estimator_sigma, log_tasks, \
+policy, scheme | partitioner, scenario, param.<name>";
 
 impl Config {
     pub fn with_policy(mut self, policy: PolicyKind) -> Self {
@@ -110,14 +125,24 @@ impl Config {
             "estimator_sigma" => self.estimator_sigma = num(val)?,
             "log_tasks" => self.log_tasks = val == "true" || val == "1",
             "policy" => {
-                self.policy =
-                    PolicyKind::parse(val).ok_or_else(|| format!("unknown policy '{val}'"))?
+                self.policy = PolicyKind::parse(val).ok_or_else(|| {
+                    format!("unknown policy '{val}' (valid: fifo, fair, ujf, cfq, uwfq)")
+                })?
             }
-            "scheme" | "partitioner" => {
-                self.scheme =
-                    SchemeKind::parse(val).ok_or_else(|| format!("unknown scheme '{val}'"))?
+            "scheme" | "partitioner" => self.scheme = SchemeKind::parse(val)?,
+            "scenario" => self.scenario = Some(val.to_string()),
+            _ => {
+                if let Some(param) = key.strip_prefix("param.") {
+                    if param.is_empty() {
+                        return Err("empty param name (use param.<name> = value)".into());
+                    }
+                    self.scenario_params.push((param.to_string(), val.to_string()));
+                } else {
+                    return Err(format!(
+                        "unknown config key '{key}' (valid keys: {CONFIG_KEYS})"
+                    ));
+                }
             }
-            _ => return Err(format!("unknown config key '{key}'")),
         }
         Ok(())
     }
@@ -155,11 +180,39 @@ mod tests {
     }
 
     #[test]
-    fn apply_lines_rejects_unknown() {
+    fn apply_lines_rejects_unknown_listing_valid_keys() {
         let mut c = Config::default();
-        assert!(c.apply_lines("bogus = 1").is_err());
-        assert!(c.apply_lines("policy = zzz").is_err());
+        let err = c.apply_lines("bogus = 1").unwrap_err();
+        assert!(err.contains("unknown config key 'bogus'"), "{err}");
+        assert!(err.contains("scenario") && err.contains("atr"), "{err}");
+        let err = c.apply_lines("policy = zzz").unwrap_err();
+        assert!(err.contains("uwfq"), "{err}");
+        let err = c.apply_lines("scheme = zzz").unwrap_err();
+        assert!(err.contains("runtime"), "{err}");
         assert!(c.apply_lines("no equals sign").is_err());
+        assert!(c.apply_lines("param. = 1").is_err());
+    }
+
+    #[test]
+    fn scheme_accepts_paper_spelling() {
+        let mut c = Config::default();
+        c.apply_lines("scheme = -P").unwrap();
+        assert_eq!(c.scheme, SchemeKind::Runtime);
+    }
+
+    #[test]
+    fn scenario_and_params_parse() {
+        let mut c = Config::default();
+        c.apply_lines("scenario = bursty\nparam.burst_ratio = 0.25\nparam.rate = 4\n")
+            .unwrap();
+        assert_eq!(c.scenario.as_deref(), Some("bursty"));
+        assert_eq!(
+            c.scenario_params,
+            vec![
+                ("burst_ratio".to_string(), "0.25".to_string()),
+                ("rate".to_string(), "4".to_string()),
+            ]
+        );
     }
 
     #[test]

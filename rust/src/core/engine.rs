@@ -160,6 +160,7 @@ impl SchedCore {
         let policy = crate::sched::make_policy(cfg.policy, cfg.cores, cfg.grace_rsec);
         let partitioner = crate::partition::make_scheme(
             cfg.scheme,
+            cfg.cores,
             cfg.max_partition_bytes,
             cfg.advisory_partition_bytes,
             cfg.atr,
@@ -258,7 +259,7 @@ impl SchedCore {
         let spec = &job.spec.stages[idx];
         let est = self.estimator.stage_slot_time(spec);
 
-        let ranges = self.partitioner.partition(spec, est, self.cfg.cores);
+        let ranges = self.partitioner.partition(spec, est);
         let blocks_total = (spec.input_bytes.div_ceil(BLOCK_BYTES)).max(1);
         let tasks: Vec<TaskSpec> = ranges
             .iter()
@@ -547,7 +548,7 @@ mod tests {
         SchedCore::new(
             cfg,
             Box::new(Fifo::new()),
-            Box::new(SizeScheme::new(24 << 20, 24 << 20)),
+            Box::new(SizeScheme::new(24 << 20, 24 << 20, cores)),
             Box::new(Oracle::new()),
         )
     }

@@ -329,10 +329,9 @@ mod tests {
     use super::*;
     use crate::config::Config;
     use crate::sched::PolicyKind;
-    use crate::workload::scenarios;
 
     fn run_with_log() -> (Workload, SimReport) {
-        let w = scenarios::scenario2(1, 4, 0.5);
+        let w = crate::workload::test_scenario2(1, 4, 0.5);
         let mut cfg = Config::default().with_cores(8).with_policy(PolicyKind::Uwfq);
         cfg.log_tasks = true;
         let rep = crate::sim::simulate(cfg, w.jobs.clone());

@@ -12,7 +12,7 @@ use uwfq::config::Config;
 use uwfq::metrics::fairness::{fairness_vs_ujf, DvrDenominator};
 use uwfq::sweep::Sweep;
 use uwfq::util::benchkit::JsonSink;
-use uwfq::workload::{gtrace, scenarios, tracefile, Workload};
+use uwfq::workload::{scenarios, Registry, ScenarioSpec, Workload};
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -28,6 +28,7 @@ fn main() -> ExitCode {
         "sweep" => sweep_cmd(&cli),
         "scale" => scale_cmd(&cli),
         "run" => run(&cli),
+        "scenarios" => scenarios_cmd(),
         "serve" => serve(&cli),
         "ablation" => ablation(&cli),
         "analyze" => analyze(&cli),
@@ -46,17 +47,27 @@ fn main() -> ExitCode {
     }
 }
 
-/// The Table-2 / Fig-7 macro workload, shrunk under `--quick`.
-fn macro_workload(quick: bool, seed: u64, base: &Config) -> Workload {
+/// Spec for registry entry `name`, with its quick overrides applied when
+/// `quick` (the scenario's own idea of a fast smoke shape).
+fn spec_with_quick(name: &str, quick: bool) -> Result<ScenarioSpec, String> {
+    let sc = Registry::global().get(name)?;
+    let mut spec = ScenarioSpec::new(name);
     if quick {
-        let mut p = gtrace::GtraceParams::default();
-        p.window_s = 120.0;
-        p.users = 10;
-        p.heavy_users = 3;
-        p.cores = base.cores;
-        gtrace::gtrace(seed, &p)
+        for &(k, v) in sc.quick_overrides() {
+            spec = spec.with(k, v);
+        }
+    }
+    Ok(spec)
+}
+
+/// The Table-2 / Fig-7 macro workload, shrunk under `--quick`.
+fn macro_workload(quick: bool, seed: u64, base: &Config) -> Result<Workload, String> {
+    if quick {
+        let mut spec = spec_with_quick("gtrace", true)?;
+        spec = spec.with("cores", &base.cores.to_string());
+        spec.workload(seed)
     } else {
-        figures::default_macro_workload(seed)
+        Ok(figures::default_macro_workload(seed))
     }
 }
 
@@ -69,7 +80,7 @@ fn reproduce(cli: &Cli) -> Result<(), String> {
     let out = cli.flag_or("out", "out");
     std::fs::create_dir_all(&out).map_err(|e| e.to_string())?;
     let mut base = cli.config()?;
-    let quick = cli.flag("quick") == Some("true");
+    let quick = cli.quick();
     if quick {
         base.cores = 8;
     }
@@ -88,7 +99,7 @@ fn reproduce(cli: &Cli) -> Result<(), String> {
         tables::write_table1_csv(&format!("{out}/table1_scenario2.csv"), &s2).map_err(io)?;
     }
     if matches!(what, "table2" | "all") {
-        let w = macro_workload(quick, seed, &base);
+        let w = macro_workload(quick, seed, &base)?;
         let t2 = tables::table2(&w, &base, &swp);
         println!("{}", tables::render_table2(&t2));
         tables::write_table2_csv(&format!("{out}/table2_macro.csv"), &t2).map_err(io)?;
@@ -120,7 +131,7 @@ fn reproduce(cli: &Cli) -> Result<(), String> {
         println!("== Fig 6 → {out}/fig6_completion_cdf.csv ==");
     }
     if matches!(what, "fig7" | "all") {
-        let w = macro_workload(quick, seed, &base);
+        let w = macro_workload(quick, seed, &base)?;
         let f = figures::fig7(&w, &base, &swp);
         figures::write_fig7_csv(&out, &f).map_err(io)?;
         println!("== Fig 7 → {out}/fig7_user_violations.csv ==");
@@ -129,15 +140,37 @@ fn reproduce(cli: &Cli) -> Result<(), String> {
     Ok(())
 }
 
+/// The stress scenarios `uwfq sweep` runs alongside the paper grids —
+/// pure registry entries; this file only knows their names.
+const STRESS_SCENARIOS: [&str; 3] = ["bursty", "heavytail", "diurnal"];
+
+/// Run the generic policy × partitioner grid for one scenario spec and
+/// write `sweep_<name>.csv`.
+fn scenario_sweep(
+    spec: &ScenarioSpec,
+    base: &Config,
+    par: &Sweep,
+    out: &str,
+) -> Result<(), String> {
+    let g = tables::scenario_grid(spec, base, par)?;
+    println!("{}", tables::render_scenario_grid(&g));
+    let path = format!("{out}/sweep_{}.csv", spec.name);
+    tables::write_scenario_grid_csv(&path, &g).map_err(|e| e.to_string())?;
+    println!("scenario grid '{}' → {path}", spec.name);
+    Ok(())
+}
+
 /// `uwfq sweep` — the whole evaluation grid on all cores: regenerates
 /// every table and figure through the parallel sweep engine (output
-/// byte-identical to `reproduce --threads 1`), times the macro grid at 1
-/// thread vs N, and records cells/s + speedup in `BENCH_sweep.json`.
+/// byte-identical to `reproduce --threads 1`), runs the stress-scenario
+/// grids, times the macro grid at 1 thread vs N, and records cells/s +
+/// speedup in `BENCH_sweep.json`. With `--scenario NAME`, runs only that
+/// scenario's generic grid.
 fn sweep_cmd(cli: &Cli) -> Result<(), String> {
     let out = cli.flag_or("out", "out");
     std::fs::create_dir_all(&out).map_err(|e| e.to_string())?;
     let mut base = cli.config()?;
-    let quick = cli.flag("quick") == Some("true");
+    let quick = cli.quick();
     if quick {
         base.cores = 8;
     }
@@ -146,7 +179,15 @@ fn sweep_cmd(cli: &Cli) -> Result<(), String> {
     let par = Sweep::new(threads);
     let io = |e: std::io::Error| e.to_string();
 
-    let w = macro_workload(quick, seed, &base);
+    // `uwfq sweep --scenario NAME [--param k=v]`: just that scenario's
+    // generic grid, straight off the registry.
+    if let Some(name) = base.scenario.clone() {
+        let mut spec = spec_with_quick(&name, quick)?;
+        spec.params.extend(base.scenario_params.iter().cloned());
+        return scenario_sweep(&spec, &base, &par, &out);
+    }
+
+    let w = macro_workload(quick, seed, &base)?;
     println!(
         "sweep: {} worker threads; macro workload {} jobs / {} users",
         par.threads(),
@@ -207,6 +248,12 @@ fn sweep_cmd(cli: &Cli) -> Result<(), String> {
     figures::write_fig6_csv(&out, &f6).map_err(io)?;
     figures::write_fig7_csv(&out, &f7).map_err(io)?;
 
+    // The stress scenarios ride along: each is a pure registry entry,
+    // swept across every policy × partitioner with zero bench-layer code.
+    for name in STRESS_SCENARIOS {
+        scenario_sweep(&spec_with_quick(name, quick)?, &base, &par, &out)?;
+    }
+
     let mut sink = JsonSink::new();
     sink.metric("sweep/threads", threads as f64);
     sink.metric("sweep/macro_grid_cells", macro_cells);
@@ -256,40 +303,25 @@ fn scale_cmd(cli: &Cli) -> Result<(), String> {
     if cli.flag("cores").is_none() && cli.flag("config").is_none() {
         cfg.cores = 64;
     }
-    let quick = cli.flag("quick") == Some("true");
-    let jobs: u64 = match cli.flag("jobs") {
-        Some(v) => v.parse().map_err(|_| format!("bad --jobs '{v}'"))?,
-        None => {
-            if quick {
-                50_000
-            } else {
-                1_000_000
-            }
-        }
-    };
-    let users: u32 = match cli.flag("users") {
-        Some(v) => v.parse().map_err(|_| format!("bad --users '{v}'"))?,
-        None => {
-            if quick {
-                1_000
-            } else {
-                10_000
-            }
-        }
-    };
     let verify = cli.flag("verify") != Some("false");
-    let params = uwfq::workload::stream::ScaleParams {
-        users,
-        jobs,
-        cores: cfg.cores,
-        target_utilization: 0.85,
-        seed: cfg.seed,
-    };
+    // Size resolution routes through the registry's `scale` entry — its
+    // schema (and quick overrides) are the single source of the scale
+    // defaults; `--jobs` / `--users` / `--param k=v` layer on top.
+    let mut spec = spec_with_quick("scale", cli.quick())?;
+    spec.params.extend(cfg.scenario_params.iter().cloned());
+    if let Some(v) = cli.flag("jobs") {
+        spec = spec.with("jobs", v);
+    }
+    if let Some(v) = cli.flag("users") {
+        spec = spec.with("users", v);
+    }
+    spec = spec.with("cores", &cfg.cores.to_string());
+    let params = uwfq::workload::registry::scale_params(&spec, cfg.seed)?;
     println!(
         "scale: {} jobs / {} users on {} cores (policy {}, streaming path{})",
-        jobs,
-        users,
-        cfg.cores,
+        params.jobs,
+        params.users,
+        params.cores,
         cfg.policy.name(),
         if verify { " + exact verify pass" } else { "" }
     );
@@ -310,16 +342,60 @@ fn scale_cmd(cli: &Cli) -> Result<(), String> {
     Ok(())
 }
 
-fn load_workload(name: &str, seed: u64) -> Result<Workload, String> {
-    if let Some(path) = name.strip_prefix("trace:") {
-        return tracefile::load_csv_file(path);
+/// Resolve the scenario `uwfq run` should build: `--scenario NAME` (or a
+/// config file's `scenario =` line) via [`Config::scenario`], the legacy
+/// `--workload NAME` / `--workload trace:FILE` spelling, or the default
+/// `scenario1`. Parameter overrides layer `defaults ← --quick ←
+/// config-file param.* ← --param flags`.
+fn scenario_spec(cli: &Cli, cfg: &Config) -> Result<ScenarioSpec, String> {
+    let mut name = cfg.scenario.clone();
+    let mut extra: Vec<(String, String)> = Vec::new();
+    if let Some(wl) = cli.flag("workload") {
+        if name.is_some() {
+            return Err("use either --scenario or the legacy --workload, not both".into());
+        }
+        if let Some(path) = wl.strip_prefix("trace:") {
+            name = Some("tracefile".to_string());
+            extra.push(("path".to_string(), path.to_string()));
+        } else {
+            name = Some(wl.to_string());
+        }
     }
-    match name {
-        "scenario1" => Ok(scenarios::scenario1_default(seed)),
-        "scenario2" => Ok(scenarios::scenario2_default(seed)),
-        "gtrace" => Ok(figures::default_macro_workload(seed)),
-        other => Err(format!("unknown workload '{other}'")),
+    let name = name.unwrap_or_else(|| "scenario1".to_string());
+    let mut spec = spec_with_quick(&name, cli.quick())?;
+    spec.params.extend(cfg.scenario_params.iter().cloned());
+    spec.params.extend(extra);
+    Ok(spec)
+}
+
+/// `uwfq scenarios` — list every registry entry with its parameter
+/// schema, defaults and quick-run overrides.
+fn scenarios_cmd() -> Result<(), String> {
+    let reg = Registry::global();
+    println!("registered scenarios ({}):", reg.names().len());
+    for sc in reg.iter() {
+        println!("\n  {:<10} {}", sc.name(), sc.doc());
+        for p in sc.schema() {
+            println!(
+                "      --param {}={}  [{}] {}",
+                p.name,
+                p.default,
+                p.default.type_name(),
+                p.doc
+            );
+        }
+        if !sc.quick_overrides().is_empty() {
+            let q: Vec<String> = sc
+                .quick_overrides()
+                .iter()
+                .map(|&(k, v)| format!("{k}={v}"))
+                .collect();
+            println!("      --quick → {}", q.join(" "));
+        }
     }
+    println!("\nrun one:    uwfq run --scenario NAME --param k=v");
+    println!("sweep one:  uwfq sweep --scenario NAME   (policies × partitioners)");
+    Ok(())
 }
 
 fn analyze(cli: &Cli) -> Result<(), String> {
@@ -344,14 +420,15 @@ fn analyze(cli: &Cli) -> Result<(), String> {
 
 fn run(cli: &Cli) -> Result<(), String> {
     let mut cfg = cli.config()?;
-    let wname = cli.flag_or("workload", "scenario1");
     let eventlog = cli.flag("eventlog").map(|s| s.to_string());
     if eventlog.is_some() {
         cfg.log_tasks = true;
     }
-    let w = load_workload(&wname, cfg.seed)?;
+    let spec = scenario_spec(cli, &cfg)?;
+    let w = spec.workload(cfg.seed)?;
     println!(
-        "workload {wname}: {} jobs, {} users, {:.0} core-s of work",
+        "scenario {}: {} jobs, {} users, {:.0} core-s of work",
+        spec.name,
         w.jobs.len(),
         w.users().len(),
         w.total_slot_time()
@@ -450,12 +527,7 @@ fn ablation(cli: &Cli) -> Result<(), String> {
     println!("{}", tables::render_table1(&s1));
 
     println!("== ablation: ATR sensitivity (macro, UWFQ-P) ==");
-    let mut p = gtrace::GtraceParams::default();
-    p.window_s = 120.0;
-    p.users = 10;
-    p.heavy_users = 3;
-    p.cores = base.cores;
-    let wm = gtrace::gtrace(seed, &p);
+    let wm = macro_workload(true, seed, &base)?;
     let atrs = [0.1, 0.25, 0.5, 1.0, 2.0, 5.0];
     let cells: Vec<Config> = atrs
         .iter()

@@ -237,12 +237,12 @@ mod jain_tests {
     use super::*;
     use crate::config::Config;
     use crate::sched::PolicyKind;
-    use crate::workload::scenarios;
+    use crate::workload::test_scenario2;
 
     #[test]
     fn jain_bounds_and_equality() {
         let ujf = {
-            let w = scenarios::scenario2(1, 4, 0.5);
+            let w = test_scenario2(1, 4, 0.5);
             crate::bench::run_one(&Config::default().with_cores(8), &w)
         };
         let j = jain_index_user_rt(&ujf);
@@ -283,7 +283,7 @@ mod jain_tests {
     fn scenario2_equal_demand_users_have_similar_rts_under_uwfq() {
         // With identical per-user demand (scenario 2), equal shares do
         // imply similar per-user RTs: UWFQ's Jain index stays high.
-        let w = scenarios::scenario2(1, 6, 0.5);
+        let w = test_scenario2(1, 6, 0.5);
         let j = jain_index_user_rt(&crate::bench::run_one(
             &Config::default().with_cores(8).with_policy(PolicyKind::Uwfq),
             &w,

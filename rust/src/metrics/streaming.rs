@@ -637,8 +637,7 @@ mod tests {
         // mean slowdown must agree exactly (same values, same order).
         use crate::config::Config;
         use crate::sim;
-        use crate::workload::scenarios;
-        let w = scenarios::scenario2(1, 4, 0.5);
+        let w = crate::workload::test_scenario2(1, 4, 0.5);
         let cfg = Config::default().with_cores(8);
         let idle = crate::bench::idle_map(&cfg, &w);
         let exact = crate::bench::run_one(&cfg, &w);

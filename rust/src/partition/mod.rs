@@ -28,12 +28,16 @@ pub const AQE_INITIAL_PARTITIONS: u32 = 200;
 ///
 /// `est_slot_time` is the *estimated* stage sequential runtime from the
 /// runtime estimator (runtime partitioning never sees ground truth).
+/// A scheme whose split depends on the cluster size (the size-based
+/// scan's one-partition-per-core floor) captures the core count at
+/// construction ([`make_scheme`]) — `partition_count` itself is a pure
+/// function of the stage and the estimate.
 pub trait PartitionScheme: Send {
     fn name(&self) -> &'static str;
-    fn partition_count(&self, stage: &StageSpec, est_slot_time: f64, cores: u32) -> u32;
+    fn partition_count(&self, stage: &StageSpec, est_slot_time: f64) -> u32;
 
-    fn partition(&self, stage: &StageSpec, est_slot_time: f64, cores: u32) -> Vec<(f64, f64)> {
-        let mut n = self.partition_count(stage, est_slot_time, cores).max(1);
+    fn partition(&self, stage: &StageSpec, est_slot_time: f64) -> Vec<(f64, f64)> {
+        let mut n = self.partition_count(stage, est_slot_time).max(1);
         if let Some(cap) = stage.max_parallelism {
             n = n.min(cap.max(1));
         }
@@ -59,6 +63,9 @@ pub enum SchemeKind {
     Runtime,
 }
 
+/// The spellings [`SchemeKind::parse`] accepts, for error messages.
+const SCHEME_KINDS: &str = "size | default, runtime | atr | p | -P";
+
 impl SchemeKind {
     pub fn name(&self) -> &'static str {
         match self {
@@ -66,27 +73,37 @@ impl SchemeKind {
             SchemeKind::Runtime => "runtime",
         }
     }
-    pub fn parse(s: &str) -> Option<SchemeKind> {
+
+    /// Parse a scheme name. Accepts the paper's literal `-P` spelling for
+    /// the runtime variant; rejections list the valid kinds.
+    pub fn parse(s: &str) -> Result<SchemeKind, String> {
         match s.to_ascii_lowercase().as_str() {
-            "size" | "default" => Some(SchemeKind::Size),
-            "runtime" | "atr" | "p" => Some(SchemeKind::Runtime),
-            _ => None,
+            "size" | "default" => Ok(SchemeKind::Size),
+            "runtime" | "atr" | "p" | "-p" => Ok(SchemeKind::Runtime),
+            _ => Err(format!("unknown scheme '{s}' (valid kinds: {SCHEME_KINDS})")),
         }
     }
 }
 
+/// Build a scheme bound to a cluster of `cores` executor cores.
 pub fn make_scheme(
     kind: SchemeKind,
+    cores: u32,
     max_partition_bytes: u64,
     advisory_partition_bytes: u64,
     atr: f64,
 ) -> Box<dyn PartitionScheme> {
     match kind {
-        SchemeKind::Size => Box::new(SizeScheme::new(max_partition_bytes, advisory_partition_bytes)),
+        SchemeKind::Size => Box::new(SizeScheme::new(
+            max_partition_bytes,
+            advisory_partition_bytes,
+            cores,
+        )),
         SchemeKind::Runtime => Box::new(RuntimeScheme::new(
             atr,
             max_partition_bytes,
             advisory_partition_bytes,
+            cores,
         )),
     }
 }
@@ -111,8 +128,13 @@ mod tests {
 
     #[test]
     fn kind_parse() {
-        assert_eq!(SchemeKind::parse("default"), Some(SchemeKind::Size));
-        assert_eq!(SchemeKind::parse("runtime"), Some(SchemeKind::Runtime));
-        assert_eq!(SchemeKind::parse("x"), None);
+        assert_eq!(SchemeKind::parse("default"), Ok(SchemeKind::Size));
+        assert_eq!(SchemeKind::parse("runtime"), Ok(SchemeKind::Runtime));
+        // The paper's literal spelling for the runtime variants.
+        assert_eq!(SchemeKind::parse("-P"), Ok(SchemeKind::Runtime));
+        assert_eq!(SchemeKind::parse("-p"), Ok(SchemeKind::Runtime));
+        let err = SchemeKind::parse("x").unwrap_err();
+        assert!(err.contains("unknown scheme 'x'"), "{err}");
+        assert!(err.contains("runtime") && err.contains("default"), "{err}");
     }
 }

@@ -21,11 +21,16 @@ pub struct RuntimeScheme {
 }
 
 impl RuntimeScheme {
-    pub fn new(atr: f64, max_partition_bytes: u64, advisory_partition_bytes: u64) -> Self {
+    pub fn new(
+        atr: f64,
+        max_partition_bytes: u64,
+        advisory_partition_bytes: u64,
+        cores: u32,
+    ) -> Self {
         assert!(atr > 0.0, "ATR must be positive");
         RuntimeScheme {
             atr,
-            size: SizeScheme::new(max_partition_bytes, advisory_partition_bytes),
+            size: SizeScheme::new(max_partition_bytes, advisory_partition_bytes, cores),
         }
     }
 
@@ -40,17 +45,12 @@ impl PartitionScheme for RuntimeScheme {
         "runtime"
     }
 
-    fn partition_count(&self, stage: &StageSpec, est_slot_time: f64, cores: u32) -> u32 {
+    fn partition_count(&self, stage: &StageSpec, est_slot_time: f64) -> u32 {
         let dynamic_min = self.runtime_count(est_slot_time);
         if stage.is_leaf_input {
-            // File scan: runtime partitioning replaces the size-based split
-            // outright, but never goes *coarser* than what keeps every core
-            // busy for large inputs (the paper keeps full parallelism:
-            // partitions can exceed cores, not fall below the size split
-            // when data is huge — we take the max of runtime count and 1,
-            // since fewer-than-cores partitions is precisely what ATR
-            // protects against only when runtime demands it).
-            let _ = cores;
+            // File scan: runtime partitioning replaces the size-based
+            // split outright — the split is a function of estimated
+            // runtime and ATR only (§3.2).
             dynamic_min
         } else {
             // AQE coalescing with the dynamic minimum override.
@@ -79,48 +79,45 @@ mod tests {
 
     #[test]
     fn leaf_count_is_runtime_over_atr() {
-        let r = RuntimeScheme::new(0.25, 128 << 20, 64 << 20);
+        let r = RuntimeScheme::new(0.25, 128 << 20, 64 << 20, 32);
         // 16 s of work at ATR 250 ms → 64 tasks, regardless of cores.
-        assert_eq!(r.partition_count(&stage(true, 1 << 20, 16.0), 16.0, 32), 64);
+        assert_eq!(r.partition_count(&stage(true, 1 << 20, 16.0), 16.0), 64);
     }
 
     #[test]
     fn tiny_stage_gets_one_partition() {
-        let r = RuntimeScheme::new(1.0, 128 << 20, 64 << 20);
-        assert_eq!(r.partition_count(&stage(true, 1 << 20, 0.01), 0.01, 32), 1);
+        let r = RuntimeScheme::new(1.0, 128 << 20, 64 << 20, 32);
+        assert_eq!(r.partition_count(&stage(true, 1 << 20, 0.01), 0.01), 1);
     }
 
     #[test]
     fn shuffle_min_override_prevents_coalesce_to_one() {
-        let r = RuntimeScheme::new(0.5, 128 << 20, 64 << 20);
+        let r = RuntimeScheme::new(0.5, 128 << 20, 64 << 20, 32);
         // Tiny shuffle output (would coalesce to 1 under default AQE) but
         // 10 s of estimated runtime → min 20 partitions.
-        assert_eq!(r.partition_count(&stage(false, 1 << 20, 10.0), 10.0, 32), 20);
+        assert_eq!(r.partition_count(&stage(false, 1 << 20, 10.0), 10.0), 20);
     }
 
     #[test]
     fn shuffle_respects_size_when_larger() {
-        let r = RuntimeScheme::new(10.0, 128 << 20, 64 << 20);
+        let r = RuntimeScheme::new(10.0, 128 << 20, 64 << 20, 32);
         // Size-based coalescing wants 10 partitions; runtime min is 1 →
         // AQE's own sizing wins (minimal interference, §4.1.2).
-        assert_eq!(
-            r.partition_count(&stage(false, 640 << 20, 5.0), 5.0, 32),
-            10
-        );
+        assert_eq!(r.partition_count(&stage(false, 640 << 20, 5.0), 5.0), 10);
     }
 
     #[test]
     fn uses_estimate_not_truth() {
-        let r = RuntimeScheme::new(1.0, 128 << 20, 64 << 20);
+        let r = RuntimeScheme::new(1.0, 128 << 20, 64 << 20, 32);
         let s = stage(true, 1 << 20, 100.0); // truth: 100 s
         // Estimator said 2 s → 2 partitions. Runtime partitioning must
         // consume the estimate only.
-        assert_eq!(r.partition_count(&s, 2.0, 32), 2);
+        assert_eq!(r.partition_count(&s, 2.0), 2);
     }
 
     #[test]
     #[should_panic]
     fn rejects_nonpositive_atr() {
-        RuntimeScheme::new(0.0, 1, 1);
+        RuntimeScheme::new(0.0, 1, 1, 1);
     }
 }

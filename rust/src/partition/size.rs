@@ -2,7 +2,9 @@
 //!
 //! * Leaf (file-scan) stages: input is divided by `maxPartitionBytes`, but
 //!   at least one partition per core so every stage can use the whole
-//!   cluster ("dividing the data equally among the available cores").
+//!   cluster ("dividing the data equally among the available cores"). The
+//!   core count is bound at construction — see
+//!   [`crate::partition::PartitionScheme`].
 //! * Shuffle stages: AQE starts from 200 partitions and coalesces to
 //!   `max(ceil(bytes / advisoryPartitionBytes), min_partitions)` with the
 //!   Spark-default `min_partitions = 1` — which is exactly what lets AQE
@@ -14,23 +16,26 @@ use crate::core::job::StageSpec;
 pub struct SizeScheme {
     max_partition_bytes: u64,
     advisory_partition_bytes: u64,
+    /// Executor cores of the bound cluster (scan floor: one per core).
+    cores: u32,
     /// AQE minimum coalesced partition count (Spark default 1). The
     /// runtime scheme raises this dynamically.
     pub min_partitions: u32,
 }
 
 impl SizeScheme {
-    pub fn new(max_partition_bytes: u64, advisory_partition_bytes: u64) -> Self {
+    pub fn new(max_partition_bytes: u64, advisory_partition_bytes: u64, cores: u32) -> Self {
         SizeScheme {
             max_partition_bytes: max_partition_bytes.max(1),
             advisory_partition_bytes: advisory_partition_bytes.max(1),
+            cores: cores.max(1),
             min_partitions: 1,
         }
     }
 
-    pub fn leaf_count(&self, stage: &StageSpec, cores: u32) -> u32 {
+    pub fn leaf_count(&self, stage: &StageSpec) -> u32 {
         let by_size = stage.input_bytes.div_ceil(self.max_partition_bytes) as u32;
-        by_size.max(cores).max(1)
+        by_size.max(self.cores).max(1)
     }
 
     pub fn shuffle_count(&self, stage: &StageSpec, min_partitions: u32) -> u32 {
@@ -46,9 +51,9 @@ impl PartitionScheme for SizeScheme {
         "default"
     }
 
-    fn partition_count(&self, stage: &StageSpec, _est_slot_time: f64, cores: u32) -> u32 {
+    fn partition_count(&self, stage: &StageSpec, _est_slot_time: f64) -> u32 {
         if stage.is_leaf_input {
-            self.leaf_count(stage, cores)
+            self.leaf_count(stage)
         } else {
             self.shuffle_count(stage, self.min_partitions)
         }
@@ -82,39 +87,39 @@ mod tests {
 
     #[test]
     fn leaf_at_least_one_per_core() {
-        let s = SizeScheme::new(128 << 20, 64 << 20);
+        let s = SizeScheme::new(128 << 20, 64 << 20, 32);
         // Small input still spreads across all cores.
-        assert_eq!(s.partition_count(&leaf(1 << 20), 1.0, 32), 32);
+        assert_eq!(s.partition_count(&leaf(1 << 20), 1.0), 32);
     }
 
     #[test]
     fn leaf_oversplits_when_max_partition_bytes_small() {
         // The paper §5.1: default maxPartitionBytes over-partitions their
         // 752 MB dataset — reproduce that behaviour.
-        let s = SizeScheme::new(8 << 20, 64 << 20);
-        assert_eq!(s.partition_count(&leaf(752 << 20), 1.0, 32), 94);
+        let s = SizeScheme::new(8 << 20, 64 << 20, 32);
+        assert_eq!(s.partition_count(&leaf(752 << 20), 1.0), 94);
     }
 
     #[test]
     fn shuffle_coalesces_to_advisory() {
-        let s = SizeScheme::new(128 << 20, 64 << 20);
-        assert_eq!(s.partition_count(&shuffle(640 << 20), 1.0, 32), 10);
+        let s = SizeScheme::new(128 << 20, 64 << 20, 32);
+        assert_eq!(s.partition_count(&shuffle(640 << 20), 1.0), 10);
         // Tiny shuffle output coalesces all the way to min_partitions=1,
         // the long-running-task hazard the paper fixes.
-        assert_eq!(s.partition_count(&shuffle(1 << 20), 1.0, 32), 1);
+        assert_eq!(s.partition_count(&shuffle(1 << 20), 1.0), 1);
     }
 
     #[test]
     fn shuffle_capped_at_200() {
-        let s = SizeScheme::new(128 << 20, 1 << 20);
-        assert_eq!(s.partition_count(&shuffle(1 << 40), 1.0, 32), 200);
+        let s = SizeScheme::new(128 << 20, 1 << 20, 32);
+        assert_eq!(s.partition_count(&shuffle(1 << 40), 1.0), 200);
     }
 
     #[test]
     fn respects_max_parallelism_cap() {
-        let s = SizeScheme::new(128 << 20, 64 << 20);
+        let s = SizeScheme::new(128 << 20, 64 << 20, 32);
         let mut st = leaf(752 << 20);
         st.max_parallelism = Some(1);
-        assert_eq!(s.partition(&st, 1.0, 32).len(), 1);
+        assert_eq!(s.partition(&st, 1.0).len(), 1);
     }
 }

@@ -85,6 +85,15 @@ impl Rng {
         (mu + sigma * self.normal()).exp()
     }
 
+    /// Pareto with shape `alpha` and scale (minimum) `xm` — the
+    /// heavy-tailed job-size law of the `heavytail` stress scenario.
+    /// Inverse-CDF sampling: `xm * u^(-1/alpha)` with `u ∈ (0, 1]`.
+    pub fn pareto(&mut self, alpha: f64, xm: f64) -> f64 {
+        debug_assert!(alpha > 0.0 && xm > 0.0);
+        let u = 1.0 - self.f64(); // (0,1]
+        xm * u.powf(-1.0 / alpha)
+    }
+
     /// Shuffle a slice in place (Fisher–Yates).
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         for i in (1..xs.len()).rev() {
@@ -163,6 +172,21 @@ mod tests {
         for _ in 0..1000 {
             assert!(r.lognormal(0.0, 1.5) > 0.0);
         }
+    }
+
+    #[test]
+    fn pareto_scale_and_median() {
+        let mut r = Rng::new(19);
+        let (alpha, xm) = (1.5, 2.0);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.pareto(alpha, xm)).collect();
+        assert!(xs.iter().all(|&x| x >= xm), "Pareto support starts at xm");
+        // Median = xm * 2^(1/alpha).
+        let mut sorted = xs;
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = sorted[n / 2];
+        let expect = xm * 2f64.powf(1.0 / alpha);
+        assert!((med / expect - 1.0).abs() < 0.05, "median {med} vs {expect}");
     }
 
     #[test]

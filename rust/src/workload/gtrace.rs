@@ -11,9 +11,17 @@
 //! sizes, Poisson user arrivals, 1–3-stage linear jobs, and the same
 //! filter + rescale pipeline. A real trace export can be used instead via
 //! [`crate::workload::tracefile`].
+//!
+//! The workload is defined **once**, as the [`GtraceStream`] constructor
+//! [`gtrace`]; the materialized form is the registry's generic collect
+//! adapter (registry entry `gtrace`). The stream is *semi*-streaming: the
+//! §5.3 filter / rebalance / rescale pipeline is inherently two-pass (it
+//! needs the global size median and work totals), so the stream holds
+//! shaped ~56-byte tuples — not full `JobSpec`s — and materializes jobs
+//! one at a time in arrival order.
 
 use super::stream::JobStream;
-use super::{UserClass, Workload};
+use super::UserClass;
 use crate::core::job::{CostProfile, JobSpec, StagePhase, StageSpec};
 use crate::util::{stats, Rng};
 use crate::{s_to_us, UserId};
@@ -52,32 +60,11 @@ impl Default for GtraceParams {
     }
 }
 
-/// Build the macro workload.
-pub fn gtrace(seed: u64, p: &GtraceParams) -> Workload {
-    let (raw, mut rng) = shaped_raw(seed, p);
-
-    // Materialize 1–3-stage linear jobs.
-    let mut jobs = Vec::new();
-    let mut user_class = HashMap::new();
-    for (i, (user, arrival, slot, class)) in raw.iter().enumerate() {
-        user_class.insert(*user, *class);
-        let mut r = rng.fork(0xB0B ^ i as u64);
-        jobs.push(trace_job(*user, i, *arrival, *slot, &mut r, p.skew_fraction));
-    }
-
-    Workload {
-        name: "gtrace".into(),
-        jobs,
-        user_class,
-    }
-}
-
 /// The shared §5.3 shaping pipeline: generate raw (user, arrival,
 /// slot-time, class) tuples, filter the runtime tail, rebalance heavy
 /// users and rescale to the target utilization. Returns the tuples (in
 /// generation order) plus the root RNG in the exact state the per-job
-/// materialization forks from — both [`gtrace`] and [`gtrace_stream`]
-/// build identical jobs from this.
+/// materialization forks from.
 fn shaped_raw(seed: u64, p: &GtraceParams) -> (Vec<(u32, f64, f64, UserClass)>, Rng) {
     let mut rng = Rng::new(seed);
     let mut raw: Vec<(u32, f64, f64, UserClass)> = Vec::new(); // (user, arrival, slot, class)
@@ -139,10 +126,12 @@ fn shaped_raw(seed: u64, p: &GtraceParams) -> (Vec<(u32, f64, f64, UserClass)>, 
 }
 
 /// One trace job: a linear chain of 1–3 stages whose slot-times partition
-/// the job's total, leaf stage first; bigger jobs get more stages.
-fn trace_job(
+/// the job's total, leaf stage first; bigger jobs get more stages. Shared
+/// with the `heavytail` stress scenario, whose Pareto sizes reuse the
+/// same stage-chain shape.
+pub(crate) fn trace_job(
     user: u32,
-    idx: usize,
+    name: &str,
     arrival_s: f64,
     slot: f64,
     r: &mut Rng,
@@ -191,20 +180,16 @@ fn trace_job(
         .collect();
     JobSpec {
         user,
-        name: format!("g{idx}").into(),
+        name: name.into(),
         arrival: s_to_us(arrival_s),
         weight: 1.0,
         stages,
     }
 }
 
-// ---------------------------------------------------------------------------
-// Streaming twin
-// ---------------------------------------------------------------------------
-
 /// One shaped trace job awaiting lazy materialization: the compact tuple
 /// plus its pre-forked RNG (forked in generation order, so the root RNG
-/// advances exactly as in [`gtrace`]).
+/// advances exactly as the shaping pipeline prescribes).
 struct RawTraceJob {
     user: u32,
     idx: usize,
@@ -213,12 +198,9 @@ struct RawTraceJob {
     rng: Rng,
 }
 
-/// The macro workload as a stream. **Semi-streaming**: the §5.3 filter /
-/// rebalance / rescale pipeline is inherently two-pass (it needs the
-/// global size median and work totals), so the stream holds the shaped
-/// *tuples* — ~56 bytes each — and materializes full `JobSpec`s (stages,
-/// cost profiles, task lists downstream) one at a time in arrival order.
-/// Simulating it is byte-identical to simulating [`gtrace`].
+/// The macro workload as a stream — the single definition behind the
+/// `gtrace` registry entry. See the module docs for the semi-streaming
+/// caveat (the §5.3 shaping pipeline is two-pass).
 pub struct GtraceStream {
     raw: std::vec::IntoIter<RawTraceJob>,
     skew_fraction: f64,
@@ -226,8 +208,8 @@ pub struct GtraceStream {
     pub user_class: HashMap<UserId, UserClass>,
 }
 
-/// Build the streaming twin of [`gtrace`] for the same seed/params.
-pub fn gtrace_stream(seed: u64, p: &GtraceParams) -> GtraceStream {
+/// Build the macro workload stream for the given seed/params.
+pub fn gtrace(seed: u64, p: &GtraceParams) -> GtraceStream {
     let (raw, mut rng) = shaped_raw(seed, p);
     let mut user_class = HashMap::new();
     let mut items: Vec<RawTraceJob> = raw
@@ -240,9 +222,8 @@ pub fn gtrace_stream(seed: u64, p: &GtraceParams) -> GtraceStream {
                 idx: i,
                 arrival_s: arrival,
                 slot,
-                // Forked in generation order — identical streams to the
-                // materialized path even though jobs yield in arrival
-                // order.
+                // Forked in generation order — the root RNG advances
+                // identically no matter what order jobs later yield in.
                 rng: rng.fork(0xB0B ^ i as u64),
             }
         })
@@ -262,7 +243,7 @@ impl JobStream for GtraceStream {
         let mut r = self.raw.next()?;
         Some(trace_job(
             r.user,
-            r.idx,
+            &format!("g{}", r.idx),
             r.arrival_s,
             r.slot,
             &mut r.rng,
@@ -278,11 +259,25 @@ impl JobStream for GtraceStream {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::workload::stream::materialize;
+    use crate::workload::Workload;
+
+    /// Collect the stream into a materialized workload (what the registry
+    /// entry's generic collect adapter does).
+    fn wl(seed: u64, p: &GtraceParams) -> Workload {
+        let s = gtrace(seed, p);
+        let user_class = s.user_class.clone();
+        Workload {
+            name: "gtrace".into(),
+            jobs: materialize(s),
+            user_class,
+        }
+    }
 
     #[test]
     fn matches_paper_shape() {
         let p = GtraceParams::default();
-        let w = gtrace(42, &p);
+        let w = wl(42, &p);
         // 25 users, 5 heavy.
         assert_eq!(w.users().len() as u32, p.users);
         let heavy: Vec<_> = w
@@ -316,7 +311,7 @@ mod tests {
     fn filter_removes_tail() {
         let mut p = GtraceParams::default();
         p.filter_median_mult = 10.0;
-        let w = gtrace(7, &p);
+        let w = wl(7, &p);
         let slots: Vec<f64> = w.jobs.iter().map(|j| j.slot_time()).collect();
         let med = crate::util::stats::median(&slots);
         // After rescaling the ratio max/median can exceed the filter
@@ -326,54 +321,24 @@ mod tests {
     }
 
     #[test]
-    fn deterministic() {
+    fn deterministic_and_sorted() {
         let p = GtraceParams::default();
-        let a = gtrace(9, &p);
-        let b = gtrace(9, &p);
-        let key = |w: &Workload| {
-            w.jobs
+        let key = |seed: u64| {
+            materialize(gtrace(seed, &p))
                 .iter()
                 .map(|j| (j.user, j.arrival, j.stages.len()))
                 .collect::<Vec<_>>()
         };
-        assert_eq!(key(&a), key(&b));
-    }
-
-    #[test]
-    fn gtrace_stream_matches_materialized_sorted_order() {
-        // Job-level parity: the stream must yield exactly the jobs of the
-        // materialized builder, in the simulator's stable
-        // sort-by-arrival replay order, with identical per-job RNG draws
-        // (stage splits, skew, opcounts).
-        let mut p = GtraceParams::default();
-        p.window_s = 90.0;
-        p.users = 8;
-        p.heavy_users = 2;
-        p.cores = 8;
-        let mat = gtrace(13, &p);
-        let streamed =
-            crate::workload::stream::materialize(gtrace_stream(13, &p));
-        let sorted = crate::workload::stream::materialize(mat.clone().into_stream());
-        assert_eq!(sorted.len(), streamed.len());
-        for (a, b) in sorted.iter().zip(&streamed) {
-            assert_eq!(a.user, b.user);
-            assert_eq!(a.arrival, b.arrival);
-            assert_eq!(a.name, b.name);
-            assert_eq!(a.stages.len(), b.stages.len());
-            for (sa, sb) in a.stages.iter().zip(&b.stages) {
-                assert_eq!(sa.slot_time.to_bits(), sb.slot_time.to_bits());
-                assert_eq!(sa.input_bytes, sb.input_bytes);
-                assert_eq!(sa.opcount, sb.opcount);
-                assert_eq!(sa.cost.regions(), sb.cost.regions());
-            }
-        }
-        // Class map matches too.
-        assert_eq!(gtrace_stream(13, &p).user_class, mat.user_class);
+        let a = key(9);
+        assert_eq!(a, key(9));
+        assert_ne!(a, key(10));
+        // The stream contract: nondecreasing arrivals.
+        assert!(a.windows(2).all(|w| w[0].1 <= w[1].1));
     }
 
     #[test]
     fn stage_chains_valid() {
-        let w = gtrace(3, &GtraceParams::default());
+        let w = wl(3, &GtraceParams::default());
         for j in &w.jobs {
             j.validate().unwrap();
             assert!(j.stages[0].is_leaf_input);

@@ -1,22 +1,35 @@
-//! Workloads of the paper's evaluation (§5.2, §5.3).
+//! Workloads — one definition each, registered in the [`registry`].
 //!
-//! * [`scenarios`] — the two micro-benchmark scenarios built with industry
-//!   input: (1) infrequent + frequent users, (2) multiple frequent users.
-//! * [`gtrace`] — the Google-trace-shaped macro workload (25 users, 5
-//!   heavy users >90 % of work, ≥100 % utilization over a 500 s window),
-//!   including the paper's filtering and utilization-scaling pipeline.
+//! * [`registry`] — **the scenario registry**: every workload is a named
+//!   [`registry::Scenario`] with a typed parameter schema and a single
+//!   constructor returning a lazy [`stream::JobStream`]; the materialized
+//!   [`Workload`] form is the generic `collect()` adapter. Grids, the CLI
+//!   (`uwfq scenarios`, `uwfq run --scenario NAME --param k=v`) and
+//!   config files all reference scenarios by name + params.
+//! * [`scenarios`] — the paper's two micro-benchmark generators (§5.2.1):
+//!   (1) infrequent + frequent users, (2) multiple frequent users.
+//! * [`gtrace`] — the Google-trace-shaped macro generator (§5.3: 25
+//!   users, 5 heavy users >90 % of work, ≥100 % utilization over a 500 s
+//!   window), including the paper's filtering and utilization-scaling
+//!   pipeline (semi-streaming: the pipeline is two-pass).
+//! * [`stress`] — stress generators beyond the paper: `bursty` (BoPF-style
+//!   on/off users), `heavytail` (Pareto sizes), `diurnal` (sinusoidal-rate
+//!   Poisson).
 //! * [`tracefile`] — a simple CSV trace loader so a real WTA export can be
-//!   dropped in.
-//! * [`stream`] — lazy job timelines ([`stream::JobStream`]): per-user
-//!   generators k-way merged in arrival order, plus the `uwfq scale`
-//!   million-job workload. Every materialized workload doubles as a
-//!   stream via [`Workload::into_stream`].
+//!   dropped in (registry entry `tracefile`, `--param path=FILE`).
+//! * [`stream`] — the lazy job-timeline substrate ([`stream::JobStream`]):
+//!   per-user generators k-way merged in arrival order, plus the
+//!   `uwfq scale` million-job workload. Every materialized workload
+//!   doubles as a stream via [`Workload::into_stream`].
 
 pub mod gtrace;
+pub mod registry;
 pub mod scenarios;
 pub mod stream;
+pub mod stress;
 pub mod tracefile;
 
+pub use registry::{Registry, Scenario, ScenarioSpec};
 pub use stream::JobStream;
 
 use std::collections::HashMap;
@@ -85,6 +98,18 @@ pub const SHORT_COMPUTE_SLOT: f64 = 64.0;
 
 /// Paper dataset size (752 MB) — drives size-based partitioning.
 pub const DATASET_BYTES: u64 = 752 << 20;
+
+/// Test fixture shared by unit tests across the crate: the scenario2
+/// micro workload at a custom size, built through the registry (one
+/// place tracks the schema's param names).
+#[cfg(test)]
+pub(crate) fn test_scenario2(seed: u64, jobs_per_user: u32, stagger_s: f64) -> Workload {
+    registry::ScenarioSpec::new("scenario2")
+        .with("jobs_per_user", &jobs_per_user.to_string())
+        .with("stagger_s", &stagger_s.to_string())
+        .workload(seed)
+        .unwrap()
+}
 
 #[cfg(test)]
 mod tests {

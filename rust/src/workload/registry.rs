@@ -1,0 +1,816 @@
+//! The scenario registry — every workload in the repo, defined **once**.
+//!
+//! A [`Scenario`] is a name, a typed parameter schema (key/value params
+//! with defaults, overridable from `--param k=v` flags and `param.k = v`
+//! config-file lines), and a single constructor returning a lazy
+//! [`JobStream`] plus the per-user classification. The materialized
+//! [`Workload`] form is the generic [`ScenarioInstance::collect`] adapter
+//! over the stream — there are no hand-wired materialized/streamed twin
+//! functions anywhere.
+//!
+//! Grids reference scenarios as *data* ([`ScenarioSpec`]: name + raw
+//! overrides), so adding a workload is one registration here: it is
+//! immediately listable (`uwfq scenarios`), runnable
+//! (`uwfq run --scenario NAME --param k=v`), and sweepable across every
+//! policy × partitioner (`uwfq sweep --scenario NAME`) with zero
+//! bench-layer code. The generic differential test
+//! (`tests/stream_differential.rs`) asserts for **every** entry that
+//! simulating the stream is byte-identical to simulating its collected
+//! form under all five policies.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::OnceLock;
+
+use super::gtrace::{self, GtraceParams};
+use super::scenarios;
+use super::stream::{self, materialize, JobStream, ScaleParams};
+use super::stress::{self, BurstyParams, DiurnalParams, HeavytailParams};
+use super::tracefile;
+use super::{UserClass, Workload};
+use crate::UserId;
+
+// ---------------------------------------------------------------------------
+// Typed parameters
+// ---------------------------------------------------------------------------
+
+/// A typed scenario parameter value. The schema default fixes the type;
+/// overrides are parsed as that type.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ParamValue {
+    U64(u64),
+    F64(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl ParamValue {
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            ParamValue::U64(_) => "int",
+            ParamValue::F64(_) => "float",
+            ParamValue::Bool(_) => "bool",
+            ParamValue::Str(_) => "string",
+        }
+    }
+
+    /// Parse `raw` as this value's type.
+    fn parse_as(&self, raw: &str) -> Result<ParamValue, String> {
+        match self {
+            ParamValue::U64(_) => raw
+                .parse()
+                .map(ParamValue::U64)
+                .map_err(|_| format!("expected int, got '{raw}'")),
+            ParamValue::F64(_) => raw
+                .parse::<f64>()
+                .ok()
+                .filter(|v| v.is_finite())
+                .map(ParamValue::F64)
+                .ok_or_else(|| format!("expected finite float, got '{raw}'")),
+            ParamValue::Bool(_) => match raw {
+                "true" | "1" => Ok(ParamValue::Bool(true)),
+                "false" | "0" => Ok(ParamValue::Bool(false)),
+                _ => Err(format!("expected bool, got '{raw}'")),
+            },
+            ParamValue::Str(_) => Ok(ParamValue::Str(raw.to_string())),
+        }
+    }
+}
+
+impl fmt::Display for ParamValue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ParamValue::U64(v) => write!(f, "{v}"),
+            ParamValue::F64(v) => write!(f, "{v}"),
+            ParamValue::Bool(v) => write!(f, "{v}"),
+            ParamValue::Str(v) => write!(f, "{v}"),
+        }
+    }
+}
+
+/// One entry of a scenario's parameter schema.
+pub struct ParamSpec {
+    pub name: &'static str,
+    pub doc: &'static str,
+    pub default: ParamValue,
+}
+
+/// Shorthand constructors for schema tables.
+pub const fn p_u64(name: &'static str, default: u64, doc: &'static str) -> ParamSpec {
+    ParamSpec { name, doc, default: ParamValue::U64(default) }
+}
+pub const fn p_f64(name: &'static str, default: f64, doc: &'static str) -> ParamSpec {
+    ParamSpec { name, doc, default: ParamValue::F64(default) }
+}
+
+/// A validated parameter bag: every schema entry present (defaults filled
+/// in), every override type-checked against the schema. Later overrides
+/// win, so layering is `defaults ← quick ← config file ← CLI flags`.
+pub struct Params {
+    values: Vec<(&'static str, ParamValue)>,
+}
+
+impl Params {
+    pub fn from_schema(
+        schema: &[ParamSpec],
+        overrides: &[(String, String)],
+    ) -> Result<Params, String> {
+        let mut values: Vec<(&'static str, ParamValue)> = schema
+            .iter()
+            .map(|s| (s.name, s.default.clone()))
+            .collect();
+        for (k, raw) in overrides {
+            let slot = values.iter_mut().find(|entry| entry.0 == k.as_str()).ok_or_else(|| {
+                let valid: Vec<&str> = schema.iter().map(|s| s.name).collect();
+                format!("unknown param '{k}' (valid params: {})", valid.join(", "))
+            })?;
+            slot.1 = slot.1.parse_as(raw).map_err(|e| format!("param '{k}': {e}"))?;
+        }
+        Ok(Params { values })
+    }
+
+    fn get(&self, name: &str) -> &ParamValue {
+        self.values
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, v)| v)
+            .unwrap_or_else(|| panic!("scenario read unschema'd param '{name}'"))
+    }
+
+    /// Typed accessors — panicking on a name/type mismatch, which is a
+    /// registration bug (the schema and the constructor live side by
+    /// side), not a user error. Narrowing accessors return `Err` instead:
+    /// an out-of-range value is user input, not a registration bug.
+    pub fn u64(&self, name: &str) -> u64 {
+        match self.get(name) {
+            ParamValue::U64(v) => *v,
+            other => panic!("param '{name}' is {}, not int", other.type_name()),
+        }
+    }
+    pub fn u32(&self, name: &str) -> Result<u32, String> {
+        let v = self.u64(name);
+        u32::try_from(v)
+            .map_err(|_| format!("param '{name}': {v} out of range (max {})", u32::MAX))
+    }
+    pub fn usize(&self, name: &str) -> Result<usize, String> {
+        let v = self.u64(name);
+        usize::try_from(v).map_err(|_| format!("param '{name}': {v} out of range"))
+    }
+    pub fn f64(&self, name: &str) -> f64 {
+        match self.get(name) {
+            ParamValue::F64(v) => *v,
+            other => panic!("param '{name}' is {}, not float", other.type_name()),
+        }
+    }
+    pub fn str(&self, name: &str) -> &str {
+        match self.get(name) {
+            ParamValue::Str(v) => v,
+            other => panic!("param '{name}' is {}, not string", other.type_name()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The Scenario contract
+// ---------------------------------------------------------------------------
+
+/// A built scenario: the lazy job stream plus everything about the
+/// workload that is known without draining it.
+pub struct ScenarioInstance {
+    pub name: &'static str,
+    pub stream: Box<dyn JobStream + Send>,
+    pub user_class: HashMap<UserId, UserClass>,
+}
+
+impl ScenarioInstance {
+    /// The generic collect adapter — the materialized [`Workload`] form
+    /// of any scenario. Streams yield in nondecreasing arrival order, so
+    /// the collected job list is exactly the order the simulator replays;
+    /// simulating it is byte-identical to simulating the stream (the
+    /// generic differential test asserts this per entry).
+    pub fn collect(self) -> Workload {
+        Workload {
+            name: self.name.to_string(),
+            jobs: materialize(self.stream),
+            user_class: self.user_class,
+        }
+    }
+}
+
+/// One registered workload: name, parameter schema, and the single
+/// stream-returning constructor.
+pub trait Scenario: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// One-line description for `uwfq scenarios`.
+    fn doc(&self) -> &'static str;
+    fn schema(&self) -> &'static [ParamSpec];
+    /// Overrides that shrink the scenario for smoke runs
+    /// (`uwfq run --quick`, CI, the generic differential test).
+    fn quick_overrides(&self) -> &'static [(&'static str, &'static str)] {
+        &[]
+    }
+    /// Build the stream + classification from validated params.
+    fn build(&self, seed: u64, params: &Params) -> Result<ScenarioInstance, String>;
+}
+
+// ---------------------------------------------------------------------------
+// Scenarios as data
+// ---------------------------------------------------------------------------
+
+/// A scenario reference as *data*: name plus raw parameter overrides.
+/// Grid cells, config files and CLI invocations all reduce to this.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub params: Vec<(String, String)>,
+}
+
+impl ScenarioSpec {
+    pub fn new(name: &str) -> ScenarioSpec {
+        ScenarioSpec {
+            name: name.to_string(),
+            params: Vec::new(),
+        }
+    }
+
+    /// Builder-style override (later entries win).
+    pub fn with(mut self, key: &str, val: &str) -> ScenarioSpec {
+        self.params.push((key.to_string(), val.to_string()));
+        self
+    }
+
+    /// Resolve against the global registry and build the stream.
+    pub fn build(&self, seed: u64) -> Result<ScenarioInstance, String> {
+        let sc = Registry::global().get(&self.name)?;
+        let params = Params::from_schema(sc.schema(), &self.params)
+            .map_err(|e| format!("scenario '{}': {e}", self.name))?;
+        sc.build(seed, &params)
+    }
+
+    /// Build and collect — the materialized form.
+    pub fn workload(&self, seed: u64) -> Result<Workload, String> {
+        self.build(seed).map(ScenarioInstance::collect)
+    }
+}
+
+/// Collect a built-in scenario with default params — for grids over
+/// statically-known entries (panics on error, which would be a
+/// registration bug).
+pub fn builtin_workload(name: &str, seed: u64) -> Workload {
+    ScenarioSpec::new(name)
+        .workload(seed)
+        .unwrap_or_else(|e| panic!("built-in scenario '{name}': {e}"))
+}
+
+/// Resolve a `scale` spec into the [`ScaleParams`] the scale harness
+/// (`uwfq scale`, `bench::scale::run_scale`) consumes. The registry's
+/// `scale` schema is the single source for the scale defaults — the
+/// harness and `uwfq run --scenario scale` cannot drift.
+pub fn scale_params(spec: &ScenarioSpec, seed: u64) -> Result<ScaleParams, String> {
+    if spec.name != "scale" {
+        return Err(format!("scale_params: spec names '{}', not 'scale'", spec.name));
+    }
+    let sc = Registry::global().get("scale")?;
+    let p = Params::from_schema(sc.schema(), &spec.params)
+        .map_err(|e| format!("scenario 'scale': {e}"))?;
+    let params = ScaleParams {
+        users: p.u32("users")?,
+        jobs: p.u64("jobs"),
+        cores: p.u32("cores")?,
+        target_utilization: p.f64("target_utilization"),
+        seed,
+    };
+    validate_scale(&params)?;
+    Ok(params)
+}
+
+/// Shared `scale` validation — clean errors instead of `scale_stream`'s
+/// internal assert, for both `uwfq scale` and the registry entry.
+fn validate_scale(p: &ScaleParams) -> Result<(), String> {
+    if p.users == 0 || p.cores == 0 || p.target_utilization <= 0.0 {
+        return Err("scale: users, cores and target_utilization must be positive".into());
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+pub struct Registry {
+    entries: Vec<Box<dyn Scenario>>,
+}
+
+impl Registry {
+    /// The standard registry: the paper's workloads plus the stress
+    /// scenarios. Adding a workload = adding one entry here.
+    pub fn standard() -> Registry {
+        Registry {
+            entries: vec![
+                Box::new(Scenario1),
+                Box::new(Scenario2),
+                Box::new(Gtrace),
+                Box::new(Tracefile),
+                Box::new(Scale),
+                Box::new(Bursty),
+                Box::new(Heavytail),
+                Box::new(Diurnal),
+            ],
+        }
+    }
+
+    /// The process-wide registry instance.
+    pub fn global() -> &'static Registry {
+        static REG: OnceLock<Registry> = OnceLock::new();
+        REG.get_or_init(Registry::standard)
+    }
+
+    pub fn names(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|e| e.name()).collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &dyn Scenario> {
+        self.entries.iter().map(|e| e.as_ref())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&dyn Scenario, String> {
+        self.entries
+            .iter()
+            .find(|e| e.name() == name)
+            .map(|e| e.as_ref())
+            .ok_or_else(|| {
+                format!(
+                    "unknown scenario '{name}' (valid scenarios: {})",
+                    self.names().join(", ")
+                )
+            })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Entries
+// ---------------------------------------------------------------------------
+
+struct Scenario1;
+
+const SCENARIO1_SCHEMA: &[ParamSpec] = &[
+    p_f64("duration_s", 300.0, "workload window (seconds)"),
+    p_u64("burst", 6, "short jobs per frequent-user burst"),
+    p_f64("poisson_gap_s", 40.0, "mean submission gap of infrequent users"),
+];
+
+impl Scenario for Scenario1 {
+    fn name(&self) -> &'static str {
+        "scenario1"
+    }
+    fn doc(&self) -> &'static str {
+        "§5.2.1 micro: 2 infrequent Poisson users + 2 frequent burst users"
+    }
+    fn schema(&self) -> &'static [ParamSpec] {
+        SCENARIO1_SCHEMA
+    }
+    fn quick_overrides(&self) -> &'static [(&'static str, &'static str)] {
+        &[("duration_s", "90"), ("burst", "3")]
+    }
+    fn build(&self, seed: u64, p: &Params) -> Result<ScenarioInstance, String> {
+        let gap = p.f64("poisson_gap_s");
+        if gap <= 0.0 || p.f64("duration_s") <= 0.0 {
+            return Err("scenario1: duration_s and poisson_gap_s must be positive".into());
+        }
+        Ok(ScenarioInstance {
+            name: "scenario1",
+            stream: Box::new(scenarios::scenario1(
+                seed,
+                p.f64("duration_s"),
+                p.usize("burst")?,
+                gap,
+            )),
+            user_class: scenarios::scenario1_classes(),
+        })
+    }
+}
+
+struct Scenario2;
+
+const SCENARIO2_SCHEMA: &[ParamSpec] = &[
+    p_u64("jobs_per_user", 20, "tiny jobs each of the 4 users submits at once"),
+    p_f64("stagger_s", 5.0, "per-user start delay"),
+];
+
+impl Scenario for Scenario2 {
+    fn name(&self) -> &'static str {
+        "scenario2"
+    }
+    fn doc(&self) -> &'static str {
+        "§5.2.1 micro: 4 frequent users flood tiny jobs, staggered starts"
+    }
+    fn schema(&self) -> &'static [ParamSpec] {
+        SCENARIO2_SCHEMA
+    }
+    fn quick_overrides(&self) -> &'static [(&'static str, &'static str)] {
+        &[("jobs_per_user", "6")]
+    }
+    fn build(&self, seed: u64, p: &Params) -> Result<ScenarioInstance, String> {
+        Ok(ScenarioInstance {
+            name: "scenario2",
+            stream: Box::new(scenarios::scenario2(
+                seed,
+                p.usize("jobs_per_user")?,
+                p.f64("stagger_s"),
+            )),
+            user_class: scenarios::scenario2_classes(),
+        })
+    }
+}
+
+struct Gtrace;
+
+const GTRACE_SCHEMA: &[ParamSpec] = &[
+    p_f64("window_s", 500.0, "trace window (seconds)"),
+    p_u64("users", 25, "total users"),
+    p_u64("heavy_users", 5, "users submitting most of the work"),
+    p_f64("heavy_work_fraction", 0.92, "fraction of work from heavy users"),
+    p_f64("target_utilization", 1.05, "work / (cores × window)"),
+    p_u64("cores", 32, "cluster size the workload is shaped for"),
+    p_f64("skew_fraction", 0.3, "fraction of stages with skewed cost"),
+    p_f64("filter_median_mult", 10.0, "§5.3 runtime filter (× median)"),
+];
+
+impl Scenario for Gtrace {
+    fn name(&self) -> &'static str {
+        "gtrace"
+    }
+    fn doc(&self) -> &'static str {
+        "§5.3 macro: Google-trace-shaped, 5 heavy users >90% of work"
+    }
+    fn schema(&self) -> &'static [ParamSpec] {
+        GTRACE_SCHEMA
+    }
+    fn quick_overrides(&self) -> &'static [(&'static str, &'static str)] {
+        &[("window_s", "120"), ("users", "10"), ("heavy_users", "3"), ("cores", "8")]
+    }
+    fn build(&self, seed: u64, p: &Params) -> Result<ScenarioInstance, String> {
+        let gp = GtraceParams {
+            window_s: p.f64("window_s"),
+            users: p.u32("users")?,
+            heavy_users: p.u32("heavy_users")?,
+            heavy_work_fraction: p.f64("heavy_work_fraction"),
+            target_utilization: p.f64("target_utilization"),
+            cores: p.u32("cores")?,
+            skew_fraction: p.f64("skew_fraction"),
+            filter_median_mult: p.f64("filter_median_mult"),
+        };
+        if gp.heavy_users == 0 || gp.heavy_users >= gp.users {
+            return Err(format!(
+                "gtrace: need 1 <= heavy_users < users (got {} / {})",
+                gp.heavy_users, gp.users
+            ));
+        }
+        if !(gp.heavy_work_fraction > 0.0 && gp.heavy_work_fraction < 1.0) {
+            return Err("gtrace: heavy_work_fraction must be in (0, 1)".into());
+        }
+        let s = gtrace::gtrace(seed, &gp);
+        let user_class = s.user_class.clone();
+        Ok(ScenarioInstance {
+            name: "gtrace",
+            stream: Box::new(s),
+            user_class,
+        })
+    }
+}
+
+struct Tracefile;
+
+const TRACEFILE_SCHEMA: &[ParamSpec] = &[ParamSpec {
+    name: "path",
+    doc: "CSV trace file (job,user,arrival_s,slot_s,stages,heavy)",
+    default: ParamValue::Str(String::new()),
+}];
+
+impl Scenario for Tracefile {
+    fn name(&self) -> &'static str {
+        "tracefile"
+    }
+    fn doc(&self) -> &'static str {
+        "CSV trace loader — run a real WTA export (--param path=FILE)"
+    }
+    fn schema(&self) -> &'static [ParamSpec] {
+        TRACEFILE_SCHEMA
+    }
+    fn build(&self, _seed: u64, p: &Params) -> Result<ScenarioInstance, String> {
+        let path = p.str("path");
+        if path.is_empty() {
+            return Err("tracefile: requires --param path=FILE".into());
+        }
+        let w = tracefile::load_csv_file(path)?;
+        let user_class = w.user_class.clone();
+        Ok(ScenarioInstance {
+            name: "tracefile",
+            stream: Box::new(w.into_stream()),
+            user_class,
+        })
+    }
+}
+
+struct Scale;
+
+const SCALE_SCHEMA: &[ParamSpec] = &[
+    p_u64("users", 10_000, "Poisson users"),
+    p_u64("jobs", 1_000_000, "total jobs across all users"),
+    p_u64("cores", 64, "cluster size the window is shaped for"),
+    p_f64("target_utilization", 0.85, "offered load vs cluster capacity"),
+];
+
+impl Scenario for Scale {
+    fn name(&self) -> &'static str {
+        "scale"
+    }
+    fn doc(&self) -> &'static str {
+        "streaming million-job / 10k-user workload (`uwfq scale`)"
+    }
+    fn schema(&self) -> &'static [ParamSpec] {
+        SCALE_SCHEMA
+    }
+    fn quick_overrides(&self) -> &'static [(&'static str, &'static str)] {
+        &[("jobs", "50000"), ("users", "1000")]
+    }
+    fn build(&self, seed: u64, p: &Params) -> Result<ScenarioInstance, String> {
+        let params = ScaleParams {
+            users: p.u32("users")?,
+            jobs: p.u64("jobs"),
+            cores: p.u32("cores")?,
+            target_utilization: p.f64("target_utilization"),
+            seed,
+        };
+        validate_scale(&params)?;
+        Ok(ScenarioInstance {
+            name: "scale",
+            stream: Box::new(stream::scale_stream(&params)),
+            // The scale workload has no behaviour classes — every user
+            // draws from the same template mix.
+            user_class: HashMap::new(),
+        })
+    }
+}
+
+struct Bursty;
+
+const BURSTY_SCHEMA: &[ParamSpec] = &[
+    p_u64("users", 4, "on/off bursty users"),
+    p_u64("steady_users", 2, "steady background Poisson users"),
+    p_f64("duration_s", 300.0, "workload window (seconds)"),
+    p_f64("cycle_s", 60.0, "on/off cycle length"),
+    p_f64("burst_ratio", 0.1, "fraction of each cycle the users are ON"),
+    p_f64("rate", 2.0, "jobs/s per bursty user while ON"),
+    p_f64("steady_gap_s", 40.0, "mean gap of the steady users"),
+];
+
+impl Scenario for Bursty {
+    fn name(&self) -> &'static str {
+        "bursty"
+    }
+    fn doc(&self) -> &'static str {
+        "BoPF-style on/off users: synchronized bursts, tunable burst ratio"
+    }
+    fn schema(&self) -> &'static [ParamSpec] {
+        BURSTY_SCHEMA
+    }
+    fn quick_overrides(&self) -> &'static [(&'static str, &'static str)] {
+        &[("duration_s", "60"), ("cycle_s", "30")]
+    }
+    fn build(&self, seed: u64, p: &Params) -> Result<ScenarioInstance, String> {
+        let bp = BurstyParams {
+            users: p.u32("users")?,
+            steady_users: p.u32("steady_users")?,
+            duration_s: p.f64("duration_s"),
+            cycle_s: p.f64("cycle_s"),
+            burst_ratio: p.f64("burst_ratio"),
+            rate: p.f64("rate"),
+            steady_gap_s: p.f64("steady_gap_s"),
+        };
+        Ok(ScenarioInstance {
+            name: "bursty",
+            stream: Box::new(stress::bursty(seed, &bp)?),
+            user_class: stress::bursty_classes(&bp),
+        })
+    }
+}
+
+struct Heavytail;
+
+const HEAVYTAIL_SCHEMA: &[ParamSpec] = &[
+    p_u64("users", 8, "users"),
+    p_u64("jobs_per_user", 50, "jobs each user submits"),
+    p_f64("mean_gap_s", 5.0, "mean Poisson submission gap per user"),
+    p_f64("alpha", 1.5, "Pareto shape (smaller = heavier tail)"),
+    p_f64("min_slot", 2.0, "minimum job size (core-seconds)"),
+    p_f64("cap_slot", 3600.0, "job size cap (core-seconds)"),
+    p_f64("skew_fraction", 0.2, "fraction of stages with skewed cost"),
+];
+
+impl Scenario for Heavytail {
+    fn name(&self) -> &'static str {
+        "heavytail"
+    }
+    fn doc(&self) -> &'static str {
+        "Pareto job sizes with tunable alpha — elephants vs mice"
+    }
+    fn schema(&self) -> &'static [ParamSpec] {
+        HEAVYTAIL_SCHEMA
+    }
+    fn quick_overrides(&self) -> &'static [(&'static str, &'static str)] {
+        &[("users", "4"), ("jobs_per_user", "15")]
+    }
+    fn build(&self, seed: u64, p: &Params) -> Result<ScenarioInstance, String> {
+        let hp = HeavytailParams {
+            users: p.u32("users")?,
+            jobs_per_user: p.u32("jobs_per_user")?,
+            mean_gap_s: p.f64("mean_gap_s"),
+            alpha: p.f64("alpha"),
+            min_slot: p.f64("min_slot"),
+            cap_slot: p.f64("cap_slot"),
+            skew_fraction: p.f64("skew_fraction"),
+        };
+        Ok(ScenarioInstance {
+            name: "heavytail",
+            stream: Box::new(stress::heavytail(seed, &hp)?),
+            user_class: stress::heavytail_classes(&hp),
+        })
+    }
+}
+
+struct Diurnal;
+
+const DIURNAL_SCHEMA: &[ParamSpec] = &[
+    p_u64("users", 6, "users (shared sinusoid phase)"),
+    p_f64("duration_s", 600.0, "workload window (seconds)"),
+    p_f64("period_s", 240.0, "sinusoid period (one 'day')"),
+    p_f64("amplitude", 0.8, "rate swing in [0, 1)"),
+    p_f64("mean_rate", 0.05, "mean jobs/s per user over a period"),
+    p_f64("tiny_fraction", 0.7, "fraction of tiny (vs short) jobs"),
+];
+
+impl Scenario for Diurnal {
+    fn name(&self) -> &'static str {
+        "diurnal"
+    }
+    fn doc(&self) -> &'static str {
+        "sinusoidal-rate Poisson arrivals — trough-to-peak load swings"
+    }
+    fn schema(&self) -> &'static [ParamSpec] {
+        DIURNAL_SCHEMA
+    }
+    fn quick_overrides(&self) -> &'static [(&'static str, &'static str)] {
+        &[("duration_s", "240")]
+    }
+    fn build(&self, seed: u64, p: &Params) -> Result<ScenarioInstance, String> {
+        let dp = DiurnalParams {
+            users: p.u32("users")?,
+            duration_s: p.f64("duration_s"),
+            period_s: p.f64("period_s"),
+            amplitude: p.f64("amplitude"),
+            mean_rate: p.f64("mean_rate"),
+            tiny_fraction: p.f64("tiny_fraction"),
+        };
+        Ok(ScenarioInstance {
+            name: "diurnal",
+            stream: Box::new(stress::diurnal(seed, &dp)?),
+            user_class: stress::diurnal_classes(&dp),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_lists_all_entries() {
+        let names = Registry::global().names();
+        assert!(names.len() >= 7, "registry too small: {names:?}");
+        for expect in [
+            "scenario1",
+            "scenario2",
+            "gtrace",
+            "tracefile",
+            "scale",
+            "bursty",
+            "heavytail",
+            "diurnal",
+        ] {
+            assert!(names.contains(&expect), "missing '{expect}' in {names:?}");
+        }
+    }
+
+    #[test]
+    fn unknown_scenario_error_lists_names() {
+        let err = Registry::global().get("nope").unwrap_err();
+        assert!(err.contains("unknown scenario 'nope'"), "{err}");
+        assert!(err.contains("bursty") && err.contains("scenario1"), "{err}");
+    }
+
+    #[test]
+    fn params_layer_and_typecheck() {
+        let schema = SCENARIO1_SCHEMA;
+        // Defaults.
+        let p = Params::from_schema(schema, &[]).unwrap();
+        assert_eq!(p.f64("duration_s"), 300.0);
+        assert_eq!(p.usize("burst").unwrap(), 6);
+        // Later overrides win.
+        let ov = vec![
+            ("burst".to_string(), "3".to_string()),
+            ("burst".to_string(), "9".to_string()),
+        ];
+        assert_eq!(Params::from_schema(schema, &ov).unwrap().u64("burst"), 9);
+        // Type errors name the param.
+        let bad = vec![("burst".to_string(), "x".to_string())];
+        let err = Params::from_schema(schema, &bad).unwrap_err();
+        assert!(err.contains("param 'burst'") && err.contains("int"), "{err}");
+        // Unknown params list the valid ones.
+        let unk = vec![("bogus".to_string(), "1".to_string())];
+        let err = Params::from_schema(schema, &unk).unwrap_err();
+        assert!(err.contains("unknown param 'bogus'"), "{err}");
+        assert!(err.contains("duration_s"), "{err}");
+        // Non-finite floats are rejected at parse time (a NaN duration
+        // would make on/off generators spin forever).
+        for bad in ["nan", "inf", "-inf"] {
+            let ov = vec![("duration_s".to_string(), bad.to_string())];
+            let err = Params::from_schema(schema, &ov).unwrap_err();
+            assert!(err.contains("finite"), "{bad}: {err}");
+        }
+        // Narrowing accessors reject out-of-range values as user errors.
+        let ov = vec![("burst".to_string(), "4294967297".to_string())];
+        let p = Params::from_schema(schema, &ov).unwrap();
+        assert!(p.u32("burst").unwrap_err().contains("out of range"));
+    }
+
+    #[test]
+    fn scale_params_resolve_through_the_schema() {
+        // The scale harness's sizes come from the registry schema — one
+        // source of truth for defaults and overrides.
+        let p = scale_params(&ScenarioSpec::new("scale"), 7).unwrap();
+        assert_eq!((p.jobs, p.users, p.cores), (1_000_000, 10_000, 64));
+        assert_eq!(p.seed, 7);
+        let q = scale_params(
+            &ScenarioSpec::new("scale").with("jobs", "500").with("users", "5"),
+            1,
+        )
+        .unwrap();
+        assert_eq!((q.jobs, q.users), (500, 5));
+        assert!(scale_params(&ScenarioSpec::new("bursty"), 1).is_err());
+    }
+
+    #[test]
+    fn every_quick_override_is_schema_valid() {
+        // Registration-rot guard: each entry's quick overrides must parse
+        // against its own schema.
+        for sc in Registry::global().iter() {
+            let ov: Vec<(String, String)> = sc
+                .quick_overrides()
+                .iter()
+                .map(|&(k, v)| (k.to_string(), v.to_string()))
+                .collect();
+            Params::from_schema(sc.schema(), &ov)
+                .unwrap_or_else(|e| panic!("{}: bad quick overrides: {e}", sc.name()));
+        }
+    }
+
+    #[test]
+    fn spec_builds_and_collects() {
+        let w = ScenarioSpec::new("bursty")
+            .with("duration_s", "60")
+            .with("users", "2")
+            .workload(7)
+            .unwrap();
+        assert_eq!(w.name, "bursty");
+        assert!(!w.jobs.is_empty());
+        assert!(!w.user_class.is_empty());
+        // Invalid *values* surface the scenario's own validation.
+        let err = ScenarioSpec::new("bursty")
+            .with("burst_ratio", "2.0")
+            .build(7)
+            .unwrap_err();
+        assert!(err.contains("burst_ratio"), "{err}");
+    }
+
+    #[test]
+    fn tracefile_requires_path() {
+        let err = ScenarioSpec::new("tracefile").build(1).unwrap_err();
+        assert!(err.contains("path"), "{err}");
+    }
+
+    #[test]
+    fn collect_matches_direct_stream() {
+        // The adapter adds nothing: collecting == materializing the
+        // stream the same constructor returns.
+        let spec = ScenarioSpec::new("heavytail")
+            .with("users", "3")
+            .with("jobs_per_user", "10");
+        let collected = spec.workload(11).unwrap();
+        let streamed = materialize(spec.build(11).unwrap().stream);
+        assert_eq!(collected.jobs.len(), streamed.len());
+        for (a, b) in collected.jobs.iter().zip(&streamed) {
+            assert_eq!((a.user, a.arrival, &a.name), (b.user, b.arrival, &b.name));
+        }
+    }
+}

@@ -5,12 +5,18 @@
 //! response times of ≈0.90 s and ≈2.25 s respectively; each analytics job
 //! is a 3-phase load → compute → collect chain over its own copy of the
 //! dataset.
+//!
+//! Each scenario is defined **once**, as a lazy [`JobStream`] constructor
+//! (per-user generators k-way merged in arrival order); the materialized
+//! `Workload` form is the registry's generic collect adapter
+//! ([`crate::workload::registry`], entries `scenario1` / `scenario2`).
 
 use super::stream::{from_fn, JobStream, MergeStream};
-use super::{UserClass, Workload, DATASET_BYTES, SHORT_COMPUTE_SLOT, TINY_COMPUTE_SLOT};
+use super::{UserClass, DATASET_BYTES, SHORT_COMPUTE_SLOT, TINY_COMPUTE_SLOT};
 use crate::core::job::{CostProfile, JobSpec};
 use crate::s_to_us;
 use crate::util::Rng;
+use crate::UserId;
 use std::collections::HashMap;
 
 /// Make one micro-benchmark job. `kind` ∈ {"tiny", "short"}.
@@ -23,65 +29,22 @@ pub fn micro_job(user: u32, kind: &str, arrival_s: f64, skew: Option<CostProfile
     JobSpec::three_phase(user, kind, s_to_us(arrival_s), slot, DATASET_BYTES, opcount, skew)
 }
 
-/// **Scenario 1 — infrequent and frequent users** (§5.2.1).
+/// **Scenario 1 — infrequent and frequent users** (§5.2.1), as a lazy
+/// stream of per-user generators merged in arrival order.
 ///
 /// Users 1–2 are *infrequent*: Poisson job submissions (mean gap
 /// `poisson_gap_s`), 70 % tiny / 30 % short. Users 3–4 are *frequent*:
 /// every 30 s each submits a burst of `burst` short jobs, which together
 /// oversubscribe the 32-core cluster and build a backlog.
-pub fn scenario1(seed: u64, duration_s: f64, burst: usize, poisson_gap_s: f64) -> Workload {
-    let mut rng = Rng::new(seed);
-    let mut jobs = Vec::new();
-    let mut user_class = HashMap::new();
-
-    // Infrequent users (Poisson arrivals, like the paper).
-    for user in 1..=2u32 {
-        user_class.insert(user, UserClass::Infrequent);
-        let mut r = rng.fork(user as u64);
-        let mut t = r.exp(1.0 / poisson_gap_s);
-        while t < duration_s {
-            let kind = if r.f64() < 0.7 { "tiny" } else { "short" };
-            jobs.push(micro_job(user, kind, t, None));
-            t += r.exp(1.0 / poisson_gap_s);
-        }
-    }
-
-    // Frequent users (synchronized 30 s burst cycles; tiny start offsets
-    // keep arrival order deterministic but overlapping, as in §5.2.1).
-    for user in 3..=4u32 {
-        user_class.insert(user, UserClass::Frequent);
-        let offset = (user - 3) as f64 * 0.050;
-        let mut cycle = 0.0;
-        while cycle < duration_s {
-            for b in 0..burst {
-                jobs.push(micro_job(user, "short", cycle + offset + b as f64 * 0.010, None));
-            }
-            cycle += 30.0;
-        }
-    }
-
-    Workload {
-        name: "scenario1".into(),
-        jobs,
-        user_class,
-    }
-}
-
-/// Scenario 1 with the paper's defaults: 300 s, bursts of 6 short jobs,
-/// infrequent users averaging one job per 40 s.
-pub fn scenario1_default(seed: u64) -> Workload {
-    scenario1(seed, 300.0, 6, 40.0)
-}
-
-/// **Scenario 1 as a lazy stream** — per-user generators (same seeded RNG
-/// forks, same arithmetic as [`scenario1`]) k-way merged in arrival
-/// order. Simulating this stream is byte-identical to simulating the
-/// materialized workload: user streams are indexed in construction order
-/// (users 1–4), so merge ties reproduce the stable sort's tie-break.
-pub fn scenario1_stream(seed: u64, duration_s: f64, burst: usize, poisson_gap_s: f64) -> MergeStream {
+///
+/// User streams are indexed in construction order (users 1–4), so merge
+/// ties reproduce a stable sort-by-arrival of the per-user timelines —
+/// the exact order the simulator replays.
+pub fn scenario1(seed: u64, duration_s: f64, burst: usize, poisson_gap_s: f64) -> MergeStream {
     let mut rng = Rng::new(seed);
     let mut streams: Vec<Box<dyn JobStream + Send>> = Vec::new();
 
+    // Infrequent users (Poisson arrivals, like the paper).
     for user in 1..=2u32 {
         let mut r = rng.fork(user as u64);
         let mut t = r.exp(1.0 / poisson_gap_s);
@@ -96,6 +59,8 @@ pub fn scenario1_stream(seed: u64, duration_s: f64, burst: usize, poisson_gap_s:
         })));
     }
 
+    // Frequent users (synchronized 30 s burst cycles; tiny start offsets
+    // keep arrival order deterministic but overlapping, as in §5.2.1).
     for user in 3..=4u32 {
         let offset = (user - 3) as f64 * 0.050;
         let mut cycle = 0.0;
@@ -117,46 +82,26 @@ pub fn scenario1_stream(seed: u64, duration_s: f64, burst: usize, poisson_gap_s:
     MergeStream::new(streams)
 }
 
-/// [`scenario1_stream`] with the paper's defaults.
-pub fn scenario1_default_stream(seed: u64) -> MergeStream {
-    scenario1_stream(seed, 300.0, 6, 40.0)
+/// Scenario 1's fixed user classification: users 1–2 infrequent, 3–4
+/// frequent (known before any job yields — O(users) like the stream).
+pub fn scenario1_classes() -> HashMap<UserId, UserClass> {
+    [
+        (1, UserClass::Infrequent),
+        (2, UserClass::Infrequent),
+        (3, UserClass::Frequent),
+        (4, UserClass::Frequent),
+    ]
+    .into_iter()
+    .collect()
 }
 
-/// **Scenario 2 — multiple frequent users** (§5.2.1).
+/// **Scenario 2 — multiple frequent users** (§5.2.1), as a lazy stream.
 ///
 /// Four users each submit `jobs_per_user` tiny jobs at once, with
 /// deterministic per-user start delays (`stagger_s` apart) so the user
-/// arrival order is consistent across runs.
-pub fn scenario2(seed: u64, jobs_per_user: usize, stagger_s: f64) -> Workload {
-    let _ = seed; // fully deterministic; seed kept for API symmetry
-    let mut jobs = Vec::new();
-    let mut user_class = HashMap::new();
-    for user in 1..=4u32 {
-        user_class.insert(user, UserClass::Frequent);
-        let start = (user - 1) as f64 * stagger_s;
-        for b in 0..jobs_per_user {
-            // sub-ms stagger within the burst keeps submission order
-            // deterministic without affecting the scenario.
-            jobs.push(micro_job(user, "tiny", start + b as f64 * 0.001, None));
-        }
-    }
-    Workload {
-        name: "scenario2".into(),
-        jobs,
-        user_class,
-    }
-}
-
-/// Scenario 2 with the paper-scale burst: 20 tiny jobs/user (≈60 s of
-/// work on 32 cores), users staggered 5 s apart.
-pub fn scenario2_default(seed: u64) -> Workload {
-    scenario2(seed, 20, 5.0)
-}
-
-/// **Scenario 2 as a lazy stream** — fully deterministic per-user
-/// generators merged in arrival order (byte-identical to the
-/// materialized [`scenario2`] under simulation).
-pub fn scenario2_stream(seed: u64, jobs_per_user: usize, stagger_s: f64) -> MergeStream {
+/// arrival order is consistent across runs. Fully deterministic; `seed`
+/// is kept for constructor symmetry.
+pub fn scenario2(seed: u64, jobs_per_user: usize, stagger_s: f64) -> MergeStream {
     let _ = seed; // fully deterministic; seed kept for API symmetry
     let streams: Vec<Box<dyn JobStream + Send>> = (1..=4u32)
         .map(|user| {
@@ -166,6 +111,8 @@ pub fn scenario2_stream(seed: u64, jobs_per_user: usize, stagger_s: f64) -> Merg
                 if b >= jobs_per_user {
                     return None;
                 }
+                // sub-ms stagger within the burst keeps submission order
+                // deterministic without affecting the scenario.
                 let job = micro_job(user, "tiny", start + b as f64 * 0.001, None);
                 b += 1;
                 Some(job)
@@ -175,13 +122,22 @@ pub fn scenario2_stream(seed: u64, jobs_per_user: usize, stagger_s: f64) -> Merg
     MergeStream::new(streams)
 }
 
+/// Scenario 2's fixed user classification: all four users frequent.
+pub fn scenario2_classes() -> HashMap<UserId, UserClass> {
+    (1..=4).map(|u| (u, UserClass::Frequent)).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::workload::registry::builtin_workload;
+    use crate::workload::stream::materialize;
+    use crate::workload::Workload;
 
     #[test]
     fn scenario1_shape() {
-        let w = scenario1_default(42);
+        // The registry's collect adapter over the paper-default stream.
+        let w = builtin_workload("scenario1", 42);
         // 2 infrequent + 2 frequent users.
         assert_eq!(w.users().len(), 4);
         let freq: Vec<_> = w
@@ -206,22 +162,28 @@ mod tests {
 
     #[test]
     fn scenario1_deterministic_per_seed() {
-        let a = scenario1_default(7);
-        let b = scenario1_default(7);
-        let c = scenario1_default(8);
-        let key = |w: &Workload| {
-            w.jobs
+        let key = |seed: u64| {
+            materialize(scenario1(seed, 300.0, 6, 40.0))
                 .iter()
                 .map(|j| (j.user, j.arrival, j.name.clone()))
                 .collect::<Vec<_>>()
         };
-        assert_eq!(key(&a), key(&b));
-        assert_ne!(key(&a), key(&c));
+        assert_eq!(key(7), key(7));
+        assert_ne!(key(7), key(8));
+    }
+
+    #[test]
+    fn scenario1_yields_sorted_arrivals() {
+        let jobs = materialize(scenario1(7, 120.0, 3, 30.0));
+        assert!(jobs.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        for j in &jobs {
+            j.validate().unwrap();
+        }
     }
 
     #[test]
     fn scenario2_shape() {
-        let w = scenario2_default(1);
+        let w: Workload = builtin_workload("scenario2", 1);
         assert_eq!(w.jobs.len(), 80);
         assert_eq!(w.users().len(), 4);
         // Start delays order the users.
@@ -237,27 +199,6 @@ mod tests {
         assert!(first_arrival(3) < first_arrival(4));
         // All tiny.
         assert!(w.jobs.iter().all(|j| &*j.name == "tiny"));
-    }
-
-    #[test]
-    fn scenario_streams_match_materialized_sorted_order() {
-        // The streamed scenarios must yield exactly the jobs of the
-        // materialized builders, in the stable sort-by-arrival order the
-        // simulator replays — job-level parity here, schedule-level
-        // parity in tests/stream_differential.rs.
-        use crate::workload::stream::materialize;
-        let key = |jobs: &[JobSpec]| -> Vec<(u32, crate::TimeUs, String)> {
-            jobs.iter()
-                .map(|j| (j.user, j.arrival, j.name.to_string()))
-                .collect()
-        };
-        let mat1 = scenario1(7, 120.0, 3, 30.0).into_stream();
-        let streamed1 = materialize(scenario1_stream(7, 120.0, 3, 30.0));
-        assert_eq!(key(&materialize(mat1)), key(&streamed1));
-
-        let mat2 = scenario2(1, 5, 0.5).into_stream();
-        let streamed2 = materialize(scenario2_stream(1, 5, 0.5));
-        assert_eq!(key(&materialize(mat2)), key(&streamed2));
     }
 
     #[test]

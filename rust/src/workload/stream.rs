@@ -22,11 +22,12 @@
 //!   generators over a small set of interned job templates, k-way merged.
 //!   Resident state is O(users), independent of total job count.
 //!
-//! The paper scenarios have streaming twins too —
-//! [`super::scenarios::scenario1_stream`],
-//! [`super::scenarios::scenario2_stream`] and
-//! [`super::gtrace::gtrace_stream`] — each differentially tested to be
-//! byte-identical to its materialized form (`tests/stream_differential`).
+//! Every workload in the repo is *defined* as a stream and registered in
+//! [`super::registry`]; the materialized [`super::Workload`] form is the
+//! registry's generic `collect()` adapter over the stream. The generic
+//! differential test (`tests/stream_differential`) asserts, for every
+//! registry entry, that simulating the stream is byte-identical to
+//! simulating its collected form across all five policies.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -46,6 +47,19 @@ pub trait JobStream {
     /// Jobs still to come, when known (sizing hints only).
     fn size_hint(&self) -> Option<usize> {
         None
+    }
+}
+
+/// Boxed streams are streams too — what lets the scenario registry hand
+/// out `Box<dyn JobStream + Send>` that plugs into every generic driver
+/// (`materialize`, `simulate_stream`, `MergeStream` sources).
+impl JobStream for Box<dyn JobStream + Send> {
+    fn next_job(&mut self) -> Option<JobSpec> {
+        (**self).next_job()
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        (**self).size_hint()
     }
 }
 

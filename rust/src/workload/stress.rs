@@ -1,0 +1,440 @@
+//! Stress scenarios beyond the paper's evaluation — pure registry
+//! entries (`bursty`, `heavytail`, `diurnal`) that exist to probe where
+//! fair schedulers actually break:
+//!
+//! * [`bursty`] — BoPF-style on/off users (Le et al., *BoPF: Mitigating
+//!   the Burstiness-Fairness Tradeoff in Multi-Resource Clusters*):
+//!   synchronized burst windows with a configurable burst ratio, over a
+//!   background of steady Poisson users.
+//! * [`heavytail`] — Pareto job sizes with tunable shape `alpha`; the
+//!   smaller `alpha`, the more a handful of elephants dominates, which is
+//!   where size-oblivious fairness policies starve small jobs.
+//! * [`diurnal`] — sinusoidal-rate Poisson arrivals (thinning method):
+//!   the load swings between trough and peak every period, exercising
+//!   schedulers across utilization regimes inside a single run.
+//!
+//! Each is defined once as per-user lazy generators k-way merged in
+//! arrival order ([`MergeStream`]) — O(users) resident state — and is
+//! immediately sweepable across every policy × partitioner through the
+//! registry with zero bench-layer code.
+
+use super::gtrace::trace_job;
+use super::scenarios::micro_job;
+use super::stream::{from_fn, JobStream, MergeStream};
+use super::UserClass;
+use crate::util::Rng;
+use crate::UserId;
+use std::collections::HashMap;
+
+// ---------------------------------------------------------------------------
+// bursty — on/off users with a configurable burst ratio
+// ---------------------------------------------------------------------------
+
+/// Parameters of the [`bursty`] scenario.
+#[derive(Clone, Debug)]
+pub struct BurstyParams {
+    /// On/off (bursty) users; class `Frequent`.
+    pub users: u32,
+    /// Steady background Poisson users; class `Infrequent`.
+    pub steady_users: u32,
+    pub duration_s: f64,
+    /// On/off cycle length.
+    pub cycle_s: f64,
+    /// Fraction of each cycle the bursty users are ON, in (0, 1].
+    pub burst_ratio: f64,
+    /// Poisson submission rate (jobs/s per user) while ON.
+    pub rate: f64,
+    /// Mean submission gap of the steady users (seconds).
+    pub steady_gap_s: f64,
+}
+
+impl Default for BurstyParams {
+    fn default() -> Self {
+        BurstyParams {
+            users: 4,
+            steady_users: 2,
+            duration_s: 300.0,
+            cycle_s: 60.0,
+            burst_ratio: 0.1,
+            rate: 2.0,
+            steady_gap_s: 40.0,
+        }
+    }
+}
+
+/// **Bursty** — `users` on/off users submit short jobs at `rate` jobs/s
+/// during the first `burst_ratio` of every `cycle_s` window (bursts are
+/// synchronized across users, the adversarial case for fair queuing),
+/// while `steady_users` background users trickle tiny jobs the whole
+/// time.
+pub fn bursty(seed: u64, p: &BurstyParams) -> Result<MergeStream, String> {
+    if p.users == 0 {
+        return Err("bursty: users must be >= 1".into());
+    }
+    if !(p.burst_ratio > 0.0 && p.burst_ratio <= 1.0) {
+        return Err(format!("bursty: burst_ratio {} outside (0, 1]", p.burst_ratio));
+    }
+    if p.cycle_s <= 0.0 || p.rate <= 0.0 || p.steady_gap_s <= 0.0 || p.duration_s <= 0.0 {
+        return Err(
+            "bursty: duration_s, cycle_s, rate and steady_gap_s must be positive".into(),
+        );
+    }
+    let mut rng = Rng::new(seed);
+    let mut streams: Vec<Box<dyn JobStream + Send>> = Vec::new();
+
+    let on_len = p.cycle_s * p.burst_ratio;
+    for user in 1..=p.users {
+        let mut r = rng.fork(user as u64);
+        let (duration_s, cycle_s) = (p.duration_s, p.cycle_s);
+        let rate = p.rate;
+        let mut cycle_start = 0.0;
+        let mut t = r.exp(rate);
+        streams.push(Box::new(from_fn(move || loop {
+            if cycle_start >= duration_s {
+                return None;
+            }
+            // Yield only inside the ON window; arrivals that overshoot it
+            // are discarded and the generator jumps to the next cycle, so
+            // yields are strictly nondecreasing (on_len <= cycle_s).
+            if t < cycle_start + on_len && t < duration_s {
+                let job = micro_job(user, "short", t, None);
+                t += r.exp(rate);
+                return Some(job);
+            }
+            cycle_start += cycle_s;
+            t = cycle_start + r.exp(rate);
+        })));
+    }
+
+    for i in 0..p.steady_users {
+        let user = p.users + 1 + i;
+        let mut r = rng.fork(0x57EAD ^ user as u64);
+        let (duration_s, gap) = (p.duration_s, p.steady_gap_s);
+        let mut t = r.exp(1.0 / gap);
+        streams.push(Box::new(from_fn(move || {
+            if t >= duration_s {
+                return None;
+            }
+            let job = micro_job(user, "tiny", t, None);
+            t += r.exp(1.0 / gap);
+            Some(job)
+        })));
+    }
+
+    Ok(MergeStream::new(streams))
+}
+
+/// [`bursty`]'s user classification: bursty users `Frequent`, steady
+/// background users `Infrequent`.
+pub fn bursty_classes(p: &BurstyParams) -> HashMap<UserId, UserClass> {
+    let mut m = HashMap::new();
+    for u in 1..=p.users {
+        m.insert(u, UserClass::Frequent);
+    }
+    for i in 0..p.steady_users {
+        m.insert(p.users + 1 + i, UserClass::Infrequent);
+    }
+    m
+}
+
+// ---------------------------------------------------------------------------
+// heavytail — Pareto job sizes, tunable alpha
+// ---------------------------------------------------------------------------
+
+/// Parameters of the [`heavytail`] scenario.
+#[derive(Clone, Debug)]
+pub struct HeavytailParams {
+    pub users: u32,
+    pub jobs_per_user: u32,
+    /// Mean Poisson submission gap per user (seconds).
+    pub mean_gap_s: f64,
+    /// Pareto shape; smaller = heavier tail (alpha <= 1 has infinite
+    /// mean, hence the cap).
+    pub alpha: f64,
+    /// Pareto scale — the minimum job size (core-seconds).
+    pub min_slot: f64,
+    /// Size cap (core-seconds), so pathological draws stay simulable.
+    pub cap_slot: f64,
+    /// Fraction of stages given a skewed cost profile (as in gtrace).
+    pub skew_fraction: f64,
+}
+
+impl Default for HeavytailParams {
+    fn default() -> Self {
+        HeavytailParams {
+            users: 8,
+            jobs_per_user: 50,
+            mean_gap_s: 5.0,
+            alpha: 1.5,
+            min_slot: 2.0,
+            cap_slot: 3600.0,
+            skew_fraction: 0.2,
+        }
+    }
+}
+
+/// **Heavytail** — every user submits Poisson-spaced jobs whose sizes are
+/// Pareto(`alpha`, `min_slot`) core-seconds (capped at `cap_slot`). Jobs
+/// reuse the gtrace stage-chain shape (1–3 linear stages, size-scaled
+/// inputs), so the partitioners see the same structure the paper's macro
+/// workload has — only the size law changes.
+pub fn heavytail(seed: u64, p: &HeavytailParams) -> Result<MergeStream, String> {
+    if p.users == 0 {
+        return Err("heavytail: users must be >= 1".into());
+    }
+    if p.alpha <= 0.0 || p.min_slot <= 0.0 || p.mean_gap_s <= 0.0 {
+        return Err("heavytail: alpha, min_slot and mean_gap_s must be positive".into());
+    }
+    if p.cap_slot < p.min_slot {
+        return Err(format!(
+            "heavytail: cap_slot {} below min_slot {}",
+            p.cap_slot, p.min_slot
+        ));
+    }
+    let mut rng = Rng::new(seed);
+    let streams: Vec<Box<dyn JobStream + Send>> = (1..=p.users)
+        .map(|user| {
+            let mut r = rng.fork(user as u64);
+            let p = p.clone();
+            let mut t = r.exp(1.0 / p.mean_gap_s);
+            let mut i = 0u32;
+            Box::new(from_fn(move || {
+                if i >= p.jobs_per_user {
+                    return None;
+                }
+                let slot = r.pareto(p.alpha, p.min_slot).min(p.cap_slot);
+                let name = format!("ht{user}-{i}");
+                let job = trace_job(user, &name, t, slot, &mut r, p.skew_fraction);
+                t += r.exp(1.0 / p.mean_gap_s);
+                i += 1;
+                Some(job)
+            })) as Box<dyn JobStream + Send>
+        })
+        .collect();
+    Ok(MergeStream::new(streams))
+}
+
+/// [`heavytail`]'s classification: every user draws from the same
+/// heavy-tailed law, so all are `Heavy`.
+pub fn heavytail_classes(p: &HeavytailParams) -> HashMap<UserId, UserClass> {
+    (1..=p.users).map(|u| (u, UserClass::Heavy)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// diurnal — sinusoidal-rate Poisson arrivals
+// ---------------------------------------------------------------------------
+
+/// Parameters of the [`diurnal`] scenario.
+#[derive(Clone, Debug)]
+pub struct DiurnalParams {
+    pub users: u32,
+    pub duration_s: f64,
+    /// Sinusoid period (one "day").
+    pub period_s: f64,
+    /// Rate swing in [0, 1): rate(t) = mean_rate · (1 + amplitude·sin).
+    pub amplitude: f64,
+    /// Mean submission rate per user (jobs/s), averaged over a period.
+    pub mean_rate: f64,
+    /// Fraction of tiny (vs short) jobs.
+    pub tiny_fraction: f64,
+}
+
+impl Default for DiurnalParams {
+    fn default() -> Self {
+        DiurnalParams {
+            users: 6,
+            duration_s: 600.0,
+            period_s: 240.0,
+            amplitude: 0.8,
+            mean_rate: 0.05,
+            tiny_fraction: 0.7,
+        }
+    }
+}
+
+/// **Diurnal** — each user is a non-homogeneous Poisson process with rate
+/// `mean_rate · (1 + amplitude · sin(2π·t/period))`, sampled by the
+/// thinning method: propose at the peak rate, accept with probability
+/// `rate(t)/rate_max`. All users share the phase (everyone's day peaks
+/// together), so the cluster swings between near-idle troughs and
+/// oversubscribed peaks within one run.
+pub fn diurnal(seed: u64, p: &DiurnalParams) -> Result<MergeStream, String> {
+    if p.users == 0 {
+        return Err("diurnal: users must be >= 1".into());
+    }
+    if !(0.0..1.0).contains(&p.amplitude) {
+        return Err(format!("diurnal: amplitude {} outside [0, 1)", p.amplitude));
+    }
+    if p.mean_rate <= 0.0 || p.period_s <= 0.0 || p.duration_s <= 0.0 {
+        return Err("diurnal: duration_s, mean_rate and period_s must be positive".into());
+    }
+    if !(0.0..=1.0).contains(&p.tiny_fraction) {
+        return Err(format!("diurnal: tiny_fraction {} outside [0, 1]", p.tiny_fraction));
+    }
+    let rate_max = p.mean_rate * (1.0 + p.amplitude);
+    let mut rng = Rng::new(seed);
+    let streams: Vec<Box<dyn JobStream + Send>> = (1..=p.users)
+        .map(|user| {
+            let mut r = rng.fork(user as u64);
+            let p = p.clone();
+            let mut t = 0.0f64;
+            Box::new(from_fn(move || loop {
+                t += r.exp(rate_max);
+                if t >= p.duration_s {
+                    return None;
+                }
+                let phase = 2.0 * std::f64::consts::PI * t / p.period_s;
+                let rate = p.mean_rate * (1.0 + p.amplitude * phase.sin());
+                if r.f64() * rate_max < rate {
+                    let kind = if r.f64() < p.tiny_fraction { "tiny" } else { "short" };
+                    return Some(micro_job(user, kind, t, None));
+                }
+            })) as Box<dyn JobStream + Send>
+        })
+        .collect();
+    Ok(MergeStream::new(streams))
+}
+
+/// [`diurnal`]'s classification: every user submits around the clock —
+/// all `Frequent`.
+pub fn diurnal_classes(p: &DiurnalParams) -> HashMap<UserId, UserClass> {
+    (1..=p.users).map(|u| (u, UserClass::Frequent)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::stream::materialize;
+    use crate::TimeUs;
+
+    fn sorted_nondecreasing(jobs: &[crate::core::job::JobSpec]) -> bool {
+        jobs.windows(2).all(|w| w[0].arrival <= w[1].arrival)
+    }
+
+    #[test]
+    fn bursty_respects_windows() {
+        let p = BurstyParams {
+            users: 3,
+            steady_users: 1,
+            duration_s: 120.0,
+            cycle_s: 30.0,
+            burst_ratio: 0.2,
+            rate: 3.0,
+            steady_gap_s: 20.0,
+        };
+        let jobs = materialize(bursty(5, &p).unwrap());
+        assert!(!jobs.is_empty());
+        assert!(sorted_nondecreasing(&jobs));
+        let classes = bursty_classes(&p);
+        for j in &jobs {
+            j.validate().unwrap();
+            let arr = j.arrival as f64 / 1e6;
+            assert!(arr < p.duration_s);
+            if classes[&j.user] == UserClass::Frequent {
+                // Bursty submissions land inside an ON window.
+                let phase = arr % p.cycle_s;
+                assert!(
+                    phase <= p.cycle_s * p.burst_ratio + 1e-6,
+                    "user {} job at phase {phase}",
+                    j.user
+                );
+                assert_eq!(&*j.name, "short");
+            } else {
+                assert_eq!(&*j.name, "tiny");
+            }
+        }
+        // Both populations produced jobs.
+        assert!(jobs.iter().any(|j| classes[&j.user] == UserClass::Frequent));
+        assert!(jobs.iter().any(|j| classes[&j.user] == UserClass::Infrequent));
+    }
+
+    #[test]
+    fn bursty_rejects_bad_params() {
+        let mut p = BurstyParams::default();
+        p.burst_ratio = 0.0;
+        assert!(bursty(1, &p).is_err());
+        p = BurstyParams::default();
+        p.users = 0;
+        assert!(bursty(1, &p).is_err());
+    }
+
+    #[test]
+    fn heavytail_sizes_follow_pareto_bounds() {
+        let p = HeavytailParams {
+            users: 4,
+            jobs_per_user: 25,
+            mean_gap_s: 2.0,
+            alpha: 1.2,
+            min_slot: 3.0,
+            cap_slot: 500.0,
+            skew_fraction: 0.3,
+        };
+        let jobs = materialize(heavytail(9, &p).unwrap());
+        assert_eq!(jobs.len(), 100);
+        assert!(sorted_nondecreasing(&jobs));
+        let mut max = 0.0f64;
+        for j in &jobs {
+            j.validate().unwrap();
+            let slot = j.slot_time();
+            assert!(slot >= p.min_slot * 0.999, "slot {slot}");
+            assert!(slot <= p.cap_slot * 1.001, "slot {slot}");
+            max = max.max(slot);
+        }
+        // A heavy tail actually shows up.
+        assert!(max > 10.0 * p.min_slot, "max {max}");
+        assert_eq!(heavytail_classes(&p).len(), 4);
+    }
+
+    #[test]
+    fn heavytail_rejects_bad_params() {
+        let mut p = HeavytailParams::default();
+        p.cap_slot = 0.5; // below min_slot
+        assert!(heavytail(1, &p).is_err());
+        p = HeavytailParams::default();
+        p.alpha = 0.0;
+        assert!(heavytail(1, &p).is_err());
+    }
+
+    #[test]
+    fn diurnal_rate_swings_with_the_sinusoid() {
+        let p = DiurnalParams {
+            users: 20,
+            duration_s: 480.0,
+            period_s: 240.0,
+            amplitude: 0.9,
+            mean_rate: 0.2,
+            tiny_fraction: 0.7,
+        };
+        let jobs = materialize(diurnal(3, &p).unwrap());
+        assert!(sorted_nondecreasing(&jobs));
+        // Count arrivals in peak vs trough quarters of the sinusoid:
+        // sin > 0 on the first half of each period (peak), < 0 on the
+        // second (trough).
+        let (mut peak, mut trough) = (0u32, 0u32);
+        for j in &jobs {
+            let t = j.arrival as f64 / 1e6;
+            if (t % p.period_s) < p.period_s / 2.0 {
+                peak += 1;
+            } else {
+                trough += 1;
+            }
+        }
+        assert!(
+            peak as f64 > 1.5 * trough as f64,
+            "peak {peak} vs trough {trough}"
+        );
+        assert_eq!(diurnal_classes(&p).len(), 20);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let key = |seed: u64| -> Vec<(u32, TimeUs)> {
+            materialize(bursty(seed, &BurstyParams::default()).unwrap())
+                .iter()
+                .map(|j| (j.user, j.arrival))
+                .collect()
+        };
+        assert_eq!(key(4), key(4));
+        assert_ne!(key(4), key(5));
+    }
+}

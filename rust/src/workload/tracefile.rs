@@ -94,13 +94,6 @@ pub fn load_csv_file(path: &str) -> Result<Workload, String> {
     load_csv(&text)
 }
 
-/// Load a CSV trace as a [`crate::workload::JobStream`] (the materialized
-/// adapter: a parsed trace is already in memory, so streaming it costs
-/// nothing extra and lets trace files drive the streaming pipeline).
-pub fn stream_csv(text: &str) -> Result<super::stream::VecStream, String> {
-    load_csv(text).map(Workload::into_stream)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -136,8 +129,10 @@ g2,1,9.0,40.0,3,1
 
     #[test]
     fn stream_yields_sorted_sample() {
+        // The streamed form is `Workload::into_stream` (what the registry
+        // entry hands out): sorted by arrival.
         use crate::workload::stream::JobStream;
-        let mut s = stream_csv(SAMPLE).unwrap();
+        let mut s = load_csv(SAMPLE).unwrap().into_stream();
         assert_eq!(s.size_hint(), Some(3));
         let mut last = 0;
         while let Some(j) = s.next_job() {

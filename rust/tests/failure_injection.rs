@@ -9,14 +9,25 @@ use uwfq::partition::SchemeKind;
 use uwfq::sched::PolicyKind;
 use uwfq::sim;
 use uwfq::util::propkit;
-use uwfq::workload::scenarios;
+use uwfq::workload::{ScenarioSpec, Workload};
+
+/// Scaled-down scenario 1 via the registry (the only workload entry
+/// point since the twin-function refactor).
+fn small_scenario1(seed: u64, duration_s: f64, burst: u32, gap_s: f64) -> Workload {
+    ScenarioSpec::new("scenario1")
+        .with("duration_s", &duration_s.to_string())
+        .with("burst", &burst.to_string())
+        .with("poisson_gap_s", &gap_s.to_string())
+        .workload(seed)
+        .unwrap()
+}
 
 #[test]
 fn uwfq_robust_to_estimator_error() {
     // §6.4: virtual-time scheduling is robust to inaccurate runtime
     // predictions. With σ=0.5 lognormal error (≈ ±65% typical), mean RT
     // should degrade by at most ~50% vs the perfect oracle.
-    let w = scenarios::scenario1(7, 120.0, 4, 30.0);
+    let w = small_scenario1(7, 120.0, 4, 30.0);
     let mut exact = Config::default().with_policy(PolicyKind::Uwfq);
     exact.seed = 7;
     let mut noisy = exact.clone();
@@ -37,7 +48,11 @@ fn uwfq_robust_to_estimator_error() {
 fn runtime_partitioning_robust_to_estimator_error() {
     // Partition counts come from estimates; error changes granularity but
     // must not break completion or blow up response times.
-    let w = scenarios::scenario2(1, 8, 1.0);
+    let w = ScenarioSpec::new("scenario2")
+        .with("jobs_per_user", "8")
+        .with("stagger_s", "1.0")
+        .workload(1)
+        .unwrap();
     for sigma in [0.0, 0.3, 0.8] {
         let mut cfg = Config::default()
             .with_policy(PolicyKind::Uwfq)
@@ -53,7 +68,7 @@ fn runtime_partitioning_robust_to_estimator_error() {
 fn grace_period_extremes_are_safe() {
     // Zero grace (users always re-enter fresh) and huge grace (users are
     // always revived) must both complete every job.
-    let w = scenarios::scenario1(11, 90.0, 3, 20.0);
+    let w = small_scenario1(11, 90.0, 3, 20.0);
     for grace in [0.0, 2.0, 1e6] {
         let mut cfg = Config::default().with_policy(PolicyKind::Uwfq);
         cfg.grace_rsec = grace;
@@ -92,7 +107,10 @@ fn degenerate_workloads() {
 fn single_core_cluster() {
     let cfg = Config::default().with_cores(1);
     let jobs: Vec<JobSpec> = (0..5)
-        .map(|i| JobSpec::three_phase(1 + i % 2, &format!("j{i}"), i as u64 * 100_000, 0.5, 32 << 20, 4, None))
+        .map(|i| {
+            let arrival = i as u64 * 100_000;
+            JobSpec::three_phase(1 + i % 2, &format!("j{i}"), arrival, 0.5, 32 << 20, 4, None)
+        })
         .collect();
     for policy in PolicyKind::ALL {
         let rep = sim::simulate(cfg.clone().with_policy(policy), jobs.clone());

@@ -13,7 +13,7 @@
 use uwfq::bench::{figures, tables};
 use uwfq::config::Config;
 use uwfq::sweep::Sweep;
-use uwfq::workload::gtrace::{gtrace, GtraceParams};
+use uwfq::workload::ScenarioSpec;
 
 fn base() -> Config {
     Config::default() // 32 cores, paper testbed
@@ -84,11 +84,12 @@ fn scenario2_shape_claims() {
 fn macro_shape_claims() {
     // A reduced macro workload keeps this test fast while preserving the
     // heavy-user / ≥100% utilization structure.
-    let mut p = GtraceParams::default();
-    p.window_s = 150.0;
-    p.users = 12;
-    p.heavy_users = 3;
-    let w = gtrace(42, &p);
+    let w = ScenarioSpec::new("gtrace")
+        .with("window_s", "150")
+        .with("users", "12")
+        .with("heavy_users", "3")
+        .workload(42)
+        .unwrap();
     let t2 = tables::table2(&w, &base(), &Sweep::seq());
     let get = |label: &str| t2.rows.iter().find(|r| r.label == label).unwrap();
 

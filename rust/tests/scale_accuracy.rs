@@ -20,7 +20,7 @@ use uwfq::core::dag::CompletedJob;
 use uwfq::core::SchedCore;
 use uwfq::metrics::streaming::StreamingRunMetrics;
 use uwfq::sim::{self, CompletionSink};
-use uwfq::workload::gtrace::{gtrace_stream, GtraceParams};
+use uwfq::workload::gtrace::{gtrace, GtraceParams};
 use uwfq::workload::stream::ScaleParams;
 
 /// Tees each completion into the streaming sink while retaining the bare
@@ -42,19 +42,20 @@ impl CompletionSink for Tee {
 /// window, same §5.3 shaping pipeline (heavy-user rebalance, runtime
 /// filter, utilization rescale).
 fn big_gtrace_params() -> GtraceParams {
-    let mut p = GtraceParams::default();
-    p.window_s = 5_000.0;
-    p.users = 500;
-    p.heavy_users = 100;
-    p.cores = 64;
-    p
+    GtraceParams {
+        window_s: 5_000.0,
+        users: 500,
+        heavy_users: 100,
+        cores: 64,
+        ..GtraceParams::default()
+    }
 }
 
 #[test]
 #[cfg_attr(debug_assertions, ignore = "release-only: 50k-job simulation (CI scale-smoke)")]
 fn streaming_quantiles_within_tolerance_on_50k_gtrace() {
     let p = big_gtrace_params();
-    let stream = gtrace_stream(97, &p);
+    let stream = gtrace(97, &p);
     // gtrace names are per-job unique, so slowdowns are skipped (empty
     // idle map → slowdown 1.0); this test is about RT quantiles.
     let mut tee = Tee {
@@ -133,17 +134,19 @@ fn scale_harness_verifies_at_50k() {
 /// file: miniature versions of both paths.
 #[test]
 fn miniature_accuracy_smoke() {
-    let mut p = GtraceParams::default();
-    p.window_s = 60.0;
-    p.users = 6;
-    p.heavy_users = 2;
-    p.cores = 8;
+    let p = GtraceParams {
+        window_s: 60.0,
+        users: 6,
+        heavy_users: 2,
+        cores: 8,
+        ..GtraceParams::default()
+    };
     let mut tee = Tee {
         streaming: StreamingRunMetrics::new("mini", HashMap::new()),
         rts: Vec::new(),
     };
     let mut core = SchedCore::from_config(Config::default().with_cores(8));
-    sim::simulate_stream_into(&mut core, gtrace_stream(3, &p), &mut tee);
+    sim::simulate_stream_into(&mut core, gtrace(3, &p), &mut tee);
     assert!(!tee.rts.is_empty());
     // With few samples the P² estimate is exact or near-exact; just pin
     // basic sanity: quantiles ordered and inside the observed range.

@@ -1,19 +1,69 @@
-//! Streamed-vs-materialized differential test: every paper scenario,
-//! simulated from its lazy stream, must produce a **byte-identical**
-//! `SimReport` to the materialized path across all five policies —
-//! same jobs, same schedule (ties included), same makespan/utilization
-//! bits. Extends the `sweep_differential` discipline (parallel == and
-//! sequential grids) to the workload axis: lazy == materialized.
+//! Registry-wide differential property test: for **every** scenario in
+//! the registry (paper workloads, the scale workload, and the stress
+//! scenarios), the streamed and collected forms must be the *same
+//! workload* —
+//!
+//! 1. job-level parity: collecting the stream twice yields identical job
+//!    lists (stable arrival order, float fields compared by bit pattern);
+//! 2. schedule-level parity: simulating the stream produces a
+//!    **byte-identical** `SimReport` to simulating the collected job
+//!    vector, across **all five** policies.
+//!
+//! This replaces the per-scenario parity tests that existed when each
+//! workload had hand-wired materialized/streamed twin functions: since
+//! the registry defines each workload once (stream constructor + generic
+//! `collect()` adapter), the property is enforced generically, and any
+//! newly registered scenario is covered automatically.
 
 use uwfq::config::Config;
 use uwfq::sched::PolicyKind;
 use uwfq::sim::{self, SimReport};
-use uwfq::workload::gtrace::{gtrace, gtrace_stream, GtraceParams};
-use uwfq::workload::stream::{materialize, scale_stream, JobStream, ScaleParams, VecStream};
-use uwfq::workload::{scenarios, tracefile};
+use uwfq::workload::registry::Registry;
+use uwfq::workload::stream::materialize;
+use uwfq::workload::ScenarioSpec;
 
 fn cfg(policy: PolicyKind) -> Config {
     Config::default().with_cores(8).with_policy(policy)
+}
+
+/// Debug-test-fast shapes per scenario: each entry's own quick overrides
+/// plus extra shrinking for the ones whose quick shape is still large.
+/// Every registered scenario must appear in the sweep below — the test
+/// fails if a new registration is left uncovered.
+fn test_spec(name: &str) -> ScenarioSpec {
+    let sc = Registry::global().get(name).unwrap();
+    let mut spec = ScenarioSpec::new(name);
+    for &(k, v) in sc.quick_overrides() {
+        spec = spec.with(k, v);
+    }
+    match name {
+        "scenario1" => spec.with("burst", "3").with("poisson_gap_s", "25"),
+        "scenario2" => spec,
+        "gtrace" => spec.with("window_s", "90").with("users", "8").with("heavy_users", "2"),
+        "tracefile" => spec.with("path", &trace_fixture()),
+        "scale" => spec.with("users", "20").with("jobs", "300").with("cores", "8"),
+        "bursty" => spec.with("users", "3").with("rate", "1.5"),
+        "heavytail" => spec.with("users", "3").with("jobs_per_user", "12"),
+        "diurnal" => spec.with("users", "4").with("mean_rate", "0.1"),
+        other => panic!("scenario '{other}' has no test shape — add one here"),
+    }
+}
+
+/// A small CSV trace on disk for the `tracefile` entry.
+fn trace_fixture() -> String {
+    const SAMPLE: &str = "\
+job,user,arrival_s,slot_s,stages,heavy
+t0,1,0.0,40.0,2,1
+t1,2,1.5,6.0,1,0
+t2,1,2.0,25.0,3,1
+t3,3,2.0,4.0,1,0
+t4,2,8.0,10.0,2,0
+";
+    let dir = std::env::temp_dir().join(format!("uwfq_reg_diff_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.csv");
+    std::fs::write(&path, SAMPLE).unwrap();
+    path.to_str().unwrap().to_string()
 }
 
 /// Full byte-level fingerprint of a report: every completed-job field
@@ -38,88 +88,85 @@ fn fingerprint(rep: &SimReport) -> (Vec<(u64, u32, String, u64, u64, u64)>, u64,
     )
 }
 
-/// Assert stream == materialized for one workload across all policies.
-fn assert_differential<S, F>(tag: &str, jobs: Vec<uwfq::core::job::JobSpec>, mut mk_stream: F)
-where
-    S: JobStream,
-    F: FnMut() -> S,
-{
-    for policy in PolicyKind::ALL {
-        let mat = sim::simulate(cfg(policy), jobs.clone());
-        let streamed = sim::simulate_stream(cfg(policy), mk_stream());
-        assert_eq!(
-            fingerprint(&mat),
-            fingerprint(&streamed),
-            "{tag}: streamed run diverged from materialized under {}",
-            policy.name()
-        );
-        assert_eq!(mat.completed.len(), jobs.len(), "{tag}: lost jobs");
+#[test]
+fn every_scenario_streamed_equals_collected_across_all_policies() {
+    let seed = 13;
+    let names = Registry::global().names();
+    assert!(names.len() >= 7, "registry shrank: {names:?}");
+    for name in names {
+        let spec = test_spec(name);
+
+        // Job-level parity: two independent builds collect identically,
+        // with nondecreasing arrivals (the stream contract).
+        let collected = spec.workload(seed).unwrap();
+        let streamed_jobs = materialize(spec.build(seed).unwrap().stream);
+        assert_eq!(collected.jobs.len(), streamed_jobs.len(), "{name}: job count");
+        assert!(!collected.jobs.is_empty(), "{name}: empty test workload");
+        let mut last = 0;
+        for (a, b) in collected.jobs.iter().zip(&streamed_jobs) {
+            assert_eq!(a.user, b.user, "{name}");
+            assert_eq!(a.arrival, b.arrival, "{name}");
+            assert_eq!(a.name, b.name, "{name}");
+            assert_eq!(a.weight.to_bits(), b.weight.to_bits(), "{name}");
+            assert_eq!(a.stages.len(), b.stages.len(), "{name}");
+            for (sa, sb) in a.stages.iter().zip(&b.stages) {
+                assert_eq!(sa.slot_time.to_bits(), sb.slot_time.to_bits(), "{name}");
+                assert_eq!(sa.input_bytes, sb.input_bytes, "{name}");
+                assert_eq!(sa.opcount, sb.opcount, "{name}");
+                assert_eq!(sa.cost.regions(), sb.cost.regions(), "{name}");
+            }
+            assert!(a.arrival >= last, "{name}: arrivals regressed");
+            last = a.arrival;
+            a.validate().unwrap();
+        }
+
+        // Schedule-level parity: byte-identical SimReports, all policies.
+        for policy in PolicyKind::ALL {
+            let mat = sim::simulate(cfg(policy), collected.jobs.clone());
+            let streamed = sim::simulate_stream(cfg(policy), spec.build(seed).unwrap().stream);
+            assert_eq!(
+                fingerprint(&mat),
+                fingerprint(&streamed),
+                "{name}: streamed run diverged from collected under {}",
+                policy.name()
+            );
+            assert_eq!(mat.completed.len(), collected.jobs.len(), "{name}: lost jobs");
+        }
     }
 }
 
 #[test]
-fn scenario1_streamed_matches_materialized() {
-    // Scaled-down scenario 1 (Poisson infrequent users + frequent
-    // bursts) so the 5-policy matrix stays debug-test fast.
-    let w = scenarios::scenario1(7, 90.0, 3, 25.0);
-    assert_differential("scenario1", w.jobs, || {
-        scenarios::scenario1_stream(7, 90.0, 3, 25.0)
-    });
-}
-
-#[test]
-fn scenario2_streamed_matches_materialized() {
-    let w = scenarios::scenario2(1, 6, 0.5);
-    assert_differential("scenario2", w.jobs, || scenarios::scenario2_stream(1, 6, 0.5));
-}
-
-#[test]
-fn gtrace_streamed_matches_materialized() {
-    let mut p = GtraceParams::default();
-    p.window_s = 90.0;
-    p.users = 8;
-    p.heavy_users = 2;
-    p.cores = 8;
-    let w = gtrace(11, &p);
-    assert_differential("gtrace", w.jobs, || gtrace_stream(11, &p));
-}
-
-#[test]
-fn tracefile_streamed_matches_materialized() {
-    const SAMPLE: &str = "\
-job,user,arrival_s,slot_s,stages,heavy
-t0,1,0.0,40.0,2,1
-t1,2,1.5,6.0,1,0
-t2,1,2.0,25.0,3,1
-t3,3,2.0,4.0,1,0
-t4,2,8.0,10.0,2,0
-";
-    let w = tracefile::load_csv(SAMPLE).unwrap();
-    assert_differential("tracefile", w.jobs, || tracefile::stream_csv(SAMPLE).unwrap());
-}
-
-#[test]
-fn scale_workload_streamed_matches_materialized() {
-    // The scale generator itself: materializing the stream and replaying
-    // it through the exact path must match streaming it directly.
-    let params = ScaleParams {
-        users: 20,
-        jobs: 300,
-        cores: 8,
-        target_utilization: 0.8,
-        seed: 5,
-    };
-    let jobs = materialize(scale_stream(&params));
-    assert_eq!(jobs.len(), 300);
-    assert_differential("scale", jobs, || scale_stream(&params));
+fn user_classes_stable_across_builds() {
+    // The classification a scenario reports must be deterministic and
+    // cover every user that actually submits jobs (scale is the
+    // documented exception: no behaviour classes).
+    let seed = 5;
+    for name in Registry::global().names() {
+        let spec = test_spec(name);
+        let a = spec.build(seed).unwrap().user_class;
+        let w = spec.workload(seed).unwrap();
+        assert_eq!(a, w.user_class, "{name}: class map unstable");
+        if name != "scale" {
+            for j in &w.jobs {
+                assert!(
+                    w.user_class.contains_key(&j.user),
+                    "{name}: user {} unclassified",
+                    j.user
+                );
+            }
+        }
+    }
 }
 
 #[test]
 fn workload_adapter_roundtrip() {
     // Workload::into_stream is the thin materialized adapter: streaming
     // it is identical to handing the vector to `simulate`.
-    let w = scenarios::scenario2(1, 5, 0.5);
+    let w = test_spec("scenario2").workload(1).unwrap();
     let mat = sim::simulate(cfg(PolicyKind::Uwfq), w.jobs.clone());
-    let streamed = sim::simulate_stream(cfg(PolicyKind::Uwfq), VecStream::new(w.jobs));
+    let streamed = sim::simulate_stream(
+        cfg(PolicyKind::Uwfq),
+        uwfq::workload::stream::VecStream::new(w.jobs),
+    );
     assert_eq!(fingerprint(&mat), fingerprint(&streamed));
 }

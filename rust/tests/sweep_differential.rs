@@ -13,8 +13,7 @@ use std::path::PathBuf;
 use uwfq::bench::{figures, tables};
 use uwfq::config::Config;
 use uwfq::sweep::Sweep;
-use uwfq::workload::gtrace::{gtrace, GtraceParams};
-use uwfq::workload::Workload;
+use uwfq::workload::{ScenarioSpec, Workload};
 
 fn par_sweep() -> Sweep {
     let threads = std::env::var("UWFQ_SWEEP_THREADS")
@@ -31,12 +30,13 @@ fn base() -> Config {
 /// A scaled-down (but structurally complete) macro workload so the full
 /// 16-cell Table-2 + Fig-7 grid stays test-fast.
 fn macro_workload() -> Workload {
-    let mut p = GtraceParams::default();
-    p.window_s = 90.0;
-    p.users = 8;
-    p.heavy_users = 2;
-    p.cores = 8;
-    gtrace(11, &p)
+    ScenarioSpec::new("gtrace")
+        .with("window_s", "90")
+        .with("users", "8")
+        .with("heavy_users", "2")
+        .with("cores", "8")
+        .workload(11)
+        .unwrap()
 }
 
 fn tmp_dir(tag: &str) -> PathBuf {
