@@ -1,0 +1,79 @@
+//! Bench: the streaming trace-replay pipeline — write a synthetic trace
+//! with the seeded writer, replay it through the one-pass §5.3 shaper and
+//! the simulator, and emit throughput + resident-state counters to
+//! `BENCH_replay.json` (benchkit JsonSink) so the trace path's trajectory
+//! is tracked across PRs next to `BENCH_scale.json`.
+//!
+//! * `REPLAY_JOBS` overrides the synthetic trace's row count.
+//! * `REPLAY_QUICK=1` (or `HOTPATH_QUICK=1`) shrinks to 20k rows for CI
+//!   smoke runs (default 200k).
+//!
+//! Run with `cargo bench --bench replay`.
+
+use uwfq::bench::replay::{record_metrics, render, run_replay};
+use uwfq::config::Config;
+use uwfq::util::benchkit::JsonSink;
+use uwfq::workload::gtrace::GtraceParams;
+use uwfq::workload::traceio::{writer, ShapeParams, TraceParams};
+
+fn main() {
+    let quick = std::env::var("REPLAY_QUICK").is_ok() || std::env::var("HOTPATH_QUICK").is_ok();
+    let jobs: u64 = std::env::var("REPLAY_JOBS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if quick { 20_000 } else { 200_000 });
+    let cfg = Config::default().with_cores(32);
+
+    let dir = std::env::temp_dir().join(format!("uwfq_bench_replay_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let path = dir.join("synth.csv").to_str().expect("utf8 path").to_string();
+
+    // Sub-critical load keeps the backlog (and therefore the in-flight
+    // counter) bounded — the property this bench exists to measure.
+    let gp = writer::params_for_jobs(
+        jobs,
+        &GtraceParams {
+            cores: cfg.cores,
+            target_utilization: 0.8,
+            ..GtraceParams::default()
+        },
+    );
+    let rows = writer::write_synthetic(&path, cfg.seed, &gp).expect("write trace");
+    println!(
+        "# Streaming trace replay — {rows} rows on {} cores{}",
+        cfg.cores,
+        if quick { " (quick)" } else { "" }
+    );
+
+    let tp = TraceParams {
+        path,
+        shaping: ShapeParams {
+            cores: cfg.cores,
+            target_utilization: 0.8,
+            ..ShapeParams::default()
+        },
+        seed: cfg.seed,
+        ..TraceParams::default()
+    };
+    let outcome = run_replay(&tp, &cfg).expect("replay");
+    print!("{}", render(&outcome));
+
+    let mut sink = JsonSink::new();
+    record_metrics(&outcome, &mut sink);
+    if let Err(e) = sink.write("BENCH_replay.json") {
+        eprintln!("warning: could not write BENCH_replay.json: {e}");
+    } else {
+        println!("wrote BENCH_replay.json");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+
+    // The bounded-state contract is part of the bench: a regression that
+    // starts materializing the trace would otherwise ship unnoticed.
+    if outcome.max_buffered_rows > tp.shaping.warmup {
+        eprintln!(
+            "replay buffered {} rows, above the {}-row warmup bound",
+            outcome.max_buffered_rows, tp.shaping.warmup
+        );
+        std::process::exit(1);
+    }
+}

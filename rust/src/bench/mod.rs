@@ -7,6 +7,8 @@
 //!   (CDFs), Fig. 7 (per-user violations).
 //! * [`scale`] — the streaming million-job harness (`uwfq scale`,
 //!   `BENCH_scale.json`).
+//! * [`replay`] — the streaming trace-replay harness (`uwfq replay`,
+//!   `BENCH_replay.json`).
 //!
 //! Every grid is expressed as a list of independent cells over the
 //! [`crate::sweep`] engine: the caller passes a [`crate::sweep::Sweep`]
@@ -14,6 +16,7 @@
 //! for n-worker execution with byte-identical output.
 
 pub mod figures;
+pub mod replay;
 pub mod scale;
 pub mod tables;
 

@@ -1,0 +1,212 @@
+//! The trace-replay harness behind `uwfq replay` and `benches/replay.rs`:
+//! stream a trace file through the one-pass shaper and the simulator with
+//! bounded-memory metrics, and report throughput plus the resident-state
+//! counters that back the O(warmup + in-flight) contract.
+//!
+//! Memory model: the reader holds one chunk, the shaper holds at most
+//! `warmup` rows (drained once the factors freeze), the engine holds the
+//! in-flight backlog, and the metrics sink is O(users + bins). No per-job
+//! state survives a completion — a million-row trace replays without ever
+//! materializing its job list.
+//!
+//! Slowdown columns are deliberately absent: trace jobs carry unique
+//! names, so per-template idle-response denominators do not exist on the
+//! streaming path (the exact grids, `uwfq sweep --scenario trace`, still
+//! compute them).
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::config::Config;
+use crate::core::SchedCore;
+use crate::metrics::streaming::StreamingRunMetrics;
+use crate::sim;
+use crate::util::benchkit::JsonSink;
+use crate::workload::traceio::{self, TraceParams};
+
+/// The tracked response-time quantiles (ECDF-inverted).
+pub const QUANTILES: [f64; 3] = [0.50, 0.95, 0.99];
+
+/// Everything one replay run produces.
+pub struct ReplayOutcome {
+    pub label: String,
+    /// Data rows in the trace file.
+    pub rows: u64,
+    /// Rows dropped by the runtime-tail filter.
+    pub rows_dropped: u64,
+    pub jobs: u64,
+    pub users: usize,
+    pub wall_s: f64,
+    pub jobs_per_s: f64,
+    pub task_events: u64,
+    pub task_events_per_s: f64,
+    /// Peak concurrently in-flight jobs (the O(active) bound).
+    pub peak_in_flight_jobs: usize,
+    /// Peak shaper-buffered rows (≤ warmup by construction).
+    pub max_buffered_rows: usize,
+    pub heavy_scale: f64,
+    pub util_scale: f64,
+    pub makespan_s: f64,
+    pub utilization: f64,
+    pub mean_rt: f64,
+    pub jain_index: f64,
+    /// ECDF-inverted response-time quantiles.
+    pub ecdf_q: [f64; 3],
+}
+
+/// Run one streaming replay. The trace is fully validated by the class
+/// scan before the timed pass, so malformed rows surface as `Err`, not
+/// panics.
+pub fn run_replay(tp: &TraceParams, cfg: &Config) -> Result<ReplayOutcome, String> {
+    let (_classes, rows) = traceio::scan_user_classes(&tp.path, tp.format)?;
+    let mut stream = traceio::open_trace(tp)?;
+    let mut sink = StreamingRunMetrics::new(&cfg.label(), HashMap::new());
+    let mut core = SchedCore::from_config(cfg.clone());
+    let t0 = Instant::now();
+    let summary = sim::simulate_stream_into(&mut core, &mut stream, &mut sink);
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    let stats = stream.shape_stats();
+
+    Ok(ReplayOutcome {
+        label: summary.label,
+        rows,
+        rows_dropped: stats.rows_dropped,
+        jobs: summary.jobs_completed,
+        users: sink.user_count(),
+        wall_s,
+        jobs_per_s: summary.jobs_completed as f64 / wall_s,
+        task_events: summary.task_events,
+        task_events_per_s: summary.task_events as f64 / wall_s,
+        peak_in_flight_jobs: summary.peak_in_flight_jobs,
+        max_buffered_rows: stats.max_buffered,
+        heavy_scale: stats.heavy_scale,
+        util_scale: stats.util_scale,
+        makespan_s: summary.makespan_s,
+        utilization: summary.utilization,
+        mean_rt: sink.mean_rt(),
+        jain_index: sink.jain_index_user_rt(),
+        ecdf_q: QUANTILES.map(|p| sink.rt_quantile_ecdf(p)),
+    })
+}
+
+/// Record a replay outcome into a benchkit sink (`BENCH_replay.json`).
+pub fn record_metrics(o: &ReplayOutcome, sink: &mut JsonSink) {
+    sink.metric("replay/rows", o.rows as f64);
+    sink.metric("replay/rows_dropped", o.rows_dropped as f64);
+    sink.metric("replay/jobs", o.jobs as f64);
+    sink.metric("replay/users", o.users as f64);
+    sink.metric("replay/wall_s", o.wall_s);
+    sink.metric("replay/jobs_per_s", o.jobs_per_s);
+    sink.metric("replay/task_events", o.task_events as f64);
+    sink.metric("replay/task_events_per_s", o.task_events_per_s);
+    sink.metric("replay/peak_in_flight_jobs", o.peak_in_flight_jobs as f64);
+    sink.metric("replay/max_buffered_rows", o.max_buffered_rows as f64);
+    sink.metric("replay/heavy_scale", o.heavy_scale);
+    sink.metric("replay/util_scale", o.util_scale);
+    sink.metric("replay/makespan_s", o.makespan_s);
+    sink.metric("replay/utilization", o.utilization);
+    sink.metric("replay/mean_rt_s", o.mean_rt);
+    sink.metric("replay/jain_index_user_rt", o.jain_index);
+    for (i, p) in QUANTILES.iter().enumerate() {
+        let tag = (p * 100.0).round() as u32;
+        sink.metric(&format!("replay/rt_p{tag}_ecdf_s"), o.ecdf_q[i]);
+    }
+}
+
+/// Human summary printed by `uwfq replay` and the bench.
+pub fn render(o: &ReplayOutcome) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "trace replay ({}): {} rows → {} jobs ({} filtered) / {} users in {:.2} s wall\n",
+        o.label, o.rows, o.jobs, o.rows_dropped, o.users, o.wall_s
+    ));
+    s.push_str(&format!(
+        "  throughput   {:.0} jobs/s   {:.2} M task-events/s\n",
+        o.jobs_per_s,
+        o.task_events_per_s / 1e6
+    ));
+    s.push_str(&format!(
+        "  resident     peak {} in-flight jobs   peak {} buffered rows\n",
+        o.peak_in_flight_jobs, o.max_buffered_rows
+    ));
+    s.push_str(&format!(
+        "  shaping      heavy ×{:.3}   utilization ×{:.3}\n",
+        o.heavy_scale, o.util_scale
+    ));
+    s.push_str(&format!(
+        "  sim          makespan {:.0} s   utilization {:.2}\n",
+        o.makespan_s, o.utilization
+    ));
+    s.push_str(&format!(
+        "  RT           mean {:.3} s   p50/p95/p99 (ECDF) {:.3}/{:.3}/{:.3} s   Jain {:.3}\n",
+        o.mean_rt, o.ecdf_q[0], o.ecdf_q[1], o.ecdf_q[2], o.jain_index
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::gtrace::GtraceParams;
+    use crate::workload::traceio::{writer, ShapeParams};
+
+    #[test]
+    fn small_replay_run_is_bounded_and_complete() {
+        let dir = std::env::temp_dir().join(format!("uwfq_breplay_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv").to_str().unwrap().to_string();
+        let gp = GtraceParams {
+            window_s: 120.0,
+            users: 8,
+            heavy_users: 2,
+            cores: 8,
+            target_utilization: 0.7,
+            ..GtraceParams::default()
+        };
+        let rows = writer::write_synthetic(&path, 3, &gp).unwrap();
+        let tp = TraceParams {
+            path: path.clone(),
+            shaping: ShapeParams {
+                warmup: 32,
+                cores: 8,
+                target_utilization: 0.7,
+                ..ShapeParams::default()
+            },
+            ..TraceParams::default()
+        };
+        let cfg = Config::default().with_cores(8);
+        let o = run_replay(&tp, &cfg).unwrap();
+        assert_eq!(o.rows, rows);
+        assert_eq!(o.jobs + o.rows_dropped, rows);
+        assert!(o.jobs > 0 && o.task_events > o.jobs);
+        assert!(o.max_buffered_rows <= 32);
+        assert!(o.peak_in_flight_jobs < o.jobs as usize);
+        assert!(o.makespan_s > 0.0 && o.mean_rt > 0.0);
+
+        let mut sink = JsonSink::new();
+        record_metrics(&o, &mut sink);
+        let jpath = dir.join("m.json");
+        sink.write(jpath.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&jpath).unwrap();
+        for key in [
+            "replay/jobs_per_s",
+            "replay/peak_in_flight_jobs",
+            "replay/max_buffered_rows",
+            "replay/rt_p95_ecdf_s",
+        ] {
+            assert!(text.contains(key), "missing {key}");
+        }
+        assert!(render(&o).contains("trace replay"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn replay_surfaces_trace_errors() {
+        let tp = TraceParams {
+            path: "/nonexistent/replay.csv".into(),
+            ..TraceParams::default()
+        };
+        let err = run_replay(&tp, &Config::default()).unwrap_err();
+        assert!(err.contains("/nonexistent/replay.csv"), "{err}");
+    }
+}

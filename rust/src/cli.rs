@@ -33,6 +33,13 @@ USAGE:
              # streaming million-job run: O(in-flight + users) memory,
              # emits BENCH_scale.json (defaults 1M jobs / 10k users;
              # --quick: 50k / 1k)
+  uwfq replay --trace FILE [--format native|gcluster] [--quick] [--grid] [--out DIR]
+             # streaming trace replay with one-pass §5.3 shaping:
+             # O(warmup + in-flight) memory, emits BENCH_replay.json;
+             # --grid also sweeps the trace across policies × partitioners
+  uwfq tracegen FILE [--jobs N] [--seed N] [--param k=v ...]
+             # write a seeded synthetic trace (gtrace raw tuples, native
+             # CSV) for replay benches and fixtures
   uwfq serve [--cores N] [--time-scale F] [--artifacts DIR]   # real PJRT backend demo
   uwfq ablation [--seed N] [--threads N]                      # design-choice ablations
   uwfq run --scenario scenario2 --eventlog trace.jsonl        # emit event log
@@ -55,7 +62,7 @@ FLAGS (config keys, see config.rs):
 /// `--quick true`. Every other flag still requires an explicit value, so
 /// a forgotten value (`--out` at the end of the line) stays a hard error
 /// instead of silently becoming the string "true".
-const SWITCH_FLAGS: [&str; 2] = ["quick", "verify"];
+const SWITCH_FLAGS: [&str; 3] = ["quick", "verify", "grid"];
 
 impl Cli {
     pub fn parse(args: &[String]) -> Result<Cli, String> {
@@ -126,7 +133,8 @@ impl Cli {
                 // harness-only flags, not config keys ("workload" is the
                 // legacy spelling of --scenario, resolved in main::run)
                 "config" | "out" | "quick" | "workload" | "time-scale" | "artifacts"
-                | "eventlog" | "threads" | "bench-json" | "jobs" | "users" | "verify" => {}
+                | "eventlog" | "threads" | "bench-json" | "jobs" | "users" | "verify"
+                | "trace" | "format" | "grid" => {}
                 _ => cfg.set(k, v)?,
             }
         }
@@ -242,6 +250,22 @@ mod tests {
         assert_eq!(cfg.cores, 8);
         // Malformed --param errors at parse time.
         assert!(Cli::parse(&args("run --param notkv")).is_err());
+    }
+
+    #[test]
+    fn replay_flags_are_harness_only() {
+        let c = Cli::parse(&args("replay --trace t.csv --format native --grid --cores 8"))
+            .unwrap();
+        assert_eq!(c.flag("trace"), Some("t.csv"));
+        assert_eq!(c.flag("format"), Some("native"));
+        assert_eq!(c.flag("grid"), Some("true"));
+        // None of them are config keys.
+        assert_eq!(c.config().unwrap().cores, 8);
+        // --trace still requires a value.
+        assert!(Cli::parse(&args("replay --trace")).is_err());
+        // Bare --grid before a positional must not swallow it.
+        let c = Cli::parse(&args("replay --grid x.csv")).unwrap();
+        assert_eq!(c.positional, vec!["x.csv"]);
     }
 
     #[test]

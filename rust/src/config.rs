@@ -216,6 +216,23 @@ mod tests {
     }
 
     #[test]
+    fn trace_replay_spelled_as_config_keys() {
+        // `uwfq replay --config FILE` drives the trace entry through the
+        // same scenario/param keys every other command uses.
+        let mut c = Config::default();
+        c.apply_lines(
+            "scenario = trace\nparam.path = /data/google.csv\nparam.warmup = 1024\n\
+             param.shape = true\n",
+        )
+        .unwrap();
+        assert_eq!(c.scenario.as_deref(), Some("trace"));
+        assert!(c
+            .scenario_params
+            .contains(&("path".to_string(), "/data/google.csv".to_string())));
+        assert!(c.scenario_params.contains(&("warmup".to_string(), "1024".to_string())));
+    }
+
+    #[test]
     fn label_includes_partitioner() {
         let c = Config::default()
             .with_policy(PolicyKind::Uwfq)

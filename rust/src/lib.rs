@@ -24,12 +24,15 @@
 //!   stand-in).
 //! * [`workload`] — the **scenario registry**
 //!   ([`workload::registry`]): every workload — the paper's micro
-//!   scenarios 1–2 (§5.2.1), the Google-trace macro workload (§5.3), CSV
-//!   traces, the million-job scale workload, and the `bursty` /
-//!   `heavytail` / `diurnal` stress scenarios — is defined once as a
-//!   named entry with a typed parameter schema and a lazy
-//!   [`workload::JobStream`] constructor; the materialized form is the
-//!   registry's generic `collect()` adapter.
+//!   scenarios 1–2 (§5.2.1), the Google-trace macro workload (§5.3),
+//!   streaming trace replay over real trace files
+//!   ([`workload::traceio`]: chunked reads, one-pass §5.3 shaping,
+//!   O(warmup + in-flight) state), CSV traces, the million-job scale
+//!   workload, and the `bursty` / `heavytail` / `diurnal` stress
+//!   scenarios — is defined once as a named entry with a typed
+//!   parameter schema and a lazy [`workload::JobStream`] constructor;
+//!   the materialized form is the registry's generic `collect()`
+//!   adapter.
 //! * [`metrics`] — response times, slowdowns, DVR/DSR (Eqs. 1–3), CDFs;
 //!   plus bounded-memory streaming accumulators (P² quantiles, log-bin
 //!   ECDF, per-user aggregates) for O(users)-memory runs.

@@ -27,6 +27,8 @@ fn main() -> ExitCode {
         "reproduce" => reproduce(&cli),
         "sweep" => sweep_cmd(&cli),
         "scale" => scale_cmd(&cli),
+        "replay" => replay_cmd(&cli),
+        "tracegen" => tracegen_cmd(&cli),
         "run" => run(&cli),
         "scenarios" => scenarios_cmd(),
         "serve" => serve(&cli),
@@ -339,6 +341,89 @@ fn scale_cmd(cli: &Cli) -> Result<(), String> {
             .map_err(|e| format!("streaming accuracy outside documented tolerance: {e}"))?;
         println!("streaming estimators within documented tolerance");
     }
+    Ok(())
+}
+
+/// `uwfq replay` — streaming trace replay: the file is read in chunks,
+/// shaped in one pass (running P² median filter, warmup-window
+/// rebalance/rescale) and simulated with completions drained into
+/// bounded-memory accumulators — O(warmup + in-flight) resident state
+/// regardless of trace length. Emits `BENCH_replay.json`; `--grid` also
+/// runs the generic policies × partitioners grid over the trace (the
+/// materialized path, like `uwfq sweep --scenario trace`).
+fn replay_cmd(cli: &Cli) -> Result<(), String> {
+    let out = cli.flag_or("out", "out");
+    std::fs::create_dir_all(&out).map_err(|e| e.to_string())?;
+    let cfg = cli.config()?;
+    // Spec resolution mirrors `scale`: registry schema defaults ← quick
+    // overrides ← config-file param.* ← --param flags ← --trace/--format
+    // sugar; the simulated cluster size doubles as the shaping target.
+    let mut spec = spec_with_quick("trace", cli.quick())?;
+    spec.params.extend(cfg.scenario_params.iter().cloned());
+    if let Some(path) = cli.flag("trace") {
+        spec = spec.with("path", path);
+    }
+    if let Some(fmt) = cli.flag("format") {
+        spec = spec.with("format", fmt);
+    }
+    // The simulated cluster size doubles as the shaping target — unless
+    // the user pinned the shaping's cores param explicitly (later
+    // overrides win, so appending here would clobber it).
+    if !spec.params.iter().any(|(k, _)| k == "cores") {
+        spec = spec.with("cores", &cfg.cores.to_string());
+    }
+    let params = uwfq::workload::registry::trace_params(&spec, cfg.seed)
+        .map_err(|e| format!("{e}\n(usage: uwfq replay --trace FILE)"))?;
+    println!(
+        "replay: {} ({} shaping, warmup {} rows) on {} cores (policy {})",
+        params.path,
+        if params.shape { "one-pass §5.3" } else { "no" },
+        params.shaping.warmup,
+        cfg.cores,
+        cfg.policy.name()
+    );
+    let outcome = uwfq::bench::replay::run_replay(&params, &cfg)?;
+    print!("{}", uwfq::bench::replay::render(&outcome));
+
+    let mut sink = JsonSink::new();
+    uwfq::bench::replay::record_metrics(&outcome, &mut sink);
+    let bench_path = cli.flag_or("bench-json", &format!("{out}/BENCH_replay.json"));
+    sink.write(&bench_path).map_err(|e| e.to_string())?;
+    println!("replay done → {bench_path}");
+
+    if cli.flag("grid") == Some("true") {
+        let par = Sweep::new(cli.threads(uwfq::sweep::auto_threads(None))?);
+        scenario_sweep(&spec, &cfg, &par, &out)?;
+    }
+    Ok(())
+}
+
+/// `uwfq tracegen` — write a seeded synthetic trace (the gtrace
+/// generator's raw unshaped tuples, native CSV, sorted by arrival) for
+/// replay benches, CI smoke runs and fixtures. `--jobs N` solves the
+/// window for a target row count; `--param k=v` overrides the gtrace
+/// schema.
+fn tracegen_cmd(cli: &Cli) -> Result<(), String> {
+    let path = cli
+        .positional
+        .first()
+        .ok_or("usage: uwfq tracegen FILE [--jobs N] [--param k=v ...]")?;
+    let cfg = cli.config()?;
+    let mut spec = ScenarioSpec::new("gtrace");
+    if cli.quick() {
+        spec = spec_with_quick("gtrace", true)?;
+    }
+    spec.params.extend(cfg.scenario_params.iter().cloned());
+    let mut gp = uwfq::workload::registry::gtrace_params(&spec)?;
+    if let Some(jobs) = cli.flag("jobs") {
+        let jobs: u64 = jobs.parse().map_err(|_| format!("bad --jobs '{jobs}'"))?;
+        gp = uwfq::workload::traceio::writer::params_for_jobs(jobs, &gp);
+    }
+    let rows = uwfq::workload::traceio::writer::write_synthetic(path, cfg.seed, &gp)?;
+    println!(
+        "tracegen: {rows} rows over {:.0} s ({} users, {} heavy) → {path}",
+        gp.window_s, gp.users, gp.heavy_users
+    );
     Ok(())
 }
 

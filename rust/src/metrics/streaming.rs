@@ -93,6 +93,13 @@ pub struct P2Quantile {
 }
 
 impl P2Quantile {
+    /// The running-median estimator (p = 0.5) — the one-pass trace
+    /// shaper's runtime-tail filter statistic
+    /// ([`crate::workload::traceio::shaping`]).
+    pub fn median() -> P2Quantile {
+        P2Quantile::new(0.5)
+    }
+
     pub fn new(p: f64) -> P2Quantile {
         assert!(p > 0.0 && p < 1.0, "quantile must be in (0, 1)");
         P2Quantile {

@@ -9,16 +9,18 @@
 //! We reproduce the *statistical shape* with a seeded generator (the trace
 //! itself is a 300 MB external download): heavy-tailed lognormal job
 //! sizes, Poisson user arrivals, 1–3-stage linear jobs, and the same
-//! filter + rescale pipeline. A real trace export can be used instead via
-//! [`crate::workload::tracefile`].
+//! filter + rescale pipeline. Real trace files are replayed through
+//! [`crate::workload::traceio`] instead (registry entry `trace`).
 //!
 //! The workload is defined **once**, as the [`GtraceStream`] constructor
 //! [`gtrace`]; the materialized form is the registry's generic collect
-//! adapter (registry entry `gtrace`). The stream is *semi*-streaming: the
-//! §5.3 filter / rebalance / rescale pipeline is inherently two-pass (it
-//! needs the global size median and work totals), so the stream holds
-//! shaped ~56-byte tuples — not full `JobSpec`s — and materializes jobs
-//! one at a time in arrival order.
+//! adapter (registry entry `gtrace`). This generator deliberately keeps
+//! the **exact two-pass** §5.3 shaping ([`raw_rows`] → [`shape_exact`]):
+//! it is the in-memory differential *oracle* that the one-pass streaming
+//! shaper ([`crate::workload::traceio::shaping`]) is measured against
+//! (`tests/trace_replay.rs`), and the synthetic trace writer
+//! ([`crate::workload::traceio::writer`]) emits exactly the [`raw_rows`]
+//! tuples so the two pipelines shape the same raw input.
 
 use super::stream::JobStream;
 use super::UserClass;
@@ -60,14 +62,30 @@ impl Default for GtraceParams {
     }
 }
 
-/// The shared §5.3 shaping pipeline: generate raw (user, arrival,
-/// slot-time, class) tuples, filter the runtime tail, rebalance heavy
-/// users and rescale to the target utilization. Returns the tuples (in
-/// generation order) plus the root RNG in the exact state the per-job
-/// materialization forks from.
-fn shaped_raw(seed: u64, p: &GtraceParams) -> (Vec<(u32, f64, f64, UserClass)>, Rng) {
+/// One raw generated trace tuple prior to §5.3 shaping — the common
+/// currency of the exact pipeline, the synthetic trace writer and the
+/// one-pass streaming shaper's differential test.
+#[derive(Clone, Copy, Debug)]
+pub struct RawTuple {
+    pub user: u32,
+    pub arrival_s: f64,
+    /// Total sequential work (core-seconds), unshaped.
+    pub slot_s: f64,
+    pub class: UserClass,
+}
+
+/// Mean submission gaps of the raw generators (seconds per job per
+/// user) — shared with the trace writer's row-count solver
+/// ([`crate::workload::traceio::writer::params_for_jobs`]), which would
+/// otherwise drift when these are tuned.
+pub(crate) const HEAVY_GAP_S: f64 = 25.0;
+pub(crate) const LIGHT_GAP_S: f64 = 70.0;
+
+/// Generate the raw (unshaped) §5.3 tuples in generation order, plus the
+/// root RNG in the exact state the per-job materialization forks from.
+pub fn raw_rows(seed: u64, p: &GtraceParams) -> (Vec<RawTuple>, Rng) {
     let mut rng = Rng::new(seed);
-    let mut raw: Vec<(u32, f64, f64, UserClass)> = Vec::new(); // (user, arrival, slot, class)
+    let mut raw: Vec<RawTuple> = Vec::new();
 
     // Heavy users: moderately frequent, heavy-tailed big jobs.
     for user in 1..=p.heavy_users {
@@ -76,8 +94,13 @@ fn shaped_raw(seed: u64, p: &GtraceParams) -> (Vec<(u32, f64, f64, UserClass)>, 
         while t < p.window_s {
             // Lognormal core-seconds; median e^4.5 ≈ 90, heavy tail.
             let slot = r.lognormal(4.5, 1.1);
-            raw.push((user, t, slot, UserClass::Heavy));
-            t += r.exp(1.0 / 25.0); // a job every ~25 s per heavy user
+            raw.push(RawTuple {
+                user,
+                arrival_s: t,
+                slot_s: slot,
+                class: UserClass::Heavy,
+            });
+            t += r.exp(1.0 / HEAVY_GAP_S); // a job every ~25 s per heavy user
         }
     }
     // Light users: infrequent small jobs.
@@ -86,49 +109,73 @@ fn shaped_raw(seed: u64, p: &GtraceParams) -> (Vec<(u32, f64, f64, UserClass)>, 
         let mut t = r.range_f64(0.0, 60.0);
         while t < p.window_s {
             let slot = r.lognormal(2.6, 0.8); // median ≈ 13 core-s
-            raw.push((user, t, slot, UserClass::Light));
-            t += r.exp(1.0 / 70.0); // a job every ~70 s per light user
+            raw.push(RawTuple {
+                user,
+                arrival_s: t,
+                slot_s: slot,
+                class: UserClass::Light,
+            });
+            t += r.exp(1.0 / LIGHT_GAP_S); // a job every ~70 s per light user
         }
     }
+    (raw, rng)
+}
 
+/// The **exact two-pass** §5.3 shaping pipeline: drop the runtime tail
+/// against the global median, rebalance heavy users to
+/// `heavy_work_fraction` of the work, rescale everything to the target
+/// utilization over the window. This is the differential oracle the
+/// one-pass streaming shaper is measured against.
+pub fn shape_exact(raw: &mut Vec<RawTuple>, p: &GtraceParams) {
     // §5.3 filter: drop jobs with runtime > filter_median_mult × median.
-    let slots: Vec<f64> = raw.iter().map(|j| j.2).collect();
+    let slots: Vec<f64> = raw.iter().map(|j| j.slot_s).collect();
     let med = stats::median(&slots);
-    raw.retain(|j| j.2 <= p.filter_median_mult * med);
+    raw.retain(|j| j.slot_s <= p.filter_median_mult * med);
 
     // Rebalance so heavy users produce `heavy_work_fraction` of the work,
     // then rescale everything to the target utilization.
     let heavy_work: f64 = raw
         .iter()
-        .filter(|j| j.3 == UserClass::Heavy)
-        .map(|j| j.2)
+        .filter(|j| j.class == UserClass::Heavy)
+        .map(|j| j.slot_s)
         .sum();
     let light_work: f64 = raw
         .iter()
-        .filter(|j| j.3 == UserClass::Light)
-        .map(|j| j.2)
+        .filter(|j| j.class == UserClass::Light)
+        .map(|j| j.slot_s)
         .sum();
     let heavy_scale =
         p.heavy_work_fraction / (1.0 - p.heavy_work_fraction) * light_work / heavy_work;
     for j in raw.iter_mut() {
-        if j.3 == UserClass::Heavy {
-            j.2 *= heavy_scale;
+        if j.class == UserClass::Heavy {
+            j.slot_s *= heavy_scale;
         }
     }
-    let total: f64 = raw.iter().map(|j| j.2).sum();
+    let total: f64 = raw.iter().map(|j| j.slot_s).sum();
     let target = p.target_utilization * p.cores as f64 * p.window_s;
     let scale = target / total;
     for j in raw.iter_mut() {
-        j.2 *= scale;
+        j.slot_s *= scale;
     }
+}
 
-    (raw, rng)
+/// Stage-chain length for a job of `slot` core-seconds (bigger jobs get
+/// more stages) — shared by [`trace_job`] and the trace writer's
+/// `stages` column.
+pub(crate) fn stage_count(slot: f64) -> usize {
+    if slot < 30.0 {
+        1
+    } else if slot < 200.0 {
+        2
+    } else {
+        3
+    }
 }
 
 /// One trace job: a linear chain of 1–3 stages whose slot-times partition
 /// the job's total, leaf stage first; bigger jobs get more stages. Shared
-/// with the `heavytail` stress scenario, whose Pareto sizes reuse the
-/// same stage-chain shape.
+/// with the `heavytail` stress scenario (Pareto sizes, same chain shape)
+/// and the `trace` replay entry (shaped real-trace rows).
 pub(crate) fn trace_job(
     user: u32,
     name: &str,
@@ -137,13 +184,7 @@ pub(crate) fn trace_job(
     r: &mut Rng,
     skew_fraction: f64,
 ) -> JobSpec {
-    let nstages = if slot < 30.0 {
-        1
-    } else if slot < 200.0 {
-        2
-    } else {
-        3
-    };
+    let nstages = stage_count(slot);
     // Split slot across stages (dominant middle stage for 3-stage jobs).
     let fractions: Vec<f64> = match nstages {
         1 => vec![1.0],
@@ -199,8 +240,9 @@ struct RawTraceJob {
 }
 
 /// The macro workload as a stream — the single definition behind the
-/// `gtrace` registry entry. See the module docs for the semi-streaming
-/// caveat (the §5.3 shaping pipeline is two-pass).
+/// `gtrace` registry entry. The stream holds compact shaped tuples (the
+/// deliberate cost of the exact two-pass oracle pipeline); fully
+/// streaming trace replay lives in [`crate::workload::traceio`].
 pub struct GtraceStream {
     raw: std::vec::IntoIter<RawTraceJob>,
     skew_fraction: f64,
@@ -210,18 +252,19 @@ pub struct GtraceStream {
 
 /// Build the macro workload stream for the given seed/params.
 pub fn gtrace(seed: u64, p: &GtraceParams) -> GtraceStream {
-    let (raw, mut rng) = shaped_raw(seed, p);
+    let (mut raw, mut rng) = raw_rows(seed, p);
+    shape_exact(&mut raw, p);
     let mut user_class = HashMap::new();
     let mut items: Vec<RawTraceJob> = raw
         .iter()
         .enumerate()
-        .map(|(i, &(user, arrival, slot, class))| {
-            user_class.insert(user, class);
+        .map(|(i, j)| {
+            user_class.insert(j.user, j.class);
             RawTraceJob {
-                user,
+                user: j.user,
                 idx: i,
-                arrival_s: arrival,
-                slot,
+                arrival_s: j.arrival_s,
+                slot: j.slot_s,
                 // Forked in generation order — the root RNG advances
                 // identically no matter what order jobs later yield in.
                 rng: rng.fork(0xB0B ^ i as u64),

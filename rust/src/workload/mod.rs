@@ -10,13 +10,21 @@
 //!   (1) infrequent + frequent users, (2) multiple frequent users.
 //! * [`gtrace`] — the Google-trace-shaped macro generator (§5.3: 25
 //!   users, 5 heavy users >90 % of work, ≥100 % utilization over a 500 s
-//!   window), including the paper's filtering and utilization-scaling
-//!   pipeline (semi-streaming: the pipeline is two-pass).
+//!   window). Deliberately keeps the paper's **exact two-pass**
+//!   filter/rebalance/rescale pipeline: it is the differential oracle
+//!   for the streaming shaper.
+//! * [`traceio`] — **streaming trace replay** (registry entry `trace`,
+//!   `uwfq replay`): a chunked line reader over real trace files (native
+//!   CSV + a Google-cluster-trace column mapping), a one-pass §5.3
+//!   shaping stage (running P² median filter, warmup-window
+//!   rebalance/rescale), and a seeded synthetic trace writer — resident
+//!   state O(warmup + in-flight) regardless of trace length.
 //! * [`stress`] — stress generators beyond the paper: `bursty` (BoPF-style
 //!   on/off users), `heavytail` (Pareto sizes), `diurnal` (sinusoidal-rate
 //!   Poisson).
-//! * [`tracefile`] — a simple CSV trace loader so a real WTA export can be
-//!   dropped in (registry entry `tracefile`, `--param path=FILE`).
+//! * [`tracefile`] — the simple in-memory CSV trace loader (registry
+//!   entry `tracefile`, `--param path=FILE`); the streaming raw-replay
+//!   path reuses its job builder byte-for-byte.
 //! * [`stream`] — the lazy job-timeline substrate ([`stream::JobStream`]):
 //!   per-user generators k-way merged in arrival order, plus the
 //!   `uwfq scale` million-job workload. Every materialized workload
@@ -28,6 +36,7 @@ pub mod scenarios;
 pub mod stream;
 pub mod stress;
 pub mod tracefile;
+pub mod traceio;
 
 pub use registry::{Registry, Scenario, ScenarioSpec};
 pub use stream::JobStream;

@@ -26,6 +26,7 @@ use super::gtrace::{self, GtraceParams};
 use super::scenarios;
 use super::stream::{self, materialize, JobStream, ScaleParams};
 use super::stress::{self, BurstyParams, DiurnalParams, HeavytailParams};
+use super::traceio::{self, ShapeParams, TraceFormat, TraceParams};
 use super::tracefile;
 use super::{UserClass, Workload};
 use crate::UserId;
@@ -102,6 +103,14 @@ pub const fn p_u64(name: &'static str, default: u64, doc: &'static str) -> Param
 pub const fn p_f64(name: &'static str, default: f64, doc: &'static str) -> ParamSpec {
     ParamSpec { name, doc, default: ParamValue::F64(default) }
 }
+pub const fn p_bool(name: &'static str, default: bool, doc: &'static str) -> ParamSpec {
+    ParamSpec { name, doc, default: ParamValue::Bool(default) }
+}
+/// String params default to empty in `const` tables (non-empty `String`
+/// construction is not const); scenarios treat empty as "unset".
+pub const fn p_str(name: &'static str, doc: &'static str) -> ParamSpec {
+    ParamSpec { name, doc, default: ParamValue::Str(String::new()) }
+}
 
 /// A validated parameter bag: every schema entry present (defaults filled
 /// in), every override type-checked against the schema. Later overrides
@@ -160,6 +169,12 @@ impl Params {
         match self.get(name) {
             ParamValue::F64(v) => *v,
             other => panic!("param '{name}' is {}, not float", other.type_name()),
+        }
+    }
+    pub fn bool(&self, name: &str) -> bool {
+        match self.get(name) {
+            ParamValue::Bool(v) => *v,
+            other => panic!("param '{name}' is {}, not bool", other.type_name()),
         }
     }
     pub fn str(&self, name: &str) -> &str {
@@ -293,6 +308,95 @@ fn validate_scale(p: &ScaleParams) -> Result<(), String> {
     Ok(())
 }
 
+/// Resolve a `gtrace` spec into [`GtraceParams`] — the registry schema is
+/// the single source for the §5.3 generator defaults, shared by the
+/// `gtrace` entry, `uwfq tracegen` and the trace writer.
+pub fn gtrace_params(spec: &ScenarioSpec) -> Result<GtraceParams, String> {
+    if spec.name != "gtrace" {
+        return Err(format!("gtrace_params: spec names '{}', not 'gtrace'", spec.name));
+    }
+    let sc = Registry::global().get("gtrace")?;
+    let p = Params::from_schema(sc.schema(), &spec.params)
+        .map_err(|e| format!("scenario 'gtrace': {e}"))?;
+    gtrace_params_from(&p)
+}
+
+fn gtrace_params_from(p: &Params) -> Result<GtraceParams, String> {
+    let gp = GtraceParams {
+        window_s: p.f64("window_s"),
+        users: p.u32("users")?,
+        heavy_users: p.u32("heavy_users")?,
+        heavy_work_fraction: p.f64("heavy_work_fraction"),
+        target_utilization: p.f64("target_utilization"),
+        cores: p.u32("cores")?,
+        skew_fraction: p.f64("skew_fraction"),
+        filter_median_mult: p.f64("filter_median_mult"),
+    };
+    if gp.heavy_users == 0 || gp.heavy_users >= gp.users {
+        return Err(format!(
+            "gtrace: need 1 <= heavy_users < users (got {} / {})",
+            gp.heavy_users, gp.users
+        ));
+    }
+    if !(gp.heavy_work_fraction > 0.0 && gp.heavy_work_fraction < 1.0) {
+        return Err("gtrace: heavy_work_fraction must be in (0, 1)".into());
+    }
+    if gp.window_s <= 0.0 || gp.cores == 0 {
+        return Err("gtrace: window_s and cores must be positive".into());
+    }
+    Ok(gp)
+}
+
+/// Resolve a `trace` spec into the [`TraceParams`] the replay harness
+/// (`uwfq replay`, `bench::replay`) consumes — one schema for the CLI,
+/// config files and the registry entry.
+pub fn trace_params(spec: &ScenarioSpec, seed: u64) -> Result<TraceParams, String> {
+    if spec.name != "trace" {
+        return Err(format!("trace_params: spec names '{}', not 'trace'", spec.name));
+    }
+    let sc = Registry::global().get("trace")?;
+    let p = Params::from_schema(sc.schema(), &spec.params)
+        .map_err(|e| format!("scenario 'trace': {e}"))?;
+    trace_params_from(&p, seed)
+}
+
+fn trace_params_from(p: &Params, seed: u64) -> Result<TraceParams, String> {
+    let path = p.str("path");
+    if path.is_empty() {
+        return Err("trace: requires --param path=FILE".into());
+    }
+    let format = TraceFormat::parse(p.str("format")).map_err(|e| format!("trace: {e}"))?;
+    let shaping = ShapeParams {
+        warmup: p.usize("warmup")?,
+        filter_median_mult: p.f64("filter_median_mult"),
+        heavy_work_fraction: p.f64("heavy_work_fraction"),
+        target_utilization: p.f64("target_utilization"),
+        cores: p.u32("cores")?,
+    };
+    if shaping.warmup == 0 {
+        return Err("trace: warmup must be >= 1".into());
+    }
+    if !(shaping.heavy_work_fraction > 0.0 && shaping.heavy_work_fraction < 1.0) {
+        return Err("trace: heavy_work_fraction must be in (0, 1)".into());
+    }
+    if shaping.filter_median_mult <= 0.0
+        || shaping.target_utilization <= 0.0
+        || shaping.cores == 0
+    {
+        return Err(
+            "trace: filter_median_mult, target_utilization and cores must be positive".into(),
+        );
+    }
+    Ok(TraceParams {
+        path: path.to_string(),
+        format,
+        shape: p.bool("shape"),
+        shaping,
+        skew_fraction: p.f64("skew_fraction"),
+        seed,
+    })
+}
+
 // ---------------------------------------------------------------------------
 // Registry
 // ---------------------------------------------------------------------------
@@ -311,6 +415,7 @@ impl Registry {
                 Box::new(Scenario2),
                 Box::new(Gtrace),
                 Box::new(Tracefile),
+                Box::new(Trace),
                 Box::new(Scale),
                 Box::new(Bursty),
                 Box::new(Heavytail),
@@ -450,25 +555,7 @@ impl Scenario for Gtrace {
         &[("window_s", "120"), ("users", "10"), ("heavy_users", "3"), ("cores", "8")]
     }
     fn build(&self, seed: u64, p: &Params) -> Result<ScenarioInstance, String> {
-        let gp = GtraceParams {
-            window_s: p.f64("window_s"),
-            users: p.u32("users")?,
-            heavy_users: p.u32("heavy_users")?,
-            heavy_work_fraction: p.f64("heavy_work_fraction"),
-            target_utilization: p.f64("target_utilization"),
-            cores: p.u32("cores")?,
-            skew_fraction: p.f64("skew_fraction"),
-            filter_median_mult: p.f64("filter_median_mult"),
-        };
-        if gp.heavy_users == 0 || gp.heavy_users >= gp.users {
-            return Err(format!(
-                "gtrace: need 1 <= heavy_users < users (got {} / {})",
-                gp.heavy_users, gp.users
-            ));
-        }
-        if !(gp.heavy_work_fraction > 0.0 && gp.heavy_work_fraction < 1.0) {
-            return Err("gtrace: heavy_work_fraction must be in (0, 1)".into());
-        }
+        let gp = gtrace_params_from(p)?;
         let s = gtrace::gtrace(seed, &gp);
         let user_class = s.user_class.clone();
         Ok(ScenarioInstance {
@@ -481,11 +568,8 @@ impl Scenario for Gtrace {
 
 struct Tracefile;
 
-const TRACEFILE_SCHEMA: &[ParamSpec] = &[ParamSpec {
-    name: "path",
-    doc: "CSV trace file (job,user,arrival_s,slot_s,stages,heavy)",
-    default: ParamValue::Str(String::new()),
-}];
+const TRACEFILE_SCHEMA: &[ParamSpec] =
+    &[p_str("path", "CSV trace file (job,user,arrival_s,slot_s,stages,heavy)")];
 
 impl Scenario for Tracefile {
     fn name(&self) -> &'static str {
@@ -507,6 +591,47 @@ impl Scenario for Tracefile {
         Ok(ScenarioInstance {
             name: "tracefile",
             stream: Box::new(w.into_stream()),
+            user_class,
+        })
+    }
+}
+
+struct Trace;
+
+const TRACE_SCHEMA: &[ParamSpec] = &[
+    p_str("path", "trace file (native tracefile CSV or Google-cluster mapping)"),
+    p_str("format", "trace format: native | gcluster (empty = detect from header)"),
+    p_bool("shape", true, "apply the one-pass §5.3 shaping (false = replay verbatim)"),
+    p_u64("warmup", 4096, "rows buffered to freeze the rebalance/rescale factors"),
+    p_f64("filter_median_mult", 10.0, "runtime filter (× running P² median)"),
+    p_f64("heavy_work_fraction", 0.92, "rebalance target for heavy-user work"),
+    p_f64("target_utilization", 1.05, "rescale target: work rate / cores"),
+    p_u64("cores", 32, "cluster size the shaping targets"),
+    p_f64("skew_fraction", 0.3, "fraction of shaped stages with skewed cost"),
+];
+
+impl Scenario for Trace {
+    fn name(&self) -> &'static str {
+        "trace"
+    }
+    fn doc(&self) -> &'static str {
+        "streaming trace replay: one-pass §5.3 shaping, O(warmup) state"
+    }
+    fn schema(&self) -> &'static [ParamSpec] {
+        TRACE_SCHEMA
+    }
+    fn quick_overrides(&self) -> &'static [(&'static str, &'static str)] {
+        &[("warmup", "256")]
+    }
+    fn build(&self, seed: u64, p: &Params) -> Result<ScenarioInstance, String> {
+        let tp = trace_params_from(p, seed)?;
+        // One validating pass: collects the per-user classification the
+        // instance needs up front and surfaces malformed rows as clean
+        // errors (the stream itself has no error channel).
+        let (user_class, _rows) = traceio::scan_user_classes(&tp.path, tp.format)?;
+        Ok(ScenarioInstance {
+            name: "trace",
+            stream: Box::new(traceio::open_trace(&tp)?),
             user_class,
         })
     }
@@ -693,6 +818,7 @@ mod tests {
             "scenario2",
             "gtrace",
             "tracefile",
+            "trace",
             "scale",
             "bursty",
             "heavytail",
@@ -797,6 +923,59 @@ mod tests {
     fn tracefile_requires_path() {
         let err = ScenarioSpec::new("tracefile").build(1).unwrap_err();
         assert!(err.contains("path"), "{err}");
+    }
+
+    #[test]
+    fn trace_entry_validates_params() {
+        // Path is mandatory; a missing file surfaces the path.
+        let err = ScenarioSpec::new("trace").build(1).unwrap_err();
+        assert!(err.contains("path"), "{err}");
+        let err = ScenarioSpec::new("trace")
+            .with("path", "/nonexistent/t.csv")
+            .build(1)
+            .unwrap_err();
+        assert!(err.contains("/nonexistent/t.csv"), "{err}");
+        // Bad format / bad shaping params error before any file I/O.
+        let err = trace_params(
+            &ScenarioSpec::new("trace").with("path", "x.csv").with("format", "tsv"),
+            1,
+        )
+        .unwrap_err();
+        assert!(err.contains("gcluster"), "{err}");
+        let err = trace_params(
+            &ScenarioSpec::new("trace").with("path", "x.csv").with("warmup", "0"),
+            1,
+        )
+        .unwrap_err();
+        assert!(err.contains("warmup"), "{err}");
+        // Valid specs resolve through the schema with layered overrides.
+        let tp = trace_params(
+            &ScenarioSpec::new("trace")
+                .with("path", "x.csv")
+                .with("warmup", "64")
+                .with("shape", "false")
+                .with("cores", "8"),
+            7,
+        )
+        .unwrap();
+        assert_eq!(tp.shaping.warmup, 64);
+        assert!(!tp.shape);
+        assert_eq!(tp.shaping.cores, 8);
+        assert_eq!(tp.seed, 7);
+        assert!(trace_params(&ScenarioSpec::new("scale"), 1).is_err());
+    }
+
+    #[test]
+    fn gtrace_params_resolve_through_the_schema() {
+        let gp = gtrace_params(&ScenarioSpec::new("gtrace")).unwrap();
+        assert_eq!((gp.users, gp.heavy_users, gp.cores), (25, 5, 32));
+        let gp = gtrace_params(
+            &ScenarioSpec::new("gtrace").with("users", "8").with("heavy_users", "2"),
+        )
+        .unwrap();
+        assert_eq!((gp.users, gp.heavy_users), (8, 2));
+        assert!(gtrace_params(&ScenarioSpec::new("gtrace").with("users", "1")).is_err());
+        assert!(gtrace_params(&ScenarioSpec::new("scale")).is_err());
     }
 
     #[test]

@@ -63,6 +63,20 @@ impl JobStream for Box<dyn JobStream + Send> {
     }
 }
 
+/// Mutable borrows are streams too: drive a stream you still own through
+/// a by-value consumer (`materialize`, `simulate_stream_into`) and read
+/// its counters afterwards — how the trace-replay tests assert the
+/// bounded-state contract after a run.
+impl<S: JobStream> JobStream for &mut S {
+    fn next_job(&mut self) -> Option<JobSpec> {
+        (**self).next_job()
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        (**self).size_hint()
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Materialized adapter
 // ---------------------------------------------------------------------------

@@ -15,6 +15,41 @@ use crate::core::job::{CostProfile, JobSpec, StagePhase, StageSpec};
 use crate::s_to_us;
 use std::collections::HashMap;
 
+/// Deterministic trace job: an `nstages`-long linear chain splitting
+/// `slot` evenly, uniform cost, no RNG. Shared by this loader and the
+/// raw (unshaped) replay path of [`crate::workload::traceio`], which is
+/// what lets the golden-fixture test demand byte-identical `SimReport`s
+/// between the two parsers.
+pub(crate) fn flat_job(
+    user: u32,
+    name: &str,
+    arrival_s: f64,
+    slot: f64,
+    nstages: usize,
+) -> JobSpec {
+    let per = slot / nstages as f64;
+    let bytes = (((slot * 8.0) as u64) << 20).max(32 << 20);
+    let stages: Vec<StageSpec> = (0..nstages)
+        .map(|i| StageSpec {
+            phase: StagePhase::Generic,
+            parents: if i == 0 { vec![] } else { vec![i - 1] },
+            is_leaf_input: i == 0,
+            input_bytes: bytes,
+            slot_time: per,
+            cost: CostProfile::uniform(),
+            max_parallelism: None,
+            opcount: 4,
+        })
+        .collect();
+    JobSpec {
+        user,
+        name: name.into(),
+        arrival: s_to_us(arrival_s),
+        weight: 1.0,
+        stages,
+    }
+}
+
 pub fn load_csv(text: &str) -> Result<Workload, String> {
     let mut lines = text.lines().enumerate();
     let (_, header) = lines.next().ok_or("empty trace")?;
@@ -57,27 +92,7 @@ pub fn load_csv(text: &str) -> Result<Workload, String> {
             user,
             if heavy { UserClass::Heavy } else { UserClass::Light },
         );
-        let per = slot / nstages as f64;
-        let bytes = (((slot * 8.0) as u64) << 20).max(32 << 20);
-        let stages: Vec<StageSpec> = (0..nstages)
-            .map(|i| StageSpec {
-                phase: StagePhase::Generic,
-                parents: if i == 0 { vec![] } else { vec![i - 1] },
-                is_leaf_input: i == 0,
-                input_bytes: bytes,
-                slot_time: per,
-                cost: CostProfile::uniform(),
-                max_parallelism: None,
-                opcount: 4,
-            })
-            .collect();
-        jobs.push(JobSpec {
-            user,
-            name: name.into(),
-            arrival: s_to_us(arrival),
-            weight: 1.0,
-            stages,
-        });
+        jobs.push(flat_job(user, &name, arrival, slot, nstages));
     }
     if jobs.is_empty() {
         return Err("trace has no jobs".into());

@@ -1,0 +1,330 @@
+//! Streaming trace ingestion — replay real trace files row-by-row with
+//! bounded memory (registry entry `trace`, CLI `uwfq replay`).
+//!
+//! The pipeline, end to end:
+//!
+//! 1. [`reader`] — a chunked line reader over the trace file (fixed-size
+//!    block reads, reused line buffer) with two column mappings: the
+//!    native tracefile CSV and a Google-cluster-trace mapping. Rows must
+//!    be sorted by arrival; every parse error names the offending line
+//!    and lists the valid columns.
+//! 2. [`shaping`] — the **one-pass** §5.3 shaping stage: the runtime
+//!    tail is filtered against a running P² median
+//!    ([`crate::metrics::streaming::P2Quantile`]) and the heavy-user
+//!    rebalance / utilization rescale factors are frozen from a bounded
+//!    warmup window. The in-memory `gtrace` generator keeps the exact
+//!    two-pass pipeline as the differential oracle
+//!    (`tests/trace_replay.rs`).
+//! 3. [`TraceStream`] — the [`JobStream`] over the shaped rows: resident
+//!    state is O(warmup + in-flight), independent of trace length. With
+//!    `shape = false` rows are replayed verbatim through the
+//!    deterministic tracefile job builder (byte-identical to the
+//!    in-memory [`crate::workload::tracefile`] loader — the golden
+//!    cross-parser contract).
+//! 4. [`writer`] — a seeded synthetic trace writer emitting the raw
+//!    (unshaped) gtrace tuples, used by benches and test fixtures.
+//!
+//! Because [`JobStream::next_job`] cannot return errors, the registry
+//! entry validates the whole file up front via [`scan_user_classes`]
+//! (one streaming pass, O(users) state) — it both collects the per-user
+//! classification the `ScenarioInstance` needs before any job yields and
+//! surfaces every malformed-row error as a clean `Result`. A file that
+//! changes between the scan and the replay panics with the parse error
+//! (TOCTOU, not a user error).
+
+pub mod reader;
+pub mod shaping;
+pub mod writer;
+
+use std::collections::HashMap;
+use std::fs::File;
+
+use crate::core::job::JobSpec;
+use crate::util::Rng;
+use crate::workload::stream::JobStream;
+use crate::workload::{gtrace, tracefile, UserClass};
+use crate::UserId;
+
+pub use reader::{ChunkedLines, RawRow, RowReader, TraceFormat};
+pub use shaping::{OnePassShaper, ShapeParams, ShapeStats};
+
+/// Everything the `trace` registry entry resolves from its schema.
+#[derive(Clone, Debug)]
+pub struct TraceParams {
+    pub path: String,
+    /// `None` = detect from the header.
+    pub format: Option<TraceFormat>,
+    /// Apply the one-pass §5.3 shaping (false = verbatim replay).
+    pub shape: bool,
+    pub shaping: ShapeParams,
+    /// Fraction of shaped stages given a skewed cost profile.
+    pub skew_fraction: f64,
+    pub seed: u64,
+}
+
+impl Default for TraceParams {
+    fn default() -> Self {
+        TraceParams {
+            path: String::new(),
+            format: None,
+            shape: true,
+            shaping: ShapeParams::default(),
+            skew_fraction: 0.3,
+            seed: 42,
+        }
+    }
+}
+
+/// One full streaming pass over the trace: validates every row and
+/// returns the per-user classification plus the data-row count.
+/// O(users) resident state. A user's class comes from their **last**
+/// row's heavy flag — the same rule as the in-memory
+/// [`crate::workload::tracefile`] loader, so the two entries classify
+/// every file identically (the golden cross-parser contract).
+pub fn scan_user_classes(
+    path: &str,
+    format: Option<TraceFormat>,
+) -> Result<(HashMap<UserId, UserClass>, u64), String> {
+    let mut rd = RowReader::open(path, format)?;
+    let mut classes: HashMap<UserId, UserClass> = HashMap::new();
+    let mut rows = 0u64;
+    while let Some(row) = rd.next_row()? {
+        rows += 1;
+        let class = if row.heavy { UserClass::Heavy } else { UserClass::Light };
+        classes.insert(row.user, class);
+    }
+    if rows == 0 {
+        return Err(format!("{path}: trace has no jobs"));
+    }
+    Ok((classes, rows))
+}
+
+/// The streaming trace replay: chunked reads → (optional) one-pass
+/// shaping → lazy job materialization. Resident state is the reader's
+/// chunk, the shaper's warmup buffer (drained after freezing) and one
+/// row of lookahead — O(warmup + in-flight), never O(trace length).
+pub struct TraceStream {
+    rd: RowReader<File>,
+    /// `None` = raw replay (deterministic tracefile job builder).
+    shaper: Option<OnePassShaper>,
+    rng: Rng,
+    skew_fraction: f64,
+    eof: bool,
+    jobs_out: u64,
+}
+
+/// Open a trace for streaming replay. Callers that need clean errors for
+/// malformed rows should [`scan_user_classes`] first (the registry entry
+/// does) — mid-stream parse errors panic, because [`JobStream`] has no
+/// error channel.
+pub fn open_trace(p: &TraceParams) -> Result<TraceStream, String> {
+    let rd = RowReader::open(&p.path, p.format)?;
+    Ok(TraceStream {
+        rd,
+        shaper: p.shape.then(|| OnePassShaper::new(p.shaping.clone())),
+        rng: Rng::new(p.seed),
+        skew_fraction: p.skew_fraction,
+        eof: false,
+        jobs_out: 0,
+    })
+}
+
+impl TraceStream {
+    /// Shaper counters (zeroed stats when replaying raw).
+    pub fn shape_stats(&self) -> ShapeStats {
+        self.shaper.as_ref().map(|s| s.stats()).unwrap_or_default()
+    }
+
+    /// Peak buffered row count — the bounded-state assertion hook
+    /// (≤ warmup by construction; 0 on the raw path, which buffers
+    /// nothing beyond the reader's chunk).
+    pub fn max_buffered(&self) -> usize {
+        self.shape_stats().max_buffered
+    }
+
+    pub fn jobs_out(&self) -> u64 {
+        self.jobs_out
+    }
+
+    /// Materialize one shaped row: the §5.3 stage-chain builder with a
+    /// per-row forked RNG (skew profiles, shuffle shrink).
+    fn shaped_job(&mut self, r: shaping::ShapedRow) -> JobSpec {
+        let mut jr = self.rng.fork(r.index);
+        gtrace::trace_job(r.user, &r.name, r.arrival_s, r.slot_s, &mut jr, self.skew_fraction)
+    }
+
+    /// Materialize one raw row: the deterministic flat builder shared
+    /// with the in-memory tracefile loader.
+    fn raw_job(&self, r: &RawRow) -> JobSpec {
+        let stages = if r.stages > 0 {
+            r.stages
+        } else {
+            gtrace::stage_count(r.slot_s)
+        };
+        tracefile::flat_job(r.user, &r.name, r.arrival_s, r.slot_s, stages)
+    }
+}
+
+impl JobStream for TraceStream {
+    fn next_job(&mut self) -> Option<JobSpec> {
+        loop {
+            if let Some(row) = self.shaper.as_mut().and_then(|s| s.pop()) {
+                self.jobs_out += 1;
+                return Some(self.shaped_job(row));
+            }
+            if self.eof {
+                return None;
+            }
+            match self.rd.next_row() {
+                Ok(Some(row)) => match &mut self.shaper {
+                    Some(sh) => sh.push(row),
+                    None => {
+                        self.jobs_out += 1;
+                        return Some(self.raw_job(&row));
+                    }
+                },
+                Ok(None) => {
+                    self.eof = true;
+                    if let Some(sh) = &mut self.shaper {
+                        sh.finish();
+                    }
+                }
+                // No error channel on the stream contract; the registry
+                // entry pre-validates with `scan_user_classes`.
+                Err(e) => panic!("trace replay: {e}"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::gtrace::GtraceParams;
+    use crate::workload::stream::materialize;
+
+    fn temp(name: &str) -> String {
+        let dir = std::env::temp_dir().join(format!("uwfq_traceio_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name).to_str().unwrap().to_string()
+    }
+
+    fn small_params(path: &str) -> (TraceParams, u64) {
+        let gp = GtraceParams {
+            window_s: 80.0,
+            users: 6,
+            heavy_users: 2,
+            cores: 8,
+            ..GtraceParams::default()
+        };
+        let rows = writer::write_synthetic(path, 5, &gp).unwrap();
+        let tp = TraceParams {
+            path: path.to_string(),
+            shaping: ShapeParams {
+                warmup: 16,
+                cores: 8,
+                ..ShapeParams::default()
+            },
+            ..TraceParams::default()
+        };
+        (tp, rows)
+    }
+
+    #[test]
+    fn shaped_replay_streams_sorted_valid_jobs() {
+        let path = temp("shaped.csv");
+        let (tp, rows) = small_params(&path);
+        let mut s = open_trace(&tp).unwrap();
+        let jobs = materialize(&mut s);
+        // The runtime filter may drop a few tail rows, nothing else.
+        assert!(jobs.len() as u64 <= rows);
+        assert!(jobs.len() as u64 >= rows * 9 / 10, "{} of {rows}", jobs.len());
+        let mut last = 0;
+        for j in &jobs {
+            j.validate().unwrap();
+            assert!(j.arrival >= last);
+            last = j.arrival;
+        }
+        assert!(s.max_buffered() <= 16);
+        assert_eq!(s.jobs_out(), jobs.len() as u64);
+        assert_eq!(s.shape_stats().rows_in, rows);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn replay_is_deterministic_per_seed() {
+        let path = temp("determ.csv");
+        let (tp, _) = small_params(&path);
+        let key = |tp: &TraceParams| {
+            materialize(open_trace(tp).unwrap())
+                .iter()
+                .map(|j| (j.user, j.arrival, j.stages.len(), j.slot_time().to_bits()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(key(&tp), key(&tp));
+        let mut tp2 = tp.clone();
+        tp2.seed = 99; // different skew draws, same rows
+        let (a, b) = (key(&tp), key(&tp2));
+        assert_eq!(a.len(), b.len());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn raw_replay_matches_tracefile_loader() {
+        let path = temp("raw.csv");
+        let (mut tp, rows) = small_params(&path);
+        tp.shape = false;
+        let streamed = materialize(open_trace(&tp).unwrap());
+        assert_eq!(streamed.len() as u64, rows);
+        let loaded = tracefile::load_csv_file(&path).unwrap();
+        let mut jobs = loaded.jobs;
+        jobs.sort_by_key(|j| j.arrival); // stable: file order preserved
+        for (a, b) in streamed.iter().zip(&jobs) {
+            assert_eq!((a.user, a.arrival, &*a.name), (b.user, b.arrival, &*b.name));
+            assert_eq!(a.stages.len(), b.stages.len());
+            assert_eq!(
+                a.slot_time().to_bits(),
+                b.slot_time().to_bits(),
+                "raw replay must reuse the tracefile builder bit-for-bit"
+            );
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn scan_collects_classes_and_errors_cleanly() {
+        let path = temp("scan.csv");
+        let (tp, _) = small_params(&path);
+        let (classes, rows) = scan_user_classes(&path, tp.format).unwrap();
+        assert_eq!(classes.len(), 6);
+        assert_eq!(classes.values().filter(|c| **c == UserClass::Heavy).count(), 2);
+        assert!(rows > 0);
+        // Missing file: the error names the path.
+        let err = scan_user_classes("/nonexistent/trace.csv", None).unwrap_err();
+        assert!(err.contains("/nonexistent/trace.csv"), "{err}");
+        // Malformed rows surface from the scan, naming the line.
+        let bad = temp("bad.csv");
+        std::fs::write(&bad, "job,user,arrival_s,slot_s,stages,heavy\na,1,0,oops,1,0\n")
+            .unwrap();
+        let err = scan_user_classes(&bad, None).unwrap_err();
+        assert!(err.contains("line 2") && err.contains("slot_s"), "{err}");
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&bad).ok();
+    }
+
+    #[test]
+    fn scan_classes_last_row_wins_like_the_tracefile_loader() {
+        // A user whose heavy flag flips mid-trace: both parsers must
+        // agree (tracefile's insert semantics = last row wins).
+        let flip = temp("flip.csv");
+        let text = "job,user,arrival_s,slot_s,stages,heavy\n\
+                    f0,7,0.0,5.0,1,1\nf1,7,1.0,5.0,1,0\nf2,8,2.0,5.0,1,1\n";
+        std::fs::write(&flip, text).unwrap();
+        let (classes, _) = scan_user_classes(&flip, None).unwrap();
+        let loaded = tracefile::load_csv(text).unwrap();
+        assert_eq!(classes, loaded.user_class);
+        assert_eq!(classes[&7], UserClass::Light);
+        assert_eq!(classes[&8], UserClass::Heavy);
+        std::fs::remove_file(&flip).ok();
+    }
+}

@@ -1,0 +1,562 @@
+//! Chunked trace-file reading: fixed-size block reads, line-at-a-time
+//! parsing, two column mappings.
+//!
+//! [`ChunkedLines`] reads the underlying source in fixed-size chunks and
+//! yields one line at a time from a reused buffer, so resident reader
+//! state is O(chunk + longest line) regardless of file length — a 40 MB
+//! million-row trace is never loaded whole.
+//!
+//! [`RowReader`] layers the column mappings on top:
+//!
+//! * `native` — the repo's tracefile CSV
+//!   (`job,user,arrival_s,slot_s,stages,heavy`).
+//! * `gcluster` — a pragmatic Google-cluster-trace mapping
+//!   (`timestamp,job_id,user,scheduling_class,runtime_s,cpu_request`):
+//!   `slot_s = runtime_s × cpu_request` core-seconds, `heavy` =
+//!   scheduling class ≥ 2 (the trace's "production" tiers), stage chain
+//!   derived from the job size (§5.3 shape).
+//!
+//! Every parse error names the offending line and lists the format's
+//! valid columns; rows must be sorted by arrival (checked, named line on
+//! regression).
+
+use std::fs::File;
+use std::io::Read;
+
+use crate::{s_to_us, TimeUs};
+
+/// Default read-chunk size (bytes).
+pub const DEFAULT_CHUNK: usize = 64 * 1024;
+
+/// The native tracefile column set.
+pub const NATIVE_COLUMNS: &str = "job,user,arrival_s,slot_s,stages,heavy";
+/// The Google-cluster-trace column mapping.
+pub const GCLUSTER_COLUMNS: &str =
+    "timestamp,job_id,user,scheduling_class,runtime_s,cpu_request";
+
+/// A trace column mapping.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceFormat {
+    Native,
+    GCluster,
+}
+
+impl TraceFormat {
+    /// Parse a format override: empty (or "auto") means detect from the
+    /// header.
+    pub fn parse(s: &str) -> Result<Option<TraceFormat>, String> {
+        match s {
+            "" | "auto" => Ok(None),
+            "native" => Ok(Some(TraceFormat::Native)),
+            "gcluster" => Ok(Some(TraceFormat::GCluster)),
+            other => Err(format!(
+                "unknown trace format '{other}' (valid: auto, native, gcluster)"
+            )),
+        }
+    }
+
+    /// The format's column list (error messages, docs).
+    pub fn columns(&self) -> &'static str {
+        match self {
+            TraceFormat::Native => NATIVE_COLUMNS,
+            TraceFormat::GCluster => GCLUSTER_COLUMNS,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceFormat::Native => "native",
+            TraceFormat::GCluster => "gcluster",
+        }
+    }
+
+    /// Detect the format from a header line.
+    fn detect(header: &str) -> Result<TraceFormat, String> {
+        let norm: Vec<&str> = header.split(',').map(|c| c.trim()).collect();
+        for fmt in [TraceFormat::Native, TraceFormat::GCluster] {
+            let cols: Vec<&str> = fmt.columns().split(',').collect();
+            if norm == cols {
+                return Ok(fmt);
+            }
+        }
+        Err(format!(
+            "unrecognized trace header '{header}' (expected '{NATIVE_COLUMNS}' \
+             or '{GCLUSTER_COLUMNS}')"
+        ))
+    }
+}
+
+/// One parsed raw trace row, prior to any shaping.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RawRow {
+    /// 0-based data-row ordinal (per-row RNG forks).
+    pub index: u64,
+    /// 1-based file line (error reporting).
+    pub line: u64,
+    /// Job name (`job` column; the `job_id` token under `gcluster`).
+    pub name: String,
+    pub user: u32,
+    pub arrival_s: f64,
+    /// Total sequential work (core-seconds), unshaped.
+    pub slot_s: f64,
+    /// Stage-chain length from the trace (0 = derive from the job size).
+    pub stages: usize,
+    pub heavy: bool,
+}
+
+// ---------------------------------------------------------------------------
+// Chunked line reader
+// ---------------------------------------------------------------------------
+
+/// Line iterator over a byte source read in fixed-size chunks. The line
+/// buffer is reused across calls (no per-line allocation); resident state
+/// is the chunk plus the longest line seen.
+pub struct ChunkedLines<R: Read> {
+    src: R,
+    chunk: usize,
+    /// Unconsumed bytes: `buf[start..]` is pending input.
+    buf: Vec<u8>,
+    start: usize,
+    /// Scan cursor: `buf[start..searched)` is known newline-free, so a
+    /// line spanning many chunks is searched in O(line) total rather
+    /// than rescanned from `start` after every fill.
+    searched: usize,
+    eof: bool,
+    /// Last returned line number (1-based after the first call).
+    line_no: u64,
+    line: String,
+}
+
+impl<R: Read> ChunkedLines<R> {
+    pub fn new(src: R, chunk: usize) -> ChunkedLines<R> {
+        assert!(chunk > 0);
+        ChunkedLines {
+            src,
+            chunk,
+            buf: Vec::with_capacity(chunk),
+            start: 0,
+            searched: 0,
+            eof: false,
+            line_no: 0,
+            line: String::new(),
+        }
+    }
+
+    /// Read the next chunk from the source into the pending buffer.
+    fn fill(&mut self) -> std::io::Result<()> {
+        // Compact the consumed prefix before growing.
+        if self.start > 0 {
+            self.buf.drain(..self.start);
+            self.searched -= self.start;
+            self.start = 0;
+        }
+        let old = self.buf.len();
+        self.buf.resize(old + self.chunk, 0);
+        let n = self.src.read(&mut self.buf[old..])?;
+        self.buf.truncate(old + n);
+        if n == 0 {
+            self.eof = true;
+        }
+        Ok(())
+    }
+
+    /// Next line (trailing `\n`/`\r` stripped) with its 1-based number;
+    /// `None` at end of input. The returned borrow ends at the next call.
+    pub fn next_line(&mut self) -> std::io::Result<Option<(u64, &str)>> {
+        let nl = loop {
+            debug_assert!(self.start <= self.searched && self.searched <= self.buf.len());
+            if let Some(pos) = self.buf[self.searched..].iter().position(|&b| b == b'\n') {
+                break Some(self.searched + pos);
+            }
+            self.searched = self.buf.len();
+            if self.eof {
+                break None;
+            }
+            self.fill()?;
+        };
+        let (lo, hi, consumed) = match nl {
+            Some(pos) => (self.start, pos, pos + 1),
+            None if self.start < self.buf.len() => {
+                (self.start, self.buf.len(), self.buf.len())
+            }
+            None => return Ok(None),
+        };
+        let mut bytes = &self.buf[lo..hi];
+        if bytes.last() == Some(&b'\r') {
+            bytes = &bytes[..bytes.len() - 1];
+        }
+        // Hard UTF-8 rejection, matching the in-memory loader's
+        // `read_to_string` behavior — corrupted input must surface, not
+        // be replayed with replacement characters.
+        let text = std::str::from_utf8(bytes).map_err(|_| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("line {}: invalid UTF-8", self.line_no + 1),
+            )
+        })?;
+        self.line.clear();
+        self.line.push_str(text);
+        self.start = consumed;
+        self.searched = consumed;
+        self.line_no += 1;
+        Ok(Some((self.line_no, &self.line)))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Row reader
+// ---------------------------------------------------------------------------
+
+/// Trace rows from a chunked line source: header detection, per-format
+/// field parsing, arrival-order enforcement. Errors name the offending
+/// line and list the format's valid columns.
+pub struct RowReader<R: Read> {
+    lines: ChunkedLines<R>,
+    pub format: TraceFormat,
+    /// Label used in error messages (normally the file path).
+    label: String,
+    index: u64,
+    last_arrival: TimeUs,
+}
+
+impl RowReader<File> {
+    /// Open a trace file; `forced` pins the format, `None` detects it
+    /// from the header.
+    pub fn open(path: &str, forced: Option<TraceFormat>) -> Result<RowReader<File>, String> {
+        let f = File::open(path).map_err(|e| format!("{path}: {e}"))?;
+        RowReader::new(f, path, forced, DEFAULT_CHUNK)
+    }
+}
+
+impl<R: Read> RowReader<R> {
+    pub fn new(
+        src: R,
+        label: &str,
+        forced: Option<TraceFormat>,
+        chunk: usize,
+    ) -> Result<RowReader<R>, String> {
+        let mut lines = ChunkedLines::new(src, chunk);
+        let header = match lines.next_line().map_err(|e| format!("{label}: {e}"))? {
+            Some((_, h)) => h.to_string(),
+            None => return Err(format!("{label}: empty trace (missing header)")),
+        };
+        let detected = TraceFormat::detect(&header).map_err(|e| format!("{label}: {e}"))?;
+        let format = match forced {
+            Some(f) if f != detected => {
+                // A forced format must still see its own header — silently
+                // consuming a headerless file's first data row as "the
+                // header" would lose a job.
+                return Err(format!(
+                    "{label}: forced format '{}' but the header is '{}' (columns: {})",
+                    f.name(),
+                    detected.name(),
+                    f.columns()
+                ));
+            }
+            Some(f) => f,
+            None => detected,
+        };
+        Ok(RowReader {
+            lines,
+            format,
+            label: label.to_string(),
+            index: 0,
+            last_arrival: 0,
+        })
+    }
+
+    fn err(&self, line: u64, what: &str) -> String {
+        format!(
+            "{} line {line}: {what} (columns: {})",
+            self.label,
+            self.format.columns()
+        )
+    }
+
+    /// Next data row; blank lines and `#` comments are skipped. `None` at
+    /// end of file. Parsing works off the reader's reused line buffer —
+    /// the only per-row allocation is the owned job name.
+    pub fn next_row(&mut self) -> Result<Option<RawRow>, String> {
+        loop {
+            let (format, index) = (self.format, self.index);
+            let row = {
+                let label = &self.label;
+                let (line_no, line) = match self
+                    .lines
+                    .next_line()
+                    .map_err(|e| format!("{label}: {e}"))?
+                {
+                    Some(l) => l,
+                    None => return Ok(None),
+                };
+                let text = line.trim();
+                if text.is_empty() || text.starts_with('#') {
+                    continue;
+                }
+                // Fixed-size field buffer: both formats have ≤ MAX_FIELDS
+                // columns, so splitting allocates nothing.
+                let mut fields = [""; MAX_FIELDS];
+                let mut got = 0usize;
+                for tok in text.split(',') {
+                    if got < MAX_FIELDS {
+                        fields[got] = tok.trim();
+                    }
+                    got += 1;
+                }
+                parse_fields(format, label, index, line_no, &fields[..got.min(MAX_FIELDS)], got)?
+            };
+            if row.arrival_s < 0.0 || !row.arrival_s.is_finite() {
+                return Err(self.err(row.line, "negative or non-finite arrival"));
+            }
+            if row.slot_s <= 0.0 || !row.slot_s.is_finite() {
+                return Err(self.err(row.line, "job size must be a positive finite number"));
+            }
+            let arrival_us = s_to_us(row.arrival_s);
+            if arrival_us < self.last_arrival {
+                return Err(self.err(
+                    row.line,
+                    "arrivals regressed — the trace must be sorted by arrival time",
+                ));
+            }
+            self.last_arrival = arrival_us;
+            self.index += 1;
+            return Ok(Some(row));
+        }
+    }
+}
+
+/// Upper bound on columns across the supported formats (both currently
+/// have 6) — sizes the allocation-free field buffer.
+const MAX_FIELDS: usize = 8;
+
+/// Parse one split data line (`got` = the true field count, which may
+/// exceed `f.len()` when the line had more than [`MAX_FIELDS`] commas).
+/// A free function (not a method) so it can run while the reused line
+/// buffer is still borrowed from the reader.
+fn parse_fields(
+    format: TraceFormat,
+    label: &str,
+    index: u64,
+    line_no: u64,
+    f: &[&str],
+    got: usize,
+) -> Result<RawRow, String> {
+    let err = |what: String| -> String {
+        format!("{label} line {line_no}: {what} (columns: {})", format.columns())
+    };
+    let want = format.columns().split(',').count();
+    if got != want {
+        return Err(err(format!("expected {want} fields, got {got}")));
+    }
+    let num = |col: &str, tok: &str| -> Result<f64, String> {
+        tok.parse::<f64>().map_err(|_| err(format!("bad {col} '{tok}'")))
+    };
+    let int = |col: &str, tok: &str| -> Result<u64, String> {
+        tok.parse::<u64>().map_err(|_| err(format!("bad {col} '{tok}'")))
+    };
+    match format {
+        TraceFormat::Native => {
+            let user = int("user", f[1])?;
+            let user = u32::try_from(user)
+                .map_err(|_| err(format!("user {user} out of range")))?;
+            let arrival_s = num("arrival_s", f[2])?;
+            let slot_s = num("slot_s", f[3])?;
+            let stages = int("stages", f[4])? as usize;
+            if !(1..=8).contains(&stages) {
+                return Err(err("stages out of range (1..=8)".into()));
+            }
+            let heavy = match f[5] {
+                "1" => true,
+                "0" => false,
+                tok => return Err(err(format!("bad heavy '{tok}'"))),
+            };
+            Ok(RawRow {
+                index,
+                line: line_no,
+                name: f[0].to_string(),
+                user,
+                arrival_s,
+                slot_s,
+                stages,
+                heavy,
+            })
+        }
+        TraceFormat::GCluster => {
+            let arrival_s = num("timestamp", f[0])?;
+            let user = int("user", f[2])?;
+            let user = u32::try_from(user)
+                .map_err(|_| err(format!("user {user} out of range")))?;
+            let sclass = int("scheduling_class", f[3])?;
+            let runtime_s = num("runtime_s", f[4])?;
+            let cpus = num("cpu_request", f[5])?;
+            if cpus <= 0.0 || !cpus.is_finite() {
+                return Err(err("cpu_request must be positive".into()));
+            }
+            Ok(RawRow {
+                index,
+                line: line_no,
+                name: f[1].to_string(),
+                user,
+                arrival_s,
+                slot_s: runtime_s * cpus,
+                stages: 0, // the shaped replay derives the chain
+                heavy: sclass >= 2,
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows_of(text: &str, forced: Option<TraceFormat>) -> Result<Vec<RawRow>, String> {
+        let mut r = RowReader::new(text.as_bytes(), "mem", forced, 16)?;
+        let mut out = Vec::new();
+        while let Some(row) = r.next_row()? {
+            out.push(row);
+        }
+        Ok(out)
+    }
+
+    #[test]
+    fn chunked_lines_reassemble_across_chunk_boundaries() {
+        // Tiny 4-byte chunks force every line to span chunk boundaries.
+        let text = "alpha\nbeta\n\ngamma delta epsilon\nlast";
+        let mut cl = ChunkedLines::new(text.as_bytes(), 4);
+        let mut got = Vec::new();
+        while let Some((n, l)) = cl.next_line().unwrap() {
+            got.push((n, l.to_string()));
+        }
+        assert_eq!(
+            got,
+            vec![
+                (1, "alpha".to_string()),
+                (2, "beta".to_string()),
+                (3, String::new()),
+                (4, "gamma delta epsilon".to_string()),
+                (5, "last".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn chunked_lines_strip_crlf() {
+        let mut cl = ChunkedLines::new("a\r\nb\r\n".as_bytes(), 3);
+        assert_eq!(cl.next_line().unwrap(), Some((1, "a")));
+        assert_eq!(cl.next_line().unwrap(), Some((2, "b")));
+        assert_eq!(cl.next_line().unwrap(), None);
+    }
+
+    #[test]
+    fn chunked_lines_reject_invalid_utf8_naming_the_line() {
+        // Matches the in-memory loader's read_to_string behavior:
+        // corrupted bytes error instead of becoming U+FFFD job names.
+        let bytes: &[u8] = b"ok line\nbad \xFF byte\n";
+        let mut cl = ChunkedLines::new(bytes, 4);
+        assert_eq!(cl.next_line().unwrap(), Some((1, "ok line")));
+        let err = cl.next_line().unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
+        assert!(err.to_string().contains("UTF-8"), "{err}");
+    }
+
+    const NATIVE: &str = "\
+job,user,arrival_s,slot_s,stages,heavy
+g0,1,0.0,100.0,2,1
+# comment
+g1,2,5.5,10.0,1,0
+";
+
+    #[test]
+    fn native_rows_parse_with_detection() {
+        let rows = rows_of(NATIVE, None).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].user, 1);
+        assert!(rows[0].heavy);
+        assert_eq!(rows[0].stages, 2);
+        assert_eq!(rows[1].index, 1);
+        assert_eq!(rows[1].line, 4); // comment counted in line numbers
+        assert!(!rows[1].heavy);
+    }
+
+    #[test]
+    fn gcluster_rows_map_columns() {
+        let text = "\
+timestamp,job_id,user,scheduling_class,runtime_s,cpu_request
+0.5,900,7,3,20.0,2.0
+3.25,901,8,0,4.0,0.5
+";
+        let rows = rows_of(text, None).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!(rows[0].heavy); // class 3 => production tier
+        assert_eq!(rows[0].slot_s, 40.0); // 20 s × 2 cores
+        assert_eq!(rows[0].stages, 0); // derived later
+        assert!(!rows[1].heavy);
+        assert_eq!(rows[1].slot_s, 2.0);
+    }
+
+    #[test]
+    fn errors_name_line_and_list_columns() {
+        let bad_slot = "\
+job,user,arrival_s,slot_s,stages,heavy
+g0,1,0.0,xyz,2,1
+";
+        let err = rows_of(bad_slot, None).unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(err.contains("bad slot_s 'xyz'"), "{err}");
+        assert!(err.contains(NATIVE_COLUMNS), "{err}");
+
+        let bad_fields = "\
+job,user,arrival_s,slot_s,stages,heavy
+g0,1,0.0
+";
+        let err = rows_of(bad_fields, None).unwrap_err();
+        assert!(err.contains("line 2") && err.contains("expected 6 fields"), "{err}");
+
+        let unsorted = "\
+job,user,arrival_s,slot_s,stages,heavy
+g0,1,5.0,1.0,1,0
+g1,1,4.0,1.0,1,0
+";
+        let err = rows_of(unsorted, None).unwrap_err();
+        assert!(err.contains("line 3") && err.contains("sorted"), "{err}");
+
+        let err = rows_of("nope,header\n", None).unwrap_err();
+        assert!(err.contains(NATIVE_COLUMNS) && err.contains(GCLUSTER_COLUMNS), "{err}");
+
+        let err = rows_of("", None).unwrap_err();
+        assert!(err.contains("empty trace"), "{err}");
+    }
+
+    #[test]
+    fn validation_rejects_bad_values() {
+        for row in [
+            "g0,1,-1.0,5.0,1,0",  // negative arrival
+            "g0,1,0.0,0.0,1,0",   // zero slot
+            "g0,1,0.0,5.0,9,0",   // stages out of range
+            "g0,1,0.0,5.0,1,yes", // bad heavy
+        ] {
+            let text = format!("{NATIVE_COLUMNS}\n{row}\n");
+            assert!(rows_of(&text, None).is_err(), "{row}");
+        }
+    }
+
+    #[test]
+    fn format_parse_and_forcing() {
+        assert_eq!(TraceFormat::parse("").unwrap(), None);
+        assert_eq!(TraceFormat::parse("auto").unwrap(), None);
+        assert_eq!(TraceFormat::parse("native").unwrap(), Some(TraceFormat::Native));
+        assert_eq!(TraceFormat::parse("gcluster").unwrap(), Some(TraceFormat::GCluster));
+        assert!(TraceFormat::parse("csv").unwrap_err().contains("gcluster"));
+        // Forcing a format asserts it against the header.
+        let rows = rows_of(NATIVE, Some(TraceFormat::Native)).unwrap();
+        assert_eq!(rows.len(), 2);
+        // A mismatched (or missing) header under a forced format is a
+        // loud error, never a silently-consumed first data row.
+        let err = rows_of(NATIVE, Some(TraceFormat::GCluster)).unwrap_err();
+        assert!(err.contains("forced format 'gcluster'"), "{err}");
+        let headerless = "g0,1,0.0,5.0,1,0\n";
+        let err = rows_of(headerless, Some(TraceFormat::Native)).unwrap_err();
+        assert!(err.contains("unrecognized trace header"), "{err}");
+    }
+}

@@ -1,0 +1,357 @@
+//! One-pass §5.3 shaping over a sorted raw-row stream.
+//!
+//! The paper's macro pipeline (filter jobs above 10× the median runtime,
+//! rebalance heavy users to >90 % of the work, rescale to the target
+//! utilization) is inherently two-pass: the median and the work totals
+//! are global statistics. The in-memory synthetic generator keeps that
+//! exact pipeline ([`crate::workload::gtrace::shape_exact`], the
+//! differential oracle). Real trace files are shaped here in **one
+//! pass** with streaming statistics instead:
+//!
+//! * the runtime-tail **filter** tests each row against the *running* P²
+//!   median estimate ([`crate::metrics::streaming::P2Quantile`], O(1)
+//!   state) rather than the global median;
+//! * the **rebalance** and **rescale** factors are frozen from a bounded
+//!   warmup window — the first `warmup` rows are buffered, per-class
+//!   work accumulators and the window's time span yield the heavy-user
+//!   scale and the utilization scale, then the buffer is flushed and
+//!   every later row is shaped in O(1).
+//!
+//! Resident state is O(warmup) during the window and O(1) after — never
+//! O(trace length). Accuracy versus the exact two-pass oracle is bounded
+//! by the differential test (`tests/trace_replay.rs`): job count within
+//! 2 %, response-time quantiles within the documented P² tolerances
+//! ([`crate::bench::scale::P2_QUANTILE_RTOL`] /
+//! [`crate::bench::scale::P2_P99_RTOL`]).
+
+use std::collections::VecDeque;
+
+use super::reader::RawRow;
+use crate::metrics::streaming::P2Quantile;
+
+/// Shaping knobs (defaults mirror the gtrace §5.3 parameters).
+#[derive(Clone, Debug)]
+pub struct ShapeParams {
+    /// Rows buffered before the rebalance/rescale factors freeze.
+    pub warmup: usize,
+    /// Runtime filter threshold (× running P² median).
+    pub filter_median_mult: f64,
+    /// Target fraction of total work from heavy users.
+    pub heavy_work_fraction: f64,
+    /// Target theoretical utilization: work / (cores × span).
+    pub target_utilization: f64,
+    /// Cluster size the shaping targets.
+    pub cores: u32,
+}
+
+impl Default for ShapeParams {
+    fn default() -> Self {
+        ShapeParams {
+            warmup: 4096,
+            filter_median_mult: 10.0,
+            heavy_work_fraction: 0.92,
+            target_utilization: 1.05,
+            cores: 32,
+        }
+    }
+}
+
+/// One shaped row, ready for job materialization. The trace's `stages`
+/// column is deliberately absent: shaping rescales the job size, and the
+/// §5.3 builder re-synthesizes the stage chain from the *shaped* size
+/// (only the raw replay path honors the column).
+#[derive(Clone, Debug)]
+pub struct ShapedRow {
+    pub index: u64,
+    pub name: String,
+    pub user: u32,
+    pub arrival_s: f64,
+    /// Shaped total sequential work (core-seconds).
+    pub slot_s: f64,
+    pub heavy: bool,
+}
+
+/// Counters exposed for observability and the bounded-state assertions.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShapeStats {
+    pub rows_in: u64,
+    /// Rows dropped by the runtime-tail filter.
+    pub rows_dropped: u64,
+    /// Peak warmup-buffer occupancy (≤ warmup by construction).
+    pub max_buffered: usize,
+    /// Heavy-user rebalance factor (1.0 until frozen).
+    pub heavy_scale: f64,
+    /// Utilization rescale factor (1.0 until frozen).
+    pub util_scale: f64,
+}
+
+/// Frozen rebalance/rescale factors.
+#[derive(Clone, Copy, Debug)]
+struct Factors {
+    heavy_scale: f64,
+    util_scale: f64,
+}
+
+/// The one-pass shaper: push raw rows (sorted by arrival), pop shaped
+/// rows. `finish()` must be called at end of input so a shorter-than-
+/// warmup trace still flushes (degenerating to a near-exact shaping of
+/// the whole file).
+pub struct OnePassShaper {
+    p: ShapeParams,
+    median: P2Quantile,
+    buf: VecDeque<RawRow>,
+    out: VecDeque<ShapedRow>,
+    factors: Option<Factors>,
+    stats: ShapeStats,
+}
+
+impl OnePassShaper {
+    pub fn new(p: ShapeParams) -> OnePassShaper {
+        assert!(p.warmup > 0, "warmup must be >= 1");
+        OnePassShaper {
+            p,
+            median: P2Quantile::median(),
+            buf: VecDeque::new(),
+            out: VecDeque::new(),
+            factors: None,
+            stats: ShapeStats {
+                heavy_scale: 1.0,
+                util_scale: 1.0,
+                ..ShapeStats::default()
+            },
+        }
+    }
+
+    pub fn stats(&self) -> ShapeStats {
+        self.stats
+    }
+
+    /// Observe one raw row. Rows must arrive sorted (the reader enforces
+    /// it); shaped output preserves that order.
+    pub fn push(&mut self, row: RawRow) {
+        self.stats.rows_in += 1;
+        self.median.observe(row.slot_s);
+        if self.factors.is_some() {
+            self.emit(row);
+            return;
+        }
+        self.buf.push_back(row);
+        self.stats.max_buffered = self.stats.max_buffered.max(self.buf.len());
+        if self.buf.len() >= self.p.warmup {
+            self.freeze();
+        }
+    }
+
+    /// Signal end of input: freezes factors from whatever was buffered.
+    pub fn finish(&mut self) {
+        if self.factors.is_none() {
+            self.freeze();
+        }
+    }
+
+    /// Shaped rows ready so far, in arrival order.
+    pub fn pop(&mut self) -> Option<ShapedRow> {
+        self.out.pop_front()
+    }
+
+    /// Compute the rebalance/rescale factors from the warmup window and
+    /// flush the buffer through the filter.
+    fn freeze(&mut self) {
+        let med = self.median.value();
+        let threshold = self.p.filter_median_mult * med;
+        let mut heavy_work = 0.0f64;
+        let mut light_work = 0.0f64;
+        for r in &self.buf {
+            if med > 0.0 && r.slot_s > threshold {
+                continue; // filtered rows don't count toward the factors
+            }
+            if r.heavy {
+                heavy_work += r.slot_s;
+            } else {
+                light_work += r.slot_s;
+            }
+        }
+        // Rebalance so heavy users produce `heavy_work_fraction` of the
+        // work — the exact pipeline's formula over the window's sums.
+        let f = self.p.heavy_work_fraction;
+        let heavy_scale = if heavy_work > 0.0 && light_work > 0.0 {
+            f / (1.0 - f) * light_work / heavy_work
+        } else {
+            1.0
+        };
+        // Rescale the offered-load *rate* (work per second of trace time)
+        // to the utilization target; the window span estimates the rate.
+        let span = match (self.buf.front(), self.buf.back()) {
+            (Some(a), Some(b)) => b.arrival_s - a.arrival_s,
+            _ => 0.0,
+        };
+        let rate = if span > 0.0 {
+            (heavy_work * heavy_scale + light_work) / span
+        } else {
+            0.0
+        };
+        let util_scale = if rate > 0.0 {
+            self.p.target_utilization * self.p.cores as f64 / rate
+        } else {
+            1.0
+        };
+        self.factors = Some(Factors {
+            heavy_scale,
+            util_scale,
+        });
+        self.stats.heavy_scale = heavy_scale;
+        self.stats.util_scale = util_scale;
+        while let Some(row) = self.buf.pop_front() {
+            self.emit(row);
+        }
+    }
+
+    fn emit(&mut self, row: RawRow) {
+        let med = self.median.value();
+        if med > 0.0 && row.slot_s > self.p.filter_median_mult * med {
+            self.stats.rows_dropped += 1;
+            return;
+        }
+        let fx = self.factors.expect("emit before freeze");
+        let class_scale = if row.heavy { fx.heavy_scale } else { 1.0 };
+        self.out.push_back(ShapedRow {
+            index: row.index,
+            slot_s: row.slot_s * class_scale * fx.util_scale,
+            name: row.name,
+            user: row.user,
+            arrival_s: row.arrival_s,
+            heavy: row.heavy,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(index: u64, user: u32, arrival_s: f64, slot_s: f64, heavy: bool) -> RawRow {
+        RawRow {
+            index,
+            line: index + 2,
+            name: format!("g{index}"),
+            user,
+            arrival_s,
+            slot_s,
+            stages: 1,
+            heavy,
+        }
+    }
+
+    fn drain(s: &mut OnePassShaper) -> Vec<ShapedRow> {
+        let mut out = Vec::new();
+        while let Some(r) = s.pop() {
+            out.push(r);
+        }
+        out
+    }
+
+    #[test]
+    fn warmup_buffers_then_flushes_in_order() {
+        let mut s = OnePassShaper::new(ShapeParams {
+            warmup: 4,
+            ..ShapeParams::default()
+        });
+        for i in 0..3u64 {
+            s.push(row(i, 1, i as f64, 10.0, i == 0));
+            assert!(s.pop().is_none(), "nothing may emit during warmup");
+        }
+        s.push(row(3, 2, 3.0, 10.0, false));
+        let out = drain(&mut s);
+        assert_eq!(out.len(), 4);
+        assert!(out.windows(2).all(|w| w[0].index < w[1].index));
+        assert_eq!(s.stats().max_buffered, 4);
+        // Post-freeze rows stream through in O(1).
+        s.push(row(4, 1, 4.0, 10.0, true));
+        assert_eq!(drain(&mut s).len(), 1);
+    }
+
+    #[test]
+    fn short_trace_finish_flushes_everything() {
+        let mut s = OnePassShaper::new(ShapeParams {
+            warmup: 1000,
+            ..ShapeParams::default()
+        });
+        for i in 0..5u64 {
+            s.push(row(i, 1 + (i % 2) as u32, i as f64, 4.0 + i as f64, i % 2 == 0));
+        }
+        assert!(s.pop().is_none());
+        s.finish();
+        assert_eq!(drain(&mut s).len(), 5);
+    }
+
+    #[test]
+    fn filter_drops_running_median_tail() {
+        let mut s = OnePassShaper::new(ShapeParams {
+            warmup: 8,
+            filter_median_mult: 10.0,
+            ..ShapeParams::default()
+        });
+        // Median ≈ 10; a 500-core-s elephant is > 10× the median.
+        for i in 0..8u64 {
+            s.push(row(i, 1, i as f64, 10.0, false));
+        }
+        s.push(row(8, 1, 8.0, 500.0, false));
+        s.push(row(9, 1, 9.0, 12.0, false));
+        s.finish();
+        let out = drain(&mut s);
+        assert_eq!(s.stats().rows_dropped, 1);
+        assert!(out.iter().all(|r| r.index != 8));
+        assert_eq!(out.len(), 9);
+    }
+
+    #[test]
+    fn factors_reproduce_exact_formulas_on_the_window() {
+        // Warmup covers the whole input: the frozen factors must equal
+        // the exact pipeline's formulas computed over all rows.
+        let rows = [
+            row(0, 1, 0.0, 30.0, true),
+            row(1, 2, 2.0, 6.0, false),
+            row(2, 1, 5.0, 20.0, true),
+            row(3, 3, 8.0, 4.0, false),
+        ];
+        let p = ShapeParams {
+            warmup: 100,
+            filter_median_mult: 10.0,
+            heavy_work_fraction: 0.9,
+            target_utilization: 0.8,
+            cores: 16,
+        };
+        let mut s = OnePassShaper::new(p);
+        for r in rows {
+            s.push(r);
+        }
+        s.finish();
+        let st = s.stats();
+        let (heavy, light, span) = (50.0, 10.0, 8.0);
+        let heavy_scale = 0.9 / 0.1 * light / heavy;
+        let rate = (heavy * heavy_scale + light) / span;
+        let util_scale = 0.8 * 16.0 / rate;
+        assert!((st.heavy_scale - heavy_scale).abs() < 1e-12, "{st:?}");
+        assert!((st.util_scale - util_scale).abs() < 1e-12, "{st:?}");
+        let out = drain(&mut s);
+        assert!((out[0].slot_s - 30.0 * heavy_scale * util_scale).abs() < 1e-12);
+        assert!((out[1].slot_s - 6.0 * util_scale).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_windows_fall_back_to_unit_scales() {
+        // Same-instant window (span 0) and single-class windows must not
+        // divide by zero — scales fall back to 1.
+        let mut s = OnePassShaper::new(ShapeParams {
+            warmup: 2,
+            ..ShapeParams::default()
+        });
+        s.push(row(0, 1, 1.0, 5.0, true));
+        s.push(row(1, 2, 1.0, 7.0, true));
+        s.finish();
+        let st = s.stats();
+        assert_eq!(st.heavy_scale, 1.0);
+        assert_eq!(st.util_scale, 1.0);
+        assert_eq!(drain(&mut s).len(), 2);
+    }
+}

@@ -1,0 +1,145 @@
+//! Synthetic trace writer — seeded, parameterized, native-format output.
+//!
+//! Emits the **raw unshaped** §5.3 tuples of the gtrace generator
+//! ([`crate::workload::gtrace::raw_rows`]) as a native trace CSV, sorted
+//! by arrival. Because the rows are written *before* shaping, the file
+//! is a faithful stand-in for a real trace export: replaying it through
+//! the one-pass streaming shaper and running the in-memory generator
+//! (exact two-pass shaping) shape the *same* raw input — which is what
+//! the differential test and the replay bench feed on.
+//!
+//! Floats are written with Rust's shortest round-trip formatting, so
+//! parsing the file back reproduces every value bit-for-bit.
+
+use std::io::{BufWriter, Write};
+
+use crate::s_to_us;
+use crate::workload::gtrace::{self, GtraceParams};
+use crate::workload::UserClass;
+
+use super::reader::NATIVE_COLUMNS;
+
+/// Write the synthetic raw trace for `(seed, params)`; returns the row
+/// count. Rows are sorted by `(arrival, generation index)` — the order
+/// the replay stream (and the simulator's cursor) consumes.
+pub fn write_synthetic(path: &str, seed: u64, p: &GtraceParams) -> Result<u64, String> {
+    let (raw, _rng) = gtrace::raw_rows(seed, p);
+    let mut rows: Vec<(usize, gtrace::RawTuple)> = raw.into_iter().enumerate().collect();
+    rows.sort_by_key(|(i, r)| (s_to_us(r.arrival_s), *i));
+
+    let f = std::fs::File::create(path).map_err(|e| format!("{path}: {e}"))?;
+    let mut w = BufWriter::new(f);
+    let io = |e: std::io::Error| format!("{path}: {e}");
+    writeln!(w, "{NATIVE_COLUMNS}").map_err(io)?;
+    for (i, r) in &rows {
+        writeln!(
+            w,
+            "g{i},{},{},{},{},{}",
+            r.user,
+            r.arrival_s,
+            r.slot_s,
+            gtrace::stage_count(r.slot_s),
+            u8::from(r.class == UserClass::Heavy),
+        )
+        .map_err(io)?;
+    }
+    w.flush().map_err(io)?;
+    Ok(rows.len() as u64)
+}
+
+/// Gtrace params whose generators produce roughly `jobs` raw rows: the
+/// per-user submission rates are fixed, so the window is solved from the
+/// target count. Used by the 1M-row replay test and the bench.
+pub fn params_for_jobs(jobs: u64, base: &GtraceParams) -> GtraceParams {
+    let heavy = base.heavy_users as f64;
+    let light = (base.users - base.heavy_users) as f64;
+    // Raw generation rates (jobs/s), from the generator's own gap
+    // constants so a tuning there cannot silently skew the solver.
+    let rate = heavy / gtrace::HEAVY_GAP_S + light / gtrace::LIGHT_GAP_S;
+    let mut p = base.clone();
+    p.window_s = (jobs as f64 / rate.max(1e-9)).max(1.0);
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::traceio::reader::RowReader;
+    use crate::TimeUs;
+
+    fn temp(name: &str) -> String {
+        let dir = std::env::temp_dir().join(format!("uwfq_writer_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name).to_str().unwrap().to_string()
+    }
+
+    #[test]
+    fn written_trace_parses_back_bit_exactly() {
+        let p = GtraceParams {
+            window_s: 60.0,
+            users: 6,
+            heavy_users: 2,
+            cores: 8,
+            ..GtraceParams::default()
+        };
+        let path = temp("roundtrip.csv");
+        let n = write_synthetic(&path, 11, &p).unwrap();
+        assert!(n > 10, "tiny trace: {n} rows");
+
+        // Parse back and compare against the generator's raw tuples.
+        let (raw, _) = gtrace::raw_rows(11, &p);
+        assert_eq!(raw.len() as u64, n);
+        let mut expect: Vec<(usize, gtrace::RawTuple)> =
+            raw.into_iter().enumerate().collect();
+        expect.sort_by_key(|(i, r)| (s_to_us(r.arrival_s), *i));
+
+        let mut rd = RowReader::open(&path, None).unwrap();
+        let mut count = 0usize;
+        let mut last: TimeUs = 0;
+        while let Some(row) = rd.next_row().unwrap() {
+            let (gen_idx, exp) = &expect[count];
+            assert_eq!(row.name, format!("g{gen_idx}"));
+            assert_eq!(row.user, exp.user);
+            // Shortest round-trip formatting: bit-exact floats.
+            assert_eq!(row.arrival_s.to_bits(), exp.arrival_s.to_bits());
+            assert_eq!(row.slot_s.to_bits(), exp.slot_s.to_bits());
+            assert_eq!(row.heavy, exp.class == UserClass::Heavy);
+            assert_eq!(row.stages, gtrace::stage_count(exp.slot_s));
+            assert!(s_to_us(row.arrival_s) >= last);
+            last = s_to_us(row.arrival_s);
+            count += 1;
+        }
+        assert_eq!(count as u64, n);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn writer_is_seed_sensitive() {
+        let p = GtraceParams {
+            window_s: 40.0,
+            users: 4,
+            heavy_users: 1,
+            ..GtraceParams::default()
+        };
+        let (a, b) = (temp("seed_a.csv"), temp("seed_b.csv"));
+        write_synthetic(&a, 1, &p).unwrap();
+        write_synthetic(&b, 2, &p).unwrap();
+        assert_ne!(
+            std::fs::read_to_string(&a).unwrap(),
+            std::fs::read_to_string(&b).unwrap()
+        );
+        std::fs::remove_file(&a).ok();
+        std::fs::remove_file(&b).ok();
+    }
+
+    #[test]
+    fn params_for_jobs_hits_target_roughly() {
+        let p = params_for_jobs(5_000, &GtraceParams::default());
+        let (raw, _) = gtrace::raw_rows(3, &p);
+        let n = raw.len() as f64;
+        assert!(
+            (n - 5_000.0).abs() / 5_000.0 < 0.15,
+            "generated {n} rows for a 5k target"
+        );
+    }
+}

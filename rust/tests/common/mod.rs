@@ -1,0 +1,28 @@
+//! Helpers shared by the differential/property test suites (included
+//! via `mod common;` — not a test binary of its own).
+
+use uwfq::sim::SimReport;
+
+/// Full byte-level fingerprint of a report: every completed-job field
+/// (floats by bit pattern) plus the aggregate columns. One definition of
+/// "byte-identical" for all differential suites — extend it here when
+/// `SimReport` grows identity-bearing fields.
+pub fn fingerprint(rep: &SimReport) -> (Vec<(u64, u32, String, u64, u64, u64)>, u64, u64) {
+    (
+        rep.completed
+            .iter()
+            .map(|c| {
+                (
+                    c.job,
+                    c.user,
+                    c.name.to_string(),
+                    c.submit,
+                    c.finish,
+                    c.slot_time.to_bits(),
+                )
+            })
+            .collect(),
+        rep.makespan_s.to_bits(),
+        rep.utilization.to_bits(),
+    )
+}

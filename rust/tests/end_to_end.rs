@@ -1,10 +1,12 @@
 //! Integration: the full three-layer stack composes — workload → UWFQ
 //! scheduling → real thread-per-core executors running the AOT-compiled
-//! Pallas analytics kernel via PJRT → aggregated results.
-//!
-//! Requires `make artifacts` (skips if missing).
+//! Pallas analytics kernel via PJRT → aggregated results (requires
+//! `make artifacts`; skips if missing) — plus CLI end-to-end coverage of
+//! the trace-replay pipeline (`uwfq tracegen` → `uwfq replay`), which
+//! needs no artifacts: the binary itself is the fixture.
 
 use std::path::Path;
+use std::process::Command;
 
 use uwfq::config::Config;
 use uwfq::exec::run_real;
@@ -81,4 +83,112 @@ fn real_backend_errors_on_missing_artifacts() {
     let jobs = vec![micro_job(1, "tiny", 0.0, None)];
     let err = run_real(cfg, jobs, Path::new("/nonexistent/artifacts"), 1.0);
     assert!(err.is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Trace replay CLI (uwfq tracegen → uwfq replay)
+// ---------------------------------------------------------------------------
+
+fn uwfq_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_uwfq"))
+}
+
+fn temp_dir() -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("uwfq_e2e_replay_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn replay_cli_end_to_end() {
+    let dir = temp_dir();
+    let trace = dir.join("synth.csv");
+    let out = uwfq_bin()
+        .args(["tracegen", trace.to_str().unwrap(), "--jobs", "400", "--seed", "11"])
+        .output()
+        .expect("spawn uwfq tracegen");
+    assert!(
+        out.status.success(),
+        "tracegen failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(trace.exists());
+
+    let out = uwfq_bin()
+        .args([
+            "replay",
+            "--trace",
+            trace.to_str().unwrap(),
+            "--quick",
+            "--cores",
+            "8",
+            "--out",
+            dir.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn uwfq replay");
+    assert!(
+        out.status.success(),
+        "replay failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("trace replay"), "{stdout}");
+    let json = std::fs::read_to_string(dir.join("BENCH_replay.json")).unwrap();
+    for key in [
+        "replay/jobs",
+        "replay/jobs_per_s",
+        "replay/peak_in_flight_jobs",
+        "replay/max_buffered_rows",
+        "replay/rt_p95_ecdf_s",
+    ] {
+        assert!(json.contains(key), "BENCH_replay.json missing {key}: {json}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn replay_cli_errors_name_the_problem() {
+    // No trace given: the usage hint names the flag.
+    let out = uwfq_bin().arg("replay").output().expect("spawn");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--trace"), "{err}");
+
+    // Missing file: the error names the path.
+    let out = uwfq_bin()
+        .args(["replay", "--trace", "/nonexistent/trace.csv"])
+        .output()
+        .expect("spawn");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("/nonexistent/trace.csv"), "{err}");
+
+    // Malformed row: the error names the offending line and lists the
+    // format's valid columns.
+    let dir = temp_dir();
+    let bad = dir.join("bad.csv");
+    std::fs::write(
+        &bad,
+        "job,user,arrival_s,slot_s,stages,heavy\ng0,1,0.0,5.0,1,0\ng1,1,1.0,oops,1,0\n",
+    )
+    .unwrap();
+    let out = uwfq_bin()
+        .args(["replay", "--trace", bad.to_str().unwrap()])
+        .output()
+        .expect("spawn");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("line 3"), "{err}");
+    assert!(err.contains("slot_s") && err.contains("columns"), "{err}");
+
+    // Unknown format value: the error lists the valid ones.
+    let out = uwfq_bin()
+        .args(["replay", "--trace", bad.to_str().unwrap(), "--format", "tsv"])
+        .output()
+        .expect("spawn");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("gcluster"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
 }

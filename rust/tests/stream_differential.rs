@@ -17,10 +17,13 @@
 
 use uwfq::config::Config;
 use uwfq::sched::PolicyKind;
-use uwfq::sim::{self, SimReport};
+use uwfq::sim;
 use uwfq::workload::registry::Registry;
 use uwfq::workload::stream::materialize;
 use uwfq::workload::ScenarioSpec;
+
+mod common;
+use common::fingerprint;
 
 fn cfg(policy: PolicyKind) -> Config {
     Config::default().with_cores(8).with_policy(policy)
@@ -41,6 +44,12 @@ fn test_spec(name: &str) -> ScenarioSpec {
         "scenario2" => spec,
         "gtrace" => spec.with("window_s", "90").with("users", "8").with("heavy_users", "2"),
         "tracefile" => spec.with("path", &trace_fixture()),
+        // The checked-in golden fixture; a warmup below the row count
+        // exercises the streaming freeze + post-warmup path.
+        "trace" => spec
+            .with("path", &format!("{}/tests/data/trace_small_a.csv", env!("CARGO_MANIFEST_DIR")))
+            .with("warmup", "8")
+            .with("cores", "8"),
         "scale" => spec.with("users", "20").with("jobs", "300").with("cores", "8"),
         "bursty" => spec.with("users", "3").with("rate", "1.5"),
         "heavytail" => spec.with("users", "3").with("jobs_per_user", "12"),
@@ -64,28 +73,6 @@ t4,2,8.0,10.0,2,0
     let path = dir.join("trace.csv");
     std::fs::write(&path, SAMPLE).unwrap();
     path.to_str().unwrap().to_string()
-}
-
-/// Full byte-level fingerprint of a report: every completed-job field
-/// (floats by bit pattern) plus the aggregate columns.
-fn fingerprint(rep: &SimReport) -> (Vec<(u64, u32, String, u64, u64, u64)>, u64, u64) {
-    (
-        rep.completed
-            .iter()
-            .map(|c| {
-                (
-                    c.job,
-                    c.user,
-                    c.name.to_string(),
-                    c.submit,
-                    c.finish,
-                    c.slot_time.to_bits(),
-                )
-            })
-            .collect(),
-        rep.makespan_s.to_bits(),
-        rep.utilization.to_bits(),
-    )
 }
 
 #[test]
