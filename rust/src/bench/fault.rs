@@ -1,0 +1,258 @@
+//! Fairness-under-failure degradation curves (`uwfq fault`,
+//! `BENCH_fault.json`): UWFQ vs Fair vs FIFO across increasing task
+//! failure rates, plus a straggler/speculation arm and a crash/blacklist
+//! arm.
+//!
+//! The question the grid answers: does UWFQ's fairness advantage survive
+//! re-execution noise? Virtual time is charged once per job at arrival,
+//! so retries, killed speculation clones and crash-lost attempts consume
+//! cores without moving any job in the virtual order — per-user *goodput*
+//! stays proportional to entitlement while per-user wasted core-time
+//! shows up separately in the ledger.
+
+use crate::config::Config;
+use crate::core::job::JobSpec;
+use crate::fault::FaultConfig;
+use crate::sched::PolicyKind;
+use crate::sweep::Sweep;
+use crate::util::benchkit::JsonSink;
+
+/// One (policy × fault arm) grid cell.
+pub struct FaultCell {
+    /// Fault arm name (`clean`, `fail02`, ... `straggle`, `crash`).
+    pub arm: &'static str,
+    /// Policy label ("UWFQ", "Fair", "FIFO").
+    pub label: String,
+    pub mean_rt: f64,
+    pub worst10_rt: f64,
+    /// Jain fairness index over per-user mean response times.
+    pub jain: f64,
+    pub utilization: f64,
+    pub failures: u64,
+    pub retries: u64,
+    pub spec_wins: u64,
+    pub spec_losses: u64,
+    pub crashes: u64,
+    pub good_core_s: f64,
+    pub wasted_core_s: f64,
+}
+
+pub struct FaultBench {
+    pub cells: Vec<FaultCell>,
+    pub jobs: usize,
+    pub users: usize,
+}
+
+/// The degradation-curve policies, strongest fairness machinery first.
+const POLICIES: [PolicyKind; 3] = [PolicyKind::Uwfq, PolicyKind::Fair, PolicyKind::Fifo];
+
+/// The fault arms of the grid. `clean` anchors the curve at zero rates
+/// (and doubles as a live check that the fault fields stay inert).
+fn arms(quick: bool) -> Vec<(&'static str, FaultConfig)> {
+    let fail = |p: f64| FaultConfig {
+        task_fail_prob: p,
+        retry_backoff_s: 0.25,
+        ..Default::default()
+    };
+    vec![
+        ("clean", FaultConfig::default()),
+        ("fail02", fail(0.02)),
+        ("fail05", fail(0.05)),
+        ("fail10", fail(0.10)),
+        (
+            "straggle",
+            FaultConfig {
+                straggler_prob: 0.1,
+                straggler_mult: 4.0,
+                spec_mult: 2.0,
+                ..Default::default()
+            },
+        ),
+        (
+            "crash",
+            FaultConfig {
+                crash_mttf_s: if quick { 40.0 } else { 120.0 },
+                crash_recover_s: 15.0,
+                ..Default::default()
+            },
+        ),
+    ]
+}
+
+/// The bench workload: a deterministic multi-user mix with same-instant
+/// bursts and skewed per-user activity (the differential-test shape,
+/// sized for the bench).
+fn workload(quick: bool, seed: u64) -> Vec<JobSpec> {
+    let n = if quick { 48 } else { 160 };
+    (0..n)
+        .map(|i| {
+            let user = ((i * 7 + seed as usize) % 8) as u32;
+            let arrival_s = if i % 5 == 0 {
+                (i / 5) as f64 * 0.3
+            } else {
+                i as f64 * 0.06
+            };
+            let compute = 0.3 + ((i * 13) % 9) as f64 * 0.35;
+            JobSpec::three_phase(
+                user,
+                &format!("f{i}"),
+                crate::s_to_us(arrival_s),
+                compute,
+                (32 + (i as u64 % 5) * 32) << 20,
+                4,
+                None,
+            )
+        })
+        .collect()
+}
+
+/// Jain's fairness index over per-user mean response times: 1 = every
+/// user sees the same mean RT, 1/n = one user absorbs everything.
+fn jain_over_user_rt(completed: &[crate::core::dag::CompletedJob]) -> f64 {
+    let mut per_user: std::collections::BTreeMap<u32, (f64, u64)> = Default::default();
+    for c in completed {
+        let e = per_user.entry(c.user).or_insert((0.0, 0));
+        e.0 += c.response_time();
+        e.1 += 1;
+    }
+    let means: Vec<f64> = per_user.values().map(|&(s, n)| s / n as f64).collect();
+    let sum: f64 = means.iter().sum();
+    let sq: f64 = means.iter().map(|x| x * x).sum();
+    if sq > 0.0 {
+        sum * sum / (means.len() as f64 * sq)
+    } else {
+        1.0
+    }
+}
+
+/// Run the full grid (policies × fault arms) through the sweep engine.
+pub fn run_fault(base: &Config, quick: bool, swp: &Sweep) -> FaultBench {
+    let jobs = workload(quick, base.seed);
+    let users = {
+        let mut u: Vec<u32> = jobs.iter().map(|j| j.user).collect();
+        u.sort_unstable();
+        u.dedup();
+        u.len()
+    };
+    let mut cells_cfg: Vec<(usize, usize, Config)> = Vec::new();
+    let arm_list = arms(quick);
+    for (ai, (_, fc)) in arm_list.iter().enumerate() {
+        for (pi, &policy) in POLICIES.iter().enumerate() {
+            let mut cfg = base.clone().with_policy(policy);
+            cfg.fault = fc.clone();
+            cells_cfg.push((ai, pi, cfg));
+        }
+    }
+    let cells = swp.run(&cells_cfg, |ctx, (ai, _pi, cfg)| {
+        let report = ctx.simulate(cfg, jobs.clone());
+        let mut rts: Vec<f64> = report.completed.iter().map(|c| c.response_time()).collect();
+        rts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean_rt = rts.iter().sum::<f64>() / rts.len().max(1) as f64;
+        let k = (rts.len() / 10).max(1);
+        let worst10_rt = rts[rts.len() - k..].iter().sum::<f64>() / k as f64;
+        let f = &report.fault;
+        FaultCell {
+            arm: arm_list[*ai].0,
+            label: report.label.clone(),
+            mean_rt,
+            worst10_rt,
+            jain: jain_over_user_rt(&report.completed),
+            utilization: report.utilization,
+            failures: f.failures,
+            retries: f.retries,
+            spec_wins: f.spec_wins,
+            spec_losses: f.spec_losses,
+            crashes: f.crashes,
+            good_core_s: f.good_core_s(),
+            wasted_core_s: f.wasted_core_s(),
+        }
+    });
+    FaultBench {
+        cells,
+        jobs: jobs.len(),
+        users,
+    }
+}
+
+pub fn render(b: &FaultBench) -> String {
+    let header = [
+        "arm", "policy", "RT avg", "RT w10", "Jain", "util", "fail", "retry", "spec+",
+        "spec-", "crash", "waste core-s",
+    ];
+    let rows: Vec<Vec<String>> = b
+        .cells
+        .iter()
+        .map(|c| {
+            vec![
+                c.arm.to_string(),
+                c.label.clone(),
+                super::fmt2(c.mean_rt),
+                super::fmt2(c.worst10_rt),
+                format!("{:.3}", c.jain),
+                super::fmt2(c.utilization),
+                c.failures.to_string(),
+                c.retries.to_string(),
+                c.spec_wins.to_string(),
+                c.spec_losses.to_string(),
+                c.crashes.to_string(),
+                super::fmt1(c.wasted_core_s),
+            ]
+        })
+        .collect();
+    format!(
+        "== fault degradation ({} jobs / {} users) ==\n{}",
+        b.jobs,
+        b.users,
+        super::render_table(&header, &rows)
+    )
+}
+
+pub fn record_metrics(b: &FaultBench, sink: &mut JsonSink) {
+    for c in &b.cells {
+        let p = format!("fault/{}/{}", c.arm, c.label);
+        sink.metric(&format!("{p}/mean_rt_s"), c.mean_rt);
+        sink.metric(&format!("{p}/worst10_rt_s"), c.worst10_rt);
+        sink.metric(&format!("{p}/jain_user_rt"), c.jain);
+        sink.metric(&format!("{p}/utilization"), c.utilization);
+        sink.metric(&format!("{p}/retries"), c.retries as f64);
+        sink.metric(&format!("{p}/wasted_core_s"), c.wasted_core_s);
+        sink.metric(&format!("{p}/good_core_s"), c.good_core_s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_grid_runs_and_clean_arm_is_faultless() {
+        let mut base = Config::default();
+        base.cores = 8;
+        let b = run_fault(&base, true, &Sweep::seq());
+        assert_eq!(b.cells.len(), POLICIES.len() * arms(true).len());
+        for c in b.cells.iter().filter(|c| c.arm == "clean") {
+            assert_eq!(c.failures + c.retries + c.crashes, 0, "{}", c.label);
+            assert_eq!(c.wasted_core_s, 0.0, "{}", c.label);
+            assert!(c.jain > 0.0 && c.jain <= 1.0 + 1e-12);
+        }
+        // Fault arms actually injected something somewhere.
+        assert!(b.cells.iter().any(|c| c.failures > 0));
+        assert!(b.cells.iter().any(|c| c.arm == "crash" && c.crashes > 0));
+        // Every arm completed the whole workload (RTs well-defined).
+        assert!(b.cells.iter().all(|c| c.mean_rt > 0.0));
+    }
+
+    #[test]
+    fn grid_is_deterministic() {
+        let mut base = Config::default();
+        base.cores = 8;
+        let a = run_fault(&base, true, &Sweep::seq());
+        let b = run_fault(&base, true, &Sweep::new(4));
+        for (x, y) in a.cells.iter().zip(&b.cells) {
+            assert_eq!((x.arm, &x.label), (y.arm, &y.label));
+            assert_eq!(x.mean_rt.to_bits(), y.mean_rt.to_bits());
+            assert_eq!(x.retries, y.retries);
+            assert_eq!(x.wasted_core_s.to_bits(), y.wasted_core_s.to_bits());
+        }
+    }
+}

@@ -9,12 +9,15 @@
 //!   `BENCH_scale.json`).
 //! * [`replay`] — the streaming trace-replay harness (`uwfq replay`,
 //!   `BENCH_replay.json`).
+//! * [`fault`] — fairness-under-failure degradation curves (`uwfq
+//!   fault`, `BENCH_fault.json`).
 //!
 //! Every grid is expressed as a list of independent cells over the
 //! [`crate::sweep`] engine: the caller passes a [`crate::sweep::Sweep`]
 //! handle — `Sweep::seq()` for the sequential reference, `Sweep::new(n)`
 //! for n-worker execution with byte-identical output.
 
+pub mod fault;
 pub mod figures;
 pub mod replay;
 pub mod scale;

@@ -40,6 +40,10 @@ USAGE:
   uwfq tracegen FILE [--jobs N] [--seed N] [--param k=v ...]
              # write a seeded synthetic trace (gtrace raw tuples, native
              # CSV) for replay benches and fixtures
+  uwfq fault [--quick] [--threads N] [--out DIR] [--seed N]
+             # fairness-under-failure degradation curves: UWFQ/Fair/FIFO
+             # across failure rates + straggler + crash arms, emits
+             # BENCH_fault.json
   uwfq serve [--cores N] [--time-scale F] [--artifacts DIR]   # real PJRT backend demo
   uwfq ablation [--seed N] [--threads N]                      # design-choice ablations
   uwfq run --scenario scenario2 --eventlog trace.jsonl        # emit event log
@@ -52,6 +56,10 @@ FLAGS (config keys, see config.rs):
   --estimator_sigma S --config FILE
   --scenario NAME --param k=v   (repeatable; `uwfq scenarios` lists them;
   config files spell these `scenario = NAME` and `param.k = v`)
+  --fault.task_fail_prob P --fault.max_failures N --fault.retry_backoff_s S
+  --fault.straggler_prob P --fault.straggler_mult M --fault.spec_mult M
+  --fault.crash_mttf_s S --fault.crash_recover_s S --fault.seed N
+             (deterministic fault injection; all rates default to 0 = off)
 
   --threads N routes the experiment grid through the parallel sweep
   engine (N worker threads; 0 = all cores). Output is byte-identical to
@@ -217,6 +225,19 @@ mod tests {
         // Explicit values still accepted.
         assert!(Cli::parse(&args("scale --verify false")).unwrap().flag("verify")
             == Some("false"));
+    }
+
+    #[test]
+    fn fault_flags_route_to_config() {
+        let c = Cli::parse(&args("run --fault.task_fail_prob 0.05 --fault.seed 9")).unwrap();
+        let cfg = c.config().unwrap();
+        assert_eq!(cfg.fault.task_fail_prob, 0.05);
+        assert_eq!(cfg.fault.seed, 9);
+        assert!(cfg.fault.enabled());
+        // Out-of-range values error with the knob named.
+        let c = Cli::parse(&args("run --fault.task_fail_prob 1.5")).unwrap();
+        let err = c.config().unwrap_err();
+        assert!(err.contains("task_fail_prob"), "{err}");
     }
 
     #[test]

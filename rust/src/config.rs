@@ -4,6 +4,7 @@
 //! Values can be overridden from CLI flags (`--cores`, `--atr`, ...) or a
 //! simple `key = value` config file (see [`Config::from_file`]).
 
+use crate::fault::FaultConfig;
 use crate::partition::SchemeKind;
 use crate::sched::PolicyKind;
 
@@ -41,6 +42,10 @@ pub struct Config {
     /// k=v` flags), validated against the scenario's schema at build time
     /// ([`crate::workload::registry`]). Later entries win.
     pub scenario_params: Vec<(String, String)>,
+    /// Fault injection & recovery knobs (`fault.*` keys). All rates
+    /// default to zero — the fault-free path is byte-identical to a build
+    /// without the subsystem.
+    pub fault: FaultConfig,
 }
 
 impl Default for Config {
@@ -59,6 +64,7 @@ impl Default for Config {
             log_tasks: false,
             scenario: None,
             scenario_params: Vec::new(),
+            fault: FaultConfig::default(),
         }
     }
 }
@@ -66,7 +72,9 @@ impl Default for Config {
 /// Every key [`Config::set`] accepts — listed in unknown-key errors.
 const CONFIG_KEYS: &str = "cores, task_overhead, atr, max_partition_bytes, \
 advisory_partition_bytes, grace_rsec, seed, estimator_sigma, log_tasks, \
-policy, scheme | partitioner, scenario, param.<name>";
+policy, scheme | partitioner, scenario, param.<name>, fault.<knob> \
+(task_fail_prob, max_failures, retry_backoff_s, straggler_prob, \
+straggler_mult, spec_mult, crash_mttf_s, crash_recover_s, seed)";
 
 impl Config {
     pub fn with_policy(mut self, policy: PolicyKind) -> Self {
@@ -111,18 +119,19 @@ impl Config {
 
     /// Set one option by name (shared by config file and CLI flags).
     pub fn set(&mut self, key: &str, val: &str) -> Result<(), String> {
-        fn num<T: std::str::FromStr>(v: &str) -> Result<T, String> {
-            v.parse().map_err(|_| format!("bad number '{v}'"))
+        fn num<T: std::str::FromStr>(key: &str, v: &str) -> Result<T, String> {
+            v.parse()
+                .map_err(|_| format!("{key}: bad number '{v}'"))
         }
         match key {
-            "cores" => self.cores = num(val)?,
-            "task_overhead" => self.task_overhead = num(val)?,
-            "atr" => self.atr = num(val)?,
-            "max_partition_bytes" => self.max_partition_bytes = num(val)?,
-            "advisory_partition_bytes" => self.advisory_partition_bytes = num(val)?,
-            "grace_rsec" => self.grace_rsec = num(val)?,
-            "seed" => self.seed = num(val)?,
-            "estimator_sigma" => self.estimator_sigma = num(val)?,
+            "cores" => self.cores = num(key, val)?,
+            "task_overhead" => self.task_overhead = num(key, val)?,
+            "atr" => self.atr = num(key, val)?,
+            "max_partition_bytes" => self.max_partition_bytes = num(key, val)?,
+            "advisory_partition_bytes" => self.advisory_partition_bytes = num(key, val)?,
+            "grace_rsec" => self.grace_rsec = num(key, val)?,
+            "seed" => self.seed = num(key, val)?,
+            "estimator_sigma" => self.estimator_sigma = num(key, val)?,
             "log_tasks" => self.log_tasks = val == "true" || val == "1",
             "policy" => {
                 self.policy = PolicyKind::parse(val).ok_or_else(|| {
@@ -132,7 +141,25 @@ impl Config {
             "scheme" | "partitioner" => self.scheme = SchemeKind::parse(val)?,
             "scenario" => self.scenario = Some(val.to_string()),
             _ => {
-                if let Some(param) = key.strip_prefix("param.") {
+                if let Some(knob) = key.strip_prefix("fault.") {
+                    match knob {
+                        "task_fail_prob" => self.fault.task_fail_prob = num(key, val)?,
+                        "max_failures" => self.fault.max_failures = num(key, val)?,
+                        "retry_backoff_s" => self.fault.retry_backoff_s = num(key, val)?,
+                        "straggler_prob" => self.fault.straggler_prob = num(key, val)?,
+                        "straggler_mult" => self.fault.straggler_mult = num(key, val)?,
+                        "spec_mult" => self.fault.spec_mult = num(key, val)?,
+                        "crash_mttf_s" => self.fault.crash_mttf_s = num(key, val)?,
+                        "crash_recover_s" => self.fault.crash_recover_s = num(key, val)?,
+                        "seed" => self.fault.seed = num(key, val)?,
+                        _ => {
+                            return Err(format!(
+                                "unknown fault knob '{key}' (valid keys: {CONFIG_KEYS})"
+                            ))
+                        }
+                    }
+                    self.fault.validate()?;
+                } else if let Some(param) = key.strip_prefix("param.") {
                     if param.is_empty() {
                         return Err("empty param name (use param.<name> = value)".into());
                     }
@@ -230,6 +257,32 @@ mod tests {
             .scenario_params
             .contains(&("path".to_string(), "/data/google.csv".to_string())));
         assert!(c.scenario_params.contains(&("warmup".to_string(), "1024".to_string())));
+    }
+
+    #[test]
+    fn fault_knobs_parse_and_validate() {
+        let mut c = Config::default();
+        assert!(!c.fault.enabled(), "faults must default to off");
+        c.apply_lines(
+            "fault.task_fail_prob = 0.05\nfault.max_failures = 5\nfault.crash_mttf_s = 120\n",
+        )
+        .unwrap();
+        assert!(c.fault.enabled());
+        assert_eq!(c.fault.task_fail_prob, 0.05);
+        assert_eq!(c.fault.max_failures, 5);
+        assert_eq!(c.fault.crash_mttf_s, 120.0);
+        // Out-of-range values are rejected with the knob named.
+        let err = c.apply_lines("fault.task_fail_prob = 1.5").unwrap_err();
+        assert!(err.contains("task_fail_prob"), "{err}");
+        // Unknown fault knobs list the valid ones.
+        let err = c.apply_lines("fault.bogus = 1").unwrap_err();
+        assert!(err.contains("unknown fault knob"), "{err}");
+        assert!(err.contains("straggler_prob"), "{err}");
+        // Malformed numbers name the offending key.
+        let err = c.apply_lines("fault.seed = abc").unwrap_err();
+        assert!(err.contains("fault.seed") && err.contains("abc"), "{err}");
+        let err = c.apply_lines("cores = abc").unwrap_err();
+        assert!(err.contains("cores") && err.contains("abc"), "{err}");
     }
 
     #[test]

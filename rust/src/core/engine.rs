@@ -50,12 +50,13 @@ use super::arena::Slab;
 use super::dag::{CompletedJob, JobState};
 use super::job::JobSpec;
 use super::stage::StageState;
-use super::task::{RunningTask, TaskRecord, TaskSpec};
+use super::task::{Outcome, RunningTask, TaskRecord, TaskSpec};
 use crate::config::Config;
 use crate::estimate::RuntimeEstimator;
+use crate::fault::{Fate, FaultPlan, FaultStats};
 use crate::partition::PartitionScheme;
 use crate::sched::{Policy, StageMeta, StageView};
-use crate::{s_to_us, us_to_s, JobId, StageId, TimeUs};
+use crate::{s_to_us, us_to_s, JobId, StageId, TimeUs, UserId};
 
 /// Bytes of one data block — must match the AOT artifact geometry
 /// (4096 rows × 8 cols × 4 bytes).
@@ -75,6 +76,30 @@ pub struct Launch {
     /// Work descriptor for the real backend.
     pub blocks: u32,
     pub opcount: u32,
+    /// When this occupancy leaves the core: completion, or — when
+    /// `fails` — the fault-injected failure instant. On the fault-free
+    /// path this is exactly `now + s_to_us(runtime_s)`.
+    pub finish_at: TimeUs,
+    /// Fault plan decided this attempt fails at `finish_at`.
+    pub fails: bool,
+    /// Engine launch sequence for stale-event detection (simulator).
+    pub seq: u64,
+    /// When set, the simulator schedules a speculation check at this
+    /// time (the attempt is a straggler past the `spec_mult` threshold).
+    pub spec_wake_at: Option<TimeUs>,
+}
+
+/// What happened when a scheduled task event fired ([`SchedCore::task_event`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskEvent {
+    /// The attempt completed (stage/DAG state advanced).
+    Finished,
+    /// The attempt failed; re-enqueue `task` on `stage` at `retry_at`.
+    Failed {
+        stage: StageId,
+        task: u32,
+        retry_at: TimeUs,
+    },
 }
 
 pub struct SchedCore {
@@ -113,6 +138,26 @@ pub struct SchedCore {
     /// instead of the incremental index — the reference semantics for
     /// differential tests. Off (incremental) by default.
     pub force_scan_select: bool,
+    // ---- fault machinery (inert when `fault_on` is false) ----------------
+    /// The run's deterministic fault schedule (`None` ⇔ faults off).
+    plan: Option<FaultPlan>,
+    /// Cached `cfg.fault.enabled()` — every fault branch gates on this,
+    /// which is what keeps the zero-rate path byte-identical.
+    fault_on: bool,
+    /// Crashed cores awaiting recovery (never offered work).
+    blacklisted: Vec<bool>,
+    /// Free-heap membership per core — fault paths can otherwise push a
+    /// core that is already queued (e.g. recover racing a stale entry).
+    in_heap: Vec<bool>,
+    /// Per-core crash counter indexing the plan's crash-gap sequence.
+    crash_counts: Vec<u64>,
+    /// Monotone launch sequence: stale timer events (completions or spec
+    /// wake-ups of attempts that died first) are dropped on mismatch.
+    launch_seq: u64,
+    /// Occupied cores (blacklisted idle cores are neither busy nor free).
+    busy: usize,
+    /// Retry/speculation/crash counters + the goodput-vs-waste ledger.
+    pub fault_stats: FaultStats,
 }
 
 impl SchedCore {
@@ -123,6 +168,8 @@ impl SchedCore {
         estimator: Box<dyn RuntimeEstimator>,
     ) -> Self {
         let cores = cfg.cores as usize;
+        let fault_on = cfg.fault.enabled();
+        let plan = fault_on.then(|| FaultPlan::new(cfg.fault.clone()));
         SchedCore {
             cfg,
             policy,
@@ -143,6 +190,14 @@ impl SchedCore {
             task_log: Vec::new(),
             views_buf: Vec::new(),
             force_scan_select: false,
+            plan,
+            fault_on,
+            blacklisted: vec![false; cores],
+            in_heap: vec![true; cores],
+            crash_counts: vec![0; cores],
+            launch_seq: 0,
+            busy: 0,
+            fault_stats: FaultStats::default(),
         }
     }
 
@@ -215,6 +270,21 @@ impl SchedCore {
         self.completed.clear();
         self.task_log.clear();
         self.views_buf.clear();
+        // Fault machinery re-derives from the new config; every per-core
+        // flag and counter starts over (reset-vs-fresh differential).
+        self.fault_on = self.cfg.fault.enabled();
+        self.plan = self
+            .fault_on
+            .then(|| FaultPlan::new(self.cfg.fault.clone()));
+        self.blacklisted.clear();
+        self.blacklisted.resize(cores, false);
+        self.in_heap.clear();
+        self.in_heap.resize(cores, true);
+        self.crash_counts.clear();
+        self.crash_counts.resize(cores, 0);
+        self.launch_seq = 0;
+        self.busy = 0;
+        self.fault_stats = FaultStats::default();
     }
 
     // ---- submission -----------------------------------------------------
@@ -288,6 +358,8 @@ impl SchedCore {
             arrival_seq,
             job_slot,
             active_pos: self.active.len(),
+            retry_queue: std::collections::VecDeque::new(),
+            fail_counts: Vec::new(),
         };
         let slot = self.stages.insert(stage);
         self.active.push(slot);
@@ -305,6 +377,74 @@ impl SchedCore {
                 pending,
             },
         );
+    }
+
+    // ---- free-core heap -------------------------------------------------
+
+    /// Offer a core back to the scheduler. Deduplicated: fault paths
+    /// (recover racing a stale idle entry) may offer a core that is
+    /// already queued.
+    fn push_free(&mut self, core: usize) {
+        if !self.in_heap[core] {
+            self.in_heap[core] = true;
+            self.free_cores.push(Reverse(core));
+        }
+    }
+
+    /// Lowest free non-blacklisted core, without consuming it. Stale
+    /// entries for blacklisted cores are reclaimed lazily here.
+    fn peek_free(&mut self) -> Option<usize> {
+        while let Some(&Reverse(core)) = self.free_cores.peek() {
+            if self.blacklisted[core] {
+                self.free_cores.pop();
+                self.in_heap[core] = false;
+            } else {
+                return Some(core);
+            }
+        }
+        None
+    }
+
+    fn pop_free(&mut self) -> Option<usize> {
+        let core = self.peek_free()?;
+        self.free_cores.pop();
+        self.in_heap[core] = false;
+        Some(core)
+    }
+
+    /// Core-µs a finished/killed occupancy consumed, split into the
+    /// goodput-vs-waste ledger (per-user detail only when faults are on —
+    /// the aggregate feeds utilization on every run).
+    fn charge(&mut self, user: UserId, elapsed: u128, good: bool) {
+        if good {
+            self.fault_stats.good_us += elapsed;
+        } else {
+            self.fault_stats.wasted_us += elapsed;
+        }
+        if self.fault_on {
+            let e = self.fault_stats.per_user.entry(user).or_insert((0, 0));
+            if good {
+                e.0 += elapsed;
+            } else {
+                e.1 += elapsed;
+            }
+        }
+    }
+
+    fn log_task(&mut self, rt: &RunningTask, core: usize, now: TimeUs, outcome: Outcome) {
+        if self.cfg.log_tasks {
+            self.task_log.push(TaskRecord {
+                task: rt.task,
+                stage: rt.stage,
+                job: rt.job,
+                user: rt.user,
+                core,
+                started: rt.started,
+                finished: now,
+                attempt: rt.attempt,
+                outcome,
+            });
+        }
     }
 
     // ---- launching ------------------------------------------------------
@@ -376,20 +516,48 @@ impl SchedCore {
             return; // nothing to do — keep the congested path free
         }
         let now_s = us_to_s(now);
-        while let Some(&Reverse(core)) = self.free_cores.peek() {
+        while let Some(core) = self.peek_free() {
             let Some(sid) = self.select_stage(now_s) else {
                 break;
             };
-            self.free_cores.pop();
+            self.pop_free();
             let &slot = self
                 .stage_slots
                 .get(&sid)
                 .expect("policy selected a live stage");
             let stage = self.stages.get_mut(slot);
             let task_idx = stage.launch_next();
+            // Decide this attempt's fate from the deterministic plan.
+            let attempt = if self.fault_on {
+                stage.failures_of(task_idx as u32)
+            } else {
+                0
+            };
             let t = &stage.tasks[task_idx];
+            let mut fails = false;
+            let mut dur_us = s_to_us(t.runtime_s);
+            let mut spec_wake_at = None;
+            if let Some(plan) = &self.plan {
+                match plan.fate(stage.arrival_seq, stage.idx, task_idx as u32, attempt) {
+                    Fate::Clean => {}
+                    Fate::Fail { frac } => {
+                        fails = true;
+                        dur_us = s_to_us(frac * t.runtime_s).max(1);
+                    }
+                    Fate::Straggle { mult } => {
+                        dur_us = s_to_us(mult * t.runtime_s);
+                        let spec_mult = plan.config().spec_mult;
+                        if spec_mult > 0.0 && mult > spec_mult {
+                            spec_wake_at = Some(now + s_to_us(spec_mult * t.runtime_s).max(1));
+                        }
+                    }
+                }
+            }
+            let finish_at = now + dur_us;
             let task_id = self.next_task;
             self.next_task += 1;
+            self.launch_seq += 1;
+            let seq = self.launch_seq;
             let launch = Launch {
                 core,
                 task: task_id,
@@ -400,6 +568,10 @@ impl SchedCore {
                 runtime_s: t.runtime_s,
                 blocks: t.blocks,
                 opcount: t.opcount,
+                finish_at,
+                fails,
+                seq,
+                spec_wake_at,
             };
             self.cores[core] = Some(RunningTask {
                 task: task_id,
@@ -408,9 +580,15 @@ impl SchedCore {
                 user: stage.user,
                 task_idx,
                 started: now,
-                finish_at: now + s_to_us(t.runtime_s),
+                finish_at,
                 stage_slot: slot,
+                seq,
+                fails,
+                attempt,
+                is_clone: false,
+                sibling: None,
             });
+            self.busy += 1;
             launches.push(launch);
             self.policy.on_task_launched(sid);
         }
@@ -424,18 +602,15 @@ impl SchedCore {
         let rt = self.cores[core]
             .take()
             .expect("task_finished on idle core");
-        self.free_cores.push(Reverse(core));
-        if self.cfg.log_tasks {
-            self.task_log.push(TaskRecord {
-                task: rt.task,
-                stage: rt.stage,
-                job: rt.job,
-                user: rt.user,
-                core,
-                started: rt.started,
-                finished: now,
-            });
+        self.busy -= 1;
+        self.push_free(core);
+        // Speculation race resolved: first finisher wins, the sibling is
+        // killed and its core freed. Only the winner advances stage state.
+        if let Some(sib) = rt.sibling {
+            self.kill_sibling(now, sib, rt.is_clone);
         }
+        self.charge(rt.user, (now - rt.started) as u128, true);
+        self.log_task(&rt, core, now, Outcome::Success);
         let stage = self.stages.get_mut(rt.stage_slot);
         stage.task_finished();
         let complete = stage.is_complete();
@@ -481,10 +656,235 @@ impl SchedCore {
         }
     }
 
+    // ---- fault & recovery events ----------------------------------------
+
+    /// Kill the losing attempt of a speculation race on `core` (the
+    /// winner just finished elsewhere). The loser's runtime is waste; it
+    /// touches no stage/policy counters — exactly one attempt of the
+    /// pair (the winner) accounts for the task.
+    fn kill_sibling(&mut self, now: TimeUs, core: usize, winner_is_clone: bool) {
+        let rt = self.cores[core]
+            .take()
+            .expect("speculation race points at an idle core");
+        self.busy -= 1;
+        self.push_free(core);
+        self.charge(rt.user, (now - rt.started) as u128, false);
+        if winner_is_clone {
+            self.fault_stats.spec_wins += 1;
+        } else {
+            self.fault_stats.spec_losses += 1;
+        }
+        self.log_task(&rt, core, now, Outcome::Killed);
+    }
+
+    /// True iff the timer event tagged `seq` no longer refers to what is
+    /// running on `core` (the attempt finished, failed, was killed, or
+    /// was lost to a crash in the meantime).
+    pub fn is_stale(&self, core: usize, seq: u64) -> bool {
+        match self.cores[core].as_ref() {
+            Some(rt) => rt.seq != seq,
+            None => true,
+        }
+    }
+
+    /// A scheduled task event fired on `core`: completion on the clean
+    /// path, or a fault-injected failure. On failure the attempt leaves
+    /// the core, is charged one failure, and the caller re-enqueues it at
+    /// the returned `retry_at` (exponential backoff) via
+    /// [`SchedCore::retry_ready`].
+    pub fn task_event(&mut self, now: TimeUs, core: usize) -> TaskEvent {
+        let fails = self.cores[core]
+            .as_ref()
+            .expect("task_event on idle core")
+            .fails;
+        if !fails {
+            self.task_finished(now, core);
+            return TaskEvent::Finished;
+        }
+        let rt = self.cores[core].take().expect("checked above");
+        self.busy -= 1;
+        self.push_free(core);
+        self.charge(rt.user, (now - rt.started) as u128, false);
+        self.fault_stats.failures += 1;
+        self.log_task(&rt, core, now, Outcome::Failed);
+        let stage = self.stages.get_mut(rt.stage_slot);
+        stage.task_failed();
+        let failures = stage.record_failure(rt.task_idx as u32);
+        self.policy.on_task_failed(rt.stage);
+        let backoff = self
+            .plan
+            .as_ref()
+            .expect("failure without a fault plan")
+            .retry_delay_us(failures)
+            .max(1);
+        TaskEvent::Failed {
+            stage: rt.stage,
+            task: rt.task_idx as u32,
+            retry_at: now + backoff,
+        }
+    }
+
+    /// A failed task's backoff elapsed: it re-enters its stage's queue
+    /// and the policy is told the stage is selectable again. The stage is
+    /// necessarily still live — a stage cannot complete while one of its
+    /// tasks sits in retry limbo (`finished` never reached the task count).
+    pub fn retry_ready(&mut self, now: TimeUs, stage: StageId, task: u32) {
+        let &slot = self
+            .stage_slots
+            .get(&stage)
+            .expect("retry for a departed stage");
+        self.fault_stats.retries += 1;
+        self.stages.get_mut(slot).requeue(task);
+        self.notify_requeued(now, slot);
+    }
+
+    fn notify_requeued(&mut self, now: TimeUs, slot: u32) {
+        let s = self.stages.get(slot);
+        let view = StageView {
+            stage: s.id,
+            job: s.job,
+            user: s.user,
+            stage_idx: s.idx,
+            running: s.running,
+            pending: s.pending(),
+            arrival_seq: s.arrival_seq,
+        };
+        self.policy.on_task_requeued(us_to_s(now), &view);
+    }
+
+    /// Speculation wake-up for the attempt tagged `seq` on `core`: if it
+    /// is still running (not stale) and unraced, launch a clean clone on
+    /// the lowest free non-blacklisted core. Returns the clone's
+    /// `(finish_at, core, seq)` for the caller to schedule, or `None`
+    /// (stale, already racing, or no core free — the latter counts as
+    /// `spec_skipped`). Clones are engine-internal: no policy
+    /// notifications and no stage-counter changes; the race winner's
+    /// completion stands in for the task.
+    pub fn spec_wake(&mut self, now: TimeUs, core: usize, seq: u64) -> Option<(TimeUs, usize, u64)> {
+        {
+            let Some(rt) = self.cores[core].as_ref() else {
+                return None;
+            };
+            if rt.seq != seq || rt.sibling.is_some() {
+                return None;
+            }
+        }
+        let Some(clone_core) = self.pop_free() else {
+            self.fault_stats.spec_skipped += 1;
+            return None;
+        };
+        let (task, stage, job, user, task_idx, stage_slot, attempt) = {
+            let rt = self.cores[core].as_ref().expect("checked above");
+            (
+                rt.task, rt.stage, rt.job, rt.user, rt.task_idx, rt.stage_slot, rt.attempt,
+            )
+        };
+        let base_s = self.stages.get(stage_slot).tasks[task_idx].runtime_s;
+        let fin = now + s_to_us(base_s).max(1);
+        self.launch_seq += 1;
+        let clone_seq = self.launch_seq;
+        self.cores[clone_core] = Some(RunningTask {
+            task,
+            stage,
+            job,
+            user,
+            task_idx,
+            started: now,
+            finish_at: fin,
+            stage_slot,
+            seq: clone_seq,
+            fails: false,
+            attempt,
+            is_clone: true,
+            sibling: Some(core),
+        });
+        self.busy += 1;
+        self.cores[core].as_mut().expect("checked above").sibling = Some(clone_core);
+        self.fault_stats.spec_launched += 1;
+        Some((fin, clone_core, clone_seq))
+    }
+
+    /// `core` crashes at `now`: its in-flight attempt (if any) is lost
+    /// and the core blacklists until [`SchedCore::recover`]. A lost sole
+    /// attempt is requeued immediately at the same attempt number — a
+    /// crash is not the task's fault, so no failure charge and no
+    /// backoff (and the stateless plan re-decides the same fate). A lost
+    /// racer just leaves its sibling as the task's only attempt.
+    pub fn crash(&mut self, now: TimeUs, core: usize) {
+        debug_assert!(!self.blacklisted[core], "crash on blacklisted core");
+        self.fault_stats.crashes += 1;
+        self.blacklisted[core] = true;
+        if self.cfg.log_tasks {
+            self.fault_stats
+                .crash_windows
+                .push((core, now, now + self.recover_delay_us()));
+        }
+        let Some(rt) = self.cores[core].take() else {
+            return; // idle core: its stale heap entry is skipped lazily
+        };
+        self.busy -= 1;
+        self.charge(rt.user, (now - rt.started) as u128, false);
+        self.fault_stats.tasks_lost_to_crash += 1;
+        self.log_task(&rt, core, now, Outcome::CrashLost);
+        if let Some(sib) = rt.sibling {
+            // The surviving racer becomes the task's sole attempt.
+            if let Some(s) = self.cores[sib].as_mut() {
+                s.sibling = None;
+            }
+        } else {
+            let stage = self.stages.get_mut(rt.stage_slot);
+            stage.task_failed();
+            stage.requeue(rt.task_idx as u32);
+            self.policy.on_task_failed(rt.stage);
+            self.notify_requeued(now, rt.stage_slot);
+        }
+    }
+
+    /// `core`'s recovery window elapsed: it re-enters service and is
+    /// offered back to the scheduler.
+    pub fn recover(&mut self, _now: TimeUs, core: usize) {
+        debug_assert!(self.blacklisted[core], "recover on healthy core");
+        self.blacklisted[core] = false;
+        if self.cores[core].is_none() {
+            self.push_free(core);
+        }
+    }
+
+    /// Draw the next inter-crash gap for `core` from the plan's per-core
+    /// sequence (advances the core's crash cursor). `None` ⇔ crashes off.
+    pub fn next_crash_gap_us(&mut self, core: usize) -> Option<TimeUs> {
+        let plan = self.plan.as_ref()?;
+        let idx = self.crash_counts[core];
+        let gap = plan.crash_gap_us(core, idx)?;
+        self.crash_counts[core] += 1;
+        Some(gap)
+    }
+
+    /// Blacklist window length after a crash.
+    pub fn recover_delay_us(&self) -> TimeUs {
+        s_to_us(self.cfg.fault.crash_recover_s).max(1)
+    }
+
+    /// Whether any fault class is live this run (simulator gate).
+    pub fn faults_enabled(&self) -> bool {
+        self.fault_on
+    }
+
+    pub fn is_blacklisted(&self, core: usize) -> bool {
+        self.blacklisted[core]
+    }
+
+    /// Total core-µs consumed by completed occupancies (goodput + waste)
+    /// — the utilization numerator, engine-side so re-execution, kills
+    /// and crashes are all accounted at the instant they resolve.
+    pub fn busy_core_us(&self) -> u128 {
+        self.fault_stats.good_us + self.fault_stats.wasted_us
+    }
+
     // ---- introspection --------------------------------------------------
 
     pub fn busy_cores(&self) -> usize {
-        self.cores.len() - self.free_cores.len()
+        self.busy
     }
 
     pub fn core_state(&self, core: usize) -> Option<&RunningTask> {
@@ -776,6 +1176,273 @@ mod tests {
             cap_after_first,
             "arena slots must be recycled, not leaked, across job churn"
         );
+    }
+
+    // ---- fault machinery -------------------------------------------------
+
+    fn fault_core(cores: u32, fault: crate::fault::FaultConfig) -> SchedCore {
+        let cfg = Config {
+            cores,
+            task_overhead: 0.0,
+            log_tasks: true,
+            policy: crate::sched::PolicyKind::Fifo,
+            fault,
+            ..Config::default()
+        };
+        SchedCore::from_config(cfg)
+    }
+
+    /// Minimal event loop over the engine's fault API (the simulator's
+    /// heap, in miniature): task events, retry wake-ups, spec wake-ups.
+    fn drive_faulty(c: &mut SchedCore) -> TimeUs {
+        let mut heap: BinaryHeap<Reverse<(TimeUs, u8, u64, u64)>> = BinaryHeap::new();
+        let mut now = 0;
+        let mut guard = 0;
+        loop {
+            for l in c.try_launch(now) {
+                heap.push(Reverse((l.finish_at, 0, l.core as u64, l.seq)));
+                if let Some(w) = l.spec_wake_at {
+                    heap.push(Reverse((w, 2, l.core as u64, l.seq)));
+                }
+            }
+            let Some(Reverse((t, kind, a, b))) = heap.pop() else {
+                break;
+            };
+            now = t;
+            match kind {
+                0 => {
+                    if !c.is_stale(a as usize, b) {
+                        if let TaskEvent::Failed { stage, task, retry_at } =
+                            c.task_event(now, a as usize)
+                        {
+                            heap.push(Reverse((retry_at, 1, stage, task as u64)));
+                        }
+                    }
+                }
+                1 => c.retry_ready(now, a, b as u32),
+                2 => {
+                    if let Some((fin, core, seq)) = c.spec_wake(now, a as usize, b) {
+                        heap.push(Reverse((fin, 0, core as u64, seq)));
+                    }
+                }
+                _ => unreachable!(),
+            }
+            guard += 1;
+            assert!(guard < 100_000, "no progress");
+        }
+        assert!(c.is_idle(), "driver drained but engine not idle");
+        now
+    }
+
+    #[test]
+    fn zero_fault_launches_are_clean() {
+        // With all rates zero the fault fields are inert: no failure flag,
+        // no spec wake-up, and finish_at is exactly now + runtime.
+        let mut c = core(4);
+        assert!(!c.faults_enabled());
+        c.submit_job(0, job(1, 0, 1.0)).unwrap();
+        let now = 5_000;
+        for l in c.try_launch(now) {
+            assert!(!l.fails);
+            assert_eq!(l.spec_wake_at, None);
+            assert_eq!(l.finish_at, now + s_to_us(l.runtime_s));
+        }
+    }
+
+    #[test]
+    fn failed_tasks_retry_until_budget_then_complete() {
+        // fail_prob = 1 with a budget of 2: every task fails exactly
+        // twice, then its third attempt is clean. Completions still
+        // happen, and successful core-time matches the fault-free run.
+        let fault = crate::fault::FaultConfig {
+            task_fail_prob: 1.0,
+            max_failures: 2,
+            retry_backoff_s: 0.001,
+            ..Default::default()
+        };
+        let mut clean = fault_core(2, crate::fault::FaultConfig::default());
+        clean.submit_job(0, job(1, 0, 0.5)).unwrap();
+        drive_faulty(&mut clean);
+        let clean_tasks = clean.task_log.len();
+        let clean_good = clean.fault_stats.good_us;
+        assert!(clean_tasks > 0 && clean.completed.len() == 1);
+
+        let mut c = fault_core(2, fault);
+        c.submit_job(0, job(1, 0, 0.5)).unwrap();
+        drive_faulty(&mut c);
+        assert_eq!(c.completed.len(), 1);
+        let successes = c
+            .task_log
+            .iter()
+            .filter(|t| t.outcome == Outcome::Success)
+            .count();
+        let failures = c
+            .task_log
+            .iter()
+            .filter(|t| t.outcome == Outcome::Failed)
+            .count();
+        assert_eq!(successes, clean_tasks, "each task succeeds exactly once");
+        assert_eq!(failures, 2 * clean_tasks, "budget of 2 failures per task");
+        assert_eq!(c.fault_stats.failures, failures as u64);
+        assert_eq!(c.fault_stats.retries, failures as u64);
+        // Goodput is charged once per successful task: identical to the
+        // fault-free run (stragglers off, so runtimes are unchanged).
+        assert_eq!(c.fault_stats.good_us, clean_good);
+        assert!(c.fault_stats.wasted_us > 0, "failed attempts are waste");
+        // Every success launched at attempt 2.
+        for t in c.task_log.iter().filter(|t| t.outcome == Outcome::Success) {
+            assert_eq!(t.attempt, 2);
+        }
+    }
+
+    #[test]
+    fn speculation_clone_wins_and_kills_straggler() {
+        // Every task straggles at 8× with a 2× speculation threshold:
+        // the clone (launched at 2×base, runs 1×base, done at 3×base)
+        // always beats the straggler (done at 8×base).
+        let fault = crate::fault::FaultConfig {
+            straggler_prob: 1.0,
+            straggler_mult: 8.0,
+            spec_mult: 2.0,
+            ..Default::default()
+        };
+        let mut c = fault_core(8, fault.clone());
+        c.submit_job(0, job(1, 0, 0.5)).unwrap();
+        drive_faulty(&mut c);
+        assert_eq!(c.completed.len(), 1);
+        assert!(c.fault_stats.spec_launched > 0);
+        assert_eq!(c.fault_stats.spec_wins, c.fault_stats.spec_launched);
+        assert_eq!(c.fault_stats.spec_losses, 0);
+        assert!(c.fault_stats.wasted_us > 0, "killed stragglers are waste");
+        let kills = c
+            .task_log
+            .iter()
+            .filter(|t| t.outcome == Outcome::Killed)
+            .count() as u64;
+        assert_eq!(kills, c.fault_stats.spec_wins);
+
+        // With every core occupied by stragglers there is never a free
+        // core to clone onto: speculation is skipped, not deadlocked.
+        let mut tight = fault_core(1, fault);
+        tight.submit_job(0, job(1, 0, 0.5)).unwrap();
+        drive_faulty(&mut tight);
+        assert_eq!(tight.completed.len(), 1);
+        assert_eq!(tight.fault_stats.spec_launched, 0);
+        assert!(tight.fault_stats.spec_skipped > 0);
+    }
+
+    #[test]
+    fn crash_blacklists_requeues_and_recovers() {
+        // Crashes armed (plan exists) but driven manually here.
+        let fault = crate::fault::FaultConfig {
+            crash_mttf_s: 1000.0,
+            crash_recover_s: 5.0,
+            ..Default::default()
+        };
+        let mut c = fault_core(2, fault);
+        c.submit_job(0, job(1, 0, 1.0)).unwrap();
+        let launches = c.try_launch(0);
+        assert_eq!(launches.len(), 2);
+        let lost_task_idx = launches[0].task_idx;
+
+        c.crash(1_000, 0);
+        assert!(c.is_blacklisted(0));
+        assert_eq!(c.fault_stats.crashes, 1);
+        assert_eq!(c.fault_stats.tasks_lost_to_crash, 1);
+        assert_eq!(c.busy_cores(), 1);
+        // The lost attempt is pending again, but the blacklisted core
+        // must not be offered (core 1 is still busy → nothing launches).
+        assert!(c.pending_task_count() > 0);
+        assert!(c.try_launch(2_000).is_empty());
+
+        c.recover(6_000, 0);
+        assert!(!c.is_blacklisted(0));
+        let relaunch = c.try_launch(6_000);
+        assert_eq!(relaunch.len(), 1);
+        assert_eq!(relaunch[0].core, 0);
+        // A crash is not the task's fault: the retry keeps attempt 0 and
+        // charges no failure, no retry.
+        assert_eq!(relaunch[0].task_idx, lost_task_idx);
+        assert_eq!(c.core_state(0).unwrap().attempt, 0);
+        assert_eq!(c.fault_stats.failures, 0);
+        assert_eq!(c.fault_stats.retries, 0);
+
+        // Crashing an idle core loses nothing and recovers cleanly.
+        c.task_finished(7_000, 1);
+        c.crash(7_500, 1);
+        assert_eq!(c.fault_stats.tasks_lost_to_crash, 1);
+        c.recover(8_000, 1);
+        let more = c.try_launch(8_000);
+        assert!(more.iter().any(|l| l.core == 1));
+    }
+
+    #[test]
+    fn fixed_fault_seed_repeats_byte_identically() {
+        let fault = crate::fault::FaultConfig {
+            task_fail_prob: 0.3,
+            straggler_prob: 0.2,
+            straggler_mult: 6.0,
+            spec_mult: 2.0,
+            retry_backoff_s: 0.002,
+            seed: 7,
+            ..Default::default()
+        };
+        let run = || {
+            let mut c = fault_core(4, fault.clone());
+            for u in 0..3 {
+                c.submit_job(0, job(u, 0, 0.4)).unwrap();
+            }
+            drive_faulty(&mut c);
+            (
+                c.completed.iter().map(|r| (r.job, r.finish)).collect::<Vec<_>>(),
+                c.fault_stats.clone(),
+            )
+        };
+        let (a, sa) = run();
+        let (b, sb) = run();
+        assert_eq!(a, b);
+        assert_eq!(sa, sb);
+    }
+
+    #[test]
+    fn reset_clears_fault_state() {
+        // A faulty run, then reset: the recycled core must replay the
+        // same workload byte-identically (launch seq, fail ledgers,
+        // blacklists and stats all re-derived from scratch).
+        let fault = crate::fault::FaultConfig {
+            task_fail_prob: 0.5,
+            retry_backoff_s: 0.002,
+            seed: 3,
+            ..Default::default()
+        };
+        let cfg = Config {
+            cores: 2,
+            task_overhead: 0.0,
+            log_tasks: true,
+            policy: crate::sched::PolicyKind::Fifo,
+            fault,
+            ..Config::default()
+        };
+        let run = |c: &mut SchedCore| {
+            c.submit_job(0, job(3, 0, 0.5)).unwrap();
+            drive_faulty(c);
+            (
+                c.completed.iter().map(|r| (r.job, r.finish)).collect::<Vec<_>>(),
+                c.task_log
+                    .iter()
+                    .map(|t| (t.task, t.core, t.attempt, t.outcome))
+                    .collect::<Vec<_>>(),
+                c.fault_stats.clone(),
+            )
+        };
+        let mut c = SchedCore::from_config(cfg.clone());
+        let first = run(&mut c);
+        assert!(first.2.failures > 0, "test wants actual failures");
+        c.reset(cfg);
+        assert!(c.is_idle());
+        assert_eq!(c.fault_stats, FaultStats::default());
+        let second = run(&mut c);
+        assert_eq!(first, second, "reset run diverged under faults");
     }
 
     #[test]

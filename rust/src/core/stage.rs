@@ -1,6 +1,8 @@
 //! Stage state — the equivalent of Spark's `TaskSetManager`: tracks the
 //! task list, launch cursor, and running/finished counts for one stage.
 
+use std::collections::VecDeque;
+
 use super::task::TaskSpec;
 use crate::{JobId, StageId, TimeUs, UserId};
 
@@ -30,26 +32,39 @@ pub struct StageState {
     /// Position of this stage in the engine's active list (swap-remove
     /// bookkeeping; maintained by the engine).
     pub active_pos: usize,
+    /// Fault-injected tasks whose retry backoff elapsed, waiting for
+    /// relaunch. Empty on the fault-free path.
+    pub retry_queue: VecDeque<u32>,
+    /// Sparse `(task_idx, failures)` ledger — failures are rare, so a
+    /// linear scan beats a map. Empty on the fault-free path.
+    pub fail_counts: Vec<(u32, u32)>,
 }
 
 impl StageState {
     pub fn pending(&self) -> u32 {
-        (self.tasks.len() - self.next_task) as u32
+        (self.tasks.len() - self.next_task) as u32 + self.retry_queue.len() as u32
     }
 
     pub fn has_pending(&self) -> bool {
-        self.next_task < self.tasks.len()
+        self.next_task < self.tasks.len() || !self.retry_queue.is_empty()
     }
 
     pub fn is_complete(&self) -> bool {
         self.finished as usize == self.tasks.len()
     }
 
-    /// Launch the next pending task; returns its index.
+    /// Launch the next pending task; returns its index. Ready retries go
+    /// first (Spark relaunches failed tasks ahead of the virgin cursor).
     pub fn launch_next(&mut self) -> usize {
         debug_assert!(self.has_pending());
-        let idx = self.next_task;
-        self.next_task += 1;
+        let idx = match self.retry_queue.pop_front() {
+            Some(t) => t as usize,
+            None => {
+                let i = self.next_task;
+                self.next_task += 1;
+                i
+            }
+        };
         self.running += 1;
         idx
     }
@@ -58,6 +73,41 @@ impl StageState {
         debug_assert!(self.running > 0);
         self.running -= 1;
         self.finished += 1;
+    }
+
+    /// A running task failed (fault injection): it leaves the core but is
+    /// **not** finished — it re-enters via [`Self::requeue`] after its
+    /// backoff.
+    pub fn task_failed(&mut self) {
+        debug_assert!(self.running > 0);
+        self.running -= 1;
+    }
+
+    /// Re-enqueue a failed task once its retry backoff has elapsed.
+    pub fn requeue(&mut self, task_idx: u32) {
+        self.retry_queue.push_back(task_idx);
+    }
+
+    /// Failures recorded so far for `task_idx` — also the attempt number
+    /// of the task's next launch.
+    pub fn failures_of(&self, task_idx: u32) -> u32 {
+        self.fail_counts
+            .iter()
+            .find(|&&(t, _)| t == task_idx)
+            .map(|&(_, n)| n)
+            .unwrap_or(0)
+    }
+
+    /// Charge one failure against `task_idx`; returns the new count.
+    pub fn record_failure(&mut self, task_idx: u32) -> u32 {
+        for e in &mut self.fail_counts {
+            if e.0 == task_idx {
+                e.1 += 1;
+                return e.1;
+            }
+        }
+        self.fail_counts.push((task_idx, 1));
+        1
     }
 }
 
@@ -87,6 +137,8 @@ mod tests {
             arrival_seq: 0,
             job_slot: 0,
             active_pos: 0,
+            retry_queue: VecDeque::new(),
+            fail_counts: Vec::new(),
         }
     }
 
@@ -117,5 +169,30 @@ mod tests {
         let mut s = mk(1);
         s.launch_next();
         s.launch_next();
+    }
+
+    #[test]
+    fn failure_requeue_lifecycle() {
+        let mut s = mk(2);
+        assert_eq!(s.launch_next(), 0);
+        assert_eq!(s.launch_next(), 1);
+        assert_eq!(s.pending(), 0);
+        // Task 0 fails: off the core, not finished, not yet pending.
+        s.task_failed();
+        assert_eq!(s.record_failure(0), 1);
+        assert_eq!(s.failures_of(0), 1);
+        assert_eq!(s.pending(), 0);
+        assert!(!s.has_pending());
+        // Backoff elapses: the retry becomes pending and launches ahead
+        // of the (exhausted) virgin cursor.
+        s.requeue(0);
+        assert_eq!(s.pending(), 1);
+        assert!(s.has_pending());
+        assert_eq!(s.launch_next(), 0);
+        s.task_finished();
+        s.task_finished();
+        assert!(s.is_complete());
+        assert_eq!(s.record_failure(0), 2, "ledger accumulates per task");
+        assert_eq!(s.failures_of(1), 0);
     }
 }

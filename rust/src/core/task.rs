@@ -32,6 +32,32 @@ pub struct RunningTask {
     pub finish_at: TimeUs,
     /// Arena slot of the stage (engine-internal: O(1) completion path).
     pub stage_slot: u32,
+    /// Monotone per-core launch sequence — stale timer events (spec
+    /// wake-ups, completions of killed attempts) are dropped by sequence
+    /// mismatch.
+    pub seq: u64,
+    /// Fault plan decided this attempt fails at `finish_at`.
+    pub fails: bool,
+    /// Attempt number (0 = first launch).
+    pub attempt: u32,
+    /// This occupancy is a speculative clone of a straggling attempt.
+    pub is_clone: bool,
+    /// Core of the competing attempt (original ↔ clone cross-link) while
+    /// a speculation race is live.
+    pub sibling: Option<usize>,
+}
+
+/// How a task attempt left its core.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// Completed; its runtime counts as goodput.
+    Success,
+    /// Fault-injected failure; retried after backoff.
+    Failed,
+    /// Speculation loser, killed when its sibling finished first.
+    Killed,
+    /// In-flight when its core crashed; requeued immediately.
+    CrashLost,
 }
 
 /// Completed-task record for Gantt-style figures and utilization analysis.
@@ -44,6 +70,10 @@ pub struct TaskRecord {
     pub core: usize,
     pub started: TimeUs,
     pub finished: TimeUs,
+    /// Attempt number of this occupancy (0 on the fault-free path).
+    pub attempt: u32,
+    /// `Success` everywhere on the fault-free path.
+    pub outcome: Outcome,
 }
 
 #[cfg(test)]

@@ -1,0 +1,399 @@
+//! Deterministic fault injection: task failures, stragglers, core
+//! crashes — the robustness layer under the fairness claims.
+//!
+//! Everything here is a **pure function of the fault seed and stable
+//! task coordinates** — there is no RNG stream to advance, so injecting
+//! faults cannot perturb any other random draw in the run and a fixed
+//! `fault.seed` reproduces the exact same failure schedule no matter
+//! how the simulation interleaves events. With every rate at zero the
+//! plan decides `Clean` for every attempt and schedules no crashes, so
+//! a zero-fault run is byte-identical to a build without this module.
+//!
+//! The three injected fault classes (knobs in [`FaultConfig`]):
+//!
+//! * **Task failures** — an attempt fails partway through its runtime
+//!   (a deterministic fraction in `[0.05, 0.95]`), is charged one
+//!   failure, and is resubmitted to its stage after an
+//!   exponential-backoff delay. The injector itself stops failing an
+//!   attempt once `max_failures` is reached, so every task eventually
+//!   succeeds and `completions == arrivals` still holds under faults.
+//! * **Stragglers** — an attempt runs `straggler_mult ×` its clean
+//!   runtime. When speculation is on (`spec_mult > 0`) the engine
+//!   launches a clean clone once the original exceeds `spec_mult ×`
+//!   the estimate; first finisher wins, the loser is killed and its
+//!   core freed.
+//! * **Core crashes** — per-core exponential inter-crash gaps with mean
+//!   `crash_mttf_s`; a crash kills the in-flight attempt (requeued at
+//!   once, not charged as a failure) and blacklists the core for
+//!   `crash_recover_s`.
+//!
+//! Accounting rule (the fairness invariant): virtual time is charged
+//! once per task at job arrival (deadlines never move under retries),
+//! and **goodput** counts only the winning attempt of each task;
+//! every other core-second lands in `wasted_us`. [`FaultStats`]
+//! surfaces both, per run and per user.
+
+use std::collections::BTreeMap;
+
+use crate::{s_to_us, TimeUs, UserId};
+
+/// Knobs for the deterministic fault model. All rates default to zero
+/// (faults disabled); see module docs for semantics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Per-attempt failure probability in `[0, 1]`.
+    pub task_fail_prob: f64,
+    /// Failure budget per task: the injector never fails an attempt at
+    /// or beyond this count, bounding retries per task.
+    pub max_failures: u32,
+    /// Base resubmission delay after a failure; attempt `k` waits
+    /// `retry_backoff_s · 2^(k-1)` seconds before re-entering its stage.
+    pub retry_backoff_s: f64,
+    /// Per-attempt straggler probability in `[0, 1]`.
+    pub straggler_prob: f64,
+    /// Runtime multiplier applied to straggler attempts (> 1).
+    pub straggler_mult: f64,
+    /// Speculation threshold: a running attempt becomes a speculation
+    /// candidate once it exceeds `spec_mult ×` its clean runtime
+    /// estimate. `0` disables speculative clones.
+    pub spec_mult: f64,
+    /// Mean time between crashes per core, seconds. `0` disables
+    /// crashes.
+    pub crash_mttf_s: f64,
+    /// Blacklist window after a crash before the core re-enters
+    /// service.
+    pub crash_recover_s: f64,
+    /// Fault-schedule seed, independent of the workload seed.
+    pub seed: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            task_fail_prob: 0.0,
+            max_failures: 3,
+            retry_backoff_s: 1.0,
+            straggler_prob: 0.0,
+            straggler_mult: 4.0,
+            spec_mult: 2.0,
+            crash_mttf_s: 0.0,
+            crash_recover_s: 30.0,
+            seed: 0,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// True iff any fault class can fire. The engine skips every fault
+    /// branch when this is false, which is what makes the zero-rate
+    /// differential exact.
+    pub fn enabled(&self) -> bool {
+        self.task_fail_prob > 0.0 || self.straggler_prob > 0.0 || self.crash_mttf_s > 0.0
+    }
+
+    /// Validate ranges; errors name the offending `fault.*` key.
+    pub fn validate(&self) -> Result<(), String> {
+        for (key, v) in [
+            ("fault.task_fail_prob", self.task_fail_prob),
+            ("fault.straggler_prob", self.straggler_prob),
+        ] {
+            if !(0.0..=1.0).contains(&v) {
+                return Err(format!("{key} must be in [0, 1], got {v}"));
+            }
+        }
+        for (key, v) in [
+            ("fault.retry_backoff_s", self.retry_backoff_s),
+            ("fault.straggler_mult", self.straggler_mult),
+            ("fault.spec_mult", self.spec_mult),
+            ("fault.crash_mttf_s", self.crash_mttf_s),
+            ("fault.crash_recover_s", self.crash_recover_s),
+        ] {
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("{key} must be finite and >= 0, got {v}"));
+            }
+        }
+        if self.straggler_prob > 0.0 && self.straggler_mult < 1.0 {
+            return Err(format!(
+                "fault.straggler_mult must be >= 1 when stragglers are on, got {}",
+                self.straggler_mult
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// The decided fate of one task attempt.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Fate {
+    /// Runs to completion at its clean runtime.
+    Clean,
+    /// Fails after `frac ∈ [0.05, 0.95]` of its clean runtime.
+    Fail { frac: f64 },
+    /// Completes, but at `mult ×` its clean runtime.
+    Straggle { mult: f64 },
+}
+
+/// splitmix64 finalizer — same mixing constants as `util::rng`, kept
+/// local so the fault schedule is a closed function of its inputs.
+fn mix(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Fold a key tuple into one well-mixed 64-bit hash.
+fn fold(seed: u64, parts: &[u64]) -> u64 {
+    let mut h = mix(seed);
+    for &p in parts {
+        h = mix(h ^ p);
+    }
+    h
+}
+
+/// Map a hash onto `[0, 1)` with 53 bits of precision (the same
+/// conversion `util::rng` uses).
+fn unit(h: u64) -> f64 {
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Domain-separation salts so the three draw families never alias.
+const SALT_FATE: u64 = 0xFA7E;
+const SALT_FRAC: u64 = 0xF2AC;
+const SALT_CRASH: u64 = 0xC2A5;
+
+/// The per-run fault schedule: a stateless oracle keyed on stable task
+/// coordinates `(arrival_seq, stage_idx, task_idx, attempt)` and, for
+/// crashes, `(core, crash_idx)`. Stateless is the point — fates are
+/// reproducible under any event interleaving and under engine reset.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    cfg: FaultConfig,
+}
+
+impl FaultPlan {
+    pub fn new(cfg: FaultConfig) -> Self {
+        FaultPlan { cfg }
+    }
+
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    /// Decide the fate of attempt `attempt` of a task. Attempts past
+    /// the failure budget can still straggle but never fail, so a
+    /// task's retry chain always terminates in a completion.
+    pub fn fate(&self, arrival_seq: u64, stage_idx: usize, task_idx: u32, attempt: u32) -> Fate {
+        let pf = self.cfg.task_fail_prob;
+        let ps = self.cfg.straggler_prob;
+        if pf <= 0.0 && ps <= 0.0 {
+            return Fate::Clean;
+        }
+        let key = [
+            SALT_FATE,
+            arrival_seq,
+            stage_idx as u64,
+            task_idx as u64,
+            attempt as u64,
+        ];
+        let u = unit(fold(self.cfg.seed, &key));
+        if u < pf && attempt < self.cfg.max_failures {
+            let key = [
+                SALT_FRAC,
+                arrival_seq,
+                stage_idx as u64,
+                task_idx as u64,
+                attempt as u64,
+            ];
+            let f = unit(fold(self.cfg.seed, &key));
+            Fate::Fail { frac: 0.05 + 0.90 * f }
+        } else if u < pf + ps {
+            Fate::Straggle { mult: self.cfg.straggler_mult }
+        } else {
+            Fate::Clean
+        }
+    }
+
+    /// The `idx`-th inter-crash gap on `core` (exponential with mean
+    /// `crash_mttf_s`, clamped to ≥ 1 µs so a pathological draw cannot
+    /// produce a zero-width crash loop). `None` when crashes are off.
+    pub fn crash_gap_us(&self, core: usize, idx: u64) -> Option<TimeUs> {
+        if self.cfg.crash_mttf_s <= 0.0 {
+            return None;
+        }
+        let u = unit(fold(self.cfg.seed, &[SALT_CRASH, core as u64, idx]));
+        let gap_s = -self.cfg.crash_mttf_s * (1.0 - u).ln();
+        Some(s_to_us(gap_s).max(1))
+    }
+
+    /// Backoff before resubmitting a task after its `failures`-th
+    /// failure (1-based): `retry_backoff_s · 2^(failures-1)`, exponent
+    /// capped so the shift cannot overflow.
+    pub fn retry_delay_us(&self, failures: u32) -> TimeUs {
+        let exp = failures.saturating_sub(1).min(20);
+        s_to_us(self.cfg.retry_backoff_s * (1u64 << exp) as f64)
+    }
+}
+
+/// Fault/recovery counters for one run, surfaced on `SimReport` and
+/// `StreamSummary`. `good_us`/`wasted_us` split every core-µs the run
+/// consumed: the winning attempt of each task is goodput, every other
+/// attempt (failed, killed speculation loser, lost to a crash) is
+/// waste. Per-user totals use a `BTreeMap` so iteration order — and
+/// therefore any derived rendering — is deterministic.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultStats {
+    /// Injected task failures (each consumes one retry).
+    pub failures: u64,
+    /// Resubmissions that re-entered a stage after backoff.
+    pub retries: u64,
+    /// Speculative clones launched.
+    pub spec_launched: u64,
+    /// Speculations where the clone finished first.
+    pub spec_wins: u64,
+    /// Speculations where the original finished first (clone killed).
+    pub spec_losses: u64,
+    /// Speculation candidates skipped because no free core existed.
+    pub spec_skipped: u64,
+    /// Core crashes.
+    pub crashes: u64,
+    /// In-flight attempts killed by a crash.
+    pub tasks_lost_to_crash: u64,
+    /// Core-µs spent on winning attempts.
+    pub good_us: u128,
+    /// Core-µs spent on failed / killed / crash-lost attempts.
+    pub wasted_us: u128,
+    /// Per-user `(good_us, wasted_us)` — the goodput ledger behind the
+    /// fairness-under-failure claim. Only populated when faults are on.
+    pub per_user: BTreeMap<UserId, (u128, u128)>,
+    /// Crash windows `(core, crashed_at, recovered_at)`; recorded only
+    /// when task logging is on (same gate as the task log).
+    pub crash_windows: Vec<(usize, TimeUs, TimeUs)>,
+}
+
+impl FaultStats {
+    pub fn good_core_s(&self) -> f64 {
+        self.good_us as f64 / 1e6
+    }
+
+    pub fn wasted_core_s(&self) -> f64 {
+        self.wasted_us as f64 / 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(f: impl FnOnce(&mut FaultConfig)) -> FaultPlan {
+        let mut cfg = FaultConfig::default();
+        f(&mut cfg);
+        FaultPlan::new(cfg)
+    }
+
+    #[test]
+    fn zero_rates_are_always_clean() {
+        let p = plan(|_| {});
+        for seq in 0..50 {
+            for attempt in 0..4 {
+                assert_eq!(p.fate(seq, 0, 0, attempt), Fate::Clean);
+            }
+        }
+        assert_eq!(p.crash_gap_us(0, 0), None);
+    }
+
+    #[test]
+    fn fates_are_deterministic_and_seed_sensitive() {
+        let a = plan(|c| {
+            c.task_fail_prob = 0.3;
+            c.straggler_prob = 0.2;
+            c.seed = 7;
+        });
+        let b = plan(|c| {
+            c.task_fail_prob = 0.3;
+            c.straggler_prob = 0.2;
+            c.seed = 8;
+        });
+        let fates_a: Vec<Fate> = (0..200).map(|i| a.fate(i, 1, 2, 0)).collect();
+        let again: Vec<Fate> = (0..200).map(|i| a.fate(i, 1, 2, 0)).collect();
+        assert_eq!(fates_a, again, "same seed must reproduce fates");
+        let fates_b: Vec<Fate> = (0..200).map(|i| b.fate(i, 1, 2, 0)).collect();
+        assert_ne!(fates_a, fates_b, "different seeds must diverge");
+    }
+
+    #[test]
+    fn fail_rate_roughly_matches_probability() {
+        let p = plan(|c| {
+            c.task_fail_prob = 0.25;
+            c.seed = 42;
+        });
+        let fails = (0..4000)
+            .filter(|&i| matches!(p.fate(i, 0, 0, 0), Fate::Fail { .. }))
+            .count();
+        let rate = fails as f64 / 4000.0;
+        assert!((rate - 0.25).abs() < 0.03, "observed fail rate {rate}");
+    }
+
+    #[test]
+    fn failure_budget_caps_fail_fate() {
+        let p = plan(|c| {
+            c.task_fail_prob = 1.0;
+            c.max_failures = 2;
+        });
+        assert!(matches!(p.fate(0, 0, 0, 0), Fate::Fail { .. }));
+        assert!(matches!(p.fate(0, 0, 0, 1), Fate::Fail { .. }));
+        // At the budget the injector must stop failing this task.
+        assert_eq!(p.fate(0, 0, 0, 2), Fate::Clean);
+        assert_eq!(p.fate(0, 0, 0, 9), Fate::Clean);
+    }
+
+    #[test]
+    fn fail_fraction_stays_in_band() {
+        let p = plan(|c| {
+            c.task_fail_prob = 1.0;
+            c.seed = 3;
+        });
+        for i in 0..500 {
+            if let Fate::Fail { frac } = p.fate(i, 0, 0, 0) {
+                assert!((0.05..=0.95).contains(&frac), "frac {frac}");
+            }
+        }
+    }
+
+    #[test]
+    fn crash_gaps_positive_and_mean_near_mttf() {
+        let p = plan(|c| {
+            c.crash_mttf_s = 10.0;
+            c.seed = 9;
+        });
+        let gaps: Vec<TimeUs> = (0..2000).map(|i| p.crash_gap_us(0, i).unwrap()).collect();
+        assert!(gaps.iter().all(|&g| g >= 1));
+        let mean_s = gaps.iter().map(|&g| g as f64 / 1e6).sum::<f64>() / gaps.len() as f64;
+        assert!((mean_s - 10.0).abs() < 1.0, "mean gap {mean_s}s vs mttf 10s");
+    }
+
+    #[test]
+    fn retry_delay_doubles_and_saturates() {
+        let p = plan(|c| c.retry_backoff_s = 1.0);
+        assert_eq!(p.retry_delay_us(1), s_to_us(1.0));
+        assert_eq!(p.retry_delay_us(2), s_to_us(2.0));
+        assert_eq!(p.retry_delay_us(3), s_to_us(4.0));
+        // Exponent capped — no shift overflow at absurd failure counts.
+        assert_eq!(p.retry_delay_us(80), p.retry_delay_us(21));
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range() {
+        let mut c = FaultConfig::default();
+        c.task_fail_prob = 1.5;
+        assert!(c.validate().unwrap_err().contains("fault.task_fail_prob"));
+        let mut c = FaultConfig::default();
+        c.crash_mttf_s = -1.0;
+        assert!(c.validate().unwrap_err().contains("fault.crash_mttf_s"));
+        let mut c = FaultConfig::default();
+        c.straggler_prob = 0.1;
+        c.straggler_mult = 0.5;
+        assert!(c.validate().unwrap_err().contains("fault.straggler_mult"));
+        assert!(FaultConfig::default().validate().is_ok());
+    }
+}

@@ -15,6 +15,10 @@
 //!   paper's **runtime (ATR) partitioning** (§3.2), and AQE coalescing with
 //!   the runtime-derived minimum-partition override (§4.1.2).
 //! * [`estimate`] — stage runtime estimators (perfect oracle + noisy).
+//! * [`fault`] — deterministic fault injection: seeded task-failure /
+//!   straggler / core-crash schedules ([`fault::FaultPlan`]), retry +
+//!   speculation + blacklist recovery machinery in the engine, and the
+//!   goodput-vs-waste ledger ([`fault::FaultStats`]).
 //! * [`sim`] — a discrete-event cluster simulator (the DAS-5 testbed
 //!   substitute) driving the same scheduler core as the real backend.
 //! * [`exec`] — the real execution backend: a thread-per-core pool where
@@ -59,6 +63,7 @@ pub mod core;
 pub mod data;
 pub mod estimate;
 pub mod exec;
+pub mod fault;
 pub mod metrics;
 pub mod partition;
 pub mod runtime;

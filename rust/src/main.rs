@@ -26,6 +26,7 @@ fn main() -> ExitCode {
     let result = match cli.command.as_str() {
         "reproduce" => reproduce(&cli),
         "sweep" => sweep_cmd(&cli),
+        "fault" => fault_cmd(&cli),
         "scale" => scale_cmd(&cli),
         "replay" => replay_cmd(&cli),
         "tracegen" => tracegen_cmd(&cli),
@@ -73,12 +74,24 @@ fn macro_workload(quick: bool, seed: u64, base: &Config) -> Result<Workload, Str
     }
 }
 
+/// Targets `uwfq reproduce` accepts (checked up front — a typo must be a
+/// hard error, not a silent no-op run).
+const REPRODUCE_TARGETS: [&str; 8] = [
+    "table1", "table2", "fig3", "fig4", "fig5", "fig6", "fig7", "all",
+];
+
 fn reproduce(cli: &Cli) -> Result<(), String> {
     let what = cli
         .positional
         .first()
         .map(|s| s.as_str())
         .unwrap_or("all");
+    if !REPRODUCE_TARGETS.contains(&what) {
+        return Err(format!(
+            "unknown reproduce target '{what}' (valid: {})",
+            REPRODUCE_TARGETS.join(", ")
+        ));
+    }
     let out = cli.flag_or("out", "out");
     std::fs::create_dir_all(&out).map_err(|e| e.to_string())?;
     let mut base = cli.config()?;
@@ -285,6 +298,38 @@ fn sweep_cmd(cli: &Cli) -> Result<(), String> {
         ),
     }
     println!("sweep done → {out}/ (bench → {bench_path})");
+    Ok(())
+}
+
+/// `uwfq fault` — fairness-under-failure degradation curves: UWFQ vs
+/// Fair vs FIFO across increasing task-failure rates plus straggler/
+/// speculation and crash/blacklist arms, through the sweep engine.
+/// Emits `BENCH_fault.json` (the CI fault-smoke artifact).
+fn fault_cmd(cli: &Cli) -> Result<(), String> {
+    let out = cli.flag_or("out", "out");
+    std::fs::create_dir_all(&out).map_err(|e| e.to_string())?;
+    let mut base = cli.config()?;
+    let quick = cli.quick();
+    if cli.flag("cores").is_none() && cli.flag("config").is_none() {
+        base.cores = if quick { 8 } else { 16 };
+    }
+    // The grid sets its own fault arms — a `--fault.*` flag here would be
+    // silently overwritten per cell, so reject it loudly.
+    if base.fault.enabled() {
+        return Err(
+            "uwfq fault sweeps its own fault arms; drop the --fault.* flags \
+             (use `uwfq run --fault.task_fail_prob ...` for a single faulty run)"
+                .into(),
+        );
+    }
+    let par = Sweep::new(cli.threads(uwfq::sweep::auto_threads(None))?);
+    let b = uwfq::bench::fault::run_fault(&base, quick, &par);
+    print!("{}", uwfq::bench::fault::render(&b));
+    let mut sink = JsonSink::new();
+    uwfq::bench::fault::record_metrics(&b, &mut sink);
+    let bench_path = cli.flag_or("bench-json", &format!("{out}/BENCH_fault.json"));
+    sink.write(&bench_path).map_err(|e| e.to_string())?;
+    println!("fault bench done → {bench_path}");
     Ok(())
 }
 
@@ -559,7 +604,18 @@ fn serve(cli: &Cli) -> Result<(), String> {
         .parse()
         .map_err(|_| "bad --time-scale".to_string())?;
     let default_dir = uwfq::runtime::ArtifactStore::default_dir();
-    let artifacts = cli.flag_or("artifacts", default_dir.to_str().unwrap());
+    let artifacts = match cli.flag("artifacts") {
+        Some(a) => a.to_string(),
+        None => default_dir
+            .to_str()
+            .ok_or_else(|| {
+                format!(
+                    "default artifact dir {} is not valid UTF-8; pass --artifacts DIR",
+                    default_dir.display()
+                )
+            })?
+            .to_string(),
+    };
     // A small two-user interactive-style workload.
     let mut jobs = Vec::new();
     for i in 0..4 {

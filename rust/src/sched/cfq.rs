@@ -60,6 +60,18 @@ impl Policy for Cfq {
         self.index.task_launched(stage);
     }
 
+    fn on_task_requeued(&mut self, _now_s: f64, v: &StageView) {
+        // The stage's deadline was fixed at submission; a retry re-enters
+        // under the same deadline (no extra virtual-time charge).
+        let d = self
+            .deadlines
+            .get(&v.stage)
+            .copied()
+            .unwrap_or(f64::INFINITY);
+        self.index
+            .task_requeued(v.stage, (F64Key(d), v.arrival_seq));
+    }
+
     fn on_stage_finish(&mut self, stage: StageId) {
         self.deadlines.remove(&stage);
         self.index.remove(stage);

@@ -54,6 +54,13 @@ impl Policy for Fair {
         }
     }
 
+    fn on_task_requeued(&mut self, _now_s: f64, v: &StageView) {
+        // `v.running` is the engine's current count (the failed task is
+        // already off the core), matching the scan comparator exactly.
+        self.index
+            .task_requeued(v.stage, (v.running, v.arrival_seq, v.stage_idx));
+    }
+
     fn on_stage_finish(&mut self, stage: StageId) {
         self.index.remove(stage);
     }

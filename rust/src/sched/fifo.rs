@@ -35,6 +35,11 @@ impl Policy for Fifo {
         self.index.task_launched(stage);
     }
 
+    fn on_task_requeued(&mut self, _now_s: f64, v: &StageView) {
+        self.index
+            .task_requeued(v.stage, (v.arrival_seq, v.stage_idx));
+    }
+
     fn on_stage_finish(&mut self, stage: StageId) {
         self.index.remove(stage);
     }

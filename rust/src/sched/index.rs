@@ -15,9 +15,12 @@
 //! 2. An entry is *valid* iff its stored key equals the stage's current
 //!    key. A stale-smaller entry surfaces early, is re-pushed with the
 //!    current key, and therefore can never cause a late selection.
-//! 3. Stages whose pending count reaches zero are dropped permanently —
-//!    in this engine a stage's pending count never increases, so it can
-//!    never become selectable again.
+//! 3. Stages whose pending count reaches zero are dropped from the
+//!    index. A fault-injected retry can make a stage selectable again
+//!    ([`StageIndex::task_requeued`]): a dropped stage is re-inserted
+//!    with the caller's key, a live one just gains pending count. On
+//!    the fault-free path pending never increases and the drop is
+//!    permanent.
 //!
 //! Amortized cost: every engine event (submit / launch / task-finish)
 //! pushes O(1) entries, so total heap traffic is O(events · log n).
@@ -124,6 +127,17 @@ impl<K: Ord + Copy> StageIndex<K> {
         }
     }
 
+    /// One task of `stage` re-entered its queue after a fault-injected
+    /// retry: re-increment pending. A stage that had been dropped on
+    /// exhaustion is re-inserted under `key`; a still-live stage keeps
+    /// its current key (the retry does not change its priority).
+    pub fn task_requeued(&mut self, stage: StageId, key: K) {
+        match self.live.get_mut(&stage) {
+            Some(e) => e.1 += 1,
+            None => self.insert(stage, key, 1),
+        }
+    }
+
     /// The minimum-key selectable stage, or `None`. Does not consume the
     /// entry — callers follow up with [`Self::task_launched`] (via the
     /// policy's `on_task_launched`) once the launch actually happens.
@@ -194,6 +208,25 @@ mod tests {
         ix.remove(2);
         assert_eq!(ix.peek(), None);
         assert!(ix.is_empty());
+    }
+
+    #[test]
+    fn requeue_revives_exhausted_stage() {
+        let mut ix: StageIndex<u64> = StageIndex::new();
+        ix.insert(1, 4, 1);
+        ix.insert(2, 7, 1);
+        ix.task_launched(1);
+        assert_eq!(ix.peek(), Some(2), "stage 1 exhausted");
+        // Retry re-inserts the dropped stage with the caller's key.
+        ix.task_requeued(1, 4);
+        assert_eq!(ix.peek(), Some(1));
+        assert_eq!(ix.key_of(1), Some(4));
+        // Requeue on a live stage only bumps pending.
+        ix.task_requeued(2, 99);
+        assert_eq!(ix.key_of(2), Some(7), "live stage keeps its key");
+        ix.task_launched(1);
+        ix.task_launched(2);
+        assert_eq!(ix.peek(), Some(2), "second pending task still there");
     }
 
     #[test]

@@ -90,6 +90,22 @@ pub trait Policy: Send {
     /// `on_stage_finish` when it was the stage's last task.
     fn on_task_finished(&mut self, _stage: StageId) {}
 
+    /// One running task of `stage` failed (fault injection): running −= 1
+    /// but the stage is **not** complete — the task will be requeued
+    /// after its retry backoff. For every policy in this crate the index
+    /// bookkeeping is identical to a task finishing on a stage with work
+    /// left, so the default delegates; a policy whose `on_task_finished`
+    /// ever does completion-specific work must override this.
+    fn on_task_failed(&mut self, stage: StageId) {
+        self.on_task_finished(stage);
+    }
+
+    /// A failed task re-entered its stage's queue after backoff
+    /// (pending += 1). The stage may have left the policy's index when
+    /// it exhausted its pending tasks, so the view carries everything
+    /// needed to re-key it.
+    fn on_task_requeued(&mut self, _now_s: f64, _view: &StageView) {}
+
     /// A stage completed all of its tasks (pool-tree maintenance).
     fn on_stage_finish(&mut self, _stage: StageId) {}
 

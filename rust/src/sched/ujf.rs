@@ -166,6 +166,23 @@ impl Policy for Ujf {
         }
     }
 
+    fn on_task_requeued(&mut self, _now_s: f64, view: &StageView) {
+        let Some(rec) = self.stage_rec.get(&view.stage) else {
+            return;
+        };
+        let u = self.users.get_mut(&rec.user).expect("requeue for absent user");
+        u.pending += 1;
+        // Inner Fair index: the stage may have left on exhaustion; its
+        // re-entry key uses the engine's current running count (the
+        // failed task is already off the core), as the scan path would.
+        u.stages
+            .task_requeued(view.stage, (view.running, rec.seq, rec.idx));
+        // Pending may have left 0 — push a fresh root key so the user is
+        // representable again (same rule as stage submit).
+        let key = u.key(rec.user);
+        self.root.push(Reverse(key));
+    }
+
     fn on_stage_finish(&mut self, stage: StageId) {
         let Some(rec) = self.stage_rec.remove(&stage) else {
             return;

@@ -101,6 +101,15 @@ impl Policy for Uwfq {
         self.index.task_launched(stage);
     }
 
+    fn on_task_requeued(&mut self, _now_s: f64, v: &StageView) {
+        // A retry re-enters under the job's *current* global deadline —
+        // virtual time was charged once at arrival and never again, so
+        // re-execution cannot move the job in the virtual order.
+        let d = self.vt.job_deadline(v.job).unwrap_or(f64::INFINITY);
+        self.index
+            .task_requeued(v.stage, (F64Key(d), v.arrival_seq, v.stage_idx));
+    }
+
     fn on_stage_finish(&mut self, stage: StageId) {
         self.index.remove(stage);
         if let Some((job, _, _)) = self.stage_static.remove(&stage) {

@@ -1,11 +1,20 @@
 //! Discrete-event cluster simulator — the testbed substitute for the
 //! paper's DAS-5 deployment (§5.1).
 //!
-//! Drives a [`SchedCore`] with two event types: job arrivals (from the
-//! workload timeline) and task completions (scheduled at launch time from
-//! the task's ground-truth runtime). The event order reproduces Spark's
-//! offer loop: every completion frees a core, which is immediately
-//! re-offered to the highest-priority pending stage.
+//! Drives a [`SchedCore`] with job arrivals (from the workload timeline)
+//! and task events (scheduled at launch time from the task's ground-truth
+//! runtime — completion, or the fault-injected failure instant). The
+//! event order reproduces Spark's offer loop: every completion frees a
+//! core, which is immediately re-offered to the highest-priority pending
+//! stage.
+//!
+//! When fault injection is armed ([`crate::fault::FaultConfig`]) the heap
+//! carries three more event kinds: retry wake-ups (failed task's backoff
+//! elapsed), speculation wake-ups (straggler passed the `spec_mult`
+//! threshold — clone it), and core crash/recover pairs seeded per core
+//! from the plan's deterministic gap sequence. All of it is inert at the
+//! zero-rate defaults: the heap degenerates to `(time, core)` completions
+//! and the schedule is byte-identical to a build without the subsystem.
 //!
 //! Time is virtual (µs); a full 500 s macro benchmark over four schedulers
 //! simulates in milliseconds, which is what makes the paper's parameter
@@ -19,8 +28,9 @@ use std::sync::{Mutex, OnceLock};
 use crate::core::dag::CompletedJob;
 use crate::core::job::JobSpec;
 use crate::core::task::TaskRecord;
-use crate::core::{Launch, SchedCore};
+use crate::core::{Launch, SchedCore, TaskEvent};
 use crate::config::Config;
+use crate::fault::FaultStats;
 use crate::workload::stream::{JobStream, VecStream};
 use crate::TimeUs;
 
@@ -37,6 +47,9 @@ pub struct SimReport {
     pub makespan_s: f64,
     /// Total core-busy time / (cores × makespan).
     pub utilization: f64,
+    /// Fault-injection counters and the goodput-vs-waste ledger (all
+    /// zeros on a fault-free run).
+    pub fault: FaultStats,
 }
 
 /// Simulate `jobs` (any order; sorted internally by arrival) to
@@ -72,6 +85,7 @@ pub fn simulate_into(core: &mut SchedCore, jobs: Vec<JobSpec>) -> SimReport {
         task_log: std::mem::take(&mut core.task_log),
         makespan_s: summary.makespan_s,
         utilization: summary.utilization,
+        fault: summary.fault,
     }
 }
 
@@ -114,6 +128,9 @@ pub struct StreamSummary {
     pub peak_in_flight_jobs: usize,
     pub makespan_s: f64,
     pub utilization: f64,
+    /// Fault-injection counters and the goodput-vs-waste ledger (all
+    /// zeros on a fault-free run).
+    pub fault: FaultStats,
 }
 
 /// Drive a [`SchedCore`] from a lazy [`JobStream`], draining every
@@ -123,46 +140,111 @@ pub struct StreamSummary {
 /// than the live backlog.
 ///
 /// Event ordering (identical to [`simulate_into`], which shares this
-/// loop): events fire in time order; at equal times completions run
+/// loop): events fire in time order; at equal times heap events run
 /// before arrivals (freed cores are visible to newly arriving jobs
 /// exactly like in the live system, where the completion handler runs
-/// first), same-time completions fire lowest-core first, and same-time
-/// arrivals fire in stream order. Arrivals come from the stream cursor
-/// rather than the heap, so the heap holds only in-flight completions —
-/// at most one entry per core. The stream must yield nondecreasing
-/// arrivals (debug-asserted). Launches go through a reusable buffer
-/// ([`SchedCore::try_launch_into`]) — zero per-event allocations.
+/// first), same-time events fire lowest-kind-then-lowest-core first, and
+/// same-time arrivals fire in stream order. Arrivals come from the
+/// stream cursor rather than the heap. The stream must yield
+/// nondecreasing arrivals (debug-asserted). Launches go through a
+/// reusable buffer ([`SchedCore::try_launch_into`]) — zero per-event
+/// allocations.
+///
+/// Heap entries are `(time, kind, a, b)`:
+///
+/// | kind | event           | `a`, `b`          | work? |
+/// |------|-----------------|-------------------|-------|
+/// | 0    | task event      | core, launch seq  | yes   |
+/// | 1    | retry ready     | stage, task idx   | yes   |
+/// | 2    | spec wake-up    | core, launch seq  | yes   |
+/// | 3    | core recovers   | core, 0           | no    |
+/// | 4    | core crashes    | core, 0           | no    |
+///
+/// "Work" events carry (or may spawn) task progress; environment events
+/// (crash/recover) recur forever, so the loop ends when arrivals are
+/// exhausted, no work events remain and the engine is idle — leftover
+/// environment events are discarded. On the fault-free path only kind 0
+/// exists and the tuple degenerates to the historical `(time, core)`
+/// order, launch seqs never tie on one core.
 pub fn simulate_stream_into<S: JobStream, K: CompletionSink>(
     core: &mut SchedCore,
     mut stream: S,
     sink: &mut K,
 ) -> StreamSummary {
     let label = core.cfg.label();
-    let mut heap: BinaryHeap<Reverse<(TimeUs, usize)>> = BinaryHeap::new();
+    let mut heap: BinaryHeap<Reverse<(TimeUs, u8, u64, u64)>> = BinaryHeap::new();
     let mut launches: Vec<Launch> = Vec::new();
     let mut next_arrival_spec = stream.next_job();
 
     let mut now: TimeUs = 0;
-    let mut busy_us: u128 = 0;
     let mut task_events: u64 = 0;
+    let mut work_events: u64 = 0;
     let mut jobs_completed: u64 = 0;
     let mut peak_in_flight: usize = 0;
     let mut max_finish: TimeUs = 0;
+    // Arm the crash clock of every core from the plan's per-core gap
+    // sequence (no-op unless `fault.crash_mttf_s > 0`).
+    if core.faults_enabled() {
+        for c in 0..core.cfg.cores as usize {
+            if let Some(gap) = core.next_crash_gap_us(c) {
+                heap.push(Reverse((gap, 4, c as u64, 0)));
+            }
+        }
+    }
     loop {
-        let next_done = heap.peek().map(|&Reverse((t, _))| t);
+        if next_arrival_spec.is_none() && work_events == 0 && core.is_idle() {
+            break; // only recurring crash/recover events remain — done
+        }
+        let next_done = heap.peek().map(|&Reverse((t, _, _, _))| t);
         let next_arrival = next_arrival_spec.as_ref().map(|j| j.arrival);
         let take_done = match (next_done, next_arrival) {
             (None, None) => break,
             (Some(_), None) => true,
             (None, Some(_)) => false,
-            (Some(d), Some(a)) => d <= a, // completions first at ties
+            (Some(d), Some(a)) => d <= a, // heap events first at ties
         };
         if take_done {
-            let Reverse((t, c)) = heap.pop().expect("peeked completion");
+            let Reverse((t, kind, a, b)) = heap.pop().expect("peeked event");
             debug_assert!(t >= now, "event time regressed");
             now = t;
-            core.task_finished(now, c);
-            task_events += 1;
+            match kind {
+                0 => {
+                    work_events -= 1;
+                    // Completions of killed/crashed attempts are stale
+                    // (the launch seq no longer matches) and are dropped.
+                    if !core.is_stale(a as usize, b) {
+                        task_events += 1;
+                        if let TaskEvent::Failed { stage, task, retry_at } =
+                            core.task_event(now, a as usize)
+                        {
+                            heap.push(Reverse((retry_at, 1, stage, task as u64)));
+                            work_events += 1;
+                        }
+                    }
+                }
+                1 => {
+                    work_events -= 1;
+                    core.retry_ready(now, a, b as u32);
+                }
+                2 => {
+                    work_events -= 1;
+                    if let Some((fin, c2, seq)) = core.spec_wake(now, a as usize, b) {
+                        heap.push(Reverse((fin, 0, c2 as u64, seq)));
+                        work_events += 1;
+                    }
+                }
+                3 => core.recover(now, a as usize),
+                4 => {
+                    core.crash(now, a as usize);
+                    let recover_at = now + core.recover_delay_us();
+                    heap.push(Reverse((recover_at, 3, a, 0)));
+                    // Next crash only after the core is back in service.
+                    if let Some(gap) = core.next_crash_gap_us(a as usize) {
+                        heap.push(Reverse((recover_at + gap, 4, a, 0)));
+                    }
+                }
+                _ => unreachable!("unknown event kind"),
+            }
         } else {
             // Specs are moved (not cloned) into the engine on arrival.
             let spec = next_arrival_spec.take().expect("peeked arrival");
@@ -176,9 +258,12 @@ pub fn simulate_stream_into<S: JobStream, K: CompletionSink>(
         // try_launch after every event keeps the offer semantics exact.
         core.try_launch_into(now, &mut launches);
         for launch in &launches {
-            let fin = now + crate::s_to_us(launch.runtime_s);
-            busy_us += (fin - now) as u128;
-            heap.push(Reverse((fin, launch.core)));
+            heap.push(Reverse((launch.finish_at, 0, launch.core as u64, launch.seq)));
+            work_events += 1;
+            if let Some(wake) = launch.spec_wake_at {
+                heap.push(Reverse((wake, 2, launch.core as u64, launch.seq)));
+                work_events += 1;
+            }
         }
         // Drain finished jobs immediately: the engine never accumulates
         // per-job completion state on the streaming path.
@@ -195,7 +280,11 @@ pub fn simulate_stream_into<S: JobStream, K: CompletionSink>(
     let makespan_s = crate::us_to_s(max_finish);
     let cores = core.cfg.cores as f64;
     let utilization = if makespan_s > 0.0 {
-        busy_us as f64 / 1e6 / (cores * makespan_s)
+        // Engine-side ledger (goodput + waste): re-execution, killed
+        // clones and crash-lost attempts all count the core-time they
+        // actually consumed. Fault-free runs reduce to the historical
+        // sum of launch runtimes, bit-for-bit.
+        core.busy_core_us() as f64 / 1e6 / (cores * makespan_s)
     } else {
         0.0
     };
@@ -206,6 +295,7 @@ pub fn simulate_stream_into<S: JobStream, K: CompletionSink>(
         peak_in_flight_jobs: peak_in_flight,
         makespan_s,
         utilization,
+        fault: core.fault_stats.clone(),
     }
 }
 
@@ -222,6 +312,7 @@ pub fn simulate_stream<S: JobStream>(cfg: Config, stream: S) -> SimReport {
         task_log: std::mem::take(&mut core.task_log),
         makespan_s: summary.makespan_s,
         utilization: summary.utilization,
+        fault: summary.fault,
     }
 }
 
@@ -339,6 +430,19 @@ fn idle_rt_memo(
     job: &JobSpec,
     run: impl FnOnce(&Config, JobSpec) -> f64,
 ) -> f64 {
+    // Idle baselines are fault-free by definition: the slowdown
+    // denominator is the job alone on a *healthy* cluster, which is also
+    // why the memo key carries no fault fields.
+    let clean;
+    let cfg = if cfg.fault.enabled() {
+        clean = Config {
+            fault: Default::default(),
+            ..cfg.clone()
+        };
+        &clean
+    } else {
+        cfg
+    };
     let key = idle_key(cfg, job);
     let cache = IDLE_CACHE.get_or_init(Default::default);
     if let Some(&rt) = cache.lock().unwrap().get(&key) {
@@ -644,6 +748,67 @@ mod tests {
         // happened.
         assert!(core.completed.is_empty());
         assert!(core.is_idle());
+    }
+
+    #[test]
+    fn faulty_runs_complete_and_repeat_byte_identically() {
+        // All three fault classes armed at once: every arrival still
+        // completes, and a fixed fault seed reproduces the run exactly —
+        // schedule, counters and ledger.
+        let mut c = cfg(4, PolicyKind::Uwfq);
+        c.fault.task_fail_prob = 0.2;
+        c.fault.retry_backoff_s = 0.05;
+        c.fault.straggler_prob = 0.1;
+        c.fault.straggler_mult = 6.0;
+        c.fault.spec_mult = 2.0;
+        c.fault.crash_mttf_s = 20.0;
+        c.fault.crash_recover_s = 2.0;
+        c.fault.seed = 11;
+        let jobs: Vec<JobSpec> = (0..30).map(|i| job(i % 4, i as f64 * 0.2, 0.8)).collect();
+        let a = simulate(c.clone(), jobs.clone());
+        assert_eq!(a.completed.len(), 30, "every arrival completes despite faults");
+        assert!(a.fault.failures > 0, "fail rate 0.2 must fire");
+        assert_eq!(a.fault.retries, a.fault.failures);
+        assert!(a.fault.wasted_us > 0);
+        let b = simulate(c, jobs);
+        let fa: Vec<_> = a.completed.iter().map(|r| (r.job, r.finish)).collect();
+        let fb: Vec<_> = b.completed.iter().map(|r| (r.job, r.finish)).collect();
+        assert_eq!(fa, fb, "fixed fault seed must repeat byte-identically");
+        assert_eq!(a.fault, b.fault);
+        assert_eq!(a.utilization.to_bits(), b.utilization.to_bits());
+    }
+
+    #[test]
+    fn aggressive_crashes_never_strand_work() {
+        // MTTF comparable to task runtimes on a tiny cluster: cores cycle
+        // through blacklist/recover constantly (including phases where
+        // every core is down) and the run must still drain.
+        let mut c = cfg(2, PolicyKind::Fifo);
+        c.fault.crash_mttf_s = 2.0;
+        c.fault.crash_recover_s = 0.5;
+        let jobs: Vec<JobSpec> = (0..6).map(|i| job(i % 2, i as f64 * 0.3, 0.6)).collect();
+        let r = simulate(c, jobs);
+        assert_eq!(r.completed.len(), 6);
+        assert!(r.fault.crashes > 0, "mttf ~ runtime must crash");
+        assert!(r.fault.tasks_lost_to_crash > 0);
+        // Crash-lost attempts are requeued without a failure charge.
+        assert_eq!(r.fault.failures, 0);
+        assert_eq!(r.fault.retries, 0);
+    }
+
+    #[test]
+    fn idle_baseline_ignores_fault_config() {
+        // The slowdown denominator is the job alone on a healthy cluster:
+        // fault knobs must not leak into it (nor into its memo key).
+        let c = cfg(4, PolicyKind::Uwfq);
+        let j = JobSpec::three_phase(1, "idle-fault", 0, 0.913_371, 48 << 20, 4, None);
+        let clean_rt = idle_response_time(&c, &j);
+        let mut faulty = c.clone();
+        faulty.fault.task_fail_prob = 0.9;
+        faulty.fault.crash_mttf_s = 1.0;
+        assert_eq!(idle_response_time(&faulty, &j), clean_rt);
+        let mut ctx = SimCtx::new();
+        assert_eq!(ctx.idle_response_time(&faulty, &j), clean_rt);
     }
 
     #[test]

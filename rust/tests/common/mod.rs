@@ -1,13 +1,17 @@
 //! Helpers shared by the differential/property test suites (included
 //! via `mod common;` — not a test binary of its own).
 
+use uwfq::fault::FaultStats;
 use uwfq::sim::SimReport;
 
 /// Full byte-level fingerprint of a report: every completed-job field
-/// (floats by bit pattern) plus the aggregate columns. One definition of
-/// "byte-identical" for all differential suites — extend it here when
-/// `SimReport` grows identity-bearing fields.
-pub fn fingerprint(rep: &SimReport) -> (Vec<(u64, u32, String, u64, u64, u64)>, u64, u64) {
+/// (floats by bit pattern), the aggregate columns, and the complete
+/// fault ledger (counters, goodput/waste integers, per-user split). One
+/// definition of "byte-identical" for all differential suites — extend
+/// it here when `SimReport` grows identity-bearing fields.
+pub fn fingerprint(
+    rep: &SimReport,
+) -> (Vec<(u64, u32, String, u64, u64, u64)>, u64, u64, FaultStats) {
     (
         rep.completed
             .iter()
@@ -24,5 +28,6 @@ pub fn fingerprint(rep: &SimReport) -> (Vec<(u64, u32, String, u64, u64, u64)>, 
             .collect(),
         rep.makespan_s.to_bits(),
         rep.utilization.to_bits(),
+        rep.fault.clone(),
     )
 }

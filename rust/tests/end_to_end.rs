@@ -192,3 +192,56 @@ fn replay_cli_errors_name_the_problem() {
     assert!(err.contains("gcluster"), "{err}");
     std::fs::remove_dir_all(&dir).ok();
 }
+
+#[test]
+fn bad_input_errors_name_the_problem() {
+    // Every malformed-input path must exit nonzero with a message naming
+    // what was wrong — never a panic, never a silent zero exit.
+
+    // Malformed numeric flag value: the error names the key AND the value.
+    let out = uwfq_bin()
+        .args(["run", "--cores", "abc"])
+        .output()
+        .expect("spawn");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("cores") && err.contains("abc"), "{err}");
+
+    // Out-of-range fault knob: the error names the knob.
+    let out = uwfq_bin()
+        .args(["run", "--fault.task_fail_prob", "1.5"])
+        .output()
+        .expect("spawn");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("task_fail_prob"), "{err}");
+
+    // Unknown fault knob: the error names it and lists the valid keys.
+    let out = uwfq_bin()
+        .args(["run", "--fault.bogus_knob", "1"])
+        .output()
+        .expect("spawn");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("fault.bogus_knob"), "{err}");
+    assert!(err.contains("task_fail_prob"), "{err}");
+
+    // Unknown reproduce target: named, with the valid list.
+    let out = uwfq_bin()
+        .args(["reproduce", "bogus"])
+        .output()
+        .expect("spawn");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("bogus") && err.contains("table1"), "{err}");
+
+    // `uwfq fault` sweeps its own arms: pre-set fault flags are rejected
+    // with a pointer to the single-run alternative.
+    let out = uwfq_bin()
+        .args(["fault", "--quick", "--fault.task_fail_prob", "0.1"])
+        .output()
+        .expect("spawn");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("fault") && err.contains("uwfq run"), "{err}");
+}

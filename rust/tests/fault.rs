@@ -1,0 +1,201 @@
+//! Differential tests for the deterministic fault subsystem:
+//!
+//! 1. **Zero-rate inertness** — a `FaultConfig` with every rate at zero
+//!    (whatever its seed/budget/backoff knobs say) is byte-identical to
+//!    the default config under every policy: the fault machinery has no
+//!    observable footprint until a rate is armed.
+//! 2. **Ledger == log** — the goodput/waste core-time ledger (total and
+//!    per-user) is exactly the span sum of the task log, split by
+//!    outcome: virtual time and goodput are charged once per successful
+//!    attempt, never for retries, killed racers or crash-lost attempts.
+//! 3. **Goodput invariance** — with failures only (no stragglers, no
+//!    crashes), per-user *goodput* equals the clean run's per-user busy
+//!    time: re-execution adds waste, never goodput.
+//! 4. **Reset-vs-fresh with faults** — a `SimCtx` recycled across faulty
+//!    runs (the sweep-worker path, `SchedCore::reset` under the hood)
+//!    reproduces a fresh context bit for bit, fault ledger included.
+
+use std::collections::BTreeMap;
+
+use uwfq::config::Config;
+use uwfq::core::task::Outcome;
+use uwfq::fault::FaultConfig;
+use uwfq::sched::PolicyKind;
+use uwfq::sim::{self, SimCtx};
+use uwfq::workload::ScenarioSpec;
+
+mod common;
+use common::fingerprint;
+
+/// The standard faulty differential workload: multi-user, bursty, big
+/// enough that every fault class actually fires at the test rates.
+fn workload(seed: u64) -> Vec<uwfq::core::job::JobSpec> {
+    ScenarioSpec::new("scenario2")
+        .with("jobs_per_user", "8")
+        .with("stagger_s", "0.8")
+        .workload(seed)
+        .unwrap()
+        .jobs
+}
+
+/// A config arming all three fault classes at rates that fire on the
+/// small test workload.
+fn all_faults() -> FaultConfig {
+    FaultConfig {
+        task_fail_prob: 0.15,
+        retry_backoff_s: 0.05,
+        straggler_prob: 0.1,
+        straggler_mult: 5.0,
+        spec_mult: 2.0,
+        crash_mttf_s: 3.0,
+        crash_recover_s: 0.5,
+        seed: 42,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn zero_rate_fault_config_is_byte_identical_to_default() {
+    let jobs = workload(3);
+    for policy in PolicyKind::ALL {
+        let base = Config::default().with_cores(8).with_policy(policy);
+        let mut zeroed = base.clone();
+        // Rates all zero ⇒ inert, no matter what the inactive knobs say.
+        zeroed.fault = FaultConfig {
+            max_failures: 7,
+            retry_backoff_s: 123.0,
+            straggler_mult: 9.0,
+            spec_mult: 3.0,
+            crash_recover_s: 99.0,
+            seed: 0xDEAD_BEEF,
+            ..Default::default()
+        };
+        assert!(!zeroed.fault.enabled());
+        let a = sim::simulate(base, jobs.clone());
+        let b = sim::simulate(zeroed, jobs.clone());
+        assert_eq!(
+            fingerprint(&a),
+            fingerprint(&b),
+            "zero-rate fault config perturbed the schedule under {}",
+            policy.name()
+        );
+    }
+}
+
+#[test]
+fn goodput_ledger_matches_task_log_exactly() {
+    let jobs = workload(7);
+    let mut cfg = Config::default().with_cores(8).with_policy(PolicyKind::Uwfq);
+    cfg.log_tasks = true;
+    cfg.fault = all_faults();
+    let rep = sim::simulate(cfg, jobs.clone());
+    assert_eq!(rep.completed.len(), jobs.len());
+    let f = &rep.fault;
+    assert!(
+        f.failures > 0 && f.spec_launched > 0 && f.crashes > 0,
+        "test workload must exercise all three fault classes: {f:?}"
+    );
+
+    // Total and per-user ledger == span sums split by outcome: goodput
+    // is charged exactly once per successful attempt, waste for every
+    // failed, killed or crash-lost attempt.
+    let mut good: u128 = 0;
+    let mut waste: u128 = 0;
+    let mut per_user: BTreeMap<u32, (u128, u128)> = BTreeMap::new();
+    let mut winners: BTreeMap<(u64, u64, u64), u32> = BTreeMap::new();
+    for t in &rep.task_log {
+        let span = (t.finished - t.started) as u128;
+        let e = per_user.entry(t.user).or_default();
+        if t.outcome == Outcome::Success {
+            good += span;
+            e.0 += span;
+            *winners.entry((t.job, t.stage, t.task)).or_default() += 1;
+        } else {
+            waste += span;
+            e.1 += span;
+        }
+    }
+    assert_eq!(f.good_us, good, "goodput ledger diverged from task log");
+    assert_eq!(f.wasted_us, waste, "waste ledger diverged from task log");
+    assert_eq!(f.per_user, per_user, "per-user ledger diverged from task log");
+
+    // Exactly one successful attempt per (job, stage, task).
+    assert!(
+        winners.values().all(|&n| n == 1),
+        "a task completed more than once"
+    );
+}
+
+#[test]
+fn retries_add_waste_never_goodput() {
+    // Failures only: every successful attempt runs its clean duration,
+    // so per-user goodput must equal the clean run's per-user busy time
+    // while the failed attempts pile up in the waste column.
+    let jobs = workload(11);
+    let mut clean = Config::default().with_cores(8).with_policy(PolicyKind::Uwfq);
+    clean.log_tasks = true;
+    let mut faulty = clean.clone();
+    faulty.fault = FaultConfig {
+        task_fail_prob: 0.25,
+        retry_backoff_s: 0.05,
+        seed: 9,
+        ..Default::default()
+    };
+    let a = sim::simulate(clean, jobs.clone());
+    let b = sim::simulate(faulty, jobs.clone());
+    assert_eq!(b.completed.len(), jobs.len());
+    assert!(b.fault.failures > 0, "no failures fired");
+
+    let mut clean_busy: BTreeMap<u32, u128> = BTreeMap::new();
+    for t in &a.task_log {
+        *clean_busy.entry(t.user).or_default() += (t.finished - t.started) as u128;
+    }
+    let faulty_good: BTreeMap<u32, u128> =
+        b.fault.per_user.iter().map(|(&u, &(g, _))| (u, g)).collect();
+    assert_eq!(
+        clean_busy, faulty_good,
+        "re-execution changed per-user goodput"
+    );
+    assert!(b.fault.wasted_us > 0);
+}
+
+#[test]
+fn simctx_reuse_with_faults_matches_fresh_context() {
+    // The sweep-worker path: one context recycled across faulty cells
+    // (SchedCore::reset under the hood) must reproduce a fresh context
+    // bit for bit — no fault state (blacklists, retry ledgers, crash
+    // cursors, stats) leaks between cells.
+    let jobs = workload(5);
+    let mut cfg = Config::default().with_cores(8).with_policy(PolicyKind::Uwfq);
+    cfg.log_tasks = true;
+    cfg.fault = all_faults();
+
+    let mut fresh_ctx = SimCtx::new();
+    let fresh = fresh_ctx.simulate(&cfg, jobs.clone());
+    assert!(fresh.fault.failures > 0 && fresh.fault.crashes > 0);
+
+    let mut reused = SimCtx::new();
+    // Dirty the context with two different faulty cells first.
+    let mut other = cfg.clone().with_policy(PolicyKind::Fair);
+    other.fault.seed = 1234;
+    reused.simulate(&other, jobs.clone());
+    let mut crashy = cfg.clone();
+    crashy.fault.crash_mttf_s = 1.0;
+    crashy.fault.crash_recover_s = 0.25;
+    reused.simulate(&crashy, jobs.clone());
+
+    let replay = reused.simulate(&cfg, jobs.clone());
+    assert_eq!(
+        fingerprint(&fresh),
+        fingerprint(&replay),
+        "recycled context diverged from fresh under faults"
+    );
+    // Task logs (attempts, outcomes, core placement) agree too.
+    assert_eq!(fresh.task_log.len(), replay.task_log.len());
+    for (x, y) in fresh.task_log.iter().zip(&replay.task_log) {
+        assert_eq!(
+            (x.task, x.stage, x.job, x.core, x.started, x.finished, x.attempt, x.outcome),
+            (y.task, y.stage, y.job, y.core, y.started, y.finished, y.attempt, y.outcome),
+        );
+    }
+}

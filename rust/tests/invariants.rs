@@ -22,10 +22,18 @@
 //!    discretization slack) of its UJF finish time. Restricted to the
 //!    uniform-cost micro scenarios, matching the theorem's assumptions
 //!    (the skewed-cost macro generators violate them by design).
+//! 6. **Fault arm** — the same completions/determinism/work-conservation
+//!    invariants with a random fault config active (task failures,
+//!    stragglers + speculation, core crashes): retries never lose or
+//!    duplicate a job, a fixed fault seed repeats byte-identically under
+//!    every policy, and work conservation generalizes to "a core may only
+//!    idle while a leaf stage waits if it sits inside one of its own
+//!    crash/blacklist windows".
 
 use std::collections::HashMap;
 
 use uwfq::config::Config;
+use uwfq::fault::FaultConfig;
 use uwfq::sched::vtime::TwoLevelVtime;
 use uwfq::sched::PolicyKind;
 use uwfq::sim;
@@ -260,6 +268,156 @@ fn uwfq_within_bounded_gap_of_ujf_on_random_workloads() {
                     "job {} delayed {delay:.2}s past UJF, bound {bound:.2}s ({spec:?})",
                     cu.job
                 ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// A random fault config mixing the three failure classes, each armed
+/// independently (so single-class and combined regimes both get
+/// exercised). Rates are kept high enough to actually fire on the small
+/// property workloads.
+fn random_fault(r: &mut Rng) -> FaultConfig {
+    let mut f = FaultConfig::default();
+    if r.f64() < 0.7 {
+        f.task_fail_prob = r.range_f64(0.05, 0.35);
+        f.retry_backoff_s = r.range_f64(0.01, 0.5);
+        f.max_failures = 1 + r.below(4) as u32;
+    }
+    if r.f64() < 0.5 {
+        f.straggler_prob = r.range_f64(0.05, 0.25);
+        f.straggler_mult = r.range_f64(3.0, 8.0);
+        f.spec_mult = r.range_f64(1.5, 3.0);
+    }
+    if r.f64() < 0.4 {
+        f.crash_mttf_s = r.range_f64(15.0, 90.0);
+        f.crash_recover_s = r.range_f64(0.5, 10.0);
+    }
+    f.seed = r.next_u64();
+    f
+}
+
+#[test]
+fn faults_lose_no_jobs_and_repeat_byte_identically() {
+    // Invariant 6a/6b: with a random fault mix active, every policy still
+    // completes exactly the arrived jobs (retry budgets are finite, so a
+    // task that exhausts its failures succeeds on the final attempt), and
+    // a fixed fault seed reproduces the full report — completed jobs AND
+    // the fault ledger — bit for bit.
+    propkit::check("fault completions + determinism", 0xFA17B, 5, |r| {
+        let spec = random_spec(r);
+        let seed = r.next_u64();
+        let fault = random_fault(r);
+        let w = spec.workload(seed).map_err(|e| format!("{spec:?}: {e}"))?;
+        if w.jobs.is_empty() {
+            return Err(format!("{spec:?}: degenerate empty workload"));
+        }
+        for policy in PolicyKind::ALL {
+            let mut cfg = Config::default().with_cores(8).with_policy(policy);
+            cfg.fault = fault.clone();
+            let a = sim::simulate(cfg.clone(), w.jobs.clone());
+            if a.completed.len() != w.jobs.len() {
+                return Err(format!(
+                    "{}: {} of {} jobs completed under faults ({spec:?}, {fault:?})",
+                    policy.name(),
+                    a.completed.len(),
+                    w.jobs.len()
+                ));
+            }
+            if a.fault.retries != a.fault.failures {
+                return Err(format!(
+                    "{}: {} retries for {} failures — a failed attempt was \
+                     dropped or double-requeued ({spec:?}, {fault:?})",
+                    policy.name(),
+                    a.fault.retries,
+                    a.fault.failures
+                ));
+            }
+            let b = sim::simulate(cfg, w.jobs.clone());
+            if fingerprint(&a) != fingerprint(&b) {
+                return Err(format!(
+                    "{}: repeated faulty run not byte-identical ({spec:?}, {fault:?})",
+                    policy.name()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn faulty_work_conservation_modulo_blacklist_windows() {
+    // Invariant 6c: work conservation under faults. While a job waits for
+    // its first launch its leaf stage holds never-launched tasks (virgin,
+    // so never in retry backoff) — any core that is free and *in service*
+    // must take one. A core is excused exactly for its recorded
+    // crash/blacklist windows; the task log (which includes failed,
+    // killed and crash-lost attempts) must cover the rest.
+    propkit::check("fault work conservation", 0xFA17C, 5, |r| {
+        let spec = random_spec(r);
+        let seed = r.next_u64();
+        let fault = random_fault(r);
+        let policy = PolicyKind::ALL[r.below(PolicyKind::ALL.len() as u64) as usize];
+        let w = spec.workload(seed).map_err(|e| format!("{spec:?}: {e}"))?;
+        let mut cfg = Config::default().with_cores(8).with_policy(policy);
+        cfg.log_tasks = true;
+        cfg.fault = fault.clone();
+        let rep = sim::simulate(cfg.clone(), w.jobs.clone());
+
+        // Busy intervals per core: every attempt's span plus the core's
+        // blacklist windows (during which it is excused from service).
+        let mut by_core: HashMap<usize, Vec<(TimeUs, TimeUs)>> = HashMap::new();
+        for t in &rep.task_log {
+            by_core.entry(t.core).or_default().push((t.started, t.finished));
+        }
+        for &(core, down, up) in &rep.fault.crash_windows {
+            by_core.entry(core).or_default().push((down, up));
+        }
+        for spans in by_core.values_mut() {
+            spans.sort_unstable();
+        }
+        let mut first_start: HashMap<u64, TimeUs> = HashMap::new();
+        for t in &rep.task_log {
+            let e = first_start.entry(t.job).or_insert(t.started);
+            *e = (*e).min(t.started);
+        }
+        let covers = |spans: &[(TimeUs, TimeUs)], lo: TimeUs, hi: TimeUs| -> bool {
+            let mut at = lo;
+            for &(s, f) in spans {
+                if f <= at {
+                    continue;
+                }
+                if s > at {
+                    return false;
+                }
+                at = f;
+                if at >= hi {
+                    return true;
+                }
+            }
+            at >= hi
+        };
+        for c in &rep.completed {
+            let s = *first_start
+                .get(&c.job)
+                .ok_or_else(|| format!("job {} has no tasks", c.job))?;
+            if s <= c.submit {
+                continue;
+            }
+            for core in 0..cfg.cores as usize {
+                let empty = Vec::new();
+                let spans = by_core.get(&core).unwrap_or(&empty);
+                if !covers(spans, c.submit, s) {
+                    return Err(format!(
+                        "{}: core {core} idle and in service in [{}, {}) while \
+                         job {} waited for its first launch ({spec:?}, {fault:?})",
+                        policy.name(),
+                        c.submit,
+                        s,
+                        c.job
+                    ));
+                }
             }
         }
         Ok(())
