@@ -7,7 +7,10 @@
 //! Scaling cases: `sim_200jobs` (the historical baseline), `burst400` vs
 //! `burst4000` (per-event cost must grow sub-linearly in active-stage
 //! count now that selection is incremental), and `sim_50k` — 50 000 jobs
-//! / 100 users / 64 cores, reporting task-events/s per policy.
+//! / 100 users / 64 cores, reporting task-events/s per policy. The 50k
+//! case also runs the event-core ablation (heap per-event vs calendar
+//! wheel, batching on/off — all byte-identical schedules, so the ratios
+//! are pure event-core cost).
 //!
 //! `HOTPATH_QUICK=1` shrinks the large cases for CI smoke runs.
 
@@ -18,6 +21,7 @@ use uwfq::core::job::JobSpec;
 use uwfq::sched::vtime::{SingleVtime, TwoLevelVtime};
 use uwfq::sched::PolicyKind;
 use uwfq::sim;
+use uwfq::sim::{EventBackend, SimOpts};
 use uwfq::util::benchkit::{bench, bench_n, black_box, JsonSink};
 use uwfq::util::Rng;
 
@@ -182,6 +186,25 @@ fn main() {
         let jobs = workload(n, 100, 4_000);
         for policy in PolicyKind::ALL {
             bench_sim(&mut sink, &format!("sim_{n}jobs_100users_64cores"), &cfg, &jobs, policy, 2);
+        }
+
+        // Event-core ablation on the same case: queue structure and
+        // batching isolated (schedules are byte-identical across arms).
+        let arms = [
+            ("heap_perevent", SimOpts { backend: EventBackend::Heap, batch: false }),
+            ("heap_batched", SimOpts { backend: EventBackend::Heap, batch: true }),
+            ("wheel_perevent", SimOpts { backend: EventBackend::Wheel, batch: false }),
+            ("wheel_batched", SimOpts { backend: EventBackend::Wheel, batch: true }),
+        ];
+        for policy in [PolicyKind::Fifo, PolicyKind::Uwfq] {
+            for (arm, opts) in arms {
+                let c = cfg.clone().with_policy(policy);
+                let name = format!("hotpath/eventcore_{n}jobs/{}/{arm}", policy.name());
+                let r = bench_n(&name, 2, || {
+                    black_box(sim::simulate_opts(c.clone(), jobs.to_vec(), opts));
+                });
+                sink.record(&r);
+            }
         }
     }
 

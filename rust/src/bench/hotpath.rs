@@ -1,0 +1,261 @@
+//! Event-core throughput bench (`uwfq hotpath`, `BENCH_hotpath.json`).
+//!
+//! Measures end-to-end simulator throughput (task-events/s) on the
+//! congested 50 000-job / 100-user / 64-core case — 2 000 jobs under
+//! `--quick` (the CI smoke shape) — for every policy across the
+//! event-core ablation cells:
+//!
+//! * `heap_perevent`  — binary heap, per-event offers/notifications
+//!   (the executable reference, what `UWFQ_EVENT_HEAP=1` selects);
+//! * `wheel_perevent` — calendar queue, per-event processing (isolates
+//!   the queue-structure win);
+//! * `wheel_batched`  — calendar queue + same-timestamp batching (the
+//!   default event core);
+//! * `default_env`    — whatever [`SimOpts::from_env`] resolves, so a
+//!   run under `UWFQ_EVENT_HEAP=1` produces a comparable artifact for
+//!   the escape-hatch path.
+//!
+//! All cells replay byte-identical schedules (`tests/invariants.rs`
+//! holds the differential), so events/s ratios are pure event-core
+//! cost. The cargo bench twin (`cargo bench --bench hotpath`) carries
+//! the micro-bench arms; this harness is the CI artifact path.
+
+use std::time::Instant;
+
+use crate::config::Config;
+use crate::core::job::JobSpec;
+use crate::sched::PolicyKind;
+use crate::sim::{self, EventBackend, SimOpts};
+use crate::util::benchkit::{black_box, JsonSink};
+
+/// The explicit ablation cells, reference first.
+pub const ARMS: [(&str, SimOpts); 3] = [
+    ("heap_perevent", SimOpts { backend: EventBackend::Heap, batch: false }),
+    ("wheel_perevent", SimOpts { backend: EventBackend::Wheel, batch: false }),
+    ("wheel_batched", SimOpts { backend: EventBackend::Wheel, batch: true }),
+];
+
+/// One measured (policy × event-core) cell.
+pub struct Cell {
+    pub policy: PolicyKind,
+    /// Arm name (`ARMS` entry, or `default_env`).
+    pub arm: &'static str,
+    pub mean_s: f64,
+    pub events_per_s: f64,
+}
+
+pub struct HotpathOutcome {
+    pub jobs: usize,
+    pub users: u32,
+    pub cores: u32,
+    pub iters: u32,
+    /// Task events per run (identical across arms — same schedule).
+    pub task_events: usize,
+    pub cells: Vec<Cell>,
+}
+
+impl HotpathOutcome {
+    /// Events/s of `arm` under `policy`, if measured.
+    pub fn rate(&self, policy: PolicyKind, arm: &str) -> Option<f64> {
+        self.cells
+            .iter()
+            .find(|c| c.policy == policy && c.arm == arm)
+            .map(|c| c.events_per_s)
+    }
+
+    /// `wheel_batched` speedup over the heap per-event reference.
+    pub fn speedup(&self, policy: PolicyKind) -> Option<f64> {
+        let fast = self.rate(policy, "wheel_batched")?;
+        let slow = self.rate(policy, "heap_perevent")?;
+        Some(fast / slow)
+    }
+}
+
+/// The congested multi-user workload: `n` jobs over `users` users
+/// arriving every `gap_us` (the shape `benches/hotpath.rs` scales on).
+fn workload(n: usize, users: u32, gap_us: u64) -> Vec<JobSpec> {
+    (0..n)
+        .map(|i| {
+            JobSpec::three_phase(
+                (i as u32) % users,
+                &format!("j{i}"),
+                (i as u64) * gap_us,
+                2.0,
+                128 << 20,
+                4,
+                None,
+            )
+        })
+        .collect()
+}
+
+fn time_runs<F: FnMut()>(iters: u32, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+/// Run the event-core bench. `base` supplies cores/seed (the CLI
+/// defaults cores to 64); `quick` shrinks to the CI smoke shape.
+pub fn run_hotpath(base: &Config, quick: bool) -> HotpathOutcome {
+    let n = if quick { 2_000 } else { 50_000 };
+    run_hotpath_sized(base, n, 2)
+}
+
+/// [`run_hotpath`] with an explicit job count and iteration count (the
+/// unit test drives a tiny shape through the full cell matrix).
+pub fn run_hotpath_sized(base: &Config, n: usize, iters: u32) -> HotpathOutcome {
+    let users = 100u32;
+    let mut cfg = base.clone();
+    cfg.task_overhead = 0.005;
+    let jobs = workload(n, users, 4_000);
+
+    // Task-event count from one logged probe run (arm-independent: all
+    // cells replay the same schedule).
+    let mut probe = cfg.clone();
+    probe.log_tasks = true;
+    let task_events = sim::simulate_opts(probe, jobs.clone(), ARMS[0].1).task_log.len();
+
+    let mut cells = Vec::new();
+    for policy in PolicyKind::ALL {
+        let c = cfg.clone().with_policy(policy);
+        for (arm, opts) in ARMS {
+            let mean_s = time_runs(iters, || {
+                black_box(sim::simulate_opts(c.clone(), jobs.clone(), opts));
+            });
+            cells.push(Cell {
+                policy,
+                arm,
+                mean_s,
+                events_per_s: task_events as f64 / mean_s,
+            });
+        }
+        // The env-resolved default: under `UWFQ_EVENT_HEAP=1` this is
+        // the heap fallback, giving CI a per-backend artifact from the
+        // exact path production callers take.
+        let mean_s = time_runs(iters, || {
+            black_box(sim::simulate(c.clone(), jobs.clone()));
+        });
+        cells.push(Cell {
+            policy,
+            arm: "default_env",
+            mean_s,
+            events_per_s: task_events as f64 / mean_s,
+        });
+    }
+    HotpathOutcome {
+        jobs: n,
+        users,
+        cores: cfg.cores,
+        iters,
+        task_events,
+        cells,
+    }
+}
+
+pub fn render(o: &HotpathOutcome) -> String {
+    let mut out = format!(
+        "event core: {} jobs / {} users / {} cores, {} task events/run \
+         (mean of {} iters)\n",
+        o.jobs, o.users, o.cores, o.task_events, o.iters
+    );
+    let rows: Vec<Vec<String>> = o
+        .cells
+        .iter()
+        .map(|c| {
+            vec![
+                c.policy.name().to_string(),
+                c.arm.to_string(),
+                super::fmt2(c.events_per_s / 1e6),
+                super::fmt2(c.mean_s * 1e3),
+            ]
+        })
+        .collect();
+    out.push_str(&super::render_table(
+        &["policy", "event core", "Mev/s", "ms/run"],
+        &rows,
+    ));
+    for policy in PolicyKind::ALL {
+        if let Some(s) = o.speedup(policy) {
+            out.push_str(&format!(
+                "{}: wheel+batch {:.2}x over heap per-event\n",
+                policy.name(),
+                s
+            ));
+        }
+    }
+    out
+}
+
+pub fn record_metrics(o: &HotpathOutcome, sink: &mut JsonSink) {
+    sink.metric("hotpath/jobs", o.jobs as f64);
+    sink.metric("hotpath/task_events", o.task_events as f64);
+    let heap_default = SimOpts::from_env().backend == EventBackend::Heap;
+    sink.metric("hotpath/default_env_is_heap", heap_default as u64 as f64);
+    for c in &o.cells {
+        sink.metric(
+            &format!("hotpath/{}/{}/task_events_per_s", c.policy.name(), c.arm),
+            c.events_per_s,
+        );
+    }
+    for policy in PolicyKind::ALL {
+        if let Some(s) = o.speedup(policy) {
+            sink.metric(&format!("hotpath/{}/speedup_wheel_batched", policy.name()), s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outcome_rates_and_speedup() {
+        let o = HotpathOutcome {
+            jobs: 10,
+            users: 2,
+            cores: 4,
+            iters: 1,
+            task_events: 1000,
+            cells: vec![
+                Cell {
+                    policy: PolicyKind::Fifo,
+                    arm: "heap_perevent",
+                    mean_s: 2.0,
+                    events_per_s: 500.0,
+                },
+                Cell {
+                    policy: PolicyKind::Fifo,
+                    arm: "wheel_batched",
+                    mean_s: 0.5,
+                    events_per_s: 2000.0,
+                },
+            ],
+        };
+        assert_eq!(o.rate(PolicyKind::Fifo, "heap_perevent"), Some(500.0));
+        assert_eq!(o.speedup(PolicyKind::Fifo), Some(4.0));
+        assert!(o.speedup(PolicyKind::Uwfq).is_none());
+        let txt = render(&o);
+        assert!(txt.contains("wheel+batch 4.00x"), "{txt}");
+    }
+
+    #[test]
+    fn tiny_run_measures_every_arm() {
+        // Tiny shape (not the CI smoke size): every (policy, arm) cell
+        // present with a positive rate and a computable speedup.
+        let base = Config::default().with_cores(8);
+        let o = run_hotpath_sized(&base, 60, 1);
+        assert!(o.task_events > 0);
+        assert_eq!(o.cells.len(), PolicyKind::ALL.len() * (ARMS.len() + 1));
+        for c in &o.cells {
+            assert!(c.events_per_s > 0.0, "{} {}", c.policy.name(), c.arm);
+        }
+        for policy in PolicyKind::ALL {
+            assert!(o.speedup(policy).expect("speedup cell") > 0.0);
+        }
+        let mut sink = JsonSink::new();
+        record_metrics(&o, &mut sink);
+    }
+}

@@ -11,6 +11,8 @@
 //!   `BENCH_replay.json`).
 //! * [`fault`] — fairness-under-failure degradation curves (`uwfq
 //!   fault`, `BENCH_fault.json`).
+//! * [`hotpath`] — event-core throughput: wheel vs heap backends plus
+//!   the batching ablation (`uwfq hotpath`, `BENCH_hotpath.json`).
 //!
 //! Every grid is expressed as a list of independent cells over the
 //! [`crate::sweep`] engine: the caller passes a [`crate::sweep::Sweep`]
@@ -19,6 +21,7 @@
 
 pub mod fault;
 pub mod figures;
+pub mod hotpath;
 pub mod replay;
 pub mod scale;
 pub mod tables;

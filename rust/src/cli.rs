@@ -44,6 +44,11 @@ USAGE:
              # fairness-under-failure degradation curves: UWFQ/Fair/FIFO
              # across failure rates + straggler + crash arms, emits
              # BENCH_fault.json
+  uwfq hotpath [--quick] [--out DIR] [--cores N]
+             # event-core throughput: wheel vs heap event queues plus a
+             # batching on/off ablation per policy, emits
+             # BENCH_hotpath.json (UWFQ_EVENT_HEAP=1 benches the
+             # escape-hatch default)
   uwfq serve [--cores N] [--time-scale F] [--artifacts DIR]   # real PJRT backend demo
   uwfq ablation [--seed N] [--threads N]                      # design-choice ablations
   uwfq run --scenario scenario2 --eventlog trace.jsonl        # emit event log

@@ -107,6 +107,51 @@ impl<T> Slab<T> {
     }
 }
 
+/// A dense **side column** keyed by slab slot: policies and indexes
+/// attach per-stage state to the engine's recycled slot numbers without
+/// hashing. Structurally a `Vec<Option<T>>` that grows on demand —
+/// reads of never-set or cleared slots return `None`, so callers don't
+/// coordinate growth with the owning slab. This is the SoA counterpart
+/// to [`Slab`]: the slab owns the entity, columns own one hot field
+/// each, and all of them share the slot address space.
+#[derive(Debug, Default)]
+pub struct SlotCol<T> {
+    col: Vec<Option<T>>,
+}
+
+impl<T> SlotCol<T> {
+    pub fn new() -> Self {
+        SlotCol { col: Vec::new() }
+    }
+
+    /// Set `slot`'s value, growing the column as needed.
+    pub fn set(&mut self, slot: u32, value: T) {
+        let i = slot as usize;
+        if i >= self.col.len() {
+            self.col.resize_with(i + 1, || None);
+        }
+        self.col[i] = Some(value);
+    }
+
+    pub fn get(&self, slot: u32) -> Option<&T> {
+        self.col.get(slot as usize).and_then(|v| v.as_ref())
+    }
+
+    pub fn get_mut(&mut self, slot: u32) -> Option<&mut T> {
+        self.col.get_mut(slot as usize).and_then(|v| v.as_mut())
+    }
+
+    /// Clear and return `slot`'s value (slot-recycling handoff).
+    pub fn take(&mut self, slot: u32) -> Option<T> {
+        self.col.get_mut(slot as usize).and_then(|v| v.take())
+    }
+
+    /// Drop all values, retaining the allocation (reset-for-reuse).
+    pub fn clear(&mut self) {
+        self.col.clear();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -168,5 +213,30 @@ mod tests {
         let a = s.insert(1);
         s.remove(a);
         s.remove(a);
+    }
+
+    #[test]
+    fn slot_col_sparse_set_get_take() {
+        let mut c: SlotCol<f64> = SlotCol::new();
+        assert_eq!(c.get(3), None, "unset slot reads None");
+        c.set(3, 1.5);
+        c.set(0, 0.5);
+        assert_eq!(c.get(3), Some(&1.5));
+        assert_eq!(c.get(1), None, "hole between set slots");
+        assert_eq!(c.take(3), Some(1.5));
+        assert_eq!(c.get(3), None, "take clears the slot");
+        assert_eq!(c.take(99), None, "take beyond the column is None");
+        *c.get_mut(0).unwrap() = 2.0;
+        assert_eq!(c.get(0), Some(&2.0));
+    }
+
+    #[test]
+    fn slot_col_clear_resets() {
+        let mut c: SlotCol<u32> = SlotCol::new();
+        c.set(2, 7);
+        c.clear();
+        assert_eq!(c.get(2), None);
+        c.set(2, 9); // regrows transparently after clear
+        assert_eq!(c.get(2), Some(&9));
     }
 }

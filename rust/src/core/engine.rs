@@ -42,6 +42,23 @@
 //! [`SchedCore::force_scan_select`] switches a core to pure scan
 //! selection so differential tests can assert schedule equivalence
 //! (ties included) in release builds too.
+//!
+//! # Batched mode
+//!
+//! [`SchedCore::set_batching`] arms the batched event core (used by the
+//! simulator's calendar backend, see `crate::sim`): clean non-completing
+//! finish notifications are *deferred* into one coalesced
+//! [`crate::sched::Policy::on_tasks_finished`] call, flushed before any
+//! other policy interaction (so every selection still sees exactly the
+//! per-event state), and for `static_keys` policies
+//! [`SchedCore::try_launch_into`] launches a whole quantum from the
+//! selected stage before re-selecting — with static keys the per-launch
+//! loop provably re-picks the same stage until it exhausts, so the
+//! quantum reproduces the per-event schedule bit-for-bit.
+//! [`SchedCore::classify_task_event`] tells the simulator which events
+//! are batchable and [`SchedCore::can_launch`] makes the post-event
+//! offer skippable when it provably cannot launch (no pending work or
+//! no usable free core — the offer-loop postcondition).
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
@@ -87,6 +104,24 @@ pub struct Launch {
     /// When set, the simulator schedules a speculation check at this
     /// time (the attempt is a straggler past the `spec_mult` threshold).
     pub spec_wake_at: Option<TimeUs>,
+}
+
+/// Pre-classification of a scheduled task event
+/// ([`SchedCore::classify_task_event`]) — read-only, so the simulator
+/// can decide *before* applying the event whether it is batchable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskEventClass {
+    /// Clean, unraced finish that leaves its stage incomplete: eligible
+    /// for same-timestamp batching (its policy notification coalesces
+    /// and its offer defers).
+    Plain,
+    /// Fault-injected failure — [`SchedCore::task_event`] will return
+    /// [`TaskEvent::Failed`].
+    Fail,
+    /// A scheduling boundary: the finish completes its stage (DAG
+    /// advances, new stages may submit) or resolves a speculation race
+    /// (a second core frees). Handle per-event.
+    Boundary,
 }
 
 /// What happened when a scheduled task event fired ([`SchedCore::task_event`]).
@@ -138,6 +173,17 @@ pub struct SchedCore {
     /// instead of the incremental index — the reference semantics for
     /// differential tests. Off (incremental) by default.
     pub force_scan_select: bool,
+    /// Total pending (queued, unlaunched) tasks across all active
+    /// stages — O(1) mirror of [`SchedCore::pending_task_count`] so the
+    /// [`SchedCore::can_launch`] offer guard costs nothing per event.
+    pending_total: u32,
+    /// Batched mode ([`SchedCore::set_batching`]): defer plain finish
+    /// notifications + launch multi-task quanta. Off by default — the
+    /// per-event path stays byte-for-byte the executable specification.
+    batch: bool,
+    /// Deferred `(stage, slot)` finish notifications, delivered as one
+    /// `Policy::on_tasks_finished` before the next policy interaction.
+    finish_batch: Vec<(StageId, u32)>,
     // ---- fault machinery (inert when `fault_on` is false) ----------------
     /// The run's deterministic fault schedule (`None` ⇔ faults off).
     plan: Option<FaultPlan>,
@@ -190,6 +236,9 @@ impl SchedCore {
             task_log: Vec::new(),
             views_buf: Vec::new(),
             force_scan_select: false,
+            pending_total: 0,
+            batch: false,
+            finish_batch: Vec::new(),
             plan,
             fault_on,
             blacklisted: vec![false; cores],
@@ -270,6 +319,10 @@ impl SchedCore {
         self.completed.clear();
         self.task_log.clear();
         self.views_buf.clear();
+        // `batch` is preserved like `force_scan_select` (both are
+        // observationally neutral run-mode switches the driver re-arms).
+        self.pending_total = 0;
+        self.finish_batch.clear();
         // Fault machinery re-derives from the new config; every per-core
         // flag and counter starts over (reset-vs-fresh differential).
         self.fault_on = self.cfg.fault.enabled();
@@ -299,6 +352,7 @@ impl SchedCore {
         self.arrival_seq += 1;
 
         let est_slot = self.estimator.job_slot_time(&spec);
+        self.flush_finish_batch();
         self.policy.on_job_arrival(
             us_to_s(now),
             &crate::sched::JobMeta {
@@ -365,10 +419,13 @@ impl SchedCore {
         self.active.push(slot);
         self.stage_slots.insert(stage_id, slot);
         self.jobs.get_mut(job_slot).mark_submitted(idx, stage_id);
+        self.pending_total += pending;
+        self.flush_finish_batch();
         self.policy.on_stage_submit(
             us_to_s(now),
             &StageMeta {
                 stage: stage_id,
+                slot,
                 job: job_id,
                 user,
                 est_slot_time: est,
@@ -377,6 +434,38 @@ impl SchedCore {
                 pending,
             },
         );
+    }
+
+    // ---- batched event core ----------------------------------------------
+
+    /// Arm/disarm batched mode (see the module docs). The simulator's
+    /// calendar backend turns this on; everything else runs per-event.
+    pub fn set_batching(&mut self, on: bool) {
+        debug_assert!(self.finish_batch.is_empty(), "toggled mid-batch");
+        self.batch = on;
+    }
+
+    /// Deliver deferred finish notifications as one coalesced
+    /// `Policy::on_tasks_finished`. Called before *every* policy
+    /// interaction, so selections always see exactly the state the
+    /// per-event path would have built.
+    fn flush_finish_batch(&mut self) {
+        if self.finish_batch.is_empty() {
+            return;
+        }
+        let batch = std::mem::take(&mut self.finish_batch);
+        self.policy.on_tasks_finished(&batch);
+        self.finish_batch = batch;
+        self.finish_batch.clear();
+    }
+
+    /// True iff an offer could launch something: pending work exists and
+    /// a usable (free, non-blacklisted) core is available. The offer
+    /// loop's postcondition is exactly `!can_launch()`, so events that
+    /// leave this false can skip their post-event offer without changing
+    /// the schedule.
+    pub fn can_launch(&mut self) -> bool {
+        self.pending_total > 0 && self.peek_free().is_some()
     }
 
     // ---- free-core heap -------------------------------------------------
@@ -459,6 +548,7 @@ impl SchedCore {
             let s = self.stages.get(slot);
             views.push(StageView {
                 stage: s.id,
+                slot,
                 job: s.job,
                 user: s.user,
                 stage_idx: s.idx,
@@ -476,21 +566,36 @@ impl SchedCore {
     }
 
     /// One selection through the configured path, with the debug
-    /// cross-check of incremental vs. reference-scan semantics.
-    fn select_stage(&mut self, now_s: f64) -> Option<StageId> {
+    /// cross-check of incremental vs. reference-scan semantics. Returns
+    /// the stage's external id *and* arena slot — the incremental path
+    /// answers both from the policy index, dropping the id→slot hash
+    /// lookup from the launch hot path.
+    fn select_stage(&mut self, now_s: f64) -> Option<(StageId, u32)> {
         if self.force_scan_select {
-            return self.scan_select(now_s);
+            let sid = self.scan_select(now_s)?;
+            let &slot = self
+                .stage_slots
+                .get(&sid)
+                .expect("policy selected a live stage");
+            return Some((sid, slot));
         }
         let picked = self.policy.select_next(now_s);
         #[cfg(debug_assertions)]
         {
             let reference = self.scan_select(now_s);
             debug_assert_eq!(
-                picked,
+                picked.map(|(s, _)| s),
                 reference,
                 "incremental selection diverged from reference scan ({})",
                 self.policy.name()
             );
+            if let Some((sid, slot)) = picked {
+                debug_assert_eq!(
+                    self.stage_slots.get(&sid),
+                    Some(&slot),
+                    "policy index returned a stale slot"
+                );
+            }
         }
         picked
     }
@@ -515,83 +620,116 @@ impl SchedCore {
         if self.active.is_empty() || self.free_cores.is_empty() {
             return; // nothing to do — keep the congested path free
         }
+        self.flush_finish_batch();
         let now_s = us_to_s(now);
+        // Static keys: the per-launch loop provably re-selects the same
+        // stage until it exhausts (its key never changes and the id
+        // tiebreak is fixed), so batched mode launches a whole quantum
+        // per selection with one coalesced notification.
+        let quantum = self.batch && !self.force_scan_select && self.policy.static_keys();
         while let Some(core) = self.peek_free() {
-            let Some(sid) = self.select_stage(now_s) else {
+            let Some((sid, slot)) = self.select_stage(now_s) else {
                 break;
             };
             self.pop_free();
-            let &slot = self
-                .stage_slots
-                .get(&sid)
-                .expect("policy selected a live stage");
-            let stage = self.stages.get_mut(slot);
-            let task_idx = stage.launch_next();
-            // Decide this attempt's fate from the deterministic plan.
-            let attempt = if self.fault_on {
-                stage.failures_of(task_idx as u32)
+            self.launch_one(now, sid, slot, core, launches);
+            let mut n: u32 = 1;
+            if quantum {
+                while self.stages.get(slot).pending() > 0 {
+                    let Some(c2) = self.peek_free() else {
+                        break;
+                    };
+                    self.pop_free();
+                    self.launch_one(now, sid, slot, c2, launches);
+                    n += 1;
+                }
+            }
+            if n == 1 {
+                self.policy.on_task_launched(sid, slot);
             } else {
-                0
-            };
-            let t = &stage.tasks[task_idx];
-            let mut fails = false;
-            let mut dur_us = s_to_us(t.runtime_s);
-            let mut spec_wake_at = None;
-            if let Some(plan) = &self.plan {
-                match plan.fate(stage.arrival_seq, stage.idx, task_idx as u32, attempt) {
-                    Fate::Clean => {}
-                    Fate::Fail { frac } => {
-                        fails = true;
-                        dur_us = s_to_us(frac * t.runtime_s).max(1);
-                    }
-                    Fate::Straggle { mult } => {
-                        dur_us = s_to_us(mult * t.runtime_s);
-                        let spec_mult = plan.config().spec_mult;
-                        if spec_mult > 0.0 && mult > spec_mult {
-                            spec_wake_at = Some(now + s_to_us(spec_mult * t.runtime_s).max(1));
-                        }
+                self.policy.on_tasks_launched(sid, slot, n);
+            }
+        }
+    }
+
+    /// Launch one task of stage `sid` (arena `slot`) onto an
+    /// already-popped free `core`. Engine state only — the policy launch
+    /// notification is the caller's, so quanta can coalesce it.
+    fn launch_one(
+        &mut self,
+        now: TimeUs,
+        sid: StageId,
+        slot: u32,
+        core: usize,
+        launches: &mut Vec<Launch>,
+    ) {
+        let stage = self.stages.get_mut(slot);
+        let task_idx = stage.launch_next();
+        // Decide this attempt's fate from the deterministic plan.
+        let attempt = if self.fault_on {
+            stage.failures_of(task_idx as u32)
+        } else {
+            0
+        };
+        let t = &stage.tasks[task_idx];
+        let mut fails = false;
+        let mut dur_us = s_to_us(t.runtime_s);
+        let mut spec_wake_at = None;
+        if let Some(plan) = &self.plan {
+            match plan.fate(stage.arrival_seq, stage.idx, task_idx as u32, attempt) {
+                Fate::Clean => {}
+                Fate::Fail { frac } => {
+                    fails = true;
+                    dur_us = s_to_us(frac * t.runtime_s).max(1);
+                }
+                Fate::Straggle { mult } => {
+                    dur_us = s_to_us(mult * t.runtime_s);
+                    let spec_mult = plan.config().spec_mult;
+                    if spec_mult > 0.0 && mult > spec_mult {
+                        spec_wake_at = Some(now + s_to_us(spec_mult * t.runtime_s).max(1));
                     }
                 }
             }
-            let finish_at = now + dur_us;
-            let task_id = self.next_task;
-            self.next_task += 1;
-            self.launch_seq += 1;
-            let seq = self.launch_seq;
-            let launch = Launch {
-                core,
-                task: task_id,
-                stage: sid,
-                job: stage.job,
-                user: stage.user,
-                task_idx,
-                runtime_s: t.runtime_s,
-                blocks: t.blocks,
-                opcount: t.opcount,
-                finish_at,
-                fails,
-                seq,
-                spec_wake_at,
-            };
-            self.cores[core] = Some(RunningTask {
-                task: task_id,
-                stage: sid,
-                job: stage.job,
-                user: stage.user,
-                task_idx,
-                started: now,
-                finish_at,
-                stage_slot: slot,
-                seq,
-                fails,
-                attempt,
-                is_clone: false,
-                sibling: None,
-            });
-            self.busy += 1;
-            launches.push(launch);
-            self.policy.on_task_launched(sid);
         }
+        let finish_at = now + dur_us;
+        let task_id = self.next_task;
+        self.next_task += 1;
+        self.launch_seq += 1;
+        let seq = self.launch_seq;
+        let launch = Launch {
+            core,
+            task: task_id,
+            stage: sid,
+            job: stage.job,
+            user: stage.user,
+            task_idx,
+            runtime_s: t.runtime_s,
+            blocks: t.blocks,
+            opcount: t.opcount,
+            finish_at,
+            fails,
+            seq,
+            spec_wake_at,
+        };
+        self.cores[core] = Some(RunningTask {
+            task: task_id,
+            stage: sid,
+            job: stage.job,
+            user: stage.user,
+            task_idx,
+            started: now,
+            finish_at,
+            stage_slot: slot,
+            seq,
+            fails,
+            attempt,
+            is_clone: false,
+            sibling: None,
+        });
+        self.busy += 1;
+        debug_assert!(self.pending_total > 0);
+        self.pending_total -= 1;
+        launches.push(launch);
     }
 
     // ---- completion -----------------------------------------------------
@@ -617,10 +755,18 @@ impl SchedCore {
         let stage_idx = stage.idx;
         let job_slot = stage.job_slot;
         let active_pos = stage.active_pos;
-        self.policy.on_task_finished(rt.stage);
         if !complete {
+            if self.batch {
+                // Deferred: coalesces into one `on_tasks_finished`
+                // flushed before the next policy interaction.
+                self.finish_batch.push((rt.stage, rt.stage_slot));
+            } else {
+                self.policy.on_task_finished(rt.stage, rt.stage_slot);
+            }
             return;
         }
+        self.flush_finish_batch();
+        self.policy.on_task_finished(rt.stage, rt.stage_slot);
         // Stage complete: drop from active set (swap-remove + position
         // fix-up), advance the DAG (§2.1.1 step 7).
         self.active.swap_remove(active_pos);
@@ -629,7 +775,7 @@ impl SchedCore {
         }
         self.stage_slots.remove(&rt.stage);
         self.stages.remove(rt.stage_slot);
-        self.policy.on_stage_finish(rt.stage);
+        self.policy.on_stage_finish(rt.stage, rt.stage_slot);
 
         let job = self.jobs.get_mut(job_slot);
         let newly_ready = job.mark_done(stage_idx);
@@ -687,6 +833,25 @@ impl SchedCore {
         }
     }
 
+    /// Classify the task event scheduled on `core` *without applying
+    /// it* — the simulator's batching decision. Read-only: inspects the
+    /// running attempt's fate flags and whether its finish would
+    /// complete the stage.
+    pub fn classify_task_event(&self, core: usize) -> TaskEventClass {
+        let rt = self.cores[core]
+            .as_ref()
+            .expect("classify on idle core");
+        if rt.fails {
+            TaskEventClass::Fail
+        } else if rt.sibling.is_some()
+            || self.stages.get(rt.stage_slot).completes_with_next_finish()
+        {
+            TaskEventClass::Boundary
+        } else {
+            TaskEventClass::Plain
+        }
+    }
+
     /// A scheduled task event fired on `core`: completion on the clean
     /// path, or a fault-injected failure. On failure the attempt leaves
     /// the core, is charged one failure, and the caller re-enqueues it at
@@ -710,7 +875,8 @@ impl SchedCore {
         let stage = self.stages.get_mut(rt.stage_slot);
         stage.task_failed();
         let failures = stage.record_failure(rt.task_idx as u32);
-        self.policy.on_task_failed(rt.stage);
+        self.flush_finish_batch();
+        self.policy.on_task_failed(rt.stage, rt.stage_slot);
         let backoff = self
             .plan
             .as_ref()
@@ -735,13 +901,16 @@ impl SchedCore {
             .expect("retry for a departed stage");
         self.fault_stats.retries += 1;
         self.stages.get_mut(slot).requeue(task);
+        self.pending_total += 1;
         self.notify_requeued(now, slot);
     }
 
     fn notify_requeued(&mut self, now: TimeUs, slot: u32) {
+        self.flush_finish_batch();
         let s = self.stages.get(slot);
         let view = StageView {
             stage: s.id,
+            slot,
             job: s.job,
             user: s.user,
             stage_idx: s.idx,
@@ -835,7 +1004,9 @@ impl SchedCore {
             let stage = self.stages.get_mut(rt.stage_slot);
             stage.task_failed();
             stage.requeue(rt.task_idx as u32);
-            self.policy.on_task_failed(rt.stage);
+            self.pending_total += 1;
+            self.flush_finish_batch();
+            self.policy.on_task_failed(rt.stage, rt.stage_slot);
             self.notify_requeued(now, rt.stage_slot);
         }
     }
@@ -893,7 +1064,12 @@ impl SchedCore {
 
     /// No queued work and no running tasks.
     pub fn is_idle(&self) -> bool {
-        self.busy_cores() == 0 && self.active.is_empty()
+        let idle = self.busy_cores() == 0 && self.active.is_empty();
+        debug_assert!(
+            !idle || self.pending_total == 0,
+            "idle engine with non-zero pending_total mirror"
+        );
+        idle
     }
 
     pub fn active_stage_count(&self) -> usize {
@@ -1443,6 +1619,40 @@ mod tests {
         assert_eq!(c.fault_stats, FaultStats::default());
         let second = run(&mut c);
         assert_eq!(first, second, "reset run diverged under faults");
+    }
+
+    #[test]
+    fn batched_mode_matches_per_event_mode() {
+        // Batching armed: deferred finish notifications, launch quanta
+        // (FIFO is static_keys) and the offer guard must reproduce the
+        // per-event schedule, task placement included.
+        let drive = |batched: bool| -> (Vec<(u64, TimeUs)>, Vec<(crate::TaskId, usize)>) {
+            let mut c = core(3);
+            c.set_batching(batched);
+            for u in 0..3 {
+                c.submit_job(0, job(u, 0, 0.4)).unwrap();
+            }
+            let mut now = 0;
+            let mut guard = 0;
+            while !c.is_idle() {
+                if c.can_launch() {
+                    c.try_launch(now);
+                }
+                let (i, f) = (0..3)
+                    .filter_map(|i| c.core_state(i).map(|r| (i, r.finish_at)))
+                    .min_by_key(|&(_, f)| f)
+                    .unwrap();
+                now = f;
+                c.task_finished(now, i);
+                guard += 1;
+                assert!(guard < 10_000, "no progress");
+            }
+            (
+                c.completed.iter().map(|r| (r.job, r.finish)).collect(),
+                c.task_log.iter().map(|t| (t.task, t.core)).collect(),
+            )
+        };
+        assert_eq!(drive(false), drive(true));
     }
 
     #[test]

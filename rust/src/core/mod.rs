@@ -16,7 +16,7 @@ pub mod pool;
 pub mod stage;
 pub mod task;
 
-pub use engine::{Launch, SchedCore, TaskEvent};
+pub use engine::{Launch, SchedCore, TaskEvent, TaskEventClass};
 pub use job::{CostProfile, JobSpec, StagePhase, StageSpec};
 pub use stage::StageState;
 pub use task::{Outcome, TaskSpec};

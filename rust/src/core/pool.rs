@@ -243,6 +243,7 @@ mod tests {
     fn view(stage: StageId, user: u32, running: u32, pending: u32, seq: u64) -> StageView {
         StageView {
             stage,
+            slot: stage as u32,
             job: stage,
             user,
             stage_idx: 0,

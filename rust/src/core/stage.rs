@@ -53,6 +53,15 @@ impl StageState {
         self.finished as usize == self.tasks.len()
     }
 
+    /// Would one more clean finish complete the stage? The batched
+    /// event core classifies completions *before* applying them, so it
+    /// can tell "plain" finishes (deferrable notification) from
+    /// stage-completing ones (must flush: they can retire stages and
+    /// submit DAG children).
+    pub fn completes_with_next_finish(&self) -> bool {
+        self.finished as usize + 1 == self.tasks.len()
+    }
+
     /// Launch the next pending task; returns its index. Ready retries go
     /// first (Spark relaunches failed tasks ahead of the virgin cursor).
     pub fn launch_next(&mut self) -> usize {
@@ -157,8 +166,10 @@ mod tests {
         assert_eq!(s.finished, 2);
         assert!(!s.is_complete());
         s.launch_next();
+        assert!(s.completes_with_next_finish());
         s.task_finished();
         assert!(s.is_complete());
+        assert!(!s.completes_with_next_finish());
         assert!(!s.has_pending());
     }
 

@@ -27,6 +27,7 @@ fn main() -> ExitCode {
         "reproduce" => reproduce(&cli),
         "sweep" => sweep_cmd(&cli),
         "fault" => fault_cmd(&cli),
+        "hotpath" => hotpath_cmd(&cli),
         "scale" => scale_cmd(&cli),
         "replay" => replay_cmd(&cli),
         "tracegen" => tracegen_cmd(&cli),
@@ -330,6 +331,31 @@ fn fault_cmd(cli: &Cli) -> Result<(), String> {
     let bench_path = cli.flag_or("bench-json", &format!("{out}/BENCH_fault.json"));
     sink.write(&bench_path).map_err(|e| e.to_string())?;
     println!("fault bench done → {bench_path}");
+    Ok(())
+}
+
+/// `uwfq hotpath` — event-core throughput: the congested 50k-job /
+/// 100-user / 64-core case per policy across the wheel-vs-heap and
+/// batching-on/off ablation cells, plus the env-resolved default (so a
+/// run under `UWFQ_EVENT_HEAP=1` benches the escape-hatch path). Emits
+/// `BENCH_hotpath.json` (the CI hotpath-smoke artifact).
+fn hotpath_cmd(cli: &Cli) -> Result<(), String> {
+    let out = cli.flag_or("out", "out");
+    std::fs::create_dir_all(&out).map_err(|e| e.to_string())?;
+    let mut cfg = cli.config()?;
+    // Bench default: the 64-core case — unless cores came via flag or
+    // config file.
+    if cli.flag("cores").is_none() && cli.flag("config").is_none() {
+        cfg.cores = 64;
+    }
+    let quick = cli.quick();
+    let outcome = uwfq::bench::hotpath::run_hotpath(&cfg, quick);
+    print!("{}", uwfq::bench::hotpath::render(&outcome));
+    let mut sink = JsonSink::new();
+    uwfq::bench::hotpath::record_metrics(&outcome, &mut sink);
+    let bench_path = cli.flag_or("bench-json", &format!("{out}/BENCH_hotpath.json"));
+    sink.write(&bench_path).map_err(|e| e.to_string())?;
+    println!("hotpath bench done → {bench_path}");
     Ok(())
 }
 

@@ -10,18 +10,21 @@
 //!
 //! Incremental index: a stage's deadline is fixed at submission, so the
 //! [`StageIndex`] key `(deadline, arrival_seq)` is static and selection
-//! is a pure O(log n) heap peek.
+//! is a pure O(log n) heap peek — and `static_keys` lets the batched
+//! event core merge offers. Per-stage deadlines live in a dense
+//! slot-indexed column ([`SlotCol`]), not a hash map.
 
 use super::index::{F64Key, StageIndex};
 use super::vtime::SingleVtime;
 use super::{select_min_by_key, Policy, StageMeta, StageView};
+use crate::core::arena::SlotCol;
 use crate::{JobId, StageId};
 use std::collections::HashMap;
 
 pub struct Cfq {
     vt: SingleVtime,
-    /// Stage → assigned virtual deadline.
-    deadlines: HashMap<StageId, f64>,
+    /// Stage slot → assigned virtual deadline.
+    deadlines: SlotCol<f64>,
     /// Best (earliest) stage deadline seen per job — only for diagnostics.
     job_deadlines: HashMap<JobId, f64>,
     /// (deadline, arrival_seq) — stage id breaks final ties.
@@ -32,7 +35,7 @@ impl Cfq {
     pub fn new(r_total: f64) -> Self {
         Cfq {
             vt: SingleVtime::new(r_total),
-            deadlines: HashMap::new(),
+            deadlines: SlotCol::new(),
             job_deadlines: HashMap::new(),
             index: StageIndex::new(),
         }
@@ -46,9 +49,13 @@ impl Policy for Cfq {
 
     fn on_stage_submit(&mut self, now_s: f64, meta: &StageMeta) {
         let d = self.vt.arrive(now_s, meta.stage, meta.est_slot_time);
-        self.deadlines.insert(meta.stage, d);
-        self.index
-            .insert(meta.stage, (F64Key(d), meta.arrival_seq), meta.pending);
+        self.deadlines.set(meta.slot, d);
+        self.index.insert(
+            meta.stage,
+            meta.slot,
+            (F64Key(d), meta.arrival_seq),
+            meta.pending,
+        );
         let e = self
             .job_deadlines
             .entry(meta.job)
@@ -56,8 +63,17 @@ impl Policy for Cfq {
         *e = e.min(d);
     }
 
-    fn on_task_launched(&mut self, stage: StageId) {
-        self.index.task_launched(stage);
+    fn on_task_launched(&mut self, stage: StageId, slot: u32) {
+        self.index.task_launched(stage, slot);
+    }
+
+    fn on_tasks_launched(&mut self, stage: StageId, slot: u32, n: u32) {
+        self.index.task_launched_n(stage, slot, n);
+    }
+
+    fn on_tasks_finished(&mut self, _batch: &[(StageId, u32)]) {
+        // Deadlines are fixed at submission: a batch of plain finishes
+        // changes nothing in the index.
     }
 
     fn on_task_requeued(&mut self, _now_s: f64, v: &StageView) {
@@ -65,19 +81,23 @@ impl Policy for Cfq {
         // under the same deadline (no extra virtual-time charge).
         let d = self
             .deadlines
-            .get(&v.stage)
+            .get(v.slot)
             .copied()
             .unwrap_or(f64::INFINITY);
         self.index
-            .task_requeued(v.stage, (F64Key(d), v.arrival_seq));
+            .task_requeued(v.stage, v.slot, (F64Key(d), v.arrival_seq));
     }
 
-    fn on_stage_finish(&mut self, stage: StageId) {
-        self.deadlines.remove(&stage);
-        self.index.remove(stage);
+    fn on_stage_finish(&mut self, stage: StageId, slot: u32) {
+        self.deadlines.take(slot);
+        self.index.remove(stage, slot);
     }
 
-    fn select_next(&mut self, _now_s: f64) -> Option<StageId> {
+    fn static_keys(&self) -> bool {
+        true
+    }
+
+    fn select_next(&mut self, _now_s: f64) -> Option<(StageId, u32)> {
         self.index.peek()
     }
 
@@ -85,7 +105,7 @@ impl Policy for Cfq {
         select_min_by_key(views, |v| {
             (
                 self.deadlines
-                    .get(&v.stage)
+                    .get(v.slot)
                     .copied()
                     .unwrap_or(f64::INFINITY),
                 v.arrival_seq,
@@ -103,12 +123,13 @@ impl Policy for Cfq {
 mod tests {
     use super::*;
 
-    fn meta(stage: u64, job: u64, slot: f64) -> StageMeta {
+    fn meta(stage: u64, job: u64, slot_time: f64) -> StageMeta {
         StageMeta {
             stage,
+            slot: stage as u32,
             job,
             user: 0,
-            est_slot_time: slot,
+            est_slot_time: slot_time,
             stage_idx: 0,
             arrival_seq: stage,
             pending: 1,
@@ -118,6 +139,7 @@ mod tests {
     fn v(stage: u64, seq: u64) -> StageView {
         StageView {
             stage,
+            slot: stage as u32,
             job: stage,
             user: 0,
             stage_idx: 0,
@@ -134,7 +156,7 @@ mod tests {
         p.on_stage_submit(0.0, &meta(2, 2, 1.0));
         let views = vec![v(1, 0), v(2, 1)];
         assert_eq!(p.select(0.0, &views), Some(1));
-        assert_eq!(p.select_next(0.0), Some(2));
+        assert_eq!(p.select_next(0.0), Some((2, 2)));
     }
 
     #[test]
@@ -146,7 +168,7 @@ mod tests {
         p.on_stage_submit(1.0, &meta(2, 2, 2.0));
         let views = vec![v(2, 1), v(1, 0)];
         assert_eq!(p.select(1.0, &views), Some(1));
-        assert_eq!(p.select_next(1.0), Some(1));
+        assert_eq!(p.select_next(1.0), Some((1, 1)));
     }
 
     #[test]
@@ -164,14 +186,14 @@ mod tests {
         // all deadlines equal → ties break by arrival: the flooder's first
         // stage is selected, not the single-job user's.
         assert_eq!(p.select(0.0, &views), Some(0));
-        assert_eq!(p.select_next(0.0), Some(1));
+        assert_eq!(p.select_next(0.0), Some((1, 1)));
     }
 
     #[test]
     fn stage_finish_retires_entity() {
         let mut p = Cfq::new(1.0);
         p.on_stage_submit(0.0, &meta(1, 1, 1.0));
-        p.on_stage_finish(1);
+        p.on_stage_finish(1, 1);
         let views = vec![v(1, 0)];
         // Unknown stages sort last but are still selectable (defensive).
         assert_eq!(p.select(0.0, &views), Some(0));
@@ -194,10 +216,21 @@ mod tests {
         m.pending = 2;
         p.on_stage_submit(0.0, &m);
         p.on_stage_submit(0.0, &meta(2, 2, 5.0));
-        assert_eq!(p.select_next(0.0), Some(1));
-        p.on_task_launched(1);
-        assert_eq!(p.select_next(0.0), Some(1));
-        p.on_task_launched(1);
-        assert_eq!(p.select_next(0.0), Some(2));
+        assert_eq!(p.select_next(0.0), Some((1, 1)));
+        p.on_task_launched(1, 1);
+        assert_eq!(p.select_next(0.0), Some((1, 1)));
+        p.on_task_launched(1, 1);
+        assert_eq!(p.select_next(0.0), Some((2, 2)));
+    }
+
+    #[test]
+    fn batched_launch_drains_like_singles() {
+        let mut p = Cfq::new(2.0);
+        let mut m = meta(1, 1, 1.0);
+        m.pending = 3;
+        p.on_stage_submit(0.0, &m);
+        p.on_stage_submit(0.0, &meta(2, 2, 5.0));
+        p.on_tasks_launched(1, 1, 3);
+        assert_eq!(p.select_next(0.0), Some((2, 2)));
     }
 }

@@ -7,7 +7,10 @@
 //! Incremental index: key `(running, arrival_seq, stage_idx)` changes on
 //! every launch/finish of the stage; the [`StageIndex`] lazy-invalidation
 //! rules (fresh entry on decrease, stale fix-up on increase) keep
-//! selection at O(log n) amortized per event.
+//! selection at O(log n) amortized per event. Keys depend on running
+//! counts, so Fair is **not** `static_keys` — the batched core still
+//! offers per event, but delivers deferred finish notifications through
+//! the coalescing [`Policy::on_tasks_finished`] below.
 
 use super::index::StageIndex;
 use super::{select_min_by_key, Policy, StageMeta, StageView};
@@ -33,24 +36,48 @@ impl Policy for Fair {
     }
 
     fn on_stage_submit(&mut self, _now_s: f64, meta: &StageMeta) {
-        self.index
-            .insert(meta.stage, (0, meta.arrival_seq, meta.stage_idx), meta.pending);
+        self.index.insert(
+            meta.stage,
+            meta.slot,
+            (0, meta.arrival_seq, meta.stage_idx),
+            meta.pending,
+        );
     }
 
-    fn on_task_launched(&mut self, stage: StageId) {
-        self.index.task_launched(stage);
-        if let Some((running, seq, idx)) = self.index.key_of(stage) {
-            self.index.update_key(stage, (running + 1, seq, idx));
+    fn on_task_launched(&mut self, stage: StageId, slot: u32) {
+        self.index.task_launched(stage, slot);
+        if let Some((running, seq, idx)) = self.index.key_of(stage, slot) {
+            self.index.update_key(stage, slot, (running + 1, seq, idx));
         }
     }
 
-    fn on_task_finished(&mut self, stage: StageId) {
+    fn on_task_finished(&mut self, stage: StageId, slot: u32) {
         // Only stages still holding pending work live in the index; for
         // them a finish lowers the priority key, which must push a fresh
         // entry (invariant 1 in the index docs).
-        if let Some((running, seq, idx)) = self.index.key_of(stage) {
+        if let Some((running, seq, idx)) = self.index.key_of(stage, slot) {
             debug_assert!(running > 0);
-            self.index.update_key(stage, (running - 1, seq, idx));
+            self.index.update_key(stage, slot, (running - 1, seq, idx));
+        }
+    }
+
+    fn on_tasks_finished(&mut self, batch: &[(StageId, u32)]) {
+        // Coalesce runs of consecutive same-stage finishes into one net
+        // key update. Equivalent to the per-event replay: intermediate
+        // keys would only add stale heap entries that the lazy peek
+        // re-keys away — the surviving current key is identical.
+        let mut i = 0;
+        while i < batch.len() {
+            let (stage, slot) = batch[i];
+            let mut n: u32 = 1;
+            while i + (n as usize) < batch.len() && batch[i + n as usize] == (stage, slot) {
+                n += 1;
+            }
+            if let Some((running, seq, idx)) = self.index.key_of(stage, slot) {
+                debug_assert!(running >= n);
+                self.index.update_key(stage, slot, (running - n, seq, idx));
+            }
+            i += n as usize;
         }
     }
 
@@ -58,14 +85,14 @@ impl Policy for Fair {
         // `v.running` is the engine's current count (the failed task is
         // already off the core), matching the scan comparator exactly.
         self.index
-            .task_requeued(v.stage, (v.running, v.arrival_seq, v.stage_idx));
+            .task_requeued(v.stage, v.slot, (v.running, v.arrival_seq, v.stage_idx));
     }
 
-    fn on_stage_finish(&mut self, stage: StageId) {
-        self.index.remove(stage);
+    fn on_stage_finish(&mut self, stage: StageId, slot: u32) {
+        self.index.remove(stage, slot);
     }
 
-    fn select_next(&mut self, _now_s: f64) -> Option<StageId> {
+    fn select_next(&mut self, _now_s: f64) -> Option<(StageId, u32)> {
         self.index.peek()
     }
 
@@ -83,6 +110,7 @@ mod tests {
     fn v(stage: u64, running: u32, pending: u32, seq: u64) -> StageView {
         StageView {
             stage,
+            slot: stage as u32,
             job: stage,
             user: 0,
             stage_idx: 0,
@@ -97,6 +125,7 @@ mod tests {
             0.0,
             &StageMeta {
                 stage,
+                slot: stage as u32,
                 job: stage,
                 user: 0,
                 est_slot_time: 1.0,
@@ -142,9 +171,9 @@ mod tests {
         }
         let mut launched = [0u32; 3];
         for _ in 0..9 {
-            let s = p.select_next(0.0).unwrap();
+            let (s, slot) = p.select_next(0.0).unwrap();
             launched[(s - 1) as usize] += 1;
-            p.on_task_launched(s);
+            p.on_task_launched(s, slot);
         }
         assert_eq!(launched, [3, 3, 3]);
     }
@@ -155,12 +184,39 @@ mod tests {
         submit(&mut p, 1, 1, 10);
         submit(&mut p, 2, 2, 10);
         // Stage 1 launches twice → stage 2 preferred.
-        p.on_task_launched(1);
-        p.on_task_launched(1);
-        assert_eq!(p.select_next(0.0), Some(2));
-        p.on_task_launched(2);
+        p.on_task_launched(1, 1);
+        p.on_task_launched(1, 1);
+        assert_eq!(p.select_next(0.0), Some((2, 2)));
+        p.on_task_launched(2, 2);
         // A stage-1 task finishes: both at running 1 → FIFO tiebreak.
-        p.on_task_finished(1);
-        assert_eq!(p.select_next(0.0), Some(1));
+        p.on_task_finished(1, 1);
+        assert_eq!(p.select_next(0.0), Some((1, 1)));
+    }
+
+    #[test]
+    fn batched_finish_matches_per_event_replay() {
+        let mut a = Fair::new();
+        let mut b = Fair::new();
+        for p in [&mut a, &mut b] {
+            submit(p, 1, 1, 10);
+            submit(p, 2, 2, 10);
+            for _ in 0..3 {
+                p.on_task_launched(1, 1);
+            }
+            p.on_task_launched(2, 2);
+        }
+        let batch = [(1u64, 1u32), (1, 1), (2, 2)];
+        a.on_tasks_finished(&batch);
+        for &(s, slot) in &batch {
+            b.on_task_finished(s, slot);
+        }
+        for _ in 0..4 {
+            let x = a.select_next(0.0);
+            assert_eq!(x, b.select_next(0.0));
+            if let Some((s, slot)) = x {
+                a.on_task_launched(s, slot);
+                b.on_task_launched(s, slot);
+            }
+        }
     }
 }

@@ -2,7 +2,9 @@
 //! stages of the same job in stage-index order.
 //!
 //! Incremental index: keys are static per stage, so a plain lazy min-heap
-//! ([`StageIndex`]) gives O(log n) selection with no invalidation traffic.
+//! ([`StageIndex`]) gives O(log n) selection with no invalidation traffic
+//! — and `static_keys` lets the batched event core merge same-timestamp
+//! offers and launch multi-task quanta without re-selecting.
 
 use super::index::StageIndex;
 use super::{select_min_by_key, Policy, StageMeta, StageView};
@@ -27,24 +29,41 @@ impl Policy for Fifo {
     }
 
     fn on_stage_submit(&mut self, _now_s: f64, meta: &StageMeta) {
-        self.index
-            .insert(meta.stage, (meta.arrival_seq, meta.stage_idx), meta.pending);
+        self.index.insert(
+            meta.stage,
+            meta.slot,
+            (meta.arrival_seq, meta.stage_idx),
+            meta.pending,
+        );
     }
 
-    fn on_task_launched(&mut self, stage: StageId) {
-        self.index.task_launched(stage);
+    fn on_task_launched(&mut self, stage: StageId, slot: u32) {
+        self.index.task_launched(stage, slot);
+    }
+
+    fn on_tasks_launched(&mut self, stage: StageId, slot: u32, n: u32) {
+        self.index.task_launched_n(stage, slot, n);
+    }
+
+    fn on_tasks_finished(&mut self, _batch: &[(StageId, u32)]) {
+        // Keys are static and carry no running count: a batch of plain
+        // finishes changes nothing in the index.
     }
 
     fn on_task_requeued(&mut self, _now_s: f64, v: &StageView) {
         self.index
-            .task_requeued(v.stage, (v.arrival_seq, v.stage_idx));
+            .task_requeued(v.stage, v.slot, (v.arrival_seq, v.stage_idx));
     }
 
-    fn on_stage_finish(&mut self, stage: StageId) {
-        self.index.remove(stage);
+    fn on_stage_finish(&mut self, stage: StageId, slot: u32) {
+        self.index.remove(stage, slot);
     }
 
-    fn select_next(&mut self, _now_s: f64) -> Option<StageId> {
+    fn static_keys(&self) -> bool {
+        true
+    }
+
+    fn select_next(&mut self, _now_s: f64) -> Option<(StageId, u32)> {
         self.index.peek()
     }
 
@@ -60,6 +79,7 @@ mod tests {
     fn v(stage: u64, seq: u64, idx: usize, pending: u32) -> StageView {
         StageView {
             stage,
+            slot: stage as u32,
             job: seq,
             user: 0,
             stage_idx: idx,
@@ -74,6 +94,7 @@ mod tests {
             0.0,
             &StageMeta {
                 stage,
+                slot: stage as u32,
                 job: seq,
                 user: 0,
                 est_slot_time: 1.0,
@@ -105,14 +126,31 @@ mod tests {
         submit(&mut p, 10, 2, 0, 1);
         submit(&mut p, 11, 1, 1, 1);
         submit(&mut p, 12, 1, 0, 2);
-        assert_eq!(p.select_next(0.0), Some(12));
-        p.on_task_launched(12);
-        assert_eq!(p.select_next(0.0), Some(12));
-        p.on_task_launched(12); // exhausted
-        assert_eq!(p.select_next(0.0), Some(11));
-        p.on_stage_finish(11);
-        assert_eq!(p.select_next(0.0), Some(10));
-        p.on_task_launched(10);
+        assert_eq!(p.select_next(0.0), Some((12, 12)));
+        p.on_task_launched(12, 12);
+        assert_eq!(p.select_next(0.0), Some((12, 12)));
+        p.on_task_launched(12, 12); // exhausted
+        assert_eq!(p.select_next(0.0), Some((11, 11)));
+        p.on_stage_finish(11, 11);
+        assert_eq!(p.select_next(0.0), Some((10, 10)));
+        p.on_task_launched(10, 10);
         assert_eq!(p.select_next(0.0), None);
+    }
+
+    #[test]
+    fn batched_hooks_match_singles() {
+        let mut a = Fifo::new();
+        let mut b = Fifo::new();
+        for p in [&mut a, &mut b] {
+            submit(p, 10, 1, 0, 3);
+            submit(p, 11, 2, 0, 1);
+        }
+        a.on_tasks_launched(10, 10, 2);
+        b.on_task_launched(10, 10);
+        b.on_task_launched(10, 10);
+        assert_eq!(a.select_next(0.0), b.select_next(0.0));
+        // Plain-finish batches are a no-op for static keys.
+        a.on_tasks_finished(&[(10, 10), (10, 10)]);
+        assert_eq!(a.select_next(0.0), Some((10, 10)));
     }
 }

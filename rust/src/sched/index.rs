@@ -1,10 +1,20 @@
 //! Incremental priority indexes for O(log n) per-event selection.
 //!
-//! Every policy keeps a [`StageIndex`] (or two, for UJF's pool tree) so
-//! that `select_next` is a heap peek instead of a scan over all active
-//! stages. The index uses **lazy invalidation**: key changes push a fresh
-//! entry instead of rewriting the heap, and stale entries are discarded
-//! (or re-keyed) when they surface at the top.
+//! Every policy keeps a [`StageIndex`] (or, for UJF's pool tree, one
+//! [`MapIndex`] per user) so that `select_next` is a heap peek instead
+//! of a scan over all active stages. Both use **lazy invalidation**:
+//! key changes push a fresh entry instead of rewriting the heap, and
+//! stale entries are discarded (or re-keyed) when they surface at the
+//! top.
+//!
+//! [`StageIndex`] stores its per-stage state (current key, pending
+//! count, occupying stage id) in **dense slot-indexed columns** — SoA,
+//! addressed by the engine's arena slot that every policy hook now
+//! carries — so validation at the heap top is three array reads with
+//! no hashing. [`MapIndex`] is the HashMap-backed variant with the
+//! same API and invariants, for the many-small-indexes case (UJF keeps
+//! one per user; dense columns there would multiply the slot space by
+//! the user count).
 //!
 //! ## Invariants (the lazy-invalidation contract)
 //!
@@ -22,6 +32,12 @@
 //!    the fault-free path pending never increases and the drop is
 //!    permanent.
 //!
+//! Slot recycling is safe: the engine retires a stage (and its index
+//! entry) before its arena slot is reused, stage ids are never reused,
+//! and heap entries carry `(key, stage, slot)` — an entry whose slot
+//! now holds a different stage id fails the occupancy check and is
+//! reclaimed like any other dead entry.
+//!
 //! Amortized cost: every engine event (submit / launch / task-finish)
 //! pushes O(1) entries, so total heap traffic is O(events · log n).
 
@@ -33,7 +49,7 @@ use crate::StageId;
 
 /// Total-ordered f64 for heap keys (virtual deadlines are always finite
 /// or +∞, never NaN; `total_cmp` matches `PartialOrd` on that domain).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, Default)]
 pub struct F64Key(pub f64);
 
 impl PartialEq for F64Key {
@@ -53,76 +69,118 @@ impl Ord for F64Key {
     }
 }
 
-/// Min-index over stages with pending work. `K` is the policy's priority
-/// key; ties beyond `K` break on `StageId` (matching the scan-path
-/// comparators, which all end in the stage id).
+/// Sentinel for an unoccupied slot column entry: the engine's stage ids
+/// start at 1, so 0 never names a live stage.
+const EMPTY: StageId = 0;
+
+/// Min-index over stages with pending work, SoA storage. `K` is the
+/// policy's priority key; ties beyond `K` break on `StageId` (matching
+/// the scan-path comparators, which all end in the stage id — the slot
+/// rides behind the id and never decides an ordering).
 #[derive(Debug)]
-pub struct StageIndex<K: Ord + Copy> {
-    heap: BinaryHeap<Reverse<(K, StageId)>>,
-    /// stage → (current key, pending tasks). Stages leave at pending 0 or
-    /// on removal; heap entries for absent stages are dropped lazily.
-    live: HashMap<StageId, (K, u32)>,
+pub struct StageIndex<K: Ord + Copy + Default> {
+    heap: BinaryHeap<Reverse<(K, StageId, u32)>>,
+    /// Dense columns indexed by arena slot. `id[slot] == EMPTY` means
+    /// the slot is not selectable; otherwise `key`/`pending` hold the
+    /// occupying stage's current key and pending count (always > 0).
+    id: Vec<StageId>,
+    key: Vec<K>,
+    pending: Vec<u32>,
+    /// Selectable stages (occupied slots).
+    live: usize,
 }
 
-impl<K: Ord + Copy> Default for StageIndex<K> {
+impl<K: Ord + Copy + Default> Default for StageIndex<K> {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl<K: Ord + Copy> StageIndex<K> {
+impl<K: Ord + Copy + Default> StageIndex<K> {
     pub fn new() -> Self {
         StageIndex {
             heap: BinaryHeap::new(),
-            live: HashMap::new(),
+            id: Vec::new(),
+            key: Vec::new(),
+            pending: Vec::new(),
+            live: 0,
         }
     }
 
     /// Number of selectable (pending > 0) stages.
     pub fn len(&self) -> usize {
-        self.live.len()
+        self.live
     }
 
     pub fn is_empty(&self) -> bool {
-        self.live.is_empty()
+        self.live == 0
+    }
+
+    #[inline]
+    fn occupied(&self, stage: StageId, slot: u32) -> bool {
+        (slot as usize) < self.id.len() && self.id[slot as usize] == stage
     }
 
     /// Current key of a selectable stage.
-    pub fn key_of(&self, stage: StageId) -> Option<K> {
-        self.live.get(&stage).map(|&(k, _)| k)
+    pub fn key_of(&self, stage: StageId, slot: u32) -> Option<K> {
+        if self.occupied(stage, slot) {
+            Some(self.key[slot as usize])
+        } else {
+            None
+        }
     }
 
-    /// Register a newly-submitted stage.
-    pub fn insert(&mut self, stage: StageId, key: K, pending: u32) {
+    /// Register a newly-submitted stage under its arena slot.
+    pub fn insert(&mut self, stage: StageId, slot: u32, key: K, pending: u32) {
         debug_assert!(pending > 0, "stage submitted with no tasks");
-        self.live.insert(stage, (key, pending));
-        self.heap.push(Reverse((key, stage)));
+        debug_assert_ne!(stage, EMPTY, "stage ids start at 1");
+        let i = slot as usize;
+        if i >= self.id.len() {
+            self.id.resize(i + 1, EMPTY);
+            self.key.resize_with(i + 1, K::default);
+            self.pending.resize(i + 1, 0);
+        }
+        debug_assert_eq!(self.id[i], EMPTY, "slot already occupied");
+        self.id[i] = stage;
+        self.key[i] = key;
+        self.pending[i] = pending;
+        self.live += 1;
+        self.heap.push(Reverse((key, stage, slot)));
     }
 
     /// Drop a stage (completion). Heap entries are reclaimed lazily.
-    pub fn remove(&mut self, stage: StageId) {
-        self.live.remove(&stage);
+    pub fn remove(&mut self, stage: StageId, slot: u32) {
+        if self.occupied(stage, slot) {
+            self.id[slot as usize] = EMPTY;
+            self.live -= 1;
+        }
     }
 
     /// Change a stage's priority key. Pushes a fresh entry so the new
     /// position is discoverable; the old entry goes stale.
-    pub fn update_key(&mut self, stage: StageId, key: K) {
-        if let Some(e) = self.live.get_mut(&stage) {
-            if e.0 != key {
-                e.0 = key;
-                self.heap.push(Reverse((key, stage)));
-            }
+    pub fn update_key(&mut self, stage: StageId, slot: u32, key: K) {
+        if self.occupied(stage, slot) && self.key[slot as usize] != key {
+            self.key[slot as usize] = key;
+            self.heap.push(Reverse((key, stage, slot)));
         }
     }
 
     /// One task of `stage` launched: decrement pending, dropping the
     /// stage from the index when it has nothing left to launch.
-    pub fn task_launched(&mut self, stage: StageId) {
-        if let Some(e) = self.live.get_mut(&stage) {
-            debug_assert!(e.1 > 0);
-            e.1 -= 1;
-            if e.1 == 0 {
-                self.live.remove(&stage);
+    pub fn task_launched(&mut self, stage: StageId, slot: u32) {
+        self.task_launched_n(stage, slot, 1);
+    }
+
+    /// `n` tasks of `stage` launched back-to-back (the batched core's
+    /// multi-launch quantum): one decrement instead of `n`.
+    pub fn task_launched_n(&mut self, stage: StageId, slot: u32, n: u32) {
+        if self.occupied(stage, slot) {
+            let i = slot as usize;
+            debug_assert!(self.pending[i] >= n);
+            self.pending[i] -= n;
+            if self.pending[i] == 0 {
+                self.id[i] = EMPTY;
+                self.live -= 1;
             }
         }
     }
@@ -131,27 +189,124 @@ impl<K: Ord + Copy> StageIndex<K> {
     /// retry: re-increment pending. A stage that had been dropped on
     /// exhaustion is re-inserted under `key`; a still-live stage keeps
     /// its current key (the retry does not change its priority).
-    pub fn task_requeued(&mut self, stage: StageId, key: K) {
-        match self.live.get_mut(&stage) {
-            Some(e) => e.1 += 1,
-            None => self.insert(stage, key, 1),
+    pub fn task_requeued(&mut self, stage: StageId, slot: u32, key: K) {
+        if self.occupied(stage, slot) {
+            self.pending[slot as usize] += 1;
+        } else {
+            self.insert(stage, slot, key, 1);
         }
     }
 
-    /// The minimum-key selectable stage, or `None`. Does not consume the
-    /// entry — callers follow up with [`Self::task_launched`] (via the
-    /// policy's `on_task_launched`) once the launch actually happens.
-    pub fn peek(&mut self) -> Option<StageId> {
-        while let Some(&Reverse((k, stage))) = self.heap.peek() {
-            match self.live.get(&stage) {
-                // Valid: stored key is the current key.
-                Some(&(cur, _)) if cur == k => return Some(stage),
-                // Stale: re-key so the stage keeps its representation.
-                Some(&(cur, _)) => {
-                    self.heap.pop();
-                    self.heap.push(Reverse((cur, stage)));
+    /// The minimum-key selectable stage (with its slot), or `None`.
+    /// Does not consume the entry — callers follow up with
+    /// [`Self::task_launched`] (via the policy's `on_task_launched`)
+    /// once the launch actually happens.
+    pub fn peek(&mut self) -> Option<(StageId, u32)> {
+        while let Some(&Reverse((k, stage, slot))) = self.heap.peek() {
+            if self.occupied(stage, slot) {
+                let cur = self.key[slot as usize];
+                if cur == k {
+                    // Valid: stored key is the current key.
+                    debug_assert!(self.pending[slot as usize] > 0);
+                    return Some((stage, slot));
                 }
-                // Dead (finished or exhausted): reclaim.
+                // Stale: re-key so the stage keeps its representation.
+                self.heap.pop();
+                self.heap.push(Reverse((cur, stage, slot)));
+            } else {
+                // Dead (finished, exhausted, or recycled slot): reclaim.
+                self.heap.pop();
+            }
+        }
+        None
+    }
+}
+
+/// HashMap-backed index with the same API, lazy-invalidation contract,
+/// and `(key, stage)` selection order as [`StageIndex`]. Used where
+/// many small indexes coexist (UJF's per-user pools) and per-index
+/// dense slot columns would cost `users × slots` memory.
+#[derive(Debug)]
+pub struct MapIndex<K: Ord + Copy> {
+    heap: BinaryHeap<Reverse<(K, StageId, u32)>>,
+    /// stage → (current key, pending tasks, arena slot).
+    live: HashMap<StageId, (K, u32, u32)>,
+}
+
+impl<K: Ord + Copy> Default for MapIndex<K> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<K: Ord + Copy> MapIndex<K> {
+    pub fn new() -> Self {
+        MapIndex {
+            heap: BinaryHeap::new(),
+            live: HashMap::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.live.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live.is_empty()
+    }
+
+    pub fn key_of(&self, stage: StageId) -> Option<K> {
+        self.live.get(&stage).map(|&(k, _, _)| k)
+    }
+
+    pub fn insert(&mut self, stage: StageId, slot: u32, key: K, pending: u32) {
+        debug_assert!(pending > 0, "stage submitted with no tasks");
+        self.live.insert(stage, (key, pending, slot));
+        self.heap.push(Reverse((key, stage, slot)));
+    }
+
+    pub fn remove(&mut self, stage: StageId) {
+        self.live.remove(&stage);
+    }
+
+    pub fn update_key(&mut self, stage: StageId, key: K) {
+        if let Some(e) = self.live.get_mut(&stage) {
+            if e.0 != key {
+                e.0 = key;
+                self.heap.push(Reverse((key, stage, e.2)));
+            }
+        }
+    }
+
+    pub fn task_launched(&mut self, stage: StageId) {
+        self.task_launched_n(stage, 1);
+    }
+
+    pub fn task_launched_n(&mut self, stage: StageId, n: u32) {
+        if let Some(e) = self.live.get_mut(&stage) {
+            debug_assert!(e.1 >= n);
+            e.1 -= n;
+            if e.1 == 0 {
+                self.live.remove(&stage);
+            }
+        }
+    }
+
+    pub fn task_requeued(&mut self, stage: StageId, slot: u32, key: K) {
+        match self.live.get_mut(&stage) {
+            Some(e) => e.1 += 1,
+            None => self.insert(stage, slot, key, 1),
+        }
+    }
+
+    pub fn peek(&mut self) -> Option<(StageId, u32)> {
+        while let Some(&Reverse((k, stage, slot))) = self.heap.peek() {
+            match self.live.get(&stage) {
+                Some(&(cur, _, s)) if cur == k && s == slot => return Some((stage, slot)),
+                Some(&(cur, _, s)) => {
+                    self.heap.pop();
+                    self.heap.push(Reverse((cur, stage, s)));
+                }
                 None => {
                     self.heap.pop();
                 }
@@ -168,44 +323,61 @@ mod tests {
     #[test]
     fn min_key_wins_with_stage_tiebreak() {
         let mut ix: StageIndex<u64> = StageIndex::new();
-        ix.insert(5, 2, 1);
-        ix.insert(3, 1, 1);
-        ix.insert(4, 1, 1);
-        assert_eq!(ix.peek(), Some(3), "equal keys break on stage id");
+        ix.insert(5, 0, 2, 1);
+        ix.insert(3, 1, 1, 1);
+        ix.insert(4, 2, 1, 1);
+        assert_eq!(ix.peek(), Some((3, 1)), "equal keys break on stage id");
     }
 
     #[test]
     fn pending_exhaustion_drops_stage() {
         let mut ix: StageIndex<u64> = StageIndex::new();
-        ix.insert(1, 0, 2);
-        ix.insert(2, 5, 1);
-        assert_eq!(ix.peek(), Some(1));
-        ix.task_launched(1);
-        assert_eq!(ix.peek(), Some(1));
-        ix.task_launched(1);
-        assert_eq!(ix.peek(), Some(2), "exhausted stage is dropped");
+        ix.insert(1, 0, 0, 2);
+        ix.insert(2, 1, 5, 1);
+        assert_eq!(ix.peek(), Some((1, 0)));
+        ix.task_launched(1, 0);
+        assert_eq!(ix.peek(), Some((1, 0)));
+        ix.task_launched(1, 0);
+        assert_eq!(ix.peek(), Some((2, 1)), "exhausted stage is dropped");
         assert_eq!(ix.len(), 1);
+    }
+
+    #[test]
+    fn batched_launch_matches_singles() {
+        let mut a: StageIndex<u64> = StageIndex::new();
+        let mut b: StageIndex<u64> = StageIndex::new();
+        a.insert(1, 0, 3, 5);
+        b.insert(1, 0, 3, 5);
+        a.task_launched_n(1, 0, 3);
+        for _ in 0..3 {
+            b.task_launched(1, 0);
+        }
+        assert_eq!(a.peek(), b.peek());
+        a.task_launched_n(1, 0, 2);
+        b.task_launched_n(1, 0, 2);
+        assert_eq!(a.peek(), None, "exhaustion via batch drops the stage");
+        assert_eq!(b.peek(), None);
     }
 
     #[test]
     fn key_increase_goes_stale_then_recovers() {
         let mut ix: StageIndex<u64> = StageIndex::new();
-        ix.insert(1, 0, 5);
-        ix.insert(2, 1, 5);
-        ix.update_key(1, 3); // stage 1 demoted
-        assert_eq!(ix.peek(), Some(2));
-        ix.update_key(2, 9); // stage 2 demoted past 1
-        assert_eq!(ix.peek(), Some(1));
+        ix.insert(1, 0, 0, 5);
+        ix.insert(2, 1, 1, 5);
+        ix.update_key(1, 0, 3); // stage 1 demoted
+        assert_eq!(ix.peek(), Some((2, 1)));
+        ix.update_key(2, 1, 9); // stage 2 demoted past 1
+        assert_eq!(ix.peek(), Some((1, 0)));
     }
 
     #[test]
     fn removal_reclaims_lazily() {
         let mut ix: StageIndex<(u32, u64)> = StageIndex::new();
-        ix.insert(1, (0, 0), 1);
-        ix.insert(2, (0, 1), 1);
-        ix.remove(1);
-        assert_eq!(ix.peek(), Some(2));
-        ix.remove(2);
+        ix.insert(1, 0, (0, 0), 1);
+        ix.insert(2, 1, (0, 1), 1);
+        ix.remove(1, 0);
+        assert_eq!(ix.peek(), Some((2, 1)));
+        ix.remove(2, 1);
         assert_eq!(ix.peek(), None);
         assert!(ix.is_empty());
     }
@@ -213,20 +385,34 @@ mod tests {
     #[test]
     fn requeue_revives_exhausted_stage() {
         let mut ix: StageIndex<u64> = StageIndex::new();
-        ix.insert(1, 4, 1);
-        ix.insert(2, 7, 1);
-        ix.task_launched(1);
-        assert_eq!(ix.peek(), Some(2), "stage 1 exhausted");
+        ix.insert(1, 0, 4, 1);
+        ix.insert(2, 1, 7, 1);
+        ix.task_launched(1, 0);
+        assert_eq!(ix.peek(), Some((2, 1)), "stage 1 exhausted");
         // Retry re-inserts the dropped stage with the caller's key.
-        ix.task_requeued(1, 4);
-        assert_eq!(ix.peek(), Some(1));
-        assert_eq!(ix.key_of(1), Some(4));
+        ix.task_requeued(1, 0, 4);
+        assert_eq!(ix.peek(), Some((1, 0)));
+        assert_eq!(ix.key_of(1, 0), Some(4));
         // Requeue on a live stage only bumps pending.
-        ix.task_requeued(2, 99);
-        assert_eq!(ix.key_of(2), Some(7), "live stage keeps its key");
-        ix.task_launched(1);
-        ix.task_launched(2);
-        assert_eq!(ix.peek(), Some(2), "second pending task still there");
+        ix.task_requeued(2, 1, 99);
+        assert_eq!(ix.key_of(2, 1), Some(7), "live stage keeps its key");
+        ix.task_launched(1, 0);
+        ix.task_launched(2, 1);
+        assert_eq!(ix.peek(), Some((2, 1)), "second pending task still there");
+    }
+
+    #[test]
+    fn recycled_slot_rejects_dead_heap_entries() {
+        let mut ix: StageIndex<u64> = StageIndex::new();
+        ix.insert(1, 0, 0, 1); // best key, slot 0
+        ix.insert(2, 1, 5, 1);
+        ix.remove(1, 0);
+        // Slot 0 recycled by a new stage with a worse key: the stale
+        // heap entry (0, stage 1, slot 0) must not select stage 3.
+        ix.insert(3, 0, 9, 1);
+        assert_eq!(ix.peek(), Some((2, 1)));
+        ix.task_launched(2, 1);
+        assert_eq!(ix.peek(), Some((3, 0)));
     }
 
     #[test]
@@ -238,52 +424,81 @@ mod tests {
 
     #[test]
     fn churn_preserves_argmin_vs_scan() {
-        // Randomized differential check against a linear scan.
+        // Randomized differential check against a linear scan, with the
+        // slot space deliberately recycled (slot = stage % 7) so the
+        // occupancy check is exercised under aliasing. Only one live
+        // stage per slot at a time, as in the engine.
         use crate::util::Rng;
         let mut rng = Rng::new(0x1DE);
         let mut ix: StageIndex<(u32, u64)> = StageIndex::new();
-        let mut model: std::collections::HashMap<StageId, ((u32, u64), u32)> =
-            std::collections::HashMap::new();
+        let mut model: HashMap<StageId, ((u32, u64), u32, u32)> = HashMap::new();
+        let mut slot_used = [false; 7];
         let mut next_stage: StageId = 1;
         for _ in 0..2000 {
             match rng.below(4) {
                 0 => {
-                    let key = (rng.below(4) as u32, rng.below(100));
-                    let pending = 1 + rng.below(3) as u32;
-                    ix.insert(next_stage, key, pending);
-                    model.insert(next_stage, (key, pending));
+                    let slot = (next_stage % 7) as u32;
+                    if !slot_used[slot as usize] {
+                        let key = (rng.below(4) as u32, rng.below(100));
+                        let pending = 1 + rng.below(3) as u32;
+                        ix.insert(next_stage, slot, key, pending);
+                        model.insert(next_stage, (key, pending, slot));
+                        slot_used[slot as usize] = true;
+                    }
                     next_stage += 1;
                 }
                 1 => {
                     if let Some(&s) = model.keys().min() {
-                        ix.remove(s);
-                        model.remove(&s);
+                        let (_, _, slot) = model.remove(&s).unwrap();
+                        ix.remove(s, slot);
+                        slot_used[slot as usize] = false;
                     }
                 }
                 2 => {
                     if let Some(&s) = model.keys().max() {
                         let key = (rng.below(4) as u32, rng.below(100));
-                        ix.update_key(s, key);
-                        model.get_mut(&s).unwrap().0 = key;
+                        let e = model.get_mut(&s).unwrap();
+                        ix.update_key(s, e.2, key);
+                        e.0 = key;
                     }
                 }
                 _ => {
-                    if let Some(s) = ix.peek() {
-                        ix.task_launched(s);
+                    if let Some((s, slot)) = ix.peek() {
+                        ix.task_launched(s, slot);
                         let e = model.get_mut(&s).unwrap();
                         e.1 -= 1;
                         if e.1 == 0 {
                             model.remove(&s);
+                            slot_used[slot as usize] = false;
                         }
                     }
                 }
             }
             let expect = model
                 .iter()
-                .map(|(&s, &(k, _))| (k, s))
+                .map(|(&s, &(k, _, slot))| (k, s, slot))
                 .min()
-                .map(|(_, s)| s);
+                .map(|(_, s, slot)| (s, slot));
             assert_eq!(ix.peek(), expect);
         }
+    }
+
+    #[test]
+    fn map_index_mirrors_soa_behavior() {
+        let mut ix: MapIndex<u64> = MapIndex::new();
+        ix.insert(5, 0, 2, 1);
+        ix.insert(3, 1, 1, 2);
+        ix.insert(4, 2, 1, 1);
+        assert_eq!(ix.peek(), Some((3, 1)), "equal keys break on stage id");
+        ix.task_launched(3);
+        ix.task_launched(3);
+        assert_eq!(ix.peek(), Some((4, 2)), "exhausted stage dropped");
+        ix.update_key(4, 9);
+        assert_eq!(ix.peek(), Some((5, 0)));
+        ix.remove(5);
+        ix.task_requeued(3, 1, 0);
+        assert_eq!(ix.peek(), Some((3, 1)), "requeue revives with new key");
+        ix.task_launched_n(3, 1);
+        assert_eq!(ix.peek(), Some((4, 2)));
     }
 }

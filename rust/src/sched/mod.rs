@@ -14,6 +14,19 @@
 //! [`Policy::select`] is retained as the reference semantics: the engine
 //! cross-checks both paths under `debug_assertions`, and the differential
 //! test in [`crate::sim`] asserts schedule equivalence end to end.
+//!
+//! Every lifecycle hook carries the stage's **arena slot** next to its
+//! id: policy side state lives in dense slot-indexed columns
+//! ([`crate::core::arena::SlotCol`], [`index::StageIndex`]) rather than
+//! hash maps, so the hot path never hashes. The batched event core adds
+//! two coalesced hooks — [`Policy::on_tasks_finished`] (one call for a
+//! same-timestamp batch of clean finishes) and
+//! [`Policy::on_tasks_launched`] (one call for a multi-launch run on
+//! one stage) — whose defaults replay the per-event hooks in order, so
+//! per-event and batched notification are observationally identical by
+//! construction. Policies whose selection keys ignore running counts
+//! declare [`Policy::static_keys`] so the engine can additionally merge
+//! same-timestamp launch offers.
 
 pub mod cfq;
 pub mod fair;
@@ -45,6 +58,9 @@ pub struct JobMeta {
 #[derive(Clone, Debug)]
 pub struct StageMeta {
     pub stage: StageId,
+    /// Engine arena slot of the stage — the dense address policies key
+    /// their side columns on (valid until `on_stage_finish`).
+    pub slot: u32,
     pub job: JobId,
     pub user: UserId,
     pub est_slot_time: f64,
@@ -60,6 +76,8 @@ pub struct StageMeta {
 #[derive(Clone, Debug)]
 pub struct StageView {
     pub stage: StageId,
+    /// Engine arena slot of the stage (see [`StageMeta::slot`]).
+    pub slot: u32,
     pub job: JobId,
     pub user: UserId,
     pub stage_idx: usize,
@@ -84,11 +102,35 @@ pub trait Policy: Send {
     /// One task of `stage` was launched (running += 1, pending −= 1).
     /// Fired by the engine immediately after every launch so the policy's
     /// index tracks counts without snapshots.
-    fn on_task_launched(&mut self, _stage: StageId) {}
+    fn on_task_launched(&mut self, _stage: StageId, _slot: u32) {}
+
+    /// `n` tasks of `stage` were launched back-to-back in one offer (the
+    /// batched core's multi-launch quantum for [`Policy::static_keys`]
+    /// policies). The default replays [`Policy::on_task_launched`] `n`
+    /// times — the executable spec of the coalesced form.
+    fn on_tasks_launched(&mut self, stage: StageId, slot: u32, n: u32) {
+        for _ in 0..n {
+            self.on_task_launched(stage, slot);
+        }
+    }
 
     /// One running task of `stage` finished (running −= 1). Fired before
     /// `on_stage_finish` when it was the stage's last task.
-    fn on_task_finished(&mut self, _stage: StageId) {}
+    fn on_task_finished(&mut self, _stage: StageId, _slot: u32) {}
+
+    /// A same-timestamp batch of plain (non-completing) task finishes,
+    /// in event order. The batched event core defers per-finish
+    /// notifications and delivers them in one call right before the
+    /// next policy interaction; the default replays
+    /// [`Policy::on_task_finished`] in order — the executable spec —
+    /// and policies override it to coalesce (one re-key per run of
+    /// same-stage finishes) or to skip it entirely when their keys
+    /// don't depend on running counts.
+    fn on_tasks_finished(&mut self, batch: &[(StageId, u32)]) {
+        for &(stage, slot) in batch {
+            self.on_task_finished(stage, slot);
+        }
+    }
 
     /// One running task of `stage` failed (fault injection): running −= 1
     /// but the stage is **not** complete — the task will be requeued
@@ -96,8 +138,8 @@ pub trait Policy: Send {
     /// bookkeeping is identical to a task finishing on a stage with work
     /// left, so the default delegates; a policy whose `on_task_finished`
     /// ever does completion-specific work must override this.
-    fn on_task_failed(&mut self, stage: StageId) {
-        self.on_task_finished(stage);
+    fn on_task_failed(&mut self, stage: StageId, slot: u32) {
+        self.on_task_finished(stage, slot);
     }
 
     /// A failed task re-entered its stage's queue after backoff
@@ -106,17 +148,30 @@ pub trait Policy: Send {
     /// needed to re-key it.
     fn on_task_requeued(&mut self, _now_s: f64, _view: &StageView) {}
 
-    /// A stage completed all of its tasks (pool-tree maintenance).
-    fn on_stage_finish(&mut self, _stage: StageId) {}
+    /// A stage completed all of its tasks (pool-tree maintenance). The
+    /// slot is about to be recycled — policies must drop their
+    /// slot-keyed side state here.
+    fn on_stage_finish(&mut self, _stage: StageId, _slot: u32) {}
 
     /// All stages of a job finished.
     fn on_job_finish(&mut self, _now_s: f64, _job: JobId) {}
 
+    /// True when this policy's selection keys never change while a
+    /// stage sits in the index (no running-count or load terms — FIFO,
+    /// CFQ, UWFQ). The batched event core uses this to merge
+    /// same-timestamp launch offers and run multi-launch quanta; the
+    /// per-event differential validates the claim end to end.
+    fn static_keys(&self) -> bool {
+        false
+    }
+
     /// Incremental selection: the highest-priority stage with pending
-    /// tasks according to the policy's own index, in O(log n). Must agree
-    /// with [`Policy::select`] over the engine's live stages — the engine
-    /// asserts this under `debug_assertions`.
-    fn select_next(&mut self, now_s: f64) -> Option<StageId>;
+    /// tasks according to the policy's own index, in O(log n), returned
+    /// with its arena slot so the engine skips the id→slot map on the
+    /// launch path. Must agree with [`Policy::select`] over the
+    /// engine's live stages — the engine asserts this under
+    /// `debug_assertions`.
+    fn select_next(&mut self, now_s: f64) -> Option<(StageId, u32)>;
 
     /// Reference snapshot-scan selection: pick the stage (index into
     /// `views`) to launch one task from. Must return a view with
@@ -222,6 +277,7 @@ mod tests {
         let views = vec![
             StageView {
                 stage: 1,
+                slot: 0,
                 job: 1,
                 user: 0,
                 stage_idx: 0,
@@ -231,6 +287,7 @@ mod tests {
             },
             StageView {
                 stage: 2,
+                slot: 1,
                 job: 2,
                 user: 0,
                 stage_idx: 0,

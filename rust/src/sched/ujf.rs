@@ -9,14 +9,17 @@
 //! Incremental index: a two-level mirror of the pool tree. Per user we
 //! keep aggregate counters (Σ running, Σ pending) plus ordered multisets
 //! of the user's stage arrival-seqs / stage-idxs (the root Fair
-//! tiebreaks), and an inner Fair [`StageIndex`] over the user's pending
-//! stages. The root level is a lazy min-heap over users with the same
-//! invalidation rules as [`StageIndex`]: fresh entry on every key
-//! decrease, stale fix-up at pop time. Selection is O(log users +
-//! log stages-of-user) per launch.
+//! tiebreaks), and an inner Fair [`MapIndex`] over the user's pending
+//! stages (map-backed: one index per user, so dense slot columns would
+//! cost users × slots). The root level is a lazy min-heap over users
+//! with the same invalidation rules as the stage indexes: fresh entry
+//! on every key decrease, stale fix-up at pop time. Selection is
+//! O(log users + log stages-of-user) per launch. Per-stage records live
+//! in a dense slot column ([`SlotCol`]).
 
-use super::index::StageIndex;
+use super::index::MapIndex;
 use super::{Policy, StageMeta, StageView};
+use crate::core::arena::SlotCol;
 use crate::{StageId, UserId};
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap, HashMap};
@@ -37,7 +40,7 @@ struct UserState {
     idxs: BTreeMap<usize, u32>,
     /// Inner Fair index over the user's pending stages:
     /// (running, arrival_seq, stage_idx) with stage-id tiebreak.
-    stages: StageIndex<(u32, u64, usize)>,
+    stages: MapIndex<(u32, u64, usize)>,
 }
 
 impl UserState {
@@ -61,7 +64,8 @@ pub struct Ujf {
     users: HashMap<UserId, UserState>,
     /// Lazy min-heap over users with pending work.
     root: BinaryHeap<Reverse<UserKey>>,
-    stage_rec: HashMap<StageId, StageRec>,
+    /// Stage slot → static record.
+    stage_rec: SlotCol<StageRec>,
 }
 
 impl Ujf {
@@ -116,14 +120,15 @@ impl Policy for Ujf {
         u.pending += meta.pending;
         u.stages.insert(
             meta.stage,
+            meta.slot,
             (0, meta.arrival_seq, meta.stage_idx),
             meta.pending,
         );
         // Key may have decreased (new mins) and pending may have left 0.
         let key = u.key(meta.user);
         self.root.push(Reverse(key));
-        self.stage_rec.insert(
-            meta.stage,
+        self.stage_rec.set(
+            meta.slot,
             StageRec {
                 user: meta.user,
                 seq: meta.arrival_seq,
@@ -132,8 +137,8 @@ impl Policy for Ujf {
         );
     }
 
-    fn on_task_launched(&mut self, stage: StageId) {
-        let Some(rec) = self.stage_rec.get(&stage) else {
+    fn on_task_launched(&mut self, stage: StageId, slot: u32) {
+        let Some(rec) = self.stage_rec.get(slot) else {
             return;
         };
         let u = self.users.get_mut(&rec.user).expect("launch for absent user");
@@ -148,8 +153,8 @@ impl Policy for Ujf {
         // fixed up at the next peek; no push needed.
     }
 
-    fn on_task_finished(&mut self, stage: StageId) {
-        let Some(rec) = self.stage_rec.get(&stage) else {
+    fn on_task_finished(&mut self, stage: StageId, slot: u32) {
+        let Some(rec) = self.stage_rec.get(slot) else {
             return;
         };
         let u = self.users.get_mut(&rec.user).expect("finish for absent user");
@@ -166,8 +171,38 @@ impl Policy for Ujf {
         }
     }
 
+    fn on_tasks_finished(&mut self, batch: &[(StageId, u32)]) {
+        // Coalesce runs of consecutive same-stage finishes: one net
+        // counter update and one root push per run instead of one per
+        // finish. Equivalent to the per-event replay — the skipped
+        // intermediate root/inner entries are lazy entries the peek
+        // loops would have re-keyed away.
+        let mut i = 0;
+        while i < batch.len() {
+            let (stage, slot) = batch[i];
+            let mut n: u32 = 1;
+            while i + (n as usize) < batch.len() && batch[i + n as usize] == (stage, slot) {
+                n += 1;
+            }
+            if let Some(rec) = self.stage_rec.get(slot) {
+                let u = self.users.get_mut(&rec.user).expect("finish for absent user");
+                debug_assert!(u.running >= n);
+                u.running -= n;
+                if let Some((running, seq, idx)) = u.stages.key_of(stage) {
+                    debug_assert!(running >= n);
+                    u.stages.update_key(stage, (running - n, seq, idx));
+                }
+                if u.pending > 0 {
+                    let key = u.key(rec.user);
+                    self.root.push(Reverse(key));
+                }
+            }
+            i += n as usize;
+        }
+    }
+
     fn on_task_requeued(&mut self, _now_s: f64, view: &StageView) {
-        let Some(rec) = self.stage_rec.get(&view.stage) else {
+        let Some(rec) = self.stage_rec.get(view.slot) else {
             return;
         };
         let u = self.users.get_mut(&rec.user).expect("requeue for absent user");
@@ -176,15 +211,15 @@ impl Policy for Ujf {
         // re-entry key uses the engine's current running count (the
         // failed task is already off the core), as the scan path would.
         u.stages
-            .task_requeued(view.stage, (view.running, rec.seq, rec.idx));
+            .task_requeued(view.stage, view.slot, (view.running, rec.seq, rec.idx));
         // Pending may have left 0 — push a fresh root key so the user is
         // representable again (same rule as stage submit).
         let key = u.key(rec.user);
         self.root.push(Reverse(key));
     }
 
-    fn on_stage_finish(&mut self, stage: StageId) {
-        let Some(rec) = self.stage_rec.remove(&stage) else {
+    fn on_stage_finish(&mut self, stage: StageId, slot: u32) {
+        let Some(rec) = self.stage_rec.take(slot) else {
             return;
         };
         let Some(u) = self.users.get_mut(&rec.user) else {
@@ -200,7 +235,7 @@ impl Policy for Ujf {
         }
     }
 
-    fn select_next(&mut self, _now_s: f64) -> Option<StageId> {
+    fn select_next(&mut self, _now_s: f64) -> Option<(StageId, u32)> {
         let uid = self.peek_user()?;
         let u = self.users.get_mut(&uid).expect("peeked user exists");
         let picked = u.stages.peek();
@@ -252,6 +287,7 @@ mod tests {
             0.0,
             &StageMeta {
                 stage,
+                slot: stage as u32,
                 job: stage,
                 user,
                 est_slot_time: 1.0,
@@ -265,6 +301,7 @@ mod tests {
     fn v(stage: u64, user: u32, running: u32, pending: u32, seq: u64) -> StageView {
         StageView {
             stage,
+            slot: stage as u32,
             job: stage,
             user,
             stage_idx: 0,
@@ -314,9 +351,9 @@ mod tests {
         submit(&mut p, 3, 3);
         let mut launched = std::collections::HashMap::new();
         for _ in 0..12 {
-            let s = p.select_next(0.0).unwrap();
+            let (s, slot) = p.select_next(0.0).unwrap();
             *launched.entry(s).or_insert(0u32) += 1;
-            p.on_task_launched(s);
+            p.on_task_launched(s, slot);
         }
         assert_eq!(launched[&1], 4);
         assert_eq!(launched[&2], 4);
@@ -334,9 +371,9 @@ mod tests {
         submit(&mut p, 11, 2);
         let mut per_user = [0u32; 2];
         for _ in 0..8 {
-            let s = p.select_next(0.0).unwrap();
+            let (s, slot) = p.select_next(0.0).unwrap();
             per_user[if s == 11 { 1 } else { 0 }] += 1;
-            p.on_task_launched(s);
+            p.on_task_launched(s, slot);
         }
         assert_eq!(per_user, [4, 4]);
     }
@@ -347,17 +384,44 @@ mod tests {
         submit_n(&mut p, 1, 1, 4);
         submit_n(&mut p, 2, 2, 4);
         // u1 launches twice, u2 once → u2 preferred next.
-        assert_eq!(p.select_next(0.0), Some(1));
-        p.on_task_launched(1);
-        assert_eq!(p.select_next(0.0), Some(2));
-        p.on_task_launched(2);
-        assert_eq!(p.select_next(0.0), Some(1));
-        p.on_task_launched(1);
-        assert_eq!(p.select_next(0.0), Some(2));
+        assert_eq!(p.select_next(0.0), Some((1, 1)));
+        p.on_task_launched(1, 1);
+        assert_eq!(p.select_next(0.0), Some((2, 2)));
+        p.on_task_launched(2, 2);
+        assert_eq!(p.select_next(0.0), Some((1, 1)));
+        p.on_task_launched(1, 1);
+        assert_eq!(p.select_next(0.0), Some((2, 2)));
         // One of u1's tasks finishes → tie at 1 running each → user id
         // breaks the tie? No: min arrival_seq breaks first (u1's stage 1).
-        p.on_task_finished(1);
-        assert_eq!(p.select_next(0.0), Some(1));
+        p.on_task_finished(1, 1);
+        assert_eq!(p.select_next(0.0), Some((1, 1)));
+    }
+
+    #[test]
+    fn batched_finish_matches_per_event_replay() {
+        let mut a = Ujf::new();
+        let mut b = Ujf::new();
+        for p in [&mut a, &mut b] {
+            submit_n(p, 1, 1, 6);
+            submit_n(p, 2, 2, 6);
+            for _ in 0..3 {
+                p.on_task_launched(1, 1);
+            }
+            p.on_task_launched(2, 2);
+        }
+        let batch = [(1u64, 1u32), (1, 1), (2, 2)];
+        a.on_tasks_finished(&batch);
+        for &(s, slot) in &batch {
+            b.on_task_finished(s, slot);
+        }
+        for _ in 0..6 {
+            let x = a.select_next(0.0);
+            assert_eq!(x, b.select_next(0.0));
+            if let Some((s, slot)) = x {
+                a.on_task_launched(s, slot);
+                b.on_task_launched(s, slot);
+            }
+        }
     }
 
     #[test]
@@ -393,7 +457,7 @@ mod tests {
     fn stage_finish_prunes_pool() {
         let mut p = Ujf::new();
         submit(&mut p, 1, 1);
-        p.on_stage_finish(1);
+        p.on_stage_finish(1, 1);
         assert!(p.users.is_empty(), "user pruned with last stage");
         // No runnable views → None.
         assert_eq!(p.select(0.0, &[]), None);
@@ -413,6 +477,7 @@ mod tests {
             let views: Vec<StageView> = (0..n)
                 .map(|i| StageView {
                     stage: i as u64 + 1,
+                    slot: i as u32 + 1,
                     job: i as u64 + 1,
                     user: r.below(4) as u32,
                     stage_idx: r.below(3) as usize,
@@ -430,6 +495,7 @@ mod tests {
                     0.0,
                     &StageMeta {
                         stage: v.stage,
+                        slot: v.slot,
                         job: v.job,
                         user: v.user,
                         est_slot_time: 1.0,

@@ -19,11 +19,14 @@
 //! queued jobs when a shorter job overtakes them; [`TwoLevelVtime`]
 //! reports the rewritten suffix in `last_changed` and the affected
 //! stages are re-keyed (lazy invalidation — the stale heap entries are
-//! discarded when they surface).
+//! discarded when they surface). Keys only change on job arrivals —
+//! never on launches or finishes — so UWFQ is `static_keys` for the
+//! batched event core (arrivals always flush pending batches first).
 
 use super::index::{F64Key, StageIndex};
 use super::vtime::TwoLevelVtime;
 use super::{select_min_by_key, JobMeta, Policy, StageMeta, StageView};
+use crate::core::arena::SlotCol;
 use crate::{JobId, StageId};
 use std::collections::HashMap;
 
@@ -33,10 +36,11 @@ pub struct Uwfq {
     pub grace_rsec: f64,
     /// (D_global, arrival_seq, stage_idx) — stage id breaks final ties.
     index: StageIndex<(F64Key, u64, usize)>,
-    /// Active (submitted, unfinished) stages per job, for deadline
-    /// re-keying; plus each stage's static tiebreak key parts.
-    job_stages: HashMap<JobId, Vec<StageId>>,
-    stage_static: HashMap<StageId, (JobId, u64, usize)>,
+    /// Active (submitted, unfinished) stages per job as `(stage, slot)`,
+    /// for deadline re-keying; plus each stage's static tiebreak key
+    /// parts in a dense slot column.
+    job_stages: HashMap<JobId, Vec<(StageId, u32)>>,
+    stage_static: SlotCol<(JobId, u64, usize)>,
 }
 
 impl Uwfq {
@@ -46,7 +50,7 @@ impl Uwfq {
             grace_rsec,
             index: StageIndex::new(),
             job_stages: HashMap::new(),
-            stage_static: HashMap::new(),
+            stage_static: SlotCol::new(),
         }
     }
 
@@ -77,9 +81,9 @@ impl Policy for Uwfq {
             let Some(stages) = self.job_stages.get(&job) else {
                 continue;
             };
-            for &s in stages {
-                if let Some(&(_, seq, idx)) = self.stage_static.get(&s) {
-                    self.index.update_key(s, (F64Key(d), seq, idx));
+            for &(s, slot) in stages {
+                if let Some(&(_, seq, idx)) = self.stage_static.get(slot) {
+                    self.index.update_key(s, slot, (F64Key(d), seq, idx));
                 }
             }
         }
@@ -89,16 +93,29 @@ impl Policy for Uwfq {
         let d = self.vt.job_deadline(meta.job).unwrap_or(f64::INFINITY);
         self.index.insert(
             meta.stage,
+            meta.slot,
             (F64Key(d), meta.arrival_seq, meta.stage_idx),
             meta.pending,
         );
-        self.job_stages.entry(meta.job).or_default().push(meta.stage);
+        self.job_stages
+            .entry(meta.job)
+            .or_default()
+            .push((meta.stage, meta.slot));
         self.stage_static
-            .insert(meta.stage, (meta.job, meta.arrival_seq, meta.stage_idx));
+            .set(meta.slot, (meta.job, meta.arrival_seq, meta.stage_idx));
     }
 
-    fn on_task_launched(&mut self, stage: StageId) {
-        self.index.task_launched(stage);
+    fn on_task_launched(&mut self, stage: StageId, slot: u32) {
+        self.index.task_launched(stage, slot);
+    }
+
+    fn on_tasks_launched(&mut self, stage: StageId, slot: u32, n: u32) {
+        self.index.task_launched_n(stage, slot, n);
+    }
+
+    fn on_tasks_finished(&mut self, _batch: &[(StageId, u32)]) {
+        // Deadlines never move on finishes: a batch of plain finishes
+        // changes nothing in the index.
     }
 
     fn on_task_requeued(&mut self, _now_s: f64, v: &StageView) {
@@ -107,14 +124,14 @@ impl Policy for Uwfq {
         // re-execution cannot move the job in the virtual order.
         let d = self.vt.job_deadline(v.job).unwrap_or(f64::INFINITY);
         self.index
-            .task_requeued(v.stage, (F64Key(d), v.arrival_seq, v.stage_idx));
+            .task_requeued(v.stage, v.slot, (F64Key(d), v.arrival_seq, v.stage_idx));
     }
 
-    fn on_stage_finish(&mut self, stage: StageId) {
-        self.index.remove(stage);
-        if let Some((job, _, _)) = self.stage_static.remove(&stage) {
+    fn on_stage_finish(&mut self, stage: StageId, slot: u32) {
+        self.index.remove(stage, slot);
+        if let Some((job, _, _)) = self.stage_static.take(slot) {
             if let Some(stages) = self.job_stages.get_mut(&job) {
-                stages.retain(|&s| s != stage);
+                stages.retain(|&(s, _)| s != stage);
                 if stages.is_empty() {
                     self.job_stages.remove(&job);
                 }
@@ -122,7 +139,11 @@ impl Policy for Uwfq {
         }
     }
 
-    fn select_next(&mut self, _now_s: f64) -> Option<StageId> {
+    fn static_keys(&self) -> bool {
+        true
+    }
+
+    fn select_next(&mut self, _now_s: f64) -> Option<(StageId, u32)> {
         self.index.peek()
     }
 
@@ -170,6 +191,7 @@ mod tests {
     fn smeta(stage: u64, job: u64, idx: usize, seq: u64) -> StageMeta {
         StageMeta {
             stage,
+            slot: stage as u32,
             job,
             user: 1,
             est_slot_time: 1.0,
@@ -182,6 +204,7 @@ mod tests {
     fn v(stage: u64, job: u64, user: u32, idx: usize) -> StageView {
         StageView {
             stage,
+            slot: stage as u32,
             job,
             user,
             stage_idx: idx,
@@ -279,20 +302,20 @@ mod tests {
         let mut p = Uwfq::new(2.0, 2.0);
         p.on_job_arrival(0.0, &meta(1, 1, 10.0, 1));
         p.on_stage_submit(0.0, &smeta(100, 1, 0, 1));
-        assert_eq!(p.select_next(0.0), Some(100));
+        assert_eq!(p.select_next(0.0), Some((100, 100)));
         p.on_job_arrival(1.0, &meta(2, 1, 2.0, 2));
         p.on_stage_submit(1.0, &smeta(200, 2, 0, 2));
         let d1 = p.job_deadline(1).unwrap();
         let d2 = p.job_deadline(2).unwrap();
         assert!(d2 < d1, "short job overtakes: {d2} vs {d1}");
-        assert_eq!(p.select_next(1.0), Some(200));
+        assert_eq!(p.select_next(1.0), Some((200, 200)));
         // The scan path agrees.
         let views = vec![v(100, 1, 1, 0), v(200, 2, 1, 0)];
         assert_eq!(p.select(1.0, &views), Some(1));
         // Finish the short job: the long job's stage surfaces again.
-        p.on_task_launched(200);
-        p.on_stage_finish(200);
+        p.on_task_launched(200, 200);
+        p.on_stage_finish(200, 200);
         p.on_job_finish(2.0, 2);
-        assert_eq!(p.select_next(2.0), Some(100));
+        assert_eq!(p.select_next(2.0), Some((100, 100)));
     }
 }

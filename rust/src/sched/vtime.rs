@@ -178,6 +178,9 @@ pub struct TwoLevelVtime {
     /// they surface (the same invalidation contract as
     /// [`crate::sched::index::StageIndex`]).
     user_heap: BinaryHeap<Reverse<(F64Key, UserId)>>,
+    /// Reusable scratch for `progress_virtual_time`'s drained-user pass
+    /// (it runs on every Algorithm-1 call — no per-call allocation).
+    drained_buf: Vec<UserId>,
 }
 
 impl TwoLevelVtime {
@@ -192,6 +195,7 @@ impl TwoLevelVtime {
             deadlines: HashMap::new(),
             last_changed: Vec::new(),
             user_heap: BinaryHeap::new(),
+            drained_buf: Vec::new(),
         }
     }
 
@@ -351,7 +355,8 @@ impl TwoLevelVtime {
         let t_passed = (t - self.t_previous).max(0.0);
         self.v_global += t_passed * r_user;
         let t_previous = self.t_previous;
-        let mut drained: Vec<UserId> = Vec::new();
+        let mut drained = std::mem::take(&mut self.drained_buf);
+        drained.clear();
         for (&uid, u) in self.users.iter_mut() {
             if update_user_virtual_time(u, t_previous, r_user, t) {
                 drained.push(uid);
@@ -362,10 +367,11 @@ impl TwoLevelVtime {
         // as a fresh entry or `earliest_finishing_user` could surface a
         // non-minimal user (leaving the drained user as a ghost inflating
         // the share denominator).
-        for uid in drained {
+        for &uid in &drained {
             self.user_heap
                 .push(Reverse((F64Key(f64::NEG_INFINITY), uid)));
         }
+        self.drained_buf = drained;
         self.t_previous = self.t_previous.max(t);
     }
 }

@@ -1,0 +1,379 @@
+//! Calendar-queue (timing-wheel) event structure for the simulation
+//! loop, plus the [`EventQ`] facade that selects between it and the
+//! reference binary heap (`UWFQ_EVENT_HEAP=1`).
+//!
+//! # Layout
+//!
+//! Time is split into fixed buckets of `2^SHIFT` µs (1024 µs). The
+//! wheel is a ring of `NBUCKETS` (4096) unsorted `Vec<Ev>` buckets —
+//! a ~4.19 s horizon. An event at time `t` lands in ring slot
+//! `(t >> SHIFT) % NBUCKETS` if its bucket number is within the
+//! horizon of the cursor; otherwise it goes to a spill `BinaryHeap`
+//! (the "overflow"). Insert and pop are O(1) amortized: pops advance a
+//! cursor monotonically, so each ring slot is visited once per horizon
+//! rotation, and the per-bucket linear min-scan touches only the
+//! handful of events sharing a 1 ms window.
+//!
+//! # Why no overflow migration
+//!
+//! The simulation only schedules events at `t >= now` (`now` is the
+//! time of the last popped event or arrival), so every insert has
+//! bucket number `>= cursor`. Inserts are ring-placed only when
+//! `bucket_no - cursor < NBUCKETS`, and pops always remove the global
+//! minimum, so live ring events always have bucket numbers in
+//! `[cursor, cursor + NBUCKETS)` — each ring slot holds exactly one
+//! bucket number and slots never alias. Overflow events are simply
+//! compared against the ring minimum at pop time (overflow traffic is
+//! rare: far-future crash clocks and long retry backoffs), which keeps
+//! the structure exact without a migration sweep.
+//!
+//! # Ordering guarantee
+//!
+//! Pop order is the full [`Ev`] ordering — `(t, kind, a, b)`
+//! ascending — bit-for-bit identical to the reference binary heap.
+//! The ring finds the lowest-numbered non-empty bucket (strictly
+//! earlier buckets ⇒ strictly smaller times), takes that bucket's
+//! minimum under the full `Ev` order, and compares it against the
+//! overflow minimum under the same order.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::sim::event::{Ev, KIND_RECOVER};
+use crate::TimeUs;
+
+/// log2 of the bucket width in µs (1024 µs ≈ 1 ms per bucket).
+const SHIFT: u32 = 10;
+/// Ring size in buckets (~4.19 s horizon). Power of two for cheap
+/// modulo.
+const NBUCKETS: usize = 4096;
+
+/// Where the cached minimum lives, so `pop` after `peek` is O(1).
+#[derive(Clone, Copy)]
+enum Loc {
+    /// `(ring index, position within the bucket Vec)`.
+    Ring(usize, usize),
+    /// Minimum is the overflow heap's peek.
+    Overflow,
+}
+
+/// Timing-wheel queue for the high-rate work events (completions,
+/// retries, speculation wakes).
+pub struct CalendarQueue {
+    buckets: Vec<Vec<Ev>>,
+    /// Bucket number (`t >> SHIFT`) of the most recently popped event.
+    /// Monotonically non-decreasing; the ring scan starts here.
+    cursor: u64,
+    /// Live events in the ring (not counting overflow).
+    ring_len: usize,
+    /// Events beyond the ring horizon at insert time.
+    overflow: BinaryHeap<Reverse<Ev>>,
+    /// Cached `find_min` result; invalidated by pops, updated by
+    /// pushes that beat it.
+    cached: Option<(Ev, Loc)>,
+}
+
+impl Default for CalendarQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CalendarQueue {
+    pub fn new() -> Self {
+        CalendarQueue {
+            buckets: (0..NBUCKETS).map(|_| Vec::new()).collect(),
+            cursor: 0,
+            ring_len: 0,
+            overflow: BinaryHeap::new(),
+            cached: None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring_len + self.overflow.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn push(&mut self, ev: Ev) {
+        let bucket_no = ev.t >> SHIFT;
+        debug_assert!(
+            bucket_no >= self.cursor,
+            "event scheduled before the queue cursor"
+        );
+        if bucket_no - self.cursor < NBUCKETS as u64 {
+            let idx = (bucket_no as usize) & (NBUCKETS - 1);
+            let pos = self.buckets[idx].len();
+            self.buckets[idx].push(ev);
+            self.ring_len += 1;
+            if let Some((m, _)) = self.cached {
+                if ev < m {
+                    self.cached = Some((ev, Loc::Ring(idx, pos)));
+                }
+            }
+        } else {
+            self.overflow.push(Reverse(ev));
+            if let Some((m, _)) = self.cached {
+                if ev < m {
+                    self.cached = Some((ev, Loc::Overflow));
+                }
+            }
+        }
+    }
+
+    /// Locate the global minimum without removing it.
+    fn find_min(&mut self) -> Option<(Ev, Loc)> {
+        if let Some(hit) = self.cached {
+            return Some(hit);
+        }
+        let ring_min = if self.ring_len > 0 {
+            // First non-empty bucket at or after the cursor; strictly
+            // earlier buckets hold strictly earlier times, so its
+            // min is the ring min.
+            let mut b = self.cursor;
+            loop {
+                let idx = (b as usize) & (NBUCKETS - 1);
+                if !self.buckets[idx].is_empty() {
+                    let mut best = 0;
+                    for (i, e) in self.buckets[idx].iter().enumerate() {
+                        if *e < self.buckets[idx][best] {
+                            best = i;
+                        }
+                    }
+                    break Some((self.buckets[idx][best], Loc::Ring(idx, best)));
+                }
+                b += 1;
+                debug_assert!(b - self.cursor <= NBUCKETS as u64);
+            }
+        } else {
+            None
+        };
+        let hit = match (ring_min, self.overflow.peek()) {
+            (Some((r, loc)), Some(Reverse(o))) => {
+                if r <= *o {
+                    Some((r, loc))
+                } else {
+                    Some((*o, Loc::Overflow))
+                }
+            }
+            (Some(hit), None) => Some(hit),
+            (None, Some(Reverse(o))) => Some((*o, Loc::Overflow)),
+            (None, None) => None,
+        };
+        self.cached = hit;
+        hit
+    }
+
+    pub fn peek(&mut self) -> Option<Ev> {
+        self.find_min().map(|(ev, _)| ev)
+    }
+
+    pub fn pop(&mut self) -> Option<Ev> {
+        let (ev, loc) = self.find_min()?;
+        match loc {
+            Loc::Ring(idx, pos) => {
+                self.buckets[idx].swap_remove(pos);
+                self.ring_len -= 1;
+            }
+            Loc::Overflow => {
+                self.overflow.pop();
+            }
+        }
+        self.cursor = ev.t >> SHIFT;
+        self.cached = None;
+        Some(ev)
+    }
+}
+
+/// Which inner structure backs the event queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventBackend {
+    /// Calendar queue + small side heap for crash/recover events.
+    Wheel,
+    /// Single `BinaryHeap` over all kinds — the executable spec,
+    /// selected by `UWFQ_EVENT_HEAP=1`.
+    Heap,
+}
+
+/// Event queue facade: one `push`/`peek_t`/`pop` surface over both
+/// backends, popping in identical order either way.
+pub enum EventQ {
+    Heap(BinaryHeap<Reverse<Ev>>),
+    Wheel {
+        cal: CalendarQueue,
+        /// Low-rate environment events (crash/recover) stay on a tiny
+        /// side heap so far-future crash clocks never bloat overflow.
+        env: BinaryHeap<Reverse<Ev>>,
+    },
+}
+
+impl EventQ {
+    pub fn new(backend: EventBackend) -> Self {
+        match backend {
+            EventBackend::Heap => EventQ::Heap(BinaryHeap::new()),
+            EventBackend::Wheel => EventQ::Wheel {
+                cal: CalendarQueue::new(),
+                env: BinaryHeap::new(),
+            },
+        }
+    }
+
+    pub fn push(&mut self, ev: Ev) {
+        match self {
+            EventQ::Heap(h) => h.push(Reverse(ev)),
+            EventQ::Wheel { cal, env } => {
+                if ev.kind >= KIND_RECOVER {
+                    env.push(Reverse(ev));
+                } else {
+                    cal.push(ev);
+                }
+            }
+        }
+    }
+
+    /// Time of the next event, if any (for the event-vs-arrival race).
+    pub fn peek_t(&mut self) -> Option<TimeUs> {
+        match self {
+            EventQ::Heap(h) => h.peek().map(|Reverse(e)| e.t),
+            EventQ::Wheel { cal, env } => {
+                let c = cal.peek().map(|e| e.t);
+                let e = env.peek().map(|Reverse(e)| e.t);
+                match (c, e) {
+                    (Some(c), Some(e)) => Some(c.min(e)),
+                    (c, e) => c.or(e),
+                }
+            }
+        }
+    }
+
+    pub fn pop(&mut self) -> Option<Ev> {
+        match self {
+            EventQ::Heap(h) => h.pop().map(|Reverse(e)| e),
+            EventQ::Wheel { cal, env } => {
+                // Work kinds (0–2) sort before env kinds (3–4) at
+                // equal times, so `<=` picks the true global min.
+                match (cal.peek(), env.peek()) {
+                    (Some(c), Some(Reverse(e))) => {
+                        if c <= *e {
+                            cal.pop()
+                        } else {
+                            env.pop().map(|Reverse(e)| e)
+                        }
+                    }
+                    (Some(_), None) => cal.pop(),
+                    (None, Some(_)) => env.pop().map(|Reverse(e)| e),
+                    (None, None) => None,
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn pops_in_full_ev_order() {
+        let mut q = CalendarQueue::new();
+        let evs = [
+            Ev::task(2048, 1, 5),
+            Ev::task(2048, 1, 4),
+            Ev::retry(2048, 9, 0),
+            Ev::task(100, 0, 1),
+            Ev::spec(100, 0, 1),
+        ];
+        for e in evs {
+            q.push(e);
+        }
+        let mut want = evs.to_vec();
+        want.sort();
+        let got: Vec<Ev> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn overflow_round_trips_far_future_events() {
+        let mut q = CalendarQueue::new();
+        let horizon_us = (NBUCKETS as u64) << SHIFT;
+        let far = Ev::retry(horizon_us * 3, 7, 0);
+        let near = Ev::task(512, 0, 1);
+        q.push(far);
+        q.push(near);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(near));
+        // Cursor has advanced; the overflow event is now the min even
+        // though it never migrates into the ring.
+        assert_eq!(q.pop(), Some(far));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn interleaved_push_pop_matches_heap_reference() {
+        let mut rng = Rng::new(0xCA1);
+        let mut wheel = CalendarQueue::new();
+        let mut heap: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
+        let mut now: TimeUs = 0;
+        for i in 0..4000u64 {
+            // Pushes at or after `now`, mixing near and far-horizon
+            // deltas so both ring and overflow paths churn.
+            let delta = match rng.below(4) {
+                0 => rng.below(512),
+                1 => rng.below(1 << SHIFT),
+                2 => rng.below((NBUCKETS as u64) << SHIFT),
+                _ => rng.below(4 * (NBUCKETS as u64) << SHIFT),
+            };
+            let ev = match rng.below(3) {
+                0 => Ev::task(now + delta, rng.below(64), i),
+                1 => Ev::retry(now + delta, rng.below(1000), rng.below(8)),
+                _ => Ev::spec(now + delta, rng.below(64), i),
+            };
+            wheel.push(ev);
+            heap.push(Reverse(ev));
+            if rng.below(3) > 0 {
+                let a = wheel.pop();
+                let b = heap.pop().map(|Reverse(e)| e);
+                assert_eq!(a, b);
+                if let Some(e) = a {
+                    now = e.t;
+                }
+            }
+        }
+        loop {
+            let a = wheel.pop();
+            let b = heap.pop().map(|Reverse(e)| e);
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn facade_routes_env_kinds_to_side_heap_and_merges() {
+        let mut q = EventQ::new(EventBackend::Wheel);
+        q.push(Ev::crash(50, 3));
+        q.push(Ev::task(50, 3, 1));
+        q.push(Ev::recover(40, 2));
+        assert_eq!(q.peek_t(), Some(40));
+        assert_eq!(q.pop(), Some(Ev::recover(40, 2)));
+        // Equal times: work kind 0 beats env kind 4.
+        assert_eq!(q.pop(), Some(Ev::task(50, 3, 1)));
+        assert_eq!(q.pop(), Some(Ev::crash(50, 3)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn heap_backend_is_a_plain_min_heap() {
+        let mut q = EventQ::new(EventBackend::Heap);
+        q.push(Ev::task(9, 0, 0));
+        q.push(Ev::task(3, 5, 5));
+        assert_eq!(q.peek_t(), Some(3));
+        assert_eq!(q.pop(), Some(Ev::task(3, 5, 5)));
+        assert_eq!(q.pop(), Some(Ev::task(9, 0, 0)));
+    }
+}

@@ -1,0 +1,135 @@
+//! Named simulation event shared by the calendar queue and the
+//! binary-heap fallback (`UWFQ_EVENT_HEAP=1`).
+//!
+//! Historically the event loop pushed bare `Reverse<(TimeUs, u8, u64,
+//! u64)>` tuples and the field semantics lived only in a module
+//! comment. `Ev` names the fields and carries the ordering contract in
+//! its `Ord` impl so both event backends share one definition of
+//! "earlier".
+//!
+//! Ordering (ascending; queues wrap in `Reverse` for a min-queue):
+//!
+//! 1. `t` — event time in integer microseconds. Earlier fires first.
+//! 2. `kind` — at equal times, lower kinds fire first:
+//!    completions (0) before retry-ready (1) before speculation wakes
+//!    (2) before recoveries (3) before crashes (4). In particular a
+//!    task finishing at exactly the instant a core crashes completes
+//!    cleanly — the crash only takes the next task placed there.
+//! 3. `a`, `b` — kind-specific payload, compared last so simultaneous
+//!    same-kind events resolve deterministically (e.g. same-time
+//!    completions free cores in ascending core order).
+//!
+//! Payload conventions per kind:
+//!
+//! | kind | meaning            | `a`       | `b`            |
+//! |------|--------------------|-----------|----------------|
+//! | 0    | task completion    | core idx  | launch seq     |
+//! | 1    | retry backoff done | stage id  | task idx       |
+//! | 2    | speculation wake   | core idx  | launch seq     |
+//! | 3    | core recovers      | core idx  | 0              |
+//! | 4    | core crashes       | core idx  | 0              |
+
+use crate::TimeUs;
+
+/// Task completion (stale-checked against the launch seq).
+pub const KIND_TASK: u8 = 0;
+/// Failed task's retry backoff expired; requeue it.
+pub const KIND_RETRY: u8 = 1;
+/// Straggler clone decision point for a running task.
+pub const KIND_SPEC: u8 = 2;
+/// Crashed core rejoins the cluster.
+pub const KIND_RECOVER: u8 = 3;
+/// Core crash (loses its running attempt, blacklists the core).
+pub const KIND_CRASH: u8 = 4;
+
+/// One scheduled simulation event. `Copy` and 32 bytes so the calendar
+/// buckets can hold them by value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Ev {
+    /// Fire time (integer microseconds since simulation start).
+    pub t: TimeUs,
+    /// Event kind (`KIND_*`); the same-time tie-break.
+    pub kind: u8,
+    /// First payload word (see the module table).
+    pub a: u64,
+    /// Second payload word (see the module table).
+    pub b: u64,
+}
+
+impl Ev {
+    /// Completion of the task launched on `core` with launch-seq `seq`.
+    pub fn task(t: TimeUs, core: u64, seq: u64) -> Self {
+        Ev { t, kind: KIND_TASK, a: core, b: seq }
+    }
+
+    /// Retry of `task` in `stage` becomes runnable again.
+    pub fn retry(t: TimeUs, stage: u64, task: u64) -> Self {
+        Ev { t, kind: KIND_RETRY, a: stage, b: task }
+    }
+
+    /// Speculation check for the task on `core` with launch-seq `seq`.
+    pub fn spec(t: TimeUs, core: u64, seq: u64) -> Self {
+        Ev { t, kind: KIND_SPEC, a: core, b: seq }
+    }
+
+    /// `core` rejoins after a crash window.
+    pub fn recover(t: TimeUs, core: u64) -> Self {
+        Ev { t, kind: KIND_RECOVER, a: core, b: 0 }
+    }
+
+    /// `core` crashes.
+    pub fn crash(t: TimeUs, core: u64) -> Self {
+        Ev { t, kind: KIND_CRASH, a: core, b: 0 }
+    }
+
+    /// Work events (completion/retry/spec) count toward the loop's
+    /// outstanding-work tally; environment events (recover/crash) do
+    /// not — a pending crash alone must not keep the loop alive.
+    pub fn is_work(&self) -> bool {
+        self.kind <= KIND_SPEC
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn orders_by_time_then_kind_then_payload() {
+        let a = Ev::task(10, 3, 7);
+        let b = Ev::crash(10, 0);
+        let c = Ev::task(11, 0, 0);
+        let d = Ev::task(10, 3, 8);
+        assert!(a < b, "lower kind wins at equal time");
+        assert!(b < c, "earlier time wins over kind");
+        assert!(a < d, "payload breaks same-kind ties");
+    }
+
+    #[test]
+    fn matches_legacy_tuple_order() {
+        // The `Ord` derive must reproduce the historical
+        // `(t, kind, a, b)` tuple ordering bit-for-bit.
+        let evs = [
+            Ev::task(5, 2, 9),
+            Ev::retry(5, 2, 9),
+            Ev::spec(5, 1, 0),
+            Ev::recover(4, 6),
+            Ev::crash(5, 2),
+            Ev::task(5, 2, 3),
+        ];
+        let mut by_ev = evs.to_vec();
+        by_ev.sort();
+        let mut by_tuple = evs.to_vec();
+        by_tuple.sort_by_key(|e| (e.t, e.kind, e.a, e.b));
+        assert_eq!(by_ev, by_tuple);
+    }
+
+    #[test]
+    fn work_classification() {
+        assert!(Ev::task(0, 0, 0).is_work());
+        assert!(Ev::retry(0, 0, 0).is_work());
+        assert!(Ev::spec(0, 0, 0).is_work());
+        assert!(!Ev::recover(0, 0).is_work());
+        assert!(!Ev::crash(0, 0).is_work());
+    }
+}

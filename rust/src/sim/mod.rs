@@ -19,20 +19,80 @@
 //! Time is virtual (µs); a full 500 s macro benchmark over four schedulers
 //! simulates in milliseconds, which is what makes the paper's parameter
 //! grids reproducible on a laptop.
+//!
+//! # Event core
+//!
+//! The inner machinery is swappable ([`SimOpts`]): completions and other
+//! work events live in a calendar queue ([`calendar::CalendarQueue`],
+//! O(1) amortized) with same-timestamp batching through the engine's
+//! batched mode, or in the classic binary heap with strictly per-event
+//! processing (`UWFQ_EVENT_HEAP=1` — the executable specification).
+//! Both produce byte-identical schedules; `tests/invariants.rs` holds
+//! the differential.
 
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
 
+use crate::config::Config;
 use crate::core::dag::CompletedJob;
 use crate::core::job::JobSpec;
 use crate::core::task::TaskRecord;
-use crate::core::{Launch, SchedCore, TaskEvent};
-use crate::config::Config;
+use crate::core::{Launch, SchedCore, TaskEvent, TaskEventClass};
 use crate::fault::FaultStats;
 use crate::workload::stream::{JobStream, VecStream};
 use crate::TimeUs;
+
+pub mod calendar;
+pub mod event;
+
+pub use calendar::{CalendarQueue, EventBackend, EventQ};
+pub use event::Ev;
+use event::{KIND_CRASH, KIND_RECOVER, KIND_RETRY, KIND_SPEC, KIND_TASK};
+
+/// Event-core configuration for one simulation run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SimOpts {
+    /// Queue backend for completion/retry/spec-wake events.
+    pub backend: EventBackend,
+    /// Same-timestamp batching (one coalesced policy notification and
+    /// one deferred offer per batch of plain finishes). Schedule-
+    /// preserving; `false` runs the pristine per-event path.
+    pub batch: bool,
+}
+
+impl Default for SimOpts {
+    fn default() -> Self {
+        SimOpts {
+            backend: EventBackend::Wheel,
+            batch: true,
+        }
+    }
+}
+
+static OPTS_FROM_ENV: OnceLock<SimOpts> = OnceLock::new();
+
+impl SimOpts {
+    /// The process-wide default, honoring the `UWFQ_EVENT_HEAP=1`
+    /// escape hatch (binary heap + per-event processing — the reference
+    /// semantics, and the rollback switch if the calendar path ever
+    /// misbehaves in the field). Read once and cached.
+    pub fn from_env() -> SimOpts {
+        *OPTS_FROM_ENV.get_or_init(|| {
+            let heap = std::env::var("UWFQ_EVENT_HEAP")
+                .map(|v| v == "1")
+                .unwrap_or(false);
+            if heap {
+                SimOpts {
+                    backend: EventBackend::Heap,
+                    batch: false,
+                }
+            } else {
+                SimOpts::default()
+            }
+        })
+    }
+}
 
 /// Result of a completed simulation run.
 pub struct SimReport {
@@ -62,6 +122,23 @@ pub fn simulate(cfg: Config, jobs: Vec<JobSpec>) -> SimReport {
 /// Simulate with a pre-built core (custom policy/estimator injections).
 pub fn simulate_with(mut core: SchedCore, jobs: Vec<JobSpec>) -> SimReport {
     simulate_into(&mut core, jobs)
+}
+
+/// Simulate with an explicit event-core configuration. The differential
+/// tests and the hotpath bench pin both sides of the wheel-vs-heap
+/// comparison through this instead of racing on `UWFQ_EVENT_HEAP`.
+pub fn simulate_opts(cfg: Config, jobs: Vec<JobSpec>, opts: SimOpts) -> SimReport {
+    let mut core = SchedCore::from_config(cfg);
+    let mut sink = CollectSink::default();
+    let summary = simulate_stream_into_opts(&mut core, VecStream::new(jobs), &mut sink, opts);
+    SimReport {
+        label: summary.label,
+        completed: sink.completed,
+        task_log: std::mem::take(&mut core.task_log),
+        makespan_s: summary.makespan_s,
+        utilization: summary.utilization,
+        fault: summary.fault,
+    }
 }
 
 /// Simulate on a borrowed core — the sweep engine's reuse path: workers
@@ -166,13 +243,64 @@ pub struct StreamSummary {
 /// environment events are discarded. On the fault-free path only kind 0
 /// exists and the tuple degenerates to the historical `(time, core)`
 /// order, launch seqs never tie on one core.
+///
+/// Event-core options come from [`SimOpts::from_env`]
+/// (`UWFQ_EVENT_HEAP=1` selects the binary-heap, per-event reference
+/// path); use [`simulate_stream_into_opts`] to pin them explicitly.
 pub fn simulate_stream_into<S: JobStream, K: CompletionSink>(
+    core: &mut SchedCore,
+    stream: S,
+    sink: &mut K,
+) -> StreamSummary {
+    simulate_stream_into_opts(core, stream, sink, SimOpts::from_env())
+}
+
+/// Offer free cores to the policy and schedule the resulting launches:
+/// one completion event each, plus a speculation wake-up for flagged
+/// stragglers. The single point where work enters the queue.
+fn offer(
+    core: &mut SchedCore,
+    q: &mut EventQ,
+    launches: &mut Vec<Launch>,
+    now: TimeUs,
+    work_events: &mut u64,
+) {
+    core.try_launch_into(now, launches);
+    for launch in launches.iter() {
+        q.push(Ev::task(launch.finish_at, launch.core as u64, launch.seq));
+        *work_events += 1;
+        if let Some(wake) = launch.spec_wake_at {
+            q.push(Ev::spec(wake, launch.core as u64, launch.seq));
+            *work_events += 1;
+        }
+    }
+}
+
+/// [`simulate_stream_into`] with the event core pinned by the caller.
+///
+/// With `opts.batch` set, runs of same-timestamp *plain* finishes (clean,
+/// unraced, stage stays incomplete — see
+/// [`TaskEventClass`](crate::core::TaskEventClass)) are applied eagerly
+/// while their policy notification coalesces into one
+/// `on_tasks_finished` call and — for static-key policies — their
+/// post-event offers merge into one deferred [`offer`] discharged at the
+/// batch boundary (time advances, a non-plain event, an arrival, or
+/// queue exhaustion). Cores free in ascending order within a batch and
+/// static keys make selection independent of finish notifications, so
+/// the merged offer reproduces the per-event (core, stage) pairing
+/// bit-for-bit; dynamic-key policies keep per-event offers and only
+/// coalesce notifications. Every per-event offer is guarded by
+/// [`SchedCore::can_launch`] — exact, because an offer launches nothing
+/// (and touches no policy state) unless a core is free *and* a task is
+/// pending.
+pub fn simulate_stream_into_opts<S: JobStream, K: CompletionSink>(
     core: &mut SchedCore,
     mut stream: S,
     sink: &mut K,
+    opts: SimOpts,
 ) -> StreamSummary {
     let label = core.cfg.label();
-    let mut heap: BinaryHeap<Reverse<(TimeUs, u8, u64, u64)>> = BinaryHeap::new();
+    let mut q = EventQ::new(opts.backend);
     let mut launches: Vec<Launch> = Vec::new();
     let mut next_arrival_spec = stream.next_job();
 
@@ -182,65 +310,133 @@ pub fn simulate_stream_into<S: JobStream, K: CompletionSink>(
     let mut jobs_completed: u64 = 0;
     let mut peak_in_flight: usize = 0;
     let mut max_finish: TimeUs = 0;
+
+    core.set_batching(opts.batch);
+    // Offer merging is only schedule-preserving when selection keys are
+    // static (FIFO/CFQ/UWFQ); dynamic-key policies (Fair/UJF) get
+    // coalesced notifications but per-event offers.
+    let batch_offers = opts.batch && core.policy.static_keys();
+    // One deferred post-batch offer: armed by a plain same-t finish,
+    // discharged before time advances or any non-plain event applies.
+    let mut offer_pending = false;
+
     // Arm the crash clock of every core from the plan's per-core gap
     // sequence (no-op unless `fault.crash_mttf_s > 0`).
     if core.faults_enabled() {
         for c in 0..core.cfg.cores as usize {
             if let Some(gap) = core.next_crash_gap_us(c) {
-                heap.push(Reverse((gap, 4, c as u64, 0)));
+                q.push(Ev::crash(gap, c as u64));
             }
         }
     }
     loop {
         if next_arrival_spec.is_none() && work_events == 0 && core.is_idle() {
+            // A pending offer implies an incomplete stage, which keeps
+            // the engine non-idle — this break never strands a batch.
+            debug_assert!(!offer_pending);
             break; // only recurring crash/recover events remain — done
         }
-        let next_done = heap.peek().map(|&Reverse((t, _, _, _))| t);
+        let next_done = q.peek_t();
         let next_arrival = next_arrival_spec.as_ref().map(|j| j.arrival);
         let take_done = match (next_done, next_arrival) {
-            (None, None) => break,
+            (None, None) => {
+                if offer_pending {
+                    // Queue ran dry mid-batch (e.g. the batch freed the
+                    // only busy cores): discharge and re-evaluate.
+                    offer(core, &mut q, &mut launches, now, &mut work_events);
+                    offer_pending = false;
+                    continue;
+                }
+                break;
+            }
             (Some(_), None) => true,
             (None, Some(_)) => false,
-            (Some(d), Some(a)) => d <= a, // heap events first at ties
+            (Some(d), Some(a)) => d <= a, // queue events first at ties
         };
         if take_done {
-            let Reverse((t, kind, a, b)) = heap.pop().expect("peeked event");
-            debug_assert!(t >= now, "event time regressed");
-            now = t;
-            match kind {
-                0 => {
+            let ev = q.pop().expect("peeked event");
+            debug_assert!(ev.t >= now, "event time regressed");
+            if offer_pending && (ev.t != now || ev.kind != KIND_TASK) {
+                // Batch boundary: discharge at the batch's timestamp,
+                // before the clock moves or a non-plain event applies.
+                offer(core, &mut q, &mut launches, now, &mut work_events);
+                offer_pending = false;
+            }
+            now = ev.t;
+            match ev.kind {
+                KIND_TASK => {
                     work_events -= 1;
                     // Completions of killed/crashed attempts are stale
                     // (the launch seq no longer matches) and are dropped.
-                    if !core.is_stale(a as usize, b) {
+                    if core.is_stale(ev.a as usize, ev.b) {
+                        // No state changed, so a deferred offer stays
+                        // deferred: the per-event path's post-stale
+                        // offer launches nothing.
+                    } else if batch_offers
+                        && matches!(
+                            core.classify_task_event(ev.a as usize),
+                            TaskEventClass::Plain
+                        )
+                    {
+                        // Plain same-t finish: apply now, notify and
+                        // offer once at the batch boundary.
+                        task_events += 1;
+                        if let TaskEvent::Failed { .. } = core.task_event(now, ev.a as usize) {
+                            unreachable!("plain-classified task event failed");
+                        }
+                        offer_pending = true;
+                    } else {
+                        if offer_pending {
+                            // A fail/boundary finish interrupts the
+                            // batch: discharge first, apply after.
+                            offer(core, &mut q, &mut launches, now, &mut work_events);
+                            offer_pending = false;
+                        }
                         task_events += 1;
                         if let TaskEvent::Failed { stage, task, retry_at } =
-                            core.task_event(now, a as usize)
+                            core.task_event(now, ev.a as usize)
                         {
-                            heap.push(Reverse((retry_at, 1, stage, task as u64)));
+                            q.push(Ev::retry(retry_at, stage, task as u64));
                             work_events += 1;
+                        }
+                        if core.can_launch() {
+                            offer(core, &mut q, &mut launches, now, &mut work_events);
                         }
                     }
                 }
-                1 => {
+                KIND_RETRY => {
                     work_events -= 1;
-                    core.retry_ready(now, a, b as u32);
-                }
-                2 => {
-                    work_events -= 1;
-                    if let Some((fin, c2, seq)) = core.spec_wake(now, a as usize, b) {
-                        heap.push(Reverse((fin, 0, c2 as u64, seq)));
-                        work_events += 1;
+                    core.retry_ready(now, ev.a, ev.b as u32);
+                    if core.can_launch() {
+                        offer(core, &mut q, &mut launches, now, &mut work_events);
                     }
                 }
-                3 => core.recover(now, a as usize),
-                4 => {
-                    core.crash(now, a as usize);
+                KIND_SPEC => {
+                    work_events -= 1;
+                    if let Some((fin, c2, seq)) = core.spec_wake(now, ev.a as usize, ev.b) {
+                        q.push(Ev::task(fin, c2 as u64, seq));
+                        work_events += 1;
+                    }
+                    if core.can_launch() {
+                        offer(core, &mut q, &mut launches, now, &mut work_events);
+                    }
+                }
+                KIND_RECOVER => {
+                    core.recover(now, ev.a as usize);
+                    if core.can_launch() {
+                        offer(core, &mut q, &mut launches, now, &mut work_events);
+                    }
+                }
+                KIND_CRASH => {
+                    core.crash(now, ev.a as usize);
                     let recover_at = now + core.recover_delay_us();
-                    heap.push(Reverse((recover_at, 3, a, 0)));
+                    q.push(Ev::recover(recover_at, ev.a));
                     // Next crash only after the core is back in service.
-                    if let Some(gap) = core.next_crash_gap_us(a as usize) {
-                        heap.push(Reverse((recover_at + gap, 4, a, 0)));
+                    if let Some(gap) = core.next_crash_gap_us(ev.a as usize) {
+                        q.push(Ev::crash(recover_at + gap, ev.a));
+                    }
+                    if core.can_launch() {
+                        offer(core, &mut q, &mut launches, now, &mut work_events);
                     }
                 }
                 _ => unreachable!("unknown event kind"),
@@ -249,20 +445,19 @@ pub fn simulate_stream_into<S: JobStream, K: CompletionSink>(
             // Specs are moved (not cloned) into the engine on arrival.
             let spec = next_arrival_spec.take().expect("peeked arrival");
             debug_assert!(spec.arrival >= now, "stream arrivals regressed");
+            if offer_pending {
+                // Per-event mode offers before the arrival submits:
+                // discharge the batch at its own timestamp first.
+                offer(core, &mut q, &mut launches, now, &mut work_events);
+                offer_pending = false;
+            }
             now = spec.arrival;
             core.submit_job(now, spec)
                 .expect("workload produced invalid job");
             next_arrival_spec = stream.next_job();
             peak_in_flight = peak_in_flight.max(core.in_flight_jobs());
-        }
-        // try_launch after every event keeps the offer semantics exact.
-        core.try_launch_into(now, &mut launches);
-        for launch in &launches {
-            heap.push(Reverse((launch.finish_at, 0, launch.core as u64, launch.seq)));
-            work_events += 1;
-            if let Some(wake) = launch.spec_wake_at {
-                heap.push(Reverse((wake, 2, launch.core as u64, launch.seq)));
-                work_events += 1;
+            if core.can_launch() {
+                offer(core, &mut q, &mut launches, now, &mut work_events);
             }
         }
         // Drain finished jobs immediately: the engine never accumulates
@@ -275,6 +470,7 @@ pub fn simulate_stream_into<S: JobStream, K: CompletionSink>(
             }
         }
     }
+    core.set_batching(false);
     assert!(core.is_idle(), "simulation ended with stranded work");
 
     let makespan_s = crate::us_to_s(max_finish);
@@ -776,6 +972,62 @@ mod tests {
         assert_eq!(fa, fb, "fixed fault seed must repeat byte-identically");
         assert_eq!(a.fault, b.fault);
         assert_eq!(a.utilization.to_bits(), b.utilization.to_bits());
+    }
+
+    #[test]
+    fn event_core_matrix_agrees_byte_for_byte() {
+        // Every cell of the (backend × batching) matrix must reproduce
+        // the heap per-event reference schedule exactly — for every
+        // policy, on the tie-break-heavy fixture, fault-free and with
+        // all fault classes armed. (tests/invariants.rs drives the same
+        // differential over random registry specs.)
+        let fingerprint = |r: &SimReport| {
+            (
+                r.completed.iter().map(|c| (c.job, c.finish)).collect::<Vec<_>>(),
+                r.utilization.to_bits(),
+                r.fault.clone(),
+            )
+        };
+        let cells = [
+            (EventBackend::Heap, true),
+            (EventBackend::Wheel, false),
+            (EventBackend::Wheel, true),
+        ];
+        for policy in PolicyKind::ALL {
+            let mut c = cfg(8, policy);
+            c.fault.seed = 7;
+            for faulty in [false, true] {
+                let jobs = if faulty {
+                    c.fault.task_fail_prob = 0.15;
+                    c.fault.retry_backoff_s = 0.05;
+                    c.fault.straggler_prob = 0.1;
+                    c.fault.straggler_mult = 6.0;
+                    c.fault.spec_mult = 2.0;
+                    c.fault.crash_mttf_s = 15.0;
+                    c.fault.crash_recover_s = 1.0;
+                    (0..40)
+                        .map(|i| job(i % 5, i as f64 * 0.15, 0.8))
+                        .collect::<Vec<_>>()
+                } else {
+                    mixed_workload()
+                };
+                let reference = simulate_opts(
+                    c.clone(),
+                    jobs.clone(),
+                    SimOpts { backend: EventBackend::Heap, batch: false },
+                );
+                let want = fingerprint(&reference);
+                for (backend, batch) in cells {
+                    let got = simulate_opts(c.clone(), jobs.clone(), SimOpts { backend, batch });
+                    assert_eq!(
+                        fingerprint(&got),
+                        want,
+                        "{} faulty={faulty} {backend:?} batch={batch} diverged",
+                        policy.name()
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -29,6 +29,10 @@
 //!    every policy, and work conservation generalizes to "a core may only
 //!    idle while a leaf stage waits if it sits inside one of its own
 //!    crash/blacklist windows".
+//! 7. **Event-core differential** — the calendar-queue + batched event
+//!    core reproduces the binary-heap per-event reference schedule
+//!    byte-for-byte (completions, utilization bits, fault ledger) on
+//!    random registry scenarios × every policy × random fault mixes.
 
 use std::collections::HashMap;
 
@@ -37,6 +41,7 @@ use uwfq::fault::FaultConfig;
 use uwfq::sched::vtime::TwoLevelVtime;
 use uwfq::sched::PolicyKind;
 use uwfq::sim;
+use uwfq::sim::{EventBackend, SimOpts};
 use uwfq::util::{propkit, Rng};
 use uwfq::workload::ScenarioSpec;
 use uwfq::TimeUs;
@@ -340,6 +345,54 @@ fn faults_lose_no_jobs_and_repeat_byte_identically() {
                     "{}: repeated faulty run not byte-identical ({spec:?}, {fault:?})",
                     policy.name()
                 ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn event_core_backends_produce_byte_identical_schedules() {
+    // Invariant 7: the optimized event core (calendar queue + same-t
+    // batching) is schedule-preserving. For random registry scenarios,
+    // every policy, fault-free and under a random fault mix, every cell
+    // of the (backend × batching) matrix must fingerprint identically to
+    // the binary-heap per-event reference — completion order and times,
+    // utilization bit pattern, and the full fault ledger.
+    propkit::check("event-core differential", 0xE5C0DE, 5, |r| {
+        let spec = random_spec(r);
+        let seed = r.next_u64();
+        let faulty = r.f64() < 0.6;
+        let fault = if faulty { random_fault(r) } else { FaultConfig::default() };
+        let w = spec.workload(seed).map_err(|e| format!("{spec:?}: {e}"))?;
+        if w.jobs.is_empty() {
+            return Err(format!("{spec:?}: degenerate empty workload"));
+        }
+        let cells = [
+            (EventBackend::Heap, true),
+            (EventBackend::Wheel, false),
+            (EventBackend::Wheel, true),
+        ];
+        for policy in PolicyKind::ALL {
+            let mut cfg = Config::default().with_cores(8).with_policy(policy);
+            cfg.log_tasks = true;
+            cfg.fault = fault.clone();
+            let reference = sim::simulate_opts(
+                cfg.clone(),
+                w.jobs.clone(),
+                SimOpts { backend: EventBackend::Heap, batch: false },
+            );
+            let want = fingerprint(&reference);
+            for (backend, batch) in cells {
+                let got =
+                    sim::simulate_opts(cfg.clone(), w.jobs.clone(), SimOpts { backend, batch });
+                if fingerprint(&got) != want {
+                    return Err(format!(
+                        "{}: {backend:?} batch={batch} diverged from heap per-event \
+                         reference ({spec:?}, faulty={faulty})",
+                        policy.name()
+                    ));
+                }
             }
         }
         Ok(())
