@@ -1,0 +1,82 @@
+//! Bench: the sharded million-user engine — jobs/s at increasing shard
+//! counts on the 1M-job / 100k-user workload, with speedup vs the
+//! 1-shard baseline and the observed virtual-time drift vs its provable
+//! bound, emitted to `BENCH_shard.json` (benchkit JsonSink) so the
+//! intra-run scaling trajectory is tracked across PRs next to
+//! `BENCH_scale.json`.
+//!
+//! * `SHARD_JOBS` / `SHARD_USERS` / `SHARD_COUNTS` (comma-separated)
+//!   override the workload size and shard-count sweep.
+//! * `SHARD_QUICK=1` (or `SCALE_QUICK=1`) shrinks to 50k jobs / 5k users
+//!   for CI smoke runs.
+//!
+//! Run with `cargo bench --bench shard`.
+
+use uwfq::bench::shard::{record_metrics, render, run_shard};
+use uwfq::config::Config;
+use uwfq::util::benchkit::JsonSink;
+use uwfq::workload::stream::ScaleParams;
+
+fn env_num<T: std::str::FromStr>(key: &str) -> Option<T> {
+    std::env::var(key).ok().and_then(|v| v.parse().ok())
+}
+
+fn main() {
+    let quick =
+        std::env::var("SHARD_QUICK").is_ok() || std::env::var("SCALE_QUICK").is_ok();
+    let jobs: u64 = env_num("SHARD_JOBS").unwrap_or(if quick { 50_000 } else { 1_000_000 });
+    let users: u32 = env_num("SHARD_USERS").unwrap_or(if quick { 5_000 } else { 100_000 });
+    let cfg = Config::default().with_cores(64);
+    let counts: Vec<u32> = match std::env::var("SHARD_COUNTS") {
+        Ok(v) => v
+            .split(',')
+            .filter_map(|s| s.trim().parse().ok())
+            .filter(|&s| s >= 1 && s <= cfg.cores)
+            .collect(),
+        Err(_) => {
+            let avail = std::thread::available_parallelism()
+                .map(|n| n.get() as u32)
+                .unwrap_or(1);
+            [1u32, 2, 4, 8]
+                .into_iter()
+                .filter(|&s| s <= cfg.cores && s <= avail.max(2))
+                .collect()
+        }
+    };
+    let params = ScaleParams {
+        users,
+        jobs,
+        cores: cfg.cores,
+        target_utilization: 0.85,
+        seed: cfg.seed,
+    };
+
+    println!(
+        "# Sharded engine — {jobs} jobs / {users} users on {} cores, shard counts {counts:?}{}",
+        cfg.cores,
+        if quick { " (quick)" } else { "" }
+    );
+    let outcome = run_shard(&params, &cfg, &counts);
+    print!("{}", render(&outcome));
+
+    let mut sink = JsonSink::new();
+    record_metrics(&outcome, &mut sink);
+    if let Err(e) = sink.write("BENCH_shard.json") {
+        eprintln!("warning: could not write BENCH_shard.json: {e}");
+    } else {
+        println!("wrote BENCH_shard.json");
+    }
+
+    // The drift bound is part of the bench contract: a sync-barrier
+    // regression would otherwise ship plausible-looking speedups.
+    for r in &outcome.rows {
+        if r.max_drift_rsec > r.bound_rsec + 1e-9 {
+            eprintln!(
+                "S={}: virtual-time drift {} exceeds bound {}",
+                r.shards, r.max_drift_rsec, r.bound_rsec
+            );
+            std::process::exit(1);
+        }
+    }
+    println!("virtual-time drift within the provable bound on every row");
+}

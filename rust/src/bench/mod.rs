@@ -24,6 +24,7 @@ pub mod figures;
 pub mod hotpath;
 pub mod replay;
 pub mod scale;
+pub mod shard;
 pub mod tables;
 
 use std::collections::HashMap;

@@ -1,0 +1,258 @@
+//! The shard harness behind `uwfq shard` and `benches/shard.rs`:
+//! the scale workload run through the sharded engine
+//! ([`crate::sim::run_sharded`]) at increasing shard counts, with the
+//! 1-shard run as its own throughput baseline.
+//!
+//! Each row is one full run: users hash-partitioned across `S`
+//! independent event loops (each owning `cores/S` cores), federated
+//! virtual time re-coupled at the sync barrier every `shard_epoch_s` of
+//! simulated time. The row records wall-clock throughput
+//! (`jobs_per_s`, `speedup_vs_1shard`), the merged simulation outcome
+//! (exact counter sums; ECDF-derived quantiles), and the virtual-time
+//! drift telemetry (`max_drift_rsec` against the provable
+//! `bound_rsec = cores × shard_epoch_s`).
+
+use std::time::Instant;
+
+use crate::config::Config;
+use crate::metrics::streaming::StreamingRunMetrics;
+use crate::sim::{run_sharded, SimOpts};
+use crate::util::benchkit::JsonSink;
+use crate::workload::stream::{scale_stream, ScaleParams};
+
+use super::scale::{scale_idle_map, QUANTILES};
+
+/// One shard count's full run.
+#[derive(Clone, Debug)]
+pub struct ShardRow {
+    pub shards: u32,
+    pub wall_s: f64,
+    pub jobs_per_s: f64,
+    /// Throughput relative to this outcome's own 1-shard row.
+    pub speedup_vs_1shard: f64,
+    pub jobs: u64,
+    pub task_events: u64,
+    /// Sum of per-shard peak-in-flight counters (upper bound on the
+    /// cluster peak; comparable to the unsharded key at S=1).
+    pub peak_in_flight_sum: usize,
+    /// Max of per-shard peaks — the largest single event loop.
+    pub peak_in_flight_max: usize,
+    pub makespan_s: f64,
+    pub utilization: f64,
+    /// Sync-barrier telemetry (0 epochs at S=1).
+    pub epochs: u64,
+    pub max_drift_rsec: f64,
+    pub bound_rsec: f64,
+    pub mean_rt: f64,
+    pub mean_slowdown: f64,
+    pub jain_index: f64,
+    pub user_count: usize,
+    /// ECDF-inverted RT quantiles of the merged sink (exactly mergeable,
+    /// unlike P²).
+    pub ecdf_q: [f64; 3],
+}
+
+/// Everything one `uwfq shard` invocation produces.
+pub struct ShardOutcome {
+    pub label: String,
+    pub jobs: u64,
+    pub users: u32,
+    pub cores: u32,
+    pub rows: Vec<ShardRow>,
+}
+
+/// Run the scale workload at each shard count in `shard_counts`
+/// (deduplicated, ascending; a 1-shard run is prepended if absent so the
+/// speedup baseline is always measured in-process).
+pub fn run_shard(params: &ScaleParams, cfg: &Config, shard_counts: &[u32]) -> ShardOutcome {
+    let mut counts: Vec<u32> = shard_counts.to_vec();
+    if !counts.contains(&1) {
+        counts.push(1);
+    }
+    counts.sort_unstable();
+    counts.dedup();
+
+    let idle = scale_idle_map(cfg);
+    let label = cfg.label();
+    let mut rows = Vec::with_capacity(counts.len());
+    for &s in &counts {
+        let mut cfg_s = cfg.clone();
+        cfg_s.shards = s;
+        let t0 = Instant::now();
+        let run = run_sharded(
+            &cfg_s,
+            SimOpts::default(),
+            |_| scale_stream(params),
+            |_| StreamingRunMetrics::new(&label, idle.clone()),
+        );
+        let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+
+        // Fold the shard-local sinks into one (exact reduction; users are
+        // disjoint across shards so per-user aggregates never collide).
+        let mut sinks = run.sinks.into_iter();
+        let mut merged = sinks.next().expect("at least one shard");
+        for sink in sinks {
+            merged.merge_from(&sink);
+        }
+
+        let sum = &run.summary;
+        rows.push(ShardRow {
+            shards: s,
+            wall_s,
+            jobs_per_s: sum.jobs_completed as f64 / wall_s,
+            speedup_vs_1shard: 0.0, // filled below, once the baseline exists
+            jobs: sum.jobs_completed,
+            task_events: sum.task_events,
+            peak_in_flight_sum: sum.peak_in_flight_jobs,
+            peak_in_flight_max: run.peak_in_flight_max,
+            makespan_s: sum.makespan_s,
+            utilization: sum.utilization,
+            epochs: run.sync.epochs,
+            max_drift_rsec: run.sync.max_drift_rsec,
+            bound_rsec: run.sync.bound_rsec,
+            mean_rt: merged.mean_rt(),
+            mean_slowdown: merged.mean_slowdown(),
+            jain_index: merged.jain_index_user_rt(),
+            user_count: merged.user_count(),
+            ecdf_q: QUANTILES.map(|p| merged.rt_quantile_ecdf(p)),
+        });
+    }
+
+    let base = rows
+        .iter()
+        .find(|r| r.shards == 1)
+        .map(|r| r.jobs_per_s)
+        .expect("1-shard baseline is always present");
+    for r in &mut rows {
+        r.speedup_vs_1shard = if base > 0.0 { r.jobs_per_s / base } else { 0.0 };
+    }
+
+    ShardOutcome {
+        label,
+        jobs: params.jobs,
+        users: params.users,
+        cores: cfg.cores,
+        rows,
+    }
+}
+
+/// Record a shard outcome into a benchkit sink (`BENCH_shard.json`,
+/// tracked across PRs next to `BENCH_scale` / `BENCH_hotpath`).
+pub fn record_metrics(o: &ShardOutcome, sink: &mut JsonSink) {
+    sink.metric("shard/jobs", o.jobs as f64);
+    sink.metric("shard/users", o.users as f64);
+    sink.metric("shard/cores", o.cores as f64);
+    for r in &o.rows {
+        let s = r.shards;
+        sink.metric(&format!("shard/s{s}/wall_s"), r.wall_s);
+        sink.metric(&format!("shard/s{s}/jobs_per_s"), r.jobs_per_s);
+        sink.metric(&format!("shard/s{s}/speedup_vs_1shard"), r.speedup_vs_1shard);
+        sink.metric(&format!("shard/s{s}/task_events"), r.task_events as f64);
+        sink.metric(
+            &format!("shard/s{s}/peak_in_flight_sum"),
+            r.peak_in_flight_sum as f64,
+        );
+        sink.metric(
+            &format!("shard/s{s}/peak_in_flight_max"),
+            r.peak_in_flight_max as f64,
+        );
+        sink.metric(&format!("shard/s{s}/makespan_s"), r.makespan_s);
+        sink.metric(&format!("shard/s{s}/utilization"), r.utilization);
+        sink.metric(&format!("shard/s{s}/sync_epochs"), r.epochs as f64);
+        sink.metric(&format!("shard/s{s}/max_drift_rsec"), r.max_drift_rsec);
+        sink.metric(&format!("shard/s{s}/drift_bound_rsec"), r.bound_rsec);
+        sink.metric(&format!("shard/s{s}/mean_rt_s"), r.mean_rt);
+        sink.metric(&format!("shard/s{s}/jain_index_user_rt"), r.jain_index);
+        for (i, p) in QUANTILES.iter().enumerate() {
+            let tag = (p * 100.0).round() as u32;
+            sink.metric(&format!("shard/s{s}/rt_p{tag}_ecdf_s"), r.ecdf_q[i]);
+        }
+    }
+}
+
+/// Human summary printed by `uwfq shard` and the bench.
+pub fn render(o: &ShardOutcome) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "shard bench ({}): {} jobs / {} users on {} cores\n",
+        o.label, o.jobs, o.users, o.cores
+    ));
+    s.push_str(
+        "  shards     jobs/s  speedup   wall s   drift rsec (bound)   epochs  Jain\n",
+    );
+    for r in &o.rows {
+        s.push_str(&format!(
+            "  {:>6} {:>10.0} {:>8.2}x {:>8.2}   {:>10.3} ({:>6.1}) {:>8} {:>5.3}\n",
+            r.shards,
+            r.jobs_per_s,
+            r.speedup_vs_1shard,
+            r.wall_s,
+            r.max_drift_rsec,
+            r.bound_rsec,
+            r.epochs,
+            r.jain_index
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_params() -> ScaleParams {
+        ScaleParams {
+            users: 40,
+            jobs: 500,
+            cores: 8,
+            target_utilization: 0.8,
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn run_shard_always_has_a_baseline_and_consistent_rows() {
+        let cfg = Config::default().with_cores(8);
+        // 1 deliberately omitted: run_shard must prepend the baseline.
+        let o = run_shard(&small_params(), &cfg, &[2]);
+        assert_eq!(o.rows.len(), 2);
+        assert_eq!(o.rows[0].shards, 1);
+        assert_eq!(o.rows[1].shards, 2);
+        assert!((o.rows[0].speedup_vs_1shard - 1.0).abs() < 1e-12);
+        for r in &o.rows {
+            assert_eq!(r.jobs, 500, "S={} dropped jobs", r.shards);
+            assert_eq!(r.user_count, 40);
+            assert!(r.jobs_per_s > 0.0);
+            assert!(r.peak_in_flight_max <= r.peak_in_flight_sum);
+            assert!(
+                r.max_drift_rsec <= r.bound_rsec + 1e-9,
+                "S={}: drift {} over bound {}",
+                r.shards,
+                r.max_drift_rsec,
+                r.bound_rsec
+            );
+        }
+        assert_eq!(o.rows[0].epochs, 0, "S=1 must not sync");
+        assert!(o.rows[1].epochs > 0, "S=2 must sync");
+    }
+
+    #[test]
+    fn record_metrics_emits_per_shard_keys() {
+        let cfg = Config::default().with_cores(8);
+        let o = run_shard(&small_params(), &cfg, &[1, 2]);
+        let mut sink = JsonSink::new();
+        record_metrics(&o, &mut sink);
+        let path = std::env::temp_dir().join("uwfq_shard_metrics_test.json");
+        sink.write(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        for key in [
+            "shard/s1/jobs_per_s",
+            "shard/s2/speedup_vs_1shard",
+            "shard/s2/max_drift_rsec",
+            "shard/s2/peak_in_flight_max",
+        ] {
+            assert!(text.contains(key), "missing {key}");
+        }
+        std::fs::remove_file(path).ok();
+    }
+}

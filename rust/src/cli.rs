@@ -49,6 +49,12 @@ USAGE:
              # batching on/off ablation per policy, emits
              # BENCH_hotpath.json (UWFQ_EVENT_HEAP=1 benches the
              # escape-hatch default)
+  uwfq shard [--quick] [--shards N] [--jobs N] [--users N] [--out DIR]
+             # sharded engine bench: federated virtual time over
+             # hash-partitioned users, one event loop per shard; sweeps
+             # shard counts (or just --shards N), reports jobs/s and
+             # speedup vs the 1-shard baseline plus the observed
+             # virtual-time drift, emits BENCH_shard.json
   uwfq serve [--cores N] [--time-scale F] [--artifacts DIR]   # real PJRT backend demo
   uwfq ablation [--seed N] [--threads N]                      # design-choice ablations
   uwfq run --scenario scenario2 --eventlog trace.jsonl        # emit event log
@@ -69,6 +75,13 @@ FLAGS (config keys, see config.rs):
   --threads N routes the experiment grid through the parallel sweep
   engine (N worker threads; 0 = all cores). Output is byte-identical to
   --threads 1; `reproduce` defaults to 1, `sweep` defaults to 0.
+
+  --shards N splits one run into N parallel event loops over
+  hash-partitioned users (config key `shards`; `shard_epoch_s` sets the
+  virtual-time sync epoch). --shards 1 is byte-identical to the
+  unsharded engine. threads x shards is capped at the machine's
+  available parallelism — the harness trims --threads (with a warning)
+  rather than oversubscribe.
 ";
 
 /// Flags that are boolean switches: bare `--quick` reads as
@@ -243,6 +256,18 @@ mod tests {
         let c = Cli::parse(&args("run --fault.task_fail_prob 1.5")).unwrap();
         let err = c.config().unwrap_err();
         assert!(err.contains("task_fail_prob"), "{err}");
+    }
+
+    #[test]
+    fn shards_flag_routes_to_config() {
+        let c = Cli::parse(&args("shard --shards 4 --shard_epoch_s 2.0 --cores 8")).unwrap();
+        let cfg = c.config().unwrap();
+        assert_eq!(cfg.shards, 4);
+        assert_eq!(cfg.shard_epoch_s, 2.0);
+        // Invalid shard counts surface the config error (naming threads).
+        let c = Cli::parse(&args("shard --shards 0")).unwrap();
+        let err = c.config().unwrap_err();
+        assert!(err.contains("shards") && err.contains("threads"), "{err}");
     }
 
     #[test]

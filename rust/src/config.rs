@@ -46,6 +46,17 @@ pub struct Config {
     /// default to zero — the fault-free path is byte-identical to a build
     /// without the subsystem.
     pub fault: FaultConfig,
+    /// Shard count for the sharded engine ([`crate::sim::run_sharded`]):
+    /// users are hash-partitioned across this many independent event
+    /// loops, each owning `cores/shards` cores. `1` (the default) is the
+    /// plain single-loop engine, byte-identical to builds before sharding
+    /// existed. Must not exceed `cores` — every shard needs ≥1 core.
+    pub shards: u32,
+    /// Virtual-time sync epoch for sharded runs, in simulated seconds:
+    /// the interval between global barriers that re-couple each shard's
+    /// `v_global` and fair-share rate to the population-wide values. The
+    /// fairness drift bound is `cores × shard_epoch_s` resource-seconds.
+    pub shard_epoch_s: f64,
 }
 
 impl Default for Config {
@@ -65,6 +76,8 @@ impl Default for Config {
             scenario: None,
             scenario_params: Vec::new(),
             fault: FaultConfig::default(),
+            shards: 1,
+            shard_epoch_s: 4.0,
         }
     }
 }
@@ -72,7 +85,8 @@ impl Default for Config {
 /// Every key [`Config::set`] accepts — listed in unknown-key errors.
 const CONFIG_KEYS: &str = "cores, task_overhead, atr, max_partition_bytes, \
 advisory_partition_bytes, grace_rsec, seed, estimator_sigma, log_tasks, \
-policy, scheme | partitioner, scenario, param.<name>, fault.<knob> \
+policy, scheme | partitioner, scenario, shards, shard_epoch_s, \
+param.<name>, fault.<knob> \
 (task_fail_prob, max_failures, retry_backoff_s, straggler_prob, \
 straggler_mult, spec_mult, crash_mttf_s, crash_recover_s, seed)";
 
@@ -140,6 +154,26 @@ impl Config {
             }
             "scheme" | "partitioner" => self.scheme = SchemeKind::parse(val)?,
             "scenario" => self.scenario = Some(val.to_string()),
+            "shards" => {
+                let s: u32 = num(key, val)?;
+                if s == 0 {
+                    return Err("shards: must be >= 1 (note: shards multiplies with \
+                                --threads — the harness caps threads x shards at \
+                                available parallelism)"
+                        .into());
+                }
+                self.shards = s;
+            }
+            "shard_epoch_s" => {
+                let e: f64 = num(key, val)?;
+                if !(e > 0.0) {
+                    return Err(format!(
+                        "shard_epoch_s: must be > 0 (got '{val}'); the drift bound \
+                         is cores x shard_epoch_s resource-seconds"
+                    ));
+                }
+                self.shard_epoch_s = e;
+            }
             _ => {
                 if let Some(knob) = key.strip_prefix("fault.") {
                     match knob {
@@ -283,6 +317,23 @@ mod tests {
         assert!(err.contains("fault.seed") && err.contains("abc"), "{err}");
         let err = c.apply_lines("cores = abc").unwrap_err();
         assert!(err.contains("cores") && err.contains("abc"), "{err}");
+    }
+
+    #[test]
+    fn shard_keys_parse_and_validate() {
+        let mut c = Config::default();
+        assert_eq!(c.shards, 1, "sharding must default off");
+        assert_eq!(c.shard_epoch_s, 4.0);
+        c.apply_lines("shards = 4\nshard_epoch_s = 2.5\n").unwrap();
+        assert_eq!(c.shards, 4);
+        assert_eq!(c.shard_epoch_s, 2.5);
+        // Zero shards rejected, naming the threads composition rule.
+        let err = c.apply_lines("shards = 0").unwrap_err();
+        assert!(err.contains("shards") && err.contains("threads"), "{err}");
+        let err = c.apply_lines("shard_epoch_s = 0").unwrap_err();
+        assert!(err.contains("shard_epoch_s"), "{err}");
+        let err = c.apply_lines("shard_epoch_s = -1").unwrap_err();
+        assert!(err.contains("shard_epoch_s"), "{err}");
     }
 
     #[test]

@@ -279,6 +279,38 @@ impl FaultStats {
     pub fn wasted_core_s(&self) -> f64 {
         self.wasted_us as f64 / 1e6
     }
+
+    /// Fold another ledger (one shard's) into this one — the exact
+    /// reduction behind the sharded engine's merged summary. Counters
+    /// and core-time sums add; per-user entries add (shards serve
+    /// disjoint users, so entries never actually collide); crash windows
+    /// concatenate with the shard's cores renumbered into the cluster
+    /// index space via `core_offset` (the sum of earlier shards' core
+    /// counts). Merging into a default-initialized ledger with offset 0
+    /// is the identity.
+    pub fn merge(&mut self, other: &FaultStats, core_offset: usize) {
+        self.failures += other.failures;
+        self.retries += other.retries;
+        self.spec_launched += other.spec_launched;
+        self.spec_wins += other.spec_wins;
+        self.spec_losses += other.spec_losses;
+        self.spec_skipped += other.spec_skipped;
+        self.crashes += other.crashes;
+        self.tasks_lost_to_crash += other.tasks_lost_to_crash;
+        self.good_us += other.good_us;
+        self.wasted_us += other.wasted_us;
+        for (&user, &(good, wasted)) in &other.per_user {
+            let e = self.per_user.entry(user).or_insert((0, 0));
+            e.0 += good;
+            e.1 += wasted;
+        }
+        self.crash_windows.extend(
+            other
+                .crash_windows
+                .iter()
+                .map(|&(core, down, up)| (core + core_offset, down, up)),
+        );
+    }
 }
 
 #[cfg(test)]
@@ -300,6 +332,40 @@ mod tests {
             }
         }
         assert_eq!(p.crash_gap_us(0, 0), None);
+    }
+
+    #[test]
+    fn stats_merge_sums_and_offsets_cores() {
+        let a = FaultStats {
+            failures: 2,
+            retries: 2,
+            good_us: 100,
+            wasted_us: 10,
+            per_user: [(1u32, (50u128, 5u128))].into_iter().collect(),
+            crash_windows: vec![(0, 10, 20)],
+            ..Default::default()
+        };
+        let b = FaultStats {
+            failures: 3,
+            retries: 3,
+            crashes: 1,
+            good_us: 40,
+            wasted_us: 4,
+            per_user: [(7u32, (40u128, 4u128))].into_iter().collect(),
+            crash_windows: vec![(1, 30, 40)],
+            ..Default::default()
+        };
+        // Identity: merging into a default ledger at offset 0.
+        let mut m = FaultStats::default();
+        m.merge(&a, 0);
+        assert_eq!(m, a);
+        // Second shard's cores renumber past the first shard's 4 cores.
+        m.merge(&b, 4);
+        assert_eq!(m.failures, 5);
+        assert_eq!(m.good_us, 140);
+        assert_eq!(m.per_user[&1], (50, 5));
+        assert_eq!(m.per_user[&7], (40, 4));
+        assert_eq!(m.crash_windows, vec![(0, 10, 20), (5, 30, 40)]);
     }
 
     #[test]

@@ -29,6 +29,7 @@ fn main() -> ExitCode {
         "fault" => fault_cmd(&cli),
         "hotpath" => hotpath_cmd(&cli),
         "scale" => scale_cmd(&cli),
+        "shard" => shard_cmd(&cli),
         "replay" => replay_cmd(&cli),
         "tracegen" => tracegen_cmd(&cli),
         "run" => run(&cli),
@@ -160,6 +161,27 @@ fn reproduce(cli: &Cli) -> Result<(), String> {
 /// pure registry entries; this file only knows their names.
 const STRESS_SCENARIOS: [&str; 3] = ["bursty", "heavytail", "diurnal"];
 
+/// `--threads` and `--shards` compose: a sharded run already owns
+/// `shards` OS threads, so `threads × shards` worker threads would
+/// oversubscribe the machine. Trim the sweep workers (never below 1)
+/// and say so loudly — silent thrash is worse than a warning.
+fn cap_threads_for_shards(threads: usize, shards: u32) -> usize {
+    let shards = shards.max(1) as usize;
+    let avail = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    if threads.saturating_mul(shards) > avail {
+        let capped = (avail / shards).max(1);
+        eprintln!(
+            "warning: --threads {threads} x --shards {shards} oversubscribes the \
+             {avail} available cores; capping --threads to {capped}"
+        );
+        capped
+    } else {
+        threads
+    }
+}
+
 /// Run the generic policy × partitioner grid for one scenario spec and
 /// write `sweep_<name>.csv`.
 fn scenario_sweep(
@@ -191,7 +213,7 @@ fn sweep_cmd(cli: &Cli) -> Result<(), String> {
         base.cores = 8;
     }
     let seed = base.seed;
-    let threads = cli.threads(uwfq::sweep::auto_threads(None))?;
+    let threads = cap_threads_for_shards(cli.threads(uwfq::sweep::auto_threads(None))?, base.shards);
     let par = Sweep::new(threads);
     let io = |e: std::io::Error| e.to_string();
 
@@ -280,9 +302,10 @@ fn sweep_cmd(cli: &Cli) -> Result<(), String> {
         sink.metric(&format!("sweep/cells_per_s_{threads}t"), macro_cells / ps);
         sink.metric("sweep/speedup", seq_s / ps);
     }
-    let (hits, misses) = uwfq::sim::idle_cache_stats();
+    let (hits, misses, contended) = uwfq::sim::idle_cache_stats();
     sink.metric("sweep/idle_cache_hits", hits as f64);
     sink.metric("sweep/idle_cache_misses", misses as f64);
+    sink.metric("sweep/idle_cache_contended", contended as f64);
     let bench_path = cli.flag_or("bench-json", &format!("{out}/BENCH_sweep.json"));
     sink.write(&bench_path).map_err(io)?;
     match par_s {
@@ -412,6 +435,91 @@ fn scale_cmd(cli: &Cli) -> Result<(), String> {
             .map_err(|e| format!("streaming accuracy outside documented tolerance: {e}"))?;
         println!("streaming estimators within documented tolerance");
     }
+    Ok(())
+}
+
+/// `uwfq shard` — the sharded-engine bench: the scale workload run at
+/// increasing shard counts (users hash-partitioned across parallel event
+/// loops, federated virtual time re-coupled each `shard_epoch_s`), with
+/// the 1-shard run as the in-process throughput baseline. Emits
+/// `BENCH_shard.json` (jobs/s, speedup vs S=1, virtual-time drift vs its
+/// provable bound per shard count); the CI shard-smoke job runs
+/// `--quick` over a {1,2,4} matrix.
+fn shard_cmd(cli: &Cli) -> Result<(), String> {
+    let out = cli.flag_or("out", "out");
+    std::fs::create_dir_all(&out).map_err(|e| e.to_string())?;
+    let mut cfg = cli.config()?;
+    if cli.flag("cores").is_none() && cli.flag("config").is_none() {
+        cfg.cores = 64;
+    }
+    let quick = cli.quick();
+    // Size resolution mirrors `uwfq scale` (registry `scale` entry, quick
+    // overrides, --jobs/--users on top) — but the sharded headline shape
+    // is wider: 1M jobs across 100k users, so hash partitioning has a
+    // population to spread.
+    let mut spec = spec_with_quick("scale", quick)?;
+    spec.params.extend(cfg.scenario_params.iter().cloned());
+    if !quick && cli.flag("users").is_none() {
+        spec = spec.with("users", "100000");
+    }
+    if let Some(v) = cli.flag("jobs") {
+        spec = spec.with("jobs", v);
+    }
+    if let Some(v) = cli.flag("users") {
+        spec = spec.with("users", v);
+    }
+    spec = spec.with("cores", &cfg.cores.to_string());
+    let params = uwfq::workload::registry::scale_params(&spec, cfg.seed)?;
+
+    // Shard counts: `--shards N` benches {1, N}; the default sweeps
+    // powers of two. Both are clamped by cores (a shard needs a core);
+    // counts beyond the machine's parallelism still run (the threads
+    // just time-slice) but are worth a loud note.
+    let avail = std::thread::available_parallelism()
+        .map(|n| n.get() as u32)
+        .unwrap_or(1);
+    let counts: Vec<u32> = if cli.flag("shards").is_some() {
+        if cfg.shards > cfg.cores {
+            return Err(format!(
+                "--shards {} exceeds --cores {}: every shard needs a core",
+                cfg.shards, cfg.cores
+            ));
+        }
+        if cfg.shards == 1 {
+            vec![1]
+        } else {
+            vec![1, cfg.shards]
+        }
+    } else {
+        [1u32, 2, 4, 8]
+            .into_iter()
+            .filter(|&s| s <= cfg.cores && s <= avail.max(2))
+            .collect()
+    };
+    if let Some(&max_s) = counts.iter().max() {
+        if max_s > avail {
+            eprintln!(
+                "warning: {max_s} shards on {avail} available cores — shard threads \
+                 will time-slice; speedups will understate the engine"
+            );
+        }
+    }
+    println!(
+        "shard: {} jobs / {} users on {} cores, shard counts {:?} (policy {}, epoch {} s)",
+        params.jobs,
+        params.users,
+        params.cores,
+        counts,
+        cfg.policy.name(),
+        cfg.shard_epoch_s
+    );
+    let outcome = uwfq::bench::shard::run_shard(&params, &cfg, &counts);
+    print!("{}", uwfq::bench::shard::render(&outcome));
+    let mut sink = JsonSink::new();
+    uwfq::bench::shard::record_metrics(&outcome, &mut sink);
+    let bench_path = cli.flag_or("bench-json", &format!("{out}/BENCH_shard.json"));
+    sink.write(&bench_path).map_err(|e| e.to_string())?;
+    println!("shard bench done → {bench_path}");
     Ok(())
 }
 

@@ -67,6 +67,23 @@ impl StreamStats {
             self.sum / self.count as f64
         }
     }
+
+    /// Exact merge of two accumulators: the result is what a single
+    /// accumulator would hold had it observed both sample sets (count and
+    /// sum are associative; min/max take care of empty sides).
+    pub fn merge(&mut self, other: &StreamStats) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            *self = other.clone();
+            return;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -323,6 +340,27 @@ impl StreamingEcdf {
         out
     }
 
+    /// Exact merge: bin-wise count sum. Both histograms must share the
+    /// same window and bin count — the merged CDF is then identical to
+    /// one built from the union of the two sample streams (binning is
+    /// per-sample and independent of arrival order).
+    pub fn merge(&mut self, other: &StreamingEcdf) {
+        assert!(
+            self.lo == other.lo && self.hi == other.hi && self.counts.len() == other.counts.len(),
+            "cannot merge ECDFs with different windows/bins: [{}, {}]x{} vs [{}, {}]x{}",
+            self.lo,
+            self.hi,
+            self.counts.len(),
+            other.lo,
+            other.hi,
+            other.counts.len()
+        );
+        for (c, &o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.total += other.total;
+    }
+
     /// Largest single-bin mass fraction — the worst-case CDF error at an
     /// arbitrary (non-edge) query point.
     pub fn max_bin_mass(&self) -> f64 {
@@ -375,6 +413,11 @@ pub struct StreamingRunMetrics {
     rt_p99: P2Quantile,
     pub rt_ecdf: StreamingEcdf,
     per_user: HashMap<UserId, UserAccum>,
+    /// Set once another sink has been folded in. P² markers cannot be
+    /// merged (the algorithm is order-sensitive and keeps no samples), so
+    /// a merged sink answers quantile queries from the merged ECDF — which
+    /// *is* exactly mergeable — instead of its now-partial P² state.
+    merged: bool,
 }
 
 impl StreamingRunMetrics {
@@ -389,7 +432,37 @@ impl StreamingRunMetrics {
             rt_p99: P2Quantile::new(0.99),
             rt_ecdf: StreamingEcdf::response_times(),
             per_user: HashMap::new(),
+            merged: false,
         }
+    }
+
+    /// Fold another sink's observations into this one — the reduction step
+    /// for shard-local metric sinks. Counts, sums, extrema, the ECDF, and
+    /// per-user aggregates merge *exactly* (each is a plain sum, so the
+    /// result equals a single sink fed the union of both completion
+    /// streams in any order). The P² marker states are NOT mergeable;
+    /// after a merge [`Self::rt_quantile_p2`] transparently answers from
+    /// the merged ECDF (error bounded by bin resolution, ≈3.2 % relative).
+    pub fn merge_from(&mut self, other: &StreamingRunMetrics) {
+        self.rt.merge(&other.rt);
+        self.slowdown.merge(&other.slowdown);
+        self.rt_ecdf.merge(&other.rt_ecdf);
+        for (&u, acc) in &other.per_user {
+            let e = self.per_user.entry(u).or_default();
+            e.jobs += acc.jobs;
+            e.rt_sum += acc.rt_sum;
+            e.slowdown_sum += acc.slowdown_sum;
+        }
+        for (name, &idle) in &other.idle_rt {
+            self.idle_rt.entry(name.clone()).or_insert(idle);
+        }
+        self.merged = true;
+    }
+
+    /// Whether this sink is a merge of several shard-local sinks (and thus
+    /// answers P² quantile queries from the ECDF).
+    pub fn is_merged(&self) -> bool {
+        self.merged
     }
 
     pub fn jobs(&self) -> u64 {
@@ -405,7 +478,12 @@ impl StreamingRunMetrics {
     }
 
     /// P² response-time quantile estimates for p in {0.50, 0.95, 0.99}.
+    /// On a merged sink (see [`Self::merge_from`]) this falls back to the
+    /// ECDF inversion — P² marker states are not mergeable.
     pub fn rt_quantile_p2(&self, p: f64) -> f64 {
+        if self.merged {
+            return self.rt_ecdf.quantile(p);
+        }
         if (p - 0.50).abs() < 1e-12 {
             self.rt_p50.value()
         } else if (p - 0.95).abs() < 1e-12 {
@@ -636,6 +714,113 @@ mod tests {
         assert!((jain - 100.0 / 104.0).abs() < 1e-9);
         // Quantiles exact below 5 samples.
         assert!((sink.rt_quantile_p2(0.50) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stream_stats_merge_is_exact_and_handles_empty_sides() {
+        let mut a = StreamStats::default();
+        let mut b = StreamStats::default();
+        for x in [2.0, 9.0] {
+            a.observe(x);
+        }
+        for x in [1.0, 4.0, 6.0] {
+            b.observe(x);
+        }
+        let mut whole = StreamStats::default();
+        for x in [2.0, 9.0, 1.0, 4.0, 6.0] {
+            whole.observe(x);
+        }
+        let mut m = a.clone();
+        m.merge(&b);
+        assert_eq!(m.count, whole.count);
+        assert!((m.sum - whole.sum).abs() < 1e-12);
+        assert_eq!(m.min, whole.min);
+        assert_eq!(m.max, whole.max);
+        // Empty sides: empty←full copies, full←empty is a no-op.
+        let mut e = StreamStats::default();
+        e.merge(&a);
+        assert_eq!((e.count, e.min, e.max), (a.count, a.min, a.max));
+        let before = a.clone();
+        a.merge(&StreamStats::default());
+        assert_eq!((a.count, a.min, a.max), (before.count, before.min, before.max));
+    }
+
+    #[test]
+    fn ecdf_merge_equals_union_stream() {
+        let xs = gtrace_mixture(4_000, 11);
+        let (left, right) = xs.split_at(1_500);
+        let mut a = StreamingEcdf::response_times();
+        let mut b = StreamingEcdf::response_times();
+        let mut whole = StreamingEcdf::response_times();
+        for &x in left {
+            a.observe(x);
+            whole.observe(x);
+        }
+        for &x in right {
+            b.observe(x);
+            whole.observe(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.total(), whole.total());
+        for p in [0.1, 0.5, 0.95, 0.99] {
+            assert_eq!(a.quantile(p).to_bits(), whole.quantile(p).to_bits());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "different windows")]
+    fn ecdf_merge_rejects_mismatched_windows() {
+        let mut a = StreamingEcdf::new(1.0, 10.0, 8);
+        let b = StreamingEcdf::new(1.0, 100.0, 8);
+        a.merge(&b);
+    }
+
+    #[test]
+    fn merged_sink_matches_single_sink_exactly() {
+        // Split a synthetic completion stream across two shard-local
+        // sinks, merge, and compare against one sink fed everything: the
+        // mergeable aggregates must agree exactly, and P² queries on the
+        // merged sink must answer from the (exactly merged) ECDF.
+        let idle: HashMap<Arc<str>, f64> = [(Arc::from("t"), 2.0)].into_iter().collect();
+        let mut one = StreamingRunMetrics::new("X", idle.clone());
+        let mut sa = StreamingRunMetrics::new("X", idle.clone());
+        let mut sb = StreamingRunMetrics::new("X", idle);
+        let mut rng = Rng::new(3);
+        for i in 0..600u64 {
+            let c = CompletedJob {
+                job: i + 1,
+                user: (i % 7) as u32 + 1,
+                name: Arc::from("t"),
+                submit: 0,
+                finish: crate::s_to_us(rng.lognormal(1.0, 0.8)),
+                slot_time: 1.0,
+            };
+            one.job_completed(c.clone());
+            if i % 2 == 0 {
+                sa.job_completed(c);
+            } else {
+                sb.job_completed(c);
+            }
+        }
+        sa.merge_from(&sb);
+        assert!(sa.is_merged());
+        assert_eq!(sa.jobs(), one.jobs());
+        assert!((sa.mean_rt() - one.mean_rt()).abs() < 1e-12);
+        assert!((sa.mean_slowdown() - one.mean_slowdown()).abs() < 1e-12);
+        assert_eq!(sa.users(), one.users());
+        for u in one.users() {
+            assert_eq!(sa.user(u).unwrap().jobs, one.user(u).unwrap().jobs);
+            assert!((sa.user(u).unwrap().mean_rt() - one.user(u).unwrap().mean_rt()).abs() < 1e-12);
+        }
+        assert!((sa.jain_index_user_rt() - one.jain_index_user_rt()).abs() < 1e-12);
+        for p in [0.50, 0.95, 0.99] {
+            assert_eq!(
+                sa.rt_quantile_ecdf(p).to_bits(),
+                one.rt_quantile_ecdf(p).to_bits()
+            );
+            // Merged P² answers from the ECDF.
+            assert_eq!(sa.rt_quantile_p2(p).to_bits(), one.rt_quantile_ecdf(p).to_bits());
+        }
     }
 
     #[test]

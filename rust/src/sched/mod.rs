@@ -185,6 +185,15 @@ pub trait Policy: Send {
     fn job_deadline(&self, _job: JobId) -> Option<f64> {
         None
     }
+
+    /// Mutable access to the policy's 2-level virtual system, when it
+    /// has one (UWFQ). The sharded engine re-couples each shard's
+    /// `v_global`/`r_total` to the population-wide reference at sync
+    /// barriers through this hook; policies without virtual-time state
+    /// return `None` and shards run fully decoupled.
+    fn vtime_mut(&mut self) -> Option<&mut vtime::TwoLevelVtime> {
+        None
+    }
 }
 
 /// Select the view minimizing `key` among views with pending work —

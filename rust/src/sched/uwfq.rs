@@ -172,6 +172,10 @@ impl Policy for Uwfq {
     fn job_deadline(&self, job: JobId) -> Option<f64> {
         self.vt.job_deadline(job)
     }
+
+    fn vtime_mut(&mut self) -> Option<&mut TwoLevelVtime> {
+        Some(&mut self.vt)
+    }
 }
 
 #[cfg(test)]

@@ -426,6 +426,52 @@ impl TwoLevelVtime {
     pub fn active_jobs(&self) -> usize {
         self.users.values().map(|u| u.jobs.len()).sum()
     }
+
+    // -----------------------------------------------------------------
+    // Federated sharding (sync-barrier protocol)
+    // -----------------------------------------------------------------
+
+    /// Advance the virtual system to the sync-barrier instant `t_bar_s`
+    /// and report `(active_users, v_global)` — one shard's contribution
+    /// to the population-wide reference. Safe to call at any instant the
+    /// driver has fully processed (it is Algorithm 2, the same update a
+    /// job arrival at `t_bar_s` would perform first).
+    pub fn sync_snapshot(&mut self, t_bar_s: f64) -> (usize, f64) {
+        self.update_virtual_time(t_bar_s);
+        (self.users.len(), self.v_global)
+    }
+
+    /// Re-couple this shard to the population at a sync barrier:
+    /// level-set `v_global` to the user-count-weighted population
+    /// reference `v_ref` and re-derive the shard's share of the cluster
+    /// rate (`r_total = R_cluster · n_shard / n_population`). Call only
+    /// right after [`TwoLevelVtime::sync_snapshot`] at the same barrier
+    /// instant, so every pending departure up to the barrier has been
+    /// applied under the *old* rate first.
+    ///
+    /// Level-setting every epoch is what bounds cross-shard drift
+    /// without accumulation: each epoch restarts from the common
+    /// `v_ref`, and within one epoch a shard advances `v_global` by at
+    /// most `r_total · epoch ≤ R_cluster · epoch` resource-seconds, so
+    /// the pre-sync spread never exceeds one epoch of service at the
+    /// cluster rate. Nothing downstream assumes `v_global` is monotone
+    /// across barriers: deadlines telescope from per-user state
+    /// (`v_arrival`/`d_global` chains), and `t_previous` is real-time
+    /// based and untouched.
+    ///
+    /// A shard with no active users keeps its previous `r_total` (any
+    /// positive rate ≤ R_cluster preserves the bound; the rate only
+    /// matters again once a user arrives, and the next barrier re-derives
+    /// it).
+    pub fn recouple(&mut self, v_ref: f64, r_cluster: f64, n_shard: usize, n_population: usize) {
+        debug_assert!(r_cluster > 0.0 && n_population > 0);
+        self.v_global = v_ref;
+        if n_shard > 0 {
+            let r = r_cluster * n_shard as f64 / n_population as f64;
+            assert!(r > 0.0, "recoupled rate must stay positive");
+            self.r_total = r;
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -640,6 +686,56 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn sync_snapshot_matches_plain_update() {
+        // The barrier snapshot is Algorithm 2 verbatim: same v_global and
+        // user count as calling update_virtual_time directly.
+        let mut a = TwoLevelVtime::new(4.0);
+        let mut b = TwoLevelVtime::new(4.0);
+        for vt in [&mut a, &mut b] {
+            vt.job_arrival(0.0, 1, 1, 8.0, 1.0, 0.0);
+            vt.job_arrival(0.5, 2, 2, 3.0, 1.0, 0.0);
+        }
+        let (n, v) = a.sync_snapshot(1.25);
+        b.update_virtual_time(1.25);
+        assert_eq!(n, b.active_users());
+        assert_eq!(v.to_bits(), b.v_global.to_bits());
+    }
+
+    #[test]
+    fn recouple_levels_vglobal_and_rescales_rate() {
+        let mut vt = TwoLevelVtime::new(8.0);
+        vt.job_arrival(0.0, 1, 1, 4.0, 1.0, 0.0);
+        vt.job_arrival(0.0, 2, 2, 4.0, 1.0, 0.0);
+        let (n, _v) = vt.sync_snapshot(0.5);
+        assert_eq!(n, 2);
+        // Population of 8 users across all shards, cluster rate 16: this
+        // shard's share is 16·2/8 = 4.
+        vt.recouple(3.0, 16.0, n, 8);
+        assert_eq!(vt.v_global.to_bits(), 3.0f64.to_bits());
+        assert!(close(vt.r_total, 4.0));
+        // Deadline assignment keeps working after a backward level-set: a
+        // fresh user anchors at the recoupled v_global.
+        let d = vt.job_arrival(0.5, 3, 3, 2.0, 1.0, 0.0);
+        assert!(d >= 3.0, "deadline telescopes from recoupled v_ref: {d}");
+    }
+
+    #[test]
+    fn recouple_empty_shard_keeps_positive_rate() {
+        let mut vt = TwoLevelVtime::new(4.0);
+        vt.job_arrival(0.0, 1, 1, 0.5, 1.0, 0.0);
+        // By t=1 the user has left the virtual system.
+        let (n, _v) = vt.sync_snapshot(1.0);
+        assert_eq!(n, 0);
+        vt.recouple(7.0, 16.0, n, 5);
+        assert_eq!(vt.v_global.to_bits(), 7.0f64.to_bits());
+        assert!(vt.r_total > 0.0, "empty shard keeps its previous rate");
+        assert!(close(vt.r_total, 4.0));
+        // And it can admit users again afterwards.
+        let d = vt.job_arrival(1.5, 9, 9, 1.0, 1.0, 0.0);
+        assert!(d > 7.0);
     }
 
     #[test]

@@ -45,9 +45,11 @@ use crate::TimeUs;
 
 pub mod calendar;
 pub mod event;
+pub mod shard;
 
 pub use calendar::{CalendarQueue, EventBackend, EventQ};
 pub use event::Ev;
+pub use shard::{run_sharded, shard_cores, shard_of, ShardRun, ShardSummary, SyncStats};
 use event::{KIND_CRASH, KIND_RECOVER, KIND_RETRY, KIND_SPEC, KIND_TASK};
 
 /// Event-core configuration for one simulation run.
@@ -205,6 +207,10 @@ pub struct StreamSummary {
     pub peak_in_flight_jobs: usize,
     pub makespan_s: f64,
     pub utilization: f64,
+    /// Total core-busy µs (goodput + waste) — the utilization numerator,
+    /// carried so merged multi-shard summaries can recompute utilization
+    /// exactly instead of un-dividing a float.
+    pub busy_core_us: u128,
     /// Fault-injection counters and the goodput-vs-waste ledger (all
     /// zeros on a fault-free run).
     pub fault: FaultStats,
@@ -295,203 +301,314 @@ fn offer(
 /// pending.
 pub fn simulate_stream_into_opts<S: JobStream, K: CompletionSink>(
     core: &mut SchedCore,
-    mut stream: S,
+    stream: S,
     sink: &mut K,
     opts: SimOpts,
 ) -> StreamSummary {
-    let label = core.cfg.label();
-    let mut q = EventQ::new(opts.backend);
-    let mut launches: Vec<Launch> = Vec::new();
-    let mut next_arrival_spec = stream.next_job();
+    let mut sim = StreamSim::new(core, stream, sink, opts);
+    let done = sim.run_until(TimeUs::MAX);
+    debug_assert!(done, "run_until(MAX) cannot pause");
+    sim.finish()
+}
 
-    let mut now: TimeUs = 0;
-    let mut task_events: u64 = 0;
-    let mut work_events: u64 = 0;
-    let mut jobs_completed: u64 = 0;
-    let mut peak_in_flight: usize = 0;
-    let mut max_finish: TimeUs = 0;
+/// A resumable streaming simulation: the one true event loop, pausable at
+/// a virtual-time horizon. [`simulate_stream_into_opts`] is exactly
+/// `new` → `run_until(TimeUs::MAX)` → `finish`; the sharded engine
+/// ([`shard::run_sharded`]) drives the same loop epoch-by-epoch with a
+/// sync barrier between `run_until` calls — one loop, so the sharded and
+/// unsharded paths cannot drift.
+///
+/// Pausing is schedule-neutral: the driver stops *before* consuming the
+/// first event or arrival past the horizon, so every state transition
+/// happens at the same instant, in the same order, as an uninterrupted
+/// run. A batch whose deferred offer is still pending at the horizon is
+/// discharged at its own timestamp first (exactly what an event past the
+/// horizon would have forced), then the pause decision is re-evaluated —
+/// the discharge may schedule completions inside the horizon.
+pub struct StreamSim<'a, S, K> {
+    core: &'a mut SchedCore,
+    stream: S,
+    sink: &'a mut K,
+    label: String,
+    q: EventQ,
+    launches: Vec<Launch>,
+    next_arrival_spec: Option<JobSpec>,
+    now: TimeUs,
+    task_events: u64,
+    work_events: u64,
+    jobs_completed: u64,
+    peak_in_flight: usize,
+    max_finish: TimeUs,
+    batch_offers: bool,
+    offer_pending: bool,
+}
 
-    core.set_batching(opts.batch);
-    // Offer merging is only schedule-preserving when selection keys are
-    // static (FIFO/CFQ/UWFQ); dynamic-key policies (Fair/UJF) get
-    // coalesced notifications but per-event offers.
-    let batch_offers = opts.batch && core.policy.static_keys();
-    // One deferred post-batch offer: armed by a plain same-t finish,
-    // discharged before time advances or any non-plain event applies.
-    let mut offer_pending = false;
+impl<'a, S: JobStream, K: CompletionSink> StreamSim<'a, S, K> {
+    pub fn new(core: &'a mut SchedCore, mut stream: S, sink: &'a mut K, opts: SimOpts) -> Self {
+        let label = core.cfg.label();
+        let mut q = EventQ::new(opts.backend);
+        let next_arrival_spec = stream.next_job();
 
-    // Arm the crash clock of every core from the plan's per-core gap
-    // sequence (no-op unless `fault.crash_mttf_s > 0`).
-    if core.faults_enabled() {
-        for c in 0..core.cfg.cores as usize {
-            if let Some(gap) = core.next_crash_gap_us(c) {
-                q.push(Ev::crash(gap, c as u64));
+        core.set_batching(opts.batch);
+        // Offer merging is only schedule-preserving when selection keys
+        // are static (FIFO/CFQ/UWFQ); dynamic-key policies (Fair/UJF) get
+        // coalesced notifications but per-event offers.
+        let batch_offers = opts.batch && core.policy.static_keys();
+
+        // Arm the crash clock of every core from the plan's per-core gap
+        // sequence (no-op unless `fault.crash_mttf_s > 0`).
+        if core.faults_enabled() {
+            for c in 0..core.cfg.cores as usize {
+                if let Some(gap) = core.next_crash_gap_us(c) {
+                    q.push(Ev::crash(gap, c as u64));
+                }
             }
         }
-    }
-    loop {
-        if next_arrival_spec.is_none() && work_events == 0 && core.is_idle() {
-            // A pending offer implies an incomplete stage, which keeps
-            // the engine non-idle — this break never strands a batch.
-            debug_assert!(!offer_pending);
-            break; // only recurring crash/recover events remain — done
+        StreamSim {
+            core,
+            stream,
+            sink,
+            label,
+            q,
+            launches: Vec::new(),
+            next_arrival_spec,
+            now: 0,
+            task_events: 0,
+            work_events: 0,
+            jobs_completed: 0,
+            peak_in_flight: 0,
+            max_finish: 0,
+            batch_offers,
+            offer_pending: false,
         }
-        let next_done = q.peek_t();
-        let next_arrival = next_arrival_spec.as_ref().map(|j| j.arrival);
-        let take_done = match (next_done, next_arrival) {
-            (None, None) => {
-                if offer_pending {
-                    // Queue ran dry mid-batch (e.g. the batch freed the
-                    // only busy cores): discharge and re-evaluate.
-                    offer(core, &mut q, &mut launches, now, &mut work_events);
-                    offer_pending = false;
+    }
+
+    /// Advance until the simulation completes (`true`) or the next event
+    /// or arrival lies strictly past `limit` (`false` — paused, resumable
+    /// with a later horizon). `run_until(TimeUs::MAX)` never pauses.
+    pub fn run_until(&mut self, limit: TimeUs) -> bool {
+        loop {
+            if self.next_arrival_spec.is_none() && self.work_events == 0 && self.core.is_idle() {
+                // A pending offer implies an incomplete stage, which keeps
+                // the engine non-idle — this break never strands a batch.
+                debug_assert!(!self.offer_pending);
+                return true; // only recurring crash/recover events remain
+            }
+            let next_done = self.q.peek_t();
+            let next_arrival = self.next_arrival_spec.as_ref().map(|j| j.arrival);
+            let take_done = match (next_done, next_arrival) {
+                (None, None) => {
+                    if self.offer_pending {
+                        // Queue ran dry mid-batch (e.g. the batch freed
+                        // the only busy cores): discharge and re-evaluate.
+                        self.discharge_offer();
+                        continue;
+                    }
+                    return true;
+                }
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (Some(d), Some(a)) => d <= a, // queue events first at ties
+            };
+            let next_t = if take_done {
+                next_done.expect("take_done implies a queued event")
+            } else {
+                next_arrival.expect("!take_done implies an arrival")
+            };
+            if next_t > limit {
+                if self.offer_pending {
+                    // Same boundary rule as a past-horizon event: the
+                    // batch discharges at its own timestamp, possibly
+                    // scheduling work inside the horizon — re-evaluate.
+                    self.discharge_offer();
                     continue;
                 }
-                break;
+                return false; // paused at the horizon
             }
-            (Some(_), None) => true,
-            (None, Some(_)) => false,
-            (Some(d), Some(a)) => d <= a, // queue events first at ties
-        };
-        if take_done {
-            let ev = q.pop().expect("peeked event");
-            debug_assert!(ev.t >= now, "event time regressed");
-            if offer_pending && (ev.t != now || ev.kind != KIND_TASK) {
-                // Batch boundary: discharge at the batch's timestamp,
-                // before the clock moves or a non-plain event applies.
-                offer(core, &mut q, &mut launches, now, &mut work_events);
-                offer_pending = false;
+            if take_done {
+                self.step_event();
+            } else {
+                self.step_arrival();
             }
-            now = ev.t;
-            match ev.kind {
-                KIND_TASK => {
-                    work_events -= 1;
-                    // Completions of killed/crashed attempts are stale
-                    // (the launch seq no longer matches) and are dropped.
-                    if core.is_stale(ev.a as usize, ev.b) {
-                        // No state changed, so a deferred offer stays
-                        // deferred: the per-event path's post-stale
-                        // offer launches nothing.
-                    } else if batch_offers
-                        && matches!(
-                            core.classify_task_event(ev.a as usize),
-                            TaskEventClass::Plain
-                        )
-                    {
-                        // Plain same-t finish: apply now, notify and
-                        // offer once at the batch boundary.
-                        task_events += 1;
-                        if let TaskEvent::Failed { .. } = core.task_event(now, ev.a as usize) {
-                            unreachable!("plain-classified task event failed");
-                        }
-                        offer_pending = true;
-                    } else {
-                        if offer_pending {
-                            // A fail/boundary finish interrupts the
-                            // batch: discharge first, apply after.
-                            offer(core, &mut q, &mut launches, now, &mut work_events);
-                            offer_pending = false;
-                        }
-                        task_events += 1;
-                        if let TaskEvent::Failed { stage, task, retry_at } =
-                            core.task_event(now, ev.a as usize)
-                        {
-                            q.push(Ev::retry(retry_at, stage, task as u64));
-                            work_events += 1;
-                        }
-                        if core.can_launch() {
-                            offer(core, &mut q, &mut launches, now, &mut work_events);
-                        }
-                    }
+            // Drain finished jobs immediately: the engine never
+            // accumulates per-job completion state on the streaming path.
+            if !self.core.completed.is_empty() {
+                for c in self.core.completed.drain(..) {
+                    self.max_finish = self.max_finish.max(c.finish);
+                    self.jobs_completed += 1;
+                    self.sink.job_completed(c);
                 }
-                KIND_RETRY => {
-                    work_events -= 1;
-                    core.retry_ready(now, ev.a, ev.b as u32);
-                    if core.can_launch() {
-                        offer(core, &mut q, &mut launches, now, &mut work_events);
-                    }
-                }
-                KIND_SPEC => {
-                    work_events -= 1;
-                    if let Some((fin, c2, seq)) = core.spec_wake(now, ev.a as usize, ev.b) {
-                        q.push(Ev::task(fin, c2 as u64, seq));
-                        work_events += 1;
-                    }
-                    if core.can_launch() {
-                        offer(core, &mut q, &mut launches, now, &mut work_events);
-                    }
-                }
-                KIND_RECOVER => {
-                    core.recover(now, ev.a as usize);
-                    if core.can_launch() {
-                        offer(core, &mut q, &mut launches, now, &mut work_events);
-                    }
-                }
-                KIND_CRASH => {
-                    core.crash(now, ev.a as usize);
-                    let recover_at = now + core.recover_delay_us();
-                    q.push(Ev::recover(recover_at, ev.a));
-                    // Next crash only after the core is back in service.
-                    if let Some(gap) = core.next_crash_gap_us(ev.a as usize) {
-                        q.push(Ev::crash(recover_at + gap, ev.a));
-                    }
-                    if core.can_launch() {
-                        offer(core, &mut q, &mut launches, now, &mut work_events);
-                    }
-                }
-                _ => unreachable!("unknown event kind"),
-            }
-        } else {
-            // Specs are moved (not cloned) into the engine on arrival.
-            let spec = next_arrival_spec.take().expect("peeked arrival");
-            debug_assert!(spec.arrival >= now, "stream arrivals regressed");
-            if offer_pending {
-                // Per-event mode offers before the arrival submits:
-                // discharge the batch at its own timestamp first.
-                offer(core, &mut q, &mut launches, now, &mut work_events);
-                offer_pending = false;
-            }
-            now = spec.arrival;
-            core.submit_job(now, spec)
-                .expect("workload produced invalid job");
-            next_arrival_spec = stream.next_job();
-            peak_in_flight = peak_in_flight.max(core.in_flight_jobs());
-            if core.can_launch() {
-                offer(core, &mut q, &mut launches, now, &mut work_events);
-            }
-        }
-        // Drain finished jobs immediately: the engine never accumulates
-        // per-job completion state on the streaming path.
-        if !core.completed.is_empty() {
-            for c in core.completed.drain(..) {
-                max_finish = max_finish.max(c.finish);
-                jobs_completed += 1;
-                sink.job_completed(c);
             }
         }
     }
-    core.set_batching(false);
-    assert!(core.is_idle(), "simulation ended with stranded work");
 
-    let makespan_s = crate::us_to_s(max_finish);
-    let cores = core.cfg.cores as f64;
-    let utilization = if makespan_s > 0.0 {
-        // Engine-side ledger (goodput + waste): re-execution, killed
-        // clones and crash-lost attempts all count the core-time they
-        // actually consumed. Fault-free runs reduce to the historical
-        // sum of launch runtimes, bit-for-bit.
-        core.busy_core_us() as f64 / 1e6 / (cores * makespan_s)
-    } else {
-        0.0
-    };
-    StreamSummary {
-        label,
-        jobs_completed,
-        task_events,
-        peak_in_flight_jobs: peak_in_flight,
-        makespan_s,
-        utilization,
-        fault: core.fault_stats.clone(),
+    /// Discharge the deferred batch offer at the batch's own timestamp.
+    fn discharge_offer(&mut self) {
+        offer(
+            self.core,
+            &mut self.q,
+            &mut self.launches,
+            self.now,
+            &mut self.work_events,
+        );
+        self.offer_pending = false;
+    }
+
+    /// Apply the earliest queued event (completion/retry/spec/crash/
+    /// recover) — the `take_done` arm of the loop.
+    fn step_event(&mut self) {
+        let core = &mut *self.core;
+        let q = &mut self.q;
+        let ev = q.pop().expect("peeked event");
+        debug_assert!(ev.t >= self.now, "event time regressed");
+        if self.offer_pending && (ev.t != self.now || ev.kind != KIND_TASK) {
+            // Batch boundary: discharge at the batch's timestamp,
+            // before the clock moves or a non-plain event applies.
+            offer(core, q, &mut self.launches, self.now, &mut self.work_events);
+            self.offer_pending = false;
+        }
+        self.now = ev.t;
+        let now = self.now;
+        match ev.kind {
+            KIND_TASK => {
+                self.work_events -= 1;
+                // Completions of killed/crashed attempts are stale
+                // (the launch seq no longer matches) and are dropped.
+                if core.is_stale(ev.a as usize, ev.b) {
+                    // No state changed, so a deferred offer stays
+                    // deferred: the per-event path's post-stale
+                    // offer launches nothing.
+                } else if self.batch_offers
+                    && matches!(core.classify_task_event(ev.a as usize), TaskEventClass::Plain)
+                {
+                    // Plain same-t finish: apply now, notify and
+                    // offer once at the batch boundary.
+                    self.task_events += 1;
+                    if let TaskEvent::Failed { .. } = core.task_event(now, ev.a as usize) {
+                        unreachable!("plain-classified task event failed");
+                    }
+                    self.offer_pending = true;
+                } else {
+                    if self.offer_pending {
+                        // A fail/boundary finish interrupts the
+                        // batch: discharge first, apply after.
+                        offer(core, q, &mut self.launches, now, &mut self.work_events);
+                        self.offer_pending = false;
+                    }
+                    self.task_events += 1;
+                    if let TaskEvent::Failed { stage, task, retry_at } =
+                        core.task_event(now, ev.a as usize)
+                    {
+                        q.push(Ev::retry(retry_at, stage, task as u64));
+                        self.work_events += 1;
+                    }
+                    if core.can_launch() {
+                        offer(core, q, &mut self.launches, now, &mut self.work_events);
+                    }
+                }
+            }
+            KIND_RETRY => {
+                self.work_events -= 1;
+                core.retry_ready(now, ev.a, ev.b as u32);
+                if core.can_launch() {
+                    offer(core, q, &mut self.launches, now, &mut self.work_events);
+                }
+            }
+            KIND_SPEC => {
+                self.work_events -= 1;
+                if let Some((fin, c2, seq)) = core.spec_wake(now, ev.a as usize, ev.b) {
+                    q.push(Ev::task(fin, c2 as u64, seq));
+                    self.work_events += 1;
+                }
+                if core.can_launch() {
+                    offer(core, q, &mut self.launches, now, &mut self.work_events);
+                }
+            }
+            KIND_RECOVER => {
+                core.recover(now, ev.a as usize);
+                if core.can_launch() {
+                    offer(core, q, &mut self.launches, now, &mut self.work_events);
+                }
+            }
+            KIND_CRASH => {
+                core.crash(now, ev.a as usize);
+                let recover_at = now + core.recover_delay_us();
+                q.push(Ev::recover(recover_at, ev.a));
+                // Next crash only after the core is back in service.
+                if let Some(gap) = core.next_crash_gap_us(ev.a as usize) {
+                    q.push(Ev::crash(recover_at + gap, ev.a));
+                }
+                if core.can_launch() {
+                    offer(core, q, &mut self.launches, now, &mut self.work_events);
+                }
+            }
+            _ => unreachable!("unknown event kind"),
+        }
+    }
+
+    /// Submit the next stream arrival — the `!take_done` arm of the loop.
+    fn step_arrival(&mut self) {
+        let core = &mut *self.core;
+        // Specs are moved (not cloned) into the engine on arrival.
+        let spec = self.next_arrival_spec.take().expect("peeked arrival");
+        debug_assert!(spec.arrival >= self.now, "stream arrivals regressed");
+        if self.offer_pending {
+            // Per-event mode offers before the arrival submits:
+            // discharge the batch at its own timestamp first.
+            offer(core, &mut self.q, &mut self.launches, self.now, &mut self.work_events);
+            self.offer_pending = false;
+        }
+        self.now = spec.arrival;
+        core.submit_job(self.now, spec)
+            .expect("workload produced invalid job");
+        self.next_arrival_spec = self.stream.next_job();
+        self.peak_in_flight = self.peak_in_flight.max(core.in_flight_jobs());
+        if core.can_launch() {
+            offer(core, &mut self.q, &mut self.launches, self.now, &mut self.work_events);
+        }
+    }
+
+    /// Current simulated instant (last processed event/arrival time).
+    pub fn now(&self) -> TimeUs {
+        self.now
+    }
+
+    /// The driven engine — the sharded runner re-couples the policy's
+    /// virtual time through this at sync barriers, *between* `run_until`
+    /// calls. Mutating scheduling state mid-epoch voids the schedule
+    /// contract.
+    pub fn core_mut(&mut self) -> &mut SchedCore {
+        self.core
+    }
+
+    /// Finalize a completed run into its summary. Panics if work is still
+    /// pending — call only after `run_until` returned `true`.
+    pub fn finish(self) -> StreamSummary {
+        self.core.set_batching(false);
+        assert!(self.core.is_idle(), "simulation ended with stranded work");
+
+        let makespan_s = crate::us_to_s(self.max_finish);
+        let cores = self.core.cfg.cores as f64;
+        let busy_core_us = self.core.busy_core_us();
+        let utilization = if makespan_s > 0.0 {
+            // Engine-side ledger (goodput + waste): re-execution, killed
+            // clones and crash-lost attempts all count the core-time they
+            // actually consumed. Fault-free runs reduce to the historical
+            // sum of launch runtimes, bit-for-bit.
+            busy_core_us as f64 / 1e6 / (cores * makespan_s)
+        } else {
+            0.0
+        };
+        StreamSummary {
+            label: self.label,
+            jobs_completed: self.jobs_completed,
+            task_events: self.task_events,
+            peak_in_flight_jobs: self.peak_in_flight,
+            makespan_s,
+            utilization,
+            busy_core_us,
+            fault: self.core.fault_stats.clone(),
+        }
     }
 }
 
@@ -617,9 +734,37 @@ fn idle_key(cfg: &Config, job: &JobSpec) -> IdleKey {
     IdleKey(k)
 }
 
-static IDLE_CACHE: OnceLock<Mutex<HashMap<IdleKey, f64>>> = OnceLock::new();
+/// Hash-sharded segments of the idle-response memo: parallel shards (and
+/// sweep workers) distribute across `IDLE_SEGMENTS` independent mutexes
+/// instead of serializing on one process-wide lock. Keys land in a
+/// segment by their own hash, so a key always maps to the same segment.
+const IDLE_SEGMENTS: usize = 16;
+
+static IDLE_CACHE: OnceLock<[Mutex<HashMap<IdleKey, f64>>; IDLE_SEGMENTS]> = OnceLock::new();
 static IDLE_HITS: AtomicU64 = AtomicU64::new(0);
 static IDLE_MISSES: AtomicU64 = AtomicU64::new(0);
+static IDLE_CONTENDED: AtomicU64 = AtomicU64::new(0);
+
+fn idle_segment(key: &IdleKey) -> &'static Mutex<HashMap<IdleKey, f64>> {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    key.hash(&mut h);
+    let cache = IDLE_CACHE.get_or_init(Default::default);
+    &cache[h.finish() as usize % IDLE_SEGMENTS]
+}
+
+/// Lock a segment, counting contended acquisitions (another thread held
+/// the lock at the instant we asked — the metric the segment count is
+/// meant to drive toward zero).
+fn idle_lock(
+    seg: &'static Mutex<HashMap<IdleKey, f64>>,
+) -> std::sync::MutexGuard<'static, HashMap<IdleKey, f64>> {
+    if let Ok(g) = seg.try_lock() {
+        return g;
+    }
+    IDLE_CONTENDED.fetch_add(1, Ordering::Relaxed);
+    seg.lock().unwrap()
+}
 
 fn idle_rt_memo(
     cfg: &Config,
@@ -640,8 +785,8 @@ fn idle_rt_memo(
         cfg
     };
     let key = idle_key(cfg, job);
-    let cache = IDLE_CACHE.get_or_init(Default::default);
-    if let Some(&rt) = cache.lock().unwrap().get(&key) {
+    let seg = idle_segment(&key);
+    if let Some(&rt) = idle_lock(seg).get(&key) {
         IDLE_HITS.fetch_add(1, Ordering::Relaxed);
         return rt;
     }
@@ -652,16 +797,18 @@ fn idle_rt_memo(
     let mut j = job.clone();
     j.arrival = 0;
     let rt = run(cfg, j);
-    cache.lock().unwrap().insert(key, rt);
+    idle_lock(seg).insert(key, rt);
     rt
 }
 
-/// (hits, misses) of the idle-response memo cache — observability for the
-/// memoization test and the sweep report.
-pub fn idle_cache_stats() -> (u64, u64) {
+/// (hits, misses, contended lock acquisitions) of the idle-response memo
+/// cache — observability for the memoization test, the sweep report and
+/// the sharded engine's contention check.
+pub fn idle_cache_stats() -> (u64, u64, u64) {
     (
         IDLE_HITS.load(Ordering::Relaxed),
         IDLE_MISSES.load(Ordering::Relaxed),
+        IDLE_CONTENDED.load(Ordering::Relaxed),
     )
 }
 
@@ -867,9 +1014,9 @@ mod tests {
         let ja = JobSpec::three_phase(1, "memo-a", 0, 0.734_621, 48 << 20, 4, None);
         let jb = JobSpec::three_phase(9, "memo-b", 5_000_000, 0.734_621, 48 << 20, 4, None);
         let rt_a = idle_response_time(&c, &ja);
-        let (hits0, _) = idle_cache_stats();
+        let (hits0, _, _) = idle_cache_stats();
         let rt_b = idle_response_time(&c, &jb);
-        let (hits1, _) = idle_cache_stats();
+        let (hits1, _, _) = idle_cache_stats();
         assert_eq!(rt_a, rt_b, "same shape must give bit-identical idle RT");
         assert!(hits1 > hits0, "second lookup of the shape must hit the cache");
         // A different shape misses and yields a different time.
@@ -894,9 +1041,9 @@ mod tests {
             );
         }
         // And the cached lookup under another policy is a shared hit.
-        let (hits2, _) = idle_cache_stats();
+        let (hits2, _, _) = idle_cache_stats();
         assert_eq!(idle_response_time(&cfg(4, PolicyKind::Fair), &ja), rt_a);
-        let (hits3, _) = idle_cache_stats();
+        let (hits3, _, _) = idle_cache_stats();
         assert!(hits3 > hits2, "chain shapes must share across policies");
     }
 

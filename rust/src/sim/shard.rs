@@ -1,0 +1,433 @@
+//! Sharded million-user engine — federated virtual time (the intra-run
+//! parallelism the sweep engine cannot provide).
+//!
+//! One simulated cluster is split into `S` shards: users are partitioned
+//! hash-stably ([`shard_of`]) and each shard runs its **own**
+//! [`SchedCore`] + event queue over a dedicated core subset
+//! ([`shard_cores`]: `cores/S`, deterministic remainder to the lowest
+//! shard indices), advancing in parallel under `std::thread::scope`.
+//! Cross-shard fairness is kept coupled by a periodic global
+//! virtual-time sync barrier: every `shard_epoch_s` of *simulated* time,
+//! all shards pause ([`StreamSim::run_until`]), publish their
+//! `TwoLevelVtime` state, and re-couple to the population —
+//!
+//! * level: `v_global := v_ref = Σ n_s·v_s / Σ n_s` (user-count-weighted
+//!   population mean), and
+//! * rate: `r_total := R_cluster · n_s / Σ n_s` (each shard progresses
+//!   at the cluster rate scaled by its live-user share).
+//!
+//! Level-setting every epoch is what makes the drift bound *provable and
+//! non-accumulating*: each epoch restarts from the common `v_ref`, and
+//! within one epoch a shard advances `v_global` by at most
+//! `r_total · epoch ≤ R_cluster · epoch`, so the pre-sync spread — the
+//! per-user normalized-service gap between any two shards — never
+//! exceeds **one sync epoch of service at the cluster rate**
+//! (`SyncStats::bound_rsec = cores × shard_epoch_s`; the engine reports
+//! the observed `max_drift_rsec` and `tests/shard.rs` enforces the
+//! bound on randomized registry specs).
+//!
+//! `S = 1` skips barriers and recoupling entirely and is byte-identical
+//! to the unsharded engine by construction — it is the same
+//! [`StreamSim`] driver, run uninterrupted. `S > 1` is deterministic
+//! (repeat-identical) but *not* equal to the unsharded schedule: shards
+//! serve disjoint user sets on disjoint cores, arrival sequence numbers
+//! (and therefore fault plans) are shard-local, and the virtual systems
+//! only re-couple at epoch granularity.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Barrier, Mutex};
+
+use crate::config::Config;
+use crate::core::SchedCore;
+use crate::fault::FaultStats;
+use crate::sim::{CompletionSink, SimOpts, StreamSim, StreamSummary};
+use crate::workload::stream::{JobStream, ShardStream};
+use crate::TimeUs;
+
+pub use crate::workload::stream::shard_of;
+
+/// Federated core allocation: `cores/S` per shard, the `cores % S`
+/// remainder going to the lowest shard indices — deterministic, and the
+/// subsets partition the cluster exactly. Panics unless
+/// `1 ≤ shards ≤ cores` (every shard needs at least one core).
+pub fn shard_cores(cores: u32, shards: u32) -> Vec<u32> {
+    assert!(shards >= 1, "shards must be >= 1");
+    assert!(
+        shards <= cores,
+        "shards ({shards}) exceed cores ({cores}): every shard needs a core"
+    );
+    let base = cores / shards;
+    let extra = cores % shards;
+    (0..shards).map(|s| base + u32::from(s < extra)).collect()
+}
+
+/// Sync-barrier telemetry of one sharded run.
+#[derive(Clone, Debug, Default)]
+pub struct SyncStats {
+    /// Barrier epochs executed (0 when `S = 1`).
+    pub epochs: u64,
+    /// Max observed pre-sync `|v_shard − v_ref|` over all epochs, in
+    /// resource-seconds of global virtual time.
+    pub max_drift_rsec: f64,
+    /// The provable ceiling: `cores × shard_epoch_s` — one epoch of
+    /// service at the cluster rate.
+    pub bound_rsec: f64,
+}
+
+/// One shard's outcome within a [`ShardRun`].
+#[derive(Clone, Debug)]
+pub struct ShardSummary {
+    pub shard: u32,
+    /// Cores dedicated to this shard ([`shard_cores`]).
+    pub cores: u32,
+    pub summary: StreamSummary,
+}
+
+/// Outcome of [`run_sharded`]: per-shard summaries and sinks plus the
+/// exact cluster-level merge.
+pub struct ShardRun<K> {
+    /// Merged summary. Counters sum exactly; `peak_in_flight_jobs` is
+    /// the **sum** of per-shard peaks (an upper bound on the true
+    /// cluster peak — see `peak_in_flight_max` for the max-of-peaks);
+    /// makespan is the max; utilization is recomputed exactly from the
+    /// summed busy-core ledger over `cores × max-makespan`; fault
+    /// ledgers merge with per-shard core-index offsets.
+    pub summary: StreamSummary,
+    /// Max of the per-shard peak-in-flight counters (each an exact peak
+    /// of its shard; the cross-shard sum can overcount coincidence).
+    pub peak_in_flight_max: usize,
+    pub per_shard: Vec<ShardSummary>,
+    /// Per-shard completion sinks, in shard order (users are disjoint
+    /// across shards, so per-user reductions merge without collisions).
+    pub sinks: Vec<K>,
+    pub sync: SyncStats,
+}
+
+/// Run `cfg` sharded `cfg.shards` ways. `make_stream(s)` must
+/// regenerate the **full** workload timeline (each shard filters it down
+/// to its own users with O(1) extra state — per-user arrival order is
+/// preserved verbatim); `make_sink(s)` builds each shard's completion
+/// sink. Shards run in parallel scoped threads and join in shard order,
+/// so the merge is deterministic regardless of thread scheduling.
+///
+/// Every shard publishes into lock-free slots and meets at a two-phase
+/// [`Barrier`] per epoch (publish → read/recouple → release); a shard
+/// that drains early keeps joining barriers with zero active users until
+/// all shards finish, so the population reference never blocks.
+pub fn run_sharded<S, K, FS, FK>(
+    cfg: &Config,
+    opts: SimOpts,
+    make_stream: FS,
+    make_sink: FK,
+) -> ShardRun<K>
+where
+    S: JobStream,
+    K: CompletionSink + Send,
+    FS: Fn(u32) -> S + Sync,
+    FK: Fn(u32) -> K + Sync,
+{
+    let shards = cfg.shards.max(1);
+    let cores_by_shard = shard_cores(cfg.cores, shards);
+    let epoch_us: TimeUs = crate::s_to_us(cfg.shard_epoch_s.max(1e-6));
+    let cluster_cores = cfg.cores as f64;
+
+    // Published per-shard state: (active users, v_global bits, done).
+    // Written before barrier A, read between A and B — the barrier
+    // pair is the synchronization; the atomics only make the slots
+    // shareable.
+    let n_act: Vec<AtomicUsize> = (0..shards).map(|_| AtomicUsize::new(0)).collect();
+    let v_bits: Vec<AtomicU64> = (0..shards).map(|_| AtomicU64::new(0)).collect();
+    let done_fl: Vec<AtomicBool> = (0..shards).map(|_| AtomicBool::new(false)).collect();
+    let barrier = Barrier::new(shards as usize);
+    let sync = Mutex::new(SyncStats {
+        epochs: 0,
+        max_drift_rsec: 0.0,
+        bound_rsec: cluster_cores * crate::us_to_s(epoch_us),
+    });
+
+    let mut results: Vec<(StreamSummary, K)> = Vec::with_capacity(shards as usize);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(shards as usize);
+        for s in 0..shards {
+            let mut shard_cfg = cfg.clone();
+            shard_cfg.cores = cores_by_shard[s as usize];
+            let (make_stream, make_sink) = (&make_stream, &make_sink);
+            let (n_act, v_bits, done_fl) = (&n_act, &v_bits, &done_fl);
+            let (barrier, sync) = (&barrier, &sync);
+            handles.push(scope.spawn(move || {
+                let mut core = SchedCore::from_config(shard_cfg);
+                let mut sink = make_sink(s);
+                let stream = ShardStream::new(make_stream(s), s, shards);
+                let mut sim = StreamSim::new(&mut core, stream, &mut sink, opts);
+                let summary = if shards == 1 {
+                    // Unsharded fast path: no barriers, no recoupling —
+                    // byte-identical to `simulate_stream_into_opts` by
+                    // construction (same driver, one uninterrupted run).
+                    let done = sim.run_until(TimeUs::MAX);
+                    debug_assert!(done, "run_until(MAX) cannot pause");
+                    sim.finish()
+                } else {
+                    let mut done = false;
+                    let mut epoch: u64 = 1;
+                    loop {
+                        let t_bar = epoch.saturating_mul(epoch_us);
+                        if !done {
+                            done = sim.run_until(t_bar);
+                        }
+                        let (n, v) = if done {
+                            // Drained shards stop contributing to the
+                            // population reference but keep joining
+                            // barriers until everyone is done.
+                            (0usize, 0.0f64)
+                        } else {
+                            match sim.core_mut().policy.vtime_mut() {
+                                Some(vt) => vt.sync_snapshot(crate::us_to_s(t_bar)),
+                                None => (0, 0.0), // no virtual time: decoupled
+                            }
+                        };
+                        n_act[s as usize].store(n, Ordering::Relaxed);
+                        v_bits[s as usize].store(v.to_bits(), Ordering::Relaxed);
+                        done_fl[s as usize].store(done, Ordering::Relaxed);
+                        barrier.wait(); // A: everyone published
+                        if done_fl.iter().all(|f| f.load(Ordering::Relaxed)) {
+                            // Flags were all written before barrier A, so
+                            // every shard takes this exit together.
+                            break sim.finish();
+                        }
+                        let mut n_total = 0usize;
+                        let mut acc = 0.0f64;
+                        for (na, vb) in n_act.iter().zip(v_bits.iter()) {
+                            let ni = na.load(Ordering::Relaxed);
+                            n_total += ni;
+                            acc += ni as f64 * f64::from_bits(vb.load(Ordering::Relaxed));
+                        }
+                        if n_total > 0 {
+                            // Each shard computes the identical v_ref from
+                            // the same published bits — no leader needed.
+                            let v_ref = acc / n_total as f64;
+                            if !done {
+                                if let Some(vt) = sim.core_mut().policy.vtime_mut() {
+                                    vt.recouple(v_ref, cluster_cores, n, n_total);
+                                }
+                            }
+                            if s == 0 {
+                                let mut drift = 0.0f64;
+                                for (na, vb) in n_act.iter().zip(v_bits.iter()) {
+                                    if na.load(Ordering::Relaxed) > 0 {
+                                        let vi = f64::from_bits(vb.load(Ordering::Relaxed));
+                                        drift = drift.max((vi - v_ref).abs());
+                                    }
+                                }
+                                let mut st = sync.lock().unwrap();
+                                st.max_drift_rsec = st.max_drift_rsec.max(drift);
+                            }
+                        }
+                        if s == 0 {
+                            sync.lock().unwrap().epochs += 1;
+                        }
+                        barrier.wait(); // B: recoupling visible, epoch advances
+                        epoch += 1;
+                    }
+                };
+                (summary, sink)
+            }));
+        }
+        for h in handles {
+            results.push(h.join().expect("shard thread panicked"));
+        }
+    });
+
+    // Deterministic shard-ordered merge. At S=1 every reduction is the
+    // identity (sum/max of one element; utilization re-derives from the
+    // same operands in the same order), so the merged summary is
+    // byte-identical to the unsharded one.
+    let mut per_shard = Vec::with_capacity(results.len());
+    let mut sinks = Vec::with_capacity(results.len());
+    let mut merged = StreamSummary {
+        label: String::new(),
+        jobs_completed: 0,
+        task_events: 0,
+        peak_in_flight_jobs: 0,
+        makespan_s: 0.0,
+        utilization: 0.0,
+        busy_core_us: 0,
+        fault: FaultStats::default(),
+    };
+    let mut peak_max = 0usize;
+    let mut core_offset = 0usize;
+    for (s, (summary, sink)) in results.into_iter().enumerate() {
+        if s == 0 {
+            merged.label = summary.label.clone();
+        }
+        merged.jobs_completed += summary.jobs_completed;
+        merged.task_events += summary.task_events;
+        merged.peak_in_flight_jobs += summary.peak_in_flight_jobs;
+        peak_max = peak_max.max(summary.peak_in_flight_jobs);
+        merged.makespan_s = merged.makespan_s.max(summary.makespan_s);
+        merged.busy_core_us += summary.busy_core_us;
+        merged.fault.merge(&summary.fault, core_offset);
+        core_offset += cores_by_shard[s] as usize;
+        per_shard.push(ShardSummary {
+            shard: s as u32,
+            cores: cores_by_shard[s],
+            summary,
+        });
+        sinks.push(sink);
+    }
+    merged.utilization = if merged.makespan_s > 0.0 {
+        merged.busy_core_us as f64 / 1e6 / (cluster_cores * merged.makespan_s)
+    } else {
+        0.0
+    };
+
+    ShardRun {
+        summary: merged,
+        peak_in_flight_max: peak_max,
+        per_shard,
+        sinks,
+        sync: sync.into_inner().unwrap(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::PolicyKind;
+    use crate::sim::CollectSink;
+    use crate::workload::stream::{scale_stream, ScaleParams};
+
+    fn base_cfg(policy: PolicyKind) -> Config {
+        Config {
+            cores: 8,
+            task_overhead: 0.0,
+            policy,
+            ..Config::default()
+        }
+    }
+
+    fn params() -> ScaleParams {
+        ScaleParams {
+            users: 40,
+            jobs: 600,
+            cores: 8,
+            target_utilization: 0.8,
+            seed: 17,
+        }
+    }
+
+    #[test]
+    fn shard_cores_partitions_exactly() {
+        assert_eq!(shard_cores(8, 1), vec![8]);
+        assert_eq!(shard_cores(8, 4), vec![2, 2, 2, 2]);
+        assert_eq!(shard_cores(10, 4), vec![3, 3, 2, 2]);
+        assert_eq!(shard_cores(7, 3), vec![3, 2, 2]);
+        for (cores, shards) in [(64u32, 5u32), (13, 13), (9, 2)] {
+            let v = shard_cores(cores, shards);
+            assert_eq!(v.iter().sum::<u32>(), cores);
+            assert!(v.iter().all(|&c| c >= 1));
+            // Deterministic remainder: earlier shards never smaller.
+            assert!(v.windows(2).all(|w| w[0] >= w[1]));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceed cores")]
+    fn shard_cores_rejects_more_shards_than_cores() {
+        shard_cores(4, 5);
+    }
+
+    #[test]
+    fn one_shard_run_matches_unsharded_byte_for_byte() {
+        let cfg = base_cfg(PolicyKind::Uwfq);
+        let mut core = SchedCore::from_config(cfg.clone());
+        let mut sink = CollectSink::default();
+        let want = crate::sim::simulate_stream_into_opts(
+            &mut core,
+            scale_stream(&params()),
+            &mut sink,
+            SimOpts::default(),
+        );
+        let run = run_sharded(
+            &cfg,
+            SimOpts::default(),
+            |_| scale_stream(&params()),
+            |_| CollectSink::default(),
+        );
+        assert_eq!(run.per_shard.len(), 1);
+        assert_eq!(run.sync.epochs, 0);
+        assert_eq!(run.summary.jobs_completed, want.jobs_completed);
+        assert_eq!(run.summary.task_events, want.task_events);
+        assert_eq!(run.summary.peak_in_flight_jobs, want.peak_in_flight_jobs);
+        assert_eq!(run.peak_in_flight_max, want.peak_in_flight_jobs);
+        assert_eq!(run.summary.makespan_s.to_bits(), want.makespan_s.to_bits());
+        assert_eq!(run.summary.utilization.to_bits(), want.utilization.to_bits());
+        assert_eq!(run.summary.busy_core_us, want.busy_core_us);
+        assert_eq!(run.summary.fault, want.fault);
+        let a: Vec<_> = run.sinks[0].completed.iter().map(|c| (c.job, c.finish)).collect();
+        let b: Vec<_> = sink.completed.iter().map(|c| (c.job, c.finish)).collect();
+        assert_eq!(a, b, "S=1 completion schedule must be byte-identical");
+    }
+
+    #[test]
+    fn four_shards_complete_everything_within_the_drift_bound() {
+        let mut cfg = base_cfg(PolicyKind::Uwfq);
+        cfg.shards = 4;
+        cfg.shard_epoch_s = 2.0;
+        let run = run_sharded(
+            &cfg,
+            SimOpts::default(),
+            |_| scale_stream(&params()),
+            |_| CollectSink::default(),
+        );
+        assert_eq!(run.per_shard.len(), 4);
+        assert_eq!(run.summary.jobs_completed, 600);
+        assert!(run.sync.epochs > 0, "multi-epoch run must sync");
+        assert!(
+            run.sync.max_drift_rsec <= run.sync.bound_rsec + 1e-9,
+            "drift {} exceeds bound {}",
+            run.sync.max_drift_rsec,
+            run.sync.bound_rsec
+        );
+        // Users are disjoint across shards.
+        let mut seen = std::collections::HashSet::new();
+        for sink in &run.sinks {
+            let mut local = std::collections::HashSet::new();
+            for c in &sink.completed {
+                local.insert(c.user);
+            }
+            for u in local {
+                assert!(seen.insert(u), "user {u} completed in two shards");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_runs_repeat_deterministically() {
+        for policy in [PolicyKind::Uwfq, PolicyKind::Fair] {
+            let mut cfg = base_cfg(policy);
+            cfg.shards = 3;
+            cfg.shard_epoch_s = 1.5;
+            cfg.fault.task_fail_prob = 0.05;
+            cfg.fault.retry_backoff_s = 0.05;
+            cfg.fault.seed = 9;
+            let go = || {
+                run_sharded(
+                    &cfg,
+                    SimOpts::default(),
+                    |_| scale_stream(&params()),
+                    |_| CollectSink::default(),
+                )
+            };
+            let (a, b) = (go(), go());
+            assert_eq!(a.summary.jobs_completed, b.summary.jobs_completed);
+            assert_eq!(a.summary.makespan_s.to_bits(), b.summary.makespan_s.to_bits());
+            assert_eq!(a.summary.utilization.to_bits(), b.summary.utilization.to_bits());
+            assert_eq!(a.summary.fault, b.summary.fault);
+            for (sa, sb) in a.sinks.iter().zip(b.sinks.iter()) {
+                let fa: Vec<_> = sa.completed.iter().map(|c| (c.job, c.finish)).collect();
+                let fb: Vec<_> = sb.completed.iter().map(|c| (c.job, c.finish)).collect();
+                assert_eq!(fa, fb, "{}: sharded repeat diverged", policy.name());
+            }
+        }
+    }
+}

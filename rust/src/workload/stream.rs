@@ -108,6 +108,66 @@ impl JobStream for VecStream {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Shard splitter
+// ---------------------------------------------------------------------------
+
+/// Hash-stable shard assignment of a user: a splitmix64 finalizer over
+/// the user id, reduced mod `shards`. Stable across runs, shard counts
+/// are free to vary (changing S reassigns users, same S never does), and
+/// `shards <= 1` degenerates to shard 0.
+pub fn shard_of(user: crate::UserId, shards: u32) -> u32 {
+    if shards <= 1 {
+        return 0;
+    }
+    let mut x = (user as u64) ^ 0x9E37_79B9_7F4A_7C15;
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    (x % shards as u64) as u32
+}
+
+/// One shard's view of a full workload: passes through exactly the jobs
+/// whose user hashes to `shard`, in stream order. Because it filters the
+/// *same* underlying timeline each shard regenerates independently,
+/// per-user arrival order (and every job's content) is preserved
+/// verbatim with O(1) extra state — the union over shards is a
+/// partition of the original stream.
+pub struct ShardStream<S> {
+    inner: S,
+    shard: u32,
+    shards: u32,
+}
+
+impl<S: JobStream> ShardStream<S> {
+    pub fn new(inner: S, shard: u32, shards: u32) -> ShardStream<S> {
+        assert!(shard < shards.max(1), "shard index out of range");
+        ShardStream {
+            inner,
+            shard,
+            shards,
+        }
+    }
+}
+
+impl<S: JobStream> JobStream for ShardStream<S> {
+    fn next_job(&mut self) -> Option<JobSpec> {
+        loop {
+            let job = self.inner.next_job()?;
+            if shard_of(job.user, self.shards) == self.shard {
+                return Some(job);
+            }
+        }
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        // Upper bound only: the inner hint counts all shards' jobs.
+        self.inner.size_hint()
+    }
+}
+
 /// A stream from a plain closure (per-user generators without bespoke
 /// structs). The closure must yield nondecreasing arrivals.
 pub struct GenStream<F: FnMut() -> Option<JobSpec>> {
@@ -520,5 +580,72 @@ mod tests {
             t.validate().unwrap();
             assert_eq!(t.stages.len(), 2);
         }
+    }
+
+    #[test]
+    fn shard_of_is_stable_and_degenerate_at_one() {
+        for u in 0..500u32 {
+            assert_eq!(shard_of(u, 1), 0);
+            assert_eq!(shard_of(u, 0), 0);
+            for s in [2u32, 4, 7] {
+                let a = shard_of(u, s);
+                assert!(a < s);
+                assert_eq!(a, shard_of(u, s), "assignment must be pure");
+            }
+        }
+        // The finalizer actually spreads users (not all in one shard).
+        let counts = (0..1000u32).fold([0usize; 4], |mut acc, u| {
+            acc[shard_of(u, 4) as usize] += 1;
+            acc
+        });
+        for (s, &c) in counts.iter().enumerate() {
+            assert!(c > 100, "shard {s} starved: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn shard_streams_partition_the_timeline() {
+        // The union of the 3 shard views is exactly the full stream, each
+        // user lands in exactly one shard, and per-user order (the whole
+        // job sequence, arrival-for-arrival) is preserved verbatim.
+        let p = ScaleParams {
+            users: 23,
+            jobs: 200,
+            cores: 8,
+            target_utilization: 0.8,
+            seed: 5,
+        };
+        let full = materialize(scale_stream(&p));
+        let shards = 3u32;
+        let mut union: Vec<Vec<JobSpec>> = Vec::new();
+        for s in 0..shards {
+            let part = materialize(ShardStream::new(scale_stream(&p), s, shards));
+            for j in &part {
+                assert_eq!(shard_of(j.user, shards), s);
+            }
+            union.push(part);
+        }
+        assert_eq!(
+            union.iter().map(Vec::len).sum::<usize>(),
+            full.len(),
+            "shards must partition the stream"
+        );
+        let per_user = |jobs: &[JobSpec]| {
+            let mut m: std::collections::HashMap<u32, Vec<(TimeUs, Arc<str>)>> =
+                std::collections::HashMap::new();
+            for j in jobs {
+                m.entry(j.user).or_default().push((j.arrival, j.name.clone()));
+            }
+            m
+        };
+        let want = per_user(&full);
+        let mut got: std::collections::HashMap<u32, Vec<(TimeUs, Arc<str>)>> =
+            std::collections::HashMap::new();
+        for part in &union {
+            for (u, seq) in per_user(part) {
+                assert!(got.insert(u, seq).is_none(), "user split across shards");
+            }
+        }
+        assert_eq!(got, want, "per-user sequences must survive sharding");
     }
 }

@@ -33,6 +33,11 @@
 //!    core reproduces the binary-heap per-event reference schedule
 //!    byte-for-byte (completions, utilization bits, fault ledger) on
 //!    random registry scenarios × every policy × random fault mixes.
+//! 8. **Sharded arm** — `sim::run_sharded` at random shard counts:
+//!    merged completions equal arrivals, each shard serves exactly its
+//!    hash partition, and work is conserved per shard (a shard's
+//!    busy-core ledger never exceeds its core count × its makespan, and
+//!    a shard with work is actually busy).
 
 use std::collections::HashMap;
 
@@ -391,6 +396,91 @@ fn event_core_backends_produce_byte_identical_schedules() {
                         "{}: {backend:?} batch={batch} diverged from heap per-event \
                          reference ({spec:?}, faulty={faulty})",
                         policy.name()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sharded_runs_lose_no_jobs_and_conserve_work_per_shard() {
+    // Invariant 8: the sharded engine at random shard counts. The merged
+    // run completes exactly the arrived jobs under every policy; each
+    // shard's completions all hash to that shard; and per-shard work
+    // conservation holds in ledger form — busy core-time never exceeds
+    // the shard's cores × its own makespan (utilization ≤ 1), and a
+    // shard that completed jobs accumulated busy time.
+    propkit::check("sharded completions + per-shard conservation", 0x5A4DE, 5, |r| {
+        let spec = random_spec(r);
+        let seed = r.next_u64();
+        let policy = PolicyKind::ALL[r.below(PolicyKind::ALL.len() as u64) as usize];
+        let w = spec.workload(seed).map_err(|e| format!("{spec:?}: {e}"))?;
+        if w.jobs.is_empty() {
+            return Err(format!("{spec:?}: degenerate empty workload"));
+        }
+        let shards = 2 + r.below(3) as u32; // 2..=4
+        let mut cfg = Config::default().with_cores(8).with_policy(policy);
+        cfg.shards = shards;
+        cfg.shard_epoch_s = r.range_f64(1.0, 4.0);
+        if r.f64() < 0.3 {
+            cfg.fault = random_fault(r);
+        }
+        let run = sim::run_sharded(
+            &cfg,
+            SimOpts::default(),
+            |_| w.to_stream(),
+            |_| sim::CollectSink::default(),
+        );
+        if run.summary.jobs_completed as usize != w.jobs.len() {
+            return Err(format!(
+                "{}: {} of {} jobs completed at S={shards} ({spec:?})",
+                policy.name(),
+                run.summary.jobs_completed,
+                w.jobs.len()
+            ));
+        }
+        let per_shard_total: u64 = run
+            .per_shard
+            .iter()
+            .map(|p| p.summary.jobs_completed)
+            .sum();
+        if per_shard_total != run.summary.jobs_completed {
+            return Err(format!(
+                "{}: per-shard counts sum to {per_shard_total}, merged says {} ({spec:?})",
+                policy.name(),
+                run.summary.jobs_completed
+            ));
+        }
+        for (s, p) in run.per_shard.iter().enumerate() {
+            // Ledger-form work conservation: a shard cannot be busier
+            // than cores × wall time (1 µs slack per core for the final
+            // event's rounding).
+            let cap = p.cores as u128 * uwfq::s_to_us(p.summary.makespan_s) as u128
+                + p.cores as u128;
+            if p.summary.busy_core_us > cap {
+                return Err(format!(
+                    "{}: shard {s} busy {} µs exceeds {} cores × makespan ({spec:?})",
+                    policy.name(),
+                    p.summary.busy_core_us,
+                    p.cores
+                ));
+            }
+            if p.summary.jobs_completed > 0 && p.summary.busy_core_us == 0 {
+                return Err(format!(
+                    "{}: shard {s} completed {} jobs with zero busy time ({spec:?})",
+                    policy.name(),
+                    p.summary.jobs_completed
+                ));
+            }
+            for c in &run.sinks[s].completed {
+                let want = sim::shard_of(c.user, shards);
+                if want != s as u32 {
+                    return Err(format!(
+                        "{}: user {} completed in shard {s}, hashes to {want} ({spec:?})",
+                        policy.name(),
+                        c.user
                     ));
                 }
             }

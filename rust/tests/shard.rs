@@ -1,0 +1,257 @@
+//! Differential + property suite for the sharded engine
+//! (`sim::run_sharded` — federated virtual time over hash-partitioned
+//! users):
+//!
+//! 1. **S=1 byte-identity** — one shard is the unsharded engine: for
+//!    every policy, fault-free and with a fault mix armed, the sharded
+//!    runner's completions (every field, floats by bit pattern),
+//!    makespan/utilization bits, and the full fault ledger match
+//!    `simulate_stream_into_opts` exactly.
+//! 2. **Deterministic repeats at S=4** — multi-shard runs are not equal
+//!    to the unsharded schedule (disjoint user sets on disjoint cores,
+//!    shard-local arrival sequences), but they must repeat bit-for-bit.
+//! 3. **Drift bound (property)** — on randomized registry scenarios the
+//!    observed pre-sync virtual-time spread never exceeds the provable
+//!    `cores × shard_epoch_s` resource-seconds, no job is lost, and the
+//!    hash partition is respected.
+
+use uwfq::config::Config;
+use uwfq::core::SchedCore;
+use uwfq::fault::FaultConfig;
+use uwfq::sched::PolicyKind;
+use uwfq::sim::{run_sharded, shard_cores, simulate_stream_into_opts, CollectSink, SimOpts};
+use uwfq::util::{propkit, Rng};
+use uwfq::workload::{ScenarioSpec, Workload};
+
+/// The fixture workload: multi-user, bursty enough that shards interleave.
+fn fixture_workload(seed: u64) -> Workload {
+    ScenarioSpec::new("gtrace")
+        .with("window_s", "80")
+        .with("users", "8")
+        .with("heavy_users", "2")
+        .with("cores", "8")
+        .workload(seed)
+        .expect("gtrace fixture")
+}
+
+fn fault_mix(seed: u64) -> FaultConfig {
+    let mut f = FaultConfig::default();
+    f.task_fail_prob = 0.1;
+    f.retry_backoff_s = 0.05;
+    f.max_failures = 3;
+    f.straggler_prob = 0.1;
+    f.straggler_mult = 4.0;
+    f.spec_mult = 2.0;
+    f.seed = seed;
+    f
+}
+
+/// Byte-level completion fingerprint of a `CollectSink`.
+fn sink_fingerprint(sink: &CollectSink) -> Vec<(u64, u32, String, u64, u64, u64)> {
+    sink.completed
+        .iter()
+        .map(|c| {
+            (
+                c.job,
+                c.user,
+                c.name.to_string(),
+                c.submit,
+                c.finish,
+                c.slot_time.to_bits(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn one_shard_is_byte_identical_to_the_unsharded_engine_for_every_policy() {
+    let w = fixture_workload(21);
+    for faulty in [false, true] {
+        for policy in PolicyKind::ALL {
+            let mut cfg = Config::default().with_cores(8).with_policy(policy);
+            if faulty {
+                cfg.fault = fault_mix(77);
+            }
+            let mut core = SchedCore::from_config(cfg.clone());
+            let mut want_sink = CollectSink::default();
+            let want = simulate_stream_into_opts(
+                &mut core,
+                w.to_stream(),
+                &mut want_sink,
+                SimOpts::default(),
+            );
+            let run = run_sharded(
+                &cfg,
+                SimOpts::default(),
+                |_| w.to_stream(),
+                |_| CollectSink::default(),
+            );
+            let tag = format!("{} faulty={faulty}", policy.name());
+            assert_eq!(run.per_shard.len(), 1, "{tag}");
+            assert_eq!(run.sync.epochs, 0, "{tag}: S=1 must never sync");
+            assert_eq!(run.summary.jobs_completed, want.jobs_completed, "{tag}");
+            assert_eq!(run.summary.task_events, want.task_events, "{tag}");
+            assert_eq!(
+                run.summary.peak_in_flight_jobs, want.peak_in_flight_jobs,
+                "{tag}"
+            );
+            assert_eq!(
+                run.summary.makespan_s.to_bits(),
+                want.makespan_s.to_bits(),
+                "{tag}"
+            );
+            assert_eq!(
+                run.summary.utilization.to_bits(),
+                want.utilization.to_bits(),
+                "{tag}"
+            );
+            assert_eq!(run.summary.busy_core_us, want.busy_core_us, "{tag}");
+            assert_eq!(run.summary.fault, want.fault, "{tag}: fault ledger diverged");
+            assert_eq!(
+                sink_fingerprint(&run.sinks[0]),
+                sink_fingerprint(&want_sink),
+                "{tag}: completion schedule diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn four_shard_runs_repeat_bit_for_bit() {
+    let w = fixture_workload(33);
+    for faulty in [false, true] {
+        for policy in PolicyKind::ALL {
+            let mut cfg = Config::default().with_cores(8).with_policy(policy);
+            cfg.shards = 4;
+            cfg.shard_epoch_s = 1.0;
+            if faulty {
+                cfg.fault = fault_mix(5);
+            }
+            let go = || {
+                run_sharded(
+                    &cfg,
+                    SimOpts::default(),
+                    |_| w.to_stream(),
+                    |_| CollectSink::default(),
+                )
+            };
+            let (a, b) = (go(), go());
+            let tag = format!("{} faulty={faulty}", policy.name());
+            assert_eq!(
+                a.summary.jobs_completed as usize,
+                w.jobs.len(),
+                "{tag}: jobs lost"
+            );
+            assert_eq!(a.summary.jobs_completed, b.summary.jobs_completed, "{tag}");
+            assert_eq!(
+                a.summary.makespan_s.to_bits(),
+                b.summary.makespan_s.to_bits(),
+                "{tag}"
+            );
+            assert_eq!(
+                a.summary.utilization.to_bits(),
+                b.summary.utilization.to_bits(),
+                "{tag}"
+            );
+            assert_eq!(a.summary.fault, b.summary.fault, "{tag}: fault ledger");
+            assert_eq!(a.sync.epochs, b.sync.epochs, "{tag}");
+            assert_eq!(
+                a.sync.max_drift_rsec.to_bits(),
+                b.sync.max_drift_rsec.to_bits(),
+                "{tag}"
+            );
+            for (s, (sa, sb)) in a.sinks.iter().zip(b.sinks.iter()).enumerate() {
+                assert_eq!(
+                    sink_fingerprint(sa),
+                    sink_fingerprint(sb),
+                    "{tag}: shard {s} schedule diverged between repeats"
+                );
+            }
+        }
+    }
+}
+
+/// A random small registry scenario (kept small so the debug-profile
+/// property run stays fast; mirrors the invariant harness's generator).
+fn random_spec(r: &mut Rng) -> ScenarioSpec {
+    match r.below(4) {
+        0 => ScenarioSpec::new("scenario2")
+            .with("jobs_per_user", &format!("{}", 3 + r.below(5)))
+            .with("stagger_s", &format!("{:.2}", r.range_f64(0.0, 2.0))),
+        1 => ScenarioSpec::new("bursty")
+            .with("users", &format!("{}", 3 + r.below(3)))
+            .with("steady_users", &format!("{}", 1 + r.below(2)))
+            .with("duration_s", &format!("{}", 60 + r.below(60)))
+            .with("cycle_s", "30")
+            .with("burst_ratio", &format!("{:.2}", r.range_f64(0.1, 0.35)))
+            .with("rate", &format!("{:.2}", r.range_f64(0.8, 2.0))),
+        2 => ScenarioSpec::new("heavytail")
+            .with("users", &format!("{}", 3 + r.below(3)))
+            .with("jobs_per_user", &format!("{}", 6 + r.below(7)))
+            .with("alpha", &format!("{:.2}", r.range_f64(1.2, 2.5)))
+            .with("mean_gap_s", &format!("{:.1}", r.range_f64(2.0, 6.0))),
+        _ => ScenarioSpec::new("gtrace")
+            .with("window_s", &format!("{}", 60 + r.below(40)))
+            .with("users", &format!("{}", 5 + r.below(4)))
+            .with("heavy_users", "2")
+            .with("cores", "8"),
+    }
+}
+
+#[test]
+fn drift_stays_within_the_provable_bound_on_random_registry_specs() {
+    propkit::check("shard drift bound", 0x5AA8D, 6, |r| {
+        let spec = random_spec(r);
+        let seed = r.next_u64();
+        let w = spec.workload(seed).map_err(|e| format!("{spec:?}: {e}"))?;
+        if w.jobs.is_empty() {
+            return Err(format!("{spec:?}: degenerate empty workload"));
+        }
+        let shards = 2 + r.below(3) as u32; // 2..=4
+        let mut cfg = Config::default().with_cores(8).with_policy(PolicyKind::Uwfq);
+        cfg.shards = shards;
+        cfg.shard_epoch_s = r.range_f64(0.5, 4.0);
+        if r.f64() < 0.4 {
+            let mut f = fault_mix(r.next_u64());
+            f.straggler_prob = 0.0; // keep property runs fast
+            cfg.fault = f;
+        }
+        let run = run_sharded(
+            &cfg,
+            SimOpts::default(),
+            |_| w.to_stream(),
+            |_| CollectSink::default(),
+        );
+        if run.summary.jobs_completed as usize != w.jobs.len() {
+            return Err(format!(
+                "{} of {} jobs completed at S={shards} ({spec:?})",
+                run.summary.jobs_completed,
+                w.jobs.len()
+            ));
+        }
+        if run.sync.max_drift_rsec > run.sync.bound_rsec + 1e-9 {
+            return Err(format!(
+                "drift {} exceeds bound {} at S={shards}, epoch {} ({spec:?})",
+                run.sync.max_drift_rsec, run.sync.bound_rsec, cfg.shard_epoch_s
+            ));
+        }
+        // Hash partition respected: every completion sits in the shard
+        // its user hashes to, and the core split covers the cluster.
+        let cores = shard_cores(cfg.cores, shards);
+        if cores.iter().sum::<u32>() != cfg.cores {
+            return Err("shard core split does not partition the cluster".into());
+        }
+        for (s, sink) in run.sinks.iter().enumerate() {
+            for c in &sink.completed {
+                let want = uwfq::sim::shard_of(c.user, shards);
+                if want != s as u32 {
+                    return Err(format!(
+                        "user {} completed in shard {s}, hashes to {want} ({spec:?})",
+                        c.user
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
