@@ -13,6 +13,8 @@
 //!   fault`, `BENCH_fault.json`).
 //! * [`hotpath`] — event-core throughput: wheel vs heap backends plus
 //!   the batching ablation (`uwfq hotpath`, `BENCH_hotpath.json`).
+//! * [`summary`] — merges every `BENCH_*.json` artifact into one
+//!   markdown perf-trajectory table (`uwfq benchsummary`).
 //!
 //! Every grid is expressed as a list of independent cells over the
 //! [`crate::sweep`] engine: the caller passes a [`crate::sweep::Sweep`]
@@ -25,6 +27,7 @@ pub mod hotpath;
 pub mod replay;
 pub mod scale;
 pub mod shard;
+pub mod summary;
 pub mod tables;
 
 use std::collections::HashMap;

@@ -12,13 +12,15 @@
 //! drift telemetry (`max_drift_rsec` against the provable
 //! `bound_rsec = cores × shard_epoch_s`).
 
+use std::collections::HashMap;
 use std::time::Instant;
 
 use crate::config::Config;
 use crate::metrics::streaming::StreamingRunMetrics;
-use crate::sim::{run_sharded, SimOpts};
+use crate::sim::{run_sharded, SimOpts, SyncStats};
 use crate::util::benchkit::JsonSink;
 use crate::workload::stream::{scale_stream, ScaleParams};
+use crate::workload::stress::{skewed, SkewedParams};
 
 use super::scale::{scale_idle_map, QUANTILES};
 
@@ -136,6 +138,181 @@ pub fn run_shard(params: &ScaleParams, cfg: &Config, shard_counts: &[u32]) -> Sh
     }
 }
 
+// ---------------------------------------------------------------------------
+// Skew ablation (`uwfq shard --skew`)
+// ---------------------------------------------------------------------------
+
+/// One shard count's skew-ablation row: the Zipfian `skewed` stream run
+/// with the static core split (`rebalance=off`) and, unless lending is
+/// disabled, again with deterministic cross-shard core lending on.
+#[derive(Clone, Debug)]
+pub struct SkewRow {
+    pub shards: u32,
+    /// Lending-arm wall clock / throughput (equals the static arm when
+    /// lending is disabled or `S == 1`, where lending is a no-op).
+    pub wall_s: f64,
+    pub jobs_per_s: f64,
+    pub static_jobs_per_s: f64,
+    /// `jobs_per_s / static_jobs_per_s`; 1.0 when only the static arm ran.
+    pub speedup_vs_static: f64,
+    pub jobs: u64,
+    pub epochs: u64,
+    pub lend_events: u64,
+    pub max_backlog_imbalance: f64,
+    pub max_drift_rsec: f64,
+    pub bound_rsec: f64,
+}
+
+/// Everything one `uwfq shard --skew` invocation produces.
+pub struct SkewOutcome {
+    pub label: String,
+    pub params: SkewedParams,
+    pub cores: u32,
+    /// Whether the lending arm ran (false = static-only ablation).
+    pub lending: bool,
+    pub rows: Vec<SkewRow>,
+}
+
+/// One sharded run of the `skewed` stream; returns (wall_s, jobs, sync).
+fn skew_run(seed: u64, p: &SkewedParams, cfg: &Config) -> (f64, u64, SyncStats) {
+    let label = cfg.label();
+    let t0 = Instant::now();
+    let run = run_sharded(
+        cfg,
+        SimOpts::default(),
+        |_| skewed(seed, p).expect("skewed params validated by the harness"),
+        // Skewed job names are unique per job, so a template idle map
+        // does not apply; slowdown columns are not recorded here.
+        |_| StreamingRunMetrics::new(&label, HashMap::new()),
+    );
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    (wall_s, run.summary.jobs_completed, run.sync)
+}
+
+/// Run the skew ablation at each shard count: every count gets a
+/// `rebalance=off` (static split) arm; counts > 1 additionally get a
+/// lending-on arm when `lending` is set, and `speedup_vs_static` is the
+/// on/off throughput ratio on identical work.
+pub fn run_shard_skew(
+    seed: u64,
+    params: &SkewedParams,
+    cfg: &Config,
+    shard_counts: &[u32],
+    lending: bool,
+) -> SkewOutcome {
+    let mut counts: Vec<u32> = shard_counts.to_vec();
+    counts.sort_unstable();
+    counts.dedup();
+
+    let mut rows = Vec::with_capacity(counts.len());
+    for &s in &counts {
+        let mut cfg_off = cfg.clone();
+        cfg_off.shards = s;
+        cfg_off.shard_rebalance = false;
+        let (off_wall, off_jobs, off_sync) = skew_run(seed, params, &cfg_off);
+        let static_jobs_per_s = off_jobs as f64 / off_wall;
+
+        let (wall_s, jobs, sync) = if lending && s > 1 {
+            let mut cfg_on = cfg_off.clone();
+            cfg_on.shard_rebalance = true;
+            skew_run(seed, params, &cfg_on)
+        } else {
+            (off_wall, off_jobs, off_sync)
+        };
+        let jobs_per_s = jobs as f64 / wall_s;
+        rows.push(SkewRow {
+            shards: s,
+            wall_s,
+            jobs_per_s,
+            static_jobs_per_s,
+            speedup_vs_static: if static_jobs_per_s > 0.0 {
+                jobs_per_s / static_jobs_per_s
+            } else {
+                0.0
+            },
+            jobs,
+            epochs: sync.epochs,
+            lend_events: sync.lend_events,
+            max_backlog_imbalance: sync.max_backlog_imbalance,
+            max_drift_rsec: sync.max_drift_rsec,
+            bound_rsec: sync.bound_rsec,
+        });
+    }
+
+    SkewOutcome {
+        label: cfg.label(),
+        params: params.clone(),
+        cores: cfg.cores,
+        lending,
+        rows,
+    }
+}
+
+/// Record a skew outcome into a benchkit sink (`shard/skew/...` keys in
+/// `BENCH_shard.json` / `BENCH_shard-skew-{on,off}.json`).
+pub fn record_skew_metrics(o: &SkewOutcome, sink: &mut JsonSink) {
+    sink.metric("shard/skew/jobs", o.params.jobs as f64);
+    sink.metric("shard/skew/users", o.params.users as f64);
+    sink.metric("shard/skew/cores", o.cores as f64);
+    sink.metric("shard/skew/zipf_s", o.params.zipf_s);
+    sink.metric("shard/skew/hot_users", o.params.hot_users as f64);
+    sink.metric("shard/skew/lending", if o.lending { 1.0 } else { 0.0 });
+    for r in &o.rows {
+        let s = r.shards;
+        sink.metric(&format!("shard/skew/s{s}/wall_s"), r.wall_s);
+        sink.metric(&format!("shard/skew/s{s}/jobs"), r.jobs as f64);
+        sink.metric(&format!("shard/skew/s{s}/jobs_per_s"), r.jobs_per_s);
+        sink.metric(
+            &format!("shard/skew/s{s}/static_jobs_per_s"),
+            r.static_jobs_per_s,
+        );
+        sink.metric(
+            &format!("shard/skew/s{s}/speedup_vs_static"),
+            r.speedup_vs_static,
+        );
+        sink.metric(&format!("shard/skew/s{s}/sync_epochs"), r.epochs as f64);
+        sink.metric(&format!("shard/skew/s{s}/lend_events"), r.lend_events as f64);
+        sink.metric(
+            &format!("shard/skew/s{s}/max_backlog_imbalance"),
+            r.max_backlog_imbalance,
+        );
+        sink.metric(&format!("shard/skew/s{s}/max_drift_rsec"), r.max_drift_rsec);
+        sink.metric(&format!("shard/skew/s{s}/drift_bound_rsec"), r.bound_rsec);
+    }
+}
+
+/// Human summary printed by `uwfq shard --skew`.
+pub fn render_skew(o: &SkewOutcome) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "shard skew bench ({}): {} jobs / {} users ({} hot, zipf_s {}) on {} cores, lending {}\n",
+        o.label,
+        o.params.jobs,
+        o.params.users,
+        o.params.hot_users,
+        o.params.zipf_s,
+        o.cores,
+        if o.lending { "on" } else { "off" },
+    ));
+    s.push_str(
+        "  shards     jobs/s   static j/s  speedup    lends  imbalance   drift rsec (bound)\n",
+    );
+    for r in &o.rows {
+        s.push_str(&format!(
+            "  {:>6} {:>10.0} {:>12.0} {:>8.2}x {:>8} {:>10.2} {:>12.3} ({:>6.1})\n",
+            r.shards,
+            r.jobs_per_s,
+            r.static_jobs_per_s,
+            r.speedup_vs_static,
+            r.lend_events,
+            r.max_backlog_imbalance,
+            r.max_drift_rsec,
+            r.bound_rsec
+        ));
+    }
+    s
+}
+
 /// Record a shard outcome into a benchkit sink (`BENCH_shard.json`,
 /// tracked across PRs next to `BENCH_scale` / `BENCH_hotpath`).
 pub fn record_metrics(o: &ShardOutcome, sink: &mut JsonSink) {
@@ -234,6 +411,70 @@ mod tests {
         }
         assert_eq!(o.rows[0].epochs, 0, "S=1 must not sync");
         assert!(o.rows[1].epochs > 0, "S=2 must sync");
+    }
+
+    fn small_skew_params() -> SkewedParams {
+        SkewedParams {
+            users: 40,
+            jobs: 600,
+            zipf_s: 1.2,
+            hot_users: 8,
+            cores: 8,
+            target_utilization: 0.7,
+            skew_fraction: 0.2,
+        }
+    }
+
+    #[test]
+    fn run_shard_skew_ablates_lending_per_shard_count() {
+        let cfg = Config::default().with_cores(8);
+        let o = run_shard_skew(11, &small_skew_params(), &cfg, &[2, 1], true);
+        assert_eq!(o.rows.len(), 2);
+        assert_eq!(o.rows[0].shards, 1);
+        assert_eq!(o.rows[1].shards, 2);
+        for r in &o.rows {
+            assert_eq!(r.jobs, 600, "S={} dropped jobs", r.shards);
+            assert!(r.jobs_per_s > 0.0 && r.static_jobs_per_s > 0.0);
+            assert!(r.speedup_vs_static > 0.0);
+            assert!(
+                r.max_drift_rsec <= r.bound_rsec + 1e-9,
+                "S={}: drift {} over bound {}",
+                r.shards,
+                r.max_drift_rsec,
+                r.bound_rsec
+            );
+        }
+        // S=1 never lends (lending is a no-op, only the static arm runs).
+        assert_eq!(o.rows[0].lend_events, 0);
+        assert!((o.rows[0].speedup_vs_static - 1.0).abs() < 1e-12);
+        // With lending disabled every row is its own static arm.
+        let off = run_shard_skew(11, &small_skew_params(), &cfg, &[2], false);
+        assert!(!off.lending);
+        assert_eq!(off.rows[0].lend_events, 0);
+        assert!((off.rows[0].speedup_vs_static - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn record_skew_metrics_emits_ablation_keys() {
+        let cfg = Config::default().with_cores(8);
+        let o = run_shard_skew(3, &small_skew_params(), &cfg, &[2], true);
+        let mut sink = JsonSink::new();
+        record_skew_metrics(&o, &mut sink);
+        let path = std::env::temp_dir().join("uwfq_shard_skew_metrics_test.json");
+        sink.write(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        for key in [
+            "shard/skew/s2/jobs_per_s",
+            "shard/skew/s2/static_jobs_per_s",
+            "shard/skew/s2/speedup_vs_static",
+            "shard/skew/s2/lend_events",
+            "shard/skew/s2/max_backlog_imbalance",
+            "shard/skew/s2/max_drift_rsec",
+            "shard/skew/zipf_s",
+        ] {
+            assert!(text.contains(key), "missing {key}");
+        }
+        std::fs::remove_file(path).ok();
     }
 
     #[test]

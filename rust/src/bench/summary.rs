@@ -1,0 +1,190 @@
+//! `uwfq benchsummary` — merge every `BENCH_*.json` artifact into one
+//! markdown perf-trajectory table.
+//!
+//! Each bench harness (`scale`, `replay`, `fault`, `hotpath`, `shard`)
+//! writes a [`crate::util::benchkit::JsonSink`] file whose `"metrics"`
+//! object maps flat metric names to numbers. This module scans a list of
+//! directories for `BENCH_*.json` files, parses them with the in-tree
+//! JSON reader, and renders one `artifact | metric | value` markdown
+//! table — so pinning the perf baseline from a CI artifact set is a
+//! single command and a paste.
+//!
+//! Determinism: directories are scanned in the given order, files sorted
+//! by name within each, duplicate artifact stems deduplicated (first
+//! directory wins), and metric keys are already sorted (`BTreeMap` in
+//! the sink and the parser).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::util::jsonout::{self, Json};
+
+/// One parsed artifact: the file stem (e.g. `BENCH_shard-skew-on`) plus
+/// its sorted metric map.
+#[derive(Clone, Debug)]
+pub struct BenchArtifact {
+    pub name: String,
+    pub metrics: BTreeMap<String, f64>,
+}
+
+/// Find `BENCH_*.json` files directly inside each of `dirs`
+/// (non-recursive). Files sort by name within a directory; a stem seen
+/// in an earlier directory shadows later ones. Unreadable directories
+/// are skipped — an empty result is not an error.
+pub fn find_artifacts(dirs: &[String]) -> Vec<PathBuf> {
+    let mut seen: BTreeSet<String> = BTreeSet::new();
+    let mut out = Vec::new();
+    for d in dirs {
+        let Ok(rd) = fs::read_dir(d) else { continue };
+        let mut files: Vec<PathBuf> = rd
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                matches!(
+                    p.file_name().and_then(|n| n.to_str()),
+                    Some(n) if n.starts_with("BENCH_") && n.ends_with(".json")
+                )
+            })
+            .collect();
+        files.sort();
+        for f in files {
+            let stem = f
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .unwrap_or_default()
+                .to_string();
+            if seen.insert(stem) {
+                out.push(f);
+            }
+        }
+    }
+    out
+}
+
+/// Parse one artifact's `"metrics"` object. Non-numeric entries are
+/// ignored; a missing `"metrics"` key yields an empty map (the file may
+/// predate the metrics convention) — malformed JSON is an error naming
+/// the file.
+pub fn load_artifact(path: &Path) -> Result<BenchArtifact, String> {
+    let text =
+        fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let json = jsonout::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+    let mut metrics = BTreeMap::new();
+    if let Some(Json::Obj(m)) = json.get("metrics") {
+        for (k, v) in m {
+            if let Some(n) = v.as_f64() {
+                metrics.insert(k.clone(), n);
+            }
+        }
+    }
+    Ok(BenchArtifact {
+        name: path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or_default()
+            .to_string(),
+        metrics,
+    })
+}
+
+/// Integers print bare, everything else with 4 decimals — enough to
+/// compare jobs/s and ratios across PRs without float noise.
+fn fmt_metric(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+/// Render the merged markdown table.
+pub fn render_markdown(arts: &[BenchArtifact]) -> String {
+    let mut s = String::from("# Bench trajectory\n\n");
+    if arts.is_empty() {
+        s.push_str("_No BENCH_*.json artifacts found._\n");
+        return s;
+    }
+    s.push_str("| artifact | metric | value |\n|---|---|---:|\n");
+    for a in arts {
+        for (k, v) in &a.metrics {
+            s.push_str(&format!("| {} | {k} | {} |\n", a.name, fmt_metric(*v)));
+        }
+    }
+    s
+}
+
+/// The whole subcommand body: scan, parse, render. Errors only on a
+/// malformed artifact — no artifacts at all is a valid (empty) table.
+pub fn summarize(dirs: &[String]) -> Result<String, String> {
+    let mut arts = Vec::new();
+    for path in find_artifacts(dirs) {
+        arts.push(load_artifact(&path)?);
+    }
+    Ok(render_markdown(&arts))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::benchkit::JsonSink;
+
+    fn write_bench(dir: &Path, name: &str, metrics: &[(&str, f64)]) {
+        let mut sink = JsonSink::new();
+        for (k, v) in metrics {
+            sink.metric(k, *v);
+        }
+        sink.write(dir.join(name).to_str().unwrap()).unwrap();
+    }
+
+    #[test]
+    fn summarize_merges_sorted_and_dedups() {
+        let base = std::env::temp_dir().join("uwfq_benchsummary_test");
+        let (a, b) = (base.join("a"), base.join("b"));
+        fs::create_dir_all(&a).unwrap();
+        fs::create_dir_all(&b).unwrap();
+        write_bench(&a, "BENCH_zz.json", &[("z/jobs_per_s", 1234.0)]);
+        write_bench(&a, "BENCH_aa.json", &[("a/speedup", 1.5), ("a/jobs", 100.0)]);
+        // Same stem in the second dir must be shadowed by the first.
+        write_bench(&b, "BENCH_zz.json", &[("z/jobs_per_s", 9999.0)]);
+        write_bench(&b, "BENCH_only.json", &[("o/x", 0.25)]);
+        fs::write(a.join("not_a_bench.json"), "{}").unwrap();
+
+        let dirs = vec![
+            a.to_str().unwrap().to_string(),
+            b.to_str().unwrap().to_string(),
+            base.join("missing").to_str().unwrap().to_string(),
+        ];
+        let found = find_artifacts(&dirs);
+        assert_eq!(found.len(), 3, "{found:?}");
+        // Sorted within dir a, then dir b's new stem.
+        assert!(found[0].ends_with("a/BENCH_aa.json"));
+        assert!(found[1].ends_with("a/BENCH_zz.json"));
+        assert!(found[2].ends_with("b/BENCH_only.json"));
+
+        let md = summarize(&dirs).unwrap();
+        assert!(md.contains("| artifact | metric | value |"), "{md}");
+        assert!(md.contains("| BENCH_aa | a/jobs | 100 |"), "{md}");
+        assert!(md.contains("| BENCH_aa | a/speedup | 1.5000 |"), "{md}");
+        assert!(md.contains("| BENCH_zz | z/jobs_per_s | 1234 |"), "{md}");
+        assert!(!md.contains("9999"), "shadowed artifact leaked: {md}");
+        // Metric keys sorted within an artifact.
+        let jobs = md.find("a/jobs").unwrap();
+        let speedup = md.find("a/speedup").unwrap();
+        assert!(jobs < speedup);
+
+        fs::remove_dir_all(&base).ok();
+    }
+
+    #[test]
+    fn summarize_handles_empty_and_malformed() {
+        let base = std::env::temp_dir().join("uwfq_benchsummary_bad_test");
+        fs::create_dir_all(&base).unwrap();
+        let md = summarize(&[base.to_str().unwrap().to_string()]).unwrap();
+        assert!(md.contains("No BENCH_"), "{md}");
+        fs::write(base.join("BENCH_broken.json"), "{ not json").unwrap();
+        let err = summarize(&[base.to_str().unwrap().to_string()]).unwrap_err();
+        assert!(err.contains("BENCH_broken"), "{err}");
+        fs::remove_dir_all(&base).ok();
+    }
+}

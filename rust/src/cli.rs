@@ -49,12 +49,19 @@ USAGE:
              # batching on/off ablation per policy, emits
              # BENCH_hotpath.json (UWFQ_EVENT_HEAP=1 benches the
              # escape-hatch default)
-  uwfq shard [--quick] [--shards N] [--jobs N] [--users N] [--out DIR]
+  uwfq shard [--quick] [--shards N] [--jobs N] [--users N] [--out DIR] [--skew]
              # sharded engine bench: federated virtual time over
              # hash-partitioned users, one event loop per shard; sweeps
              # shard counts (or just --shards N), reports jobs/s and
              # speedup vs the 1-shard baseline plus the observed
-             # virtual-time drift, emits BENCH_shard.json
+             # virtual-time drift, emits BENCH_shard.json. --skew runs
+             # the Zipfian `skewed` scenario instead and ablates
+             # cross-shard core lending on/off per shard count
+             # (`speedup_vs_static`); `--shard_rebalance false` keeps
+             # only the static arm
+  uwfq benchsummary [DIR ...] [--out FILE]
+             # merge every BENCH_*.json found in the given dirs (default:
+             # out/ then .) into one markdown perf-trajectory table
   uwfq serve [--cores N] [--time-scale F] [--artifacts DIR]   # real PJRT backend demo
   uwfq ablation [--seed N] [--threads N]                      # design-choice ablations
   uwfq run --scenario scenario2 --eventlog trace.jsonl        # emit event log
@@ -82,13 +89,18 @@ FLAGS (config keys, see config.rs):
   unsharded engine. threads x shards is capped at the machine's
   available parallelism — the harness trims --threads (with a warning)
   rather than oversubscribe.
+
+  --shard_rebalance true|false turns on deterministic cross-shard core
+  lending at each shard epoch barrier (default false = byte-identical
+  static split); --rebalance_min_cores N keeps a per-shard floor and
+  --rebalance_cap N caps cores migrated per epoch.
 ";
 
 /// Flags that are boolean switches: bare `--quick` reads as
 /// `--quick true`. Every other flag still requires an explicit value, so
 /// a forgotten value (`--out` at the end of the line) stays a hard error
 /// instead of silently becoming the string "true".
-const SWITCH_FLAGS: [&str; 3] = ["quick", "verify", "grid"];
+const SWITCH_FLAGS: [&str; 4] = ["quick", "verify", "grid", "skew"];
 
 impl Cli {
     pub fn parse(args: &[String]) -> Result<Cli, String> {
@@ -160,7 +172,7 @@ impl Cli {
                 // legacy spelling of --scenario, resolved in main::run)
                 "config" | "out" | "quick" | "workload" | "time-scale" | "artifacts"
                 | "eventlog" | "threads" | "bench-json" | "jobs" | "users" | "verify"
-                | "trace" | "format" | "grid" => {}
+                | "trace" | "format" | "grid" | "skew" => {}
                 _ => cfg.set(k, v)?,
             }
         }
@@ -268,6 +280,17 @@ mod tests {
         let c = Cli::parse(&args("shard --shards 0")).unwrap();
         let err = c.config().unwrap_err();
         assert!(err.contains("shards") && err.contains("threads"), "{err}");
+    }
+
+    #[test]
+    fn skew_flag_is_a_harness_switch() {
+        let c = Cli::parse(&args("shard --skew --shards 8 --cores 8")).unwrap();
+        assert_eq!(c.flag("skew"), Some("true"));
+        // Harness-only: config still parses, shards routed normally.
+        assert_eq!(c.config().unwrap().shards, 8);
+        // Bare --skew before a positional must not swallow it.
+        let c = Cli::parse(&args("shard --skew extra")).unwrap();
+        assert_eq!(c.positional, vec!["extra"]);
     }
 
     #[test]

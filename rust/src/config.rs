@@ -57,6 +57,20 @@ pub struct Config {
     /// `v_global` and fair-share rate to the population-wide values. The
     /// fairness drift bound is `cores × shard_epoch_s` resource-seconds.
     pub shard_epoch_s: f64,
+    /// Cross-shard core lending ([`crate::sim::rebalance_cores`]): at
+    /// every sync barrier a pure-function rebalancer re-assigns the
+    /// integer core budget across shards proportional to published
+    /// backlog. Off (the default) keeps the static `cores/shards` split
+    /// byte-identical to builds before lending existed.
+    pub shard_rebalance: bool,
+    /// Per-shard core floor under lending: no shard's allocation ever
+    /// drops below this. Requires `rebalance_min_cores × shards ≤ cores`
+    /// (checked up front by the sharded runner).
+    pub rebalance_min_cores: u32,
+    /// Max cores migrated across all shards per sync epoch — bounds how
+    /// fast allocations move so the drift bound's rate-conservation
+    /// argument stays local to one epoch.
+    pub rebalance_cap: u32,
 }
 
 impl Default for Config {
@@ -78,6 +92,9 @@ impl Default for Config {
             fault: FaultConfig::default(),
             shards: 1,
             shard_epoch_s: 4.0,
+            shard_rebalance: false,
+            rebalance_min_cores: 1,
+            rebalance_cap: 2,
         }
     }
 }
@@ -86,6 +103,7 @@ impl Default for Config {
 const CONFIG_KEYS: &str = "cores, task_overhead, atr, max_partition_bytes, \
 advisory_partition_bytes, grace_rsec, seed, estimator_sigma, log_tasks, \
 policy, scheme | partitioner, scenario, shards, shard_epoch_s, \
+shard_rebalance, rebalance_min_cores, rebalance_cap, \
 param.<name>, fault.<knob> \
 (task_fail_prob, max_failures, retry_backoff_s, straggler_prob, \
 straggler_mult, spec_mult, crash_mttf_s, crash_recover_s, seed)";
@@ -173,6 +191,34 @@ impl Config {
                     ));
                 }
                 self.shard_epoch_s = e;
+            }
+            "shard_rebalance" => match val {
+                "true" | "1" => self.shard_rebalance = true,
+                "false" | "0" => self.shard_rebalance = false,
+                _ => {
+                    return Err(format!(
+                        "shard_rebalance: expected true/false (got '{val}')"
+                    ))
+                }
+            },
+            "rebalance_min_cores" => {
+                let m: u32 = num(key, val)?;
+                if m == 0 {
+                    return Err("rebalance_min_cores: must be >= 1 (every shard \
+                                keeps at least one core under lending)"
+                        .into());
+                }
+                self.rebalance_min_cores = m;
+            }
+            "rebalance_cap" => {
+                let c: u32 = num(key, val)?;
+                if c == 0 {
+                    return Err("rebalance_cap: must be >= 1 (cores migrated per \
+                                epoch; set shard_rebalance = false to disable \
+                                lending instead)"
+                        .into());
+                }
+                self.rebalance_cap = c;
             }
             _ => {
                 if let Some(knob) = key.strip_prefix("fault.") {
@@ -334,6 +380,30 @@ mod tests {
         assert!(err.contains("shard_epoch_s"), "{err}");
         let err = c.apply_lines("shard_epoch_s = -1").unwrap_err();
         assert!(err.contains("shard_epoch_s"), "{err}");
+    }
+
+    #[test]
+    fn rebalance_keys_parse_and_validate() {
+        let mut c = Config::default();
+        assert!(!c.shard_rebalance, "lending must default off");
+        assert_eq!(c.rebalance_min_cores, 1);
+        assert_eq!(c.rebalance_cap, 2);
+        c.apply_lines("shard_rebalance = true\nrebalance_min_cores = 2\nrebalance_cap = 4\n")
+            .unwrap();
+        assert!(c.shard_rebalance);
+        assert_eq!(c.rebalance_min_cores, 2);
+        assert_eq!(c.rebalance_cap, 4);
+        c.apply_lines("shard_rebalance = 0").unwrap();
+        assert!(!c.shard_rebalance);
+        // Errors name the offending key.
+        let err = c.apply_lines("shard_rebalance = maybe").unwrap_err();
+        assert!(err.contains("shard_rebalance"), "{err}");
+        let err = c.apply_lines("rebalance_min_cores = 0").unwrap_err();
+        assert!(err.contains("rebalance_min_cores"), "{err}");
+        let err = c.apply_lines("rebalance_cap = 0").unwrap_err();
+        assert!(err.contains("rebalance_cap"), "{err}");
+        let err = c.apply_lines("rebalance_cap = abc").unwrap_err();
+        assert!(err.contains("rebalance_cap") && err.contains("abc"), "{err}");
     }
 
     #[test]

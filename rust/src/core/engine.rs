@@ -197,6 +197,11 @@ pub struct SchedCore {
     in_heap: Vec<bool>,
     /// Per-core crash counter indexing the plan's crash-gap sequence.
     crash_counts: Vec<u64>,
+    /// Slots retired by cross-shard core lending ([`SchedCore::set_cores`]):
+    /// never offered work, reclaimed lazily from the free heap exactly
+    /// like blacklisted cores. Physical slots only ever grow; shrink
+    /// retires in place so every per-core vector keeps stable indices.
+    retired: Vec<bool>,
     /// Monotone launch sequence: stale timer events (completions or spec
     /// wake-ups of attempts that died first) are dropped on mismatch.
     launch_seq: u64,
@@ -244,6 +249,7 @@ impl SchedCore {
             blacklisted: vec![false; cores],
             in_heap: vec![true; cores],
             crash_counts: vec![0; cores],
+            retired: vec![false; cores],
             launch_seq: 0,
             busy: 0,
             fault_stats: FaultStats::default(),
@@ -335,6 +341,8 @@ impl SchedCore {
         self.in_heap.resize(cores, true);
         self.crash_counts.clear();
         self.crash_counts.resize(cores, 0);
+        self.retired.clear();
+        self.retired.resize(cores, false);
         self.launch_seq = 0;
         self.busy = 0;
         self.fault_stats = FaultStats::default();
@@ -480,11 +488,11 @@ impl SchedCore {
         }
     }
 
-    /// Lowest free non-blacklisted core, without consuming it. Stale
-    /// entries for blacklisted cores are reclaimed lazily here.
+    /// Lowest free usable core, without consuming it. Stale entries for
+    /// blacklisted or retired cores are reclaimed lazily here.
     fn peek_free(&mut self) -> Option<usize> {
         while let Some(&Reverse(core)) = self.free_cores.peek() {
-            if self.blacklisted[core] {
+            if self.blacklisted[core] || self.retired[core] {
                 self.free_cores.pop();
                 self.in_heap[core] = false;
             } else {
@@ -1052,6 +1060,105 @@ impl SchedCore {
         self.fault_stats.good_us + self.fault_stats.wasted_us
     }
 
+    // ---- dynamic capacity (cross-shard core lending) ---------------------
+
+    /// Live (non-retired) core count — the capacity the scheduler may
+    /// actually fill. Physical slots only ever grow; a lending shrink
+    /// retires slots in place.
+    pub fn live_cores(&self) -> u32 {
+        self.retired.iter().filter(|&&r| !r).count() as u32
+    }
+
+    /// Free cores that could take work right now: idle, not blacklisted,
+    /// not retired. Published into the shard barrier snapshot — the
+    /// rebalancer never asks a shard to give up more than this, which is
+    /// what lets [`SchedCore::set_cores`] retire only-when-free slots.
+    pub fn free_usable_cores(&self) -> u32 {
+        (0..self.cores.len())
+            .filter(|&c| self.cores[c].is_none() && !self.blacklisted[c] && !self.retired[c])
+            .count() as u32
+    }
+
+    /// Queued (unlaunched) work across all active stages in slot-seconds
+    /// — the backlog metric each shard publishes at the sync barrier.
+    /// O(pending tasks); called once per epoch, off the event hot path.
+    pub fn queued_slot_s(&self) -> f64 {
+        let mut acc = 0.0;
+        for &slot in &self.active {
+            let s = self.stages.get(slot);
+            for t in &s.tasks[s.next_task..] {
+                acc += t.runtime_s;
+            }
+            for &ti in &s.retry_queue {
+                acc += s.tasks[ti as usize].runtime_s;
+            }
+        }
+        acc
+    }
+
+    /// Distinct users with at least one active stage (barrier snapshot).
+    pub fn active_user_count(&self) -> usize {
+        let mut users: Vec<UserId> = self
+            .active
+            .iter()
+            .map(|&slot| self.stages.get(slot).user)
+            .collect();
+        users.sort_unstable();
+        users.dedup();
+        users.len()
+    }
+
+    /// Resize the live core budget to `target` (cross-shard lending).
+    ///
+    /// *Shrink* retires the highest-indexed currently-free healthy slots
+    /// in place, reusing the blacklist machinery's lazy free-heap
+    /// reclaim — a retired slot is simply never offered again. The
+    /// caller guarantees enough free cores exist (the rebalancer caps
+    /// donations by the published [`SchedCore::free_usable_cores`], and
+    /// the shard does not advance between publishing and applying); any
+    /// slot that cannot be retired (busy or crashed) stays live and
+    /// shows up in the returned count.
+    ///
+    /// *Grow* re-activates the lowest-indexed retired slots first, then
+    /// appends fresh physical slots. Appended slots never crash: crash
+    /// clocks are armed per-core at simulation start for the initial
+    /// allocation only (see README "Work balancing").
+    ///
+    /// Returns the live core count after the call. `cfg.cores` keeps the
+    /// shard's static allocation — the policy and partitioner are built
+    /// from it once and keep the shard's nominal width.
+    pub fn set_cores(&mut self, target: u32) -> u32 {
+        let mut live = self.live_cores();
+        while live > target {
+            let victim = (0..self.cores.len()).rev().find(|&c| {
+                !self.retired[c] && !self.blacklisted[c] && self.cores[c].is_none()
+            });
+            let Some(victim) = victim else {
+                break; // nothing retirable left — report the shortfall
+            };
+            self.retired[victim] = true;
+            live -= 1;
+        }
+        while live < target {
+            if let Some(back) = (0..self.cores.len()).find(|&c| self.retired[c]) {
+                self.retired[back] = false;
+                if self.cores[back].is_none() && !self.blacklisted[back] {
+                    self.push_free(back);
+                }
+            } else {
+                let c = self.cores.len();
+                self.cores.push(None);
+                self.blacklisted.push(false);
+                self.crash_counts.push(0);
+                self.retired.push(false);
+                self.in_heap.push(false);
+                self.push_free(c);
+            }
+            live += 1;
+        }
+        live
+    }
+
     // ---- introspection --------------------------------------------------
 
     pub fn busy_cores(&self) -> usize {
@@ -1352,6 +1459,47 @@ mod tests {
             cap_after_first,
             "arena slots must be recycled, not leaked, across job churn"
         );
+    }
+
+    // ---- dynamic capacity -------------------------------------------------
+
+    #[test]
+    fn set_cores_shrinks_only_free_slots_and_grows_back() {
+        let mut c = core(4);
+        c.submit_job(0, job(1, 0, 1.0)).unwrap();
+        let launches = c.try_launch(0);
+        assert_eq!(launches.len(), 4);
+        // All busy: nothing is retirable, the shortfall is reported.
+        assert_eq!(c.set_cores(2), 4);
+        // Free cores 2 and 3: shrink retires the highest-indexed slots.
+        c.task_finished(1_000, 3);
+        c.task_finished(1_000, 2);
+        assert_eq!(c.set_cores(2), 2);
+        assert_eq!(c.live_cores(), 2);
+        assert_eq!(c.free_usable_cores(), 0);
+        // Retired slots are never offered: new work cannot launch...
+        c.submit_job(1_000, job(2, 1_000, 1.0)).unwrap();
+        assert!(c.try_launch(1_000).is_empty());
+        // ...until the budget grows back — re-activating slots 2 and 3
+        // first, then appending fresh slots 4 and 5.
+        assert_eq!(c.set_cores(6), 6);
+        let relaunch = c.try_launch(1_000);
+        let used: Vec<usize> = relaunch.iter().map(|l| l.core).collect();
+        assert_eq!(used, vec![2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn backlog_metrics_track_unlaunched_work() {
+        let mut c = core(2);
+        assert_eq!(c.queued_slot_s(), 0.0);
+        assert_eq!(c.active_user_count(), 0);
+        c.submit_job(0, job(1, 0, 1.0)).unwrap();
+        let q0 = c.queued_slot_s();
+        assert!(q0 > 0.0);
+        assert_eq!(c.active_user_count(), 1);
+        // Launching moves work from queued to running: backlog shrinks.
+        assert!(!c.try_launch(0).is_empty());
+        assert!(c.queued_slot_s() < q0);
     }
 
     // ---- fault machinery -------------------------------------------------

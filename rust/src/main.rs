@@ -30,6 +30,7 @@ fn main() -> ExitCode {
         "hotpath" => hotpath_cmd(&cli),
         "scale" => scale_cmd(&cli),
         "shard" => shard_cmd(&cli),
+        "benchsummary" => benchsummary_cmd(&cli),
         "replay" => replay_cmd(&cli),
         "tracegen" => tracegen_cmd(&cli),
         "run" => run(&cli),
@@ -453,6 +454,10 @@ fn shard_cmd(cli: &Cli) -> Result<(), String> {
         cfg.cores = 64;
     }
     let quick = cli.quick();
+    let counts = shard_count_sweep(cli, &cfg)?;
+    if cli.flag("skew") == Some("true") {
+        return shard_skew_cmd(cli, &cfg, &counts, &out, quick);
+    }
     // Size resolution mirrors `uwfq scale` (registry `scale` entry, quick
     // overrides, --jobs/--users on top) — but the sharded headline shape
     // is wider: 1M jobs across 100k users, so hash partitioning has a
@@ -470,11 +475,30 @@ fn shard_cmd(cli: &Cli) -> Result<(), String> {
     }
     spec = spec.with("cores", &cfg.cores.to_string());
     let params = uwfq::workload::registry::scale_params(&spec, cfg.seed)?;
+    println!(
+        "shard: {} jobs / {} users on {} cores, shard counts {:?} (policy {}, epoch {} s)",
+        params.jobs,
+        params.users,
+        params.cores,
+        counts,
+        cfg.policy.name(),
+        cfg.shard_epoch_s
+    );
+    let outcome = uwfq::bench::shard::run_shard(&params, &cfg, &counts);
+    print!("{}", uwfq::bench::shard::render(&outcome));
+    let mut sink = JsonSink::new();
+    uwfq::bench::shard::record_metrics(&outcome, &mut sink);
+    let bench_path = cli.flag_or("bench-json", &format!("{out}/BENCH_shard.json"));
+    sink.write(&bench_path).map_err(|e| e.to_string())?;
+    println!("shard bench done → {bench_path}");
+    Ok(())
+}
 
-    // Shard counts: `--shards N` benches {1, N}; the default sweeps
-    // powers of two. Both are clamped by cores (a shard needs a core);
-    // counts beyond the machine's parallelism still run (the threads
-    // just time-slice) but are worth a loud note.
+/// Shard counts for `uwfq shard`: `--shards N` benches {1, N}; the
+/// default sweeps powers of two. Both are clamped by cores (a shard
+/// needs a core); counts beyond the machine's parallelism still run
+/// (the threads just time-slice) but are worth a loud note.
+fn shard_count_sweep(cli: &Cli, cfg: &Config) -> Result<Vec<u32>, String> {
     let avail = std::thread::available_parallelism()
         .map(|n| n.get() as u32)
         .unwrap_or(1);
@@ -504,22 +528,78 @@ fn shard_cmd(cli: &Cli) -> Result<(), String> {
             );
         }
     }
+    Ok(counts)
+}
+
+/// `uwfq shard --skew` — the cross-shard work-balancing ablation: the
+/// Zipfian `skewed` stream at each shard count, static core split vs
+/// deterministic core lending (`speedup_vs_static` per count). An
+/// explicit `--shard_rebalance false` keeps only the static arm.
+fn shard_skew_cmd(
+    cli: &Cli,
+    cfg: &Config,
+    counts: &[u32],
+    out: &str,
+    quick: bool,
+) -> Result<(), String> {
+    // Size resolution routes through the registry's `skewed` entry;
+    // the non-quick default is the 1M-job headline shape the lending
+    // speedup is tracked on.
+    let mut spec = spec_with_quick("skewed", quick)?;
+    spec.params.extend(cfg.scenario_params.iter().cloned());
+    if !quick && cli.flag("jobs").is_none() {
+        spec = spec.with("jobs", "1000000");
+    }
+    if let Some(v) = cli.flag("jobs") {
+        spec = spec.with("jobs", v);
+    }
+    if let Some(v) = cli.flag("users") {
+        spec = spec.with("users", v);
+    }
+    spec = spec.with("cores", &cfg.cores.to_string());
+    let params = uwfq::workload::registry::skewed_params(&spec)?;
+    // The ablation runs both arms by default; only an explicit
+    // `--shard_rebalance false` drops the lending arm (the config key's
+    // default is off, so absence means "compare", not "skip").
+    let lending = cli.flag("shard_rebalance") != Some("false");
     println!(
-        "shard: {} jobs / {} users on {} cores, shard counts {:?} (policy {}, epoch {} s)",
+        "shard --skew: {} jobs / {} users ({} hot, zipf_s {}) on {} cores, \
+         shard counts {:?}, lending {} (policy {}, epoch {} s)",
         params.jobs,
         params.users,
+        params.hot_users,
+        params.zipf_s,
         params.cores,
         counts,
+        if lending { "on" } else { "off" },
         cfg.policy.name(),
         cfg.shard_epoch_s
     );
-    let outcome = uwfq::bench::shard::run_shard(&params, &cfg, &counts);
-    print!("{}", uwfq::bench::shard::render(&outcome));
+    let outcome = uwfq::bench::shard::run_shard_skew(cfg.seed, &params, cfg, counts, lending);
+    print!("{}", uwfq::bench::shard::render_skew(&outcome));
     let mut sink = JsonSink::new();
-    uwfq::bench::shard::record_metrics(&outcome, &mut sink);
+    uwfq::bench::shard::record_skew_metrics(&outcome, &mut sink);
     let bench_path = cli.flag_or("bench-json", &format!("{out}/BENCH_shard.json"));
     sink.write(&bench_path).map_err(|e| e.to_string())?;
-    println!("shard bench done → {bench_path}");
+    println!("shard skew bench done → {bench_path}");
+    Ok(())
+}
+
+/// `uwfq benchsummary` — merge every `BENCH_*.json` artifact found in
+/// the given directories (default: `out/` then `.`) into one markdown
+/// perf-trajectory table on stdout; `--out FILE` also writes the file.
+fn benchsummary_cmd(cli: &Cli) -> Result<(), String> {
+    let dirs: Vec<String> = if cli.positional.is_empty() {
+        vec!["out".to_string(), ".".to_string()]
+    } else {
+        cli.positional.clone()
+    };
+    let md = uwfq::bench::summary::summarize(&dirs)?;
+    print!("{md}");
+    if let Some(path) = cli.flag("out") {
+        std::fs::write(path, &md).map_err(|e| format!("{path}: {e}"))?;
+        println!("\nbench summary → {path}");
+    }
     Ok(())
 }
 

@@ -472,6 +472,23 @@ impl TwoLevelVtime {
             self.r_total = r;
         }
     }
+
+    /// Re-couple to an explicit shard rate — the core-lending variant of
+    /// [`TwoLevelVtime::recouple`]. Under cross-shard lending the shard's
+    /// capacity is its *lent* core allocation, not the population-share
+    /// rescale, so the caller passes the allocation directly. Same
+    /// level-set semantics and the same empty-shard guard: a
+    /// non-positive rate keeps the previous one (the rate only matters
+    /// again once a user arrives, and the next barrier re-derives it).
+    /// The drift bound survives because the rebalancer conserves the
+    /// total: Σ r_shard = R_cluster, so within one epoch the population
+    /// still advances by at most `R_cluster · epoch` resource-seconds.
+    pub fn recouple_to_rate(&mut self, v_ref: f64, r_shard: f64) {
+        self.v_global = v_ref;
+        if r_shard > 0.0 {
+            self.r_total = r_shard;
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -736,6 +753,21 @@ mod tests {
         // And it can admit users again afterwards.
         let d = vt.job_arrival(1.5, 9, 9, 1.0, 1.0, 0.0);
         assert!(d > 7.0);
+    }
+
+    #[test]
+    fn recouple_to_rate_sets_lent_allocation() {
+        let mut vt = TwoLevelVtime::new(8.0);
+        vt.job_arrival(0.0, 1, 1, 4.0, 1.0, 0.0);
+        let (_n, _v) = vt.sync_snapshot(0.5);
+        // The shard was lent 12 of the cluster's cores.
+        vt.recouple_to_rate(5.0, 12.0);
+        assert_eq!(vt.v_global.to_bits(), 5.0f64.to_bits());
+        assert!(close(vt.r_total, 12.0));
+        // Non-positive rates keep the previous allocation.
+        vt.recouple_to_rate(6.0, 0.0);
+        assert_eq!(vt.v_global.to_bits(), 6.0f64.to_bits());
+        assert!(close(vt.r_total, 12.0));
     }
 
     #[test]

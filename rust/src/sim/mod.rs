@@ -49,7 +49,10 @@ pub mod shard;
 
 pub use calendar::{CalendarQueue, EventBackend, EventQ};
 pub use event::Ev;
-pub use shard::{run_sharded, shard_cores, shard_of, ShardRun, ShardSummary, SyncStats};
+pub use shard::{
+    rebalance_cores, run_sharded, shard_cores, shard_of, ShardLoad, ShardRun, ShardSummary,
+    SyncStats,
+};
 use event::{KIND_CRASH, KIND_RECOVER, KIND_RETRY, KIND_SPEC, KIND_TASK};
 
 /// Event-core configuration for one simulation run.
@@ -694,6 +697,12 @@ fn idle_key(cfg: &Config, job: &JobSpec) -> IdleKey {
     k.push(cfg.seed);
     k.push(cfg.estimator_sigma.to_bits());
     k.push(job.weight.to_bits());
+    // DAG-shape fingerprint: a single digest of the full parent wiring.
+    // The per-stage fields below length-prefix each parent list, but the
+    // digest makes shape distinctness independent of how those fields
+    // evolve — two jobs of equal slot-time with different wiring (chain
+    // vs fork-join) can never alias to one memoized baseline.
+    k.push(dag_shape_fingerprint(job));
     // In a strict stage chain exactly one stage is selectable at any
     // instant, so the scheduling policy cannot influence an idle run —
     // those entries are shared across policy cells (the common case:
@@ -732,6 +741,28 @@ fn idle_key(cfg: &Config, job: &JobSpec) -> IdleKey {
         }
     }
     IdleKey(k)
+}
+
+/// FNV-1a digest of a job's DAG *shape*: stage count plus every stage's
+/// parent list, each length-prefixed so `[[0],[]]` and `[[],[0]]` mix
+/// differently. Slot-times and costs are deliberately excluded — this
+/// captures wiring only.
+fn dag_shape_fingerprint(job: &JobSpec) -> u64 {
+    fn mix(mut h: u64, v: u64) -> u64 {
+        for b in v.to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    h = mix(h, job.stages.len() as u64);
+    for s in &job.stages {
+        h = mix(h, s.parents.len() as u64);
+        for &p in &s.parents {
+            h = mix(h, p as u64);
+        }
+    }
+    h
 }
 
 /// Hash-sharded segments of the idle-response memo: parallel shards (and
@@ -1045,6 +1076,57 @@ mod tests {
         assert_eq!(idle_response_time(&cfg(4, PolicyKind::Fair), &ja), rt_a);
         let (hits3, _, _) = idle_cache_stats();
         assert!(hits3 > hits2, "chain shapes must share across policies");
+    }
+
+    #[test]
+    fn idle_memo_distinguishes_equal_slot_time_dag_shapes() {
+        // Two jobs with identical per-stage slot-times (so equal total
+        // slot-time) but different wiring: a strict chain vs a fork-join
+        // diamond. The diamond overlaps its middle stages, so its idle
+        // response time is strictly shorter — if the memo key ignored
+        // shape they would alias to whichever baseline ran first.
+        fn stage(parents: Vec<usize>, slot: f64) -> crate::core::job::StageSpec {
+            use crate::core::job::{CostProfile, StagePhase, StageSpec};
+            StageSpec {
+                phase: StagePhase::Generic,
+                is_leaf_input: parents.is_empty(),
+                input_bytes: 48 << 20,
+                slot_time: slot,
+                cost: CostProfile::uniform(),
+                max_parallelism: None,
+                opcount: 4,
+                parents,
+            }
+        }
+        let mk = |name: &str, wiring: [Vec<usize>; 4]| JobSpec {
+            user: 1,
+            name: name.into(),
+            arrival: 0,
+            weight: 1.0,
+            stages: wiring.into_iter().map(|p| stage(p, 0.816_237)).collect(),
+        };
+        let chain = mk("shape-chain", [vec![], vec![0], vec![1], vec![2]]);
+        let diamond = mk("shape-diamond", [vec![], vec![0], vec![0], vec![1, 2]]);
+        assert!(chain.validate().is_ok() && diamond.validate().is_ok());
+        assert_eq!(chain.slot_time().to_bits(), diamond.slot_time().to_bits());
+        assert_ne!(
+            super::dag_shape_fingerprint(&chain),
+            super::dag_shape_fingerprint(&diamond),
+            "wiring must change the shape fingerprint"
+        );
+        let c = cfg(4, PolicyKind::Fifo);
+        let (_, miss0, _) = idle_cache_stats();
+        let rt_chain = idle_response_time(&c, &chain);
+        let rt_diamond = idle_response_time(&c, &diamond);
+        let (_, miss1, _) = idle_cache_stats();
+        assert!(
+            miss1 >= miss0 + 2,
+            "equal-slot-time shapes must be distinct cache entries"
+        );
+        assert!(
+            rt_diamond < rt_chain,
+            "fork-join overlaps its middle stages: {rt_diamond} vs {rt_chain}"
+        );
     }
 
     #[test]

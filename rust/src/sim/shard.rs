@@ -33,6 +33,30 @@
 //! serve disjoint user sets on disjoint cores, arrival sequence numbers
 //! (and therefore fault plans) are shard-local, and the virtual systems
 //! only re-couple at epoch granularity.
+//!
+//! # Cross-shard core lending (`shard_rebalance`)
+//!
+//! The static `cores/S` split collapses on skewed populations: a few
+//! heavy users pin one shard at 100% while its siblings idle. With
+//! `cfg.shard_rebalance` on, every shard additionally publishes its
+//! backlog into the barrier snapshot — queued slot-seconds
+//! ([`SchedCore::queued_slot_s`]), pending tasks, active users and free
+//! usable cores — and every thread runs the **same pure function**
+//! [`rebalance_cores`] over the same published vector, so all threads
+//! derive the identical next allocation with no leader and no extra
+//! synchronization. Moves are bounded by a per-shard floor
+//! (`rebalance_min_cores`), a per-epoch migration cap (`rebalance_cap`),
+//! a hysteresis factor ([`REBALANCE_HYSTERESIS`]), and each donor's
+//! published free-core count — which is what lets
+//! [`SchedCore::set_cores`] retire only-when-free slots: the shard does
+//! not advance between publishing and applying, so a published-free core
+//! is still free. UWFQ's `r_total` re-scales to the lent allocation
+//! ([`crate::sched::vtime::TwoLevelVtime::recouple_to_rate`]); since the
+//! rebalancer conserves the total (`Σ r_shard = R_cluster`), a shard
+//! still advances by at most `R_cluster · epoch` resource-seconds per
+//! epoch and the `cores × shard_epoch_s` drift bound is unchanged.
+//! `shard_rebalance = false` (the default) takes none of these paths and
+//! stays byte-identical to the static engine.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Barrier, Mutex};
@@ -72,6 +96,100 @@ pub struct SyncStats {
     /// The provable ceiling: `cores × shard_epoch_s` — one epoch of
     /// service at the cluster rate.
     pub bound_rsec: f64,
+    /// Total cores migrated by lending over the run (0 when
+    /// `shard_rebalance` is off or `S = 1`).
+    pub lend_events: u64,
+    /// Max over epochs of (hottest shard backlog) / (mean shard backlog)
+    /// among undrained shards — 1.0 is perfectly balanced; only recorded
+    /// when lending is on.
+    pub max_backlog_imbalance: f64,
+}
+
+/// Per-shard load snapshot published at the sync barrier — the input
+/// vector of [`rebalance_cores`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardLoad {
+    /// Queued (unlaunched) work in slot-seconds.
+    pub backlog_rsec: f64,
+    /// Queued (unlaunched) task count.
+    pub pending: u64,
+    /// Distinct users with at least one active stage.
+    pub active_users: u64,
+    /// Free usable cores — the shard's maximum donation this epoch.
+    pub free_cores: u32,
+    /// Stream drained and engine idle.
+    pub done: bool,
+}
+
+/// Lending hysteresis: a core moves only when the receiver's per-core
+/// backlog exceeds the donor's by this factor, so near-balanced loads
+/// don't thrash cores back and forth across epochs.
+pub const REBALANCE_HYSTERESIS: f64 = 1.5;
+
+/// The pure-function core rebalancer: given the current allocation and
+/// the synchronized load snapshot, return the next epoch's allocation.
+///
+/// Determinism is the whole design: every shard thread calls this with
+/// byte-identical inputs (the published snapshot vector) and must derive
+/// the identical output, so the function depends on nothing else — no
+/// clock, no RNG, no thread identity. Greedy, one core at a time, at
+/// most `cap` moves per epoch: the receiver is the undrained shard with
+/// the heaviest per-core backlog (ties → lowest index), the donor the
+/// shard with the lightest per-core backlog that still has published
+/// free cores and sits above the `min_cores` floor (ties → lowest
+/// index). A move happens only past [`REBALANCE_HYSTERESIS`], a shard
+/// never both donates and receives in one epoch, and the total is
+/// conserved by construction (`Σ next = Σ alloc`).
+pub fn rebalance_cores(alloc: &[u32], loads: &[ShardLoad], min_cores: u32, cap: u32) -> Vec<u32> {
+    let n = alloc.len();
+    let mut next = alloc.to_vec();
+    if n < 2 {
+        return next;
+    }
+    // A shard can donate at most what it published free (the engine can
+    // only retire idle cores) and never drops below the floor.
+    let mut donate_left: Vec<u32> = (0..n)
+        .map(|i| loads[i].free_cores.min(alloc[i].saturating_sub(min_cores)))
+        .collect();
+    let mut received = vec![false; n];
+    let mut donated = vec![false; n];
+    let per_core = |i: usize, next: &[u32]| loads[i].backlog_rsec / next[i].max(1) as f64;
+    for _ in 0..cap {
+        let recv = (0..n)
+            .filter(|&i| !loads[i].done && !donated[i] && loads[i].backlog_rsec > 0.0)
+            .max_by(|&a, &b| {
+                per_core(a, &next)
+                    .partial_cmp(&per_core(b, &next))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    // Strict order on ties: the lower index wins the max.
+                    .then(b.cmp(&a))
+            });
+        let Some(recv) = recv else {
+            break;
+        };
+        let donor = (0..n)
+            .filter(|&i| {
+                i != recv && !received[i] && donate_left[i] > 0 && next[i] > min_cores
+            })
+            .min_by(|&a, &b| {
+                per_core(a, &next)
+                    .partial_cmp(&per_core(b, &next))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+        let Some(donor) = donor else {
+            break;
+        };
+        if per_core(recv, &next) <= REBALANCE_HYSTERESIS * per_core(donor, &next) {
+            break; // close enough — hysteresis holds the allocation
+        }
+        next[recv] += 1;
+        next[donor] -= 1;
+        donate_left[donor] -= 1;
+        received[recv] = true;
+        donated[donor] = true;
+    }
+    next
 }
 
 /// One shard's outcome within a [`ShardRun`].
@@ -130,19 +248,40 @@ where
     let cores_by_shard = shard_cores(cfg.cores, shards);
     let epoch_us: TimeUs = crate::s_to_us(cfg.shard_epoch_s.max(1e-6));
     let cluster_cores = cfg.cores as f64;
+    // Lending gate — every new code path below hides behind this, which
+    // is what keeps `shard_rebalance = false` byte-identical to the
+    // static engine. The floor is validated here, up front, instead of
+    // letting an unsatisfiable allocation starve shards at epoch one.
+    let lend = cfg.shard_rebalance && shards > 1;
+    if cfg.shard_rebalance {
+        assert!(
+            cfg.rebalance_min_cores.saturating_mul(shards) <= cfg.cores,
+            "rebalance_min_cores ({}) x shards ({}) exceeds cores ({}): \
+             the per-shard floor is unsatisfiable",
+            cfg.rebalance_min_cores,
+            shards,
+            cfg.cores
+        );
+    }
 
-    // Published per-shard state: (active users, v_global bits, done).
-    // Written before barrier A, read between A and B — the barrier
-    // pair is the synchronization; the atomics only make the slots
-    // shareable.
+    // Published per-shard state: (active users, v_global bits, done),
+    // plus the backlog snapshot when lending is on. Written before
+    // barrier A, read between A and B — the barrier pair is the
+    // synchronization; the atomics only make the slots shareable.
     let n_act: Vec<AtomicUsize> = (0..shards).map(|_| AtomicUsize::new(0)).collect();
     let v_bits: Vec<AtomicU64> = (0..shards).map(|_| AtomicU64::new(0)).collect();
     let done_fl: Vec<AtomicBool> = (0..shards).map(|_| AtomicBool::new(false)).collect();
+    let backlog_bits: Vec<AtomicU64> = (0..shards).map(|_| AtomicU64::new(0)).collect();
+    let pend_ct: Vec<AtomicU64> = (0..shards).map(|_| AtomicU64::new(0)).collect();
+    let user_ct: Vec<AtomicU64> = (0..shards).map(|_| AtomicU64::new(0)).collect();
+    let free_ct: Vec<AtomicU64> = (0..shards).map(|_| AtomicU64::new(0)).collect();
     let barrier = Barrier::new(shards as usize);
     let sync = Mutex::new(SyncStats {
         epochs: 0,
         max_drift_rsec: 0.0,
         bound_rsec: cluster_cores * crate::us_to_s(epoch_us),
+        lend_events: 0,
+        max_backlog_imbalance: 0.0,
     });
 
     let mut results: Vec<(StreamSummary, K)> = Vec::with_capacity(shards as usize);
@@ -153,7 +292,10 @@ where
             shard_cfg.cores = cores_by_shard[s as usize];
             let (make_stream, make_sink) = (&make_stream, &make_sink);
             let (n_act, v_bits, done_fl) = (&n_act, &v_bits, &done_fl);
+            let (backlog_bits, pend_ct, user_ct, free_ct) =
+                (&backlog_bits, &pend_ct, &user_ct, &free_ct);
             let (barrier, sync) = (&barrier, &sync);
+            let cores_by_shard = &cores_by_shard;
             handles.push(scope.spawn(move || {
                 let mut core = SchedCore::from_config(shard_cfg);
                 let mut sink = make_sink(s);
@@ -167,6 +309,12 @@ where
                     debug_assert!(done, "run_until(MAX) cannot pause");
                     sim.finish()
                 } else {
+                    let si = s as usize;
+                    // Thread-local view of the lent allocation: every
+                    // thread derives the identical vector each epoch from
+                    // the same published snapshot, so no thread ever
+                    // needs another's copy.
+                    let mut alloc: Vec<u32> = cores_by_shard.clone();
                     let mut done = false;
                     let mut epoch: u64 = 1;
                     loop {
@@ -185,14 +333,72 @@ where
                                 None => (0, 0.0), // no virtual time: decoupled
                             }
                         };
-                        n_act[s as usize].store(n, Ordering::Relaxed);
-                        v_bits[s as usize].store(v.to_bits(), Ordering::Relaxed);
-                        done_fl[s as usize].store(done, Ordering::Relaxed);
+                        n_act[si].store(n, Ordering::Relaxed);
+                        v_bits[si].store(v.to_bits(), Ordering::Relaxed);
+                        done_fl[si].store(done, Ordering::Relaxed);
+                        if lend {
+                            let c = sim.core_mut();
+                            backlog_bits[si].store(c.queued_slot_s().to_bits(), Ordering::Relaxed);
+                            pend_ct[si].store(c.pending_task_count() as u64, Ordering::Relaxed);
+                            user_ct[si].store(c.active_user_count() as u64, Ordering::Relaxed);
+                            free_ct[si].store(c.free_usable_cores() as u64, Ordering::Relaxed);
+                        }
                         barrier.wait(); // A: everyone published
                         if done_fl.iter().all(|f| f.load(Ordering::Relaxed)) {
                             // Flags were all written before barrier A, so
                             // every shard takes this exit together.
                             break sim.finish();
+                        }
+                        // Core lending: all threads compute the identical
+                        // next allocation from the published snapshot; each
+                        // applies only its own slot. Donations are capped by
+                        // published free cores, and the shard has not
+                        // advanced since publishing, so retiring never hits
+                        // a busy core.
+                        let mut lent_rate = 0.0f64;
+                        if lend {
+                            let loads: Vec<ShardLoad> = (0..shards as usize)
+                                .map(|i| ShardLoad {
+                                    backlog_rsec: f64::from_bits(
+                                        backlog_bits[i].load(Ordering::Relaxed),
+                                    ),
+                                    pending: pend_ct[i].load(Ordering::Relaxed),
+                                    active_users: user_ct[i].load(Ordering::Relaxed),
+                                    free_cores: free_ct[i].load(Ordering::Relaxed) as u32,
+                                    done: done_fl[i].load(Ordering::Relaxed),
+                                })
+                                .collect();
+                            let next = rebalance_cores(
+                                &alloc,
+                                &loads,
+                                cfg.rebalance_min_cores,
+                                cfg.rebalance_cap,
+                            );
+                            if next[si] != alloc[si] {
+                                let got = sim.core_mut().set_cores(next[si]);
+                                debug_assert_eq!(got, next[si], "lending shrink hit a busy core");
+                            }
+                            lent_rate = next[si] as f64;
+                            if s == 0 {
+                                let moved: u64 = next
+                                    .iter()
+                                    .zip(alloc.iter())
+                                    .map(|(&a, &b)| u64::from(a.saturating_sub(b)))
+                                    .sum();
+                                let (mut bmax, mut bsum, mut live) = (0.0f64, 0.0f64, 0usize);
+                                for l in loads.iter().filter(|l| !l.done) {
+                                    bmax = bmax.max(l.backlog_rsec);
+                                    bsum += l.backlog_rsec;
+                                    live += 1;
+                                }
+                                let mut st = sync.lock().unwrap();
+                                st.lend_events += moved;
+                                if live > 0 && bsum > 0.0 {
+                                    let imb = bmax / (bsum / live as f64);
+                                    st.max_backlog_imbalance = st.max_backlog_imbalance.max(imb);
+                                }
+                            }
+                            alloc = next;
                         }
                         let mut n_total = 0usize;
                         let mut acc = 0.0f64;
@@ -207,7 +413,14 @@ where
                             let v_ref = acc / n_total as f64;
                             if !done {
                                 if let Some(vt) = sim.core_mut().policy.vtime_mut() {
-                                    vt.recouple(v_ref, cluster_cores, n, n_total);
+                                    if lend {
+                                        // The shard's capacity is its lent
+                                        // allocation, not the population
+                                        // share; Σ r = R_cluster either way.
+                                        vt.recouple_to_rate(v_ref, lent_rate);
+                                    } else {
+                                        vt.recouple(v_ref, cluster_cores, n, n_total);
+                                    }
                                 }
                             }
                             if s == 0 {
@@ -399,6 +612,111 @@ mod tests {
                 assert!(seen.insert(u), "user {u} completed in two shards");
             }
         }
+    }
+
+    fn load(backlog: f64, free: u32, done: bool) -> ShardLoad {
+        ShardLoad {
+            backlog_rsec: backlog,
+            pending: if backlog > 0.0 { 1 } else { 0 },
+            active_users: if backlog > 0.0 { 1 } else { 0 },
+            free_cores: free,
+            done,
+        }
+    }
+
+    #[test]
+    fn rebalancer_moves_cores_toward_backlog_within_all_limits() {
+        // Shard 0 is hot, shards 1-3 idle with free cores: moves flow to
+        // shard 0, bounded by the cap, and the total is conserved.
+        let alloc = vec![2u32, 2, 2, 2];
+        let loads = vec![
+            load(100.0, 0, false),
+            load(0.0, 2, false),
+            load(0.0, 2, false),
+            load(0.0, 2, true),
+        ];
+        let next = rebalance_cores(&alloc, &loads, 1, 2);
+        assert_eq!(next.iter().sum::<u32>(), 8, "total conserved");
+        assert_eq!(next[0], 4, "cap of 2 moves, all to the hot shard");
+        assert!(next.iter().skip(1).all(|&c| c >= 1), "floor respected");
+        // Floor: min_cores = 2 forbids any donation from 2-core shards.
+        let held = rebalance_cores(&alloc, &loads, 2, 4);
+        assert_eq!(held, alloc);
+        // Free-core limit: a donor with nothing published free keeps its
+        // allocation even above the floor.
+        let busy = vec![
+            load(100.0, 0, false),
+            load(0.1, 0, false),
+            load(0.1, 0, false),
+            load(0.1, 0, false),
+        ];
+        assert_eq!(rebalance_cores(&alloc, &busy, 1, 4), alloc);
+    }
+
+    #[test]
+    fn rebalancer_hysteresis_holds_near_balanced_loads() {
+        let alloc = vec![4u32, 4];
+        // 1.2x per-core imbalance — under the 1.5x hysteresis: no move.
+        let mild = vec![load(12.0, 1, false), load(10.0, 2, false)];
+        assert_eq!(rebalance_cores(&alloc, &mild, 1, 4), alloc);
+        // 4x imbalance: cores move.
+        let steep = vec![load(40.0, 1, false), load(10.0, 2, false)];
+        let next = rebalance_cores(&alloc, &steep, 1, 4);
+        assert!(next[0] > 4, "steep imbalance must trigger lending: {next:?}");
+        assert_eq!(next.iter().sum::<u32>(), 8);
+        // All drained: nothing to receive, nothing moves.
+        let drained = vec![load(0.0, 4, true), load(0.0, 4, true)];
+        assert_eq!(rebalance_cores(&alloc, &drained, 1, 4), alloc);
+        // Single shard: identity.
+        assert_eq!(rebalance_cores(&[8], &[load(9.0, 0, false)], 1, 4), vec![8]);
+    }
+
+    #[test]
+    fn lending_run_completes_within_bound_and_repeats() {
+        let mut cfg = base_cfg(PolicyKind::Uwfq);
+        cfg.shards = 4;
+        cfg.shard_epoch_s = 1.0;
+        cfg.shard_rebalance = true;
+        cfg.rebalance_cap = 2;
+        let go = || {
+            run_sharded(
+                &cfg,
+                SimOpts::default(),
+                |_| scale_stream(&params()),
+                |_| CollectSink::default(),
+            )
+        };
+        let (a, b) = (go(), go());
+        assert_eq!(a.summary.jobs_completed, 600);
+        assert!(
+            a.sync.max_drift_rsec <= a.sync.bound_rsec + 1e-9,
+            "drift {} exceeds bound {} under lending",
+            a.sync.max_drift_rsec,
+            a.sync.bound_rsec
+        );
+        assert_eq!(a.summary.jobs_completed, b.summary.jobs_completed);
+        assert_eq!(a.summary.makespan_s.to_bits(), b.summary.makespan_s.to_bits());
+        assert_eq!(a.sync.lend_events, b.sync.lend_events);
+        for (sa, sb) in a.sinks.iter().zip(b.sinks.iter()) {
+            let fa: Vec<_> = sa.completed.iter().map(|c| (c.job, c.finish)).collect();
+            let fb: Vec<_> = sb.completed.iter().map(|c| (c.job, c.finish)).collect();
+            assert_eq!(fa, fb, "lending repeat diverged");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unsatisfiable")]
+    fn lending_rejects_unsatisfiable_floor_up_front() {
+        let mut cfg = base_cfg(PolicyKind::Uwfq);
+        cfg.shards = 4;
+        cfg.shard_rebalance = true;
+        cfg.rebalance_min_cores = 3; // 3 x 4 > 8 cores
+        run_sharded(
+            &cfg,
+            SimOpts::default(),
+            |_| scale_stream(&params()),
+            |_| CollectSink::default(),
+        );
     }
 
     #[test]

@@ -25,7 +25,7 @@ use std::sync::OnceLock;
 use super::gtrace::{self, GtraceParams};
 use super::scenarios;
 use super::stream::{self, materialize, JobStream, ScaleParams};
-use super::stress::{self, BurstyParams, DiurnalParams, HeavytailParams};
+use super::stress::{self, BurstyParams, DiurnalParams, HeavytailParams, SkewedParams};
 use super::traceio::{self, ShapeParams, TraceFormat, TraceParams};
 use super::tracefile;
 use super::{UserClass, Workload};
@@ -397,6 +397,33 @@ fn trace_params_from(p: &Params, seed: u64) -> Result<TraceParams, String> {
     })
 }
 
+/// Resolve a `skewed` spec into [`SkewedParams`] — the registry schema is
+/// the single source for the Zipf defaults, shared by the `skewed` entry
+/// and the `uwfq shard --skew` bench harness.
+pub fn skewed_params(spec: &ScenarioSpec) -> Result<SkewedParams, String> {
+    if spec.name != "skewed" {
+        return Err(format!("skewed_params: spec names '{}', not 'skewed'", spec.name));
+    }
+    let sc = Registry::global().get("skewed")?;
+    let p = Params::from_schema(sc.schema(), &spec.params)
+        .map_err(|e| format!("scenario 'skewed': {e}"))?;
+    skewed_params_from(&p)
+}
+
+/// Range validation lives in `stress::skewed` — the entry's `build` and
+/// every harness caller hit the same checks when constructing the stream.
+fn skewed_params_from(p: &Params) -> Result<SkewedParams, String> {
+    Ok(SkewedParams {
+        users: p.u32("users")?,
+        jobs: p.u64("jobs"),
+        zipf_s: p.f64("zipf_s"),
+        hot_users: p.u32("hot_users")?,
+        cores: p.u32("cores")?,
+        target_utilization: p.f64("target_utilization"),
+        skew_fraction: p.f64("skew_fraction"),
+    })
+}
+
 // ---------------------------------------------------------------------------
 // Registry
 // ---------------------------------------------------------------------------
@@ -420,6 +447,7 @@ impl Registry {
                 Box::new(Bursty),
                 Box::new(Heavytail),
                 Box::new(Diurnal),
+                Box::new(Skewed),
             ],
         }
     }
@@ -805,6 +833,41 @@ impl Scenario for Diurnal {
     }
 }
 
+struct Skewed;
+
+const SKEWED_SCHEMA: &[ParamSpec] = &[
+    p_u64("users", 400, "total user population (hot head + cold tail)"),
+    p_u64("jobs", 20_000, "total jobs across all users"),
+    p_f64("zipf_s", 1.2, "Zipf exponent of the hot head"),
+    p_u64("hot_users", 16, "head size following the Zipf law"),
+    p_u64("cores", 8, "cluster size the window is shaped for"),
+    p_f64("target_utilization", 0.7, "offered load vs cluster capacity"),
+    p_f64("skew_fraction", 0.2, "fraction of stages with skewed cost"),
+];
+
+impl Scenario for Skewed {
+    fn name(&self) -> &'static str {
+        "skewed"
+    }
+    fn doc(&self) -> &'static str {
+        "Zipfian per-user rates: a hot head pins shards, the tail idles"
+    }
+    fn schema(&self) -> &'static [ParamSpec] {
+        SKEWED_SCHEMA
+    }
+    fn quick_overrides(&self) -> &'static [(&'static str, &'static str)] {
+        &[("jobs", "1200"), ("users", "40"), ("hot_users", "8")]
+    }
+    fn build(&self, seed: u64, p: &Params) -> Result<ScenarioInstance, String> {
+        let sp = skewed_params_from(p)?;
+        Ok(ScenarioInstance {
+            name: "skewed",
+            stream: Box::new(stress::skewed(seed, &sp)?),
+            user_class: stress::skewed_classes(&sp),
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -823,6 +886,7 @@ mod tests {
             "bursty",
             "heavytail",
             "diurnal",
+            "skewed",
         ] {
             assert!(names.contains(&expect), "missing '{expect}' in {names:?}");
         }
@@ -976,6 +1040,22 @@ mod tests {
         assert_eq!((gp.users, gp.heavy_users), (8, 2));
         assert!(gtrace_params(&ScenarioSpec::new("gtrace").with("users", "1")).is_err());
         assert!(gtrace_params(&ScenarioSpec::new("scale")).is_err());
+    }
+
+    #[test]
+    fn skewed_params_resolve_through_the_schema() {
+        let sp = skewed_params(&ScenarioSpec::new("skewed")).unwrap();
+        assert_eq!((sp.users, sp.jobs, sp.hot_users), (400, 20_000, 16));
+        assert_eq!(sp.zipf_s, 1.2);
+        let sp = skewed_params(
+            &ScenarioSpec::new("skewed").with("jobs", "500").with("hot_users", "4"),
+        )
+        .unwrap();
+        assert_eq!((sp.jobs, sp.hot_users), (500, 4));
+        assert!(skewed_params(&ScenarioSpec::new("scale")).is_err());
+        // Range errors surface when the stream is built.
+        let err = ScenarioSpec::new("skewed").with("hot_users", "0").build(1).unwrap_err();
+        assert!(err.contains("hot_users"), "{err}");
     }
 
     #[test]

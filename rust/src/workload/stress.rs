@@ -12,6 +12,12 @@
 //! * [`diurnal`] — sinusoidal-rate Poisson arrivals (thinning method):
 //!   the load swings between trough and peak every period, exercising
 //!   schedulers across utilization regimes inside a single run.
+//! * [`skewed`] — Zipfian per-user submission rates: a small head of
+//!   `hot_users` carries almost all jobs while a long tail idles. Under
+//!   the sharded engine this is the adversarial partition — the heavy
+//!   users hash onto few shards and pin them while siblings starve —
+//!   which is exactly what cross-shard core lending
+//!   ([`crate::sim::rebalance_cores`]) exists to fix.
 //!
 //! Each is defined once as per-user lazy generators k-way merged in
 //! arrival order ([`MergeStream`]) — O(users) resident state — and is
@@ -301,6 +307,174 @@ pub fn diurnal_classes(p: &DiurnalParams) -> HashMap<UserId, UserClass> {
     (1..=p.users).map(|u| (u, UserClass::Frequent)).collect()
 }
 
+// ---------------------------------------------------------------------------
+// skewed — Zipfian per-user rates, tunable head size and exponent
+// ---------------------------------------------------------------------------
+
+/// Per-job slot-time draw for [`skewed`]: uniform over this range, so the
+/// mean `(min + max) / 2` is analytically known and the window sizing
+/// below hits `target_utilization` in expectation.
+const SKEWED_SLOT_MIN_S: f64 = 0.5;
+const SKEWED_SLOT_MAX_S: f64 = 6.5;
+
+/// Parameters of the [`skewed`] scenario.
+#[derive(Clone, Debug)]
+pub struct SkewedParams {
+    /// Total user population (hot head + cold tail).
+    pub users: u32,
+    /// Total jobs across all users (apportioned by the Zipf law).
+    pub jobs: u64,
+    /// Zipf exponent of the head: user `k` (1-based, `k <= hot_users`)
+    /// gets weight `k^-zipf_s`. Larger = steeper skew.
+    pub zipf_s: f64,
+    /// Head size: users `1..=hot_users` follow the Zipf law; the entire
+    /// tail *shares* the next rank's weight `(hot_users+1)^-zipf_s`, so
+    /// the head dominates regardless of tail size.
+    pub hot_users: u32,
+    /// Cluster cores the window is sized for.
+    pub cores: u32,
+    /// Offered load as a fraction of `cores` capacity, in (0, 1].
+    pub target_utilization: f64,
+    /// Fraction of stages given a skewed cost profile (as in gtrace).
+    pub skew_fraction: f64,
+}
+
+impl Default for SkewedParams {
+    fn default() -> Self {
+        SkewedParams {
+            users: 400,
+            jobs: 20_000,
+            zipf_s: 1.2,
+            hot_users: 16,
+            cores: 8,
+            target_utilization: 0.7,
+            skew_fraction: 0.2,
+        }
+    }
+}
+
+/// Zipf-head weights: `k^-zipf_s` for the head, one extra rank's weight
+/// split evenly across the whole tail.
+fn zipf_weights(p: &SkewedParams) -> Vec<f64> {
+    let n = p.users as usize;
+    let h = (p.hot_users as usize).min(n);
+    let mut w: Vec<f64> = (1..=h).map(|k| (k as f64).powf(-p.zipf_s)).collect();
+    if n > h {
+        let each = ((h + 1) as f64).powf(-p.zipf_s) / (n - h) as f64;
+        w.resize(n, each);
+    }
+    w
+}
+
+/// Largest-remainder apportionment of `total` jobs over `weights`:
+/// floors first, then the largest fractional parts (ties → lower index)
+/// absorb the remainder, so counts always sum to exactly `total`.
+fn apportion_jobs(total: u64, weights: &[f64]) -> Vec<u64> {
+    let sum: f64 = weights.iter().sum();
+    let mut counts: Vec<u64> = Vec::with_capacity(weights.len());
+    let mut fracs: Vec<(f64, usize)> = Vec::with_capacity(weights.len());
+    let mut assigned = 0u64;
+    for (i, &w) in weights.iter().enumerate() {
+        let quota = total as f64 * w / sum;
+        let base = quota.floor() as u64;
+        counts.push(base);
+        assigned += base;
+        fracs.push((quota - base as f64, i));
+    }
+    fracs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    let mut left = total.saturating_sub(assigned);
+    let mut i = 0usize;
+    while left > 0 {
+        counts[fracs[i % fracs.len()].1] += 1;
+        left -= 1;
+        i += 1;
+    }
+    counts
+}
+
+/// **Skewed** — `users` Poisson users whose per-user job counts follow a
+/// Zipf law over a `hot_users`-sized head (exponent `zipf_s`); the tail
+/// shares a single rank's weight, so the head carries ~all of the work.
+/// Every user's jobs reuse the gtrace stage-chain shape with slot-times
+/// uniform in `[0.5, 6.5]` s; the submission window is sized so the whole
+/// stream offers `target_utilization` of `cores`. Determinism: per-user
+/// forked RNG streams, k-way merged in arrival order.
+pub fn skewed(seed: u64, p: &SkewedParams) -> Result<MergeStream, String> {
+    if p.users == 0 {
+        return Err("skewed: users must be >= 1".into());
+    }
+    if p.hot_users == 0 || p.hot_users > p.users {
+        return Err(format!(
+            "skewed: hot_users {} outside 1..=users ({})",
+            p.hot_users, p.users
+        ));
+    }
+    if p.jobs == 0 {
+        return Err("skewed: jobs must be >= 1".into());
+    }
+    if !(p.zipf_s >= 0.0 && p.zipf_s.is_finite()) {
+        return Err(format!("skewed: zipf_s {} must be finite and >= 0", p.zipf_s));
+    }
+    if p.cores == 0 {
+        return Err("skewed: cores must be >= 1".into());
+    }
+    if !(p.target_utilization > 0.0 && p.target_utilization <= 1.0) {
+        return Err(format!(
+            "skewed: target_utilization {} outside (0, 1]",
+            p.target_utilization
+        ));
+    }
+    if !(0.0..=1.0).contains(&p.skew_fraction) {
+        return Err(format!(
+            "skewed: skew_fraction {} outside [0, 1]",
+            p.skew_fraction
+        ));
+    }
+    let counts = apportion_jobs(p.jobs, &zipf_weights(p));
+    let mean_slot = (SKEWED_SLOT_MIN_S + SKEWED_SLOT_MAX_S) / 2.0;
+    let window_s = p.jobs as f64 * mean_slot / (p.cores as f64 * p.target_utilization);
+    let mut rng = Rng::new(seed);
+    let mut streams: Vec<Box<dyn JobStream + Send>> = Vec::new();
+    for (i, &count) in counts.iter().enumerate() {
+        let user = (i + 1) as u32;
+        let mut r = rng.fork(user as u64);
+        if count == 0 {
+            continue;
+        }
+        let gap = window_s / count as f64;
+        let skew_fraction = p.skew_fraction;
+        let mut t = r.exp(1.0 / gap);
+        let mut i_job = 0u64;
+        streams.push(Box::new(from_fn(move || {
+            if i_job >= count {
+                return None;
+            }
+            let slot = r.range_f64(SKEWED_SLOT_MIN_S, SKEWED_SLOT_MAX_S);
+            let name = format!("zf{user}-{i_job}");
+            let job = trace_job(user, &name, t, slot, &mut r, skew_fraction);
+            t += r.exp(1.0 / gap);
+            i_job += 1;
+            Some(job)
+        })));
+    }
+    Ok(MergeStream::new(streams))
+}
+
+/// [`skewed`]'s classification: the Zipf head is `Heavy`, the tail
+/// `Infrequent`.
+pub fn skewed_classes(p: &SkewedParams) -> HashMap<UserId, UserClass> {
+    (1..=p.users)
+        .map(|u| {
+            let class = if u <= p.hot_users {
+                UserClass::Heavy
+            } else {
+                UserClass::Infrequent
+            };
+            (u, class)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -424,6 +598,64 @@ mod tests {
             "peak {peak} vs trough {trough}"
         );
         assert_eq!(diurnal_classes(&p).len(), 20);
+    }
+
+    #[test]
+    fn skewed_head_dominates_and_job_count_is_exact() {
+        let p = SkewedParams {
+            users: 50,
+            jobs: 2_000,
+            zipf_s: 1.2,
+            hot_users: 8,
+            cores: 8,
+            target_utilization: 0.7,
+            skew_fraction: 0.2,
+        };
+        let jobs = materialize(skewed(11, &p).unwrap());
+        // Largest-remainder apportionment: the total is exact.
+        assert_eq!(jobs.len(), 2_000);
+        assert!(sorted_nondecreasing(&jobs));
+        let mut per_user = HashMap::new();
+        for j in &jobs {
+            j.validate().unwrap();
+            assert!(j.user >= 1 && j.user <= p.users);
+            *per_user.entry(j.user).or_insert(0u64) += 1;
+        }
+        // The Zipf head carries ~all of the work (the tail shares one
+        // rank's weight), and rank 1 beats rank `hot_users`.
+        let head: u64 = (1..=p.hot_users).map(|u| per_user.get(&u).copied().unwrap_or(0)).sum();
+        assert!(head as f64 > 0.9 * jobs.len() as f64, "head {head}");
+        assert!(per_user[&1] > per_user[&p.hot_users] * 2, "not Zipf-steep");
+        let classes = skewed_classes(&p);
+        assert_eq!(classes.len(), 50);
+        assert_eq!(classes[&1], UserClass::Heavy);
+        assert_eq!(classes[&50], UserClass::Infrequent);
+        // Deterministic per seed.
+        let key = |seed: u64| -> Vec<(u32, TimeUs)> {
+            materialize(skewed(seed, &p).unwrap())
+                .iter()
+                .map(|j| (j.user, j.arrival))
+                .collect()
+        };
+        assert_eq!(key(11), key(11));
+        assert_ne!(key(11), key(12));
+    }
+
+    #[test]
+    fn skewed_rejects_bad_params() {
+        let check = |f: fn(&mut SkewedParams), frag: &str| {
+            let mut p = SkewedParams::default();
+            f(&mut p);
+            let err = skewed(1, &p).unwrap_err();
+            assert!(err.contains(frag), "{err}");
+        };
+        check(|p| p.users = 0, "users");
+        check(|p| p.hot_users = 0, "hot_users");
+        check(|p| p.hot_users = p.users + 1, "hot_users");
+        check(|p| p.jobs = 0, "jobs");
+        check(|p| p.zipf_s = -1.0, "zipf_s");
+        check(|p| p.target_utilization = 0.0, "target_utilization");
+        check(|p| p.skew_fraction = 1.5, "skew_fraction");
     }
 
     #[test]

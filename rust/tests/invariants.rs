@@ -38,6 +38,11 @@
 //!    hash partition, and work is conserved per shard (a shard's
 //!    busy-core ledger never exceeds its core count × its makespan, and
 //!    a shard with work is actually busy).
+//! 9. **Sharded rebalance arm** — cross-shard core lending on random
+//!    Zipf-skewed streams: under every policy, completions still equal
+//!    arrivals, the cluster-wide busy ledger never exceeds the (lending-
+//!    invariant) total core count × makespan, drift respects the same
+//!    provable bound, and repeats are bit-for-bit identical.
 
 use std::collections::HashMap;
 
@@ -48,6 +53,7 @@ use uwfq::sched::PolicyKind;
 use uwfq::sim;
 use uwfq::sim::{EventBackend, SimOpts};
 use uwfq::util::{propkit, Rng};
+use uwfq::workload::stress::{skewed, SkewedParams};
 use uwfq::workload::ScenarioSpec;
 use uwfq::TimeUs;
 
@@ -483,6 +489,100 @@ fn sharded_runs_lose_no_jobs_and_conserve_work_per_shard() {
                         c.user
                     ));
                 }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sharded_rebalance_conserves_jobs_and_cores_on_skewed_streams() {
+    // Invariant 9: deterministic cross-shard core lending. Lending moves
+    // integer cores between shards at epoch barriers but conserves their
+    // total, so the cluster-wide busy ledger stays under cores ×
+    // makespan, the drift bound is the same `cores × shard_epoch_s`, no
+    // job is lost, and a repeat run is bit-for-bit identical.
+    propkit::check("sharded rebalance conservation", 0x1E4D5, 5, |r| {
+        let p = SkewedParams {
+            users: 20 + r.below(40) as u32,
+            jobs: 300 + r.below(500),
+            zipf_s: r.range_f64(1.0, 1.8),
+            hot_users: 3 + r.below(6) as u32,
+            cores: 8,
+            target_utilization: r.range_f64(0.5, 0.9),
+            skew_fraction: 0.2,
+        };
+        let seed = r.next_u64();
+        let shards = 2 + r.below(3) as u32; // 2..=4
+        let epoch_s = r.range_f64(0.5, 3.0);
+        // Floor × shards must fit in the cluster (8 cores, ≤ 4 shards).
+        let min_cores = 1 + r.below(2) as u32; // 1..=2
+        let cap = 1 + r.below(3) as u32; // 1..=3
+        let sink_fp = |sinks: &[sim::CollectSink]| -> Vec<(u64, u32, u64, u64, u64)> {
+            sinks
+                .iter()
+                .flat_map(|s| {
+                    s.completed
+                        .iter()
+                        .map(|c| (c.job, c.user, c.submit, c.finish, c.slot_time.to_bits()))
+                })
+                .collect()
+        };
+        for policy in PolicyKind::ALL {
+            let mut cfg = Config::default().with_cores(8).with_policy(policy);
+            cfg.shards = shards;
+            cfg.shard_epoch_s = epoch_s;
+            cfg.shard_rebalance = true;
+            cfg.rebalance_min_cores = min_cores;
+            cfg.rebalance_cap = cap;
+            let go = || {
+                sim::run_sharded(
+                    &cfg,
+                    SimOpts::default(),
+                    |_| skewed(seed, &p).expect("skewed property params are valid"),
+                    |_| sim::CollectSink::default(),
+                )
+            };
+            let (a, b) = (go(), go());
+            if a.summary.jobs_completed != p.jobs {
+                return Err(format!(
+                    "{}: {} of {} jobs completed with lending at S={shards} ({p:?})",
+                    policy.name(),
+                    a.summary.jobs_completed,
+                    p.jobs
+                ));
+            }
+            if a.sync.max_drift_rsec > a.sync.bound_rsec + 1e-9 {
+                return Err(format!(
+                    "{}: drift {} exceeds bound {} with lending at S={shards}, \
+                     epoch {epoch_s} ({p:?})",
+                    policy.name(),
+                    a.sync.max_drift_rsec,
+                    a.sync.bound_rsec
+                ));
+            }
+            // Core conservation in ledger form: lending never mints
+            // cores, so total busy time fits under the cluster envelope
+            // (1 µs rounding slack per core).
+            let envelope = cfg.cores as u128 * uwfq::s_to_us(a.summary.makespan_s) as u128
+                + cfg.cores as u128;
+            if a.summary.busy_core_us > envelope {
+                return Err(format!(
+                    "{}: busy {} µs exceeds {} cores × makespan with lending \
+                     at S={shards} ({p:?})",
+                    policy.name(),
+                    a.summary.busy_core_us,
+                    cfg.cores
+                ));
+            }
+            if a.sync.lend_events != b.sync.lend_events
+                || a.summary.makespan_s.to_bits() != b.summary.makespan_s.to_bits()
+                || sink_fp(&a.sinks) != sink_fp(&b.sinks)
+            {
+                return Err(format!(
+                    "{}: lending repeat not byte-identical at S={shards} ({p:?})",
+                    policy.name()
+                ));
             }
         }
         Ok(())

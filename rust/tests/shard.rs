@@ -14,6 +14,11 @@
 //!    observed pre-sync virtual-time spread never exceeds the provable
 //!    `cores × shard_epoch_s` resource-seconds, no job is lost, and the
 //!    hash partition is respected.
+//! 4. **Rebalance-off identity** — with `shard_rebalance` off the
+//!    lending knobs are inert: schedules, fault ledger and drift match
+//!    the static split byte for byte for every policy.
+//! 5. **Lending on a skewed stream** — cross-shard core lending loses no
+//!    jobs, stays within the same drift bound, and repeats bit-for-bit.
 
 use uwfq::config::Config;
 use uwfq::core::SchedCore;
@@ -21,6 +26,7 @@ use uwfq::fault::FaultConfig;
 use uwfq::sched::PolicyKind;
 use uwfq::sim::{run_sharded, shard_cores, simulate_stream_into_opts, CollectSink, SimOpts};
 use uwfq::util::{propkit, Rng};
+use uwfq::workload::stress::{skewed, SkewedParams};
 use uwfq::workload::{ScenarioSpec, Workload};
 
 /// The fixture workload: multi-user, bursty enough that shards interleave.
@@ -167,6 +173,115 @@ fn four_shard_runs_repeat_bit_for_bit() {
                     "{tag}: shard {s} schedule diverged between repeats"
                 );
             }
+        }
+    }
+}
+
+#[test]
+fn rebalance_off_leaves_the_static_split_byte_identical() {
+    // The lending knobs must be inert while `shard_rebalance` is off:
+    // the static-split schedule (completions, fault ledger, makespan
+    // bits) from before lending existed cannot move, whatever values
+    // `rebalance_min_cores` / `rebalance_cap` hold.
+    let w = fixture_workload(47);
+    for faulty in [false, true] {
+        for policy in PolicyKind::ALL {
+            let mut base = Config::default().with_cores(8).with_policy(policy);
+            base.shards = 4;
+            base.shard_epoch_s = 1.0;
+            if faulty {
+                base.fault = fault_mix(11);
+            }
+            let mut knobs = base.clone();
+            knobs.shard_rebalance = false; // explicit off
+            knobs.rebalance_min_cores = 2;
+            knobs.rebalance_cap = 7;
+            let go = |cfg: &Config| {
+                run_sharded(
+                    cfg,
+                    SimOpts::default(),
+                    |_| w.to_stream(),
+                    |_| CollectSink::default(),
+                )
+            };
+            let (a, b) = (go(&base), go(&knobs));
+            let tag = format!("{} faulty={faulty}", policy.name());
+            assert_eq!(a.sync.lend_events, 0, "{tag}: lending fired while off");
+            assert_eq!(b.sync.lend_events, 0, "{tag}: lending fired while off");
+            assert_eq!(a.summary.fault, b.summary.fault, "{tag}: fault ledger moved");
+            assert_eq!(
+                a.summary.makespan_s.to_bits(),
+                b.summary.makespan_s.to_bits(),
+                "{tag}"
+            );
+            assert_eq!(
+                a.sync.max_drift_rsec.to_bits(),
+                b.sync.max_drift_rsec.to_bits(),
+                "{tag}"
+            );
+            for (s, (sa, sb)) in a.sinks.iter().zip(b.sinks.iter()).enumerate() {
+                assert_eq!(
+                    sink_fingerprint(sa),
+                    sink_fingerprint(sb),
+                    "{tag}: shard {s} schedule moved with lending knobs set"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn lending_on_a_skewed_stream_completes_within_bound_and_repeats() {
+    // A hot Zipf head pins a subset of shards; with lending on, every
+    // job still completes, the drift bound is the same provable
+    // `cores × shard_epoch_s`, and repeats are bit-for-bit.
+    let p = SkewedParams {
+        users: 40,
+        jobs: 800,
+        hot_users: 8,
+        cores: 8,
+        ..SkewedParams::default()
+    };
+    for policy in PolicyKind::ALL {
+        let mut cfg = Config::default().with_cores(8).with_policy(policy);
+        cfg.shards = 4;
+        cfg.shard_epoch_s = 1.0;
+        cfg.shard_rebalance = true;
+        cfg.rebalance_min_cores = 1;
+        cfg.rebalance_cap = 2;
+        let go = || {
+            run_sharded(
+                &cfg,
+                SimOpts::default(),
+                |_| skewed(13, &p).expect("skewed fixture"),
+                |_| CollectSink::default(),
+            )
+        };
+        let (a, b) = (go(), go());
+        let tag = policy.name();
+        assert_eq!(
+            a.summary.jobs_completed, p.jobs,
+            "{tag}: jobs lost under lending"
+        );
+        assert!(
+            a.sync.max_drift_rsec <= a.sync.bound_rsec + 1e-9,
+            "{tag}: drift {} exceeds bound {} with lending on",
+            a.sync.max_drift_rsec,
+            a.sync.bound_rsec
+        );
+        assert_eq!(a.sync.lend_events, b.sync.lend_events, "{tag}: lend events");
+        assert_eq!(
+            a.sync.max_drift_rsec.to_bits(),
+            b.sync.max_drift_rsec.to_bits(),
+            "{tag}"
+        );
+        assert_eq!(a.summary.fault, b.summary.fault, "{tag}: fault ledger");
+        for (s, (sa, sb)) in a.sinks.iter().zip(b.sinks.iter()).enumerate() {
+            assert_eq!(
+                sink_fingerprint(sa),
+                sink_fingerprint(sb),
+                "{tag}: shard {s} diverged between lending repeats"
+            );
         }
     }
 }
