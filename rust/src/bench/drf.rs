@@ -1,0 +1,334 @@
+//! Multi-resource fairness bench (`uwfq drf`, `BENCH_drf.json`): the
+//! seven-policy grid on a mixed-demand workload — half the users
+//! CPU-heavy, half memory-heavy — plus the UWFQ-vs-BoPF burst-tolerance
+//! ablation on the `bursty` scenario.
+//!
+//! The mixed grid answers whether DRF's dominant-share ordering moves
+//! the per-dimension goodput split where slot-count policies cannot see
+//! it; the burst ablation sweeps the BoPF budget and reads off how much
+//! the bursty users' response time improves before the steady users
+//! start paying for it.
+
+use crate::config::Config;
+use crate::core::job::JobSpec;
+use crate::core::task::ResourceVec;
+use crate::core::SchedCore;
+use crate::sched::PolicyKind;
+use crate::sweep::Sweep;
+use crate::util::benchkit::JsonSink;
+use crate::workload::{ScenarioSpec, UserClass, Workload};
+
+/// One policy row of the mixed-demand grid.
+pub struct MixCell {
+    pub label: String,
+    pub mean_rt: f64,
+    pub worst10_rt: f64,
+    /// Jain fairness index over per-user mean response times.
+    pub jain: f64,
+    pub utilization: f64,
+    /// Useful core-seconds delivered per resource dimension (from the
+    /// engine's per-dimension ledgers; equal for unit-vector runs).
+    pub cpu_core_s: f64,
+    pub mem_core_s: f64,
+}
+
+/// One arm of the burst-tolerance ablation.
+pub struct BurstCell {
+    /// Arm name (`uwfq`, `fair`, `bopf_b2`, ...).
+    pub arm: String,
+    pub label: String,
+    /// Mean RT over the bursty (Frequent) users' jobs.
+    pub burst_rt: f64,
+    /// Mean RT over the steady (Infrequent) users' jobs.
+    pub steady_rt: f64,
+    pub mean_rt: f64,
+    pub jain: f64,
+}
+
+pub struct DrfBench {
+    pub mix: Vec<MixCell>,
+    pub burst: Vec<BurstCell>,
+    pub mix_jobs: usize,
+    pub mix_users: usize,
+    pub burst_jobs: usize,
+}
+
+/// BoPF budgets swept in the burst ablation (core-seconds of
+/// at-priority work per burst).
+const BOPF_BUDGETS: [f64; 3] = [2.0, 10.0, 50.0];
+
+/// The mixed-demand workload: the fault-bench shape (same-instant
+/// bursts, skewed per-user activity) with a demand profile per user —
+/// even users CPU-dominant, odd users memory-dominant. Every vector
+/// fits a unit slot, so only the multi-resource policies can tell the
+/// profiles apart.
+fn mixed_workload(quick: bool, seed: u64) -> Vec<JobSpec> {
+    let n = if quick { 48 } else { 160 };
+    (0..n)
+        .map(|i| {
+            let user = ((i * 7 + seed as usize) % 8) as u32;
+            let arrival_s = if i % 5 == 0 {
+                (i / 5) as f64 * 0.3
+            } else {
+                i as f64 * 0.06
+            };
+            let compute = 0.3 + ((i * 13) % 9) as f64 * 0.35;
+            let demand = if user % 2 == 0 {
+                ResourceVec::new(1.0, 0.3)
+            } else {
+                ResourceVec::new(0.35, 1.0)
+            };
+            JobSpec::three_phase(
+                user,
+                &format!("d{i}"),
+                crate::s_to_us(arrival_s),
+                compute,
+                (32 + (i as u64 % 5) * 32) << 20,
+                4,
+                None,
+            )
+            .with_demand(demand)
+        })
+        .collect()
+}
+
+/// Jain's fairness index over per-user mean response times.
+fn jain_over_user_rt(completed: &[crate::core::dag::CompletedJob]) -> f64 {
+    let mut per_user: std::collections::BTreeMap<u32, (f64, u64)> = Default::default();
+    for c in completed {
+        let e = per_user.entry(c.user).or_insert((0.0, 0));
+        e.0 += c.response_time();
+        e.1 += 1;
+    }
+    let means: Vec<f64> = per_user.values().map(|&(s, n)| s / n as f64).collect();
+    let sum: f64 = means.iter().sum();
+    let sq: f64 = means.iter().map(|x| x * x).sum();
+    if sq > 0.0 {
+        sum * sum / (means.len() as f64 * sq)
+    } else {
+        1.0
+    }
+}
+
+fn mean_rts(completed: &[crate::core::dag::CompletedJob]) -> (f64, f64) {
+    let mut rts: Vec<f64> = completed.iter().map(|c| c.response_time()).collect();
+    rts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = rts.iter().sum::<f64>() / rts.len().max(1) as f64;
+    let k = (rts.len() / 10).max(1);
+    let worst10 = rts[rts.len() - k..].iter().sum::<f64>() / k as f64;
+    (mean, worst10)
+}
+
+/// The bursty-scenario workload of the ablation: multi-resource burst
+/// users (`mem_frac` below 1) so the BoPF arms exercise the vector
+/// path, shrunk like `--quick` scenario overrides when `quick`.
+fn burst_workload(quick: bool, seed: u64) -> Workload {
+    let mut spec = ScenarioSpec::new("bursty").with("mem_frac", "0.5");
+    if quick {
+        spec = spec.with("duration_s", "60").with("cycle_s", "30");
+    }
+    spec.workload(seed)
+        .unwrap_or_else(|e| panic!("bursty ablation workload: {e}"))
+}
+
+/// Run both grids (policies × mixed demand; burst arms) through the
+/// sweep engine.
+pub fn run_drf(base: &Config, quick: bool, swp: &Sweep) -> DrfBench {
+    let jobs = mixed_workload(quick, base.seed);
+    let mix_users = {
+        let mut u: Vec<u32> = jobs.iter().map(|j| j.user).collect();
+        u.sort_unstable();
+        u.dedup();
+        u.len()
+    };
+    let mix_cfgs: Vec<Config> = PolicyKind::ALL
+        .iter()
+        .map(|&p| base.clone().with_policy(p))
+        .collect();
+    // Cells build their own engine (not the memoized sim context) so the
+    // per-dimension resource ledgers stay readable after the run.
+    let mix = swp.run(&mix_cfgs, |_ctx, cfg| {
+        let mut core = SchedCore::from_config(cfg.clone());
+        let report = crate::sim::simulate_into(&mut core, jobs.clone());
+        let (mean_rt, worst10_rt) = mean_rts(&report.completed);
+        let [gc, gm] = core.resource_good_mmus();
+        MixCell {
+            label: report.label.clone(),
+            mean_rt,
+            worst10_rt,
+            jain: jain_over_user_rt(&report.completed),
+            utilization: report.utilization,
+            cpu_core_s: gc as f64 / 1e9,
+            mem_core_s: gm as f64 / 1e9,
+        }
+    });
+
+    let w = burst_workload(quick, base.seed);
+    let mut burst_cfgs: Vec<(String, Config)> = vec![
+        ("uwfq".into(), base.clone().with_policy(PolicyKind::Uwfq)),
+        ("fair".into(), base.clone().with_policy(PolicyKind::Fair)),
+    ];
+    for b in BOPF_BUDGETS {
+        let mut cfg = base.clone().with_policy(PolicyKind::Bopf);
+        cfg.bopf_burst_rsec = b;
+        burst_cfgs.push((format!("bopf_b{b:.0}"), cfg));
+    }
+    let burst = swp.run(&burst_cfgs, |ctx, (arm, cfg)| {
+        let report = ctx.simulate(cfg, w.jobs.clone());
+        let (mean_rt, _) = mean_rts(&report.completed);
+        let mut cls: [(f64, u64); 2] = [(0.0, 0); 2]; // [burst, steady]
+        for c in &report.completed {
+            // `bursty` classifies users as Frequent (bursty) or
+            // Infrequent (steady) only.
+            let i = if w.user_class[&c.user] == UserClass::Frequent {
+                0
+            } else {
+                1
+            };
+            cls[i].0 += c.response_time();
+            cls[i].1 += 1;
+        }
+        BurstCell {
+            arm: arm.clone(),
+            label: report.label.clone(),
+            burst_rt: cls[0].0 / cls[0].1.max(1) as f64,
+            steady_rt: cls[1].0 / cls[1].1.max(1) as f64,
+            mean_rt,
+            jain: jain_over_user_rt(&report.completed),
+        }
+    });
+
+    DrfBench {
+        mix,
+        burst,
+        mix_jobs: jobs.len(),
+        mix_users,
+        burst_jobs: w.jobs.len(),
+    }
+}
+
+pub fn render(b: &DrfBench) -> String {
+    let header = [
+        "policy", "RT avg", "RT w10", "Jain", "util", "cpu core-s", "mem core-s",
+    ];
+    let rows: Vec<Vec<String>> = b
+        .mix
+        .iter()
+        .map(|c| {
+            vec![
+                c.label.clone(),
+                super::fmt2(c.mean_rt),
+                super::fmt2(c.worst10_rt),
+                format!("{:.3}", c.jain),
+                super::fmt2(c.utilization),
+                super::fmt1(c.cpu_core_s),
+                super::fmt1(c.mem_core_s),
+            ]
+        })
+        .collect();
+    let bheader = ["arm", "policy", "RT burst", "RT steady", "RT avg", "Jain"];
+    let brows: Vec<Vec<String>> = b
+        .burst
+        .iter()
+        .map(|c| {
+            vec![
+                c.arm.clone(),
+                c.label.clone(),
+                super::fmt2(c.burst_rt),
+                super::fmt2(c.steady_rt),
+                super::fmt2(c.mean_rt),
+                format!("{:.3}", c.jain),
+            ]
+        })
+        .collect();
+    format!(
+        "== mixed-demand grid ({} jobs / {} users) ==\n{}\n\
+         == burst tolerance (bursty, {} jobs) ==\n{}",
+        b.mix_jobs,
+        b.mix_users,
+        super::render_table(&header, &rows),
+        b.burst_jobs,
+        super::render_table(&bheader, &brows)
+    )
+}
+
+pub fn record_metrics(b: &DrfBench, sink: &mut JsonSink) {
+    for c in &b.mix {
+        let p = format!("drf/mix/{}", c.label);
+        sink.metric(&format!("{p}/mean_rt_s"), c.mean_rt);
+        sink.metric(&format!("{p}/worst10_rt_s"), c.worst10_rt);
+        sink.metric(&format!("{p}/jain_user_rt"), c.jain);
+        sink.metric(&format!("{p}/utilization"), c.utilization);
+        sink.metric(&format!("{p}/good_cpu_core_s"), c.cpu_core_s);
+        sink.metric(&format!("{p}/good_mem_core_s"), c.mem_core_s);
+    }
+    for c in &b.burst {
+        let p = format!("drf/burst/{}", c.arm);
+        sink.metric(&format!("{p}/burst_rt_s"), c.burst_rt);
+        sink.metric(&format!("{p}/steady_rt_s"), c.steady_rt);
+        sink.metric(&format!("{p}/mean_rt_s"), c.mean_rt);
+        sink.metric(&format!("{p}/jain_user_rt"), c.jain);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_grids_run_all_policies_and_arms() {
+        let mut base = Config::default();
+        base.cores = 8;
+        let b = run_drf(&base, true, &Sweep::seq());
+        assert_eq!(b.mix.len(), PolicyKind::ALL.len());
+        for c in &b.mix {
+            assert!(c.mean_rt > 0.0, "{}", c.label);
+            assert!(c.jain > 0.0 && c.jain <= 1.0 + 1e-12, "{}", c.label);
+            // Mixed demand: memory goodput must lag CPU goodput (every
+            // profile has mem ≤ cpu or cpu < 1 with full mem, and the
+            // mixture is CPU-heavier overall under this seed's user mix).
+            assert!(c.cpu_core_s > 0.0 && c.mem_core_s > 0.0, "{}", c.label);
+            assert!(c.cpu_core_s != c.mem_core_s, "{}: unit-vector ledgers?", c.label);
+        }
+        // The burst ablation covers both baselines and every budget.
+        assert_eq!(b.burst.len(), 2 + BOPF_BUDGETS.len());
+        assert!(b.burst.iter().any(|c| c.arm == "uwfq"));
+        assert!(b.burst.iter().any(|c| c.arm == "bopf_b10"));
+        for c in &b.burst {
+            assert!(c.burst_rt > 0.0 && c.steady_rt > 0.0, "{}", c.arm);
+        }
+    }
+
+    #[test]
+    fn grids_are_deterministic() {
+        let mut base = Config::default();
+        base.cores = 8;
+        let a = run_drf(&base, true, &Sweep::seq());
+        let b = run_drf(&base, true, &Sweep::new(4));
+        for (x, y) in a.mix.iter().zip(&b.mix) {
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.mean_rt.to_bits(), y.mean_rt.to_bits());
+            assert_eq!(x.cpu_core_s.to_bits(), y.cpu_core_s.to_bits());
+            assert_eq!(x.mem_core_s.to_bits(), y.mem_core_s.to_bits());
+        }
+        for (x, y) in a.burst.iter().zip(&b.burst) {
+            assert_eq!(x.arm, y.arm);
+            assert_eq!(x.burst_rt.to_bits(), y.burst_rt.to_bits());
+            assert_eq!(x.steady_rt.to_bits(), y.steady_rt.to_bits());
+        }
+    }
+
+    #[test]
+    fn unit_vector_policies_see_mixed_demands_without_feasibility_change() {
+        // Every mixed-demand vector fits a unit slot, so slot-count
+        // policies complete the same workload; only the ledgers differ.
+        let jobs = mixed_workload(true, 7);
+        for j in &jobs {
+            j.validate().unwrap();
+            for s in &j.stages {
+                assert!(s.demand.fits(&ResourceVec::UNIT));
+            }
+        }
+        assert!(jobs.iter().any(|j| !j.stages[0].demand.is_unit()));
+    }
+}

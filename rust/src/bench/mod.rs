@@ -11,6 +11,9 @@
 //!   `BENCH_replay.json`).
 //! * [`fault`] — fairness-under-failure degradation curves (`uwfq
 //!   fault`, `BENCH_fault.json`).
+//! * [`drf`] — the multi-resource grids: seven policies over mixed
+//!   CPU/memory demands plus the UWFQ-vs-BoPF burst-tolerance ablation
+//!   (`uwfq drf`, `BENCH_drf.json`).
 //! * [`hotpath`] — event-core throughput: wheel vs heap backends plus
 //!   the batching ablation (`uwfq hotpath`, `BENCH_hotpath.json`).
 //! * [`summary`] — merges every `BENCH_*.json` artifact into one
@@ -21,6 +24,7 @@
 //! handle — `Sweep::seq()` for the sequential reference, `Sweep::new(n)`
 //! for n-worker execution with byte-identical output.
 
+pub mod drf;
 pub mod fault;
 pub mod figures;
 pub mod hotpath;

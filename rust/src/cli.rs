@@ -44,6 +44,11 @@ USAGE:
              # fairness-under-failure degradation curves: UWFQ/Fair/FIFO
              # across failure rates + straggler + crash arms, emits
              # BENCH_fault.json
+  uwfq drf [--quick] [--threads N] [--out DIR] [--seed N]
+             # multi-resource grids: all seven policies over a mixed
+             # CPU/memory-demand workload, plus the UWFQ-vs-BoPF
+             # burst-tolerance ablation on the bursty scenario, emits
+             # BENCH_drf.json
   uwfq hotpath [--quick] [--out DIR] [--cores N]
              # event-core throughput: wheel vs heap event queues plus a
              # batching on/off ablation per policy, emits
@@ -69,8 +74,8 @@ USAGE:
   uwfq help
 
 FLAGS (config keys, see config.rs):
-  --cores N --atr S --grace_rsec S --task_overhead S --seed N
-  --policy fifo|fair|ujf|cfq|uwfq --scheme default|runtime|-P
+  --cores N --atr S --grace_rsec S --bopf_burst_rsec S --task_overhead S --seed N
+  --policy fifo|fair|ujf|cfq|uwfq|drf|bopf --scheme default|runtime|-P
   --estimator_sigma S --config FILE
   --scenario NAME --param k=v   (repeatable; `uwfq scenarios` lists them;
   config files spell these `scenario = NAME` and `param.k = v`)

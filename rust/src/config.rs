@@ -24,6 +24,10 @@ pub struct Config {
     pub advisory_partition_bytes: u64,
     /// UWFQ grace period in resource-seconds (§4.2; paper default 2).
     pub grace_rsec: f64,
+    /// BoPF per-burst budget in estimated resource-seconds: how much
+    /// work a user returning from idle may run at burst priority before
+    /// falling back to long-term fair share.
+    pub bopf_burst_rsec: f64,
     /// Scheduling policy.
     pub policy: PolicyKind,
     /// Partitioning scheme (`Runtime` = the paper's `-P` variants).
@@ -82,6 +86,7 @@ impl Default for Config {
             max_partition_bytes: 24 << 20,
             advisory_partition_bytes: 24 << 20,
             grace_rsec: 2.0,
+            bopf_burst_rsec: 10.0,
             policy: PolicyKind::Uwfq,
             scheme: SchemeKind::Size,
             seed: 42,
@@ -101,7 +106,8 @@ impl Default for Config {
 
 /// Every key [`Config::set`] accepts — listed in unknown-key errors.
 const CONFIG_KEYS: &str = "cores, task_overhead, atr, max_partition_bytes, \
-advisory_partition_bytes, grace_rsec, seed, estimator_sigma, log_tasks, \
+advisory_partition_bytes, grace_rsec, bopf_burst_rsec, seed, \
+estimator_sigma, log_tasks, \
 policy, scheme | partitioner, scenario, shards, shard_epoch_s, \
 shard_rebalance, rebalance_min_cores, rebalance_cap, \
 param.<name>, fault.<knob> \
@@ -162,12 +168,25 @@ impl Config {
             "max_partition_bytes" => self.max_partition_bytes = num(key, val)?,
             "advisory_partition_bytes" => self.advisory_partition_bytes = num(key, val)?,
             "grace_rsec" => self.grace_rsec = num(key, val)?,
+            "bopf_burst_rsec" => {
+                let b: f64 = num(key, val)?;
+                if !(b > 0.0 && b.is_finite()) {
+                    return Err(format!(
+                        "bopf_burst_rsec: must be a positive finite number (got \
+                         '{val}'); the budget is estimated resource-seconds per burst"
+                    ));
+                }
+                self.bopf_burst_rsec = b;
+            }
             "seed" => self.seed = num(key, val)?,
             "estimator_sigma" => self.estimator_sigma = num(key, val)?,
             "log_tasks" => self.log_tasks = val == "true" || val == "1",
             "policy" => {
                 self.policy = PolicyKind::parse(val).ok_or_else(|| {
-                    format!("unknown policy '{val}' (valid: fifo, fair, ujf, cfq, uwfq)")
+                    format!(
+                        "unknown policy '{val}' (valid: fifo, fair, ujf, cfq, uwfq, \
+                         drf, bopf)"
+                    )
                 })?
             }
             "scheme" | "partitioner" => self.scheme = SchemeKind::parse(val)?,
@@ -404,6 +423,24 @@ mod tests {
         assert!(err.contains("rebalance_cap"), "{err}");
         let err = c.apply_lines("rebalance_cap = abc").unwrap_err();
         assert!(err.contains("rebalance_cap") && err.contains("abc"), "{err}");
+    }
+
+    #[test]
+    fn bopf_and_new_policies_parse_and_validate() {
+        let mut c = Config::default();
+        assert_eq!(c.bopf_burst_rsec, 10.0);
+        c.apply_lines("policy = drf").unwrap();
+        assert_eq!(c.policy, PolicyKind::Drf);
+        c.apply_lines("policy = bopf\nbopf_burst_rsec = 4.5\n").unwrap();
+        assert_eq!(c.policy, PolicyKind::Bopf);
+        assert_eq!(c.bopf_burst_rsec, 4.5);
+        for bad in ["0", "-3", "inf", "nan"] {
+            let err = c.apply_lines(&format!("bopf_burst_rsec = {bad}")).unwrap_err();
+            assert!(err.contains("bopf_burst_rsec"), "{err}");
+        }
+        // The policy error lists the new names.
+        let err = c.apply_lines("policy = zzz").unwrap_err();
+        assert!(err.contains("drf") && err.contains("bopf"), "{err}");
     }
 
     #[test]

@@ -67,7 +67,7 @@ use super::arena::Slab;
 use super::dag::{CompletedJob, JobState};
 use super::job::JobSpec;
 use super::stage::StageState;
-use super::task::{Outcome, RunningTask, TaskRecord, TaskSpec};
+use super::task::{Outcome, ResourceVec, RunningTask, TaskRecord, TaskSpec};
 use crate::config::Config;
 use crate::estimate::RuntimeEstimator;
 use crate::fault::{Fate, FaultPlan, FaultStats};
@@ -209,6 +209,14 @@ pub struct SchedCore {
     busy: usize,
     /// Retry/speculation/crash counters + the goodput-vs-waste ledger.
     pub fault_stats: FaultStats,
+    /// Per-dimension goodput ledger in milli-demand-µs: each resolved
+    /// occupancy's elapsed core-µs scaled by its (cpu, mem) demand in
+    /// milli-units. Unit demands reduce each dimension to exactly
+    /// `1000 × good_us` — the resource-vector twin of the scalar ledger.
+    res_good_mmus: [u128; 2],
+    /// Per-dimension waste ledger (kills, failures, crash losses) in
+    /// milli-demand-µs.
+    res_wasted_mmus: [u128; 2],
 }
 
 impl SchedCore {
@@ -253,6 +261,8 @@ impl SchedCore {
             launch_seq: 0,
             busy: 0,
             fault_stats: FaultStats::default(),
+            res_good_mmus: [0; 2],
+            res_wasted_mmus: [0; 2],
         }
     }
 
@@ -267,7 +277,12 @@ impl SchedCore {
         Box<dyn PartitionScheme>,
         Box<dyn RuntimeEstimator>,
     ) {
-        let policy = crate::sched::make_policy(cfg.policy, cfg.cores, cfg.grace_rsec);
+        let policy = crate::sched::make_policy(
+            cfg.policy,
+            cfg.cores,
+            cfg.grace_rsec,
+            cfg.bopf_burst_rsec,
+        );
         let partitioner = crate::partition::make_scheme(
             cfg.scheme,
             cfg.cores,
@@ -346,6 +361,8 @@ impl SchedCore {
         self.launch_seq = 0;
         self.busy = 0;
         self.fault_stats = FaultStats::default();
+        self.res_good_mmus = [0; 2];
+        self.res_wasted_mmus = [0; 2];
     }
 
     // ---- submission -----------------------------------------------------
@@ -359,7 +376,7 @@ impl SchedCore {
         let seq = self.arrival_seq;
         self.arrival_seq += 1;
 
-        let est_slot = self.estimator.job_slot_time(&spec);
+        let est_slot = self.estimator.job_slot_time(id, &spec);
         self.flush_finish_batch();
         self.policy.on_job_arrival(
             us_to_s(now),
@@ -389,7 +406,8 @@ impl SchedCore {
         let user = job.spec.user;
         let arrival_seq = job.arrival_seq;
         let spec = &job.spec.stages[idx];
-        let est = self.estimator.stage_slot_time(spec);
+        let demand = spec.demand;
+        let est = self.estimator.stage_slot_time(job_id, idx, spec);
 
         let ranges = self.partitioner.partition(spec, est);
         let blocks_total = (spec.input_bytes.div_ceil(BLOCK_BYTES)).max(1);
@@ -417,6 +435,7 @@ impl SchedCore {
             finished: 0,
             submitted_at: now,
             est_slot_time: est,
+            demand,
             arrival_seq,
             job_slot,
             active_pos: self.active.len(),
@@ -440,6 +459,7 @@ impl SchedCore {
                 stage_idx: idx,
                 arrival_seq,
                 pending,
+                demand,
             },
         );
     }
@@ -511,13 +531,19 @@ impl SchedCore {
 
     /// Core-µs a finished/killed occupancy consumed, split into the
     /// goodput-vs-waste ledger (per-user detail only when faults are on —
-    /// the aggregate feeds utilization on every run).
-    fn charge(&mut self, user: UserId, elapsed: u128, good: bool) {
-        if good {
+    /// the aggregate feeds utilization on every run). `demand_milli`
+    /// additionally scales the elapsed time into the per-dimension
+    /// resource ledgers (exact integer arithmetic).
+    fn charge(&mut self, user: UserId, elapsed: u128, good: bool, demand_milli: (u32, u32)) {
+        let res = if good {
             self.fault_stats.good_us += elapsed;
+            &mut self.res_good_mmus
         } else {
             self.fault_stats.wasted_us += elapsed;
-        }
+            &mut self.res_wasted_mmus
+        };
+        res[0] += elapsed * demand_milli.0 as u128;
+        res[1] += elapsed * demand_milli.1 as u128;
         if self.fault_on {
             let e = self.fault_stats.per_user.entry(user).or_insert((0, 0));
             if good {
@@ -563,6 +589,7 @@ impl SchedCore {
                 running: s.running,
                 pending: s.pending(),
                 arrival_seq: s.arrival_seq,
+                demand: s.demand,
             });
         }
         let picked = self.policy.select(now_s, &views).map(|i| {
@@ -672,6 +699,15 @@ impl SchedCore {
         launches: &mut Vec<Launch>,
     ) {
         let stage = self.stages.get_mut(slot);
+        // Core-slot capacity is the unit vector in both dimensions;
+        // demands are validated into (0, 1] at submission, so every
+        // pending task fits every free slot — the invariant is asserted
+        // at the launch boundary, where an over-demand would over-commit.
+        debug_assert!(
+            stage.demand.fits(&ResourceVec::UNIT),
+            "task demand exceeds core-slot capacity"
+        );
+        let demand_milli = stage.demand.milli();
         let task_idx = stage.launch_next();
         // Decide this attempt's fate from the deterministic plan.
         let attempt = if self.fault_on {
@@ -733,6 +769,7 @@ impl SchedCore {
             attempt,
             is_clone: false,
             sibling: None,
+            demand_milli,
         });
         self.busy += 1;
         debug_assert!(self.pending_total > 0);
@@ -755,7 +792,7 @@ impl SchedCore {
         if let Some(sib) = rt.sibling {
             self.kill_sibling(now, sib, rt.is_clone);
         }
-        self.charge(rt.user, (now - rt.started) as u128, true);
+        self.charge(rt.user, (now - rt.started) as u128, true, rt.demand_milli);
         self.log_task(&rt, core, now, Outcome::Success);
         let stage = self.stages.get_mut(rt.stage_slot);
         stage.task_finished();
@@ -822,7 +859,7 @@ impl SchedCore {
             .expect("speculation race points at an idle core");
         self.busy -= 1;
         self.push_free(core);
-        self.charge(rt.user, (now - rt.started) as u128, false);
+        self.charge(rt.user, (now - rt.started) as u128, false, rt.demand_milli);
         if winner_is_clone {
             self.fault_stats.spec_wins += 1;
         } else {
@@ -877,7 +914,7 @@ impl SchedCore {
         let rt = self.cores[core].take().expect("checked above");
         self.busy -= 1;
         self.push_free(core);
-        self.charge(rt.user, (now - rt.started) as u128, false);
+        self.charge(rt.user, (now - rt.started) as u128, false, rt.demand_milli);
         self.fault_stats.failures += 1;
         self.log_task(&rt, core, now, Outcome::Failed);
         let stage = self.stages.get_mut(rt.stage_slot);
@@ -925,6 +962,7 @@ impl SchedCore {
             running: s.running,
             pending: s.pending(),
             arrival_seq: s.arrival_seq,
+            demand: s.demand,
         };
         self.policy.on_task_requeued(us_to_s(now), &view);
     }
@@ -950,10 +988,17 @@ impl SchedCore {
             self.fault_stats.spec_skipped += 1;
             return None;
         };
-        let (task, stage, job, user, task_idx, stage_slot, attempt) = {
+        let (task, stage, job, user, task_idx, stage_slot, attempt, demand_milli) = {
             let rt = self.cores[core].as_ref().expect("checked above");
             (
-                rt.task, rt.stage, rt.job, rt.user, rt.task_idx, rt.stage_slot, rt.attempt,
+                rt.task,
+                rt.stage,
+                rt.job,
+                rt.user,
+                rt.task_idx,
+                rt.stage_slot,
+                rt.attempt,
+                rt.demand_milli,
             )
         };
         let base_s = self.stages.get(stage_slot).tasks[task_idx].runtime_s;
@@ -974,6 +1019,7 @@ impl SchedCore {
             attempt,
             is_clone: true,
             sibling: Some(core),
+            demand_milli,
         });
         self.busy += 1;
         self.cores[core].as_mut().expect("checked above").sibling = Some(clone_core);
@@ -1000,7 +1046,7 @@ impl SchedCore {
             return; // idle core: its stale heap entry is skipped lazily
         };
         self.busy -= 1;
-        self.charge(rt.user, (now - rt.started) as u128, false);
+        self.charge(rt.user, (now - rt.started) as u128, false, rt.demand_milli);
         self.fault_stats.tasks_lost_to_crash += 1;
         self.log_task(&rt, core, now, Outcome::CrashLost);
         if let Some(sib) = rt.sibling {
@@ -1058,6 +1104,32 @@ impl SchedCore {
     /// and crashes are all accounted at the instant they resolve.
     pub fn busy_core_us(&self) -> u128 {
         self.fault_stats.good_us + self.fault_stats.wasted_us
+    }
+
+    /// Per-dimension goodput ledger `[cpu, mem]` in milli-demand-µs —
+    /// elapsed core-µs of each successful occupancy × its demand in
+    /// milli-units. Unit demands give exactly `1000 × good_us` per
+    /// dimension.
+    pub fn resource_good_mmus(&self) -> [u128; 2] {
+        self.res_good_mmus
+    }
+
+    /// Per-dimension waste ledger `[cpu, mem]` (kills/failures/crash
+    /// losses) in milli-demand-µs.
+    pub fn resource_wasted_mmus(&self) -> [u128; 2] {
+        self.res_wasted_mmus
+    }
+
+    /// Per-dimension busy ledger `[cpu, mem]` (goodput + waste) in
+    /// milli-demand-µs — the multi-resource utilization numerator. Since
+    /// one core-slot offers 1000 milli-units per dimension, a run can
+    /// never exceed `cores × 1000 × busy-window-µs` in either dimension
+    /// (the invariant harness's over-commit bound).
+    pub fn resource_busy_mmus(&self) -> [u128; 2] {
+        [
+            self.res_good_mmus[0] + self.res_wasted_mmus[0],
+            self.res_good_mmus[1] + self.res_wasted_mmus[1],
+        ]
     }
 
     // ---- dynamic capacity (cross-shard core lending) ---------------------

@@ -7,6 +7,7 @@
 
 use std::sync::Arc;
 
+use super::task::ResourceVec;
 use crate::{TimeUs, UserId};
 
 /// Which of the paper's three micro-benchmark phases a stage implements.
@@ -113,6 +114,9 @@ pub struct StageSpec {
     /// Op-chain length for the real execution backend (must be one of the
     /// AOT-compiled variants).
     pub opcount: u32,
+    /// Per-task resource demand as a fraction of one core-slot's capacity
+    /// per dimension. Unit = the paper's original one-task-per-slot model.
+    pub demand: ResourceVec,
 }
 
 impl StageSpec {
@@ -127,6 +131,7 @@ impl StageSpec {
             cost: CostProfile::uniform(),
             max_parallelism: None,
             opcount: 4,
+            demand: ResourceVec::UNIT,
         }
     }
 }
@@ -186,6 +191,7 @@ impl JobSpec {
             cost: CostProfile::uniform(),
             max_parallelism: None,
             opcount: 1,
+            demand: ResourceVec::UNIT,
         };
         let cost = skew.unwrap_or_else(CostProfile::uniform);
         let compute1 = StageSpec {
@@ -197,6 +203,7 @@ impl JobSpec {
             cost: cost.clone(),
             max_parallelism: None,
             opcount,
+            demand: ResourceVec::UNIT,
         };
         let compute2 = StageSpec {
             phase: StagePhase::Compute,
@@ -207,6 +214,7 @@ impl JobSpec {
             cost,
             max_parallelism: None,
             opcount,
+            demand: ResourceVec::UNIT,
         };
         let collect = StageSpec {
             phase: StagePhase::Collect,
@@ -217,6 +225,7 @@ impl JobSpec {
             cost: CostProfile::uniform(),
             max_parallelism: Some(1),
             opcount: 1,
+            demand: ResourceVec::UNIT,
         };
         JobSpec {
             user,
@@ -227,7 +236,17 @@ impl JobSpec {
         }
     }
 
-    /// Validate the DAG: topological parent order, no self-deps.
+    /// Set every stage's per-task resource demand (builder style) — the
+    /// workload layer's hook for trace/scenario-derived demand vectors.
+    pub fn with_demand(mut self, demand: crate::core::task::ResourceVec) -> Self {
+        for s in &mut self.stages {
+            s.demand = demand;
+        }
+        self
+    }
+
+    /// Validate the DAG: topological parent order, no self-deps, and
+    /// launchable resource demands.
     pub fn validate(&self) -> Result<(), String> {
         if self.stages.is_empty() {
             return Err("job has no stages".into());
@@ -240,6 +259,9 @@ impl JobSpec {
             }
             if s.slot_time < 0.0 {
                 return Err(format!("stage {i} has negative slot_time"));
+            }
+            if let Err(e) = s.demand.validate() {
+                return Err(format!("stage {i}: {e}"));
             }
         }
         Ok(())
@@ -309,6 +331,19 @@ mod tests {
         let mut j = JobSpec::three_phase(1, "bad", 0, 1.0, 1024, 1, None);
         j.stages[0].parents = vec![2];
         assert!(j.validate().is_err());
+    }
+
+    #[test]
+    fn validate_checks_stage_demands() {
+        use crate::core::task::ResourceVec;
+        let j = JobSpec::three_phase(1, "d", 0, 1.0, 1024, 1, None);
+        assert!(j.stages.iter().all(|s| s.demand.is_unit()));
+        let j = j.with_demand(ResourceVec::new(0.5, 0.25));
+        assert!(j.stages.iter().all(|s| s.demand == ResourceVec::new(0.5, 0.25)));
+        assert!(j.validate().is_ok());
+        let bad = j.with_demand(ResourceVec::new(0.5, 1.5));
+        let err = bad.validate().unwrap_err();
+        assert!(err.contains("mem demand"), "{err}");
     }
 
     #[test]

@@ -250,6 +250,7 @@ mod tests {
             running,
             pending,
             arrival_seq: seq,
+            demand: crate::core::task::ResourceVec::UNIT,
         }
     }
 

@@ -3,7 +3,7 @@
 
 use std::collections::VecDeque;
 
-use super::task::TaskSpec;
+use super::task::{ResourceVec, TaskSpec};
 use crate::{JobId, StageId, TimeUs, UserId};
 
 #[derive(Clone, Debug)]
@@ -23,6 +23,9 @@ pub struct StageState {
     /// Estimated sequential work of the whole stage, as given to the
     /// scheduler (perfect under the oracle estimator).
     pub est_slot_time: f64,
+    /// Per-task resource demand (from the stage spec); unit on every
+    /// legacy workload.
+    pub demand: ResourceVec,
     /// Arrival sequence of the owning job (cached to keep the per-offer
     /// view construction free of job-map lookups — hot path).
     pub arrival_seq: u64,
@@ -143,6 +146,7 @@ mod tests {
             finished: 0,
             submitted_at: 0,
             est_slot_time: 0.1 * n as f64,
+            demand: ResourceVec::UNIT,
             arrival_seq: 0,
             job_slot: 0,
             active_pos: 0,

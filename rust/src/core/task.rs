@@ -2,6 +2,64 @@
 
 use crate::{JobId, StageId, TaskId, TimeUs, UserId};
 
+/// Per-task resource demand as a fraction of one core-slot's capacity in
+/// each dimension (CPU, memory). The unit vector reproduces the paper's
+/// original model — one task per identical slot — exactly; fractional
+/// demands only influence multi-resource policies (DRF/BoPF) and the
+/// per-dimension occupancy ledgers, never launch feasibility (demands are
+/// validated into `(0, 1]`, so any task fits any free slot).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ResourceVec {
+    pub cpu: f64,
+    pub mem: f64,
+}
+
+impl ResourceVec {
+    /// Full-slot demand in both dimensions — the backward-compatible
+    /// default everywhere a workload doesn't say otherwise.
+    pub const UNIT: ResourceVec = ResourceVec { cpu: 1.0, mem: 1.0 };
+
+    pub fn new(cpu: f64, mem: f64) -> Self {
+        ResourceVec { cpu, mem }
+    }
+
+    /// Exactly the unit vector (the fast-path/back-compat predicate).
+    pub fn is_unit(&self) -> bool {
+        self.cpu == 1.0 && self.mem == 1.0
+    }
+
+    /// Does this demand fit within `capacity` on both dimensions?
+    pub fn fits(&self, capacity: &ResourceVec) -> bool {
+        self.cpu <= capacity.cpu && self.mem <= capacity.mem
+    }
+
+    /// The dominant (larger) component — DRF's scalarization.
+    pub fn dominant(&self) -> f64 {
+        self.cpu.max(self.mem)
+    }
+
+    /// Integer milli-units `(cpu, mem)` — the exact-arithmetic form used
+    /// by the occupancy ledgers and the DRF share index (floats would
+    /// drift between the incremental and reference-scan paths).
+    pub fn milli(&self) -> (u32, u32) {
+        (
+            (self.cpu * 1000.0).round() as u32,
+            (self.mem * 1000.0).round() as u32,
+        )
+    }
+
+    /// Validate for use as a task demand: finite and in `(0, 1]` on both
+    /// dimensions (a demand exceeding one slot could never launch).
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, v) in [("cpu", self.cpu), ("mem", self.mem)] {
+            if !v.is_finite() || v <= 0.0 || v > 1.0 {
+                return Err(format!("{name} demand must be finite and in (0, 1], got {v}"));
+            }
+        }
+        Ok(())
+    }
+}
+
 /// A schedulable task = the stage operation applied to one input partition.
 #[derive(Clone, Debug)]
 pub struct TaskSpec {
@@ -42,6 +100,9 @@ pub struct RunningTask {
     pub attempt: u32,
     /// This occupancy is a speculative clone of a straggling attempt.
     pub is_clone: bool,
+    /// Stage demand in milli-units `(cpu, mem)` — cached at launch so the
+    /// completion-path occupancy charge needs no stage lookup.
+    pub demand_milli: (u32, u32),
     /// Core of the competing attempt (original ↔ clone cross-link) while
     /// a speculation race is live.
     pub sibling: Option<usize>,
@@ -90,5 +151,32 @@ mod tests {
         };
         assert!(t.range.1 > t.range.0);
         assert_eq!(t.blocks, 2);
+    }
+
+    #[test]
+    fn resource_vec_semantics() {
+        let unit = ResourceVec::UNIT;
+        assert!(unit.is_unit());
+        assert_eq!(unit.milli(), (1000, 1000));
+        assert_eq!(unit.dominant(), 1.0);
+        assert!(unit.validate().is_ok());
+
+        let d = ResourceVec::new(0.25, 0.5);
+        assert!(!d.is_unit());
+        assert!(d.fits(&unit));
+        assert!(!unit.fits(&d));
+        assert_eq!(d.dominant(), 0.5);
+        assert_eq!(d.milli(), (250, 500));
+        assert!(d.validate().is_ok());
+
+        for bad in [
+            ResourceVec::new(0.0, 0.5),
+            ResourceVec::new(0.5, -0.1),
+            ResourceVec::new(1.5, 0.5),
+            ResourceVec::new(f64::NAN, 0.5),
+            ResourceVec::new(0.5, f64::INFINITY),
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?} must be rejected");
+        }
     }
 }

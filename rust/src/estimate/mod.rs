@@ -8,19 +8,29 @@
 
 use crate::core::job::{JobSpec, StageSpec};
 use crate::util::Rng;
-use std::cell::RefCell;
+use crate::JobId;
 
 /// A class-loaded "performance estimator" in the paper's terms: returns
 /// estimated sequential runtimes (slot-times) of work units.
+///
+/// Estimates are keyed by stage *identity* `(job, stage_idx)`: querying
+/// the same stage twice — in any order, interleaved with anything —
+/// returns the same value. This is what keeps runs byte-identical
+/// regardless of how often a policy or the idle-response memo consults
+/// the estimator.
 pub trait RuntimeEstimator: Send {
     fn name(&self) -> &'static str;
 
-    /// Estimated sequential runtime of one stage, seconds.
-    fn stage_slot_time(&self, stage: &StageSpec) -> f64;
+    /// Estimated sequential runtime of stage `stage_idx` of `job`, seconds.
+    fn stage_slot_time(&self, job: JobId, stage_idx: usize, stage: &StageSpec) -> f64;
 
     /// Estimated job slot-time `L_i` = Σ stage estimates.
-    fn job_slot_time(&self, job: &JobSpec) -> f64 {
-        job.stages.iter().map(|s| self.stage_slot_time(s)).sum()
+    fn job_slot_time(&self, job: JobId, spec: &JobSpec) -> f64 {
+        spec.stages
+            .iter()
+            .enumerate()
+            .map(|(i, s)| self.stage_slot_time(job, i, s))
+            .sum()
     }
 }
 
@@ -38,27 +48,35 @@ impl RuntimeEstimator for Oracle {
     fn name(&self) -> &'static str {
         "oracle"
     }
-    fn stage_slot_time(&self, stage: &StageSpec) -> f64 {
+    fn stage_slot_time(&self, _job: JobId, _stage_idx: usize, stage: &StageSpec) -> f64 {
         stage.slot_time
     }
 }
 
 /// Multiplicative lognormal error: estimate = truth · exp(σ·N(0,1)).
-/// σ = 0 reduces to the oracle. Deterministic per seed, but *not* per
-/// stage identity — successive queries draw fresh errors, modelling a
-/// predictor that is inconsistent across stages.
+/// σ = 0 reduces to the oracle. The error is a pure function of
+/// (seed, job, stage index): stable per stage identity, independent
+/// across stages — a predictor that is *consistently* wrong per stage,
+/// never flip-flopping between queries.
 pub struct Noisy {
     sigma: f64,
-    rng: RefCell<Rng>,
+    seed: u64,
 }
 
 impl Noisy {
     pub fn new(sigma: f64, seed: u64) -> Self {
         assert!(sigma >= 0.0);
-        Noisy {
-            sigma,
-            rng: RefCell::new(Rng::new(seed)),
+        Noisy { sigma, seed }
+    }
+
+    /// SplitMix64-style mix of the stage identity into an RNG seed.
+    fn stage_seed(&self, job: JobId, stage_idx: usize) -> u64 {
+        let mut h = self.seed ^ 0x9E37_79B9_7F4A_7C15;
+        for v in [job as u64, stage_idx as u64] {
+            h ^= v.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            h = h.rotate_left(31).wrapping_mul(0x94D0_49BB_1331_11EB);
         }
+        h
     }
 }
 
@@ -66,9 +84,12 @@ impl RuntimeEstimator for Noisy {
     fn name(&self) -> &'static str {
         "noisy"
     }
-    fn stage_slot_time(&self, stage: &StageSpec) -> f64 {
-        let e = self.rng.borrow_mut().lognormal(0.0, self.sigma);
-        stage.slot_time * e
+    fn stage_slot_time(&self, job: JobId, stage_idx: usize, stage: &StageSpec) -> f64 {
+        if self.sigma == 0.0 {
+            return stage.slot_time;
+        }
+        let mut rng = Rng::new(self.stage_seed(job, stage_idx));
+        stage.slot_time * rng.lognormal(0.0, self.sigma)
     }
 }
 
@@ -81,28 +102,53 @@ mod tests {
     fn oracle_is_exact() {
         let j = JobSpec::three_phase(1, "j", 0, 2.0, 1 << 20, 4, None);
         let o = Oracle::new();
-        assert_eq!(o.job_slot_time(&j), j.slot_time());
-        assert_eq!(o.stage_slot_time(&j.stages[1]), 1.0);
+        assert_eq!(o.job_slot_time(1, &j), j.slot_time());
+        assert_eq!(o.stage_slot_time(1, 1, &j.stages[1]), 1.0);
     }
 
     #[test]
     fn noisy_zero_sigma_is_exact() {
         let j = JobSpec::three_phase(1, "j", 0, 2.0, 1 << 20, 4, None);
         let n = Noisy::new(0.0, 7);
-        assert!((n.job_slot_time(&j) - j.slot_time()).abs() < 1e-12);
+        assert!((n.job_slot_time(3, &j) - j.slot_time()).abs() < 1e-12);
     }
 
     #[test]
     fn noisy_errors_are_positive_and_centered() {
+        // 2000 distinct stage identities: errors are independent across
+        // identities, positive, and the log-error mean is ~0.
         let j = JobSpec::three_phase(1, "j", 0, 2.0, 1 << 20, 4, None);
         let n = Noisy::new(0.5, 11);
         let mut ratios = Vec::new();
-        for _ in 0..2000 {
-            let e = n.stage_slot_time(&j.stages[1]);
+        for job in 0..2000 {
+            let e = n.stage_slot_time(job, 1, &j.stages[1]);
             assert!(e > 0.0);
             ratios.push((e / 1.0).ln());
         }
         let mean = ratios.iter().sum::<f64>() / ratios.len() as f64;
         assert!(mean.abs() < 0.05, "log-error mean {mean}");
+    }
+
+    #[test]
+    fn noisy_is_stable_per_stage_identity() {
+        // The regression this trait shape exists for: re-querying a stage
+        // (any number of times, interleaved with other queries) returns
+        // the identical estimate — repeat runs cannot diverge on query
+        // order.
+        let j = JobSpec::three_phase(1, "j", 0, 2.0, 1 << 20, 4, None);
+        let n = Noisy::new(0.5, 11);
+        let first = n.stage_slot_time(42, 1, &j.stages[1]);
+        let other = n.stage_slot_time(42, 2, &j.stages[2]);
+        for _ in 0..3 {
+            assert_eq!(n.stage_slot_time(42, 1, &j.stages[1]).to_bits(), first.to_bits());
+            assert_eq!(n.stage_slot_time(42, 2, &j.stages[2]).to_bits(), other.to_bits());
+        }
+        assert_ne!(first.to_bits(), other.to_bits(), "distinct identities draw distinct errors");
+        // A fresh estimator with the same seed reproduces the values.
+        let m = Noisy::new(0.5, 11);
+        assert_eq!(m.stage_slot_time(42, 1, &j.stages[1]).to_bits(), first.to_bits());
+        // A different seed draws a different error.
+        let k = Noisy::new(0.5, 12);
+        assert_ne!(k.stage_slot_time(42, 1, &j.stages[1]).to_bits(), first.to_bits());
     }
 }

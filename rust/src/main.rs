@@ -27,6 +27,7 @@ fn main() -> ExitCode {
         "reproduce" => reproduce(&cli),
         "sweep" => sweep_cmd(&cli),
         "fault" => fault_cmd(&cli),
+        "drf" => drf_cmd(&cli),
         "hotpath" => hotpath_cmd(&cli),
         "scale" => scale_cmd(&cli),
         "shard" => shard_cmd(&cli),
@@ -355,6 +356,30 @@ fn fault_cmd(cli: &Cli) -> Result<(), String> {
     let bench_path = cli.flag_or("bench-json", &format!("{out}/BENCH_fault.json"));
     sink.write(&bench_path).map_err(|e| e.to_string())?;
     println!("fault bench done → {bench_path}");
+    Ok(())
+}
+
+/// `uwfq drf` — the multi-resource grids: all seven policies over a
+/// mixed CPU/memory-demand workload (per-dimension goodput off the
+/// engine's resource ledgers) plus the UWFQ-vs-BoPF burst-tolerance
+/// ablation on the `bursty` scenario. Emits `BENCH_drf.json` (the CI
+/// drf-smoke artifact).
+fn drf_cmd(cli: &Cli) -> Result<(), String> {
+    let out = cli.flag_or("out", "out");
+    std::fs::create_dir_all(&out).map_err(|e| e.to_string())?;
+    let mut base = cli.config()?;
+    let quick = cli.quick();
+    if cli.flag("cores").is_none() && cli.flag("config").is_none() {
+        base.cores = if quick { 8 } else { 16 };
+    }
+    let par = Sweep::new(cli.threads(uwfq::sweep::auto_threads(None))?);
+    let b = uwfq::bench::drf::run_drf(&base, quick, &par);
+    print!("{}", uwfq::bench::drf::render(&b));
+    let mut sink = JsonSink::new();
+    uwfq::bench::drf::record_metrics(&b, &mut sink);
+    let bench_path = cli.flag_or("bench-json", &format!("{out}/BENCH_drf.json"));
+    sink.write(&bench_path).map_err(|e| e.to_string())?;
+    println!("drf bench done → {bench_path}");
     Ok(())
 }
 

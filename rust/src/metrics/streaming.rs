@@ -222,15 +222,20 @@ impl P2Quantile {
 // ---------------------------------------------------------------------------
 
 /// Streaming empirical CDF over fixed log-spaced bins covering
-/// `[lo, hi]`. Values below `lo` clamp into the first bin, values above
-/// `hi` into the last, so total mass is always accounted. Log spacing
-/// keeps *relative* value resolution constant — `(hi/lo)^(1/bins) − 1`
-/// per bin (≈3.2 % at the 512-bin default over seven decades) — which is
-/// the right shape for response-time distributions.
+/// `[lo, hi]`. Values at or below `lo` are counted exactly at the low
+/// edge (visible at `cdf_at(lo)`), values above `hi` clamp into the last
+/// bin, so total mass is always accounted. Log spacing keeps *relative*
+/// value resolution constant — `(hi/lo)^(1/bins) − 1` per bin (≈3.2 % at
+/// the 512-bin default over seven decades) — which is the right shape
+/// for response-time distributions.
 #[derive(Clone, Debug)]
 pub struct StreamingEcdf {
     lo: f64,
     hi: f64,
+    /// Mass at or below the low edge, kept out of the interior bins so
+    /// `cdf_at(lo)` and `quantile` report it exactly at `lo` rather than
+    /// smearing it to bin 0's upper edge.
+    at_lo: u64,
     counts: Vec<u64>,
     total: u64,
 }
@@ -246,6 +251,7 @@ impl StreamingEcdf {
         StreamingEcdf {
             lo,
             hi,
+            at_lo: 0,
             counts: vec![0; bins],
             total: 0,
         }
@@ -282,8 +288,12 @@ impl StreamingEcdf {
     }
 
     pub fn observe(&mut self, x: f64) {
-        let b = self.bin_of(x);
-        self.counts[b] += 1;
+        if !(x > self.lo) {
+            self.at_lo += 1;
+        } else {
+            let b = self.bin_of(x);
+            self.counts[b] += 1;
+        }
         self.total += 1;
     }
 
@@ -295,16 +305,17 @@ impl StreamingEcdf {
         self.counts.len()
     }
 
-    /// Fraction of observed mass in bins wholly at or below `x`: exact at
-    /// bin upper edges, an underestimate by at most one bin's mass for
-    /// interior points (see [`StreamingEcdf::max_bin_mass`]). `x ≥ hi`
+    /// Fraction of observed mass wholly at or below `x`: exact at `lo`
+    /// (where clamped low-edge mass lives) and at bin upper edges, an
+    /// underestimate by at most one bin's mass for interior points (see
+    /// [`StreamingEcdf::max_bin_mass`]). `x < lo` reports 0, `x ≥ hi`
     /// always reports 1.
     pub fn cdf_at(&self, x: f64) -> f64 {
-        if self.total == 0 {
+        if self.total == 0 || x < self.lo {
             return 0.0;
         }
         let k = self.full_bins_below(x);
-        let cum: u64 = self.counts[..k].iter().sum();
+        let cum: u64 = self.at_lo + self.counts[..k].iter().sum::<u64>();
         cum as f64 / self.total as f64
     }
 
@@ -316,7 +327,10 @@ impl StreamingEcdf {
             return 0.0;
         }
         let target = (p.clamp(0.0, 1.0) * self.total as f64).ceil().max(1.0) as u64;
-        let mut cum = 0u64;
+        if target <= self.at_lo {
+            return self.lo;
+        }
+        let mut cum = self.at_lo;
         for (b, &c) in self.counts.iter().enumerate() {
             cum += c;
             if cum >= target {
@@ -327,10 +341,14 @@ impl StreamingEcdf {
     }
 
     /// Non-empty bins as (upper edge, cumulative fraction) — CSV-ready,
-    /// same long format as [`super::cdf::CdfSeries`].
+    /// same long format as [`super::cdf::CdfSeries`]. Low-edge mass, if
+    /// any, leads as an exact point at `lo`.
     pub fn points(&self) -> Vec<(f64, f64)> {
         let mut out = Vec::new();
-        let mut cum = 0u64;
+        let mut cum = self.at_lo;
+        if self.at_lo > 0 {
+            out.push((self.lo, cum as f64 / self.total.max(1) as f64));
+        }
         for (b, &c) in self.counts.iter().enumerate() {
             cum += c;
             if c > 0 {
@@ -358,6 +376,7 @@ impl StreamingEcdf {
         for (c, &o) in self.counts.iter_mut().zip(&other.counts) {
             *c += o;
         }
+        self.at_lo += other.at_lo;
         self.total += other.total;
     }
 
@@ -669,18 +688,85 @@ mod tests {
     #[test]
     fn ecdf_clamps_out_of_range_mass() {
         let mut e = StreamingEcdf::new(1.0, 100.0, 8);
-        e.observe(0.001); // below lo → first bin
+        e.observe(0.001); // below lo → counted at the low edge
         e.observe(1e9); // above hi → last bin
         e.observe(10.0);
         assert_eq!(e.total(), 3);
         assert!((e.cdf_at(1e9) - 1.0).abs() < 1e-12);
-        // Underflow mass clamps into the first bin, visible at its edge.
+        // Underflow mass sits exactly at the low edge, visible there and
+        // at every point above it.
         assert!(e.cdf_at(e.upper_edge(0)) > 0.0);
         assert_eq!(e.cdf_at(0.5), 0.0);
         let pts = e.points();
         assert!(!pts.is_empty());
         assert!((pts.last().unwrap().1 - 1.0).abs() < 1e-12);
         assert!(e.max_bin_mass() >= 1.0 / 3.0);
+    }
+
+    #[test]
+    fn ecdf_low_edge_mass_is_exact_at_lo() {
+        // Regression: a sample at exactly `lo` used to land in bin 0 but
+        // `cdf_at(lo)` summed zero full bins and reported 0.0, hiding it
+        // until bin 0's upper edge. Low-edge mass must be visible at lo.
+        let mut e = StreamingEcdf::new(1.0, 100.0, 8);
+        e.observe(1.0);
+        e.observe(1.0);
+        e.observe(0.25); // below lo clamps to the same low-edge bucket
+        e.observe(50.0);
+        assert_eq!(e.total(), 4);
+        assert!((e.cdf_at(1.0) - 0.75).abs() < 1e-12);
+        assert_eq!(e.cdf_at(1.0 - 1e-9), 0.0);
+        // Quantiles inside the low-edge mass invert to exactly lo, not
+        // to bin 0's upper edge.
+        assert_eq!(e.quantile(0.5), 1.0);
+        assert_eq!(e.quantile(0.75), 1.0);
+        assert!(e.quantile(1.0) > 1.0);
+        // The low-edge point leads the CSV series at exactly lo.
+        let pts = e.points();
+        assert_eq!(pts[0], (1.0, 0.75));
+        assert!((pts.last().unwrap().1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ecdf_exact_at_window_and_bin_edges() {
+        let mut e = StreamingEcdf::new(1.0, 100.0, 8);
+        let n = 64;
+        for i in 0..n {
+            // Spread strictly interior samples across the window.
+            e.observe(1.0 + 99.0 * (i as f64 + 0.5) / n as f64);
+        }
+        // At hi the CDF is exactly 1 and the top quantile is exactly hi.
+        assert_eq!(e.cdf_at(100.0), 1.0);
+        assert_eq!(e.quantile(1.0), e.upper_edge(e.bins() - 1));
+        // At every bin upper edge the CDF equals the cumulative bin mass
+        // exactly (no interior-point underestimate).
+        let mut cum = 0.0;
+        for b in 0..e.bins() {
+            let edge = e.upper_edge(b);
+            let mass = e.cdf_at(edge) - cum;
+            assert!(mass >= -1e-12, "bin {b} negative mass");
+            cum = e.cdf_at(edge);
+            // Edge-exactness: querying just below the edge must not see
+            // this bin's mass; querying the edge must see all of it.
+            if mass > 0.0 && b > 0 {
+                assert!(e.cdf_at(edge * (1.0 - 1e-6)) < cum);
+            }
+        }
+        assert!((cum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ecdf_merge_sums_low_edge_mass() {
+        let mut a = StreamingEcdf::new(1.0, 100.0, 8);
+        let mut b = StreamingEcdf::new(1.0, 100.0, 8);
+        a.observe(1.0);
+        a.observe(10.0);
+        b.observe(0.5);
+        b.observe(20.0);
+        a.merge(&b);
+        assert_eq!(a.total(), 4);
+        assert!((a.cdf_at(1.0) - 0.5).abs() < 1e-12);
+        assert_eq!(a.quantile(0.25), 1.0);
     }
 
     #[test]

@@ -75,6 +75,7 @@ mod tests {
             cost: CostProfile::uniform(),
             max_parallelism: None,
             opcount: 1,
+            demand: crate::core::task::ResourceVec::UNIT,
         }
     }
 

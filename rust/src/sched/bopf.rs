@@ -1,0 +1,428 @@
+//! BoPF — Bounded Priority Fairness: burst-tolerant two-class scheduling.
+//!
+//! Interactive users submit in short bursts separated by think time; a
+//! long-term fair scheduler makes each burst queue behind everything the
+//! user "saved up" during their idle period. BoPF bounds that effect:
+//! every user holds a *burst budget* of estimated resource-seconds,
+//! refreshed whenever they go active after an idle period. While budget
+//! remains the user is in the **burst class** and is served ahead of all
+//! exhausted users, ordered by burst start (earlier burst first — FIFO
+//! across bursts keeps the class starvation-free and deterministic).
+//! Once the budget is spent the user falls back to the **fair class**,
+//! ordered by DRF-style dominant share of their current allocation — a
+//! sustained heavy user cannot ride the priority lane by re-submitting.
+//!
+//! Each launch charges the user's budget with the task's estimated
+//! resource-seconds: `(stage est-slot-time / initial task count) ×
+//! dominant demand fraction`. Charges use the runtime estimator's
+//! per-stage value captured at submit, so the policy is deterministic and
+//! estimator-consistent across repeats.
+//!
+//! Incremental index: the UJF/DRF two-level lazy structure — root
+//! min-heap over users keyed `(class, burst-seq | dominant-milli,
+//! min_seq, min_idx, user)`, one FIFO [`MapIndex`] per user.
+
+use super::index::MapIndex;
+use super::{Policy, StageMeta, StageView};
+use crate::core::arena::SlotCol;
+use crate::{StageId, UserId};
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, HashMap};
+
+/// Root priority: (class [0 = burst, 1 = fair], burst-seq or dominant
+/// alloc milli, min arrival_seq, min stage_idx, user id).
+type UserKey = (u8, u64, u64, usize, UserId);
+
+#[derive(Default)]
+struct UserState {
+    /// Remaining burst budget, estimated resource-seconds. Strictly
+    /// positive ⇒ burst class.
+    credit_rsec: f64,
+    /// Global sequence of the user's current burst (FIFO across bursts).
+    burst_seq: u64,
+    /// Σ cpu / mem demand (milli-units) over the user's running tasks.
+    alloc_cpu: u64,
+    alloc_mem: u64,
+    /// Σ pending over the user's active stages.
+    pending: u32,
+    /// Multisets over active stages (min = FIFO tiebreak).
+    seqs: BTreeMap<u64, u32>,
+    idxs: BTreeMap<usize, u32>,
+    /// FIFO index over the user's pending stages.
+    stages: MapIndex<(u64, usize)>,
+}
+
+impl UserState {
+    fn dominant(&self) -> u64 {
+        self.alloc_cpu.max(self.alloc_mem)
+    }
+
+    fn key(&self, user: UserId) -> UserKey {
+        debug_assert!(!self.seqs.is_empty(), "keyed user has no active stages");
+        let min_seq = *self.seqs.keys().next().unwrap();
+        let min_idx = *self.idxs.keys().next().unwrap();
+        let (class, a) = if self.credit_rsec > 0.0 {
+            (0, self.burst_seq)
+        } else {
+            (1, self.dominant())
+        };
+        (class, a, min_seq, min_idx, user)
+    }
+}
+
+/// Static per-stage facts the notifications need.
+struct StageRec {
+    user: UserId,
+    seq: u64,
+    idx: usize,
+    /// Stage demand in milli-units (cpu, mem).
+    dm: (u64, u64),
+    /// Budget charge per launched task, estimated resource-seconds.
+    charge_rsec: f64,
+}
+
+pub struct Bopf {
+    /// Burst budget granted per burst, estimated resource-seconds.
+    burst_rsec: f64,
+    users: HashMap<UserId, UserState>,
+    /// Lazy min-heap over users with pending work.
+    root: BinaryHeap<Reverse<UserKey>>,
+    /// Stage slot → static record.
+    stage_rec: SlotCol<StageRec>,
+    /// Next burst sequence number (global, monotone).
+    next_burst: u64,
+}
+
+impl Bopf {
+    pub fn new(burst_rsec: f64) -> Self {
+        assert!(burst_rsec > 0.0 && burst_rsec.is_finite());
+        Bopf {
+            burst_rsec,
+            users: HashMap::new(),
+            root: BinaryHeap::new(),
+            stage_rec: SlotCol::default(),
+            next_burst: 0,
+        }
+    }
+
+    /// Valid root minimum: same lazy re-key loop as UJF/DRF.
+    fn peek_user(&mut self) -> Option<UserId> {
+        while let Some(&Reverse((c, a, seq, idx, uid))) = self.root.peek() {
+            match self.users.get(&uid) {
+                Some(u) if u.pending > 0 => {
+                    let cur = u.key(uid);
+                    if cur == (c, a, seq, idx, uid) {
+                        return Some(uid);
+                    }
+                    self.root.pop();
+                    self.root.push(Reverse(cur));
+                }
+                _ => {
+                    self.root.pop();
+                }
+            }
+        }
+        None
+    }
+}
+
+fn multiset_remove<K: Ord + Copy>(set: &mut BTreeMap<K, u32>, k: K) {
+    match set.get_mut(&k) {
+        Some(n) if *n > 1 => *n -= 1,
+        Some(_) => {
+            set.remove(&k);
+        }
+        None => debug_assert!(false, "multiset underflow"),
+    }
+}
+
+impl Policy for Bopf {
+    fn name(&self) -> &'static str {
+        "BoPF"
+    }
+
+    fn on_stage_submit(&mut self, _now_s: f64, meta: &StageMeta) {
+        let (dc, dmem) = meta.demand.milli();
+        let u = self.users.entry(meta.user).or_default();
+        if u.seqs.is_empty() {
+            // User goes active after an idle period: a new burst starts
+            // with a fresh budget, queued FIFO behind earlier bursts.
+            u.credit_rsec = self.burst_rsec;
+            u.burst_seq = self.next_burst;
+            self.next_burst += 1;
+        }
+        *u.seqs.entry(meta.arrival_seq).or_insert(0) += 1;
+        *u.idxs.entry(meta.stage_idx).or_insert(0) += 1;
+        u.pending += meta.pending;
+        u.stages.insert(
+            meta.stage,
+            meta.slot,
+            (meta.arrival_seq, meta.stage_idx),
+            meta.pending,
+        );
+        let key = u.key(meta.user);
+        self.root.push(Reverse(key));
+        self.stage_rec.set(
+            meta.slot,
+            StageRec {
+                user: meta.user,
+                seq: meta.arrival_seq,
+                idx: meta.stage_idx,
+                dm: (dc as u64, dmem as u64),
+                charge_rsec: meta.est_slot_time / meta.pending.max(1) as f64
+                    * meta.demand.dominant(),
+            },
+        );
+    }
+
+    fn on_task_launched(&mut self, stage: StageId, slot: u32) {
+        let Some(rec) = self.stage_rec.get(slot) else {
+            return;
+        };
+        let u = self.users.get_mut(&rec.user).expect("launch for absent user");
+        debug_assert!(u.pending > 0);
+        u.pending -= 1;
+        u.alloc_cpu += rec.dm.0;
+        u.alloc_mem += rec.dm.1;
+        u.credit_rsec -= rec.charge_rsec;
+        u.stages.task_launched(stage);
+        // Key can only increase here (budget drain / class flip / higher
+        // dominant share): existing root entries go stale-smaller and
+        // are re-keyed at the next peek.
+    }
+
+    fn on_task_finished(&mut self, stage: StageId, slot: u32) {
+        let _ = stage;
+        let Some(rec) = self.stage_rec.get(slot) else {
+            return;
+        };
+        let u = self.users.get_mut(&rec.user).expect("finish for absent user");
+        debug_assert!(u.alloc_cpu >= rec.dm.0 && u.alloc_mem >= rec.dm.1);
+        u.alloc_cpu -= rec.dm.0;
+        u.alloc_mem -= rec.dm.1;
+        // Fair-class key decreased with the dominant share: push fresh.
+        if u.pending > 0 {
+            let key = u.key(rec.user);
+            self.root.push(Reverse(key));
+        }
+    }
+
+    fn on_task_requeued(&mut self, _now_s: f64, view: &StageView) {
+        let Some(rec) = self.stage_rec.get(view.slot) else {
+            return;
+        };
+        let u = self.users.get_mut(&rec.user).expect("requeue for absent user");
+        u.pending += 1;
+        u.stages
+            .task_requeued(view.stage, view.slot, (rec.seq, rec.idx));
+        let key = u.key(rec.user);
+        self.root.push(Reverse(key));
+    }
+
+    fn on_stage_finish(&mut self, stage: StageId, slot: u32) {
+        let Some(rec) = self.stage_rec.take(slot) else {
+            return;
+        };
+        let Some(u) = self.users.get_mut(&rec.user) else {
+            return;
+        };
+        multiset_remove(&mut u.seqs, rec.seq);
+        multiset_remove(&mut u.idxs, rec.idx);
+        u.stages.remove(stage);
+        if u.seqs.is_empty() {
+            debug_assert_eq!(
+                (u.alloc_cpu, u.alloc_mem),
+                (0, 0),
+                "departing user still holds allocation"
+            );
+            // Unspent credit does not carry over: the next activity
+            // starts a fresh burst.
+            self.users.remove(&rec.user);
+        }
+    }
+
+    fn select_next(&mut self, _now_s: f64) -> Option<(StageId, u32)> {
+        let uid = self.peek_user()?;
+        let u = self.users.get_mut(&uid).expect("peeked user exists");
+        let picked = u.stages.peek();
+        debug_assert!(picked.is_some(), "pending user has no launchable stage");
+        picked
+    }
+
+    fn select(&mut self, _now_s: f64, views: &[StageView]) -> Option<usize> {
+        // Reference scan: allocation and FIFO mins recomputed from the
+        // engine's views; budget state (credit, burst seq) read from the
+        // same per-user records the incremental path maintains — both
+        // are driven by identical launch/finish notifications.
+        let mut agg: HashMap<u32, (u64, u64, u64, usize, bool)> = HashMap::with_capacity(8);
+        for v in views {
+            let (dc, dm) = v.demand.milli();
+            let e = agg
+                .entry(v.user)
+                .or_insert((0, 0, u64::MAX, usize::MAX, false));
+            e.0 += v.running as u64 * dc as u64;
+            e.1 += v.running as u64 * dm as u64;
+            e.2 = e.2.min(v.arrival_seq);
+            e.3 = e.3.min(v.stage_idx);
+            e.4 |= v.pending > 0;
+        }
+        let (&best_user, _) = agg
+            .iter()
+            .filter(|(_, e)| e.4)
+            .min_by_key(|(&uid, e)| {
+                let u = self.users.get(&uid).expect("viewed user is tracked");
+                let (class, a) = if u.credit_rsec > 0.0 {
+                    (0u8, u.burst_seq)
+                } else {
+                    (1u8, e.0.max(e.1))
+                };
+                (class, a, e.2, e.3, uid)
+            })?;
+        views
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| v.user == best_user && v.pending > 0)
+            .min_by_key(|(_, v)| (v.arrival_seq, v.stage_idx, v.stage))
+            .map(|(i, _)| i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::task::ResourceVec;
+
+    fn submit(p: &mut Bopf, stage: u64, user: u32, est: f64, pending: u32) {
+        p.on_stage_submit(
+            0.0,
+            &StageMeta {
+                stage,
+                slot: stage as u32,
+                job: stage,
+                user,
+                est_slot_time: est,
+                stage_idx: 0,
+                arrival_seq: stage,
+                pending,
+                demand: ResourceVec::UNIT,
+            },
+        );
+    }
+
+    fn v(stage: u64, user: u32, running: u32, pending: u32) -> StageView {
+        StageView {
+            stage,
+            slot: stage as u32,
+            job: stage,
+            user,
+            stage_idx: 0,
+            running,
+            pending,
+            arrival_seq: stage,
+            demand: ResourceVec::UNIT,
+        }
+    }
+
+    #[test]
+    fn burst_class_preempts_exhausted_user() {
+        // Budget 2 rsec; user 1's tasks cost 1 rsec each: after two
+        // launches the budget hits zero and user 1 drops to the fair
+        // class, so freshly-bursting user 2 takes over.
+        let mut p = Bopf::new(2.0);
+        submit(&mut p, 1, 1, 10.0, 10);
+        for _ in 0..2 {
+            let (s, slot) = p.select_next(0.0).unwrap();
+            assert_eq!(s, 1);
+            p.on_task_launched(s, slot);
+        }
+        submit(&mut p, 2, 2, 10.0, 10);
+        let views = vec![v(1, 1, 2, 8), v(2, 2, 0, 10)];
+        assert_eq!(p.select(0.0, &views), Some(1), "burst user wins the scan");
+        assert_eq!(p.select_next(0.0).unwrap().0, 2, "burst user wins the index");
+    }
+
+    #[test]
+    fn earlier_burst_wins_within_class() {
+        let mut p = Bopf::new(100.0);
+        submit(&mut p, 1, 1, 1.0, 5);
+        submit(&mut p, 2, 2, 1.0, 5);
+        // Both users hold credit; user 1's burst started first.
+        for _ in 0..5 {
+            let (s, slot) = p.select_next(0.0).unwrap();
+            assert_eq!(s, 1);
+            p.on_task_launched(s, slot);
+        }
+        assert_eq!(p.select_next(0.0).unwrap().0, 2);
+    }
+
+    #[test]
+    fn fair_class_orders_by_dominant_share() {
+        // Budget so small the first launch exhausts it: both users land
+        // in the fair class immediately and alternate like DRF.
+        let mut p = Bopf::new(1e-9);
+        submit(&mut p, 1, 1, 10.0, 10);
+        submit(&mut p, 2, 2, 10.0, 10);
+        let mut per_user = [0u32; 2];
+        for _ in 0..6 {
+            let (s, slot) = p.select_next(0.0).unwrap();
+            per_user[(s - 1) as usize] += 1;
+            p.on_task_launched(s, slot);
+        }
+        assert_eq!(per_user, [3, 3], "exhausted users share fairly");
+    }
+
+    #[test]
+    fn scan_matches_incremental_through_burst_exhaustion() {
+        let mut p = Bopf::new(3.0);
+        submit(&mut p, 1, 1, 10.0, 10); // 1 rsec per task
+        submit(&mut p, 2, 2, 5.0, 10); // 0.5 rsec per task
+        let mut running = [0u32; 2];
+        for _ in 0..12 {
+            let views = vec![
+                v(1, 1, running[0], 10 - running[0]),
+                v(2, 2, running[1], 10 - running[1]),
+            ];
+            let scan = p.select(0.0, &views).map(|i| views[i].stage);
+            let inc = p.select_next(0.0).map(|(s, _)| s);
+            assert_eq!(scan, inc);
+            let (s, slot) = p.select_next(0.0).unwrap();
+            running[(s - 1) as usize] += 1;
+            p.on_task_launched(s, slot);
+        }
+    }
+
+    #[test]
+    fn idle_user_gets_fresh_budget_on_return() {
+        let mut p = Bopf::new(1.0);
+        submit(&mut p, 1, 1, 10.0, 10);
+        let (s, slot) = p.select_next(0.0).unwrap();
+        p.on_task_launched(s, slot); // budget spent
+        p.on_task_finished(1, 1);
+        p.on_stage_finish(1, 1); // user departs
+        assert!(p.users.is_empty());
+        // Re-arrival: a fresh burst with fresh credit and a later seq.
+        submit(&mut p, 3, 1, 10.0, 10);
+        let u = &p.users[&1];
+        assert_eq!(u.credit_rsec, 1.0);
+        assert_eq!(u.burst_seq, 1);
+    }
+
+    #[test]
+    fn finish_rebalances_fair_class() {
+        let mut p = Bopf::new(1e-9);
+        submit(&mut p, 1, 1, 10.0, 10);
+        submit(&mut p, 2, 2, 10.0, 10);
+        // Drive user 1 to 3 running, user 2 to 1.
+        for want in [1u64, 2, 1, 2, 1] {
+            let (s, slot) = p.select_next(0.0).unwrap();
+            let _ = want;
+            p.on_task_launched(s, slot);
+        }
+        // user 1: 3 running (first pick by user-id tiebreak), user 2: 2.
+        p.on_task_finished(1, 1);
+        p.on_task_finished(1, 1);
+        p.on_task_finished(1, 1);
+        // user 1 now at 0 running: must be picked next.
+        assert_eq!(p.select_next(0.0).unwrap().0, 1);
+    }
+}

@@ -133,6 +133,7 @@ mod tests {
             stage_idx: 0,
             arrival_seq: stage,
             pending: 1,
+            demand: crate::core::task::ResourceVec::UNIT,
         }
     }
 
@@ -146,6 +147,7 @@ mod tests {
             running: 0,
             pending: 1,
             arrival_seq: seq,
+            demand: crate::core::task::ResourceVec::UNIT,
         }
     }
 

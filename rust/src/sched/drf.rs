@@ -1,0 +1,401 @@
+//! Dominant Resource Fairness (DRF) — progressive filling over resource
+//! vectors (the Mesos fair-allocation study, arXiv:1803.00922).
+//!
+//! Each user's *dominant share* is the larger of their (CPU, memory)
+//! allocation fractions across all running tasks. Every launch
+//! opportunity goes to the user with the smallest dominant share —
+//! progressive filling — with FIFO tie-breaks (min arrival-seq, min
+//! stage-idx, user id) so unit-vector workloads reduce to a
+//! deterministic, work-conserving schedule. Weights are deliberately
+//! ignored (unweighted DRF, as in the original allocation study).
+//!
+//! All share accounting is **exact integer arithmetic** in milli-demand
+//! units: a launch adds the stage's `(cpu, mem)` demand in milli-units
+//! to the user's allocation, a finish subtracts it, and the dominant
+//! share is `max(cpu_milli, mem_milli)` — identical cluster capacity per
+//! dimension makes the fraction comparison equivalent to comparing raw
+//! milli totals, with no float drift between the incremental index and
+//! the reference scan.
+//!
+//! Incremental index: the same two-level lazy structure as UJF — a root
+//! min-heap over users keyed `(dominant_milli, min_seq, min_idx, user)`
+//! with fresh entries pushed on every key decrease and stale entries
+//! re-keyed at pop time, plus one FIFO [`MapIndex`] per user over their
+//! pending stages. Selection is O(log users + log stages-of-user).
+
+use super::index::MapIndex;
+use super::{Policy, StageMeta, StageView};
+use crate::core::arena::SlotCol;
+use crate::{StageId, UserId};
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, HashMap};
+
+/// Root priority: (dominant allocation in milli-units, min arrival_seq,
+/// min stage_idx, user id).
+type UserKey = (u64, u64, usize, UserId);
+
+#[derive(Default)]
+struct UserState {
+    /// Σ cpu demand (milli-units) over the user's running tasks.
+    alloc_cpu: u64,
+    /// Σ mem demand (milli-units) over the user's running tasks.
+    alloc_mem: u64,
+    /// Σ pending over the user's active stages.
+    pending: u32,
+    /// Multiset of `arrival_seq` over active stages (min = tiebreak).
+    seqs: BTreeMap<u64, u32>,
+    /// Multiset of `stage_idx` over active stages.
+    idxs: BTreeMap<usize, u32>,
+    /// FIFO index over the user's pending stages:
+    /// (arrival_seq, stage_idx) with stage-id tiebreak.
+    stages: MapIndex<(u64, usize)>,
+}
+
+impl UserState {
+    fn dominant(&self) -> u64 {
+        self.alloc_cpu.max(self.alloc_mem)
+    }
+
+    fn key(&self, user: UserId) -> UserKey {
+        debug_assert!(!self.seqs.is_empty(), "keyed user has no active stages");
+        let min_seq = *self.seqs.keys().next().unwrap();
+        let min_idx = *self.idxs.keys().next().unwrap();
+        (self.dominant(), min_seq, min_idx, user)
+    }
+}
+
+/// Static per-stage facts the notifications need.
+struct StageRec {
+    user: UserId,
+    seq: u64,
+    idx: usize,
+    /// Stage demand in milli-units (cpu, mem).
+    dm: (u64, u64),
+}
+
+#[derive(Default)]
+pub struct Drf {
+    users: HashMap<UserId, UserState>,
+    /// Lazy min-heap over users with pending work.
+    root: BinaryHeap<Reverse<UserKey>>,
+    /// Stage slot → static record.
+    stage_rec: SlotCol<StageRec>,
+}
+
+impl Drf {
+    pub fn new() -> Self {
+        Drf::default()
+    }
+
+    /// Valid root minimum: the lowest-dominant-share user with pending
+    /// work (same lazy re-key loop as UJF's root).
+    fn peek_user(&mut self) -> Option<UserId> {
+        while let Some(&Reverse((dom, seq, idx, uid))) = self.root.peek() {
+            match self.users.get(&uid) {
+                Some(u) if u.pending > 0 => {
+                    let cur = u.key(uid);
+                    if cur == (dom, seq, idx, uid) {
+                        return Some(uid);
+                    }
+                    self.root.pop();
+                    self.root.push(Reverse(cur));
+                }
+                _ => {
+                    self.root.pop();
+                }
+            }
+        }
+        None
+    }
+}
+
+fn multiset_remove<K: Ord + Copy>(set: &mut BTreeMap<K, u32>, k: K) {
+    match set.get_mut(&k) {
+        Some(n) if *n > 1 => *n -= 1,
+        Some(_) => {
+            set.remove(&k);
+        }
+        None => debug_assert!(false, "multiset underflow"),
+    }
+}
+
+impl Policy for Drf {
+    fn name(&self) -> &'static str {
+        "DRF"
+    }
+
+    fn on_stage_submit(&mut self, _now_s: f64, meta: &StageMeta) {
+        let (dc, dmem) = meta.demand.milli();
+        let u = self.users.entry(meta.user).or_default();
+        *u.seqs.entry(meta.arrival_seq).or_insert(0) += 1;
+        *u.idxs.entry(meta.stage_idx).or_insert(0) += 1;
+        u.pending += meta.pending;
+        u.stages.insert(
+            meta.stage,
+            meta.slot,
+            (meta.arrival_seq, meta.stage_idx),
+            meta.pending,
+        );
+        // Key may have decreased (new mins) and pending may have left 0.
+        let key = u.key(meta.user);
+        self.root.push(Reverse(key));
+        self.stage_rec.set(
+            meta.slot,
+            StageRec {
+                user: meta.user,
+                seq: meta.arrival_seq,
+                idx: meta.stage_idx,
+                dm: (dc as u64, dmem as u64),
+            },
+        );
+    }
+
+    fn on_task_launched(&mut self, stage: StageId, slot: u32) {
+        let Some(rec) = self.stage_rec.get(slot) else {
+            return;
+        };
+        let u = self.users.get_mut(&rec.user).expect("launch for absent user");
+        debug_assert!(u.pending > 0);
+        u.pending -= 1;
+        u.alloc_cpu += rec.dm.0;
+        u.alloc_mem += rec.dm.1;
+        u.stages.task_launched(stage);
+        // Dominant share increased — existing root entries go
+        // stale-smaller and are re-keyed at the next peek; no push.
+    }
+
+    fn on_task_finished(&mut self, stage: StageId, slot: u32) {
+        let _ = stage;
+        let Some(rec) = self.stage_rec.get(slot) else {
+            return;
+        };
+        let u = self.users.get_mut(&rec.user).expect("finish for absent user");
+        debug_assert!(u.alloc_cpu >= rec.dm.0 && u.alloc_mem >= rec.dm.1);
+        u.alloc_cpu -= rec.dm.0;
+        u.alloc_mem -= rec.dm.1;
+        // Dominant share decreased: push fresh so the user can't surface
+        // late.
+        if u.pending > 0 {
+            let key = u.key(rec.user);
+            self.root.push(Reverse(key));
+        }
+    }
+
+    fn on_task_requeued(&mut self, _now_s: f64, view: &StageView) {
+        let Some(rec) = self.stage_rec.get(view.slot) else {
+            return;
+        };
+        let u = self.users.get_mut(&rec.user).expect("requeue for absent user");
+        u.pending += 1;
+        // The stage may have left the index on exhaustion; its FIFO key
+        // is static, so re-entry uses the recorded key.
+        u.stages
+            .task_requeued(view.stage, view.slot, (rec.seq, rec.idx));
+        // Pending may have left 0 — push a fresh root key so the user is
+        // representable again.
+        let key = u.key(rec.user);
+        self.root.push(Reverse(key));
+    }
+
+    fn on_stage_finish(&mut self, stage: StageId, slot: u32) {
+        let Some(rec) = self.stage_rec.take(slot) else {
+            return;
+        };
+        let Some(u) = self.users.get_mut(&rec.user) else {
+            return;
+        };
+        multiset_remove(&mut u.seqs, rec.seq);
+        multiset_remove(&mut u.idxs, rec.idx);
+        u.stages.remove(stage);
+        if u.seqs.is_empty() {
+            debug_assert_eq!(
+                (u.alloc_cpu, u.alloc_mem),
+                (0, 0),
+                "departing user still holds allocation"
+            );
+            self.users.remove(&rec.user);
+        }
+    }
+
+    fn select_next(&mut self, _now_s: f64) -> Option<(StageId, u32)> {
+        let uid = self.peek_user()?;
+        let u = self.users.get_mut(&uid).expect("peeked user exists");
+        let picked = u.stages.peek();
+        debug_assert!(picked.is_some(), "pending user has no launchable stage");
+        picked
+    }
+
+    fn select(&mut self, _now_s: f64, views: &[StageView]) -> Option<usize> {
+        // Reference scan: recompute every user's allocation from the
+        // engine's running counts — Σ running × demand (milli) per
+        // dimension, exactly the integers the incremental path maintains.
+        let mut users: HashMap<u32, (u64, u64, u64, usize, bool)> = HashMap::with_capacity(8);
+        for v in views {
+            let (dc, dm) = v.demand.milli();
+            let e = users
+                .entry(v.user)
+                .or_insert((0, 0, u64::MAX, usize::MAX, false));
+            e.0 += v.running as u64 * dc as u64;
+            e.1 += v.running as u64 * dm as u64;
+            e.2 = e.2.min(v.arrival_seq);
+            e.3 = e.3.min(v.stage_idx);
+            e.4 |= v.pending > 0;
+        }
+        // Progressive filling: smallest dominant share wins; FIFO and
+        // user-id tiebreaks.
+        let (&best_user, _) = users
+            .iter()
+            .filter(|(_, e)| e.4)
+            .min_by_key(|(&u, e)| (e.0.max(e.1), e.2, e.3, u))?;
+        // Within the user: FIFO over pending stages.
+        views
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| v.user == best_user && v.pending > 0)
+            .min_by_key(|(_, v)| (v.arrival_seq, v.stage_idx, v.stage))
+            .map(|(i, _)| i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::task::ResourceVec;
+
+    fn submit(p: &mut Drf, stage: u64, user: u32, demand: ResourceVec) {
+        p.on_stage_submit(
+            0.0,
+            &StageMeta {
+                stage,
+                slot: stage as u32,
+                job: stage,
+                user,
+                est_slot_time: 1.0,
+                stage_idx: 0,
+                arrival_seq: stage,
+                pending: 10,
+                demand,
+            },
+        );
+    }
+
+    fn v(stage: u64, user: u32, running: u32, pending: u32, demand: ResourceVec) -> StageView {
+        StageView {
+            stage,
+            slot: stage as u32,
+            job: stage,
+            user,
+            stage_idx: 0,
+            running,
+            pending,
+            arrival_seq: stage,
+            demand,
+        }
+    }
+
+    #[test]
+    fn lowest_dominant_share_wins() {
+        let mut p = Drf::new();
+        // user 1: cpu-heavy tasks; user 2: mem-heavy tasks.
+        let cpu = ResourceVec::new(1.0, 0.2);
+        let mem = ResourceVec::new(0.2, 1.0);
+        submit(&mut p, 1, 1, cpu);
+        submit(&mut p, 2, 2, mem);
+        // user 1 runs 2 tasks (dominant 2000), user 2 runs 1 (1000).
+        let views = vec![v(1, 1, 2, 5, cpu), v(2, 2, 1, 5, mem)];
+        assert_eq!(p.select(0.0, &views), Some(1));
+    }
+
+    #[test]
+    fn incremental_progressive_filling_equalizes_dominant_shares() {
+        // Classic DRF example: user 1 demands (1.0, 0.25), user 2
+        // (0.25, 1.0). Progressive filling alternates launches, keeping
+        // dominant shares equal — each user ends with the same number of
+        // running tasks despite asymmetric vectors.
+        let mut p = Drf::new();
+        submit(&mut p, 1, 1, ResourceVec::new(1.0, 0.25));
+        submit(&mut p, 2, 2, ResourceVec::new(0.25, 1.0));
+        let mut per_user = [0u32; 2];
+        for _ in 0..8 {
+            let (s, slot) = p.select_next(0.0).unwrap();
+            per_user[(s - 1) as usize] += 1;
+            p.on_task_launched(s, slot);
+        }
+        assert_eq!(per_user, [4, 4]);
+    }
+
+    #[test]
+    fn asymmetric_demands_skew_allocation_toward_light_user() {
+        // user 1's dominant demand is 1.0, user 2's is 0.25: equalizing
+        // dominant shares gives user 2 ~4× the task count.
+        let mut p = Drf::new();
+        submit(&mut p, 1, 1, ResourceVec::UNIT);
+        submit(&mut p, 2, 2, ResourceVec::new(0.25, 0.25));
+        let mut per_user = [0u32; 2];
+        for _ in 0..10 {
+            let (s, slot) = p.select_next(0.0).unwrap();
+            per_user[(s - 1) as usize] += 1;
+            p.on_task_launched(s, slot);
+        }
+        // 2 launches for user 1 (dominant 2000 milli) vs 8 for user 2
+        // (dominant 2000 milli): shares equalized.
+        assert_eq!(per_user, [2, 8]);
+    }
+
+    #[test]
+    fn unit_vectors_reduce_to_fewest_running_tasks() {
+        // With unit demands the dominant share is 1000 × running tasks,
+        // so DRF degenerates to fair sharing by running count.
+        let mut p = Drf::new();
+        for s in 1..=3 {
+            submit(&mut p, s, s as u32, ResourceVec::UNIT);
+        }
+        let mut launched = std::collections::HashMap::new();
+        for _ in 0..12 {
+            let (s, slot) = p.select_next(0.0).unwrap();
+            *launched.entry(s).or_insert(0u32) += 1;
+            p.on_task_launched(s, slot);
+        }
+        assert_eq!(launched[&1], 4);
+        assert_eq!(launched[&2], 4);
+        assert_eq!(launched[&3], 4);
+    }
+
+    #[test]
+    fn finish_rebalances_and_scan_agrees() {
+        let mut p = Drf::new();
+        let d1 = ResourceVec::new(0.5, 1.0);
+        let d2 = ResourceVec::new(1.0, 0.5);
+        submit(&mut p, 1, 1, d1);
+        submit(&mut p, 2, 2, d2);
+        let mut running = [0u32; 2];
+        for _ in 0..6 {
+            let views = vec![
+                v(1, 1, running[0], 10, d1),
+                v(2, 2, running[1], 10, d2),
+            ];
+            let scan = p.select(0.0, &views).map(|i| views[i].stage);
+            let inc = p.select_next(0.0).map(|(s, _)| s);
+            assert_eq!(scan, inc);
+            let (s, slot) = p.select_next(0.0).unwrap();
+            running[(s - 1) as usize] += 1;
+            p.on_task_launched(s, slot);
+        }
+        assert_eq!(running, [3, 3]);
+        // Finish two of user 1's tasks: user 1 drops to dominant 1000,
+        // below user 2's 3000 — user 1 must be picked next.
+        p.on_task_finished(1, 1);
+        p.on_task_finished(1, 1);
+        assert_eq!(p.select_next(0.0), Some((1, 1)));
+    }
+
+    #[test]
+    fn stage_finish_prunes_user() {
+        let mut p = Drf::new();
+        submit(&mut p, 1, 1, ResourceVec::UNIT);
+        p.on_stage_finish(1, 1);
+        assert!(p.users.is_empty(), "user pruned with last stage");
+        assert_eq!(p.select_next(0.0), None);
+        assert_eq!(p.select(0.0, &[]), None);
+    }
+}

@@ -117,6 +117,7 @@ mod tests {
             running,
             pending,
             arrival_seq: seq,
+            demand: crate::core::task::ResourceVec::UNIT,
         }
     }
 
@@ -132,6 +133,7 @@ mod tests {
                 stage_idx: 0,
                 arrival_seq: seq,
                 pending,
+                demand: crate::core::task::ResourceVec::UNIT,
             },
         );
     }

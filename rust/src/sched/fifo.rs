@@ -86,6 +86,7 @@ mod tests {
             running: 0,
             pending,
             arrival_seq: seq,
+            demand: crate::core::task::ResourceVec::UNIT,
         }
     }
 
@@ -101,6 +102,7 @@ mod tests {
                 stage_idx: idx,
                 arrival_seq: seq,
                 pending,
+                demand: crate::core::task::ResourceVec::UNIT,
             },
         );
     }

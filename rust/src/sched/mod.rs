@@ -28,7 +28,9 @@
 //! declare [`Policy::static_keys`] so the engine can additionally merge
 //! same-timestamp launch offers.
 
+pub mod bopf;
 pub mod cfq;
+pub mod drf;
 pub mod fair;
 pub mod fifo;
 pub mod index;
@@ -36,6 +38,7 @@ pub mod ujf;
 pub mod uwfq;
 pub mod vtime;
 
+use crate::core::task::ResourceVec;
 use crate::{JobId, StageId, UserId};
 
 /// Job-level metadata given to the policy when an analytics job arrives.
@@ -70,6 +73,9 @@ pub struct StageMeta {
     pub arrival_seq: u64,
     /// Launchable tasks at submission time (initial pending count).
     pub pending: u32,
+    /// Per-task resource demand (unit on every legacy workload) —
+    /// multi-resource policies (DRF/BoPF) key shares on this.
+    pub demand: ResourceVec,
 }
 
 /// Snapshot of a live stage at selection time.
@@ -85,6 +91,8 @@ pub struct StageView {
     pub pending: u32,
     /// Arrival sequence of the owning job.
     pub arrival_seq: u64,
+    /// Per-task resource demand (see [`StageMeta::demand`]).
+    pub demand: ResourceVec,
 }
 
 /// A scheduling policy. All engine times are seconds (f64).
@@ -218,17 +226,25 @@ pub fn select_min_by_key<K: PartialOrd>(
 }
 
 /// Construct a policy by name — the config-system entry point.
-pub fn make_policy(kind: PolicyKind, cores: u32, grace_rsec: f64) -> Box<dyn Policy> {
+pub fn make_policy(
+    kind: PolicyKind,
+    cores: u32,
+    grace_rsec: f64,
+    bopf_burst_rsec: f64,
+) -> Box<dyn Policy> {
     match kind {
         PolicyKind::Fifo => Box::new(fifo::Fifo::new()),
         PolicyKind::Fair => Box::new(fair::Fair::new()),
         PolicyKind::Ujf => Box::new(ujf::Ujf::new()),
         PolicyKind::Cfq => Box::new(cfq::Cfq::new(cores as f64)),
         PolicyKind::Uwfq => Box::new(uwfq::Uwfq::new(cores as f64, grace_rsec)),
+        PolicyKind::Drf => Box::new(drf::Drf::new()),
+        PolicyKind::Bopf => Box::new(bopf::Bopf::new(bopf_burst_rsec)),
     }
 }
 
-/// The schedulers evaluated in the paper (§5.1.2) plus Spark FIFO.
+/// The schedulers evaluated in the paper (§5.1.2) plus Spark FIFO and
+/// the multi-resource pair (DRF, BoPF).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PolicyKind {
     Fifo,
@@ -236,15 +252,19 @@ pub enum PolicyKind {
     Ujf,
     Cfq,
     Uwfq,
+    Drf,
+    Bopf,
 }
 
 impl PolicyKind {
-    pub const ALL: [PolicyKind; 5] = [
+    pub const ALL: [PolicyKind; 7] = [
         PolicyKind::Fifo,
         PolicyKind::Fair,
         PolicyKind::Ujf,
         PolicyKind::Cfq,
         PolicyKind::Uwfq,
+        PolicyKind::Drf,
+        PolicyKind::Bopf,
     ];
 
     /// The four schedulers compared in the paper's tables.
@@ -262,6 +282,8 @@ impl PolicyKind {
             PolicyKind::Ujf => "UJF",
             PolicyKind::Cfq => "CFQ",
             PolicyKind::Uwfq => "UWFQ",
+            PolicyKind::Drf => "DRF",
+            PolicyKind::Bopf => "BoPF",
         }
     }
 
@@ -272,6 +294,8 @@ impl PolicyKind {
             "ujf" => Some(PolicyKind::Ujf),
             "cfq" => Some(PolicyKind::Cfq),
             "uwfq" => Some(PolicyKind::Uwfq),
+            "drf" => Some(PolicyKind::Drf),
+            "bopf" => Some(PolicyKind::Bopf),
             _ => None,
         }
     }
@@ -293,6 +317,7 @@ mod tests {
                 running: 0,
                 pending: 0,
                 arrival_seq: 0,
+                demand: ResourceVec::UNIT,
             },
             StageView {
                 stage: 2,
@@ -303,6 +328,7 @@ mod tests {
                 running: 0,
                 pending: 1,
                 arrival_seq: 1,
+                demand: ResourceVec::UNIT,
             },
         ];
         assert_eq!(select_min_by_key(&views, |v| v.arrival_seq), Some(1));

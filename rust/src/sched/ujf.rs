@@ -294,6 +294,7 @@ mod tests {
                 stage_idx: 0,
                 arrival_seq: stage,
                 pending,
+                demand: crate::core::task::ResourceVec::UNIT,
             },
         );
     }
@@ -308,6 +309,7 @@ mod tests {
             running,
             pending,
             arrival_seq: seq,
+            demand: crate::core::task::ResourceVec::UNIT,
         }
     }
 
@@ -484,6 +486,7 @@ mod tests {
                     running: r.below(5) as u32,
                     pending: r.below(3) as u32,
                     arrival_seq: r.below(6),
+                    demand: crate::core::task::ResourceVec::UNIT,
                 })
                 .collect();
             let mut pool = Pool::new("root", PoolPolicy::Fair);
@@ -502,6 +505,7 @@ mod tests {
                         stage_idx: v.stage_idx,
                         arrival_seq: v.arrival_seq,
                         pending: v.pending.max(1),
+                        demand: crate::core::task::ResourceVec::UNIT,
                     },
                 );
             }

@@ -202,6 +202,7 @@ mod tests {
             stage_idx: idx,
             arrival_seq: seq,
             pending: 1,
+            demand: crate::core::task::ResourceVec::UNIT,
         }
     }
 
@@ -215,6 +216,7 @@ mod tests {
             running: 0,
             pending: 1,
             arrival_seq: job,
+            demand: crate::core::task::ResourceVec::UNIT,
         }
     }
 

@@ -721,6 +721,7 @@ fn idle_key(cfg: &Config, job: &JobSpec) -> IdleKey {
         k.push(1);
         k.push(cfg.policy as u64);
         k.push(cfg.grace_rsec.to_bits());
+        k.push(cfg.bopf_burst_rsec.to_bits());
     }
     k.push(job.stages.len() as u64);
     for s in &job.stages {
@@ -1096,6 +1097,7 @@ mod tests {
                 max_parallelism: None,
                 opcount: 4,
                 parents,
+                demand: crate::core::task::ResourceVec::UNIT,
             }
         }
         let mk = |name: &str, wiring: [Vec<usize>; 4]| JobSpec {

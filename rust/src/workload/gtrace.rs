@@ -216,6 +216,7 @@ pub(crate) fn trace_job(
                 },
                 max_parallelism: None,
                 opcount: [1u32, 4, 16, 64][(r.below(4)) as usize],
+                demand: crate::core::task::ResourceVec::UNIT,
             }
         })
         .collect();

@@ -387,12 +387,17 @@ fn trace_params_from(p: &Params, seed: u64) -> Result<TraceParams, String> {
             "trace: filter_median_mult, target_utilization and cores must be positive".into(),
         );
     }
+    let mem_frac = p.f64("mem_frac");
+    if !(mem_frac > 0.0 && mem_frac <= 1.0) {
+        return Err("trace: mem_frac must be in (0, 1]".into());
+    }
     Ok(TraceParams {
         path: path.to_string(),
         format,
         shape: p.bool("shape"),
         shaping,
         skew_fraction: p.f64("skew_fraction"),
+        mem_frac,
         seed,
     })
 }
@@ -636,6 +641,7 @@ const TRACE_SCHEMA: &[ParamSpec] = &[
     p_f64("target_utilization", 1.05, "rescale target: work rate / cores"),
     p_u64("cores", 32, "cluster size the shaping targets"),
     p_f64("skew_fraction", 0.3, "fraction of shaped stages with skewed cost"),
+    p_f64("mem_frac", 1.0, "per-task memory demand fraction in (0, 1]"),
 ];
 
 impl Scenario for Trace {
@@ -716,6 +722,7 @@ const BURSTY_SCHEMA: &[ParamSpec] = &[
     p_f64("burst_ratio", 0.1, "fraction of each cycle the users are ON"),
     p_f64("rate", 2.0, "jobs/s per bursty user while ON"),
     p_f64("steady_gap_s", 40.0, "mean gap of the steady users"),
+    p_f64("mem_frac", 1.0, "memory demand fraction of the bursty users' tasks, (0, 1]"),
 ];
 
 impl Scenario for Bursty {
@@ -740,6 +747,7 @@ impl Scenario for Bursty {
             burst_ratio: p.f64("burst_ratio"),
             rate: p.f64("rate"),
             steady_gap_s: p.f64("steady_gap_s"),
+            mem_frac: p.f64("mem_frac"),
         };
         Ok(ScenarioInstance {
             name: "bursty",

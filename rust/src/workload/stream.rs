@@ -321,6 +321,7 @@ fn scale_job(user: u32, arrival: TimeUs, tpl: &ScaleTemplate) -> JobSpec {
         cost: CostProfile::uniform(),
         max_parallelism: Some(tpl.tasks),
         opcount: 1,
+        demand: crate::core::task::ResourceVec::UNIT,
     };
     let compute = StageSpec {
         phase: StagePhase::Compute,
@@ -331,6 +332,7 @@ fn scale_job(user: u32, arrival: TimeUs, tpl: &ScaleTemplate) -> JobSpec {
         cost: CostProfile::uniform(),
         max_parallelism: Some(tpl.tasks),
         opcount: 4,
+        demand: crate::core::task::ResourceVec::UNIT,
     };
     JobSpec {
         user,

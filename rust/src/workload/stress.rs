@@ -52,6 +52,11 @@ pub struct BurstyParams {
     pub rate: f64,
     /// Mean submission gap of the steady users (seconds).
     pub steady_gap_s: f64,
+    /// Memory demand fraction of the bursty users' tasks, in (0, 1].
+    /// `1.0` (the default) keeps every job on the legacy unit vector;
+    /// lower values make the bursts memory-light so DRF/BoPF can pack
+    /// them differently from the unit-demand background.
+    pub mem_frac: f64,
 }
 
 impl Default for BurstyParams {
@@ -64,6 +69,7 @@ impl Default for BurstyParams {
             burst_ratio: 0.1,
             rate: 2.0,
             steady_gap_s: 40.0,
+            mem_frac: 1.0,
         }
     }
 }
@@ -85,6 +91,9 @@ pub fn bursty(seed: u64, p: &BurstyParams) -> Result<MergeStream, String> {
             "bursty: duration_s, cycle_s, rate and steady_gap_s must be positive".into(),
         );
     }
+    if !(p.mem_frac > 0.0 && p.mem_frac <= 1.0) {
+        return Err(format!("bursty: mem_frac {} outside (0, 1]", p.mem_frac));
+    }
     let mut rng = Rng::new(seed);
     let mut streams: Vec<Box<dyn JobStream + Send>> = Vec::new();
 
@@ -92,7 +101,7 @@ pub fn bursty(seed: u64, p: &BurstyParams) -> Result<MergeStream, String> {
     for user in 1..=p.users {
         let mut r = rng.fork(user as u64);
         let (duration_s, cycle_s) = (p.duration_s, p.cycle_s);
-        let rate = p.rate;
+        let (rate, mem_frac) = (p.rate, p.mem_frac);
         let mut cycle_start = 0.0;
         let mut t = r.exp(rate);
         streams.push(Box::new(from_fn(move || loop {
@@ -103,7 +112,13 @@ pub fn bursty(seed: u64, p: &BurstyParams) -> Result<MergeStream, String> {
             // are discarded and the generator jumps to the next cycle, so
             // yields are strictly nondecreasing (on_len <= cycle_s).
             if t < cycle_start + on_len && t < duration_s {
-                let job = micro_job(user, "short", t, None);
+                let mut job = micro_job(user, "short", t, None);
+                if mem_frac < 1.0 {
+                    // Bursty users' tasks are memory-light; the unit
+                    // default leaves the legacy byte-identical path.
+                    job = job
+                        .with_demand(crate::core::task::ResourceVec::new(1.0, mem_frac));
+                }
                 t += r.exp(rate);
                 return Some(job);
             }
@@ -495,6 +510,7 @@ mod tests {
             burst_ratio: 0.2,
             rate: 3.0,
             steady_gap_s: 20.0,
+            mem_frac: 1.0,
         };
         let jobs = materialize(bursty(5, &p).unwrap());
         assert!(!jobs.is_empty());
@@ -530,6 +546,36 @@ mod tests {
         p = BurstyParams::default();
         p.users = 0;
         assert!(bursty(1, &p).is_err());
+        for bad in [0.0, -0.5, 1.5] {
+            p = BurstyParams::default();
+            p.mem_frac = bad;
+            let err = bursty(1, &p).unwrap_err();
+            assert!(err.contains("mem_frac"), "{err}");
+        }
+    }
+
+    #[test]
+    fn bursty_mem_frac_marks_only_burst_users() {
+        use crate::core::task::ResourceVec;
+        let mut p = BurstyParams::default();
+        p.duration_s = 60.0;
+        p.mem_frac = 0.25;
+        let jobs = materialize(bursty(5, &p).unwrap());
+        let classes = bursty_classes(&p);
+        assert!(jobs.iter().any(|j| classes[&j.user] == UserClass::Frequent));
+        assert!(jobs.iter().any(|j| classes[&j.user] == UserClass::Infrequent));
+        for j in &jobs {
+            j.validate().unwrap();
+            let want = if classes[&j.user] == UserClass::Frequent {
+                ResourceVec::new(1.0, 0.25)
+            } else {
+                ResourceVec::UNIT
+            };
+            assert!(j.stages.iter().all(|s| s.demand == want), "user {}", j.user);
+        }
+        // The unit default leaves everything on the legacy vector.
+        let jobs = materialize(bursty(5, &BurstyParams::default()).unwrap());
+        assert!(jobs.iter().all(|j| j.stages.iter().all(|s| s.demand.is_unit())));
     }
 
     #[test]

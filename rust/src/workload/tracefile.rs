@@ -39,6 +39,7 @@ pub(crate) fn flat_job(
             cost: CostProfile::uniform(),
             max_parallelism: None,
             opcount: 4,
+            demand: crate::core::task::ResourceVec::UNIT,
         })
         .collect();
     JobSpec {

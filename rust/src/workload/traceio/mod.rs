@@ -59,6 +59,10 @@ pub struct TraceParams {
     pub shaping: ShapeParams,
     /// Fraction of shaped stages given a skewed cost profile.
     pub skew_fraction: f64,
+    /// Per-task memory demand fraction in (0, 1] applied to every
+    /// replayed job (the trace carries no memory column; 1.0 = the
+    /// legacy unit vector).
+    pub mem_frac: f64,
     pub seed: u64,
 }
 
@@ -70,6 +74,7 @@ impl Default for TraceParams {
             shape: true,
             shaping: ShapeParams::default(),
             skew_fraction: 0.3,
+            mem_frac: 1.0,
             seed: 42,
         }
     }
@@ -109,6 +114,7 @@ pub struct TraceStream {
     shaper: Option<OnePassShaper>,
     rng: Rng,
     skew_fraction: f64,
+    mem_frac: f64,
     eof: bool,
     jobs_out: u64,
 }
@@ -124,6 +130,7 @@ pub fn open_trace(p: &TraceParams) -> Result<TraceStream, String> {
         shaper: p.shape.then(|| OnePassShaper::new(p.shaping.clone())),
         rng: Rng::new(p.seed),
         skew_fraction: p.skew_fraction,
+        mem_frac: p.mem_frac,
         eof: false,
         jobs_out: 0,
     })
@@ -146,11 +153,24 @@ impl TraceStream {
         self.jobs_out
     }
 
+    /// The per-task demand vector of a replayed row: the row's CPU
+    /// request (unit on native traces) × the configured memory fraction.
+    /// Unit vectors skip the builder entirely, keeping legacy replays
+    /// byte-identical to the pre-vector loader.
+    fn demand_of(&self, cpu_demand: f64, job: JobSpec) -> JobSpec {
+        if cpu_demand == 1.0 && self.mem_frac == 1.0 {
+            return job;
+        }
+        job.with_demand(crate::core::task::ResourceVec::new(cpu_demand, self.mem_frac))
+    }
+
     /// Materialize one shaped row: the §5.3 stage-chain builder with a
     /// per-row forked RNG (skew profiles, shuffle shrink).
     fn shaped_job(&mut self, r: shaping::ShapedRow) -> JobSpec {
         let mut jr = self.rng.fork(r.index);
-        gtrace::trace_job(r.user, &r.name, r.arrival_s, r.slot_s, &mut jr, self.skew_fraction)
+        let job =
+            gtrace::trace_job(r.user, &r.name, r.arrival_s, r.slot_s, &mut jr, self.skew_fraction);
+        self.demand_of(r.cpu_demand, job)
     }
 
     /// Materialize one raw row: the deterministic flat builder shared
@@ -161,7 +181,8 @@ impl TraceStream {
         } else {
             gtrace::stage_count(r.slot_s)
         };
-        tracefile::flat_job(r.user, &r.name, r.arrival_s, r.slot_s, stages)
+        let job = tracefile::flat_job(r.user, &r.name, r.arrival_s, r.slot_s, stages);
+        self.demand_of(r.cpu_demand, job)
     }
 }
 
@@ -310,6 +331,37 @@ mod tests {
         assert!(err.contains("line 2") && err.contains("slot_s"), "{err}");
         std::fs::remove_file(&path).ok();
         std::fs::remove_file(&bad).ok();
+    }
+
+    #[test]
+    fn gcluster_rows_carry_real_demand_vectors() {
+        use crate::core::task::ResourceVec;
+        let path = temp("demand.csv");
+        let text = "timestamp,job_id,user,scheduling_class,runtime_s,cpu_request\n\
+                    0.0,900,1,3,20.0,0.25\n1.0,901,2,0,4.0,2.0\n";
+        std::fs::write(&path, text).unwrap();
+        let tp = TraceParams {
+            path: path.clone(),
+            shape: false,
+            mem_frac: 0.5,
+            ..TraceParams::default()
+        };
+        let jobs = materialize(open_trace(&tp).unwrap());
+        assert_eq!(jobs.len(), 2);
+        // Sub-core request becomes the cpu demand; mem_frac rides along.
+        assert!(jobs[0].stages.iter().all(|s| s.demand == ResourceVec::new(0.25, 0.5)));
+        // Multi-core requests clamp to one slot's cpu capacity.
+        assert!(jobs[1].stages.iter().all(|s| s.demand == ResourceVec::new(1.0, 0.5)));
+        for j in &jobs {
+            j.validate().unwrap();
+        }
+        // Default params leave every stage on the unit vector (legacy
+        // byte-identity path).
+        let unit = TraceParams { path: path.clone(), shape: false, ..TraceParams::default() };
+        let jobs = materialize(open_trace(&unit).unwrap());
+        assert!(jobs[1].stages.iter().all(|s| s.demand.is_unit()));
+        assert!(!jobs[0].stages[0].demand.is_unit(), "cpu_request 0.25 is a real demand");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -102,6 +102,11 @@ pub struct RawRow {
     /// Stage-chain length from the trace (0 = derive from the job size).
     pub stages: usize,
     pub heavy: bool,
+    /// Per-task CPU demand as a fraction of one core-slot, in (0, 1].
+    /// Native rows are whole-slot (1.0); `gcluster` maps `cpu_request`
+    /// here, clamped to a slot (requests above one core keep `slot_s =
+    /// runtime_s × cpu_request` but can't demand more than the slot).
+    pub cpu_demand: f64,
 }
 
 // ---------------------------------------------------------------------------
@@ -379,6 +384,7 @@ fn parse_fields(
                 slot_s,
                 stages,
                 heavy,
+                cpu_demand: 1.0,
             })
         }
         TraceFormat::GCluster => {
@@ -388,6 +394,9 @@ fn parse_fields(
                 .map_err(|_| err(format!("user {user} out of range")))?;
             let sclass = int("scheduling_class", f[3])?;
             let runtime_s = num("runtime_s", f[4])?;
+            if runtime_s <= 0.0 || !runtime_s.is_finite() {
+                return Err(err("runtime_s must be a positive finite number".into()));
+            }
             let cpus = num("cpu_request", f[5])?;
             if cpus <= 0.0 || !cpus.is_finite() {
                 return Err(err("cpu_request must be positive".into()));
@@ -401,6 +410,7 @@ fn parse_fields(
                 slot_s: runtime_s * cpus,
                 stages: 0, // the shaped replay derives the chain
                 heavy: sclass >= 2,
+                cpu_demand: cpus.min(1.0),
             })
         }
     }
@@ -491,8 +501,32 @@ timestamp,job_id,user,scheduling_class,runtime_s,cpu_request
         assert!(rows[0].heavy); // class 3 => production tier
         assert_eq!(rows[0].slot_s, 40.0); // 20 s × 2 cores
         assert_eq!(rows[0].stages, 0); // derived later
+        assert_eq!(rows[0].cpu_demand, 1.0); // 2-core request clamps to a slot
         assert!(!rows[1].heavy);
         assert_eq!(rows[1].slot_s, 2.0);
+        assert_eq!(rows[1].cpu_demand, 0.5); // sub-core request = real demand
+    }
+
+    #[test]
+    fn native_rows_have_unit_demand() {
+        let rows = rows_of(NATIVE, None).unwrap();
+        assert!(rows.iter().all(|r| r.cpu_demand == 1.0));
+    }
+
+    #[test]
+    fn gcluster_rejects_nonpositive_runtime() {
+        for (row, what) in [
+            ("0.5,900,7,3,0.0,2.0", "zero runtime"),
+            ("0.5,900,7,3,-4.0,2.0", "negative runtime"),
+            ("0.5,900,7,3,inf,2.0", "non-finite runtime"),
+            ("0.5,900,7,3,nan,2.0", "NaN runtime"),
+        ] {
+            let text = format!("{GCLUSTER_COLUMNS}\n{row}\n");
+            let err = rows_of(&text, None).unwrap_err();
+            assert!(err.contains("line 2"), "{what}: {err}");
+            assert!(err.contains("runtime_s must be a positive finite number"), "{what}: {err}");
+            assert!(err.contains(GCLUSTER_COLUMNS), "{what}: {err}");
+        }
     }
 
     #[test]

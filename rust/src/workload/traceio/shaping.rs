@@ -69,6 +69,9 @@ pub struct ShapedRow {
     /// Shaped total sequential work (core-seconds).
     pub slot_s: f64,
     pub heavy: bool,
+    /// Per-task CPU demand fraction, passed through from the raw row —
+    /// shaping rescales work, never the demand vector.
+    pub cpu_demand: f64,
 }
 
 /// Counters exposed for observability and the bounded-state assertions.
@@ -221,6 +224,7 @@ impl OnePassShaper {
             user: row.user,
             arrival_s: row.arrival_s,
             heavy: row.heavy,
+            cpu_demand: row.cpu_demand,
         });
     }
 }
@@ -239,6 +243,7 @@ mod tests {
             slot_s,
             stages: 1,
             heavy,
+            cpu_demand: 1.0,
         }
     }
 

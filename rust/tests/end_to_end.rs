@@ -190,6 +190,26 @@ fn replay_cli_errors_name_the_problem() {
     assert!(!out.status.success());
     let err = String::from_utf8_lossy(&out.stderr);
     assert!(err.contains("gcluster"), "{err}");
+
+    // Non-positive gcluster runtime: rejected with the line, the field
+    // and the format's columns — not silently mapped to a zero-work job.
+    let bad_rt = dir.join("bad_runtime.csv");
+    std::fs::write(
+        &bad_rt,
+        "timestamp,job_id,user,scheduling_class,runtime_s,cpu_request\n\
+         0.5,900,7,3,20.0,2.0\n\
+         1.5,901,8,0,-4.0,0.5\n",
+    )
+    .unwrap();
+    let out = uwfq_bin()
+        .args(["replay", "--trace", bad_rt.to_str().unwrap(), "--format", "gcluster"])
+        .output()
+        .expect("spawn");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("line 3"), "{err}");
+    assert!(err.contains("runtime_s must be a positive finite number"), "{err}");
+    assert!(err.contains("cpu_request"), "{err}");
     std::fs::remove_dir_all(&dir).ok();
 }
 

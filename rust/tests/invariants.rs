@@ -43,6 +43,13 @@
 //!    arrivals, the cluster-wide busy ledger never exceeds the (lending-
 //!    invariant) total core count × makespan, drift respects the same
 //!    provable bound, and repeats are bit-for-bit identical.
+//! 10. **Multi-resource arm** — resource-vector accounting across all
+//!    seven policies (DRF and BoPF included): completions equal
+//!    arrivals, the per-dimension busy ledgers (u128 milli-demand-µs)
+//!    never exceed cores × makespan in either dimension, unit-demand
+//!    workloads keep both ledgers identical, and repeats — ledgers
+//!    included — are byte-identical. (Unit-vector work conservation for
+//!    DRF/BoPF rides invariant 3, which already iterates all seven.)
 
 use std::collections::HashMap;
 
@@ -581,6 +588,84 @@ fn sharded_rebalance_conserves_jobs_and_cores_on_skewed_streams() {
             {
                 return Err(format!(
                     "{}: lending repeat not byte-identical at S={shards} ({p:?})",
+                    policy.name()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn multi_resource_ledgers_bounded_and_deterministic() {
+    // Invariant 10: resource-vector accounting. A random registry
+    // scenario — with a random memory fraction layered onto `bursty`,
+    // the demand-capable stress entry — runs under all seven policies on
+    // an engine whose per-dimension ledgers stay readable afterwards.
+    propkit::check("multi-resource ledgers", 0xD4F5, 5, |r| {
+        let mut spec = random_spec(r);
+        if spec.name == "bursty" && r.f64() < 0.7 {
+            spec = spec.with("mem_frac", &format!("{:.2}", r.range_f64(0.2, 0.9)));
+        }
+        let seed = r.next_u64();
+        let burst_rsec = r.range_f64(0.5, 30.0);
+        let w = spec.workload(seed).map_err(|e| format!("{spec:?}: {e}"))?;
+        if w.jobs.is_empty() {
+            return Err(format!("{spec:?}: degenerate empty workload"));
+        }
+        let unit = w
+            .jobs
+            .iter()
+            .all(|j| j.stages.iter().all(|s| s.demand.is_unit()));
+        for policy in PolicyKind::ALL {
+            let mut cfg = Config::default().with_cores(8).with_policy(policy);
+            cfg.bopf_burst_rsec = burst_rsec;
+            let mut core = uwfq::core::SchedCore::from_config(cfg.clone());
+            let a = sim::simulate_into(&mut core, w.jobs.clone());
+            if a.completed.len() != w.jobs.len() {
+                return Err(format!(
+                    "{}: {} of {} jobs completed ({spec:?})",
+                    policy.name(),
+                    a.completed.len(),
+                    w.jobs.len()
+                ));
+            }
+            // No over-commit in either dimension: a unit core-slot
+            // carries at most 1000 milli-demand per µs, so each ledger
+            // is bounded by cores × 1000 × makespan (1 µs slack per core
+            // for the final event's rounding).
+            let busy = core.resource_busy_mmus();
+            let cap = cfg.cores as u128 * 1000 * uwfq::s_to_us(a.makespan_s) as u128
+                + cfg.cores as u128 * 1000;
+            for (dim, &b) in busy.iter().enumerate() {
+                if b > cap {
+                    return Err(format!(
+                        "{}: dimension {dim} busy {b} mmus exceeds cores × makespan \
+                         {cap} ({spec:?})",
+                        policy.name()
+                    ));
+                }
+            }
+            if unit && busy[0] != busy[1] {
+                return Err(format!(
+                    "{}: unit-demand workload split the ledgers ({} vs {} mmus, \
+                     {spec:?})",
+                    policy.name(),
+                    busy[0],
+                    busy[1]
+                ));
+            }
+            if !unit && busy[0] == 0 && busy[1] == 0 {
+                return Err(format!("{}: no work ledgered ({spec:?})", policy.name()));
+            }
+            let mut core2 = uwfq::core::SchedCore::from_config(cfg.clone());
+            let b2 = sim::simulate_into(&mut core2, w.jobs.clone());
+            if fingerprint(&a) != fingerprint(&b2)
+                || busy != core2.resource_busy_mmus()
+                || core.resource_good_mmus() != core2.resource_good_mmus()
+            {
+                return Err(format!(
+                    "{}: repeated run (ledgers included) not byte-identical ({spec:?})",
                     policy.name()
                 ));
             }
